@@ -1,0 +1,73 @@
+//! End-to-end driver (DESIGN.md "E2E" row): proves the three layers
+//! compose on a real small workload.
+//!
+//!   L1  Pallas output-stationary GEMM kernel (python/compile/kernels)
+//!   L2  JAX chunk graph, AOT-lowered to HLO-text buckets (aot.py)
+//!   L3  this Rust coordinator: MIQP/GA-optimized schedule, then every
+//!       chiplet chunk executed through PJRT; outputs verified against a
+//!       CPU reference; the modeled MCM clock reports the paper metrics.
+//!
+//! Run `make artifacts` first, then:
+//!
+//!     cargo run --release --example alexnet_e2e
+
+use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::coordinator::Executor;
+use mcmcomm::opt::{run_scheme, Scheme, SchedulerConfig};
+use mcmcomm::runtime::{GemmRuntime, Manifest};
+use mcmcomm::topology::Topology;
+use mcmcomm::workload::models::{alexnet, scaled_down};
+
+fn main() -> anyhow::Result<()> {
+    // AlexNet at 1/16 scale: same 8-GEMM chained structure, chunk dims
+    // within the AOT bucket set (<= 256) so interpret-lowered kernels
+    // execute quickly on the CPU PJRT client.
+    let wl = scaled_down(&alexnet(1), 16, 16);
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+
+    println!("== MCMComm end-to-end driver ==");
+    println!(
+        "workload {}: {} GEMMs, {:.1} MMACs",
+        wl.name,
+        wl.ops.len(),
+        wl.total_macs() as f64 / 1e6
+    );
+
+    let runtime = GemmRuntime::new(&Manifest::default_dir())?;
+    println!(
+        "PJRT platform: {} ({} buckets in manifest)",
+        runtime.platform(),
+        runtime.manifest().buckets.len()
+    );
+
+    let cfg = SchedulerConfig::default();
+    for scheme in [Scheme::Baseline, Scheme::Ga, Scheme::Miqp] {
+        let out = run_scheme(scheme, &hw, &topo, &wl, &cfg);
+        let exec =
+            Executor::new(&hw, &topo, &wl, &out.alloc, out.flags, &runtime);
+        let report = exec.run(42, /* verify= */ true)?;
+        println!("\n--- {} ---", scheme.name());
+        println!(
+            "  {} PJRT chunk executions, host wall {:.2?}, compiled \
+             executables cached: {}",
+            report.chunks_executed,
+            report.host_wall,
+            runtime.compiled_count()
+        );
+        println!(
+            "  numerics: max |pjrt - cpu_ref| = {:.2e}  {}",
+            report.max_abs_err,
+            if report.max_abs_err < 1e-3 { "OK" } else { "MISMATCH" }
+        );
+        println!(
+            "  modeled MCM: latency {:.3} ms | energy {:.3} mJ | EDP {:.3e}",
+            report.modeled.latency_ns / 1e6,
+            report.modeled.energy_pj / 1e9,
+            report.modeled.edp()
+        );
+        assert!(report.max_abs_err < 1e-3, "numeric mismatch");
+    }
+    println!("\nall layers compose: e2e OK");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Batch pipelining in action (paper §5.4 / Figure 11): expand a batch
+//! into the RCPSP task DAG, schedule it with the list scheduler and the
+//! exact branch & bound, and inspect the overlap.
+//!
+//!     cargo run --release --example pipeline_batching
+
+use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::cost::evaluator::{evaluate, OptFlags};
+use mcmcomm::partition::uniform_allocation;
+use mcmcomm::pipeline::{
+    batch_tasks, exact_schedule, list_schedule, sequential_makespan,
+    validate_schedule,
+};
+use mcmcomm::topology::Topology;
+use mcmcomm::util::bench::Reporter;
+use mcmcomm::workload::models::{alexnet, scaled_down};
+
+fn main() {
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+
+    // Full AlexNet through the list scheduler at several batch sizes.
+    let wl = alexnet(1);
+    let alloc = uniform_allocation(&hw, &wl);
+    let cost = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
+    let mut rep = Reporter::new(
+        "Pipelining: per-sample speedup (list scheduler)",
+        &["batch", "sequential (ms)", "pipelined (ms)", "speedup"],
+    );
+    for batch in [1usize, 2, 4, 8, 16] {
+        let tasks = batch_tasks(&cost, batch);
+        let s = list_schedule(&tasks);
+        validate_schedule(&tasks, &s).expect("valid schedule");
+        let seq = sequential_makespan(&cost, batch);
+        rep.row(vec![
+            batch.to_string(),
+            format!("{:.3}", seq / 1e6),
+            format!("{:.3}", s.makespan / 1e6),
+            format!("{:.2}x", seq / s.makespan),
+        ]);
+    }
+    rep.print();
+
+    // A small instance where the exact solver can prove optimality:
+    // 2 samples of a 3-op mini-net = 18 tasks.
+    let mini = scaled_down(&alexnet(1), 64, 16);
+    let mini3 = mcmcomm::workload::Workload::new(
+        "mini3",
+        mini.ops[..3].to_vec(),
+    );
+    let alloc = uniform_allocation(&hw, &mini3);
+    let cost = evaluate(&hw, &topo, &mini3, &alloc, OptFlags::NONE);
+    let tasks = batch_tasks(&cost, 2);
+    let ls = list_schedule(&tasks);
+    let ex = exact_schedule(&tasks, 24);
+    println!(
+        "\nexact vs list on {} tasks: list {:.1} us, exact {:.1} us \
+         (gap {:.2}%)",
+        tasks.len(),
+        ls.makespan / 1e3,
+        ex.makespan / 1e3,
+        (ls.makespan / ex.makespan - 1.0) * 100.0
+    );
+    assert!(ex.makespan <= ls.makespan + 1e-9);
+}

@@ -1,0 +1,62 @@
+//! Quickstart: optimize a workload partition for an MCM and read the
+//! analytical cost report — the 60-second tour of the public API.
+//!
+//!     cargo run --release --example quickstart
+
+use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::cost::evaluator::{evaluate, Objective, OptFlags};
+use mcmcomm::opt::{run_scheme, Scheme, SchedulerConfig};
+use mcmcomm::topology::Topology;
+use mcmcomm::workload::models::alexnet;
+
+fn main() {
+    // 1. Describe the hardware: Table-2 MCM, type-A packaging (corner
+    //    memory, like SIMBA), HBM, 4x4 chiplets of 16x16 PEs.
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+
+    // 2. Pick a workload from the model zoo (GEMM-sequence IR).
+    let wl = alexnet(1);
+    println!(
+        "workload: {} ({} GEMMs, {:.2} GMACs)",
+        wl.name,
+        wl.ops.len(),
+        wl.total_macs() as f64 / 1e9
+    );
+
+    // 3. Baseline: uniform layer-sequential execution, no optimizations.
+    let cfg = SchedulerConfig::default();
+    let base = run_scheme(Scheme::Baseline, &hw, &topo, &wl, &cfg);
+    println!("baseline latency : {:.3} ms", base.objective_value / 1e6);
+
+    // 4. MCMComm-GA: non-uniform partitions + diagonal links +
+    //    on-package redistribution + asynchronized execution.
+    let ga = run_scheme(Scheme::Ga, &hw, &topo, &wl, &cfg);
+    println!(
+        "GA latency       : {:.3} ms  ({:.2}x speedup)",
+        ga.objective_value / 1e6,
+        base.objective_value / ga.objective_value
+    );
+
+    // 5. Inspect the full cost breakdown of the optimized schedule.
+    let cost = evaluate(&hw, &topo, &wl, &ga.alloc, ga.flags);
+    let redist = cost.per_op.iter().filter(|o| o.redistributed_in).count();
+    println!(
+        "energy {:.3} mJ | EDP {:.3e} pJ*ns | {} ops fed by on-package \
+         redistribution",
+        cost.energy_pj / 1e9,
+        cost.edp(),
+        redist
+    );
+
+    // 6. The same API optimizes for EDP instead.
+    let cfg_edp =
+        SchedulerConfig { objective: Objective::Edp, ..Default::default() };
+    let edp = run_scheme(Scheme::Ga, &hw, &topo, &wl, &cfg_edp);
+    let edp_base =
+        evaluate(&hw, &topo, &wl, &base.alloc, OptFlags::NONE).edp();
+    println!(
+        "EDP objective    : {:.2}x improvement",
+        edp_base / edp.objective_value
+    );
+}

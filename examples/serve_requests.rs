@@ -1,0 +1,84 @@
+//! Serving demo: the Layer-3 request loop batching inference requests
+//! onto the simulated MCM, with every batch actually executed through
+//! PJRT (Figure 1's "real-time applications" use case).
+//!
+//! Run `make artifacts` first, then:
+//!
+//!     cargo run --release --example serve_requests
+
+use std::time::Duration;
+
+use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::coordinator::server::RunnerFactory;
+use mcmcomm::coordinator::{Executor, Server};
+use mcmcomm::cost::evaluator::evaluate;
+use mcmcomm::opt::{run_scheme, Scheme, SchedulerConfig};
+use mcmcomm::pipeline::pipeline_speedup;
+use mcmcomm::runtime::{GemmRuntime, Manifest};
+use mcmcomm::topology::Topology;
+use mcmcomm::workload::models::{scaled_down, vit};
+
+fn main() -> anyhow::Result<()> {
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let wl = scaled_down(&vit(1), 16, 16);
+    let cfg = SchedulerConfig::default();
+    let out = run_scheme(Scheme::Ga, &hw, &topo, &wl, &cfg);
+    println!(
+        "serving {} on 4x4 type-A HBM with the GA schedule",
+        wl.name
+    );
+
+    let alloc = out.alloc.clone();
+    let flags = out.flags;
+    let (hw2, topo2, wl2) = (hw.clone(), topo.clone(), wl.clone());
+    // PJRT clients are not Send: the factory builds the runtime on the
+    // batcher thread.
+    let factory: RunnerFactory = Box::new(move || {
+        let runtime =
+            GemmRuntime::new(&Manifest::default_dir()).expect("artifacts");
+        Executor::new(&hw2, &topo2, &wl2, &alloc, flags, &runtime)
+            .run(0, false)
+            .expect("warmup");
+        Box::new(move |bsz| {
+            let exec =
+                Executor::new(&hw2, &topo2, &wl2, &alloc, flags, &runtime);
+            exec.run(bsz as u64, false).expect("batch run");
+            let cost = evaluate(&hw2, &topo2, &wl2, &alloc, flags);
+            let batch_ns = cost.latency_ns * bsz as f64
+                / pipeline_speedup(&cost, bsz.max(1));
+            (batch_ns, batch_ns / bsz as f64)
+        })
+    });
+
+    let server = Server::start_factory(8, Duration::from_millis(2), factory);
+    let client = server.client();
+    let n_req = 24;
+    let t0 = std::time::Instant::now();
+    let waiters: Vec<_> = (0..n_req).map(|_| client.submit()).collect();
+    let mut batch_sizes = Vec::new();
+    let mut per_sample = Vec::new();
+    for w in waiters {
+        let r = w.recv()?;
+        batch_sizes.push(r.batch_size);
+        per_sample.push(r.modeled_per_sample_ns);
+    }
+    let wall = t0.elapsed();
+    drop(client);
+    let stats = server.shutdown();
+
+    println!(
+        "served {} requests in {} batches (max batch {}) in {:.2?}",
+        stats.served, stats.batches, stats.max_batch, wall
+    );
+    println!(
+        "modeled per-sample latency: mean {:.3} ms (batching amortizes \
+         the pipeline)",
+        mcmcomm::util::math::mean(&per_sample) / 1e6
+    );
+    println!(
+        "host throughput: {:.1} req/s",
+        n_req as f64 / wall.as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,90 @@
+"""AOT compile path: lower the L2 chunk function to HLO-text artifacts.
+
+Emits one artifact per (M, K, N, relu) *shape bucket* plus a manifest the
+Rust runtime reads. HLO is shape-static, so the runtime pads a chiplet's
+chunk up to the nearest bucket and slices the result back (see
+rust/src/runtime/artifacts.rs); buckets are powers of two so padding waste
+is bounded by 2x per dim.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from compile.model import lower_chiplet_gemm
+
+# Power-of-two bucket dims. 16 = one systolic tile (paper Table 2:
+# 16x16 PE array); 256 caps a single chunk at 256^3 = 16.8M MACs so the
+# interpret-mode CPU path stays fast in tests and examples; 1024 covers
+# the contraction dims of the scaled model zoo (e.g. AlexNet-mini fc6).
+BUCKET_DIMS = (16, 64, 256, 1024)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def bucket_name(m: int, k: int, n: int, relu: bool) -> str:
+    return f"gemm_m{m}_k{k}_n{n}_{'relu' if relu else 'id'}"
+
+
+def emit_all(out_dir: str, dims=BUCKET_DIMS, verbose: bool = True) -> dict:
+    """Lower every bucket; write artifacts + manifest. Returns manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for m in dims:
+        for k in dims:
+            for n in dims:
+                for relu in (False, True):
+                    name = bucket_name(m, k, n, relu)
+                    path = f"{name}.hlo.txt"
+                    text = to_hlo_text(lower_chiplet_gemm(m, k, n, relu))
+                    with open(os.path.join(out_dir, path), "w") as f:
+                        f.write(text)
+                    entries.append({
+                        "name": name, "path": path,
+                        "m": m, "k": k, "n": n,
+                        "relu": relu, "dtype": "f32",
+                    })
+                    if verbose:
+                        print(f"  wrote {path} ({len(text)} chars)")
+    manifest = {
+        "version": 1,
+        "kernel": "matmul_os",
+        "accum_dtype": "f32",
+        "buckets": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote manifest.json ({len(entries)} buckets)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--dims", type=int, nargs="*", default=list(BUCKET_DIMS),
+                    help="bucket dims (powers of two)")
+    args = ap.parse_args()
+    emit_all(args.out_dir, dims=tuple(args.dims))
+
+
+if __name__ == "__main__":
+    main()

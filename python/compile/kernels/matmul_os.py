@@ -1,0 +1,136 @@
+"""Layer-1 Pallas kernel: output-stationary tiled GEMM with fused epilogue.
+
+This is the numeric twin of the paper's compute model. MCMComm models every
+chiplet as an R x C systolic array running the *output-stationary* dataflow
+(eq. 7, SCALE-Sim latency model):
+
+    comp_{x,y} = (2R + C + K - 2) * (Px/R) * (Py/C)
+
+i.e. the PE array holds one (R x C) output tile resident while the K
+(contraction) dimension streams through it, then moves to the next output
+tile — Px/R * Py/C tile iterations in total. The Pallas kernel below
+realizes exactly that schedule:
+
+  * grid = (M/bm, N/bn, K/bk): the two outer grid axes walk output tiles
+    (the "stationary" part), the innermost axis streams the contraction;
+  * the accumulator lives in a VMEM scratch ref across the K steps of one
+    output tile and is written out once per tile, on the last K step,
+    together with the fused bias/ReLU epilogue.
+
+TPU adaptation notes (DESIGN.md section Hardware-Adaptation): on a real TPU
+the (bm, bk) x (bk, bn) block product maps onto the 128x128 MXU and the
+three blocks must co-reside in ~16 MiB VMEM; block choice is therefore
+bm = bn = bk = 128 when shapes allow (3 * 128*128 * 4 B = 192 KiB per grid
+step, double-buffered ~384 KiB, far inside VMEM; MXU-shaped operands give
+the systolic array full occupancy). We *always* lower with interpret=True:
+the CPU PJRT plugin cannot execute Mosaic custom-calls, and correctness is
+the build-time contract (pytest vs `ref.py`); TPU efficiency is estimated
+analytically in EXPERIMENTS.md section Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pick_block(dim: int, preferred: int = 128, floor: int = 8) -> int:
+    """Largest power-of-two block <= `preferred` that divides `dim`.
+
+    Shapes fed by the AOT bucketizer are powers of two >= 16, so this
+    normally returns 128 (the MXU-shaped block) or the dimension itself
+    for small dims. Falls back to the largest divisor >= floor, or `dim`.
+    """
+    b = preferred
+    while b >= floor:
+        if dim % b == 0:
+            return b
+        b //= 2
+    return dim
+
+
+def _gemm_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, nk: int, relu: bool,
+                 has_bias: bool):
+    """One grid step: accumulate x_tile @ w_tile into the stationary tile.
+
+    Grid axes: (i, j, k) = (output-row tile, output-col tile, contraction
+    step). `acc_ref` is VMEM scratch holding the output-stationary
+    accumulator; it is zeroed on k == 0 and flushed (with epilogue) on
+    k == nk - 1.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        acc = acc_ref[...]
+        if has_bias:
+            acc = acc + b_ref[...].astype(jnp.float32)[None, :]
+        if relu:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("relu", "bm", "bn", "bk", "interpret"))
+def matmul_os(x, w, bias=None, *, relu: bool = False, bm: int = 0,
+              bn: int = 0, bk: int = 0, interpret: bool = True):
+    """Output-stationary tiled GEMM: ``epilogue(x @ w + bias)``.
+
+    Args:
+      x:    [M, K] activations (f32 or bf16).
+      w:    [K, N] weights.
+      bias: optional [N] bias fused into the epilogue.
+      relu: fuse ``max(0, .)`` into the epilogue.
+      bm/bn/bk: block sizes; 0 = auto (MXU-preferred 128, divisor of shape).
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns:
+      [M, N] float32 output (f32 accumulation regardless of input dtype).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    bm = bm or _pick_block(m)
+    bn = bn or _pick_block(n)
+    bk = bk or _pick_block(k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"blocks ({bm},{bn},{bk}) must divide shape ({m},{k},{n}); "
+        "the AOT bucketizer guarantees power-of-two dims")
+    nk = k // bk
+
+    has_bias = bias is not None
+    if not has_bias:
+        # Pallas wants a concrete ref; feed a zero vector that the kernel
+        # never reads (has_bias is closed over statically).
+        bias = jnp.zeros((n,), dtype=x.dtype)
+
+    kernel = functools.partial(
+        _gemm_kernel, nk=nk, relu=relu, has_bias=has_bias)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w, bias)

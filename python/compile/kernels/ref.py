@@ -1,0 +1,48 @@
+"""Pure-jnp correctness oracle for the chiplet GEMM kernel.
+
+This is the *reference semantics* the Pallas output-stationary kernel
+(`matmul_os.py`) must match bit-for-bit (up to float tolerance). Every
+pytest in `python/tests/` checks kernel-vs-ref; this file must therefore
+stay dependency-free and obviously correct.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_gemm(x, w, bias=None, relu: bool = False):
+    """Reference GEMM with optional fused bias-add and ReLU epilogue.
+
+    Args:
+      x:    [M, K] activations.
+      w:    [K, N] weights.
+      bias: optional [N] bias, added to every output row.
+      relu: apply max(0, .) after the (optional) bias add.
+
+    Returns:
+      [M, N] output in float32 accumulation (matching the kernel, which
+      accumulates in f32 regardless of input dtype).
+    """
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)[None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def ref_gemm_chain(x, weights, biases=None, relus=None):
+    """Reference for a sequence of chained GEMMs (layer-sequential model).
+
+    ``out_i = epilogue(out_{i-1} @ W_i)`` — the inter-layer pattern the
+    paper's on-package redistribution (Section 5.2) optimizes.
+    """
+    n = len(weights)
+    biases = biases if biases is not None else [None] * n
+    relus = relus if relus is not None else [False] * n
+    out = x
+    for w, b, r in zip(weights, biases, relus):
+        out = ref_gemm(out, w, b, r)
+    return out

@@ -1,0 +1,63 @@
+"""Layer-2 JAX model: the chiplet compute graph MCMComm schedules.
+
+MCMComm executes a DNN as a *sequence of GEMMs* spatially partitioned over
+a chiplet grid (paper section 4.2.2). The unit of work the Rust coordinator
+dispatches to one chiplet is a GEMM *chunk*:
+
+    out[Px rows, Py cols] = epilogue( x_chunk @ w_chunk (+ bias_chunk) )
+
+This module defines that chunk as a jittable JAX function built on the L1
+Pallas output-stationary kernel, plus a chained variant used to validate
+inter-layer semantics (the pattern on-package redistribution rearranges).
+
+These functions exist only on the *compile path*: `aot.py` lowers them once
+per shape bucket to HLO text under `artifacts/`, and the Rust runtime
+(rust/src/runtime) loads and executes the artifacts via PJRT. Python never
+runs at serving time.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul_os import matmul_os
+
+
+def chiplet_gemm(x, w, bias, *, relu: bool):
+    """One chiplet's share of a partitioned GEMM, with fused epilogue.
+
+    Returns a 1-tuple so the lowered HLO entry computation is a tuple —
+    the calling convention the Rust loader unwraps with `to_tuple1()`.
+    """
+    return (matmul_os(x, w, bias, relu=relu),)
+
+
+def chiplet_gemm_fn(relu: bool):
+    """The jittable chunk function for a given epilogue configuration."""
+    return functools.partial(chiplet_gemm, relu=relu)
+
+
+def gemm_chain(x, weights_and_biases, relus):
+    """Layer-sequential chain of GEMMs — inter-layer validation graph.
+
+    ``weights_and_biases`` is a flat tuple (w0, b0, w1, b1, ...) so the
+    function stays lowerable with positional ShapeDtypeStructs.
+    """
+    out = x
+    for idx, relu in enumerate(relus):
+        w = weights_and_biases[2 * idx]
+        b = weights_and_biases[2 * idx + 1]
+        (out,) = chiplet_gemm(out, w, b, relu=relu)
+    return (out,)
+
+
+def lower_chiplet_gemm(m: int, k: int, n: int, relu: bool,
+                       dtype=jnp.float32):
+    """Lower the chunk function for a concrete (M, K, N) shape bucket."""
+    x = jax.ShapeDtypeStruct((m, k), dtype)
+    w = jax.ShapeDtypeStruct((k, n), dtype)
+    b = jax.ShapeDtypeStruct((n,), dtype)
+    return jax.jit(chiplet_gemm_fn(relu)).lower(x, w, b)

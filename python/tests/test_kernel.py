@@ -1,0 +1,115 @@
+"""L1 correctness: Pallas output-stationary GEMM vs the pure-jnp oracle.
+
+This is the core numeric signal of the compile path — every artifact the
+Rust runtime executes lowers through `matmul_os`, so the kernel must match
+`ref.py` across shapes, dtypes, block choices and epilogue configs.
+Hypothesis sweeps the space; a few pinned cases document known-interesting
+points (single tile, tall/skinny, K=1 block count, bf16 inputs).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul_os import matmul_os, _pick_block
+from compile.kernels.ref import ref_gemm, ref_gemm_chain
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(shape).astype(dtype))
+
+
+def _check(m, k, n, *, relu, bias, dtype=np.float32, rtol=1e-5, atol=1e-5,
+           **blocks):
+    x, w = _rand((m, k), dtype), _rand((k, n), dtype)
+    b = _rand((n,), dtype) if bias else None
+    got = matmul_os(x, w, b, relu=relu, **blocks)
+    want = ref_gemm(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=atol)
+    assert got.dtype == jnp.float32
+
+
+# --- pinned cases ---------------------------------------------------------
+
+def test_single_tile():
+    _check(16, 16, 16, relu=False, bias=False)
+
+
+def test_single_tile_full_epilogue():
+    _check(16, 16, 16, relu=True, bias=True)
+
+
+def test_multi_tile_square():
+    _check(128, 128, 128, relu=False, bias=True)
+
+
+def test_tall_skinny():
+    _check(256, 16, 32, relu=True, bias=False)
+
+
+def test_wide_short():
+    _check(16, 256, 256, relu=False, bias=False)
+
+
+def test_explicit_small_blocks():
+    # Force many grid steps in every axis to exercise accumulation.
+    _check(64, 64, 64, relu=True, bias=True, bm=16, bn=16, bk=16)
+
+
+def test_bf16_inputs_f32_accum():
+    _check(64, 64, 64, relu=False, bias=True, dtype=jnp.bfloat16,
+           rtol=2e-2, atol=2e-2)
+
+
+def test_relu_clamps_negatives():
+    x = -jnp.ones((16, 16), jnp.float32)
+    w = jnp.ones((16, 16), jnp.float32)
+    out = matmul_os(x, w, relu=True)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_contraction_mismatch_raises():
+    with pytest.raises(AssertionError):
+        matmul_os(jnp.zeros((16, 32)), jnp.zeros((16, 16)))
+
+
+# --- hypothesis sweeps ----------------------------------------------------
+
+pow2 = st.sampled_from([16, 32, 64, 128])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=pow2, k=pow2, n=pow2, relu=st.booleans(), bias=st.booleans())
+def test_shape_sweep(m, k, n, relu, bias):
+    _check(m, k, n, relu=relu, bias=bias)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.sampled_from([16, 64]), k=st.sampled_from([16, 64]),
+       n=st.sampled_from([16, 64]),
+       bm=st.sampled_from([8, 16]), bk=st.sampled_from([8, 16]),
+       bn=st.sampled_from([8, 16]))
+def test_block_sweep(m, k, n, bm, bk, bn):
+    _check(m, k, n, relu=True, bias=True, bm=bm, bn=bn, bk=bk)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dim=st.integers(8, 512), preferred=st.sampled_from([32, 128]))
+def test_pick_block_divides(dim, preferred):
+    b = _pick_block(dim, preferred)
+    assert dim % b == 0
+    assert b <= max(preferred, dim)
+
+
+# --- chain oracle sanity --------------------------------------------------
+
+def test_chain_matches_manual():
+    x = _rand((32, 16))
+    ws = [_rand((16, 64)), _rand((64, 16))]
+    bs = [_rand((64,)), _rand((16,))]
+    out = ref_gemm_chain(x, ws, bs, [True, False])
+    want = ref_gemm(ref_gemm(x, ws[0], bs[0], True), ws[1], bs[1], False)
+    np.testing.assert_allclose(out, want, rtol=1e-6)

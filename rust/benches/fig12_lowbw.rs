@@ -1,0 +1,11 @@
+//! Bench: regenerate Figure 12 (low-bandwidth DRAM latency + EDP).
+use mcmcomm::eval::{figures, EvalConfig};
+
+fn main() {
+    let cfg = EvalConfig { quick: std::env::var("MCMCOMM_FULL").is_err(), seed: 42 };
+    let t0 = std::time::Instant::now();
+    let (lat, edp) = figures::fig12(&cfg);
+    assert_eq!(lat.len(), 4);
+    assert_eq!(edp.len(), 4);
+    println!("\nfig12 regenerated in {:.1?}", t0.elapsed());
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate Figure 13 (ablation: partitioning / +diagonal /
+//! +pipelining).
+use mcmcomm::eval::{figures, EvalConfig};
+
+fn main() {
+    let cfg = EvalConfig { quick: std::env::var("MCMCOMM_FULL").is_err(), seed: 42 };
+    let t0 = std::time::Instant::now();
+    let rows = figures::fig13(&cfg);
+    assert_eq!(rows.len(), 6);
+    println!("\nfig13 regenerated in {:.1?}", t0.elapsed());
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Figure 3 (netsim congestion study) and time the
+//! simulator itself.
+use std::time::Duration;
+use mcmcomm::eval::figures;
+use mcmcomm::topology::Pos;
+use mcmcomm::util::bench::{bench, black_box};
+
+fn main() {
+    let rows = figures::fig3(true);
+    assert_eq!(rows.len(), 6);
+    bench("netsim/4x4_16pulls_hbm", Duration::from_secs(2), || {
+        let (_, r) = mcmcomm::netsim::all_pull_from_memory(
+            4, 1e9, 60.0, 1024.0, Pos::new(0, 0), false);
+        black_box(r.makespan_ns);
+    });
+    bench("netsim/8x8_64pulls_hbm", Duration::from_secs(2), || {
+        let (_, r) = mcmcomm::netsim::all_pull_from_memory(
+            8, 1e9, 60.0, 1024.0, Pos::new(0, 0), false);
+        black_box(r.makespan_ns);
+    });
+}

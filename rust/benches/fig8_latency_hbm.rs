@@ -1,0 +1,10 @@
+//! Bench: regenerate Figure 8 (normalized latency, 4x4 HBM, types A-D).
+use mcmcomm::eval::{figures, EvalConfig};
+
+fn main() {
+    let cfg = EvalConfig { quick: std::env::var("MCMCOMM_FULL").is_err(), seed: 42 };
+    let t0 = std::time::Instant::now();
+    let cells = figures::fig8(&cfg);
+    assert_eq!(cells.len(), 16);
+    println!("\nfig8 regenerated in {:.1?}", t0.elapsed());
+}

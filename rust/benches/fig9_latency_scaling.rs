@@ -1,0 +1,12 @@
+//! Bench: regenerate Figure 9 (latency scaling, type A, 4x4/8x8[/16x16]).
+use mcmcomm::eval::{figures, EvalConfig};
+
+fn main() {
+    let full = std::env::var("MCMCOMM_FULL").is_ok();
+    let cfg = EvalConfig { quick: !full, seed: 42 };
+    let grids: &[usize] = if full { &[4, 8, 16] } else { &[4, 8] };
+    let t0 = std::time::Instant::now();
+    let cells = figures::fig9(&cfg, grids);
+    assert_eq!(cells.len(), 4 * grids.len());
+    println!("\nfig9 regenerated in {:.1?}", t0.elapsed());
+}

@@ -1,0 +1,51 @@
+//! Hot-path micro-benchmarks for the §Perf pass: the cost evaluator (GA
+//! fitness inner loop), the MIQP surrogate eval/subgradient, and the
+//! redistribution model.
+use std::time::Duration;
+use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::cost::evaluator::{evaluate, Objective, OptFlags};
+use mcmcomm::opt::miqp::objective::build;
+use mcmcomm::partition::uniform_allocation;
+use mcmcomm::redistribution::redistribute;
+use mcmcomm::topology::Topology;
+use mcmcomm::util::bench::{bench, black_box};
+use mcmcomm::workload::models::{alexnet, vit};
+
+fn main() {
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+
+    let wl = alexnet(1);
+    let alloc = uniform_allocation(&hw, &wl);
+    bench("evaluate/alexnet_4x4", Duration::from_secs(2), || {
+        black_box(evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL).latency_ns);
+    });
+
+    let wlv = vit(1);
+    let allocv = uniform_allocation(&hw, &wlv);
+    bench("evaluate/vit_4x4", Duration::from_secs(2), || {
+        black_box(evaluate(&hw, &topo, &wlv, &allocv, OptFlags::ALL).latency_ns);
+    });
+
+    let hw16 = HwConfig::paper(SystemType::A, MemKind::Hbm, 16);
+    let topo16 = Topology::from_hw(&hw16);
+    let alloc16 = uniform_allocation(&hw16, &wl);
+    bench("evaluate/alexnet_16x16", Duration::from_secs(2), || {
+        black_box(evaluate(&hw16, &topo16, &wl, &alloc16, OptFlags::ALL).latency_ns);
+    });
+
+    let f = build(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency);
+    let point: Vec<f64> = (0..f.model.dim()).map(|i| (i % 5) as f64 * 16.0 + 16.0).collect();
+    bench("miqp/surrogate_eval", Duration::from_secs(2), || {
+        black_box(f.model.eval(&point));
+    });
+    bench("miqp/subgradient", Duration::from_secs(2), || {
+        black_box(f.model.subgrad(&point));
+    });
+
+    let op = &wl.ops[1];
+    bench("redistribution/3step", Duration::from_secs(1), || {
+        black_box(redistribute(&hw, op, &alloc.parts[1], &alloc.parts[2], 2)
+            .total_ns());
+    });
+}

@@ -1,0 +1,219 @@
+//! Hardware configuration: the `HW` tuple of paper §4.2.1 plus the
+//! Table 2 constants.
+//!
+//! Units used throughout the cost model:
+//!   * time   — nanoseconds (f64). The chiplet clock defaults to 1 GHz so
+//!     1 compute cycle == 1 ns, matching the paper's cycle-accurate eqs.
+//!   * data   — bytes (f64); `bytes_per_elem` converts GEMM elements
+//!     (int8 edge-NPU datapath by default, per SIMBA/MTIA practice).
+//!   * BW     — GB/s, which is numerically bytes/ns, so `bytes / bw`
+//!     yields ns directly.
+//!   * energy — picojoules (f64).
+
+/// Packaging type (paper Figure 2 / §4.1): where main memory sits
+/// relative to the chiplet grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SystemType {
+    /// 2.5D, memory at one corner (SIMBA, Manticore): a single global
+    /// chiplet at grid position (0, 0).
+    A,
+    /// 2.5D, memory distributed along two opposite edges (MTIA): every
+    /// chiplet in the first and last grid column is a global chiplet.
+    B,
+    /// 3D, memory stacked on top of logic: every chiplet is global.
+    C,
+    /// 2.5D + 3D mix (Chiplet-Gym): memory stacks over the quadrant
+    /// centers — four interior global chiplets, near-uniform distance.
+    D,
+}
+
+impl SystemType {
+    pub const ALL: [SystemType; 4] =
+        [SystemType::A, SystemType::B, SystemType::C, SystemType::D];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SystemType::A => "type-A (corner, 2.5D)",
+            SystemType::B => "type-B (edges, 2.5D)",
+            SystemType::C => "type-C (stacked, 3D)",
+            SystemType::D => "type-D (mixed, 2.5D+3D)",
+        }
+    }
+
+    pub fn short(self) -> &'static str {
+        match self {
+            SystemType::A => "A",
+            SystemType::B => "B",
+            SystemType::C => "C",
+            SystemType::D => "D",
+        }
+    }
+}
+
+/// Off-chip memory technology (Table 2 bandwidth/energy points).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemKind {
+    /// 60 GB/s, 14.8 pJ/bit — the "low bandwidth" case (§4.3.3 case 1).
+    Dram,
+    /// 1000 GB/s, 4.11 pJ/bit — the "high bandwidth" case (case 2).
+    Hbm,
+}
+
+impl MemKind {
+    pub fn bandwidth_gbps(self) -> f64 {
+        match self {
+            MemKind::Dram => 60.0,
+            MemKind::Hbm => 1000.0,
+        }
+    }
+
+    pub fn energy_pj_per_bit(self) -> f64 {
+        match self {
+            MemKind::Dram => 14.8,
+            MemKind::Hbm => 4.11,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MemKind::Dram => "DRAM",
+            MemKind::Hbm => "HBM",
+        }
+    }
+}
+
+/// Energy coefficients (Table 2).
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyParams {
+    /// NoP link energy, pJ per bit per hop.
+    pub nop_pj_bit_hop: f64,
+    /// SRAM read/write energy, pJ per bit.
+    pub sram_pj_bit: f64,
+    /// MAC energy, pJ per PE per cycle.
+    pub mac_pj_cycle: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        EnergyParams {
+            nop_pj_bit_hop: 1.285,
+            sram_pj_bit: 0.28,
+            mac_pj_cycle: 4.6,
+        }
+    }
+}
+
+/// The full hardware configuration `HW = {BW_nop, BW_mem, X, Y, R, C,
+/// type}` (§4.2.1) plus modeling constants.
+#[derive(Debug, Clone)]
+pub struct HwConfig {
+    pub ty: SystemType,
+    pub mem: MemKind,
+    /// Chiplet grid rows (X) and columns (Y).
+    pub xdim: usize,
+    pub ydim: usize,
+    /// Systolic array rows (R) and columns (C) per chiplet.
+    pub r: usize,
+    pub c: usize,
+    /// NoP link bandwidth, GB/s (Table 2: 60).
+    pub bw_nop: f64,
+    /// Off-chip (global chiplet <-> memory) bandwidth, GB/s.
+    pub bw_mem: f64,
+    /// Chiplet clock in GHz; converts eq. 7 cycles to ns.
+    pub freq_ghz: f64,
+    /// Datapath element width in bytes (int8 inference default).
+    pub bytes_per_elem: f64,
+    pub energy: EnergyParams,
+}
+
+impl HwConfig {
+    /// Table 2 system: 16x16 PE chiplets, 60 GB/s NoP, chosen grid,
+    /// packaging type and memory kind.
+    pub fn paper(ty: SystemType, mem: MemKind, grid: usize) -> Self {
+        HwConfig {
+            ty,
+            mem,
+            xdim: grid,
+            ydim: grid,
+            r: 16,
+            c: 16,
+            bw_nop: 60.0,
+            bw_mem: mem.bandwidth_gbps(),
+            freq_ghz: 1.0,
+            bytes_per_elem: 1.0,
+            energy: EnergyParams::default(),
+        }
+    }
+
+    /// The paper's headline evaluation point: 4x4 type-A HBM.
+    pub fn default_4x4_hbm() -> Self {
+        Self::paper(SystemType::A, MemKind::Hbm, 4)
+    }
+
+    pub fn num_chiplets(&self) -> usize {
+        self.xdim * self.ydim
+    }
+
+    /// Cycle count -> nanoseconds.
+    pub fn cycles_to_ns(&self, cycles: f64) -> f64 {
+        cycles / self.freq_ghz
+    }
+
+    /// Element count -> bytes.
+    pub fn bytes(&self, elems: usize) -> f64 {
+        elems as f64 * self.bytes_per_elem
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.xdim == 0 || self.ydim == 0 {
+            return Err("grid dims must be positive".into());
+        }
+        if self.r == 0 || self.c == 0 {
+            return Err("systolic dims must be positive".into());
+        }
+        if self.ty == SystemType::D && (self.xdim < 2 || self.ydim < 2) {
+            return Err("type D needs at least a 2x2 grid".into());
+        }
+        if !(self.bw_nop > 0.0 && self.bw_mem > 0.0 && self.freq_ghz > 0.0) {
+            return Err("bandwidths and frequency must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_constants() {
+        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+        assert_eq!(hw.bw_mem, 1000.0);
+        assert_eq!(hw.bw_nop, 60.0);
+        assert_eq!((hw.r, hw.c), (16, 16));
+        assert_eq!(hw.energy.nop_pj_bit_hop, 1.285);
+        assert_eq!(hw.energy.sram_pj_bit, 0.28);
+        assert_eq!(hw.energy.mac_pj_cycle, 4.6);
+        assert_eq!(MemKind::Dram.bandwidth_gbps(), 60.0);
+        assert_eq!(MemKind::Dram.energy_pj_per_bit(), 14.8);
+        assert_eq!(MemKind::Hbm.energy_pj_per_bit(), 4.11);
+    }
+
+    #[test]
+    fn unit_conversions() {
+        let hw = HwConfig::default_4x4_hbm();
+        assert_eq!(hw.cycles_to_ns(100.0), 100.0); // 1 GHz
+        assert_eq!(hw.bytes(64), 64.0); // int8
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut hw = HwConfig::default_4x4_hbm();
+        hw.xdim = 0;
+        assert!(hw.validate().is_err());
+        let mut hw = HwConfig::paper(SystemType::D, MemKind::Hbm, 4);
+        hw.ydim = 1;
+        assert!(hw.validate().is_err());
+        assert!(HwConfig::default_4x4_hbm().validate().is_ok());
+    }
+}

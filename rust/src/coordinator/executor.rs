@@ -1,0 +1,200 @@
+//! Simulated-clock executor: runs a scheduled workload with **real
+//! numerics** — every chiplet chunk is a PJRT execution of the AOT
+//! Pallas GEMM — while the analytical evaluator advances the modeled MCM
+//! clock. Output correctness is checked against a plain CPU reference,
+//! proving all three layers compose.
+
+use anyhow::{Context, Result};
+
+use crate::config::HwConfig;
+use crate::cost::evaluator::{evaluate, CostBreakdown, OptFlags};
+use crate::partition::Allocation;
+use crate::runtime::pjrt::{reference_gemm, GemmRuntime};
+use crate::topology::Topology;
+use crate::util::rng::Pcg;
+use crate::workload::Workload;
+
+use super::plan::{build_plan, ExecutionPlan};
+
+/// Result of one end-to-end run.
+#[derive(Debug)]
+pub struct RunReport {
+    /// Analytical (simulated MCM) cost of the run.
+    pub modeled: CostBreakdown,
+    /// Host wall time actually spent executing chunks.
+    pub host_wall: std::time::Duration,
+    /// PJRT chunk executions performed.
+    pub chunks_executed: u64,
+    /// Max |pjrt - reference| over all op outputs.
+    pub max_abs_err: f32,
+    /// Final op output (row-major M x N).
+    pub output: Vec<f32>,
+}
+
+/// Deterministic synthetic weights/inputs (the "tiny-corpus" driver).
+pub fn random_matrix(rng: &mut Pcg, rows: usize, cols: usize) -> Vec<f32> {
+    (0..rows * cols)
+        .map(|_| (rng.normal() as f32) * 0.25)
+        .collect()
+}
+
+/// Reshape `src` (rows0 x cols0, row-major) into rows1 x cols1 by
+/// wrap-around replication — the deterministic stand-in for the im2col /
+/// pooling data reshuffles between layers whose dims do not match
+/// exactly (documented in DESIGN.md §Substitutions). Numerical
+/// correctness per op is still exact: both PJRT and the reference see
+/// identical operands.
+pub fn reshape_wrap(
+    src: &[f32],
+    rows0: usize,
+    cols0: usize,
+    rows1: usize,
+    cols1: usize,
+) -> Vec<f32> {
+    assert_eq!(src.len(), rows0 * cols0);
+    if rows0 == rows1 && cols0 == cols1 {
+        return src.to_vec();
+    }
+    let n = src.len().max(1);
+    (0..rows1 * cols1).map(|i| src[i % n]).collect()
+}
+
+/// The executor: owns the runtime + plan for one (hw, workload,
+/// allocation) triple.
+pub struct Executor<'a> {
+    pub hw: &'a HwConfig,
+    pub topo: &'a Topology,
+    pub wl: &'a Workload,
+    pub alloc: &'a Allocation,
+    pub flags: OptFlags,
+    pub plan: ExecutionPlan,
+    runtime: &'a GemmRuntime,
+}
+
+impl<'a> Executor<'a> {
+    pub fn new(
+        hw: &'a HwConfig,
+        topo: &'a Topology,
+        wl: &'a Workload,
+        alloc: &'a Allocation,
+        flags: OptFlags,
+        runtime: &'a GemmRuntime,
+    ) -> Self {
+        let plan = build_plan(hw, wl, alloc);
+        Executor { hw, topo, wl, alloc, flags, plan, runtime }
+    }
+
+    /// Run the whole workload once on synthetic data seeded by `seed`.
+    /// `verify` additionally recomputes every op on the CPU reference.
+    pub fn run(&self, seed: u64, verify: bool) -> Result<RunReport> {
+        let mut rng = Pcg::seeded(seed);
+        let t0 = std::time::Instant::now();
+        let chunks0 = self
+            .runtime
+            .executions
+            .load(std::sync::atomic::Ordering::Relaxed);
+
+        let mut max_err = 0.0f32;
+        let first = &self.wl.ops[0];
+        let mut acts = random_matrix(&mut rng, first.m, first.k);
+        let (mut cur_rows, mut cur_cols) = (first.m, first.k);
+        let mut output = Vec::new();
+
+        for (i, op) in self.wl.ops.iter().enumerate() {
+            // Activations: previous output (wrapped to this op's input
+            // shape) when chained, fresh data otherwise.
+            if i > 0 {
+                if op.chained {
+                    acts = reshape_wrap(&acts, cur_rows, cur_cols, op.m, op.k);
+                } else {
+                    acts = random_matrix(&mut rng, op.m, op.k);
+                }
+            }
+            let weights = random_matrix(&mut rng, op.k, op.n);
+            let bias = random_matrix(&mut rng, 1, op.n);
+
+            // Execute every non-empty chunk via PJRT and assemble.
+            let mut out = vec![0.0f32; op.m * op.n];
+            for c in &self.plan.per_op[i].chunks {
+                if c.is_empty() {
+                    continue;
+                }
+                // Slice operands for this chunk.
+                let mut xc = Vec::with_capacity(c.rows() * op.k);
+                for r in c.row0..c.row1 {
+                    xc.extend_from_slice(&acts[r * op.k..(r + 1) * op.k]);
+                }
+                let mut wc = Vec::with_capacity(op.k * c.cols());
+                for r in 0..op.k {
+                    wc.extend_from_slice(
+                        &weights[r * op.n + c.col0..r * op.n + c.col1],
+                    );
+                }
+                let bc = &bias[c.col0..c.col1];
+                let oc = self
+                    .runtime
+                    .gemm(&xc, &wc, Some(bc), c.rows(), op.k, c.cols(),
+                          op.relu)
+                    .with_context(|| {
+                        format!("op {} chunk {:?}", op.name, c.chiplet)
+                    })?;
+                for (ri, r) in (c.row0..c.row1).enumerate() {
+                    out[r * op.n + c.col0..r * op.n + c.col1]
+                        .copy_from_slice(
+                            &oc[ri * c.cols()..(ri + 1) * c.cols()],
+                        );
+                }
+            }
+
+            if verify {
+                let want = reference_gemm(
+                    &acts, &weights, Some(&bias), op.m, op.k, op.n, op.relu,
+                );
+                for (a, b) in out.iter().zip(&want) {
+                    max_err = max_err.max((a - b).abs());
+                }
+            }
+
+            cur_rows = op.m;
+            cur_cols = op.n;
+            acts = out.clone();
+            output = out;
+        }
+
+        let modeled = evaluate(self.hw, self.topo, self.wl, self.alloc,
+                               self.flags);
+        let chunks1 = self
+            .runtime
+            .executions
+            .load(std::sync::atomic::Ordering::Relaxed);
+        Ok(RunReport {
+            modeled,
+            host_wall: t0.elapsed(),
+            chunks_executed: chunks1 - chunks0,
+            max_abs_err: max_err,
+            output,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reshape_wrap_identity_and_wrap() {
+        let src = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(reshape_wrap(&src, 2, 2, 2, 2), src);
+        let w = reshape_wrap(&src, 2, 2, 1, 6);
+        assert_eq!(w, vec![1.0, 2.0, 3.0, 4.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn random_matrix_deterministic() {
+        let mut a = Pcg::seeded(1);
+        let mut b = Pcg::seeded(1);
+        assert_eq!(random_matrix(&mut a, 3, 4), random_matrix(&mut b, 3, 4));
+    }
+
+    // PJRT-backed executor tests live in rust/tests/e2e_runtime.rs.
+}

@@ -1,0 +1,11 @@
+//! Layer-3 coordinator: turns an optimized schedule into execution —
+//! the plan builder, the simulated-clock executor with real PJRT
+//! numerics, and the threaded batching server.
+
+pub mod executor;
+pub mod plan;
+pub mod server;
+
+pub use executor::{Executor, RunReport};
+pub use plan::{build_plan, Chunk, ExecutionPlan};
+pub use server::{Client, Response, Server, ServerStats};

@@ -1,0 +1,118 @@
+//! Execution plan: the bridge from an optimized [`Allocation`] to
+//! concrete per-chiplet GEMM chunks the runtime executes.
+
+use crate::config::HwConfig;
+use crate::partition::Allocation;
+use crate::workload::Workload;
+
+/// One chiplet's share of one op: a rectangle of the output matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunk {
+    pub chiplet: (usize, usize),
+    /// Output row range [row0, row1).
+    pub row0: usize,
+    pub row1: usize,
+    /// Output column range [col0, col1).
+    pub col0: usize,
+    pub col1: usize,
+}
+
+impl Chunk {
+    pub fn rows(&self) -> usize {
+        self.row1 - self.row0
+    }
+
+    pub fn cols(&self) -> usize {
+        self.col1 - self.col0
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows() == 0 || self.cols() == 0
+    }
+}
+
+/// Per-op chunk grid.
+#[derive(Debug, Clone)]
+pub struct OpPlan {
+    pub op_index: usize,
+    pub chunks: Vec<Chunk>,
+}
+
+/// The full plan for a workload.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    pub per_op: Vec<OpPlan>,
+}
+
+/// Turn partition prefix sums into chunk rectangles.
+pub fn build_plan(hw: &HwConfig, wl: &Workload, alloc: &Allocation)
+                  -> ExecutionPlan {
+    debug_assert!(alloc.validate(wl, hw).is_ok());
+    let mut per_op = Vec::with_capacity(wl.ops.len());
+    for (i, _op) in wl.ops.iter().enumerate() {
+        let part = &alloc.parts[i];
+        let mut row_off = vec![0usize; hw.xdim + 1];
+        for x in 0..hw.xdim {
+            row_off[x + 1] = row_off[x] + part.px[x];
+        }
+        let mut col_off = vec![0usize; hw.ydim + 1];
+        for y in 0..hw.ydim {
+            col_off[y + 1] = col_off[y] + part.py[y];
+        }
+        let mut chunks = Vec::with_capacity(hw.num_chiplets());
+        for x in 0..hw.xdim {
+            for y in 0..hw.ydim {
+                chunks.push(Chunk {
+                    chiplet: (x, y),
+                    row0: row_off[x],
+                    row1: row_off[x + 1],
+                    col0: col_off[y],
+                    col1: col_off[y + 1],
+                });
+            }
+        }
+        per_op.push(OpPlan { op_index: i, chunks });
+    }
+    ExecutionPlan { per_op }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MemKind, SystemType};
+    use crate::partition::uniform_allocation;
+    use crate::workload::models::alexnet;
+
+    #[test]
+    fn chunks_tile_the_output_exactly() {
+        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+        let wl = alexnet(1);
+        let alloc = uniform_allocation(&hw, &wl);
+        let plan = build_plan(&hw, &wl, &alloc);
+        for (op, p) in wl.ops.iter().zip(&plan.per_op) {
+            assert_eq!(p.chunks.len(), 16);
+            // Row/col coverage without overlap.
+            let covered: usize =
+                p.chunks.iter().map(|c| c.rows() * c.cols()).sum();
+            assert_eq!(covered, op.m * op.n, "op {}", op.name);
+            let max_r = p.chunks.iter().map(|c| c.row1).max().unwrap();
+            let max_c = p.chunks.iter().map(|c| c.col1).max().unwrap();
+            assert_eq!((max_r, max_c), (op.m, op.n));
+        }
+    }
+
+    #[test]
+    fn skewed_partition_yields_empty_chunks() {
+        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+        let wl = crate::workload::Workload::new(
+            "w",
+            vec![crate::workload::GemmOp::dense("a", 10, 16, 10)],
+        );
+        let mut alloc = uniform_allocation(&hw, &wl);
+        alloc.parts[0].px = vec![10, 0, 0, 0];
+        let plan = build_plan(&hw, &wl, &alloc);
+        let empties =
+            plan.per_op[0].chunks.iter().filter(|c| c.is_empty()).count();
+        assert_eq!(empties, 12); // 3 idle rows x 4 cols
+    }
+}

@@ -1,0 +1,221 @@
+//! Threaded serving loop: the Layer-3 event loop that batches inference
+//! requests and dispatches them through the executor — the "real-time
+//! applications" framing of Figure 1 (self-driving / autonomous-system
+//! inference on an edge MCM).
+//!
+//! tokio is unavailable offline; std threads + mpsc channels implement
+//! the same leader/worker shape: one batcher thread owns the (single)
+//! simulated MCM, request producers are arbitrary threads.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One inference request.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub submitted: Instant,
+    reply: mpsc::Sender<Response>,
+}
+
+/// Completion record returned to the client.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Modeled MCM latency for the batch this request rode in (ns).
+    pub modeled_batch_ns: f64,
+    /// Modeled per-sample latency with pipelining (ns).
+    pub modeled_per_sample_ns: f64,
+    /// Host-side queueing + execution time.
+    pub host_latency: Duration,
+    pub batch_size: usize,
+}
+
+/// Server statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub served: u64,
+    pub batches: u64,
+    pub max_batch: usize,
+}
+
+/// Batch executor callback: given a batch size, return (modeled batch
+/// ns, modeled per-sample ns). Kept as a callback so the server logic is
+/// testable without PJRT. The non-`Send` variant is produced *inside*
+/// the batcher thread by a [`RunnerFactory`] — the PJRT client holds
+/// `Rc`s and must never cross threads.
+pub type BatchRunner = Box<dyn FnMut(usize) -> (f64, f64) + Send>;
+pub type LocalBatchRunner = Box<dyn FnMut(usize) -> (f64, f64)>;
+pub type RunnerFactory = Box<dyn FnOnce() -> LocalBatchRunner + Send>;
+
+/// Client handle.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::Sender<Request>,
+    next_id: Arc<Mutex<u64>>,
+}
+
+impl Client {
+    /// Submit a request; returns the receiver for its response.
+    pub fn submit(&self) -> mpsc::Receiver<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        let id = {
+            let mut g = self.next_id.lock().unwrap();
+            *g += 1;
+            *g
+        };
+        self.tx
+            .send(Request { id, submitted: Instant::now(), reply: rtx })
+            .expect("server stopped");
+        rrx
+    }
+}
+
+/// The batching server. Collects up to `max_batch` requests or waits at
+/// most `max_wait`, then runs the batch.
+pub struct Server {
+    handle: Option<JoinHandle<ServerStats>>,
+    tx: Option<mpsc::Sender<Request>>,
+    next_id: Arc<Mutex<u64>>,
+}
+
+impl Server {
+    pub fn start(max_batch: usize, max_wait: Duration,
+                 mut runner: BatchRunner) -> Server {
+        Self::start_factory(
+            max_batch,
+            max_wait,
+            Box::new(move || {
+                Box::new(move |bsz| runner(bsz)) as LocalBatchRunner
+            }),
+        )
+    }
+
+    /// Start with a factory that builds the runner *on the batcher
+    /// thread* (required for PJRT-backed runners, which are not `Send`).
+    pub fn start_factory(max_batch: usize, max_wait: Duration,
+                         factory: RunnerFactory) -> Server {
+        assert!(max_batch >= 1);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let handle = std::thread::spawn(move || {
+            let mut runner = factory();
+            let mut stats = ServerStats::default();
+            loop {
+                // Block for the first request of a batch.
+                let first = match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => break, // all clients gone
+                };
+                let mut batch = vec![first];
+                let deadline = Instant::now() + max_wait;
+                while batch.len() < max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => batch.push(r),
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                let bsz = batch.len();
+                let (batch_ns, per_sample_ns) = runner(bsz);
+                stats.batches += 1;
+                stats.served += bsz as u64;
+                stats.max_batch = stats.max_batch.max(bsz);
+                for req in batch {
+                    let _ = req.reply.send(Response {
+                        id: req.id,
+                        modeled_batch_ns: batch_ns,
+                        modeled_per_sample_ns: per_sample_ns,
+                        host_latency: req.submitted.elapsed(),
+                        batch_size: bsz,
+                    });
+                }
+            }
+            stats
+        });
+        Server {
+            handle: Some(handle),
+            tx: Some(tx),
+            next_id: Arc::new(Mutex::new(0)),
+        }
+    }
+
+    pub fn client(&self) -> Client {
+        Client {
+            tx: self.tx.as_ref().expect("server running").clone(),
+            next_id: self.next_id.clone(),
+        }
+    }
+
+    /// Drop the intake side and join the batcher.
+    pub fn shutdown(mut self) -> ServerStats {
+        drop(self.tx.take());
+        self.handle.take().unwrap().join().expect("batcher panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_runner() -> BatchRunner {
+        Box::new(|bsz| {
+            let batch_ns = 100.0 + 10.0 * bsz as f64;
+            (batch_ns, batch_ns / bsz as f64)
+        })
+    }
+
+    #[test]
+    fn serves_all_requests() {
+        let server = Server::start(4, Duration::from_millis(5), fake_runner());
+        let client = server.client();
+        let waiters: Vec<_> = (0..10).map(|_| client.submit()).collect();
+        let mut ids = Vec::new();
+        for w in waiters {
+            let resp = w.recv().unwrap();
+            assert!(resp.batch_size >= 1 && resp.batch_size <= 4);
+            ids.push(resp.id);
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 10);
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 10);
+        assert!(stats.batches >= 3); // 10 requests, batch cap 4
+    }
+
+    #[test]
+    fn batching_amortizes_per_sample_latency() {
+        let server = Server::start(8, Duration::from_millis(30), fake_runner());
+        let client = server.client();
+        // Submit a burst so they batch together.
+        let waiters: Vec<_> = (0..8).map(|_| client.submit()).collect();
+        let resps: Vec<_> =
+            waiters.into_iter().map(|w| w.recv().unwrap()).collect();
+        let batched = resps.iter().map(|r| r.batch_size).max().unwrap();
+        assert!(batched >= 2, "burst should have batched, got {batched}");
+        for r in &resps {
+            if r.batch_size > 1 {
+                assert!(r.modeled_per_sample_ns < r.modeled_batch_ns);
+            }
+        }
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_returns_stats() {
+        let server = Server::start(2, Duration::from_millis(1), fake_runner());
+        let client = server.client();
+        client.submit().recv().unwrap();
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 1);
+    }
+}

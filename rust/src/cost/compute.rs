@@ -1,0 +1,94 @@
+//! Compute cost (paper §4.3.1, eq. 7): output-stationary systolic-array
+//! cycle model from SCALE-Sim.
+//!
+//!   comp_{x,y}(*_i) = (2R + C + K - 2) * (Px[x]/R) * (Py[y]/C)
+//!
+//! The (2R + C + K - 2) term is the cycle count to fill, stream K
+//! partial sums through, and drain one R x C output tile; the two ratios
+//! count output-tile iterations. We use ceiling division (a partial tile
+//! still occupies the full array — exactly the under-utilization the
+//! paper's min-partition constraint avoids).
+
+use crate::config::HwConfig;
+use crate::util::math::ceil_div;
+use crate::workload::GemmOp;
+
+/// Cycles for one chiplet computing a (px x py) output chunk of `op`.
+pub fn comp_cycles(hw: &HwConfig, op: &GemmOp, px: usize, py: usize) -> f64 {
+    if px == 0 || py == 0 {
+        return 0.0;
+    }
+    // Grouped GEMMs run `groups` sequential sub-GEMMs with contraction
+    // K/groups; the fill/drain overhead is paid per group.
+    let g = op.groups.max(1);
+    let k_per = ceil_div(op.k, g);
+    let tile_cycles = (2 * hw.r + hw.c + k_per).saturating_sub(2) as f64;
+    let tiles = (ceil_div(px, hw.r) * ceil_div(py, hw.c)) as f64;
+    g as f64 * tile_cycles * tiles
+}
+
+/// Nanoseconds for the same chunk.
+pub fn comp_ns(hw: &HwConfig, op: &GemmOp, px: usize, py: usize) -> f64 {
+    hw.cycles_to_ns(comp_cycles(hw, op, px, py))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MemKind, SystemType};
+
+    fn hw() -> HwConfig {
+        HwConfig::paper(SystemType::A, MemKind::Hbm, 4) // R=C=16
+    }
+
+    #[test]
+    fn eq7_single_tile() {
+        // (2*16 + 16 + K - 2) * 1 * 1 with K = 64.
+        let op = GemmOp::dense("x", 16, 64, 16);
+        assert_eq!(comp_cycles(&hw(), &op, 16, 16), (32 + 16 + 64 - 2) as f64);
+    }
+
+    #[test]
+    fn eq7_tile_scaling() {
+        let op = GemmOp::dense("x", 64, 32, 64);
+        let one = comp_cycles(&hw(), &op, 16, 16);
+        assert_eq!(comp_cycles(&hw(), &op, 32, 32), 4.0 * one);
+        assert_eq!(comp_cycles(&hw(), &op, 64, 16), 4.0 * one);
+    }
+
+    #[test]
+    fn partial_tiles_round_up() {
+        let op = GemmOp::dense("x", 40, 32, 40);
+        // 17 rows -> 2 row tiles, same as 32 rows.
+        assert_eq!(
+            comp_cycles(&hw(), &op, 17, 16),
+            comp_cycles(&hw(), &op, 32, 16)
+        );
+    }
+
+    #[test]
+    fn zero_chunk_is_free() {
+        let op = GemmOp::dense("x", 16, 16, 16);
+        assert_eq!(comp_cycles(&hw(), &op, 0, 16), 0.0);
+    }
+
+    #[test]
+    fn grouped_pays_fill_drain_per_group() {
+        let h = hw();
+        let plain = GemmOp::dense("x", 16, 128, 16);
+        let grouped = GemmOp::dense("x", 16, 128, 16).grouped(4);
+        // Same MAC count, more fill/drain overhead.
+        assert!(
+            comp_cycles(&h, &grouped, 16, 16) > comp_cycles(&h, &plain, 16, 16)
+        );
+    }
+
+    #[test]
+    fn ns_uses_clock() {
+        let mut h = hw();
+        let op = GemmOp::dense("x", 16, 16, 16);
+        let base = comp_ns(&h, &op, 16, 16);
+        h.freq_ghz = 2.0;
+        assert!((comp_ns(&h, &op, 16, 16) - base / 2.0).abs() < 1e-9);
+    }
+}

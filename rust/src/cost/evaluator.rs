@@ -1,0 +1,325 @@
+//! End-to-end cost evaluator (paper §4.2.4, eqs. 3–6): composes the
+//! per-op compute and communication costs under the LS scheduling space
+//! with the co-optimizations of §5 toggled by [`OptFlags`]. This is the
+//! single source of truth scored by the GA, re-scored after MIQP, driven
+//! by the figure harnesses, and used by the coordinator's simulated
+//! clock.
+
+use crate::config::HwConfig;
+use crate::partition::Allocation;
+use crate::redistribution::redistribute;
+use crate::topology::Topology;
+use crate::workload::Workload;
+
+use super::compute::comp_ns;
+use super::energy::{
+    collect_energy_pj, comp_energy_pj, load_energy_pj, offchip_energy_pj,
+};
+use super::latency::{load, offload};
+
+/// The §5 co-optimization toggles (ablated in Figure 13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OptFlags {
+    /// §5.1 diagonal NoP links.
+    pub diagonal: bool,
+    /// §5.2 on-package redistribution between chained ops.
+    pub redistribution: bool,
+    /// §5.3 asynchronized (fused load+compute) execution.
+    pub async_fusion: bool,
+}
+
+impl OptFlags {
+    pub const NONE: OptFlags = OptFlags {
+        diagonal: false,
+        redistribution: false,
+        async_fusion: false,
+    };
+    pub const ALL: OptFlags = OptFlags {
+        diagonal: true,
+        redistribution: true,
+        async_fusion: true,
+    };
+}
+
+/// Optimization objective (eq. 6 "various metrics").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    Latency,
+    Edp,
+}
+
+/// Per-op cost decomposition (diagnostics + pipeline task durations).
+#[derive(Debug, Clone, Default)]
+pub struct OpCost {
+    pub in_ns: f64,
+    pub comp_ns: f64,
+    pub out_ns: f64,
+    /// True if the activations arrived by on-package redistribution.
+    pub redistributed_in: bool,
+    pub energy_pj: f64,
+    /// Total latency contribution of this op.
+    pub latency_ns: f64,
+}
+
+/// End-to-end cost (eq. 3).
+#[derive(Debug, Clone, Default)]
+pub struct CostBreakdown {
+    pub latency_ns: f64,
+    pub energy_pj: f64,
+    pub per_op: Vec<OpCost>,
+}
+
+impl CostBreakdown {
+    /// Energy-delay product in pJ·ns.
+    pub fn edp(&self) -> f64 {
+        self.latency_ns * self.energy_pj
+    }
+
+    pub fn objective(&self, obj: Objective) -> f64 {
+        match obj {
+            Objective::Latency => self.latency_ns,
+            Objective::Edp => self.edp(),
+        }
+    }
+}
+
+/// Evaluate `alloc` for `wl` on `hw` under `flags` (eqs. 3–5).
+///
+/// LS scheduling: ops run in sequence. Per op the stages are
+/// `in → comp → out`; §5.3 async fusion merges in+comp per chiplet when
+/// the previous boundary allows it. Redistribution (when legal per
+/// §5.2 and enabled) replaces the producer's store + consumer's
+/// activation load whenever it is the cheaper strategy ("adaptive
+/// communication strategy", §6.1).
+pub fn evaluate(
+    hw: &HwConfig,
+    topo: &Topology,
+    wl: &Workload,
+    alloc: &Allocation,
+    flags: OptFlags,
+) -> CostBreakdown {
+    debug_assert!(alloc.parts.len() == wl.ops.len());
+    let n = wl.ops.len();
+    let mut out = CostBreakdown::default();
+    out.per_op.reserve(n);
+
+    // Decide redistribution per edge (i -> i+1) up front; cache the
+    // 3-step cost so the per-op loop never recomputes it (§Perf).
+    let mut redist_edge = vec![false; n]; // edge i: ops[i] -> ops[i+1]
+    let mut redist_cost = vec![None; n];
+    if flags.redistribution {
+        for i in 0..n.saturating_sub(1) {
+            if !wl.ops[i].redistributable_to(&wl.ops[i + 1]) {
+                continue;
+            }
+            let r = redistribute(
+                hw,
+                &wl.ops[i],
+                &alloc.parts[i],
+                &alloc.parts[i + 1],
+                alloc.collect_cols[i],
+            );
+            let store = offload(hw, topo, &wl.ops[i], flags.diagonal);
+            let act_load_extra = {
+                let full = load(hw, topo, &wl.ops[i + 1],
+                                &alloc.parts[i + 1], flags.diagonal, true);
+                let wonly = load(hw, topo, &wl.ops[i + 1],
+                                 &alloc.parts[i + 1], flags.diagonal, false);
+                full.wall_ns() - wonly.wall_ns()
+            };
+            // Adopt redistribution when it beats the memory round-trip.
+            if r.total_ns() < store.wall_ns() + act_load_extra {
+                redist_edge[i] = true;
+                redist_cost[i] = Some(r);
+            }
+        }
+    }
+
+    for (i, op) in wl.ops.iter().enumerate() {
+        let part = &alloc.parts[i];
+        let acts_from_redist = i > 0 && redist_edge[i - 1];
+
+        // ---- input stage
+        let in_cost = load(hw, topo, op, part, flags.diagonal, !acts_from_redist);
+        let incoming = if acts_from_redist {
+            redist_cost[i - 1]
+        } else {
+            None
+        };
+        let redist_ns = incoming.map_or(0.0, |r| r.total_ns());
+
+        // ---- compute stage (per chiplet)
+        let comp_per: Vec<f64> = (0..hw.xdim)
+            .flat_map(|x| {
+                (0..hw.ydim)
+                    .map(move |y| (x, y))
+            })
+            .map(|(x, y)| comp_ns(hw, op, part.px[x], part.py[y]))
+            .collect();
+        let comp_max = comp_per.iter().copied().fold(0.0, f64::max);
+
+        // in+comp wall time. Redistribution is a row/column-structured
+        // exchange that must finish before compute (it rewrites the
+        // operand layout), so it serializes with the fused part.
+        let in_comp_ns = if flags.async_fusion {
+            // §5.3: each chiplet starts as soon as its data is ready.
+            let fused = comp_per
+                .iter()
+                .enumerate()
+                .map(|(idx, &c)| in_cost.ready_ns(idx) + c)
+                .fold(0.0, f64::max);
+            redist_ns + fused
+        } else {
+            redist_ns + in_cost.wall_ns() + comp_max
+        };
+
+        // ---- output stage
+        let skip_store = i + 1 < n && redist_edge[i];
+        let out_ns = if skip_store {
+            0.0
+        } else {
+            offload(hw, topo, op, flags.diagonal).wall_ns()
+        };
+
+        // ---- energy
+        let mut pj = comp_energy_pj(hw, op, part);
+        // Off-chip: weights always; activations only when loaded.
+        let mut off_bytes = hw.bytes(op.k * op.n);
+        if !acts_from_redist {
+            off_bytes += hw.bytes(op.m * op.k);
+        }
+        if !skip_store {
+            off_bytes += hw.bytes(op.m * op.n);
+            pj += collect_energy_pj(hw, topo, op, part, flags.diagonal);
+        }
+        pj += offchip_energy_pj(hw, off_bytes);
+        pj += load_energy_pj(hw, topo, op, part, flags.diagonal,
+                             !acts_from_redist);
+        if let Some(r) = incoming {
+            pj += r.energy_pj;
+        }
+
+        let latency_ns = in_comp_ns + out_ns;
+        out.latency_ns += latency_ns;
+        out.energy_pj += pj;
+        out.per_op.push(OpCost {
+            in_ns: in_cost.wall_ns() + redist_ns,
+            comp_ns: comp_max,
+            out_ns,
+            redistributed_in: acts_from_redist,
+            energy_pj: pj,
+            latency_ns,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MemKind, SystemType};
+    use crate::partition::uniform_allocation;
+    use crate::workload::models::alexnet;
+    use crate::workload::{GemmOp, Workload};
+
+    fn setup(mem: MemKind) -> (HwConfig, Topology) {
+        let hw = HwConfig::paper(SystemType::A, mem, 4);
+        let topo = Topology::from_hw(&hw);
+        (hw, topo)
+    }
+
+    #[test]
+    fn cost_is_positive_and_additive() {
+        let (hw, topo) = setup(MemKind::Hbm);
+        let wl = alexnet(1);
+        let alloc = uniform_allocation(&hw, &wl);
+        let c = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
+        assert!(c.latency_ns > 0.0 && c.energy_pj > 0.0);
+        let sum: f64 = c.per_op.iter().map(|o| o.latency_ns).sum();
+        assert!((sum - c.latency_ns).abs() < 1e-6);
+        assert_eq!(c.per_op.len(), wl.ops.len());
+    }
+
+    #[test]
+    fn optimizations_never_hurt_latency() {
+        let (hw, topo) = setup(MemKind::Hbm);
+        for wl in crate::workload::models::evaluation_suite(1) {
+            let alloc = uniform_allocation(&hw, &wl);
+            let base = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
+            let opt = evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL);
+            assert!(
+                opt.latency_ns <= base.latency_ns * 1.0001,
+                "{}: opt {} > base {}",
+                wl.name,
+                opt.latency_ns,
+                base.latency_ns
+            );
+        }
+    }
+
+    #[test]
+    fn redistribution_fires_on_alexnet_hbm() {
+        let (hw, topo) = setup(MemKind::Hbm);
+        let wl = alexnet(1);
+        let alloc = uniform_allocation(&hw, &wl);
+        let c = evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL);
+        let n_redist =
+            c.per_op.iter().filter(|o| o.redistributed_in).count();
+        assert!(n_redist >= 4, "only {n_redist} redistributed inputs");
+    }
+
+    #[test]
+    fn edp_is_product() {
+        let (hw, topo) = setup(MemKind::Dram);
+        let wl = alexnet(1);
+        let alloc = uniform_allocation(&hw, &wl);
+        let c = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
+        assert!((c.edp() - c.latency_ns * c.energy_pj).abs() < 1.0);
+        assert_eq!(c.objective(Objective::Latency), c.latency_ns);
+        assert_eq!(c.objective(Objective::Edp), c.edp());
+    }
+
+    #[test]
+    fn dram_slower_than_hbm() {
+        let wl = alexnet(1);
+        let (hw_h, topo_h) = setup(MemKind::Hbm);
+        let (hw_d, topo_d) = setup(MemKind::Dram);
+        let a_h = uniform_allocation(&hw_h, &wl);
+        let c_h = evaluate(&hw_h, &topo_h, &wl, &a_h, OptFlags::NONE);
+        let c_d = evaluate(&hw_d, &topo_d, &wl, &a_h, OptFlags::NONE);
+        assert!(c_d.latency_ns > c_h.latency_ns);
+    }
+
+    #[test]
+    fn async_fusion_helps_skewed_partitions() {
+        let (hw, topo) = setup(MemKind::Hbm);
+        let wl = Workload::new(
+            "w",
+            vec![GemmOp::dense("a", 4096, 512, 4096)],
+        );
+        let alloc = uniform_allocation(&hw, &wl);
+        let sync = evaluate(&hw, &topo, &wl, &alloc,
+                            OptFlags { async_fusion: false, ..OptFlags::NONE });
+        let asyn = evaluate(&hw, &topo, &wl, &alloc,
+                            OptFlags { async_fusion: true, ..OptFlags::NONE });
+        assert!(asyn.latency_ns <= sync.latency_ns);
+    }
+
+    #[test]
+    fn type_c_cheapest_communication() {
+        let wl = alexnet(1);
+        let mut lats = Vec::new();
+        for ty in SystemType::ALL {
+            let hw = HwConfig::paper(ty, MemKind::Hbm, 4);
+            let topo = Topology::from_hw(&hw);
+            let alloc = uniform_allocation(&hw, &wl);
+            lats.push((
+                ty,
+                evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE).latency_ns,
+            ));
+        }
+        let type_a = lats[0].1;
+        let type_c = lats[2].1;
+        assert!(type_c < type_a, "C={type_c} A={type_a}");
+    }
+}

@@ -1,0 +1,205 @@
+//! Communication latency model (paper §4.3.2–4.3.3): data offloading,
+//! data loading in the low-BW (DRAM) and high-BW (HBM) congestion
+//! regimes, and the shared/non-shared hop models — congestion-aware and
+//! packaging-adaptive through the `Topology` hop functions.
+
+use crate::config::HwConfig;
+use crate::topology::{Pos, Topology};
+use crate::partition::Partition;
+use crate::workload::GemmOp;
+
+/// Cost of one communication stage. The paper decomposes every off-chip
+/// communication into two *sequential* steps (§4.3.2–4.3.3): the
+/// serialized off-chip transfer through the memory interface, then the
+/// on-chip distribution/collection whose per-chiplet times encode
+/// congestion via the eq. 9–12 hop models.
+#[derive(Debug, Clone, Default)]
+pub struct CommCost {
+    /// On-chip distribution/collection time per chiplet, row-major; empty
+    /// means "no on-chip stage" (e.g. type C collection).
+    pub per_chiplet_ns: Vec<f64>,
+    /// Serialized off-chip (memory-interface) time.
+    pub offchip_ns: f64,
+}
+
+impl CommCost {
+    /// Synchronous wall time of this stage: off-chip step + slowest
+    /// chiplet's on-chip step.
+    pub fn wall_ns(&self) -> f64 {
+        self.offchip_ns + self.max_onchip_ns()
+    }
+
+    pub fn max_onchip_ns(&self) -> f64 {
+        self.per_chiplet_ns.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Data-ready time for chiplet `idx` (asynchronized execution §5.3):
+    /// the off-chip step followed by its own distribution.
+    pub fn ready_ns(&self, idx: usize) -> f64 {
+        let on = self.per_chiplet_ns.get(idx).copied().unwrap_or(0.0);
+        self.offchip_ns + on
+    }
+}
+
+/// Is this configuration in the high-bandwidth regime (§4.3.3 case 2)?
+/// When the memory interface outruns a NoP link, congestion moves onto
+/// the package network.
+pub fn high_bw(hw: &HwConfig) -> bool {
+    hw.bw_mem > hw.bw_nop
+}
+
+/// §4.3.2 — data offloading: collect outputs at the global chiplet(s)
+/// (eq. 8: bottlenecked on the entrance links), then write to memory.
+pub fn offload(hw: &HwConfig, topo: &Topology, op: &GemmOp, diagonal: bool) -> CommCost {
+    let out_bytes = hw.bytes(op.m * op.n);
+    let entr = topo.entrance_links(diagonal);
+    let collection_ns = if entr == 0 {
+        0.0 // type C: outputs go straight up to the local stack
+    } else {
+        out_bytes / (entr as f64 * hw.bw_nop)
+    };
+    CommCost {
+        per_chiplet_ns: vec![collection_ns; topo.num_chiplets()],
+        offchip_ns: out_bytes / hw.bw_mem,
+    }
+}
+
+/// §4.3.3 — data loading: off-chip fetch + congestion-aware on-chip
+/// distribution. `load_acts` is false when on-package redistribution
+/// (§5.2) supplies the activations and only weights stream from memory.
+pub fn load(
+    hw: &HwConfig,
+    topo: &Topology,
+    op: &GemmOp,
+    part: &Partition,
+    diagonal: bool,
+    load_acts: bool,
+) -> CommCost {
+    let hi = high_bw(hw);
+    let mut per_chiplet = Vec::with_capacity(topo.num_chiplets());
+    for p in topo.positions() {
+        let Pos { row: x, col: y } = p;
+        // Activation chunk px[x] * K is row-wise shared (every chiplet in
+        // grid row x needs it); weight chunk K * py[y] is column-shared.
+        let act_bytes = if load_acts {
+            hw.bytes(part.px[x] * op.k)
+        } else {
+            0.0
+        };
+        let w_bytes = hw.bytes(op.k * part.py[y]);
+        let (act_hops, w_hops) = if hi {
+            // §4.3.3 case 2: congestion on the package network; eqs.
+            // 11–12 fold the farthest-first waiting slots into the hop
+            // count.
+            (
+                topo.hops_row_shared(p, diagonal) as f64,
+                topo.hops_col_shared(p, diagonal) as f64,
+            )
+        } else {
+            // §4.3.3 case 1 (eq. 9–10): no contention, minimal-path
+            // store-and-forward.
+            let h = topo.hops_low_bw(p, diagonal) as f64;
+            (h, h)
+        };
+        per_chiplet.push((act_bytes * act_hops + w_bytes * w_hops) / hw.bw_nop);
+    }
+    // Unique bytes through the memory interface.
+    let mut off_bytes = hw.bytes(op.k * op.n); // weights (K x N)
+    if load_acts {
+        off_bytes += hw.bytes(op.m * op.k);
+    }
+    CommCost { per_chiplet_ns: per_chiplet, offchip_ns: off_bytes / hw.bw_mem }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MemKind, SystemType};
+    use crate::partition::uniform;
+
+    fn setup(ty: SystemType, mem: MemKind) -> (HwConfig, Topology) {
+        let hw = HwConfig::paper(ty, mem, 4);
+        let topo = Topology::from_hw(&hw);
+        (hw, topo)
+    }
+
+    #[test]
+    fn eq8_offload_entrance_bottleneck() {
+        let (hw, topo) = setup(SystemType::A, MemKind::Hbm);
+        let op = GemmOp::dense("x", 480, 64, 100);
+        let c = offload(&hw, &topo, &op, false);
+        // 48000 bytes over 2 entrance links x 60 GB/s.
+        assert!((c.max_onchip_ns() - 48000.0 / 120.0).abs() < 1e-9);
+        // HBM: off-chip much faster than collection -> collection wins.
+        assert!(c.wall_ns() > c.offchip_ns);
+        // Diagonal entrance (3 links) cuts collection by 1/3 (§5.1).
+        let cd = offload(&hw, &topo, &op, true);
+        assert!((cd.max_onchip_ns() * 1.5 - c.max_onchip_ns()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn type_c_offload_is_memory_only() {
+        let (hw, topo) = setup(SystemType::C, MemKind::Hbm);
+        let op = GemmOp::dense("x", 480, 64, 100);
+        let c = offload(&hw, &topo, &op, false);
+        assert_eq!(c.max_onchip_ns(), 0.0);
+        assert!(c.offchip_ns > 0.0);
+    }
+
+    #[test]
+    fn dram_shifts_bottleneck_offchip() {
+        // §3.2: with DRAM the off-chip share of the load dominates much
+        // more than with HBM (where congestion moves onto the NoP).
+        let op = GemmOp::dense("x", 1024, 512, 1024);
+        let (hw_d, topo_d) = setup(SystemType::A, MemKind::Dram);
+        let (hw_h, topo_h) = setup(SystemType::A, MemKind::Hbm);
+        assert!(!high_bw(&hw_d) && high_bw(&hw_h));
+        let part = uniform(&hw_d, &op);
+        let d = load(&hw_d, &topo_d, &op, &part, false, true);
+        let h = load(&hw_h, &topo_h, &op, &part, false, true);
+        let off_share = |c: &CommCost| c.offchip_ns / c.wall_ns();
+        assert!(off_share(&d) > 3.0 * off_share(&h),
+                "DRAM off-share {} vs HBM {}", off_share(&d), off_share(&h));
+        // And DRAM is slower end-to-end.
+        assert!(d.wall_ns() > h.wall_ns());
+    }
+
+    #[test]
+    fn hbm_load_is_noc_bound() {
+        let (hw, topo) = setup(SystemType::A, MemKind::Hbm);
+        let op = GemmOp::dense("x", 1024, 512, 1024);
+        let part = uniform(&hw, &op);
+        let c = load(&hw, &topo, &op, &part, false, true);
+        assert!(high_bw(&hw));
+        assert!(c.max_onchip_ns() > c.offchip_ns);
+    }
+
+    #[test]
+    fn diagonal_reduces_hbm_distribution() {
+        let (hw, topo) = setup(SystemType::A, MemKind::Hbm);
+        let op = GemmOp::dense("x", 1024, 512, 1024);
+        let part = uniform(&hw, &op);
+        let base = load(&hw, &topo, &op, &part, false, true);
+        let diag = load(&hw, &topo, &op, &part, true, true);
+        assert!(diag.max_onchip_ns() < base.max_onchip_ns());
+    }
+
+    #[test]
+    fn weights_only_load_drops_activation_traffic() {
+        let (hw, topo) = setup(SystemType::A, MemKind::Hbm);
+        let op = GemmOp::dense("x", 1024, 512, 1024);
+        let part = uniform(&hw, &op);
+        let full = load(&hw, &topo, &op, &part, false, true);
+        let wonly = load(&hw, &topo, &op, &part, false, false);
+        assert!(wonly.offchip_ns < full.offchip_ns);
+        assert!(wonly.max_onchip_ns() < full.max_onchip_ns());
+    }
+
+    #[test]
+    fn ready_sums_sequential_steps() {
+        let c = CommCost { per_chiplet_ns: vec![5.0, 50.0], offchip_ns: 10.0 };
+        assert_eq!(c.ready_ns(0), 15.0);
+        assert_eq!(c.ready_ns(1), 60.0);
+        assert_eq!(c.wall_ns(), 60.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! The end-to-end analytical cost framework (paper §4): cycle-accurate
+//! compute, congestion-aware communication latency, energy, and the
+//! evaluator that composes them under the §5 co-optimizations.
+
+pub mod compute;
+pub mod energy;
+pub mod evaluator;
+pub mod latency;
+
+pub use evaluator::{evaluate, CostBreakdown, Objective, OpCost, OptFlags};

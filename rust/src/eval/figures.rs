@@ -1,0 +1,321 @@
+//! Figure/table regeneration (paper §7). Every public `figN` function
+//! prints the paper-shaped rows and returns the raw numbers for tests
+//! and benches.
+
+use crate::config::{HwConfig, MemKind, SystemType};
+use crate::cost::evaluator::{evaluate, Objective, OptFlags};
+use crate::opt::{ga, run_scheme, Scheme};
+use crate::partition::uniform_allocation;
+use crate::pipeline;
+use crate::topology::{Pos, Topology};
+use crate::util::bench::Reporter;
+use crate::util::math::geomean;
+use crate::workload::models::evaluation_suite;
+
+use super::{run_cell, scheme_geomean, Cell, EvalConfig};
+
+/// Figure 3 output: scenario name -> (makespan ns, per-link utilization
+/// heat map rendered as ASCII).
+pub struct Fig3Row {
+    pub scenario: String,
+    pub makespan_ns: f64,
+}
+
+/// Figure 3 — motivation study: 16 chiplets pull 1 GB each over a 4x4
+/// mesh; DRAM vs HBM, peripheral vs central placement, 1x vs 2x NoP.
+pub fn fig3(print_heatmaps: bool) -> Vec<Fig3Row> {
+    // Paper constants: DRAM 60 GB/s, HBM 1024 GB/s (Fig. 3 caption),
+    // NoP 60 / 120 GB/s, 1 GB per chiplet.
+    let gb = 1e9f64;
+    let scenarios: Vec<(String, f64, f64, Pos)> = vec![
+        ("DRAM peripheral, NoP 60".into(), 60.0, 60.0, Pos::new(0, 0)),
+        ("DRAM peripheral, NoP 120".into(), 120.0, 60.0, Pos::new(0, 0)),
+        ("HBM peripheral, NoP 60".into(), 60.0, 1024.0, Pos::new(0, 0)),
+        ("HBM peripheral, NoP 120".into(), 120.0, 1024.0, Pos::new(0, 0)),
+        ("HBM central, NoP 60".into(), 60.0, 1024.0, Pos::new(1, 1)),
+        ("HBM central, NoP 120".into(), 120.0, 1024.0, Pos::new(1, 1)),
+    ];
+    let mut rep = Reporter::new(
+        "Figure 3(d): total network communication latency (4x4 mesh, 16 x 1 GB pulls)",
+        &["scenario", "latency (ms)", "vs DRAM-60"],
+    );
+    let mut rows = Vec::new();
+    let mut base = None;
+    for (name, bw_nop, bw_mem, attach) in scenarios {
+        let (graph, res) = crate::netsim::all_pull_from_memory(
+            4, gb, bw_nop, bw_mem, attach, false,
+        );
+        if base.is_none() {
+            base = Some(res.makespan_ns);
+        }
+        rep.row(vec![
+            name.clone(),
+            format!("{:.2}", res.makespan_ns / 1e6),
+            format!("{:.2}x", base.unwrap() / res.makespan_ns),
+        ]);
+        if print_heatmaps {
+            print_heatmap(&name, &graph, &res);
+        }
+        rows.push(Fig3Row { scenario: name, makespan_ns: res.makespan_ns });
+    }
+    rep.print();
+    rows
+}
+
+fn print_heatmap(
+    name: &str,
+    graph: &crate::topology::links::LinkGraph,
+    res: &crate::netsim::SimResult,
+) {
+    println!("\n-- Figure 3 heatmap: {name} (mean link utilization %) --");
+    let util = res.utilization(graph);
+    // Aggregate directed links per chiplet node (mean of incident).
+    for r in 0..graph.xdim {
+        let mut line = String::new();
+        for c in 0..graph.ydim {
+            let node = graph.chiplet_id(Pos::new(r, c));
+            let (mut acc, mut cnt) = (0.0, 0);
+            for (i, l) in graph.links.iter().enumerate() {
+                if l.from == node || l.to == node {
+                    acc += util[i];
+                    cnt += 1;
+                }
+            }
+            line.push_str(&format!("{:>6.1}", 100.0 * acc / cnt as f64));
+        }
+        println!("{line}");
+    }
+}
+
+/// The standard scheme set the figures compare (Table 3).
+const FIG_SCHEMES: [Scheme; 4] =
+    [Scheme::Baseline, Scheme::SimbaLike, Scheme::Ga, Scheme::Miqp];
+
+fn print_cells(title: &str, cells: &[Cell]) {
+    let mut rep = Reporter::new(
+        title,
+        &["model", "system", "LS", "SIMBA-like", "GA", "MIQP"],
+    );
+    for c in cells {
+        let get = |s: Scheme| {
+            c.normalized
+                .iter()
+                .find(|(x, _)| *x == s)
+                .map(|(_, v)| format!("{v:.3}"))
+                .unwrap_or_else(|| "-".into())
+        };
+        rep.row(vec![
+            c.model.clone(),
+            c.system.clone(),
+            get(Scheme::Baseline),
+            get(Scheme::SimbaLike),
+            get(Scheme::Ga),
+            get(Scheme::Miqp),
+        ]);
+    }
+    rep.print();
+    println!(
+        "geo-mean speedup vs LS:  SIMBA-like {:+.1}%  GA {:+.1}%  MIQP {:+.1}%",
+        (1.0 / scheme_geomean(cells, Scheme::SimbaLike) - 1.0) * 100.0,
+        (1.0 / scheme_geomean(cells, Scheme::Ga) - 1.0) * 100.0,
+        (1.0 / scheme_geomean(cells, Scheme::Miqp) - 1.0) * 100.0,
+    );
+}
+
+/// Figure 8 — normalized latency, 4x4 HBM, packaging types A–D.
+pub fn fig8(cfg: &EvalConfig) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for ty in SystemType::ALL {
+        let hw = HwConfig::paper(ty, MemKind::Hbm, 4);
+        for wl in evaluation_suite(1) {
+            cells.push(run_cell(&hw, &wl, Objective::Latency, cfg,
+                                &FIG_SCHEMES));
+        }
+    }
+    print_cells("Figure 8: normalized latency, 4x4 HBM, types A-D", &cells);
+    cells
+}
+
+/// Figure 9 — latency scaling on type A (4x4 / 8x8 / 16x16).
+pub fn fig9(cfg: &EvalConfig, grids: &[usize]) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for &g in grids {
+        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, g);
+        for wl in evaluation_suite(1) {
+            cells.push(run_cell(&hw, &wl, Objective::Latency, cfg,
+                                &FIG_SCHEMES));
+        }
+    }
+    print_cells("Figure 9: normalized latency scaling, type-A HBM", &cells);
+    cells
+}
+
+/// Figure 10 — EDP scaling on type A.
+pub fn fig10(cfg: &EvalConfig, grids: &[usize]) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for &g in grids {
+        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, g);
+        for wl in evaluation_suite(1) {
+            cells.push(run_cell(&hw, &wl, Objective::Edp, cfg, &FIG_SCHEMES));
+        }
+    }
+    print_cells("Figure 10: normalized EDP scaling, type-A HBM", &cells);
+    cells
+}
+
+/// Figure 11 — per-sample pipelining speedup vs batch size.
+pub fn fig11(batches: &[usize]) -> Vec<(String, usize, f64)> {
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let mut rep = Reporter::new(
+        "Figure 11: per-sample pipelining speedup vs LS",
+        &["model", "batch", "speedup"],
+    );
+    let mut rows = Vec::new();
+    for wl in evaluation_suite(1) {
+        let alloc = uniform_allocation(&hw, &wl);
+        let cost = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
+        for &b in batches {
+            let s = pipeline::pipeline_speedup(&cost, b);
+            rep.row(vec![wl.name.clone(), b.to_string(), format!("{s:.2}x")]);
+            rows.push((wl.name.clone(), b, s));
+        }
+    }
+    rep.print();
+    rows
+}
+
+/// Figure 12 — low-bandwidth (DRAM) latency + EDP, 4x4 type A.
+pub fn fig12(cfg: &EvalConfig) -> (Vec<Cell>, Vec<Cell>) {
+    let hw = HwConfig::paper(SystemType::A, MemKind::Dram, 4);
+    let mut lat = Vec::new();
+    let mut edp = Vec::new();
+    for wl in evaluation_suite(1) {
+        lat.push(run_cell(&hw, &wl, Objective::Latency, cfg, &FIG_SCHEMES));
+        edp.push(run_cell(&hw, &wl, Objective::Edp, cfg, &FIG_SCHEMES));
+    }
+    print_cells("Figure 12a: normalized latency, 4x4 type-A DRAM", &lat);
+    print_cells("Figure 12b: normalized EDP, 4x4 type-A DRAM", &edp);
+    (lat, edp)
+}
+
+/// Figure 13 — ablation: partitioning only, +diagonal links,
+/// +pipelining; for latency and EDP. Returns (config name, objective,
+/// normalized value).
+pub fn fig13(cfg: &EvalConfig) -> Vec<(String, String, f64)> {
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let stages: [(&str, OptFlags, bool); 3] = [
+        ("partition only",
+         OptFlags { diagonal: false, redistribution: true, async_fusion: false },
+         false),
+        ("+ diagonal links",
+         OptFlags { diagonal: true, redistribution: true, async_fusion: false },
+         false),
+        ("+ pipelining (batch 4)",
+         OptFlags { diagonal: true, redistribution: true, async_fusion: true },
+         true),
+    ];
+    let mut rep = Reporter::new(
+        "Figure 13: ablation (geo-mean speedup vs LS across models)",
+        &["configuration", "latency speedup", "EDP speedup"],
+    );
+    let mut out = Vec::new();
+    let mut lat_cols: Vec<Vec<f64>> = vec![Vec::new(); stages.len()];
+    let mut edp_cols: Vec<Vec<f64>> = vec![Vec::new(); stages.len()];
+    for wl in evaluation_suite(1) {
+        let base_alloc = uniform_allocation(&hw, &wl);
+        let base = evaluate(&hw, &topo, &wl, &base_alloc, OptFlags::NONE);
+        for (si, (_, flags, pipelined)) in stages.iter().enumerate() {
+            let mut p = cfg.scheduler(Objective::Latency).ga;
+            p.seed = cfg.seed;
+            let r = ga::optimize(&hw, &topo, &wl, *flags, Objective::Latency,
+                                 &p);
+            let c = evaluate(&hw, &topo, &wl, &r.alloc, *flags);
+            let (mut lat, mut edp) = (c.latency_ns, c.edp());
+            if *pipelined {
+                let speed = pipeline::pipeline_speedup(&c, 4);
+                lat /= speed;
+                edp /= speed * speed; // energy unchanged, delay shrinks
+            }
+            lat_cols[si].push(base.latency_ns / lat);
+            edp_cols[si].push(base.edp() / edp);
+        }
+    }
+    for (si, (name, _, _)) in stages.iter().enumerate() {
+        let l = geomean(&lat_cols[si]);
+        let e = geomean(&edp_cols[si]);
+        rep.row(vec![
+            name.to_string(),
+            format!("{l:.2}x"),
+            format!("{e:.2}x"),
+        ]);
+        out.push((name.to_string(), "latency".into(), l));
+        out.push((name.to_string(), "edp".into(), e));
+    }
+    rep.print();
+    out
+}
+
+/// §3.5 solver comparison: quality + solving time per scheme on the
+/// headline config.
+pub fn solver_compare(cfg: &EvalConfig) -> Vec<(Scheme, f64, f64)> {
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let wl = crate::workload::models::alexnet(1);
+    let scfg = cfg.scheduler(Objective::Latency);
+    let mut rep = Reporter::new(
+        "Solver comparison (AlexNet, 4x4 type-A HBM, latency)",
+        &["scheme", "normalized latency", "solve time (s)"],
+    );
+    let mut out = Vec::new();
+    let base = run_scheme(Scheme::Baseline, &hw, &topo, &wl, &scfg)
+        .objective_value;
+    for s in [Scheme::Greedy, Scheme::Ga, Scheme::Miqp] {
+        let t0 = std::time::Instant::now();
+        let r = run_scheme(s, &hw, &topo, &wl, &scfg);
+        let dt = t0.elapsed().as_secs_f64();
+        let norm = r.objective_value / base;
+        rep.row(vec![
+            s.name().to_string(),
+            format!("{norm:.3}"),
+            format!("{dt:.2}"),
+        ]);
+        out.push((s, norm, dt));
+    }
+    rep.print();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_shapes_hold() {
+        let rows = fig3(false);
+        let by = |n: &str| {
+            rows.iter()
+                .find(|r| r.scenario.starts_with(n))
+                .unwrap()
+                .makespan_ns
+        };
+        // DRAM flat in NoP BW.
+        let flat = by("DRAM peripheral, NoP 60") / by("DRAM peripheral, NoP 120");
+        assert!((flat - 1.0).abs() < 0.05, "flat={flat}");
+        // HBM scales with NoP BW.
+        let hbm = by("HBM peripheral, NoP 60") / by("HBM peripheral, NoP 120");
+        assert!(hbm > 1.6, "hbm={hbm}");
+        // Central beats peripheral for HBM (paper: 1.53x).
+        let central = by("HBM peripheral, NoP 60") / by("HBM central, NoP 60");
+        assert!(central > 1.2, "central={central}");
+    }
+
+    #[test]
+    fn fig11_speedups_positive_and_flat() {
+        let rows = fig11(&[2, 8]);
+        for (model, b, s) in &rows {
+            assert!(*s >= 0.99, "{model} batch {b}: speedup {s}");
+        }
+    }
+}

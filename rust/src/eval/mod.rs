@@ -1,0 +1,179 @@
+//! Evaluation harness (paper §7): one regeneration function per figure,
+//! shared by the CLI (`mcmcomm figures`) and the `cargo bench` targets.
+//!
+//! "Quick" mode shrinks solver budgets so every figure regenerates in
+//! seconds; "full" mode uses paper-scale budgets (GA ≈ 30 s class,
+//! MIQP anytime limit). Normalized *shapes* — who wins, rough factors,
+//! crossovers — are the reproduction target (DESIGN.md).
+
+pub mod figures;
+pub mod lp;
+
+use std::time::Duration;
+
+use crate::config::{HwConfig, MemKind, SystemType};
+use crate::cost::evaluator::{evaluate, Objective, OptFlags};
+use crate::opt::{ga::GaParams, run_scheme, Scheme, SchedulerConfig};
+use crate::topology::Topology;
+use crate::workload::Workload;
+
+/// Harness-wide knobs.
+#[derive(Debug, Clone)]
+pub struct EvalConfig {
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        EvalConfig { quick: true, seed: 42 }
+    }
+}
+
+impl EvalConfig {
+    pub fn scheduler(&self, objective: Objective) -> SchedulerConfig {
+        if self.quick {
+            SchedulerConfig {
+                objective,
+                flags: OptFlags::ALL,
+                seed: self.seed,
+                ga: GaParams {
+                    population: 24,
+                    generations: 20,
+                    seed: self.seed,
+                    ..Default::default()
+                },
+                miqp_budget: Duration::from_secs(4),
+            }
+        } else {
+            SchedulerConfig {
+                objective,
+                flags: OptFlags::ALL,
+                seed: self.seed,
+                ga: GaParams {
+                    population: 48,
+                    generations: 120,
+                    seed: self.seed,
+                    budget: Some(Duration::from_secs(30)),
+                    ..Default::default()
+                },
+                miqp_budget: Duration::from_secs(120),
+            }
+        }
+    }
+}
+
+/// One (model, system) cell: objective value per scheme, normalized to
+/// the LS baseline (baseline == 1.0; lower is better).
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub model: String,
+    pub system: String,
+    pub normalized: Vec<(Scheme, f64)>,
+}
+
+/// Run the Table-3 scheme set on one configuration.
+pub fn run_cell(
+    hw: &HwConfig,
+    wl: &Workload,
+    objective: Objective,
+    cfg: &EvalConfig,
+    schemes: &[Scheme],
+) -> Cell {
+    let topo = Topology::from_hw(hw);
+    let scfg = cfg.scheduler(objective);
+    let base = run_scheme(Scheme::Baseline, hw, &topo, wl, &scfg);
+    let mut normalized = vec![(Scheme::Baseline, 1.0)];
+    for &s in schemes {
+        if s == Scheme::Baseline {
+            continue;
+        }
+        let out = run_scheme(s, hw, &topo, wl, &scfg);
+        normalized.push((s, out.objective_value / base.objective_value));
+    }
+    Cell {
+        model: wl.name.clone(),
+        system: format!(
+            "{}-{}-{}x{}",
+            hw.ty.short(),
+            hw.mem.name(),
+            hw.xdim,
+            hw.ydim
+        ),
+        normalized,
+    }
+}
+
+/// Geo-mean of the normalized values of one scheme across cells.
+pub fn scheme_geomean(cells: &[Cell], scheme: Scheme) -> f64 {
+    let vals: Vec<f64> = cells
+        .iter()
+        .filter_map(|c| {
+            c.normalized
+                .iter()
+                .find(|(s, _)| *s == scheme)
+                .map(|(_, v)| *v)
+        })
+        .collect();
+    crate::util::math::geomean(&vals)
+}
+
+/// Quick helper: the standard 4-model suite at batch 1.
+pub fn suite() -> Vec<Workload> {
+    crate::workload::models::evaluation_suite(1)
+}
+
+/// Convenience: evaluate one allocation-scheme on a fresh config.
+pub fn baseline_latency(ty: SystemType, mem: MemKind, grid: usize,
+                        wl: &Workload) -> f64 {
+    let hw = HwConfig::paper(ty, mem, grid);
+    let topo = Topology::from_hw(&hw);
+    let alloc = crate::partition::uniform_allocation(&hw, wl);
+    evaluate(&hw, &topo, wl, &alloc, OptFlags::NONE).latency_ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::alexnet;
+
+    #[test]
+    fn cell_normalizes_to_baseline() {
+        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+        let wl = alexnet(1);
+        let cfg = EvalConfig { quick: true, seed: 7 };
+        let cell = run_cell(
+            &hw,
+            &wl,
+            Objective::Latency,
+            &cfg,
+            &[Scheme::Baseline, Scheme::SimbaLike, Scheme::Ga],
+        );
+        assert_eq!(cell.normalized[0], (Scheme::Baseline, 1.0));
+        // GA (with optimizations) must beat the baseline on type A HBM.
+        let ga = cell
+            .normalized
+            .iter()
+            .find(|(s, _)| *s == Scheme::Ga)
+            .unwrap()
+            .1;
+        assert!(ga < 1.0, "GA normalized {ga} >= 1");
+    }
+
+    #[test]
+    fn geomean_over_cells() {
+        let cells = vec![
+            Cell {
+                model: "a".into(),
+                system: "s".into(),
+                normalized: vec![(Scheme::Ga, 0.5)],
+            },
+            Cell {
+                model: "b".into(),
+                system: "s".into(),
+                normalized: vec![(Scheme::Ga, 2.0)],
+            },
+        ];
+        assert!((scheme_geomean(&cells, Scheme::Ga) - 1.0).abs() < 1e-12);
+    }
+}

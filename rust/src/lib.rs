@@ -1,0 +1,39 @@
+//! # MCMComm — hardware-software co-optimization for end-to-end
+//! communication in multi-chip modules (reproduction)
+//!
+//! This crate is the Layer-3 (Rust) implementation of the MCMComm paper:
+//! an end-to-end, congestion-aware and packaging-adaptive analytical
+//! framework for MCM accelerators, the diagonal-link / on-package
+//! redistribution / pipelining co-optimizations, and the GA + MIQP
+//! schedulers that solve the optimized framework — plus the PJRT runtime
+//! that executes the scheduled GEMM chunks on real tensors using HLO
+//! artifacts AOT-compiled from the JAX/Pallas layers (`python/compile`).
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! * [`config`] — hardware configuration (paper §4.2.1, Table 2)
+//! * [`topology`] — grid types A–D, local indexing, hop models (§4.1, §5.1)
+//! * [`workload`] — GEMM-sequence IR + model zoo (§4.2.2, §7)
+//! * [`partition`] — workload allocations Px/Py (§4.2.3)
+//! * [`cost`] — latency / energy / EDP evaluator (§4.3–4.4, §5.3)
+//! * [`redistribution`] — 3-step on-package redistribution (§5.2)
+//! * [`netsim`] — link-level congestion simulator (Fig. 3 substrate)
+//! * [`opt`] — GA, greedy and MIQP schedulers (§6)
+//! * [`pipeline`] — RCPSP batch pipelining (§5.4)
+//! * [`runtime`] — PJRT execution of AOT HLO artifacts
+//! * [`coordinator`] — end-to-end orchestration + serving loop
+//! * [`eval`] — figure/table regeneration harnesses (§7)
+//! * [`util`] — offline substrates: RNG, JSON, CLI, bench, propcheck
+
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod eval;
+pub mod netsim;
+pub mod opt;
+pub mod partition;
+pub mod pipeline;
+pub mod redistribution;
+pub mod runtime;
+pub mod topology;
+pub mod util;
+pub mod workload;

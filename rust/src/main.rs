@@ -1,0 +1,348 @@
+//! `mcmcomm` — the Layer-3 leader binary.
+//!
+//! Subcommands:
+//!   figures    regenerate the paper's figures (3, 8–13) and tables
+//!   optimize   run one scheduler on one workload/config and report
+//!   netsim     run the Figure-3 congestion study with custom knobs
+//!   run-e2e    execute a workload with real PJRT numerics end to end
+//!   serve      threaded batching-server demo on the simulated MCM
+//!   help       this text
+
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::coordinator::Executor;
+use mcmcomm::cost::evaluator::{evaluate, Objective};
+use mcmcomm::eval::{figures, EvalConfig};
+use mcmcomm::opt::{run_scheme, Scheme, SchedulerConfig};
+use mcmcomm::runtime::{GemmRuntime, Manifest};
+use mcmcomm::topology::{Pos, Topology};
+use mcmcomm::util::cli::Args;
+use mcmcomm::workload::models;
+use mcmcomm::workload::Workload;
+
+const HELP: &str = "\
+mcmcomm — MCMComm reproduction (see README.md)
+
+USAGE: mcmcomm <subcommand> [--options]
+
+  figures   --fig <3|8|9|10|11|12|13|solver> | --all   [--full] [--seed N]
+  optimize  --model <alexnet|vit|vision_mamba|hydranet> [--scheme <baseline|simba|greedy|ga|miqp>]
+            [--type <A|B|C|D>] [--mem <hbm|dram>] [--grid N] [--objective <latency|edp>]
+            [--batch N] [--seed N]
+  netsim    [--grid N] [--bw-nop G] [--bw-mem G] [--central] [--diagonal] [--gb BYTES]
+  run-e2e   [--model NAME] [--scheme NAME] [--scale S] [--artifacts DIR] [--seed N]
+  serve     [--requests N] [--max-batch N] [--model NAME] [--artifacts DIR]
+";
+
+fn parse_model(name: &str, batch: usize) -> Result<Workload> {
+    Ok(match name {
+        "alexnet" => models::alexnet(batch),
+        "vit" => models::vit(batch),
+        "vision_mamba" | "vim" => models::vision_mamba(batch),
+        "hydranet" => models::hydranet(batch),
+        _ => bail!("unknown model '{name}'"),
+    })
+}
+
+fn parse_scheme(name: &str) -> Result<Scheme> {
+    Ok(match name {
+        "baseline" | "ls" => Scheme::Baseline,
+        "simba" => Scheme::SimbaLike,
+        "greedy" => Scheme::Greedy,
+        "ga" => Scheme::Ga,
+        "miqp" => Scheme::Miqp,
+        _ => bail!("unknown scheme '{name}'"),
+    })
+}
+
+fn parse_type(name: &str) -> Result<SystemType> {
+    Ok(match name.to_ascii_uppercase().as_str() {
+        "A" => SystemType::A,
+        "B" => SystemType::B,
+        "C" => SystemType::C,
+        "D" => SystemType::D,
+        _ => bail!("unknown system type '{name}'"),
+    })
+}
+
+fn parse_mem(name: &str) -> Result<MemKind> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "hbm" => MemKind::Hbm,
+        "dram" => MemKind::Dram,
+        _ => bail!("unknown memory kind '{name}'"),
+    })
+}
+
+fn cmd_figures(mut args: Args) -> Result<()> {
+    let all = args.flag("all");
+    let fig = args.get("fig");
+    let cfg = EvalConfig {
+        quick: !args.flag("full"),
+        seed: args.get_usize("seed", 42).map_err(|e| anyhow!(e))? as u64,
+    };
+    args.finish().map_err(|e| anyhow!(e))?;
+    let grids: &[usize] = if cfg.quick { &[4, 8] } else { &[4, 8, 16] };
+    let run = |f: &str| -> Result<()> {
+        match f {
+            "3" => {
+                figures::fig3(true);
+            }
+            "8" => {
+                figures::fig8(&cfg);
+            }
+            "9" => {
+                figures::fig9(&cfg, grids);
+            }
+            "10" => {
+                figures::fig10(&cfg, grids);
+            }
+            "11" => {
+                figures::fig11(&[2, 4, 8, 16]);
+            }
+            "12" => {
+                figures::fig12(&cfg);
+            }
+            "13" => {
+                figures::fig13(&cfg);
+            }
+            "solver" => {
+                figures::solver_compare(&cfg);
+            }
+            _ => bail!("unknown figure '{f}'"),
+        }
+        Ok(())
+    };
+    if all {
+        for f in ["3", "8", "9", "10", "11", "12", "13", "solver"] {
+            run(f)?;
+        }
+    } else {
+        run(&fig.ok_or_else(|| anyhow!("need --fig or --all"))?)?;
+    }
+    Ok(())
+}
+
+fn cmd_optimize(mut args: Args) -> Result<()> {
+    let model = args.get_or("model", "alexnet");
+    let scheme = parse_scheme(&args.get_or("scheme", "ga"))?;
+    let ty = parse_type(&args.get_or("type", "A"))?;
+    let mem = parse_mem(&args.get_or("mem", "hbm"))?;
+    let grid = args.get_usize("grid", 4).map_err(|e| anyhow!(e))?;
+    let batch = args.get_usize("batch", 1).map_err(|e| anyhow!(e))?;
+    let objective = match args.get_or("objective", "latency").as_str() {
+        "latency" => Objective::Latency,
+        "edp" => Objective::Edp,
+        o => bail!("unknown objective '{o}'"),
+    };
+    let seed = args.get_usize("seed", 42).map_err(|e| anyhow!(e))? as u64;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let wl = parse_model(&model, batch)?;
+    let hw = HwConfig::paper(ty, mem, grid);
+    let topo = Topology::from_hw(&hw);
+    let cfg = SchedulerConfig { objective, seed, ..Default::default() };
+
+    println!(
+        "optimizing {} on {} {} {}x{} (objective: {objective:?}, scheme: {})",
+        wl.name,
+        hw.ty.name(),
+        hw.mem.name(),
+        grid,
+        grid,
+        scheme.name()
+    );
+    let t0 = std::time::Instant::now();
+    let base = run_scheme(Scheme::Baseline, &hw, &topo, &wl, &cfg);
+    let out = run_scheme(scheme, &hw, &topo, &wl, &cfg);
+    let cost = evaluate(&hw, &topo, &wl, &out.alloc, out.flags);
+    println!("solve time         : {:.2}s", t0.elapsed().as_secs_f64());
+    println!("baseline objective : {:.3e}", base.objective_value);
+    println!("optimized objective: {:.3e}", out.objective_value);
+    println!(
+        "speedup            : {:.2}x",
+        base.objective_value / out.objective_value
+    );
+    println!(
+        "latency {:.3} ms | energy {:.3} mJ | EDP {:.3e} pJ*ns",
+        cost.latency_ns / 1e6,
+        cost.energy_pj / 1e9,
+        cost.edp()
+    );
+    for (i, p) in out.alloc.parts.iter().enumerate().take(8) {
+        println!("  op {i:>2} {:<12} px={:?} py={:?}", wl.ops[i].name, p.px, p.py);
+    }
+    if out.alloc.parts.len() > 8 {
+        println!("  ... ({} ops total)", out.alloc.parts.len());
+    }
+    Ok(())
+}
+
+fn cmd_netsim(mut args: Args) -> Result<()> {
+    let grid = args.get_usize("grid", 4).map_err(|e| anyhow!(e))?;
+    let bw_nop = args.get_f64("bw-nop", 60.0).map_err(|e| anyhow!(e))?;
+    let bw_mem = args.get_f64("bw-mem", 1024.0).map_err(|e| anyhow!(e))?;
+    let central = args.flag("central");
+    let diagonal = args.flag("diagonal");
+    let gb = args.get_f64("gb", 1e9).map_err(|e| anyhow!(e))?;
+    args.finish().map_err(|e| anyhow!(e))?;
+    let attach = if central {
+        Pos::new((grid - 1) / 2, (grid - 1) / 2)
+    } else {
+        Pos::new(0, 0)
+    };
+    let (_, res) = mcmcomm::netsim::all_pull_from_memory(
+        grid, gb, bw_nop, bw_mem, attach, diagonal,
+    );
+    println!(
+        "grid {grid}x{grid}, NoP {bw_nop} GB/s, mem {bw_mem} GB/s, attach {:?}, diagonal {diagonal}",
+        attach
+    );
+    println!("makespan: {:.3} ms", res.makespan_ns / 1e6);
+    Ok(())
+}
+
+fn cmd_run_e2e(mut args: Args) -> Result<()> {
+    let model = args.get_or("model", "alexnet");
+    let scheme = parse_scheme(&args.get_or("scheme", "ga"))?;
+    let scale = args.get_usize("scale", 16).map_err(|e| anyhow!(e))?;
+    let artifacts = args.get_or(
+        "artifacts",
+        Manifest::default_dir().to_str().unwrap_or("artifacts"),
+    );
+    let seed = args.get_usize("seed", 42).map_err(|e| anyhow!(e))? as u64;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let full = parse_model(&model, 1)?;
+    let wl = models::scaled_down(&full, scale, 16);
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let cfg = SchedulerConfig { seed, ..Default::default() };
+    let out = run_scheme(scheme, &hw, &topo, &wl, &cfg);
+
+    let runtime = GemmRuntime::new(std::path::Path::new(&artifacts))?;
+    println!("PJRT platform: {}", runtime.platform());
+    let exec =
+        Executor::new(&hw, &topo, &wl, &out.alloc, out.flags, &runtime);
+    let report = exec.run(seed, true)?;
+    println!(
+        "{}: {} chunks via PJRT in {:.2?} host wall, max |err| vs CPU ref = {:.2e}",
+        wl.name,
+        report.chunks_executed,
+        report.host_wall,
+        report.max_abs_err
+    );
+    println!(
+        "modeled MCM latency {:.3} ms | energy {:.3} mJ | EDP {:.3e}",
+        report.modeled.latency_ns / 1e6,
+        report.modeled.energy_pj / 1e9,
+        report.modeled.edp()
+    );
+    anyhow::ensure!(report.max_abs_err < 1e-3, "numeric mismatch!");
+    println!("e2e OK");
+    Ok(())
+}
+
+fn cmd_serve(mut args: Args) -> Result<()> {
+    let n_req = args.get_usize("requests", 32).map_err(|e| anyhow!(e))?;
+    let max_batch = args.get_usize("max-batch", 8).map_err(|e| anyhow!(e))?;
+    let model = args.get_or("model", "vit");
+    let artifacts = args.get_or(
+        "artifacts",
+        Manifest::default_dir().to_str().unwrap_or("artifacts"),
+    );
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let full = parse_model(&model, 1)?;
+    let wl = models::scaled_down(&full, 16, 16);
+    let cfg = SchedulerConfig::default();
+    let out = run_scheme(Scheme::Ga, &hw, &topo, &wl, &cfg);
+    let alloc = out.alloc.clone();
+    let flags = out.flags;
+    let hw2 = hw.clone();
+    let topo2 = topo.clone();
+    let wl2 = wl.clone();
+    // The PJRT client is not Send: build the runtime inside the batcher
+    // thread via the factory.
+    let factory: mcmcomm::coordinator::server::RunnerFactory =
+        Box::new(move || {
+            let runtime = GemmRuntime::new(std::path::Path::new(&artifacts))
+                .expect("loading artifacts");
+            // Warm the compile cache so serving latencies are steady.
+            Executor::new(&hw2, &topo2, &wl2, &alloc, flags, &runtime)
+                .run(0, false)
+                .expect("warmup run");
+            Box::new(move |bsz| {
+                let exec = Executor::new(&hw2, &topo2, &wl2, &alloc, flags,
+                                         &runtime);
+                let _ = exec.run(bsz as u64, false);
+                let cost = evaluate(&hw2, &topo2, &wl2, &alloc, flags);
+                let batch_ns = cost.latency_ns * bsz as f64
+                    / mcmcomm::pipeline::pipeline_speedup(&cost, bsz.max(1));
+                (batch_ns, batch_ns / bsz as f64)
+            })
+        });
+    let server = mcmcomm::coordinator::Server::start_factory(
+        max_batch,
+        Duration::from_millis(2),
+        factory,
+    );
+    let client = server.client();
+    let t0 = std::time::Instant::now();
+    let waiters: Vec<_> = (0..n_req).map(|_| client.submit()).collect();
+    let mut per_sample = Vec::new();
+    for w in waiters {
+        let r = w.recv()?;
+        per_sample.push(r.modeled_per_sample_ns);
+    }
+    let wall = t0.elapsed();
+    drop(client);
+    let stats = server.shutdown();
+    println!(
+        "served {} requests in {} batches (max batch {}), host wall {:.2?}",
+        stats.served, stats.batches, stats.max_batch, wall
+    );
+    println!(
+        "modeled per-sample latency: mean {:.3} ms",
+        mcmcomm::util::math::mean(&per_sample) / 1e6
+    );
+    println!(
+        "host throughput: {:.1} req/s",
+        n_req as f64 / wall.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    let result = match sub.as_str() {
+        "figures" => cmd_figures(args),
+        "optimize" => cmd_optimize(args),
+        "netsim" => cmd_netsim(args),
+        "run-e2e" => cmd_run_e2e(args),
+        "serve" => cmd_serve(args),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

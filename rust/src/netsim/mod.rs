@@ -1,0 +1,283 @@
+//! Link-level network congestion simulator — the ASTRA-sim substitute
+//! behind the paper's Figure 3 motivation study (DESIGN.md
+//! §Substitutions).
+//!
+//! Model: fluid flows over the directed [`LinkGraph`]. At every event the
+//! simulator computes the **max-min fair** rate allocation (progressive
+//! filling: repeatedly freeze the most-contended link's flows at its fair
+//! share), advances time to the next flow completion, and repeats.
+//! Outputs per-link carried bytes (the Fig. 3(a–c) utilization heatmaps)
+//! and flow/total completion times (Fig. 3(d)).
+
+use crate::topology::links::{LinkGraph, LinkId, NodeId};
+
+/// One transfer: `bytes` from `src` to `dst` along the graph's
+/// deterministic route.
+#[derive(Debug, Clone)]
+pub struct Flow {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub bytes: f64,
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Completion time of each flow (ns), same order as the input.
+    pub flow_finish_ns: Vec<f64>,
+    /// Total bytes carried per link (heatmap source).
+    pub link_bytes: Vec<f64>,
+    /// Time the last flow finished.
+    pub makespan_ns: f64,
+}
+
+impl SimResult {
+    /// Peak link utilization: carried bytes / (capacity * makespan),
+    /// per link — 1.0 means a link was saturated for the whole run.
+    pub fn utilization(&self, graph: &LinkGraph) -> Vec<f64> {
+        self.link_bytes
+            .iter()
+            .zip(&graph.links)
+            .map(|(b, l)| {
+                if self.makespan_ns > 0.0 {
+                    b / (l.capacity * self.makespan_ns)
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+}
+
+/// Max-min fair rates for the active flows (progressive filling).
+/// `routes[i]` lists the links flow `i` traverses.
+fn maxmin_rates(
+    graph: &LinkGraph,
+    routes: &[Vec<LinkId>],
+    active: &[bool],
+) -> Vec<f64> {
+    let nf = routes.len();
+    let mut rate = vec![0.0f64; nf];
+    let mut frozen: Vec<bool> =
+        active.iter().map(|a| !a).collect();
+    let mut cap: Vec<f64> = graph.links.iter().map(|l| l.capacity).collect();
+
+    loop {
+        // Count unfrozen flows per link.
+        let mut nflows = vec![0usize; graph.links.len()];
+        for (i, r) in routes.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            for &l in r {
+                nflows[l] += 1;
+            }
+        }
+        // Bottleneck link: minimal fair share.
+        let mut best: Option<(f64, LinkId)> = None;
+        for (l, &n) in nflows.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let share = cap[l] / n as f64;
+            if best.is_none_or(|(s, _)| share < s) {
+                best = Some((share, l));
+            }
+        }
+        let Some((share, bott)) = best else { break };
+        // Freeze every unfrozen flow crossing the bottleneck.
+        for (i, r) in routes.iter().enumerate() {
+            if frozen[i] || !r.contains(&bott) {
+                continue;
+            }
+            rate[i] = share;
+            frozen[i] = true;
+            for &l in r {
+                cap[l] = (cap[l] - share).max(0.0);
+            }
+        }
+    }
+    rate
+}
+
+/// Run all flows to completion; returns per-flow finish times and
+/// per-link carried bytes.
+pub fn simulate(graph: &LinkGraph, flows: &[Flow]) -> SimResult {
+    let routes: Vec<Vec<LinkId>> =
+        flows.iter().map(|f| graph.route(f.src, f.dst)).collect();
+    let mut remaining: Vec<f64> = flows.iter().map(|f| f.bytes).collect();
+    let mut active: Vec<bool> = remaining.iter().map(|&b| b > 0.0).collect();
+    let mut finish = vec![0.0f64; flows.len()];
+    let mut link_bytes = vec![0.0f64; graph.links.len()];
+    let mut now = 0.0f64;
+
+    // Zero-byte or self-routed flows are done immediately.
+    for (i, r) in routes.iter().enumerate() {
+        if r.is_empty() {
+            active[i] = false;
+        }
+    }
+
+    while active.iter().any(|&a| a) {
+        let rate = maxmin_rates(graph, &routes, &active);
+        // Next completion.
+        let mut dt = f64::INFINITY;
+        for i in 0..flows.len() {
+            if active[i] && rate[i] > 0.0 {
+                dt = dt.min(remaining[i] / rate[i]);
+            }
+        }
+        assert!(
+            dt.is_finite(),
+            "deadlock: active flows with zero rate (disconnected route?)"
+        );
+        now += dt;
+        for i in 0..flows.len() {
+            if !active[i] || rate[i] <= 0.0 {
+                continue;
+            }
+            let moved = rate[i] * dt;
+            remaining[i] -= moved;
+            for &l in &routes[i] {
+                link_bytes[l] += moved;
+            }
+            if remaining[i] <= 1e-9 * flows[i].bytes.max(1.0) {
+                remaining[i] = 0.0;
+                active[i] = false;
+                finish[i] = now;
+            }
+        }
+    }
+    SimResult { flow_finish_ns: finish, link_bytes, makespan_ns: now }
+}
+
+/// The Figure 3 scenario: every chiplet of an `n x n` mesh pulls `bytes`
+/// from a memory node attached at `attach`; returns the graph and result.
+pub fn all_pull_from_memory(
+    n: usize,
+    bytes: f64,
+    bw_nop: f64,
+    bw_mem: f64,
+    attach: crate::topology::Pos,
+    diagonal: bool,
+) -> (LinkGraph, SimResult) {
+    let mut g = LinkGraph::mesh(n, n, diagonal, bw_nop);
+    let mem = g.attach_memory(attach, bw_mem);
+    let flows: Vec<Flow> = (0..n)
+        .flat_map(|r| (0..n).map(move |c| (r, c)))
+        .map(|(r, c)| Flow {
+            src: mem,
+            dst: g.chiplet_id(crate::topology::Pos::new(r, c)),
+            bytes,
+        })
+        .collect();
+    let res = simulate(&g, &flows);
+    (g, res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Pos;
+
+    #[test]
+    fn single_flow_full_bandwidth() {
+        let g = LinkGraph::mesh(2, 2, false, 60.0);
+        let f = [Flow { src: 0, dst: 1, bytes: 600.0 }];
+        let r = simulate(&g, &f);
+        assert!((r.makespan_ns - 10.0).abs() < 1e-6);
+        assert_eq!(r.flow_finish_ns[0], r.makespan_ns);
+    }
+
+    #[test]
+    fn two_flows_share_a_link_fairly() {
+        // Both flows cross link 0->1; each should get half.
+        let g = LinkGraph::mesh(1, 3, false, 60.0);
+        let f = [
+            Flow { src: 0, dst: 1, bytes: 600.0 },
+            Flow { src: 0, dst: 2, bytes: 600.0 },
+        ];
+        let r = simulate(&g, &f);
+        // Flow 0 shares 0->1 (30 each) until flow... both finish their
+        // 600 B: flow0 at t=20 (after sharing), flow1 continues at full
+        // rate on the second hop.
+        assert!(r.flow_finish_ns[0] <= r.flow_finish_ns[1] + 1e-9);
+        assert!((r.flow_finish_ns[0] - 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dram_bottleneck_flat_in_nop_bw() {
+        // Fig 3(d), DRAM: doubling NoP bandwidth yields no benefit.
+        let b = 1e6;
+        let (_, slow) =
+            all_pull_from_memory(4, b, 60.0, 60.0, Pos::new(0, 0), false);
+        let (_, fast) =
+            all_pull_from_memory(4, b, 120.0, 60.0, Pos::new(0, 0), false);
+        let ratio = slow.makespan_ns / fast.makespan_ns;
+        assert!((ratio - 1.0).abs() < 0.05, "ratio={ratio}");
+        // Memory link carries everything: 16 * b bytes.
+        let total: f64 = 16.0 * b;
+        assert!((slow.makespan_ns - total / 60.0).abs() / slow.makespan_ns < 0.05);
+    }
+
+    #[test]
+    fn hbm_scales_with_nop_bw() {
+        // Fig 3(d), HBM: performance scales ~linearly with NoP bandwidth.
+        let b = 1e6;
+        let (_, slow) =
+            all_pull_from_memory(4, b, 60.0, 1024.0, Pos::new(0, 0), false);
+        let (_, fast) =
+            all_pull_from_memory(4, b, 120.0, 1024.0, Pos::new(0, 0), false);
+        let ratio = slow.makespan_ns / fast.makespan_ns;
+        assert!(ratio > 1.7, "ratio={ratio}");
+    }
+
+    #[test]
+    fn central_hbm_beats_peripheral() {
+        // Fig 3(c)-(d): central placement mitigates NoP congestion
+        // (paper: 1.53x).
+        let b = 1e6;
+        let (_, peri) =
+            all_pull_from_memory(4, b, 60.0, 1024.0, Pos::new(0, 0), false);
+        let (_, cent) =
+            all_pull_from_memory(4, b, 60.0, 1024.0, Pos::new(1, 1), false);
+        let speedup = peri.makespan_ns / cent.makespan_ns;
+        assert!(speedup > 1.3 && speedup < 2.2, "speedup={speedup}");
+    }
+
+    #[test]
+    fn conservation_of_bytes() {
+        let b = 1e5;
+        let (g, r) =
+            all_pull_from_memory(3, b, 60.0, 200.0, Pos::new(0, 0), false);
+        // The memory attachment link must carry exactly 9 * b minus the
+        // attach chiplet's own flow (which crosses it too: src==mem).
+        let mem_out: f64 = g
+            .links
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.from == g.nodes.len() - 1)
+            .map(|(i, _)| r.link_bytes[i])
+            .sum();
+        assert!((mem_out - 9.0 * b).abs() < 1.0);
+    }
+
+    #[test]
+    fn utilization_bounded_by_one() {
+        let (g, r) =
+            all_pull_from_memory(4, 1e5, 60.0, 1024.0, Pos::new(0, 0), false);
+        for u in r.utilization(&g) {
+            assert!((0.0..=1.0 + 1e-9).contains(&u));
+        }
+    }
+
+    #[test]
+    fn diagonal_links_relieve_corner_congestion() {
+        let b = 1e6;
+        let (_, base) =
+            all_pull_from_memory(4, b, 60.0, 1024.0, Pos::new(0, 0), false);
+        let (_, diag) =
+            all_pull_from_memory(4, b, 60.0, 1024.0, Pos::new(0, 0), true);
+        assert!(diag.makespan_ns < base.makespan_ns);
+    }
+}

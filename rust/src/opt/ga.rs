@@ -1,0 +1,288 @@
+//! Genetic-algorithm scheduler (paper §6.2).
+//!
+//! Genome = a full [`Allocation`]: per-op partitions (Px, Py) plus the
+//! collection-chiplet columns used by on-package redistribution — the
+//! two gene sets the paper crosses over and mutates. Partition genes are
+//! constrained to the §6.2 trust region (uniform ± 2 systolic tiles,
+//! floored at one tile) and always sum to the exact workload dims.
+//! Fitness is the true analytical evaluator (eq. 6).
+
+use std::time::{Duration, Instant};
+
+use crate::config::HwConfig;
+use crate::cost::evaluator::{evaluate, Objective, OptFlags};
+use crate::partition::{
+    dim_bounds, project_to_sum, simba_allocation, uniform_allocation,
+    Allocation,
+};
+use crate::topology::Topology;
+use crate::util::rng::Pcg;
+use crate::workload::Workload;
+
+#[derive(Debug, Clone)]
+pub struct GaParams {
+    pub population: usize,
+    pub generations: usize,
+    pub elite: usize,
+    pub tournament: usize,
+    /// Per-op crossover probability.
+    pub p_cross: f64,
+    /// Per-genome mutation count (expected).
+    pub mutations: usize,
+    pub seed: u64,
+    /// Optional wall-clock budget (paper: GA ≈ 30 s).
+    pub budget: Option<Duration>,
+}
+
+impl Default for GaParams {
+    fn default() -> Self {
+        GaParams {
+            population: 48,
+            generations: 80,
+            elite: 2,
+            tournament: 3,
+            p_cross: 0.5,
+            mutations: 4,
+            seed: 0xc0ffee,
+            budget: None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GaResult {
+    pub alloc: Allocation,
+    pub objective_value: f64,
+    pub generations_run: usize,
+    /// Best objective per generation (convergence diagnostics).
+    pub history: Vec<f64>,
+}
+
+struct Ctx<'a> {
+    hw: &'a HwConfig,
+    topo: &'a Topology,
+    wl: &'a Workload,
+    flags: OptFlags,
+    obj: Objective,
+}
+
+impl Ctx<'_> {
+    fn fitness(&self, a: &Allocation) -> f64 {
+        evaluate(self.hw, self.topo, self.wl, a, self.flags).objective(self.obj)
+    }
+}
+
+fn mutate(ctx: &Ctx, rng: &mut Pcg, a: &mut Allocation, times: usize) {
+    for _ in 0..times {
+        let i = rng.range_usize(0, ctx.wl.ops.len() - 1);
+        let op = &ctx.wl.ops[i];
+        match rng.range_usize(0, 2) {
+            0 => {
+                // Move one tile of rows between two grid rows.
+                let b = dim_bounds(op.m, ctx.hw.xdim, ctx.hw.r);
+                let px = &mut a.parts[i].px;
+                let from = rng.range_usize(0, px.len() - 1);
+                let to = rng.range_usize(0, px.len() - 1);
+                let step = b.step.min(px[from]);
+                if from != to && px[from] - step >= b.lo && px[to] + step <= b.hi
+                {
+                    px[from] -= step;
+                    px[to] += step;
+                }
+            }
+            1 => {
+                let b = dim_bounds(op.n, ctx.hw.ydim, ctx.hw.c);
+                let py = &mut a.parts[i].py;
+                let from = rng.range_usize(0, py.len() - 1);
+                let to = rng.range_usize(0, py.len() - 1);
+                let step = b.step.min(py[from]);
+                if from != to && py[from] - step >= b.lo && py[to] + step <= b.hi
+                {
+                    py[from] -= step;
+                    py[to] += step;
+                }
+            }
+            _ => {
+                // Collection-chiplet gene.
+                a.collect_cols[i] = rng.range_usize(0, ctx.hw.ydim - 1);
+            }
+        }
+    }
+}
+
+fn crossover(ctx: &Ctx, rng: &mut Pcg, a: &Allocation, b: &Allocation,
+             p: f64) -> Allocation {
+    let mut child = a.clone();
+    for i in 0..ctx.wl.ops.len() {
+        if rng.chance(p) {
+            child.parts[i] = b.parts[i].clone();
+            child.collect_cols[i] = b.collect_cols[i];
+        }
+    }
+    child
+}
+
+fn random_individual(ctx: &Ctx, rng: &mut Pcg) -> Allocation {
+    let mut a = uniform_allocation(ctx.hw, ctx.wl);
+    for (i, op) in ctx.wl.ops.iter().enumerate() {
+        let bx = dim_bounds(op.m, ctx.hw.xdim, ctx.hw.r);
+        let by = dim_bounds(op.n, ctx.hw.ydim, ctx.hw.c);
+        for v in a.parts[i].px.iter_mut() {
+            let jitter = rng.range_i64(-2, 2) * bx.step as i64;
+            *v = (*v as i64 + jitter).max(0) as usize;
+        }
+        project_to_sum(&mut a.parts[i].px, op.m, bx);
+        for v in a.parts[i].py.iter_mut() {
+            let jitter = rng.range_i64(-2, 2) * by.step as i64;
+            *v = (*v as i64 + jitter).max(0) as usize;
+        }
+        project_to_sum(&mut a.parts[i].py, op.n, by);
+        a.collect_cols[i] = rng.range_usize(0, ctx.hw.ydim - 1);
+    }
+    a
+}
+
+/// Run the GA.
+pub fn optimize(
+    hw: &HwConfig,
+    topo: &Topology,
+    wl: &Workload,
+    flags: OptFlags,
+    obj: Objective,
+    params: &GaParams,
+) -> GaResult {
+    let ctx = Ctx { hw, topo, wl, flags, obj };
+    let mut rng = Pcg::seeded(params.seed);
+    let t0 = Instant::now();
+
+    // Seed the population with the two reference schemes + random jitter.
+    let mut pop: Vec<(Allocation, f64)> = Vec::with_capacity(params.population);
+    let uni = uniform_allocation(hw, wl);
+    let fit = ctx.fitness(&uni);
+    pop.push((uni, fit));
+    let simba = simba_allocation(hw, topo, wl);
+    let fit = ctx.fitness(&simba);
+    pop.push((simba, fit));
+    while pop.len() < params.population {
+        let ind = random_individual(&ctx, &mut rng);
+        let f = ctx.fitness(&ind);
+        pop.push((ind, f));
+    }
+
+    let mut history = Vec::with_capacity(params.generations);
+    let mut gens = 0;
+    for _gen in 0..params.generations {
+        if let Some(b) = params.budget {
+            if t0.elapsed() > b {
+                break;
+            }
+        }
+        gens += 1;
+        pop.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        history.push(pop[0].1);
+        let mut next: Vec<(Allocation, f64)> =
+            pop.iter().take(params.elite).cloned().collect();
+        while next.len() < params.population {
+            let pick = |rng: &mut Pcg| {
+                let mut best = rng.range_usize(0, pop.len() - 1);
+                for _ in 1..params.tournament {
+                    let c = rng.range_usize(0, pop.len() - 1);
+                    if pop[c].1 < pop[best].1 {
+                        best = c;
+                    }
+                }
+                best
+            };
+            let pa = pick(&mut rng);
+            let pb = pick(&mut rng);
+            let mut child =
+                crossover(&ctx, &mut rng, &pop[pa].0, &pop[pb].0, params.p_cross);
+            mutate(&ctx, &mut rng, &mut child, params.mutations);
+            let f = ctx.fitness(&child);
+            next.push((child, f));
+        }
+        pop = next;
+    }
+    pop.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let (best, best_f) = pop.swap_remove(0);
+    GaResult {
+        alloc: best,
+        objective_value: best_f,
+        generations_run: gens,
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MemKind, SystemType};
+    use crate::workload::models::alexnet;
+
+    fn setup() -> (HwConfig, Topology, Workload) {
+        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+        let topo = Topology::from_hw(&hw);
+        (hw, topo, alexnet(1))
+    }
+
+    fn small_params(seed: u64) -> GaParams {
+        GaParams {
+            population: 16,
+            generations: 12,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn ga_never_worse_than_uniform() {
+        let (hw, topo, wl) = setup();
+        let uni = uniform_allocation(&hw, &wl);
+        let base = evaluate(&hw, &topo, &wl, &uni, OptFlags::ALL)
+            .objective(Objective::Latency);
+        let r = optimize(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency,
+                         &small_params(1));
+        assert!(r.objective_value <= base * 1.0001);
+        assert!(r.alloc.validate(&wl, &hw).is_ok());
+    }
+
+    #[test]
+    fn ga_monotone_history() {
+        let (hw, topo, wl) = setup();
+        let r = optimize(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency,
+                         &small_params(2));
+        for w in r.history.windows(2) {
+            assert!(w[1] <= w[0] * 1.0001, "elitism must be monotone");
+        }
+    }
+
+    #[test]
+    fn ga_deterministic_per_seed() {
+        let (hw, topo, wl) = setup();
+        let a = optimize(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency,
+                         &small_params(7));
+        let b = optimize(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency,
+                         &small_params(7));
+        assert_eq!(a.objective_value, b.objective_value);
+        assert_eq!(a.alloc, b.alloc);
+    }
+
+    #[test]
+    fn budget_caps_generations() {
+        let (hw, topo, wl) = setup();
+        let r = optimize(
+            &hw,
+            &topo,
+            &wl,
+            OptFlags::ALL,
+            Objective::Latency,
+            &GaParams {
+                population: 16,
+                generations: 10_000,
+                budget: Some(Duration::from_millis(200)),
+                ..Default::default()
+            },
+        );
+        assert!(r.generations_run < 10_000);
+    }
+}

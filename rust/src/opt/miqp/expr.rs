@@ -1,0 +1,264 @@
+//! Quadratic expression algebra for the MIQP formulation (paper §6.3).
+//!
+//! Expressions are sparse quadratic forms `c + Σ aᵢ vᵢ + Σ bᵢⱼ vᵢ vⱼ`
+//! over integer decision variables (tile counts). Products beyond degree
+//! 2 panic — the formulation must stay quadratic, exactly the constraint
+//! the paper's §6.3.1 transforms exist to preserve.
+
+use std::collections::BTreeMap;
+
+pub type VarId = usize;
+
+/// Sparse quadratic expression.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QuadExpr {
+    pub constant: f64,
+    /// Linear coefficients.
+    pub lin: BTreeMap<VarId, f64>,
+    /// Quadratic coefficients, keyed with i <= j.
+    pub quad: BTreeMap<(VarId, VarId), f64>,
+}
+
+impl QuadExpr {
+    pub fn zero() -> Self {
+        Self::default()
+    }
+
+    pub fn constant(c: f64) -> Self {
+        QuadExpr { constant: c, ..Default::default() }
+    }
+
+    pub fn var(v: VarId) -> Self {
+        let mut lin = BTreeMap::new();
+        lin.insert(v, 1.0);
+        QuadExpr { constant: 0.0, lin, quad: BTreeMap::new() }
+    }
+
+    pub fn is_linear(&self) -> bool {
+        self.quad.is_empty()
+    }
+
+    pub fn scale(mut self, s: f64) -> Self {
+        self.constant *= s;
+        for v in self.lin.values_mut() {
+            *v *= s;
+        }
+        for v in self.quad.values_mut() {
+            *v *= s;
+        }
+        self
+    }
+
+    pub fn add(mut self, other: &QuadExpr) -> Self {
+        self.constant += other.constant;
+        for (&k, &c) in &other.lin {
+            *self.lin.entry(k).or_insert(0.0) += c;
+        }
+        for (&k, &c) in &other.quad {
+            *self.quad.entry(k).or_insert(0.0) += c;
+        }
+        self
+    }
+
+    pub fn sub(self, other: &QuadExpr) -> Self {
+        self.add(&other.clone().scale(-1.0))
+    }
+
+    /// Multiply two expressions; panics if the product exceeds degree 2.
+    pub fn mul(&self, other: &QuadExpr) -> Self {
+        assert!(
+            self.is_linear() && other.is_linear()
+                || self.quad.is_empty() && other.lin.is_empty()
+                    && other.quad.is_empty()
+                || other.quad.is_empty() && self.lin.is_empty()
+                    && self.quad.is_empty(),
+            "product would exceed degree 2 (MIQP requires quadratic forms; \
+             apply the §6.3.1 division/approximation transforms first)"
+        );
+        let mut out = QuadExpr::constant(self.constant * other.constant);
+        for (&i, &a) in &self.lin {
+            *out.lin.entry(i).or_insert(0.0) += a * other.constant;
+        }
+        for (&j, &b) in &other.lin {
+            *out.lin.entry(j).or_insert(0.0) += b * self.constant;
+        }
+        for (&i, &a) in &self.lin {
+            for (&j, &b) in &other.lin {
+                let key = if i <= j { (i, j) } else { (j, i) };
+                *out.quad.entry(key).or_insert(0.0) += a * b;
+            }
+        }
+        // constant * existing quad terms
+        for (&k, &q) in &self.quad {
+            *out.quad.entry(k).or_insert(0.0) += q * other.constant;
+        }
+        for (&k, &q) in &other.quad {
+            *out.quad.entry(k).or_insert(0.0) += q * self.constant;
+        }
+        out
+    }
+
+    /// Evaluate at a point.
+    pub fn eval(&self, v: &[f64]) -> f64 {
+        let mut s = self.constant;
+        for (&i, &a) in &self.lin {
+            s += a * v[i];
+        }
+        for (&(i, j), &b) in &self.quad {
+            s += b * v[i] * v[j];
+        }
+        s
+    }
+
+    /// Accumulate the gradient at `v` into `grad`.
+    pub fn add_grad(&self, v: &[f64], scale: f64, grad: &mut [f64]) {
+        for (&i, &a) in &self.lin {
+            grad[i] += scale * a;
+        }
+        for (&(i, j), &b) in &self.quad {
+            if i == j {
+                grad[i] += scale * 2.0 * b * v[i];
+            } else {
+                grad[i] += scale * b * v[j];
+                grad[j] += scale * b * v[i];
+            }
+        }
+    }
+
+    // ---- §6.3.1 transforms ---------------------------------------------
+
+    /// Division by a *constant*: the paper multiplies all equations by the
+    /// product of constant denominators, then rescales by a global factor
+    /// to keep magnitudes inside integer range. Here: exact scale by
+    /// `1/c` (we keep f64 coefficients, so the rescale is a no-op
+    /// numerically; the transform is retained for fidelity + the scaling
+    /// guard below).
+    pub fn div_const(self, c: f64) -> Self {
+        assert!(c != 0.0, "division by zero constant");
+        self.scale(1.0 / c)
+    }
+
+    /// Division by a *variable expression* `c + x` (paper §6.3.1):
+    ///   e / (c + x)  ≈  e * (c - x) / c²
+    /// valid when `x` stays small relative to `c` ("hardware irregularity
+    /// can only happen to a small degree").
+    pub fn div_approx(&self, c: f64, x: &QuadExpr) -> Self {
+        assert!(c != 0.0);
+        let corr = QuadExpr::constant(c).sub(x);
+        self.mul(&corr).scale(1.0 / (c * c))
+    }
+}
+
+/// One additive objective term: the max over a set of quadratic
+/// expressions (the paper's synchronization `max` operators between
+/// computation and its input communication, §6.3.2). A single-element
+/// max is a plain quadratic term.
+#[derive(Debug, Clone)]
+pub struct MaxTerm {
+    pub label: String,
+    pub cases: Vec<QuadExpr>,
+}
+
+impl MaxTerm {
+    pub fn single(label: &str, e: QuadExpr) -> Self {
+        MaxTerm { label: label.to_string(), cases: vec![e] }
+    }
+
+    pub fn of(label: &str, cases: Vec<QuadExpr>) -> Self {
+        assert!(!cases.is_empty());
+        MaxTerm { label: label.to_string(), cases }
+    }
+
+    pub fn eval(&self, v: &[f64]) -> f64 {
+        self.cases
+            .iter()
+            .map(|e| e.eval(v))
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Index of the active (max-achieving) case.
+    pub fn argmax(&self, v: &[f64]) -> usize {
+        let mut best = 0;
+        let mut bv = f64::NEG_INFINITY;
+        for (i, e) in self.cases.iter().enumerate() {
+            let x = e.eval(v);
+            if x > bv {
+                bv = x;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn x() -> QuadExpr {
+        QuadExpr::var(0)
+    }
+
+    fn y() -> QuadExpr {
+        QuadExpr::var(1)
+    }
+
+    #[test]
+    fn arithmetic_and_eval() {
+        // (2x + 3)(y) + 1 = 2xy + 3y + 1
+        let e = x().scale(2.0).add(&QuadExpr::constant(3.0)).mul(&y())
+            .add(&QuadExpr::constant(1.0));
+        let v = [2.0, 5.0];
+        assert_eq!(e.eval(&v), 2.0 * 2.0 * 5.0 + 3.0 * 5.0 + 1.0);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let e = x().mul(&y()).add(&x().scale(3.0)).add(&x().mul(&x()));
+        let v = [1.5, -2.0];
+        let mut g = vec![0.0; 2];
+        e.add_grad(&v, 1.0, &mut g);
+        let h = 1e-6;
+        for i in 0..2 {
+            let mut vp = v;
+            vp[i] += h;
+            let fd = (e.eval(&vp) - e.eval(&v)) / h;
+            assert!((g[i] - fd).abs() < 1e-4, "g[{i}]={} fd={fd}", g[i]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "degree 2")]
+    fn cubic_products_rejected() {
+        let q = x().mul(&y()); // degree 2
+        let _ = q.mul(&x()); // degree 3 -> panic
+    }
+
+    #[test]
+    fn div_approx_accuracy_near_center() {
+        // e / (c + x) with e = 10, c = 8: at x=1, exact 10/9 = 1.111,
+        // approx 10*(8-1)/64 = 1.094 — within a few percent.
+        let e = QuadExpr::constant(10.0);
+        let approx = e.div_approx(8.0, &x());
+        let v = [1.0];
+        let exact = 10.0 / 9.0;
+        assert!((approx.eval(&v) - exact).abs() / exact < 0.05);
+        // And at x = 0 it is exact.
+        assert!((approx.eval(&[0.0]) - 10.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_term_eval_and_argmax() {
+        let m = MaxTerm::of("t", vec![x(), y().scale(2.0)]);
+        assert_eq!(m.eval(&[5.0, 1.0]), 5.0);
+        assert_eq!(m.argmax(&[5.0, 1.0]), 0);
+        assert_eq!(m.eval(&[1.0, 3.0]), 6.0);
+        assert_eq!(m.argmax(&[1.0, 3.0]), 1);
+    }
+
+    #[test]
+    fn div_const_scales() {
+        let e = x().scale(6.0).div_const(3.0);
+        assert_eq!(e.eval(&[2.0]), 4.0);
+    }
+}

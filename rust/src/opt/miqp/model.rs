@@ -1,0 +1,131 @@
+//! MIQP model container: integer variables with box bounds, sum-equality
+//! groups (workload-partition constraints `Σ Px = M`, `Σ Py = N` of
+//! Algorithm 1), and an objective that is a sum of max-of-quadratic
+//! terms (the §6.3.2 synchronization operators).
+
+use super::expr::{MaxTerm, QuadExpr, VarId};
+
+#[derive(Debug, Clone)]
+pub struct VarDef {
+    pub name: String,
+    pub lo: f64,
+    pub hi: f64,
+    /// Integer lattice step (tile size: R for row vars, C for columns).
+    pub step: f64,
+}
+
+/// `Σ vars = total` (exact workload coverage).
+#[derive(Debug, Clone)]
+pub struct SumGroup {
+    pub vars: Vec<VarId>,
+    pub total: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Model {
+    pub vars: Vec<VarDef>,
+    pub groups: Vec<SumGroup>,
+    pub terms: Vec<MaxTerm>,
+}
+
+impl Model {
+    pub fn add_var(&mut self, name: String, lo: f64, hi: f64, step: f64) -> VarId {
+        assert!(lo <= hi && step > 0.0, "bad bounds for {name}");
+        self.vars.push(VarDef { name, lo, hi, step });
+        self.vars.len() - 1
+    }
+
+    pub fn add_group(&mut self, vars: Vec<VarId>, total: f64) {
+        let lo: f64 = vars.iter().map(|&v| self.vars[v].lo).sum();
+        debug_assert!(
+            lo <= total + 1e-9,
+            "group infeasible: sum(lo) {lo} > total {total}"
+        );
+        self.groups.push(SumGroup { vars, total });
+    }
+
+    pub fn add_term(&mut self, t: MaxTerm) {
+        self.terms.push(t);
+    }
+
+    pub fn add_quad(&mut self, label: &str, e: QuadExpr) {
+        self.terms.push(MaxTerm::single(label, e));
+    }
+
+    pub fn dim(&self) -> usize {
+        self.vars.len()
+    }
+
+    /// Objective value at a point.
+    pub fn eval(&self, v: &[f64]) -> f64 {
+        self.terms.iter().map(|t| t.eval(v)).sum()
+    }
+
+    /// Subgradient at `v` (gradient of each term's active case).
+    pub fn subgrad(&self, v: &[f64]) -> Vec<f64> {
+        let mut g = vec![0.0; self.dim()];
+        for t in &self.terms {
+            let k = t.argmax(v);
+            t.cases[k].add_grad(v, 1.0, &mut g);
+        }
+        g
+    }
+
+    /// Max constraint violation of a point (box + group equalities).
+    pub fn infeasibility(&self, v: &[f64]) -> f64 {
+        let mut worst = 0.0f64;
+        for (i, d) in self.vars.iter().enumerate() {
+            worst = worst.max(d.lo - v[i]).max(v[i] - d.hi);
+        }
+        for gp in &self.groups {
+            let s: f64 = gp.vars.iter().map(|&i| v[i]).sum();
+            worst = worst.max((s - gp.total).abs());
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_sums_terms() {
+        let mut m = Model::default();
+        let a = m.add_var("a".into(), 0.0, 10.0, 1.0);
+        let b = m.add_var("b".into(), 0.0, 10.0, 1.0);
+        m.add_quad("lin", QuadExpr::var(a).scale(2.0));
+        m.add_term(MaxTerm::of(
+            "mx",
+            vec![QuadExpr::var(b), QuadExpr::constant(4.0)],
+        ));
+        assert_eq!(m.eval(&[3.0, 1.0]), 6.0 + 4.0);
+        assert_eq!(m.eval(&[3.0, 9.0]), 6.0 + 9.0);
+    }
+
+    #[test]
+    fn subgrad_uses_active_case() {
+        let mut m = Model::default();
+        let a = m.add_var("a".into(), 0.0, 10.0, 1.0);
+        let b = m.add_var("b".into(), 0.0, 10.0, 1.0);
+        m.add_term(MaxTerm::of(
+            "mx",
+            vec![QuadExpr::var(a).scale(3.0), QuadExpr::var(b).scale(5.0)],
+        ));
+        let g = m.subgrad(&[10.0, 0.1]); // a-case active
+        assert_eq!(g, vec![3.0, 0.0]);
+        let g = m.subgrad(&[0.1, 10.0]); // b-case active
+        assert_eq!(g, vec![0.0, 5.0]);
+    }
+
+    #[test]
+    fn infeasibility_measures_worst() {
+        let mut m = Model::default();
+        let a = m.add_var("a".into(), 0.0, 5.0, 1.0);
+        let b = m.add_var("b".into(), 0.0, 5.0, 1.0);
+        m.add_group(vec![a, b], 6.0);
+        assert_eq!(m.infeasibility(&[3.0, 3.0]), 0.0);
+        assert_eq!(m.infeasibility(&[7.0, 3.0]), 4.0); // box + group
+        assert_eq!(m.infeasibility(&[2.0, 2.0]), 2.0); // group deficit
+    }
+}

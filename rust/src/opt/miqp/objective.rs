@@ -1,0 +1,433 @@
+//! MIQP formulation of the MCMComm scheduling problem (Algorithm 1):
+//! build a [`Model`] whose variables are the per-op workload partitions
+//! and whose objective mirrors the analytical evaluator as a sum of
+//! max-of-quadratic terms, then decode a solver point back into an
+//! [`Allocation`].
+//!
+//! Faithfulness notes:
+//! * compute `ceil(Px/R)·ceil(Py/C)` relaxes to the bilinear
+//!   `Px·Py/(R·C)` (the §6.3.1 constant-division transform);
+//! * per-op sync `max(comm, comp)` terms are the paper's §6.3.2
+//!   synchronization operators;
+//! * the EDP objective (latency × energy, degree 4) is linearized around
+//!   the uniform point: `EDP ≈ E₀·L + L₀·E` — this is why the paper
+//!   observes MIQP-EDP solutions are "not fully optimized" (§7.2); the
+//!   final allocation is always re-scored on the true evaluator;
+//! * redistribution edges are fixed up front from the uniform allocation
+//!   (the paper's "fixed communication strategy", §6.1), with the
+//!   collection column at its §5.2 balanced optimum.
+
+use crate::config::HwConfig;
+use crate::cost::evaluator::{evaluate, Objective, OptFlags};
+use crate::partition::{dim_bounds, uniform_allocation, Allocation, Partition};
+use crate::topology::{Pos, Topology};
+use crate::workload::Workload;
+
+use super::expr::{MaxTerm, QuadExpr};
+use super::model::Model;
+
+/// Mapping between model variables and (op, dim, index).
+pub struct VarLayout {
+    /// var id of px[i][x] = base_px[i] + x
+    base_px: Vec<usize>,
+    /// var id of py[i][y] = base_py[i] + y
+    base_py: Vec<usize>,
+    xdim: usize,
+    ydim: usize,
+}
+
+impl VarLayout {
+    pub fn px(&self, op: usize, x: usize) -> usize {
+        debug_assert!(x < self.xdim);
+        self.base_px[op] + x
+    }
+
+    pub fn py(&self, op: usize, y: usize) -> usize {
+        debug_assert!(y < self.ydim);
+        self.base_py[op] + y
+    }
+}
+
+/// The assembled formulation.
+pub struct Formulation {
+    pub model: Model,
+    pub layout: VarLayout,
+    /// Redistribution decided per edge i -> i+1 (fixed strategy).
+    pub redist_edge: Vec<bool>,
+    pub collect_cols: Vec<usize>,
+}
+
+/// Build the MIQP model for `wl` on `hw` with the §5 optimizations in
+/// `flags`, optimizing `obj`.
+pub fn build(
+    hw: &HwConfig,
+    topo: &Topology,
+    wl: &Workload,
+    flags: OptFlags,
+    obj: Objective,
+) -> Formulation {
+    let n = wl.ops.len();
+    let (xd, yd) = (hw.xdim, hw.ydim);
+    let mut model = Model::default();
+    let mut base_px = Vec::with_capacity(n);
+    let mut base_py = Vec::with_capacity(n);
+
+    // ---- variables + partition constraints (§4.2.3, Algorithm 1).
+    for op in &wl.ops {
+        let bx = dim_bounds(op.m, xd, hw.r);
+        let by = dim_bounds(op.n, yd, hw.c);
+        let b0 = model.dim();
+        for x in 0..xd {
+            model.add_var(
+                format!("{}::px[{x}]", op.name),
+                bx.lo.min(op.m) as f64,
+                bx.hi as f64,
+                bx.step as f64,
+            );
+        }
+        base_px.push(b0);
+        model.add_group((b0..b0 + xd).collect(), op.m as f64);
+        let b1 = model.dim();
+        for y in 0..yd {
+            model.add_var(
+                format!("{}::py[{y}]", op.name),
+                by.lo.min(op.n) as f64,
+                by.hi as f64,
+                by.step as f64,
+            );
+        }
+        base_py.push(b1);
+        model.add_group((b1..b1 + yd).collect(), op.n as f64);
+    }
+    let layout = VarLayout { base_px, base_py, xdim: xd, ydim: yd };
+
+    // ---- fixed communication strategy: decide redistribution edges and
+    // collection columns from the uniform allocation (§6.1).
+    let uni = uniform_allocation(hw, wl);
+    let uni_cost = evaluate(hw, topo, wl, &uni, flags);
+    let mut redist_edge = vec![false; n];
+    for i in 1..n {
+        redist_edge[i - 1] = uni_cost.per_op[i].redistributed_in;
+    }
+    let mut collect_cols = vec![yd / 2; n];
+    for i in 0..n.saturating_sub(1) {
+        if redist_edge[i] {
+            collect_cols[i] = crate::redistribution::best_collect_col(
+                hw,
+                &wl.ops[i],
+                &uni.parts[i],
+                &uni.parts[i + 1],
+            );
+        }
+    }
+
+    // EDP linearization anchors.
+    let (e0, l0) = (uni_cost.energy_pj, uni_cost.latency_ns);
+    // Weight of one latency-ns (resp. energy-pJ) unit in the objective.
+    let (w_lat, w_en) = match obj {
+        Objective::Latency => (1.0, 0.0),
+        // d(EDP) = E0 * dL + L0 * dE; normalize by E0*L0 so the scale
+        // stays comparable to the latency objective.
+        Objective::Edp => (1.0, l0 / e0),
+    };
+
+    let bw = hw.bw_nop;
+    let bpe = hw.bytes_per_elem;
+
+    for (i, op) in wl.ops.iter().enumerate() {
+        let acts_from_redist = i > 0 && redist_edge[i - 1];
+        let hi_bw = crate::cost::latency::high_bw(hw);
+        let tile_cycles =
+            (2 * hw.r + hw.c + crate::util::math::ceil_div(op.k, op.groups))
+                .saturating_sub(2) as f64
+                * op.groups as f64;
+        let comp_coeff =
+            hw.cycles_to_ns(tile_cycles) / (hw.r as f64 * hw.c as f64);
+
+        // ---- in + comp stage: max over chiplets of (in(x,y) + comp(x,y)).
+        let mut off_bytes = op.k as f64 * op.n as f64 * bpe;
+        if !acts_from_redist {
+            off_bytes += op.m as f64 * op.k as f64 * bpe;
+        }
+        let offchip_ns = off_bytes / hw.bw_mem;
+        let mut cases = Vec::with_capacity(xd * yd);
+        for p in topo.positions() {
+            let Pos { row: x, col: y } = p;
+            let (act_hops, w_hops) = if hi_bw {
+                (
+                    topo.hops_row_shared(p, flags.diagonal) as f64,
+                    topo.hops_col_shared(p, flags.diagonal) as f64,
+                )
+            } else {
+                let h = topo.hops_low_bw(p, flags.diagonal) as f64;
+                (h, h)
+            };
+            let vpx = QuadExpr::var(layout.px(i, x));
+            let vpy = QuadExpr::var(layout.py(i, y));
+            // on-chip in-time: linear.
+            let mut in_e = QuadExpr::constant(offchip_ns);
+            if !acts_from_redist {
+                in_e = in_e.add(
+                    &vpx.clone().scale(op.k as f64 * bpe * act_hops / bw),
+                );
+            }
+            in_e = in_e
+                .add(&vpy.clone().scale(op.k as f64 * bpe * w_hops / bw));
+            // comp: bilinear.
+            let comp_e = vpx.mul(&vpy).scale(comp_coeff);
+            let total = if flags.async_fusion {
+                in_e.add(&comp_e)
+            } else {
+                // Conservative surrogate of max(in)+max(comp): the same
+                // per-chiplet sum upper-bounds each term; keep the sum
+                // (the solver re-scores on the true evaluator anyway).
+                in_e.add(&comp_e)
+            };
+            cases.push(total.scale(w_lat));
+        }
+        model.add_term(MaxTerm::of(&format!("{}::in+comp", op.name), cases));
+
+        // ---- redistribution stage for the incoming edge.
+        if acts_from_redist {
+            let prev = i - 1;
+            let c_star = collect_cols[prev];
+            let prev_n = wl.ops[prev].n as f64;
+            // Step 1: max over rows x of max(left, right) bytes / bw.
+            let mut s1 = Vec::new();
+            for x in 0..xd {
+                let vpx = QuadExpr::var(layout.px(prev, x));
+                let mut left = QuadExpr::zero();
+                let mut right = QuadExpr::zero();
+                for y in 0..yd {
+                    let vpy = QuadExpr::var(layout.py(prev, y));
+                    let chunk = vpx.mul(&vpy).scale(bpe / bw);
+                    if y < c_star {
+                        left = left.add(&chunk);
+                    } else if y > c_star {
+                        right = right.add(&chunk);
+                    }
+                }
+                s1.push(left.scale(w_lat));
+                s1.push(right.scale(w_lat));
+            }
+            model.add_term(MaxTerm::of(
+                &format!("{}::redist.s1", op.name),
+                s1,
+            ));
+            // Step 2: max over rows of px * N_prev / bw.
+            let s2 = (0..xd)
+                .map(|x| {
+                    QuadExpr::var(layout.px(prev, x))
+                        .scale(prev_n * bpe / bw)
+                        .scale(w_lat)
+                })
+                .collect();
+            model
+                .add_term(MaxTerm::of(&format!("{}::redist.s2", op.name), s2));
+            // Step 3: max over boundaries of |cum(px_prev) - scale *
+            // cum(px_i)| * N_prev bytes / bw; abs via a two-case max.
+            let scale =
+                wl.ops[prev].m as f64 / wl.ops[i].m.max(1) as f64;
+            let mut s3 = vec![QuadExpr::zero()];
+            let mut cum = QuadExpr::zero();
+            for b in 0..xd.saturating_sub(1) {
+                cum = cum
+                    .add(&QuadExpr::var(layout.px(prev, b)))
+                    .sub(&QuadExpr::var(layout.px(i, b)).scale(scale));
+                let e = cum.clone().scale(prev_n * bpe / bw);
+                s3.push(e.clone().scale(w_lat));
+                s3.push(e.scale(-w_lat));
+            }
+            model
+                .add_term(MaxTerm::of(&format!("{}::redist.s3", op.name), s3));
+        }
+
+        // ---- output stage (constant in the partition).
+        let skip_store = i + 1 < n && redist_edge[i];
+        if !skip_store {
+            let store =
+                crate::cost::latency::offload(hw, topo, op, flags.diagonal)
+                    .wall_ns();
+            model.add_quad(
+                &format!("{}::store", op.name),
+                QuadExpr::constant(store).scale(w_lat),
+            );
+        }
+
+        // ---- energy (only weighted in for EDP).
+        if w_en > 0.0 {
+            let mut en = QuadExpr::zero();
+            for p in topo.positions() {
+                let Pos { row: x, col: y } = p;
+                let vpx = QuadExpr::var(layout.px(i, x));
+                let vpy = QuadExpr::var(layout.py(i, y));
+                // SRAM: (px*K + K*py + px*py) bytes * 8 * c_sram.
+                let sram = hw.energy.sram_pj_bit * 8.0 * bpe;
+                en = en
+                    .add(&vpx.clone().scale(op.k as f64 * sram))
+                    .add(&vpy.clone().scale(op.k as f64 * sram))
+                    .add(&vpx.mul(&vpy).scale(sram));
+                // MAC: c_mac * cycles * R * C = c_mac * tile_cycles *
+                // px*py/(R*C) * R*C.
+                en = en.add(
+                    &vpx.mul(&vpy).scale(
+                        hw.energy.mac_pj_cycle * tile_cycles
+                            / (hw.r as f64 * hw.c as f64),
+                    ),
+                );
+                // NoP distribution energy (linear).
+                let hops = topo.hops_energy(p, flags.diagonal) as f64;
+                let e_hop = hw.energy.nop_pj_bit_hop * 8.0 * bpe * hops;
+                if !acts_from_redist {
+                    en = en.add(&vpx.clone().scale(op.k as f64 * e_hop));
+                }
+                en = en.add(&vpy.clone().scale(op.k as f64 * e_hop));
+                // Collection energy for the store.
+                if !skip_store {
+                    en = en.add(&vpx.mul(&vpy).scale(e_hop));
+                }
+            }
+            // Off-chip energy (constant given the fixed strategy).
+            let mut off_b = op.k as f64 * op.n as f64 * bpe;
+            if !acts_from_redist {
+                off_b += op.m as f64 * op.k as f64 * bpe;
+            }
+            if !skip_store {
+                off_b += op.m as f64 * op.n as f64 * bpe;
+            }
+            en = en.add(&QuadExpr::constant(
+                hw.mem.energy_pj_per_bit() * off_b * 8.0,
+            ));
+            model.add_quad(
+                &format!("{}::energy", op.name),
+                en.scale(w_en),
+            );
+        }
+    }
+
+    Formulation { model, layout, redist_edge, collect_cols }
+}
+
+/// Decode a solver point into an [`Allocation`] (rounding to integers
+/// and restoring exact sums).
+pub fn decode(
+    f: &Formulation,
+    hw: &HwConfig,
+    wl: &Workload,
+    point: &[f64],
+) -> Allocation {
+    let mut parts = Vec::with_capacity(wl.ops.len());
+    for (i, op) in wl.ops.iter().enumerate() {
+        let mut px: Vec<usize> = (0..hw.xdim)
+            .map(|x| point[f.layout.px(i, x)].round().max(0.0) as usize)
+            .collect();
+        let mut py: Vec<usize> = (0..hw.ydim)
+            .map(|y| point[f.layout.py(i, y)].round().max(0.0) as usize)
+            .collect();
+        fix_sum(&mut px, op.m);
+        fix_sum(&mut py, op.n);
+        parts.push(Partition { px, py });
+    }
+    Allocation { parts, collect_cols: f.collect_cols.clone() }
+}
+
+/// Adjust `vals` minimally so they sum to `total`.
+fn fix_sum(vals: &mut [usize], total: usize) {
+    loop {
+        let s: usize = vals.iter().sum();
+        match s.cmp(&total) {
+            std::cmp::Ordering::Equal => return,
+            std::cmp::Ordering::Less => {
+                let i = (0..vals.len()).min_by_key(|&i| vals[i]).unwrap();
+                vals[i] += total - s;
+            }
+            std::cmp::Ordering::Greater => {
+                let i = (0..vals.len()).max_by_key(|&i| vals[i]).unwrap();
+                let cut = (s - total).min(vals[i]);
+                vals[i] -= cut;
+                if cut == 0 {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MemKind, SystemType};
+    use crate::workload::models::alexnet;
+
+    fn setup() -> (HwConfig, Topology, Workload) {
+        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+        let topo = Topology::from_hw(&hw);
+        (hw, topo, alexnet(1))
+    }
+
+    #[test]
+    fn model_dimensions() {
+        let (hw, topo, wl) = setup();
+        let f = build(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency);
+        assert_eq!(f.model.dim(), wl.ops.len() * (hw.xdim + hw.ydim));
+        assert_eq!(f.model.groups.len(), wl.ops.len() * 2);
+        assert!(!f.model.terms.is_empty());
+    }
+
+    #[test]
+    fn surrogate_tracks_evaluator_on_uniform_point() {
+        // The surrogate at the uniform point should be within ~2x of the
+        // true latency (it is a structured approximation, not exact).
+        let (hw, topo, wl) = setup();
+        let f = build(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency);
+        let uni = uniform_allocation(&hw, &wl);
+        let mut point = vec![0.0; f.model.dim()];
+        for (i, p) in uni.parts.iter().enumerate() {
+            for (x, &v) in p.px.iter().enumerate() {
+                point[f.layout.px(i, x)] = v as f64;
+            }
+            for (y, &v) in p.py.iter().enumerate() {
+                point[f.layout.py(i, y)] = v as f64;
+            }
+        }
+        let surrogate = f.model.eval(&point);
+        let truth = evaluate(&hw, &topo, &wl, &uni, OptFlags::ALL).latency_ns;
+        let ratio = surrogate / truth;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "surrogate {surrogate} vs truth {truth} (ratio {ratio})"
+        );
+    }
+
+    #[test]
+    fn decode_produces_valid_allocation() {
+        let (hw, topo, wl) = setup();
+        let f = build(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency);
+        // A garbage point still decodes to a valid allocation.
+        let point: Vec<f64> =
+            (0..f.model.dim()).map(|i| (i % 7) as f64 * 50.0).collect();
+        let alloc = decode(&f, &hw, &wl, &point);
+        assert!(alloc.validate(&wl, &hw).is_ok());
+    }
+
+    #[test]
+    fn fix_sum_cases() {
+        let mut v = vec![5, 5, 5];
+        fix_sum(&mut v, 12);
+        assert_eq!(v.iter().sum::<usize>(), 12);
+        let mut v = vec![1, 1];
+        fix_sum(&mut v, 10);
+        assert_eq!(v.iter().sum::<usize>(), 10);
+        let mut v = vec![0, 0];
+        fix_sum(&mut v, 0);
+        assert_eq!(v, vec![0, 0]);
+    }
+
+    #[test]
+    fn edp_objective_adds_energy_terms() {
+        let (hw, topo, wl) = setup();
+        let lat = build(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency);
+        let edp = build(&hw, &topo, &wl, OptFlags::ALL, Objective::Edp);
+        assert!(edp.model.terms.len() > lat.model.terms.len());
+    }
+}

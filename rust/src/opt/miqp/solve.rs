@@ -1,0 +1,455 @@
+//! MIQP solver: multi-start projected subgradient relaxation + lattice
+//! branch & bound with pairwise-exchange polish.
+//!
+//! No commercial solver exists offline, so this is a from-scratch solver
+//! tailored to the structure of the MCMComm formulation (DESIGN.md
+//! §Substitutions):
+//!
+//! 1. **Relaxation** — the continuous problem over the box ∩ simplex
+//!    feasible set, solved by projected subgradient descent (the
+//!    objective is a sum of maxes of bilinear quadratics: non-convex, so
+//!    we multi-start from perturbed uniform points).
+//! 2. **Integerization** — snap to the tile lattice per sum-group,
+//!    preserving the exact group totals.
+//! 3. **Branch & bound** — best-first search over per-variable lattice
+//!    deviations around the relaxed optimum (the §6.2 ±2-tile trust
+//!    region keeps this space small), pruned against the incumbent.
+//! 4. **Polish** — pairwise tile exchanges inside each group to a local
+//!    minimum.
+//!
+//! Anytime semantics, like the paper's 10-minute Gurobi limit: `budget`
+//! caps wall time and the best incumbent so far is returned.
+
+use std::collections::BinaryHeap;
+use std::time::{Duration, Instant};
+
+use crate::util::rng::Pcg;
+
+use super::model::Model;
+
+/// Solver output: the integer point and its surrogate objective value.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub point: Vec<f64>,
+    pub objective: f64,
+    pub relaxation_objective: f64,
+    pub nodes_explored: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct SolveParams {
+    pub budget: Duration,
+    pub starts: usize,
+    pub pgd_iters: usize,
+    pub seed: u64,
+    /// Max branch-and-bound nodes (safety valve).
+    pub max_nodes: usize,
+}
+
+impl Default for SolveParams {
+    fn default() -> Self {
+        SolveParams {
+            budget: Duration::from_secs(30),
+            starts: 6,
+            pgd_iters: 300,
+            seed: 0x5eed,
+            max_nodes: 20_000,
+        }
+    }
+}
+
+/// Project `v` in place onto box ∩ {Σ group = total} per group
+/// (clip-and-shift bisection on the dual variable λ).
+pub fn project(model: &Model, v: &mut [f64]) {
+    // Ungrouped vars: plain clamp.
+    let mut in_group = vec![false; model.dim()];
+    for g in &model.groups {
+        for &i in &g.vars {
+            in_group[i] = true;
+        }
+    }
+    for (i, d) in model.vars.iter().enumerate() {
+        if !in_group[i] {
+            v[i] = v[i].clamp(d.lo, d.hi);
+        }
+    }
+    for g in &model.groups {
+        let lo_sum: f64 = g.vars.iter().map(|&i| model.vars[i].lo).sum();
+        let hi_sum: f64 = g.vars.iter().map(|&i| model.vars[i].hi).sum();
+        let total = g.total.clamp(lo_sum, hi_sum);
+        // Bisection over λ: Σ clamp(v_i + λ, lo, hi) = total.
+        let (mut a, mut b) = (-1e12, 1e12);
+        for _ in 0..200 {
+            let mid = 0.5 * (a + b);
+            let s: f64 = g
+                .vars
+                .iter()
+                .map(|&i| {
+                    (v[i] + mid).clamp(model.vars[i].lo, model.vars[i].hi)
+                })
+                .sum();
+            if s < total {
+                a = mid;
+            } else {
+                b = mid;
+            }
+            if b - a < 1e-9 {
+                break;
+            }
+        }
+        let lam = 0.5 * (a + b);
+        for &i in &g.vars {
+            v[i] = (v[i] + lam).clamp(model.vars[i].lo, model.vars[i].hi);
+        }
+        // Kill residual rounding drift on an arbitrary interior var.
+        let s: f64 = g.vars.iter().map(|&i| v[i]).sum();
+        let drift = total - s;
+        if drift.abs() > 1e-9 {
+            for &i in &g.vars {
+                let d = &model.vars[i];
+                let newv = (v[i] + drift).clamp(d.lo, d.hi);
+                if (newv - v[i]).abs() > 0.0 {
+                    v[i] = newv;
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Projected subgradient descent from `start`; returns the best visited
+/// feasible point.
+fn pgd(model: &Model, start: &[f64], iters: usize) -> (Vec<f64>, f64) {
+    let mut v = start.to_vec();
+    project(model, &mut v);
+    let mut best = v.clone();
+    let mut best_f = model.eval(&v);
+    // Step scale relative to variable ranges.
+    let range: f64 = model
+        .vars
+        .iter()
+        .map(|d| d.hi - d.lo)
+        .fold(0.0, f64::max)
+        .max(1.0);
+    for k in 0..iters {
+        let g = model.subgrad(&v);
+        let gnorm = g.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if gnorm < 1e-12 {
+            break;
+        }
+        let step = 0.3 * range / (1.0 + k as f64).sqrt() / gnorm;
+        for i in 0..v.len() {
+            v[i] -= step * g[i];
+        }
+        project(model, &mut v);
+        let f = model.eval(&v);
+        if f < best_f {
+            best_f = f;
+            best = v.clone();
+        }
+    }
+    (best, best_f)
+}
+
+/// Snap a continuous point to the per-variable lattice (`lo + k*step`)
+/// while restoring each group's exact total.
+pub fn snap_to_lattice(model: &Model, v: &[f64]) -> Vec<f64> {
+    let mut out = v.to_vec();
+    for (i, d) in model.vars.iter().enumerate() {
+        let k = ((v[i] - d.lo) / d.step).round();
+        out[i] = (d.lo + k * d.step).clamp(d.lo, d.hi);
+    }
+    for g in &model.groups {
+        loop {
+            let s: f64 = g.vars.iter().map(|&i| out[i]).sum();
+            let diff = g.total - s;
+            if diff.abs() < 1e-9 {
+                break;
+            }
+            // Move one lattice step (or the remainder) in the right
+            // direction on the variable with the most room.
+            let dir = diff.signum();
+            let cand = g
+                .vars
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    let d = &model.vars[i];
+                    if dir > 0.0 {
+                        out[i] < d.hi - 1e-9
+                    } else {
+                        out[i] > d.lo + 1e-9
+                    }
+                })
+                .max_by(|&a, &b| {
+                    let room = |i: usize| {
+                        let d = &model.vars[i];
+                        if dir > 0.0 {
+                            d.hi - out[i]
+                        } else {
+                            out[i] - d.lo
+                        }
+                    };
+                    room(a).partial_cmp(&room(b)).unwrap()
+                });
+            match cand {
+                Some(i) => {
+                    let d = &model.vars[i];
+                    let step = diff.abs().min(d.step) * dir;
+                    out[i] = (out[i] + step).clamp(d.lo, d.hi);
+                }
+                None => break, // infeasible totals: leave best effort
+            }
+        }
+    }
+    out
+}
+
+/// Pairwise-exchange local search on the lattice (one tile from var a to
+/// var b within the same group) until no improving move exists.
+pub fn polish(model: &Model, point: &mut Vec<f64>, deadline: Instant) {
+    let mut improved = true;
+    while improved && Instant::now() < deadline {
+        improved = false;
+        let cur = model.eval(point);
+        'outer: for g in &model.groups {
+            for &a in &g.vars {
+                for &b in &g.vars {
+                    if a == b {
+                        continue;
+                    }
+                    let step = model.vars[a].step.min(model.vars[b].step);
+                    if point[a] - step < model.vars[a].lo - 1e-9
+                        || point[b] + step > model.vars[b].hi + 1e-9
+                    {
+                        continue;
+                    }
+                    point[a] -= step;
+                    point[b] += step;
+                    if model.eval(point) + 1e-12 < cur {
+                        improved = true;
+                        break 'outer;
+                    }
+                    point[a] += step;
+                    point[b] -= step;
+                }
+            }
+        }
+    }
+}
+
+#[derive(PartialEq)]
+struct Node {
+    priority: f64, // lower objective first
+    point: Vec<f64>,
+}
+
+impl Eq for Node {}
+
+impl Ord for Node {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap: invert.
+        other
+            .priority
+            .partial_cmp(&self.priority)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+impl PartialOrd for Node {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Solve the model: relax, integerize, branch & bound, polish.
+pub fn solve(model: &Model, params: &SolveParams) -> Solution {
+    let t0 = Instant::now();
+    let deadline = t0 + params.budget;
+    let mut rng = Pcg::seeded(params.seed);
+
+    // ---- 1. multi-start relaxation
+    let mid: Vec<f64> = model
+        .vars
+        .iter()
+        .map(|d| 0.5 * (d.lo + d.hi))
+        .collect();
+    let mut relax_best: Option<(Vec<f64>, f64)> = None;
+    for s in 0..params.starts.max(1) {
+        let start: Vec<f64> = if s == 0 {
+            mid.clone()
+        } else {
+            mid.iter()
+                .enumerate()
+                .map(|(i, &m)| {
+                    let d = &model.vars[i];
+                    m + rng.normal() * 0.25 * (d.hi - d.lo)
+                })
+                .collect()
+        };
+        let (p, f) = pgd(model, &start, params.pgd_iters);
+        if relax_best.as_ref().is_none_or(|(_, bf)| f < *bf) {
+            relax_best = Some((p, f));
+        }
+        if Instant::now() > deadline {
+            break;
+        }
+    }
+    let (relax_pt, relax_f) = relax_best.expect("at least one start");
+
+    // ---- 2. integerize
+    let mut incumbent = snap_to_lattice(model, &relax_pt);
+    polish(model, &mut incumbent, deadline);
+    let mut inc_f = model.eval(&incumbent);
+
+    // ---- 3. best-first lattice search around the incumbent
+    let mut heap = BinaryHeap::new();
+    heap.push(Node { priority: inc_f, point: incumbent.clone() });
+    let mut seen = std::collections::HashSet::new();
+    let key = |p: &[f64]| -> Vec<i64> {
+        p.iter().map(|&x| (x * 16.0).round() as i64).collect()
+    };
+    seen.insert(key(&incumbent));
+    let mut nodes = 0usize;
+    while let Some(Node { priority, point }) = heap.pop() {
+        if priority > inc_f * 1.05 {
+            break; // prune: frontier is already clearly worse
+        }
+        nodes += 1;
+        if nodes > params.max_nodes || Instant::now() > deadline {
+            break;
+        }
+        // Branch: each single-tile exchange inside each group.
+        for g in &model.groups {
+            for &a in &g.vars {
+                for &b in &g.vars {
+                    if a == b {
+                        continue;
+                    }
+                    let step = model.vars[a].step.min(model.vars[b].step);
+                    if point[a] - step < model.vars[a].lo - 1e-9
+                        || point[b] + step > model.vars[b].hi + 1e-9
+                    {
+                        continue;
+                    }
+                    let mut child = point.clone();
+                    child[a] -= step;
+                    child[b] += step;
+                    let k = key(&child);
+                    if !seen.insert(k) {
+                        continue;
+                    }
+                    let f = model.eval(&child);
+                    if f < inc_f {
+                        inc_f = f;
+                        incumbent = child.clone();
+                    }
+                    if f < inc_f * 1.05 {
+                        heap.push(Node { priority: f, point: child });
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- 4. final polish
+    polish(model, &mut incumbent, deadline);
+    let objective = model.eval(&incumbent);
+    debug_assert!(model.infeasibility(&incumbent) < 1e-6);
+    Solution {
+        point: incumbent,
+        objective,
+        relaxation_objective: relax_f,
+        nodes_explored: nodes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::miqp::expr::{MaxTerm, QuadExpr};
+
+    /// min (v0-7)^2 + (v1-1)^2 st v0+v1=8, 0<=v<=8, step 1.
+    fn quadratic_model() -> Model {
+        let mut m = Model::default();
+        let a = m.add_var("a".into(), 0.0, 8.0, 1.0);
+        let b = m.add_var("b".into(), 0.0, 8.0, 1.0);
+        m.add_group(vec![a, b], 8.0);
+        let da = QuadExpr::var(a).sub(&QuadExpr::constant(7.0));
+        let db = QuadExpr::var(b).sub(&QuadExpr::constant(1.0));
+        m.add_quad("qa", da.mul(&da.clone()));
+        m.add_quad("qb", db.mul(&db.clone()));
+        m
+    }
+
+    #[test]
+    fn projection_enforces_group_and_box() {
+        let m = quadratic_model();
+        let mut v = vec![20.0, -5.0];
+        project(&m, &mut v);
+        assert!((v[0] + v[1] - 8.0).abs() < 1e-6);
+        assert!(v.iter().all(|&x| (0.0..=8.0).contains(&x)));
+    }
+
+    #[test]
+    fn solves_separable_quadratic_exactly() {
+        let m = quadratic_model();
+        let s = solve(&m, &SolveParams {
+            budget: Duration::from_secs(2),
+            ..Default::default()
+        });
+        assert_eq!(s.point, vec![7.0, 1.0]);
+        assert!(s.objective < 1e-9);
+    }
+
+    #[test]
+    fn handles_max_terms() {
+        // min max(v0, v1) st v0+v1 = 10 -> optimum 5/5 (value 5).
+        let mut m = Model::default();
+        let a = m.add_var("a".into(), 0.0, 10.0, 1.0);
+        let b = m.add_var("b".into(), 0.0, 10.0, 1.0);
+        m.add_group(vec![a, b], 10.0);
+        m.add_term(MaxTerm::of(
+            "mx",
+            vec![QuadExpr::var(a), QuadExpr::var(b)],
+        ));
+        let s = solve(&m, &SolveParams::default());
+        assert!((s.objective - 5.0).abs() < 1e-9, "obj={}", s.objective);
+    }
+
+    #[test]
+    fn bilinear_nonconvex_finds_good_point() {
+        // min v0*v1 st v0+v1=10, 1<=v<=9: optimum at an endpoint (9).
+        let mut m = Model::default();
+        let a = m.add_var("a".into(), 1.0, 9.0, 1.0);
+        let b = m.add_var("b".into(), 1.0, 9.0, 1.0);
+        m.add_group(vec![a, b], 10.0);
+        m.add_quad("bi", QuadExpr::var(a).mul(&QuadExpr::var(b)));
+        let s = solve(&m, &SolveParams::default());
+        assert!((s.objective - 9.0).abs() < 1e-9, "obj={}", s.objective);
+    }
+
+    #[test]
+    fn snap_preserves_totals() {
+        let m = quadratic_model();
+        let snapped = snap_to_lattice(&m, &[3.4, 4.6]);
+        assert!((snapped[0] + snapped[1] - 8.0).abs() < 1e-9);
+        for (i, d) in m.vars.iter().enumerate() {
+            let k = (snapped[i] - d.lo) / d.step;
+            assert!((k - k.round()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn respects_budget() {
+        let m = quadratic_model();
+        let t0 = Instant::now();
+        let _ = solve(&m, &SolveParams {
+            budget: Duration::from_millis(50),
+            starts: 100,
+            pgd_iters: 100_000,
+            ..Default::default()
+        });
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+}

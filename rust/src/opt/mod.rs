@@ -1,0 +1,171 @@
+//! Schedulers (paper §6): the four Table-3 schemes behind one interface.
+
+pub mod ga;
+pub mod greedy;
+pub mod miqp;
+
+use std::time::Duration;
+
+use crate::config::HwConfig;
+use crate::cost::evaluator::{evaluate, Objective, OptFlags};
+use crate::partition::{simba_allocation, uniform_allocation, Allocation};
+use crate::topology::Topology;
+use crate::workload::Workload;
+
+/// Table 3 — the evaluated scheduling schemes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Layer Sequential, uniform partitioning, no optimizations.
+    Baseline,
+    /// SIMBA-like inverse-distance partitioning, no optimizations.
+    SimbaLike,
+    /// Greedy layer-by-layer hill climbing (§3.5 strawman).
+    Greedy,
+    /// MCMComm-GA (§6.2).
+    Ga,
+    /// MCMComm-MIQP (§6.3).
+    Miqp,
+}
+
+impl Scheme {
+    pub const ALL: [Scheme; 5] = [
+        Scheme::Baseline,
+        Scheme::SimbaLike,
+        Scheme::Greedy,
+        Scheme::Ga,
+        Scheme::Miqp,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Baseline => "LS (baseline)",
+            Scheme::SimbaLike => "SIMBA-like",
+            Scheme::Greedy => "greedy",
+            Scheme::Ga => "MCMComm-GA",
+            Scheme::Miqp => "MCMComm-MIQP",
+        }
+    }
+
+    /// MCMComm optimizations apply only to the MCMComm schedulers
+    /// (Table 3 column "MCMComm Optimizations").
+    pub fn flags(self, requested: OptFlags) -> OptFlags {
+        match self {
+            Scheme::Baseline | Scheme::SimbaLike | Scheme::Greedy => {
+                OptFlags::NONE
+            }
+            Scheme::Ga | Scheme::Miqp => requested,
+        }
+    }
+}
+
+/// Configuration for a scheduling run.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    pub objective: Objective,
+    pub flags: OptFlags,
+    pub seed: u64,
+    pub ga: ga::GaParams,
+    pub miqp_budget: Duration,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            objective: Objective::Latency,
+            flags: OptFlags::ALL,
+            seed: 42,
+            ga: ga::GaParams::default(),
+            miqp_budget: Duration::from_secs(20),
+        }
+    }
+}
+
+/// A scheduling outcome: allocation + true-evaluator score.
+#[derive(Debug, Clone)]
+pub struct ScheduleOutcome {
+    pub scheme: Scheme,
+    pub alloc: Allocation,
+    pub objective_value: f64,
+    pub flags: OptFlags,
+}
+
+/// Run one scheme end to end.
+pub fn run_scheme(
+    scheme: Scheme,
+    hw: &HwConfig,
+    topo: &Topology,
+    wl: &Workload,
+    cfg: &SchedulerConfig,
+) -> ScheduleOutcome {
+    let flags = scheme.flags(cfg.flags);
+    let (alloc, objective_value) = match scheme {
+        Scheme::Baseline => {
+            let a = uniform_allocation(hw, wl);
+            let v = evaluate(hw, topo, wl, &a, flags).objective(cfg.objective);
+            (a, v)
+        }
+        Scheme::SimbaLike => {
+            let a = simba_allocation(hw, topo, wl);
+            let v = evaluate(hw, topo, wl, &a, flags).objective(cfg.objective);
+            (a, v)
+        }
+        Scheme::Greedy => {
+            let r = greedy::optimize(hw, topo, wl, flags, cfg.objective);
+            (r.alloc, r.objective_value)
+        }
+        Scheme::Ga => {
+            let mut p = cfg.ga.clone();
+            p.seed = cfg.seed;
+            let r = ga::optimize(hw, topo, wl, flags, cfg.objective, &p);
+            (r.alloc, r.objective_value)
+        }
+        Scheme::Miqp => {
+            let r = miqp::optimize(
+                hw,
+                topo,
+                wl,
+                flags,
+                cfg.objective,
+                cfg.miqp_budget,
+                cfg.seed,
+            );
+            (r.alloc, r.objective_value)
+        }
+    };
+    ScheduleOutcome { scheme, alloc, objective_value, flags }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MemKind, SystemType};
+    use crate::workload::models::alexnet;
+
+    #[test]
+    fn non_mcmcomm_schemes_run_unoptimized() {
+        assert_eq!(Scheme::Baseline.flags(OptFlags::ALL), OptFlags::NONE);
+        assert_eq!(Scheme::SimbaLike.flags(OptFlags::ALL), OptFlags::NONE);
+        assert_eq!(Scheme::Ga.flags(OptFlags::ALL), OptFlags::ALL);
+    }
+
+    #[test]
+    fn all_schemes_produce_valid_allocations() {
+        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+        let topo = Topology::from_hw(&hw);
+        let wl = alexnet(1);
+        let cfg = SchedulerConfig {
+            ga: ga::GaParams {
+                population: 12,
+                generations: 6,
+                ..Default::default()
+            },
+            miqp_budget: Duration::from_secs(3),
+            ..Default::default()
+        };
+        for s in Scheme::ALL {
+            let out = run_scheme(s, &hw, &topo, &wl, &cfg);
+            assert!(out.alloc.validate(&wl, &hw).is_ok(), "{}", s.name());
+            assert!(out.objective_value > 0.0);
+        }
+    }
+}

@@ -1,0 +1,343 @@
+//! Workload allocation (paper §4.2.3): per-op partitions `Px[X]`,
+//! `Py[Y]` assigning output rows/columns to chiplet grid rows/columns,
+//! the §6.2 search-space constraints, and the baseline partitioners
+//! (uniform LS, SIMBA-like inverse-distance).
+
+use crate::config::HwConfig;
+use crate::topology::{Pos, Topology};
+use crate::workload::{GemmOp, Workload};
+
+/// Partition of one GEMM: `px[x]` output rows for chiplet grid row `x`,
+/// `py[y]` output columns for grid column `y`.
+/// Invariants: `px.len() == X`, `py.len() == Y`, `sum(px) == M`,
+/// `sum(py) == N`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    pub px: Vec<usize>,
+    pub py: Vec<usize>,
+}
+
+impl Partition {
+    pub fn validate(&self, op: &GemmOp) -> Result<(), String> {
+        if self.px.iter().sum::<usize>() != op.m {
+            return Err(format!(
+                "sum(px)={} != M={} for '{}'",
+                self.px.iter().sum::<usize>(),
+                op.m,
+                op.name
+            ));
+        }
+        if self.py.iter().sum::<usize>() != op.n {
+            return Err(format!(
+                "sum(py)={} != N={} for '{}'",
+                self.py.iter().sum::<usize>(),
+                op.n,
+                op.name
+            ));
+        }
+        Ok(())
+    }
+
+    /// The chunk (rows, cols) computed by chiplet at grid (x, y).
+    pub fn chunk(&self, x: usize, y: usize) -> (usize, usize) {
+        (self.px[x], self.py[y])
+    }
+}
+
+/// A full allocation: one partition per op, plus (for each op) the
+/// collection column used by on-package redistribution (§5.2/§6.2 —
+/// "positions of the collection chiplet" are GA genes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    pub parts: Vec<Partition>,
+    pub collect_cols: Vec<usize>,
+}
+
+impl Allocation {
+    pub fn validate(&self, wl: &Workload, hw: &HwConfig) -> Result<(), String> {
+        if self.parts.len() != wl.ops.len() {
+            return Err("allocation arity != op count".into());
+        }
+        for (p, op) in self.parts.iter().zip(&wl.ops) {
+            if p.px.len() != hw.xdim || p.py.len() != hw.ydim {
+                return Err(format!("partition arity mismatch for '{}'", op.name));
+            }
+            p.validate(op)?;
+        }
+        if self.collect_cols.len() != wl.ops.len() {
+            return Err("collect_cols arity != op count".into());
+        }
+        for &c in &self.collect_cols {
+            if c >= hw.ydim {
+                return Err(format!("collect col {c} out of range"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Split `total` into `parts` integers proportional to `weights`,
+/// preserving the exact sum (largest-remainder rounding). Zero weights
+/// yield zero shares unless everything is zero.
+pub fn proportional_split(total: usize, weights: &[f64]) -> Vec<usize> {
+    assert!(!weights.is_empty());
+    let wsum: f64 = weights.iter().sum();
+    if wsum <= 0.0 {
+        return uniform_split(total, weights.len());
+    }
+    let mut out = vec![0usize; weights.len()];
+    let mut rema: Vec<(f64, usize)> = Vec::with_capacity(weights.len());
+    let mut assigned = 0usize;
+    for (i, w) in weights.iter().enumerate() {
+        let exact = total as f64 * w / wsum;
+        out[i] = exact.floor() as usize;
+        assigned += out[i];
+        rema.push((exact - exact.floor(), i));
+    }
+    rema.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    for (_, i) in rema.into_iter().take(total - assigned) {
+        out[i] += 1;
+    }
+    out
+}
+
+/// Even split (uniform LS baseline): remainder spread over the first
+/// rows.
+pub fn uniform_split(total: usize, parts: usize) -> Vec<usize> {
+    assert!(parts > 0);
+    let base = total / parts;
+    let rem = total % parts;
+    (0..parts).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// The paper's baseline: uniform partitioning in both dimensions.
+pub fn uniform(hw: &HwConfig, op: &GemmOp) -> Partition {
+    Partition {
+        px: uniform_split(op.m, hw.xdim),
+        py: uniform_split(op.n, hw.ydim),
+    }
+}
+
+/// SIMBA-like heuristic (§3.1): share inversely proportional to the
+/// chiplet's communication distance from off-chip memory, per grid row /
+/// column (marginalized over the other dimension).
+pub fn simba(hw: &HwConfig, topo: &Topology, op: &GemmOp) -> Partition {
+    let inv = |d: usize| 1.0 / (d as f64 + 1.0);
+    let row_w: Vec<f64> = (0..hw.xdim)
+        .map(|x| {
+            (0..hw.ydim)
+                .map(|y| inv(topo.distance_to_memory(Pos::new(x, y))))
+                .sum()
+        })
+        .collect();
+    let col_w: Vec<f64> = (0..hw.ydim)
+        .map(|y| {
+            (0..hw.xdim)
+                .map(|x| inv(topo.distance_to_memory(Pos::new(x, y))))
+                .sum()
+        })
+        .collect();
+    Partition {
+        px: proportional_split(op.m, &row_w),
+        py: proportional_split(op.n, &col_w),
+    }
+}
+
+/// Whole-workload allocations for the two non-optimized schemes
+/// (Table 3 rows "Layer Sequential" and "SIMBA-like").
+pub fn uniform_allocation(hw: &HwConfig, wl: &Workload) -> Allocation {
+    Allocation {
+        parts: wl.ops.iter().map(|op| uniform(hw, op)).collect(),
+        collect_cols: vec![hw.ydim / 2; wl.ops.len()],
+    }
+}
+
+pub fn simba_allocation(hw: &HwConfig, topo: &Topology, wl: &Workload) -> Allocation {
+    Allocation {
+        parts: wl.ops.iter().map(|op| simba(hw, topo, op)).collect(),
+        collect_cols: vec![hw.ydim / 2; wl.ops.len()],
+    }
+}
+
+/// §6.2 search-space bounds for one dimension: the uniform tile count
+/// ±2 tiles, floored at one systolic tile (R): partitions below R
+/// under-utilize the PE array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bounds {
+    pub lo: usize,
+    pub hi: usize,
+    /// Mutation step (one systolic tile).
+    pub step: usize,
+}
+
+impl Bounds {
+    pub fn clamp(&self, v: usize) -> usize {
+        v.clamp(self.lo, self.hi)
+    }
+}
+
+/// Bounds for partitioning `total` over `parts` grid rows with tile
+/// size `tile` (R for rows, C for columns).
+pub fn dim_bounds(total: usize, parts: usize, tile: usize) -> Bounds {
+    let uniform_tiles = (total as f64 / parts as f64 / tile as f64).ceil() as usize;
+    let lo_tiles = uniform_tiles.saturating_sub(2).max(1);
+    let hi_tiles = uniform_tiles + 2;
+    // Small workloads (total < parts * tile) cannot give every grid row
+    // a full tile: rows must be allowed to idle (lo = 0).
+    let lo = if total >= parts * tile {
+        (lo_tiles * tile).min(total)
+    } else {
+        0
+    };
+    let hi = (hi_tiles * tile).min(total);
+    Bounds { lo, hi: hi.max(1), step: tile }
+}
+
+/// Project `vals` so that each lies in `bounds` and the sum equals
+/// `total` (greedy water-filling; feasible whenever
+/// `parts*lo <= total <= parts*hi` and best-effort otherwise).
+pub fn project_to_sum(vals: &mut [usize], total: usize, bounds: Bounds) {
+    for v in vals.iter_mut() {
+        *v = bounds.clamp(*v);
+    }
+    let mut sum: usize = vals.iter().sum();
+    // Add to the smallest / remove from the largest until the sum fits:
+    // keeps the distribution shape while restoring feasibility.
+    while sum < total {
+        let deficit = total - sum;
+        let i = (0..vals.len())
+            .filter(|&i| vals[i] < bounds.hi)
+            .min_by_key(|&i| vals[i]);
+        match i {
+            Some(i) => {
+                let add = deficit.min(bounds.hi - vals[i]);
+                vals[i] += add;
+                sum += add;
+            }
+            None => {
+                // Bounds infeasible: spill into the last entry.
+                let last = vals.len() - 1;
+                vals[last] += deficit;
+                sum += deficit;
+            }
+        }
+    }
+    while sum > total {
+        let excess = sum - total;
+        let i = (0..vals.len())
+            .filter(|&i| vals[i] > bounds.lo)
+            .max_by_key(|&i| vals[i]);
+        match i {
+            Some(i) => {
+                let sub = excess.min(vals[i] - bounds.lo);
+                vals[i] -= sub;
+                sum -= sub;
+            }
+            None => {
+                let first = 0;
+                let sub = excess.min(vals[first].saturating_sub(1));
+                vals[first] -= sub;
+                sum -= sub;
+                if sub == 0 {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MemKind, SystemType};
+
+    fn hw() -> HwConfig {
+        HwConfig::paper(SystemType::A, MemKind::Hbm, 4)
+    }
+
+    #[test]
+    fn uniform_split_sums_and_balance() {
+        let s = uniform_split(10, 4);
+        assert_eq!(s.iter().sum::<usize>(), 10);
+        assert_eq!(s, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn proportional_split_preserves_sum() {
+        let s = proportional_split(100, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.iter().sum::<usize>(), 100);
+        assert!(s[3] > s[0]);
+        // Degenerate weights fall back to uniform.
+        let z = proportional_split(7, &[0.0, 0.0]);
+        assert_eq!(z.iter().sum::<usize>(), 7);
+    }
+
+    #[test]
+    fn uniform_partition_valid() {
+        let op = GemmOp::dense("x", 1000, 64, 300);
+        let p = uniform(&hw(), &op);
+        assert!(p.validate(&op).is_ok());
+        assert_eq!(p.px.len(), 4);
+    }
+
+    #[test]
+    fn simba_prefers_near_chiplets_type_a() {
+        let h = hw();
+        let topo = Topology::from_hw(&h);
+        let op = GemmOp::dense("x", 1000, 64, 1000);
+        let p = simba(&h, &topo, &op);
+        assert!(p.validate(&op).is_ok());
+        // Row 0 (contains the global chiplet) gets the largest share.
+        assert!(p.px[0] > p.px[3], "px={:?}", p.px);
+        assert!(p.py[0] > p.py[3], "py={:?}", p.py);
+    }
+
+    #[test]
+    fn simba_uniform_on_type_c() {
+        let h = HwConfig::paper(SystemType::C, MemKind::Hbm, 4);
+        let topo = Topology::from_hw(&h);
+        let op = GemmOp::dense("x", 400, 64, 400);
+        let p = simba(&h, &topo, &op);
+        assert_eq!(p.px, uniform_split(400, 4));
+    }
+
+    #[test]
+    fn bounds_match_paper_formula() {
+        // M=1024 over 4 rows, R=16: uniform tiles = 16 -> [14, 18] tiles.
+        let b = dim_bounds(1024, 4, 16);
+        assert_eq!((b.lo, b.hi), (14 * 16, 18 * 16));
+        // Tiny workload: rows may idle (lo = 0), hi capped at total.
+        let b = dim_bounds(8, 4, 16);
+        assert_eq!((b.lo, b.hi), (0, 8));
+    }
+
+    #[test]
+    fn project_restores_sum_within_bounds() {
+        let b = Bounds { lo: 16, hi: 128, step: 16 };
+        let mut v = vec![200, 10, 50, 50];
+        project_to_sum(&mut v, 240, b);
+        assert_eq!(v.iter().sum::<usize>(), 240);
+        assert!(v.iter().all(|&x| (16..=128).contains(&x)), "{v:?}");
+    }
+
+    #[test]
+    fn project_handles_infeasible_bounds() {
+        let b = Bounds { lo: 16, hi: 20, step: 16 };
+        let mut v = vec![16, 16];
+        project_to_sum(&mut v, 100, b); // 2*20 < 100: spills
+        assert_eq!(v.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn allocation_validation() {
+        let h = hw();
+        let wl = Workload::new(
+            "w",
+            vec![GemmOp::dense("a", 100, 32, 64)],
+        );
+        let mut a = uniform_allocation(&h, &wl);
+        assert!(a.validate(&wl, &h).is_ok());
+        a.parts[0].px[0] += 1;
+        assert!(a.validate(&wl, &h).is_err());
+    }
+}

@@ -1,0 +1,400 @@
+//! Batch pipelining as resource-constrained project scheduling (paper
+//! §5.4): overlap communication of one sample with computation of
+//! another.
+//!
+//! Model (following the paper via Concerto [12]): every (op, sample)
+//! expands into up-to-three tasks — input comm, compute, output comm —
+//! with precedence within the sample chain; compute and communication
+//! are two unit-capacity resources, so a comm task can run while a
+//! compute task runs, but two comm tasks serialize.
+//!
+//! Solvers: a serial schedule-generation list scheduler with
+//! critical-path priority (fast, any size) and an exact DFS
+//! branch-and-bound (the paper's "ILP solver" role) for the small
+//! instances the paper notes are tractable.
+
+use crate::cost::evaluator::CostBreakdown;
+
+/// The two §5.4 resources.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resource {
+    Compute,
+    Comm,
+}
+
+/// One schedulable unit.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub name: String,
+    pub dur: f64,
+    pub resource: Resource,
+    /// Indices of tasks that must finish first.
+    pub preds: Vec<usize>,
+}
+
+/// A start-time assignment.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub start: Vec<f64>,
+    pub makespan: f64,
+}
+
+/// Expand a per-sample cost breakdown into the batch task DAG.
+/// `per_op[i]` supplies the three stage durations of op `i`.
+pub fn batch_tasks(cost: &CostBreakdown, batch: usize) -> Vec<Task> {
+    assert!(batch >= 1);
+    let mut tasks = Vec::new();
+    for s in 0..batch {
+        let mut prev: Option<usize> = None;
+        for (i, oc) in cost.per_op.iter().enumerate() {
+            let push = |name: String, dur: f64, res: Resource,
+                            preds: Vec<usize>, tasks: &mut Vec<Task>|
+             -> Option<usize> {
+                if dur <= 0.0 {
+                    return preds.first().copied().or(None);
+                }
+                tasks.push(Task { name, dur, resource: res, preds });
+                Some(tasks.len() - 1)
+            };
+            let p0: Vec<usize> = prev.into_iter().collect();
+            let t_in = push(
+                format!("s{s}.op{i}.in"),
+                oc.in_ns,
+                Resource::Comm,
+                p0,
+                &mut tasks,
+            );
+            let t_cp = push(
+                format!("s{s}.op{i}.comp"),
+                oc.comp_ns,
+                Resource::Compute,
+                t_in.into_iter().collect(),
+                &mut tasks,
+            );
+            let t_out = push(
+                format!("s{s}.op{i}.out"),
+                oc.out_ns,
+                Resource::Comm,
+                t_cp.into_iter().collect(),
+                &mut tasks,
+            );
+            prev = t_out.or(t_cp).or(t_in).or(prev);
+        }
+    }
+    tasks
+}
+
+/// Longest path from each task to the sink (critical-path priority).
+fn tails(tasks: &[Task]) -> Vec<f64> {
+    // preds reference earlier indices only, so a reverse sweep works.
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); tasks.len()];
+    for (i, t) in tasks.iter().enumerate() {
+        for &p in &t.preds {
+            succs[p].push(i);
+        }
+    }
+    let mut tail = vec![0.0f64; tasks.len()];
+    for i in (0..tasks.len()).rev() {
+        let succ_max = succs[i]
+            .iter()
+            .map(|&j| tail[j])
+            .fold(0.0, f64::max);
+        tail[i] = tasks[i].dur + succ_max;
+    }
+    tail
+}
+
+/// Serial schedule-generation list scheduling with critical-path
+/// priority; resources are unit-capacity, tasks are non-preemptive.
+pub fn list_schedule(tasks: &[Task]) -> Schedule {
+    let n = tasks.len();
+    let prio = tails(tasks);
+    let mut start = vec![f64::NAN; n];
+    let mut finish = vec![f64::NAN; n];
+    let mut scheduled = vec![false; n];
+    // Resource availability as the finish time of the last task on it.
+    let mut res_free = [0.0f64; 2];
+    let res_idx = |r: Resource| match r {
+        Resource::Compute => 0,
+        Resource::Comm => 1,
+    };
+    // Busy intervals per resource, kept sorted, for gap-less insertion.
+    let mut busy: [Vec<(f64, f64)>; 2] = [Vec::new(), Vec::new()];
+
+    for _ in 0..n {
+        // Eligible: all preds scheduled; pick max priority.
+        let cand = (0..n)
+            .filter(|&i| {
+                !scheduled[i]
+                    && tasks[i].preds.iter().all(|&p| scheduled[p])
+            })
+            .max_by(|&a, &b| prio[a].partial_cmp(&prio[b]).unwrap())
+            .expect("cyclic task graph?");
+        let ready = tasks[cand]
+            .preds
+            .iter()
+            .map(|&p| finish[p])
+            .fold(0.0, f64::max);
+        let r = res_idx(tasks[cand].resource);
+        // Earliest gap on the resource at/after `ready`.
+        let dur = tasks[cand].dur;
+        let mut t = ready;
+        for &(bs, bf) in &busy[r] {
+            if t + dur <= bs {
+                break;
+            }
+            t = t.max(bf);
+        }
+        start[cand] = t;
+        finish[cand] = t + dur;
+        busy[r].push((t, t + dur));
+        busy[r].sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        res_free[r] = res_free[r].max(t + dur);
+        scheduled[cand] = true;
+    }
+    let makespan = finish.iter().copied().fold(0.0, f64::max);
+    Schedule { start, makespan }
+}
+
+/// Exact DFS branch & bound (optimal for small instances). Falls back to
+/// the list schedule when the task count exceeds `limit`.
+pub fn exact_schedule(tasks: &[Task], limit: usize) -> Schedule {
+    let seed = list_schedule(tasks);
+    if tasks.len() > limit || tasks.is_empty() {
+        return seed;
+    }
+    let tail = tails(tasks);
+    let mut best = seed.clone();
+
+    #[derive(Clone)]
+    struct State {
+        start: Vec<f64>,
+        finish: Vec<f64>,
+        done: Vec<bool>,
+        res_free: [f64; 2],
+        n_done: usize,
+    }
+    let res_idx = |r: Resource| match r {
+        Resource::Compute => 0usize,
+        Resource::Comm => 1,
+    };
+
+    fn dfs(
+        tasks: &[Task],
+        tail: &[f64],
+        st: &mut State,
+        best: &mut Schedule,
+        res_idx: &dyn Fn(Resource) -> usize,
+        nodes: &mut usize,
+    ) {
+        *nodes += 1;
+        if *nodes > 2_000_000 {
+            return;
+        }
+        if st.n_done == tasks.len() {
+            let mk = st.finish.iter().copied().fold(0.0, f64::max);
+            if mk < best.makespan {
+                best.makespan = mk;
+                best.start = st.start.clone();
+            }
+            return;
+        }
+        // Lower bound: for each unfinished task, earliest possible finish
+        // through its tail.
+        let cur_mk = st.finish.iter().copied().fold(0.0, f64::max);
+        let mut lb = cur_mk;
+        for i in 0..tasks.len() {
+            if !st.done[i] {
+                let ready = tasks[i]
+                    .preds
+                    .iter()
+                    .map(|&p| if st.done[p] { st.finish[p] } else { f64::MAX })
+                    .fold(0.0, f64::max);
+                if ready < f64::MAX {
+                    lb = lb.max(ready + tail[i]);
+                }
+            }
+        }
+        if lb >= best.makespan {
+            return;
+        }
+        // Branch on each eligible task.
+        for i in 0..tasks.len() {
+            if st.done[i] || !tasks[i].preds.iter().all(|&p| st.done[p]) {
+                continue;
+            }
+            let ready = tasks[i]
+                .preds
+                .iter()
+                .map(|&p| st.finish[p])
+                .fold(0.0, f64::max);
+            let r = res_idx(tasks[i].resource);
+            let t = ready.max(st.res_free[r]);
+            let saved_free = st.res_free[r];
+            st.start[i] = t;
+            st.finish[i] = t + tasks[i].dur;
+            st.res_free[r] = t + tasks[i].dur;
+            st.done[i] = true;
+            st.n_done += 1;
+            dfs(tasks, tail, st, best, res_idx, nodes);
+            st.done[i] = false;
+            st.n_done -= 1;
+            st.res_free[r] = saved_free;
+            st.start[i] = f64::NAN;
+            st.finish[i] = f64::NAN;
+        }
+    }
+
+    let mut st = State {
+        start: vec![f64::NAN; tasks.len()],
+        finish: vec![f64::NAN; tasks.len()],
+        done: vec![false; tasks.len()],
+        res_free: [0.0; 2],
+        n_done: 0,
+    };
+    let mut nodes = 0usize;
+    dfs(tasks, &tail, &mut st, &mut best, &res_idx, &mut nodes);
+    best
+}
+
+/// Naive (sequential LS) makespan: no cross-sample overlap at all.
+pub fn sequential_makespan(cost: &CostBreakdown, batch: usize) -> f64 {
+    cost.latency_ns * batch as f64
+}
+
+/// Per-sample pipelining speedup at a batch size (Figure 11's metric).
+pub fn pipeline_speedup(cost: &CostBreakdown, batch: usize) -> f64 {
+    let tasks = batch_tasks(cost, batch);
+    let sched = list_schedule(&tasks);
+    sequential_makespan(cost, batch) / sched.makespan
+}
+
+/// Validate that a schedule respects precedence and unit resources.
+pub fn validate_schedule(tasks: &[Task], s: &Schedule) -> Result<(), String> {
+    for (i, t) in tasks.iter().enumerate() {
+        for &p in &t.preds {
+            if s.start[i] + 1e-9 < s.start[p] + tasks[p].dur {
+                return Err(format!(
+                    "task {i} starts before pred {p} finishes"
+                ));
+            }
+        }
+    }
+    // No overlap per resource.
+    for res in [Resource::Compute, Resource::Comm] {
+        let mut ivs: Vec<(f64, f64)> = tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.resource == res)
+            .map(|(i, t)| (s.start[i], s.start[i] + t.dur))
+            .collect();
+        ivs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in ivs.windows(2) {
+            if w[1].0 + 1e-9 < w[0].1 {
+                return Err(format!(
+                    "resource {res:?} overlap: {:?} vs {:?}",
+                    w[0], w[1]
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HwConfig, MemKind, SystemType};
+    use crate::cost::evaluator::{evaluate, OptFlags};
+    use crate::partition::uniform_allocation;
+    use crate::topology::Topology;
+    use crate::workload::models::alexnet;
+
+    fn alexnet_cost() -> CostBreakdown {
+        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+        let topo = Topology::from_hw(&hw);
+        let wl = alexnet(1);
+        let alloc = uniform_allocation(&hw, &wl);
+        evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE)
+    }
+
+    #[test]
+    fn batch_tasks_structure() {
+        let cost = alexnet_cost();
+        let t1 = batch_tasks(&cost, 1);
+        let t4 = batch_tasks(&cost, 4);
+        assert_eq!(t4.len(), 4 * t1.len());
+        // Precedences all point backwards.
+        for (i, t) in t4.iter().enumerate() {
+            for &p in &t.preds {
+                assert!(p < i);
+            }
+        }
+    }
+
+    #[test]
+    fn list_schedule_is_valid_and_beats_sequential() {
+        let cost = alexnet_cost();
+        for batch in [1usize, 2, 4, 8] {
+            let tasks = batch_tasks(&cost, batch);
+            let s = list_schedule(&tasks);
+            validate_schedule(&tasks, &s).unwrap();
+            assert!(s.makespan <= sequential_makespan(&cost, batch) + 1e-6);
+            if batch > 1 {
+                // Overlap must produce a real win on AlexNet.
+                assert!(
+                    s.makespan < sequential_makespan(&cost, batch) * 0.95,
+                    "batch {batch}: no overlap win"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_not_worse_than_list_on_small_instance() {
+        let tasks = vec![
+            Task { name: "a".into(), dur: 4.0, resource: Resource::Comm, preds: vec![] },
+            Task { name: "b".into(), dur: 3.0, resource: Resource::Compute, preds: vec![0] },
+            Task { name: "c".into(), dur: 5.0, resource: Resource::Comm, preds: vec![] },
+            Task { name: "d".into(), dur: 2.0, resource: Resource::Compute, preds: vec![2] },
+            Task { name: "e".into(), dur: 1.0, resource: Resource::Comm, preds: vec![1, 3] },
+        ];
+        let ls = list_schedule(&tasks);
+        let ex = exact_schedule(&tasks, 16);
+        validate_schedule(&tasks, &ex).unwrap();
+        assert!(ex.makespan <= ls.makespan + 1e-9);
+        // Hand-checked optimum: comm a(0-4),c(4-9); comp b(4-7),d(9-11);
+        // or c first: c(0-5),a(5-9),d(5-7),b(9-12),e(12-13) = 13.
+        assert!(ex.makespan <= 13.0 + 1e-9);
+    }
+
+    #[test]
+    fn speedup_stable_across_batches() {
+        // Fig. 11: per-sample speedup roughly flat in batch size.
+        let cost = alexnet_cost();
+        let s2 = pipeline_speedup(&cost, 2);
+        let s8 = pipeline_speedup(&cost, 8);
+        assert!(s2 > 1.05, "s2={s2}");
+        assert!(s8 > 1.05, "s8={s8}");
+        assert!((s8 / s2 - 1.0).abs() < 0.35, "s2={s2} s8={s8}");
+    }
+
+    #[test]
+    fn zero_duration_stages_are_skipped() {
+        let mut cost = alexnet_cost();
+        for oc in cost.per_op.iter_mut() {
+            oc.out_ns = 0.0;
+        }
+        let tasks = batch_tasks(&cost, 2);
+        assert!(tasks.iter().all(|t| t.dur > 0.0));
+        let s = list_schedule(&tasks);
+        validate_schedule(&tasks, &s).unwrap();
+    }
+
+    #[test]
+    fn single_chain_has_no_speedup() {
+        let cost = alexnet_cost();
+        let s1 = pipeline_speedup(&cost, 1);
+        assert!((s1 - 1.0).abs() < 1e-6, "s1={s1}");
+    }
+}

@@ -1,0 +1,215 @@
+//! On-package redistribution (paper §5.2): the three-step heuristic that
+//! replaces an output→memory→input round-trip between chained GEMMs with
+//! purely on-package traffic.
+//!
+//! Step 1 — *row reduction*: chiplets of a grid row send their output
+//! chunks toward a collection column `c*` chosen to balance the bytes
+//! arriving from the left and from the right (the link adjacent to `c*`
+//! on each side serializes that side's bytes).
+//!
+//! Step 2 — *row broadcast*: the assembled row block (Px[x] × N) is
+//! broadcast back along the row; wormhole pipelining makes the wall time
+//! one block transfer regardless of row length.
+//!
+//! Step 3 — *column redistribution*: rows migrate across grid-row
+//! boundaries so the layout matches the next op's Px' partition; the
+//! column link crossing boundary `b` carries the cumulative mismatch
+//! between the two partitions.
+//!
+//! Vertical links "help little during row reduction" (§5.2), so steps are
+//! strictly row-then-column; the three step latencies add.
+
+use crate::config::HwConfig;
+use crate::partition::Partition;
+use crate::workload::GemmOp;
+
+/// Latency + energy of one redistribution between `op` (producer, with
+/// partition `part`) and the next op (consumer, with partition
+/// `next_part`), collecting at column `c_star`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RedistCost {
+    pub step1_ns: f64,
+    pub step2_ns: f64,
+    pub step3_ns: f64,
+    pub energy_pj: f64,
+}
+
+impl RedistCost {
+    pub fn total_ns(&self) -> f64 {
+        self.step1_ns + self.step2_ns + self.step3_ns
+    }
+}
+
+/// Cost of the 3-step redistribution (§5.2).
+pub fn redistribute(
+    hw: &HwConfig,
+    op: &GemmOp,
+    part: &Partition,
+    next_part: &Partition,
+    c_star: usize,
+) -> RedistCost {
+    assert!(c_star < part.py.len(), "collection column out of range");
+    let bw = hw.bw_nop;
+    let e_nop_bit = hw.energy.nop_pj_bit_hop;
+
+    // ---- Step 1: row reduction toward c*.
+    // Per row x: left side carries sum of chunks with y < c*, right side
+    // with y > c*; the two directions proceed in parallel, rows proceed
+    // in parallel, so the step time is the max serialized side.
+    let mut step1_ns: f64 = 0.0;
+    let mut energy_bits = 0.0;
+    for &px in &part.px {
+        let mut left = 0.0;
+        let mut right = 0.0;
+        for (y, &py) in part.py.iter().enumerate() {
+            let chunk_bytes = hw.bytes(px * py);
+            let hops = y.abs_diff(c_star) as f64;
+            if y < c_star {
+                left += chunk_bytes;
+            } else if y > c_star {
+                right += chunk_bytes;
+            }
+            energy_bits += chunk_bytes * 8.0 * hops;
+        }
+        step1_ns = step1_ns.max(left.max(right) / bw);
+    }
+
+    // ---- Step 2: broadcast the row block to the whole row (pipelined
+    // wavefront: one block transfer of Px[x] * N bytes).
+    let ydim = part.py.len();
+    let mut step2_ns: f64 = 0.0;
+    for &px in &part.px {
+        let row_bytes = hw.bytes(px * op.n);
+        step2_ns = step2_ns.max(row_bytes / bw);
+        // Every one of the (ydim - 1) row links carries the full block.
+        energy_bits += row_bytes * 8.0 * (ydim - 1) as f64;
+    }
+
+    // ---- Step 3: column redistribution to the next partition's Px'.
+    // The consumer reads M' x K' activations whose rows map onto the
+    // producer's M x N output; scale row width to the consumed layout.
+    let next_m: usize = next_part.px.iter().sum();
+    let next_k = {
+        // Width of one consumed row in elements: K' of the next op is
+        // derived from this output (chained), expressed via the consumer
+        // partition total (see workload::GemmOp::redistributable_to).
+        // For im2col chains K' may exceed N; the moved data is the
+        // producer's rows, so the width is N.
+        op.n
+    };
+    let xdim = part.px.len();
+    // Cumulative mismatch across each row boundary, mapped through the
+    // row-count rescale when M' != M.
+    let mut step3_worst_bytes: f64 = 0.0;
+    let m: usize = part.px.iter().sum();
+    let scale = m as f64 / next_m.max(1) as f64;
+    let mut cum_a = 0.0f64;
+    let mut cum_b = 0.0f64;
+    for b in 0..xdim.saturating_sub(1) {
+        cum_a += part.px[b] as f64;
+        cum_b += next_part.px[b] as f64 * scale;
+        let rows_moved = (cum_a - cum_b).abs();
+        let bytes = rows_moved * hw.bytes(next_k);
+        step3_worst_bytes = step3_worst_bytes.max(bytes);
+        energy_bits += bytes * 8.0;
+    }
+    let step3_ns = step3_worst_bytes / bw;
+
+    RedistCost {
+        step1_ns,
+        step2_ns,
+        step3_ns,
+        energy_pj: energy_bits * e_nop_bit,
+    }
+}
+
+/// The collection column minimizing step-1 latency (§5.2: "best balances
+/// the left-coming and right-coming data size") — the default gene value
+/// the GA starts from and the value MIQP fixes.
+pub fn best_collect_col(hw: &HwConfig, op: &GemmOp, part: &Partition,
+                        next_part: &Partition) -> usize {
+    (0..part.py.len())
+        .min_by(|&a, &b| {
+            let ca = redistribute(hw, op, part, next_part, a).total_ns();
+            let cb = redistribute(hw, op, part, next_part, b).total_ns();
+            ca.partial_cmp(&cb).unwrap()
+        })
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MemKind, SystemType};
+    use crate::partition::{uniform, Partition};
+
+    fn hw() -> HwConfig {
+        HwConfig::paper(SystemType::A, MemKind::Hbm, 4)
+    }
+
+    fn op() -> GemmOp {
+        GemmOp::dense("x", 512, 128, 512)
+    }
+
+    #[test]
+    fn balanced_collection_beats_edge() {
+        let h = hw();
+        let o = op();
+        let p = uniform(&h, &o);
+        let mid = redistribute(&h, &o, &p, &p, 2).total_ns();
+        let edge = redistribute(&h, &o, &p, &p, 0).total_ns();
+        assert!(mid < edge, "mid={mid} edge={edge}");
+        let best = best_collect_col(&h, &o, &p, &p);
+        assert!(best == 1 || best == 2, "best={best}");
+    }
+
+    #[test]
+    fn identical_partitions_need_no_step3() {
+        let h = hw();
+        let o = op();
+        let p = uniform(&h, &o);
+        let c = redistribute(&h, &o, &p, &p, 2);
+        assert_eq!(c.step3_ns, 0.0);
+        assert!(c.step1_ns > 0.0 && c.step2_ns > 0.0);
+    }
+
+    #[test]
+    fn skewed_next_partition_pays_step3() {
+        let h = hw();
+        let o = op();
+        let p = uniform(&h, &o);
+        let skew = Partition { px: vec![512, 0, 0, 0], py: p.py.clone() };
+        let c = redistribute(&h, &o, &p, &skew, 2);
+        assert!(c.step3_ns > 0.0);
+    }
+
+    #[test]
+    fn cheaper_than_memory_roundtrip_high_bw() {
+        // The whole point of §5.2: beat offload+reload via memory.
+        use crate::cost::latency::{load, offload};
+        use crate::topology::Topology;
+        let h = hw();
+        let topo = Topology::from_hw(&h);
+        let o = op();
+        let p = uniform(&h, &o);
+        let redist = redistribute(&h, &o, &p, &p, 2).total_ns();
+        let roundtrip = offload(&h, &topo, &o, false).wall_ns()
+            + load(&h, &topo, &o, &p, false, true).wall_ns();
+        assert!(
+            redist < roundtrip,
+            "redist={redist} roundtrip={roundtrip}"
+        );
+    }
+
+    #[test]
+    fn energy_positive_and_scales_with_size() {
+        let h = hw();
+        let small = GemmOp::dense("s", 64, 32, 64);
+        let big = GemmOp::dense("b", 1024, 32, 1024);
+        let ps = uniform(&h, &small);
+        let pb = uniform(&h, &big);
+        let es = redistribute(&h, &small, &ps, &ps, 2).energy_pj;
+        let eb = redistribute(&h, &big, &pb, &pb, 2).energy_pj;
+        assert!(es > 0.0 && eb > es * 50.0);
+    }
+}

@@ -1,0 +1,224 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the PJRT runtime.
+//!
+//! HLO is shape-static, so the AOT step emits one executable per
+//! power-of-two (M, K, N, relu) *bucket*; the runtime pads a chiplet
+//! chunk up to the smallest covering bucket and slices the result back.
+//! Padding with zeros is exact for GEMM (+bias broadcast on padded
+//! columns is sliced away; ReLU(0) = 0).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One AOT-compiled GEMM bucket.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bucket {
+    pub name: String,
+    pub path: PathBuf,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub relu: bool,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub buckets: Vec<Bucket>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let raw = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| {
+                format!(
+                    "reading {}/manifest.json — run `make artifacts` first",
+                    dir.display()
+                )
+            })?;
+        let json = Json::parse(&raw).map_err(|e| anyhow!("{e}"))?;
+        let version = json
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut buckets = Vec::new();
+        for b in json
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing buckets"))?
+        {
+            let field = |k: &str| {
+                b.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("bucket missing '{k}'"))
+            };
+            buckets.push(Bucket {
+                name: b
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("bucket missing name"))?
+                    .to_string(),
+                path: dir.join(
+                    b.get("path")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("bucket missing path"))?,
+                ),
+                m: field("m")?,
+                k: field("k")?,
+                n: field("n")?,
+                relu: b
+                    .get("relu")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| anyhow!("bucket missing relu"))?,
+            });
+        }
+        if buckets.is_empty() {
+            bail!("manifest has no buckets");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), buckets })
+    }
+
+    /// The default artifact directory: `$MCMCOMM_ARTIFACTS` or
+    /// `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("MCMCOMM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Smallest bucket covering (m, k, n) with the right epilogue.
+    pub fn pick(&self, m: usize, k: usize, n: usize, relu: bool)
+                -> Result<&Bucket> {
+        self.buckets
+            .iter()
+            .filter(|b| {
+                b.relu == relu && b.m >= m && b.k >= k && b.n >= n
+            })
+            .min_by_key(|b| b.m * b.k + b.k * b.n + b.m * b.n)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no bucket covers m={m} k={k} n={n} relu={relu} \
+                     (largest emitted dim: {}); re-run aot.py with bigger \
+                     --dims or scale the workload down",
+                    self.buckets.iter().map(|b| b.m.max(b.k).max(b.n))
+                        .max().unwrap_or(0)
+                )
+            })
+    }
+}
+
+/// Pad a row-major `rows x cols` matrix to `prows x pcols` with zeros.
+pub fn pad_matrix(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    prows: usize,
+    pcols: usize,
+) -> Vec<f32> {
+    assert_eq!(data.len(), rows * cols);
+    assert!(prows >= rows && pcols >= cols);
+    let mut out = vec![0.0f32; prows * pcols];
+    for r in 0..rows {
+        out[r * pcols..r * pcols + cols]
+            .copy_from_slice(&data[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+/// Slice the top-left `rows x cols` of a row-major `prows x pcols`.
+pub fn unpad_matrix(
+    data: &[f32],
+    prows: usize,
+    pcols: usize,
+    rows: usize,
+    cols: usize,
+) -> Vec<f32> {
+    assert_eq!(data.len(), prows * pcols);
+    assert!(prows >= rows && pcols >= cols);
+    let mut out = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        out.extend_from_slice(&data[r * pcols..r * pcols + cols]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest() -> Manifest {
+        let mk = |m: usize, k: usize, n: usize, relu: bool| Bucket {
+            name: format!("b{m}_{k}_{n}_{relu}"),
+            path: PathBuf::from("x"),
+            m,
+            k,
+            n,
+            relu,
+        };
+        Manifest {
+            dir: PathBuf::from("."),
+            buckets: vec![
+                mk(16, 16, 16, false),
+                mk(64, 64, 64, false),
+                mk(256, 256, 256, false),
+                mk(16, 16, 16, true),
+                mk(64, 256, 64, false),
+            ],
+        }
+    }
+
+    #[test]
+    fn pick_smallest_covering() {
+        let m = fake_manifest();
+        assert_eq!(m.pick(10, 10, 10, false).unwrap().m, 16);
+        assert_eq!(m.pick(17, 16, 16, false).unwrap().m, 64);
+        // Rect bucket preferred over cube when cheaper.
+        assert_eq!(m.pick(60, 200, 60, false).unwrap().name, "b64_256_64_false");
+        assert!(m.pick(300, 16, 16, false).is_err());
+        assert_eq!(m.pick(16, 16, 16, true).unwrap().relu, true);
+    }
+
+    #[test]
+    fn pad_unpad_roundtrip() {
+        let data: Vec<f32> = (0..6).map(|x| x as f32).collect(); // 2x3
+        let padded = pad_matrix(&data, 2, 3, 4, 5);
+        assert_eq!(padded.len(), 20);
+        assert_eq!(padded[0..3], [0.0, 1.0, 2.0]);
+        assert_eq!(padded[3..5], [0.0, 0.0]);
+        assert_eq!(padded[5..8], [3.0, 4.0, 5.0]);
+        let back = unpad_matrix(&padded, 4, 5, 2, 3);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn manifest_parses_real_format() {
+        let dir = std::env::temp_dir().join("mcmcomm_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "kernel": "matmul_os", "accum_dtype": "f32",
+                "buckets": [{"name": "g", "path": "g.hlo.txt", "m": 16,
+                             "k": 16, "n": 16, "relu": false, "dtype": "f32"}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.buckets.len(), 1);
+        assert_eq!(m.buckets[0].path, dir.join("g.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent-dir-xyz"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"));
+    }
+}

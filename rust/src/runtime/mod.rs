@@ -1,0 +1,8 @@
+//! PJRT runtime: load and execute the AOT-compiled GEMM artifacts on the
+//! Layer-3 request path (no Python anywhere here).
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::Manifest;
+pub use pjrt::{reference_gemm, GemmRuntime};

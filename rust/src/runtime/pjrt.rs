@@ -1,0 +1,178 @@
+//! PJRT execution of AOT HLO artifacts — the only place Rust touches
+//! XLA. Loads `artifacts/*.hlo.txt` (HLO **text**: the id-safe
+//! interchange format, see python/compile/aot.py), compiles once per
+//! bucket on the CPU PJRT client, and executes padded GEMM chunks.
+//!
+//! Python never runs here: this is the request path.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{pad_matrix, unpad_matrix, Manifest};
+
+/// Lazily-compiled bucket executables over one PJRT client.
+pub struct GemmRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Executed-chunk counter (metrics).
+    pub executions: std::sync::atomic::AtomicU64,
+}
+
+impl GemmRuntime {
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(artifact_dir)?;
+        Ok(GemmRuntime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            executions: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Run `f` with the (lazily compiled) executable for a bucket.
+    /// `PjRtLoadedExecutable` is not `Clone`, so callers execute under
+    /// the cache lock; executions are short and the CPU client
+    /// serializes anyway.
+    fn with_executable<T>(
+        &self,
+        name: &str,
+        path: &Path,
+        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<T>,
+    ) -> Result<T> {
+        let mut cache = self.cache.lock().unwrap();
+        if !cache.contains_key(name) {
+            let proto =
+                xla::HloModuleProto::from_text_file(path).with_context(
+                    || format!("parsing HLO text {}", path.display()),
+                )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling bucket {name}"))?;
+            cache.insert(name.to_string(), exe);
+        }
+        f(cache.get(name).unwrap())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Execute `relu?(x @ w + bias)` for a row-major `m x k` activation
+    /// chunk and `k x n` weight chunk via the smallest covering bucket.
+    pub fn gemm(
+        &self,
+        x: &[f32],
+        w: &[f32],
+        bias: Option<&[f32]>,
+        m: usize,
+        k: usize,
+        n: usize,
+        relu: bool,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(x.len() == m * k, "x: {} != {m}x{k}", x.len());
+        anyhow::ensure!(w.len() == k * n, "w: {} != {k}x{n}", w.len());
+        if let Some(b) = bias {
+            anyhow::ensure!(b.len() == n, "bias: {} != {n}", b.len());
+        }
+        if m == 0 || n == 0 {
+            return Ok(Vec::new());
+        }
+        let bucket = self.manifest.pick(m, k, n, relu)?;
+        let xp = pad_matrix(x, m, k, bucket.m, bucket.k);
+        let wp = pad_matrix(w, k, n, bucket.k, bucket.n);
+        let mut bp = vec![0.0f32; bucket.n];
+        if let Some(b) = bias {
+            bp[..n].copy_from_slice(b);
+        }
+        let lx = xla::Literal::vec1(&xp)
+            .reshape(&[bucket.m as i64, bucket.k as i64])?;
+        let lw = xla::Literal::vec1(&wp)
+            .reshape(&[bucket.k as i64, bucket.n as i64])?;
+        let lb = xla::Literal::vec1(&bp).reshape(&[bucket.n as i64])?;
+
+        let full = self.with_executable(&bucket.name, &bucket.path, |exe| {
+            let result = exe.execute::<xla::Literal>(&[lx, lw, lb])?[0][0]
+                .to_literal_sync()?;
+            Ok(result.to_tuple1()?.to_vec::<f32>()?)
+        })?;
+        self.executions
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(unpad_matrix(&full, bucket.m, bucket.n, m, n))
+    }
+}
+
+/// Plain CPU reference GEMM used to verify the PJRT path end to end.
+pub fn reference_gemm(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for l in 0..k {
+            let a = x[i * k + l];
+            if a == 0.0 {
+                continue;
+            }
+            let wrow = &w[l * n..(l + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += a * wrow[j];
+            }
+        }
+    }
+    if let Some(b) = bias {
+        for i in 0..m {
+            for j in 0..n {
+                out[i * n + j] += b[j];
+            }
+        }
+    }
+    if relu {
+        for v in out.iter_mut() {
+            *v = v.max(0.0);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_gemm_known_values() {
+        // [[1,2],[3,4]] @ [[1,0],[0,1]] = identity passthrough.
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let w = [1.0, 0.0, 0.0, 1.0];
+        assert_eq!(reference_gemm(&x, &w, None, 2, 2, 2, false), x);
+        // With bias and relu.
+        let out =
+            reference_gemm(&x, &w, Some(&[-10.0, 0.0]), 2, 2, 2, true);
+        assert_eq!(out, [0.0, 2.0, 0.0, 4.0]);
+    }
+
+    // PJRT-backed tests live in rust/tests/e2e_runtime.rs (they need
+    // `make artifacts` to have run).
+}

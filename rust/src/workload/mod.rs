@@ -1,0 +1,194 @@
+//! Workload IR: the machine-learning task of paper §4.2.2 — a
+//! topologically-ordered sequence of GEMM operators with synchronization
+//! and sharing attributes, plus the model zoo used in the evaluation
+//! (AlexNet, ViT, Vision Mamba, HydraNet).
+
+pub mod models;
+
+/// One GEMM operator: `OP_i = {M, K, N, sync, shared_row, shared_col}`
+/// (eq. 2) plus execution attributes the co-optimizations need.
+#[derive(Debug, Clone)]
+pub struct GemmOp {
+    pub name: String,
+    /// Output rows (input dimension M).
+    pub m: usize,
+    /// Contraction (hidden) dimension.
+    pub k: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Output must be synchronized across chiplets before the next op
+    /// (softmax / layer-norm style reductions).
+    pub sync: bool,
+    /// Chiplets of the same grid row produce the same output rows.
+    pub shared_row: bool,
+    /// Chiplets of the same grid column produce the same output columns.
+    pub shared_col: bool,
+    /// Fused ReLU epilogue (computed in the chiplet SIMD unit).
+    pub relu: bool,
+    /// Input activations are the previous op's output (enables §5.2
+    /// on-package redistribution instead of a memory round-trip).
+    pub chained: bool,
+    /// Grouped GEMM factor (attention heads). Redistribution only applies
+    /// to plain GEMMs (`groups == 1`); grouped ops keep complex head-wise
+    /// data mappings (§7.1).
+    pub groups: usize,
+}
+
+impl GemmOp {
+    /// Plain dense layer.
+    pub fn dense(name: &str, m: usize, k: usize, n: usize) -> Self {
+        GemmOp {
+            name: name.to_string(),
+            m,
+            k,
+            n,
+            sync: false,
+            shared_row: true,
+            shared_col: true,
+            relu: false,
+            chained: false,
+            groups: 1,
+        }
+    }
+
+    pub fn relu(mut self) -> Self {
+        self.relu = true;
+        self
+    }
+
+    pub fn chained(mut self) -> Self {
+        self.chained = true;
+        self
+    }
+
+    pub fn sync(mut self) -> Self {
+        self.sync = true;
+        self
+    }
+
+    pub fn grouped(mut self, groups: usize) -> Self {
+        assert!(groups >= 1);
+        self.groups = groups;
+        self
+    }
+
+    /// MACs for this op (per sample).
+    pub fn macs(&self) -> usize {
+        self.m * self.k * self.n
+    }
+
+    /// Element counts (input, weight, output).
+    pub fn elems(&self) -> (usize, usize, usize) {
+        (self.m * self.k, self.k * self.n, self.m * self.n)
+    }
+
+    /// Redistribution between this op and the next is legal only for
+    /// chained plain GEMMs (the next op consumes exactly this output).
+    pub fn redistributable_to(&self, next: &GemmOp) -> bool {
+        next.chained && self.groups == 1 && next.groups == 1 && !self.sync
+    }
+}
+
+/// A workload: named, ordered GEMM sequence (one topological order of the
+/// model DAG, §4.2.2).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub ops: Vec<GemmOp>,
+}
+
+impl Workload {
+    pub fn new(name: &str, ops: Vec<GemmOp>) -> Self {
+        let w = Workload { name: name.to_string(), ops };
+        w.validate().expect("invalid workload");
+        w
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.ops.is_empty() {
+            return Err(format!("workload '{}' has no ops", self.name));
+        }
+        for (i, op) in self.ops.iter().enumerate() {
+            if op.m == 0 || op.k == 0 || op.n == 0 {
+                return Err(format!("op {i} '{}' has a zero dim", op.name));
+            }
+            if op.groups == 0 || op.k % op.groups != 0 {
+                // groups partition the contraction/head dim layout; we
+                // only require divisibility of K for grouped ops.
+                if op.groups != 1 {
+                    return Err(format!(
+                        "op {i} '{}': K={} not divisible by groups={}",
+                        op.name, op.k, op.groups
+                    ));
+                }
+            }
+            if i == 0 && op.chained {
+                return Err("first op cannot be chained".into());
+            }
+        }
+        Ok(())
+    }
+
+    pub fn total_macs(&self) -> usize {
+        self.ops.iter().map(|o| o.macs()).sum()
+    }
+
+    /// Indices `i` such that ops[i] -> ops[i+1] is redistributable.
+    pub fn redistributable_pairs(&self) -> Vec<usize> {
+        (0..self.ops.len().saturating_sub(1))
+            .filter(|&i| self.ops[i].redistributable_to(&self.ops[i + 1]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_flags() {
+        let op = GemmOp::dense("l", 8, 16, 32).relu().sync().grouped(4);
+        assert!(op.relu && op.sync);
+        assert_eq!(op.groups, 4);
+        assert_eq!(op.macs(), 8 * 16 * 32);
+        assert_eq!(op.elems(), (128, 512, 256));
+    }
+
+    #[test]
+    fn chained_chain_accepted() {
+        let a = GemmOp::dense("a", 8, 16, 32);
+        let ok = GemmOp::dense("b", 8, 32, 64).chained();
+        assert!(Workload::new("w", vec![a, ok]).validate().is_ok());
+    }
+
+    #[test]
+    fn first_op_cannot_chain() {
+        let w = Workload {
+            name: "w".into(),
+            ops: vec![GemmOp::dense("a", 8, 16, 32).chained()],
+        };
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn redistributable_pairs_respect_groups_and_sync() {
+        let ops = vec![
+            GemmOp::dense("a", 8, 16, 32),
+            GemmOp::dense("b", 8, 32, 32).chained(),
+            GemmOp::dense("c", 8, 32, 16).chained().grouped(4).sync(),
+            GemmOp::dense("d", 8, 16, 16).chained(),
+        ];
+        let w = Workload::new("w", ops);
+        // a->b ok; b->c blocked (c grouped); c->d blocked (c sync+grouped).
+        assert_eq!(w.redistributable_pairs(), vec![0]);
+    }
+
+    #[test]
+    fn zero_dim_rejected() {
+        let w = Workload {
+            name: "w".into(),
+            ops: vec![GemmOp::dense("a", 0, 16, 32)],
+        };
+        assert!(w.validate().is_err());
+    }
+}

@@ -1,0 +1,62 @@
+//! AlexNet (Krizhevsky et al., 2012) as an im2col GEMM sequence.
+//!
+//! Conv layer -> GEMM: M = batch * OH * OW, K = Cin * KH * KW, N = Cout.
+//! Every layer consumes only the previous layer's activations plus static
+//! weights, so the whole network is `chained` — the structure the paper
+//! says benefits most from on-package redistribution (§7.1).
+
+use crate::workload::{GemmOp, Workload};
+
+pub fn alexnet(batch: usize) -> Workload {
+    assert!(batch >= 1);
+    let b = batch;
+    let ops = vec![
+        // conv1: 224x224x3, 96 filters 11x11 stride 4 -> 55x55.
+        GemmOp::dense("conv1", b * 55 * 55, 11 * 11 * 3, 96).relu(),
+        // conv2 (after 3x3/2 pool -> 27x27): 256 filters 5x5, pad 2.
+        GemmOp::dense("conv2", b * 27 * 27, 5 * 5 * 96, 256)
+            .relu()
+            .chained(),
+        // conv3 (after pool -> 13x13): 384 filters 3x3.
+        GemmOp::dense("conv3", b * 13 * 13, 3 * 3 * 256, 384)
+            .relu()
+            .chained(),
+        GemmOp::dense("conv4", b * 13 * 13, 3 * 3 * 384, 384)
+            .relu()
+            .chained(),
+        GemmOp::dense("conv5", b * 13 * 13, 3 * 3 * 384, 256)
+            .relu()
+            .chained(),
+        // fc6 (after pool -> 6x6x256 = 9216).
+        GemmOp::dense("fc6", b, 9216, 4096).relu().chained(),
+        GemmOp::dense("fc7", b, 4096, 4096).relu().chained(),
+        GemmOp::dense("fc8", b, 4096, 1000).chained(),
+    ];
+    Workload::new("alexnet", ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_layer_dims() {
+        let w = alexnet(1);
+        assert_eq!(w.ops.len(), 8);
+        assert_eq!((w.ops[0].m, w.ops[0].k, w.ops[0].n), (3025, 363, 96));
+        assert_eq!((w.ops[5].m, w.ops[5].k, w.ops[5].n), (1, 9216, 4096));
+    }
+
+    #[test]
+    fn total_macs_close_to_published() {
+        // AlexNet ~ 0.7-1.1 GMAC/image depending on accounting.
+        let macs = alexnet(1).total_macs() as f64;
+        assert!(macs > 0.5e9 && macs < 1.5e9, "macs={macs}");
+    }
+
+    #[test]
+    fn fully_chained_after_first() {
+        let w = alexnet(1);
+        assert_eq!(w.redistributable_pairs().len(), w.ops.len() - 1);
+    }
+}

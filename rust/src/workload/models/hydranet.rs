@@ -1,0 +1,80 @@
+//! HydraNet-style multi-task vision network (Tesla self-driving stack).
+//!
+//! The production model is proprietary; per DESIGN.md §Substitutions we
+//! build the published shape: a shared convolutional backbone (RegNet-ish
+//! stages, im2col GEMMs) feeding a BiFPN-like fusion layer and three task
+//! heads (detection, lane/line, traffic-light). Heads branch from the
+//! same feature map, so the ops at branch points are *not* chained —
+//! exactly the mixed structure the paper's end-to-end scheduler must
+//! handle.
+
+use crate::workload::{GemmOp, Workload};
+
+pub fn hydranet(batch: usize) -> Workload {
+    assert!(batch >= 1);
+    let b = batch;
+    let mut ops = Vec::new();
+    // Backbone: 4 stages at decreasing resolution (input 320x240-ish).
+    // stage1: 80x60 spatial, 3x3 convs.
+    ops.push(GemmOp::dense("stem", b * 80 * 60, 7 * 7 * 3, 32).relu());
+    ops.push(GemmOp::dense("s1.conv", b * 80 * 60, 3 * 3 * 32, 64)
+        .relu()
+        .chained());
+    ops.push(GemmOp::dense("s2.conv1", b * 40 * 30, 3 * 3 * 64, 128)
+        .relu()
+        .chained());
+    ops.push(GemmOp::dense("s2.conv2", b * 40 * 30, 3 * 3 * 128, 128)
+        .relu()
+        .chained());
+    ops.push(GemmOp::dense("s3.conv1", b * 20 * 15, 3 * 3 * 128, 256)
+        .relu()
+        .chained());
+    ops.push(GemmOp::dense("s3.conv2", b * 20 * 15, 3 * 3 * 256, 256)
+        .relu()
+        .chained());
+    ops.push(GemmOp::dense("s4.conv", b * 10 * 8, 3 * 3 * 256, 512)
+        .relu()
+        .chained());
+    // Multi-scale fusion (BiFPN-ish 1x1 mixes) — needs features from
+    // several stages, so it synchronizes and is not chained.
+    ops.push(GemmOp::dense("fpn.mix", b * 10 * 8, 512 + 256, 256)
+        .relu()
+        .sync());
+    // Three heads branch from fpn.mix: only the first can be chained
+    // (consumes the live output); the others re-read the shared feature
+    // map (non-chained by construction).
+    ops.push(GemmOp::dense("det.conv", b * 10 * 8, 3 * 3 * 256, 256)
+        .relu()
+        .chained());
+    ops.push(GemmOp::dense("det.out", b * 10 * 8, 256, 6 * 9).chained());
+    ops.push(GemmOp::dense("lane.conv", b * 20 * 15, 3 * 3 * 256, 128)
+        .relu());
+    ops.push(GemmOp::dense("lane.out", b * 20 * 15, 128, 8).chained());
+    ops.push(GemmOp::dense("light.conv", b * 10 * 8, 3 * 3 * 256, 128)
+        .relu());
+    ops.push(GemmOp::dense("light.out", b * 10 * 8, 128, 16).chained());
+    Workload::new("hydranet", ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_branching_structure() {
+        let w = hydranet(1);
+        assert!(w.validate().is_ok());
+        // Branch points (lane.conv, light.conv) are not chained.
+        let lane = w.ops.iter().find(|o| o.name == "lane.conv").unwrap();
+        let light = w.ops.iter().find(|o| o.name == "light.conv").unwrap();
+        assert!(!lane.chained && !light.chained);
+        // But the backbone is a chain.
+        assert!(w.ops[1].chained && w.ops[6].chained);
+    }
+
+    #[test]
+    fn macs_in_edge_model_range() {
+        let macs = hydranet(1).total_macs() as f64;
+        assert!(macs > 0.5e9 && macs < 10e9, "macs={macs}");
+    }
+}

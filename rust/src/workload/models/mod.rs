@@ -1,0 +1,105 @@
+//! Model zoo: the four evaluation workloads of paper §7 expressed as
+//! GEMM sequences (convolutions via im2col, attention as grouped GEMMs).
+//!
+//! Batch size multiplies the GEMM M dimension for convolutional/spatial
+//! ops and the token dimension for sequence models, matching the paper's
+//! "different batch sizes" experiments (Figure 11).
+
+mod alexnet;
+mod hydranet;
+mod vision_mamba;
+mod vit;
+
+pub use alexnet::alexnet;
+pub use hydranet::hydranet;
+pub use vision_mamba::vision_mamba;
+pub use vit::vit;
+
+use super::Workload;
+
+/// The paper's evaluation suite at a given batch size.
+pub fn evaluation_suite(batch: usize) -> Vec<Workload> {
+    vec![
+        alexnet(batch),
+        vit(batch),
+        vision_mamba(batch),
+        hydranet(batch),
+    ]
+}
+
+/// Scale a workload's dims by `1/s` (floored at `floor`), preserving
+/// structure — used by the end-to-end runtime example to keep the
+/// interpret-mode GEMMs small while exercising the identical schedule.
+pub fn scaled_down(w: &Workload, s: usize, floor: usize) -> Workload {
+    let ops = w
+        .ops
+        .iter()
+        .map(|op| {
+            let mut o = op.clone();
+            o.m = (op.m / s).max(floor);
+            o.k = (op.k / s).max(floor);
+            o.n = (op.n / s).max(floor);
+            if o.groups > 1 {
+                o.groups = o.groups.min(o.k); // keep divisibility sane
+                while o.k % o.groups != 0 {
+                    o.groups -= 1;
+                }
+            }
+            o
+        })
+        .collect();
+    Workload::new(&format!("{}-mini", w.name), ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_builds_and_validates() {
+        for w in evaluation_suite(1) {
+            assert!(w.validate().is_ok(), "{} invalid", w.name);
+            assert!(w.total_macs() > 0);
+        }
+    }
+
+    #[test]
+    fn batch_scales_m() {
+        let b1 = alexnet(1);
+        let b4 = alexnet(4);
+        for (a, b) in b1.ops.iter().zip(&b4.ops) {
+            assert_eq!(a.k, b.k);
+            assert_eq!(a.n, b.n);
+            assert_eq!(a.m * 4, b.m, "op {}", a.name);
+        }
+    }
+
+    #[test]
+    fn alexnet_is_the_most_sequential() {
+        // §7.1: AlexNet has the most chained (redistributable) structure.
+        let suite = evaluation_suite(1);
+        let frac = |w: &Workload| {
+            w.redistributable_pairs().len() as f64 / (w.ops.len() - 1) as f64
+        };
+        let alex = frac(&suite[0]);
+        for other in &suite[1..] {
+            assert!(
+                alex >= frac(other),
+                "alexnet ({alex}) should chain at least as much as {}",
+                other.name
+            );
+        }
+    }
+
+    #[test]
+    fn scaled_down_preserves_structure() {
+        let w = vit(1);
+        let s = scaled_down(&w, 8, 16);
+        assert_eq!(w.ops.len(), s.ops.len());
+        for (a, b) in w.ops.iter().zip(&s.ops) {
+            assert_eq!(a.chained, b.chained);
+            assert!(b.m >= 16 && b.k >= 16 && b.n >= 16);
+            assert_eq!(b.k % b.groups, 0);
+        }
+    }
+}

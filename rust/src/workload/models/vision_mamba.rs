@@ -1,0 +1,67 @@
+//! Vision Mamba (Vim-S-like) as a GEMM sequence.
+//!
+//! Vim blocks use linear-attention-style state-space mixing: input
+//! projection (expand 2x), the selective-scan parameter projections
+//! (B, C, dt), the SSM mix itself (modeled as a grouped linear-attention
+//! GEMM, as the paper describes: "vision mamba which utilized linear
+//! attention"), and the output projection. Like ViT, only the plain
+//! projections are redistributable.
+
+use crate::workload::{GemmOp, Workload};
+
+const SEQ: usize = 197;
+const D: usize = 384; // Vim-S embed dim
+const E: usize = 2 * D; // expanded inner dim
+const STATE: usize = 16; // SSM state size
+const BLOCKS: usize = 12;
+
+pub fn vision_mamba(batch: usize) -> Workload {
+    assert!(batch >= 1);
+    let s = batch * SEQ;
+    let mut ops = Vec::new();
+    ops.push(GemmOp::dense("patch_embed", s, 16 * 16 * 3, D));
+    for blk in 0..BLOCKS {
+        let p = |stage: &str| format!("blk{blk}.{stage}");
+        // in_proj produces both the SSM stream and the gate (2E). The
+        // norm boundary *before* the block is a sync on the previous
+        // op's output, so in_proj itself is a plain GEMM.
+        ops.push(GemmOp::dense(&p("in_proj"), s, D, 2 * E));
+        // x_proj: dt, B, C parameters from the stream.
+        ops.push(GemmOp::dense(&p("x_proj"), s, E, STATE * 2 + E / 8)
+            .chained());
+        // dt_proj: rank -> E.
+        ops.push(GemmOp::dense(&p("dt_proj"), s, E / 8, E));
+        // SSM mix as linear attention: per-channel-group state updates,
+        // grouped like heads; needs a sync (scan order) barrier after.
+        ops.push(
+            GemmOp::dense(&p("ssm_mix"), s, STATE * 8, E)
+                .grouped(8)
+                .sync(),
+        );
+        // out_proj output hits the next block's norm -> sync.
+        ops.push(GemmOp::dense(&p("out_proj"), s, E, D).chained().sync());
+    }
+    ops.push(GemmOp::dense("head", batch, D, 1000));
+    Workload::new("vision_mamba", ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure() {
+        let w = vision_mamba(1);
+        assert_eq!(w.ops.len(), 2 + 5 * BLOCKS);
+        assert!(w.validate().is_ok());
+        // Redistribution exists but is sparser than AlexNet.
+        let r = w.redistributable_pairs().len();
+        assert!(r > 0 && r < w.ops.len() - 1);
+    }
+
+    #[test]
+    fn macs_in_small_vision_model_range() {
+        let macs = vision_mamba(1).total_macs() as f64;
+        assert!(macs > 0.3e9 && macs < 5e9, "macs={macs}");
+    }
+}

@@ -1,0 +1,81 @@
+//! ViT-Base/16 at 224x224 as a GEMM sequence.
+//!
+//! Attention is expressed as grouped GEMMs over the 12 heads: the paper
+//! notes grouped operators keep complex head-wise mappings, so
+//! redistribution applies only to the (plain) MLP projections (§7.1).
+//! Softmax / layer-norm boundaries are `sync` ops.
+
+use crate::workload::{GemmOp, Workload};
+
+const SEQ: usize = 197; // 196 patches + CLS
+const D: usize = 768;
+const HEADS: usize = 12;
+const HEAD_D: usize = D / HEADS;
+const MLP: usize = 3072;
+const BLOCKS: usize = 12;
+
+pub fn vit(batch: usize) -> Workload {
+    assert!(batch >= 1);
+    let s = batch * SEQ;
+    let mut ops = Vec::new();
+    // Patch embedding: 16x16x3 patches -> D.
+    ops.push(GemmOp::dense("patch_embed", s, 16 * 16 * 3, D));
+    for blk in 0..BLOCKS {
+        let p = |stage: &str| format!("blk{blk}.{stage}");
+        // LN precedes qkv -> sync on the producer side is modeled by the
+        // qkv op being non-chained (activations re-read post-norm).
+        ops.push(GemmOp::dense(&p("qkv"), s, D, 3 * D).sync());
+        // scores = Q K^T per head: M = seq, K = head_d, N = seq.
+        ops.push(
+            GemmOp::dense(&p("scores"), s, HEAD_D * HEADS, SEQ)
+                .grouped(HEADS)
+                .sync(), // softmax afterwards
+        );
+        // context = softmax(scores) V per head.
+        ops.push(
+            GemmOp::dense(&p("attn_v"), s, SEQ * HEADS, HEAD_D)
+                .grouped(HEADS),
+        );
+        ops.push(GemmOp::dense(&p("proj"), s, D, D).chained());
+        // MLP (LN boundary -> sync on fc1).
+        ops.push(GemmOp::dense(&p("fc1"), s, D, MLP).relu().sync());
+        ops.push(GemmOp::dense(&p("fc2"), s, MLP, D).chained());
+    }
+    ops.push(GemmOp::dense("head", batch, D, 1000));
+    Workload::new("vit", ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_count_and_dims() {
+        let w = vit(1);
+        assert_eq!(w.ops.len(), 2 + 6 * BLOCKS);
+        let qkv = &w.ops[1];
+        assert_eq!((qkv.m, qkv.k, qkv.n), (197, 768, 2304));
+        let scores = &w.ops[2];
+        assert_eq!(scores.groups, HEADS);
+    }
+
+    #[test]
+    fn total_macs_close_to_published() {
+        // ViT-B/16 is published at 17.6 "GFLOPs" (MAC = 1 FLOP
+        // convention, ~= params 86M x seq 197); we model matmuls only.
+        let macs = vit(1).total_macs() as f64;
+        assert!(macs > 14e9 && macs < 21e9, "macs={macs}");
+    }
+
+    #[test]
+    fn redistribution_only_in_mlp_and_proj() {
+        let w = vit(1);
+        for i in w.redistributable_pairs() {
+            let nxt = &w.ops[i + 1].name;
+            assert!(
+                nxt.contains("proj") || nxt.contains("fc2"),
+                "unexpected redistributable edge into {nxt}"
+            );
+        }
+    }
+}

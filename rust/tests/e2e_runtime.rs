@@ -1,0 +1,134 @@
+//! PJRT-backed end-to-end tests: AOT artifacts -> runtime -> executor.
+//! These need `make artifacts` to have been run (skipped gracefully
+//! otherwise so `cargo test` works on a fresh checkout).
+
+use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::coordinator::Executor;
+use mcmcomm::opt::{run_scheme, Scheme, SchedulerConfig};
+use mcmcomm::runtime::pjrt::reference_gemm;
+use mcmcomm::runtime::{GemmRuntime, Manifest};
+use mcmcomm::topology::Topology;
+use mcmcomm::util::rng::Pcg;
+use mcmcomm::workload::models::{alexnet, scaled_down, vit};
+
+fn runtime_or_skip() -> Option<GemmRuntime> {
+    let dir = Manifest::default_dir();
+    match GemmRuntime::new(&dir) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+fn rand_mat(rng: &mut Pcg, r: usize, c: usize) -> Vec<f32> {
+    (0..r * c).map(|_| rng.normal() as f32).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_gemm_matches_reference_exact_bucket() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg::seeded(1);
+    let (m, k, n) = (16, 16, 16);
+    let x = rand_mat(&mut rng, m, k);
+    let w = rand_mat(&mut rng, k, n);
+    let b = rand_mat(&mut rng, 1, n);
+    let got = rt.gemm(&x, &w, Some(&b), m, k, n, false).unwrap();
+    let want = reference_gemm(&x, &w, Some(&b), m, k, n, false);
+    assert_close(&got, &want, 1e-4, "exact bucket");
+}
+
+#[test]
+fn pjrt_gemm_matches_reference_padded_and_relu() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg::seeded(2);
+    // Ragged dims force padding into the 64/256 buckets.
+    for (m, k, n, relu) in
+        [(10, 20, 30, false), (17, 100, 50, true), (200, 33, 7, true)]
+    {
+        let x = rand_mat(&mut rng, m, k);
+        let w = rand_mat(&mut rng, k, n);
+        let b = rand_mat(&mut rng, 1, n);
+        let got = rt.gemm(&x, &w, Some(&b), m, k, n, relu).unwrap();
+        let want = reference_gemm(&x, &w, Some(&b), m, k, n, relu);
+        assert_close(&got, &want, 1e-4, "padded");
+    }
+}
+
+#[test]
+fn pjrt_gemm_no_bias() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg::seeded(3);
+    let (m, k, n) = (32, 48, 24);
+    let x = rand_mat(&mut rng, m, k);
+    let w = rand_mat(&mut rng, k, n);
+    let got = rt.gemm(&x, &w, None, m, k, n, false).unwrap();
+    let want = reference_gemm(&x, &w, None, m, k, n, false);
+    assert_close(&got, &want, 1e-4, "no bias");
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg::seeded(4);
+    let x = rand_mat(&mut rng, 16, 16);
+    let w = rand_mat(&mut rng, 16, 16);
+    let before = rt.compiled_count();
+    for _ in 0..5 {
+        rt.gemm(&x, &w, None, 16, 16, 16, false).unwrap();
+    }
+    assert_eq!(rt.compiled_count(), before + 1, "one bucket, one compile");
+}
+
+#[test]
+fn executor_runs_alexnet_mini_with_verified_numerics() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let wl = scaled_down(&alexnet(1), 16, 16);
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let cfg = SchedulerConfig::default();
+    let out = run_scheme(Scheme::Baseline, &hw, &topo, &wl, &cfg);
+    let exec = Executor::new(&hw, &topo, &wl, &out.alloc, out.flags, &rt);
+    let report = exec.run(7, true).unwrap();
+    assert!(report.chunks_executed > 0);
+    assert!(
+        report.max_abs_err < 1e-3,
+        "PJRT vs CPU mismatch: {}",
+        report.max_abs_err
+    );
+    assert!(report.modeled.latency_ns > 0.0);
+    assert!(!report.output.is_empty());
+}
+
+#[test]
+fn executor_identical_output_across_schedules() {
+    // Different partitions must not change the numerics: the output is
+    // schedule-invariant.
+    let Some(rt) = runtime_or_skip() else { return };
+    let wl = scaled_down(&vit(1), 32, 16);
+    let wl = mcmcomm::workload::Workload::new("vit-head",
+                                              wl.ops[..4].to_vec());
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let cfg = SchedulerConfig::default();
+    let base = run_scheme(Scheme::Baseline, &hw, &topo, &wl, &cfg);
+    let simba = run_scheme(Scheme::SimbaLike, &hw, &topo, &wl, &cfg);
+    let r1 = Executor::new(&hw, &topo, &wl, &base.alloc, base.flags, &rt)
+        .run(11, false)
+        .unwrap();
+    let r2 = Executor::new(&hw, &topo, &wl, &simba.alloc, simba.flags, &rt)
+        .run(11, false)
+        .unwrap();
+    assert_close(&r1.output, &r2.output, 1e-4, "schedule invariance");
+}

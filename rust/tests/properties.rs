@@ -1,0 +1,368 @@
+//! Property-based tests on L3 invariants (routing, partitioning,
+//! batching/scheduling, cost-model structure), using the in-repo
+//! propcheck substrate.
+
+use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::cost::evaluator::{evaluate, OptFlags};
+use mcmcomm::partition::{
+    dim_bounds, project_to_sum, proportional_split, uniform_allocation,
+    Allocation, Partition,
+};
+use mcmcomm::pipeline::{batch_tasks, list_schedule, validate_schedule};
+use mcmcomm::prop_assert;
+use mcmcomm::topology::links::LinkGraph;
+use mcmcomm::topology::{Pos, Topology};
+use mcmcomm::util::propcheck::{forall, gens};
+use mcmcomm::util::rng::Pcg;
+use mcmcomm::workload::{GemmOp, Workload};
+
+fn rand_type(rng: &mut Pcg) -> SystemType {
+    *rng.choose(&SystemType::ALL)
+}
+
+#[test]
+fn prop_local_index_within_grid() {
+    forall(
+        300,
+        0xA1,
+        |rng| {
+            let x = rng.range_usize(1, 8);
+            let y = rng.range_usize(1, 8);
+            let ty = rand_type(rng);
+            if ty == SystemType::D && (x < 2 || y < 2) {
+                return (SystemType::A, x, y);
+            }
+            (ty, x, y)
+        },
+        |&(ty, x, y)| {
+            let t = Topology::new(ty, x, y);
+            for p in t.positions() {
+                let l = t.local_index(p);
+                prop_assert!(l.x < x && l.y < y, "index {l:?} out of {x}x{y}");
+                let (rx, ry) = t.region_extent(p);
+                prop_assert!(l.x < rx && l.y < ry,
+                             "local index outside region extent");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_routes_connect_and_are_minimal() {
+    forall(
+        120,
+        0xA2,
+        |rng| {
+            let n = rng.range_usize(2, 6);
+            let diagonal = rng.chance(0.5);
+            let a = (rng.range_usize(0, n - 1), rng.range_usize(0, n - 1));
+            let b = (rng.range_usize(0, n - 1), rng.range_usize(0, n - 1));
+            (n, diagonal, a, b)
+        },
+        |&(n, diagonal, a, b)| {
+            let g = LinkGraph::mesh(n, n, diagonal, 60.0);
+            let src = g.chiplet_id(Pos::new(a.0, a.1));
+            let dst = g.chiplet_id(Pos::new(b.0, b.1));
+            let path = g.route(src, dst);
+            // Chained and of minimal length.
+            let mut cur = src;
+            for &l in &path {
+                prop_assert!(g.links[l].from == cur, "broken chain");
+                cur = g.links[l].to;
+            }
+            prop_assert!(cur == dst, "route does not reach dst");
+            let dr = a.0.abs_diff(b.0);
+            let dc = a.1.abs_diff(b.1);
+            let want = if diagonal { dr.max(dc) } else { dr + dc };
+            prop_assert!(path.len() == want,
+                         "path len {} != {want}", path.len());
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_proportional_split_exact_sum() {
+    forall(
+        300,
+        0xA3,
+        |rng| {
+            let parts = rng.range_usize(1, 9);
+            let total = rng.range_usize(0, 5000);
+            let weights: Vec<f64> =
+                (0..parts).map(|_| rng.f64() * 10.0).collect();
+            (total, weights)
+        },
+        |(total, weights)| {
+            let s = proportional_split(*total, weights);
+            prop_assert!(s.iter().sum::<usize>() == *total, "sum mismatch");
+            prop_assert!(s.len() == weights.len(), "arity mismatch");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_project_to_sum_feasible() {
+    forall(
+        300,
+        0xA4,
+        |rng| {
+            let parts = rng.range_usize(2, 8);
+            let tile = *rng.choose(&[8usize, 16, 32]);
+            let total = rng.range_usize(parts, 4000);
+            let vals = gens::composition(rng, total + 100, parts);
+            (parts, tile, total, vals)
+        },
+        |(parts, tile, total, vals)| {
+            let b = dim_bounds(*total, *parts, *tile);
+            let mut v = vals.clone();
+            project_to_sum(&mut v, *total, b);
+            prop_assert!(v.iter().sum::<usize>() == *total,
+                         "projection lost the sum");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_random_valid_allocations_evaluate_finite() {
+    forall(
+        60,
+        0xA5,
+        |rng| {
+            let ty = rand_type(rng);
+            let mem = if rng.chance(0.5) { MemKind::Hbm } else { MemKind::Dram };
+            let m = rng.range_usize(1, 2000);
+            let k = rng.range_usize(1, 2000);
+            let n = rng.range_usize(1, 2000);
+            let seed = rng.next_u64();
+            (ty, mem, m, k, n, seed)
+        },
+        |&(ty, mem, m, k, n, seed)| {
+            let hw = HwConfig::paper(ty, mem, 4);
+            let topo = Topology::from_hw(&hw);
+            let wl = Workload::new("w", vec![GemmOp::dense("a", m, k, n)]);
+            let mut rng = Pcg::seeded(seed);
+            let px = gens::composition(&mut rng, m, 4);
+            let py = gens::composition(&mut rng, n, 4);
+            let alloc = Allocation {
+                parts: vec![Partition { px, py }],
+                collect_cols: vec![rng.range_usize(0, 3)],
+            };
+            prop_assert!(alloc.validate(&wl, &hw).is_ok(), "invalid alloc");
+            for flags in [OptFlags::NONE, OptFlags::ALL] {
+                let c = evaluate(&hw, &topo, &wl, &alloc, flags);
+                prop_assert!(
+                    c.latency_ns.is_finite() && c.latency_ns > 0.0,
+                    "latency {} not finite-positive", c.latency_ns
+                );
+                prop_assert!(c.energy_pj.is_finite() && c.energy_pj > 0.0,
+                             "energy invalid");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_optimizations_never_hurt() {
+    // The §5 co-optimizations adaptively fall back to the baseline
+    // strategy, so enabling them can never increase modeled latency.
+    forall(
+        40,
+        0xA6,
+        |rng| {
+            let ty = rand_type(rng);
+            let mem =
+                if rng.chance(0.5) { MemKind::Hbm } else { MemKind::Dram };
+            let n_ops = rng.range_usize(1, 5);
+            (ty, mem, n_ops, rng.next_u64())
+        },
+        |&(ty, mem, n_ops, seed)| {
+            let hw = HwConfig::paper(ty, mem, 4);
+            let topo = Topology::from_hw(&hw);
+            let mut rng = Pcg::seeded(seed);
+            let mut ops = Vec::new();
+            for i in 0..n_ops {
+                let mut op = GemmOp::dense(
+                    &format!("op{i}"),
+                    rng.range_usize(16, 1024),
+                    rng.range_usize(16, 1024),
+                    rng.range_usize(16, 1024),
+                );
+                if i > 0 && rng.chance(0.6) {
+                    op = op.chained();
+                }
+                ops.push(op);
+            }
+            let wl = Workload::new("w", ops);
+            let alloc = uniform_allocation(&hw, &wl);
+            let base = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
+            let opt = evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL);
+            prop_assert!(
+                opt.latency_ns <= base.latency_ns * 1.0001,
+                "optimizations hurt: {} > {}",
+                opt.latency_ns,
+                base.latency_ns
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_schedules_always_valid() {
+    forall(
+        60,
+        0xA7,
+        |rng| {
+            let n_ops = rng.range_usize(1, 4);
+            let batch = rng.range_usize(1, 6);
+            (n_ops, batch, rng.next_u64())
+        },
+        |&(n_ops, batch, seed)| {
+            let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+            let topo = Topology::from_hw(&hw);
+            let mut rng = Pcg::seeded(seed);
+            let ops = (0..n_ops)
+                .map(|i| {
+                    GemmOp::dense(
+                        &format!("op{i}"),
+                        rng.range_usize(16, 512),
+                        rng.range_usize(16, 512),
+                        rng.range_usize(16, 512),
+                    )
+                })
+                .collect();
+            let wl = Workload::new("w", ops);
+            let alloc = uniform_allocation(&hw, &wl);
+            let cost = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
+            let tasks = batch_tasks(&cost, batch);
+            let s = list_schedule(&tasks);
+            validate_schedule(&tasks, &s).map_err(|e| e)?;
+            prop_assert!(
+                s.makespan <= cost.latency_ns * batch as f64 + 1e-6,
+                "pipelined worse than sequential"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_best_collect_col_is_argmin() {
+    use mcmcomm::redistribution::{best_collect_col, redistribute};
+    forall(
+        80,
+        0xA8,
+        |rng| {
+            let m = rng.range_usize(4, 800);
+            let n = rng.range_usize(4, 800);
+            (m, n, rng.next_u64())
+        },
+        |&(m, n, seed)| {
+            let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+            let op = GemmOp::dense("a", m, 64, n);
+            let mut rng = Pcg::seeded(seed);
+            let p = Partition {
+                px: gens::composition(&mut rng, m, 4),
+                py: gens::composition(&mut rng, n, 4),
+            };
+            let q = Partition {
+                px: gens::composition(&mut rng, m, 4),
+                py: p.py.clone(),
+            };
+            let best = best_collect_col(&hw, &op, &p, &q);
+            let best_cost = redistribute(&hw, &op, &p, &q, best).total_ns();
+            for c in 0..4 {
+                let cost = redistribute(&hw, &op, &p, &q, c).total_ns();
+                prop_assert!(
+                    best_cost <= cost + 1e-9,
+                    "col {c} ({cost}) beats chosen {best} ({best_cost})"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_netsim_conserves_bytes_on_memory_link() {
+    use mcmcomm::netsim::{simulate, Flow};
+    forall(
+        40,
+        0xA9,
+        |rng| {
+            let n = rng.range_usize(2, 5);
+            let flows = rng.range_usize(1, 6);
+            (n, flows, rng.next_u64())
+        },
+        |&(n, nf, seed)| {
+            let mut rng = Pcg::seeded(seed);
+            let mut g = LinkGraph::mesh(n, n, false, 60.0);
+            let attach = Pos::new(
+                rng.range_usize(0, n - 1),
+                rng.range_usize(0, n - 1),
+            );
+            let mem = g.attach_memory(attach, 200.0);
+            let flows: Vec<Flow> = (0..nf)
+                .map(|_| Flow {
+                    src: mem,
+                    dst: rng.range_usize(0, n * n - 1),
+                    bytes: rng.range_usize(1, 100_000) as f64,
+                })
+                .collect();
+            let res = simulate(&g, &flows);
+            let expected: f64 = flows.iter().map(|f| f.bytes).sum();
+            let mem_out: f64 = g
+                .links
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.from == mem)
+                .map(|(i, _)| res.link_bytes[i])
+                .sum();
+            prop_assert!(
+                (mem_out - expected).abs() < 1.0,
+                "memory link carried {mem_out}, expected {expected}"
+            );
+            for (i, f) in flows.iter().enumerate() {
+                prop_assert!(
+                    res.flow_finish_ns[i] >= f.bytes / 200.0 - 1e-6,
+                    "flow {i} finished faster than line rate"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_evaluator_latency_monotone_in_bandwidth() {
+    // More NoP bandwidth can never make the modeled latency worse.
+    forall(
+        40,
+        0xAA,
+        |rng| {
+            let m = rng.range_usize(64, 2048);
+            let k = rng.range_usize(64, 2048);
+            let n = rng.range_usize(64, 2048);
+            (m, k, n)
+        },
+        |&(m, k, n)| {
+            let wl = Workload::new("w", vec![GemmOp::dense("a", m, k, n)]);
+            let mut hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+            let topo = Topology::from_hw(&hw);
+            let alloc = uniform_allocation(&hw, &wl);
+            let slow = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
+            hw.bw_nop *= 2.0;
+            let fast = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
+            prop_assert!(
+                fast.latency_ns <= slow.latency_ns + 1e-9,
+                "doubling NoP bandwidth increased latency"
+            );
+            Ok(())
+        },
+    );
+}
