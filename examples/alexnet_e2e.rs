@@ -3,60 +3,60 @@
 //!
 //!   L1  Pallas output-stationary GEMM kernel (python/compile/kernels)
 //!   L2  JAX chunk graph, AOT-lowered to HLO-text buckets (aot.py)
-//!   L3  this Rust coordinator: MIQP/GA-optimized schedule, then every
-//!       chiplet chunk executed through PJRT; outputs verified against a
-//!       CPU reference; the modeled MCM clock reports the paper metrics.
+//!   L3  this Rust coordinator: an MIQP/GA-optimized `Plan` from the
+//!       engine, then every chiplet chunk executed through the GEMM
+//!       runtime; outputs verified against a CPU reference; the modeled
+//!       MCM clock reports the paper metrics.
 //!
 //! Run `make artifacts` first, then:
 //!
 //!     cargo run --release --example alexnet_e2e
 
-use mcmcomm::config::{HwConfig, MemKind, SystemType};
 use mcmcomm::coordinator::Executor;
-use mcmcomm::opt::{run_scheme, Scheme, SchedulerConfig};
+use mcmcomm::engine::{Engine, Scenario, Scheduler, SchedulerRegistry};
 use mcmcomm::runtime::{GemmRuntime, Manifest};
-use mcmcomm::topology::Topology;
+use mcmcomm::util::error::Result;
 use mcmcomm::workload::models::{alexnet, scaled_down};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // AlexNet at 1/16 scale: same 8-GEMM chained structure, chunk dims
-    // within the AOT bucket set (<= 256) so interpret-lowered kernels
-    // execute quickly on the CPU PJRT client.
+    // within the AOT bucket set (<= 256) so the runtime executes
+    // quickly on CPU.
     let wl = scaled_down(&alexnet(1), 16, 16);
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
+    let engine = Engine::new(Scenario::headline(wl));
+    let registry = SchedulerRegistry::standard(42);
 
     println!("== MCMComm end-to-end driver ==");
     println!(
         "workload {}: {} GEMMs, {:.1} MMACs",
-        wl.name,
-        wl.ops.len(),
-        wl.total_macs() as f64 / 1e6
+        engine.scenario().workload().name,
+        engine.scenario().workload().ops.len(),
+        engine.scenario().workload().total_macs() as f64 / 1e6
     );
 
     let runtime = GemmRuntime::new(&Manifest::default_dir())?;
     println!(
-        "PJRT platform: {} ({} buckets in manifest)",
+        "runtime platform: {} ({} buckets in manifest)",
         runtime.platform(),
         runtime.manifest().buckets.len()
     );
 
-    let cfg = SchedulerConfig::default();
-    for scheme in [Scheme::Baseline, Scheme::Ga, Scheme::Miqp] {
-        let out = run_scheme(scheme, &hw, &topo, &wl, &cfg);
+    for key in ["baseline", "ga", "miqp"] {
+        let planned = engine.schedule(&registry, key)?;
         let exec =
-            Executor::new(&hw, &topo, &wl, &out.alloc, out.flags, &runtime);
+            Executor::from_plan(engine.scenario(), planned.plan(), &runtime);
         let report = exec.run(42, /* verify= */ true)?;
-        println!("\n--- {} ---", scheme.name());
+        let scheduler = registry.require(key)?;
+        println!("\n--- {} ---", scheduler.name());
         println!(
-            "  {} PJRT chunk executions, host wall {:.2?}, compiled \
+            "  {} chunk executions, host wall {:.2?}, compiled \
              executables cached: {}",
             report.chunks_executed,
             report.host_wall,
             runtime.compiled_count()
         );
         println!(
-            "  numerics: max |pjrt - cpu_ref| = {:.2e}  {}",
+            "  numerics: max |runtime - cpu_ref| = {:.2e}  {}",
             report.max_abs_err,
             if report.max_abs_err < 1e-3 { "OK" } else { "MISMATCH" }
         );

@@ -1,55 +1,67 @@
-//! Design-space exploration: sweep packaging type x memory kind x grid
-//! size for one workload and report which co-design wins where — the
-//! §3.3 "packaging needs tailored optimization" observation in practice.
+//! Design-space exploration with the batch API: sweep packaging type x
+//! memory kind x grid size for one workload via `Engine::sweep` and
+//! report which co-design wins where — the §3.3 "packaging needs
+//! tailored optimization" observation in practice.
 //!
 //!     cargo run --release --example design_space_sweep
 
-use mcmcomm::config::{HwConfig, MemKind, SystemType};
-use mcmcomm::opt::{ga::GaParams, run_scheme, Scheme, SchedulerConfig};
-use mcmcomm::topology::Topology;
+use mcmcomm::config::{MemKind, SystemType};
+use mcmcomm::engine::{schedulers, Engine, Scenario, Scheduler};
+use mcmcomm::opt::ga::GaParams;
 use mcmcomm::util::bench::Reporter;
+use mcmcomm::util::error::Result;
 use mcmcomm::workload::models::hydranet;
 
-fn main() {
+fn main() -> Result<()> {
     let wl = hydranet(1);
-    let cfg = SchedulerConfig {
-        ga: GaParams { population: 24, generations: 25, ..Default::default() },
-        ..Default::default()
-    };
-    let mut rep = Reporter::new(
-        &format!("Design-space sweep: {} latency (ms) and GA speedup", wl.name),
-        &["system", "mem", "grid", "LS (ms)", "GA (ms)", "speedup"],
-    );
-    let mut best: Option<(String, f64)> = None;
+
+    // One scenario per design point.
+    let mut scenarios = Vec::new();
     for ty in SystemType::ALL {
         for mem in [MemKind::Hbm, MemKind::Dram] {
             for grid in [4usize, 8] {
-                let hw = HwConfig::paper(ty, mem, grid);
-                let topo = Topology::from_hw(&hw);
-                let base =
-                    run_scheme(Scheme::Baseline, &hw, &topo, &wl, &cfg);
-                let ga = run_scheme(Scheme::Ga, &hw, &topo, &wl, &cfg);
-                let name = format!("{}-{}-{}x{}", ty.short(), mem.name(),
-                                   grid, grid);
-                rep.row(vec![
-                    ty.name().to_string(),
-                    mem.name().to_string(),
-                    format!("{grid}x{grid}"),
-                    format!("{:.3}", base.objective_value / 1e6),
-                    format!("{:.3}", ga.objective_value / 1e6),
-                    format!(
-                        "{:.2}x",
-                        base.objective_value / ga.objective_value
-                    ),
-                ]);
-                if best.as_ref().is_none_or(|(_, v)| ga.objective_value < *v)
-                {
-                    best = Some((name, ga.objective_value));
-                }
+                scenarios.push(
+                    Scenario::builder()
+                        .system(ty)
+                        .mem(mem)
+                        .grid(grid)
+                        .workload(wl.clone())
+                        .build()?,
+                );
             }
+        }
+    }
+
+    // Two schedulers as plain trait objects — no registry needed.
+    let ga = schedulers::Ga::new(
+        GaParams { population: 24, generations: 25, ..Default::default() },
+        42,
+    );
+    let scheds: Vec<&dyn Scheduler> = vec![&schedulers::Baseline, &ga];
+
+    // The batch API: every scheduler on every scenario.
+    let rows = Engine::sweep(scenarios, &scheds)?;
+
+    let mut rep = Reporter::new(
+        &format!("Design-space sweep: {} latency (ms) and GA speedup", wl.name),
+        &["system", "LS (ms)", "GA (ms)", "speedup"],
+    );
+    let mut best: Option<(String, f64)> = None;
+    for row in &rows {
+        let ls = row.outcome("baseline").unwrap().plan.objective_value;
+        let ga = row.outcome("ga").unwrap().plan.objective_value;
+        rep.row(vec![
+            row.system(),
+            format!("{:.3}", ls / 1e6),
+            format!("{:.3}", ga / 1e6),
+            format!("{:.2}x", ls / ga),
+        ]);
+        if best.as_ref().map_or(true, |(_, v)| ga < *v) {
+            best = Some((row.system(), ga));
         }
     }
     rep.print();
     let (name, v) = best.unwrap();
     println!("\nbest configuration: {name} at {:.3} ms", v / 1e6);
+    Ok(())
 }

@@ -1,28 +1,24 @@
 //! Batch pipelining in action (paper §5.4 / Figure 11): expand a batch
 //! into the RCPSP task DAG, schedule it with the list scheduler and the
-//! exact branch & bound, and inspect the overlap.
+//! exact branch & bound, and inspect the overlap. Cost breakdowns come
+//! from the engine's `Report` — no raw evaluator calls.
 //!
 //!     cargo run --release --example pipeline_batching
 
-use mcmcomm::config::{HwConfig, MemKind, SystemType};
-use mcmcomm::cost::evaluator::{evaluate, OptFlags};
-use mcmcomm::partition::uniform_allocation;
+use mcmcomm::engine::Scenario;
 use mcmcomm::pipeline::{
     batch_tasks, exact_schedule, list_schedule, sequential_makespan,
     validate_schedule,
 };
-use mcmcomm::topology::Topology;
 use mcmcomm::util::bench::Reporter;
+use mcmcomm::util::error::Result;
 use mcmcomm::workload::models::{alexnet, scaled_down};
+use mcmcomm::workload::Workload;
 
-fn main() {
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
-
+fn main() -> Result<()> {
     // Full AlexNet through the list scheduler at several batch sizes.
-    let wl = alexnet(1);
-    let alloc = uniform_allocation(&hw, &wl);
-    let cost = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
+    let scenario = Scenario::headline(alexnet(1));
+    let cost = scenario.baseline_report().breakdown;
     let mut rep = Reporter::new(
         "Pipelining: per-sample speedup (list scheduler)",
         &["batch", "sequential (ms)", "pipelined (ms)", "speedup"],
@@ -44,12 +40,8 @@ fn main() {
     // A small instance where the exact solver can prove optimality:
     // 2 samples of a 3-op mini-net = 18 tasks.
     let mini = scaled_down(&alexnet(1), 64, 16);
-    let mini3 = mcmcomm::workload::Workload::new(
-        "mini3",
-        mini.ops[..3].to_vec(),
-    );
-    let alloc = uniform_allocation(&hw, &mini3);
-    let cost = evaluate(&hw, &topo, &mini3, &alloc, OptFlags::NONE);
+    let mini3 = Workload::new("mini3", mini.ops[..3].to_vec());
+    let cost = Scenario::headline(mini3).baseline_report().breakdown;
     let tasks = batch_tasks(&cost, 2);
     let ls = list_schedule(&tasks);
     let ex = exact_schedule(&tasks, 24);
@@ -62,4 +54,5 @@ fn main() {
         (ls.makespan / ex.makespan - 1.0) * 100.0
     );
     assert!(ex.makespan <= ls.makespan + 1e-9);
+    Ok(())
 }

@@ -1,62 +1,78 @@
 //! Quickstart: optimize a workload partition for an MCM and read the
 //! analytical cost report — the 60-second tour of the public API.
 //!
+//! The API is three nouns and one verb: build a validated `Scenario`
+//! (hardware + workload + flags + objective), hand it to the `Engine`,
+//! schedule with any `Scheduler` from the registry to get a `Plan`,
+//! and score the plan into a `Report`.
+//!
 //!     cargo run --release --example quickstart
 
-use mcmcomm::config::{HwConfig, MemKind, SystemType};
-use mcmcomm::cost::evaluator::{evaluate, Objective, OptFlags};
-use mcmcomm::opt::{run_scheme, Scheme, SchedulerConfig};
-use mcmcomm::topology::Topology;
+use mcmcomm::config::{MemKind, SystemType};
+use mcmcomm::cost::evaluator::Objective;
+use mcmcomm::engine::{Engine, Scenario, SchedulerRegistry};
+use mcmcomm::util::error::Result;
 use mcmcomm::workload::models::alexnet;
 
-fn main() {
-    // 1. Describe the hardware: Table-2 MCM, type-A packaging (corner
-    //    memory, like SIMBA), HBM, 4x4 chiplets of 16x16 PEs.
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
-
-    // 2. Pick a workload from the model zoo (GEMM-sequence IR).
-    let wl = alexnet(1);
+fn main() -> Result<()> {
+    // 1. Describe the scenario: Table-2 MCM, type-A packaging (corner
+    //    memory, like SIMBA), HBM, 4x4 chiplets of 16x16 PEs, and a
+    //    workload from the model zoo (GEMM-sequence IR). The builder
+    //    validates everything up front.
+    let scenario = Scenario::builder()
+        .system(SystemType::A)
+        .mem(MemKind::Hbm)
+        .grid(4)
+        .workload(alexnet(1))
+        .build()?;
     println!(
         "workload: {} ({} GEMMs, {:.2} GMACs)",
-        wl.name,
-        wl.ops.len(),
-        wl.total_macs() as f64 / 1e9
+        scenario.workload().name,
+        scenario.workload().ops.len(),
+        scenario.workload().total_macs() as f64 / 1e9
     );
 
+    // 2. The engine drives schedulers over the scenario; the registry
+    //    holds the five Table-3 schemes behind the `Scheduler` trait.
+    let engine = Engine::new(scenario);
+    let registry = SchedulerRegistry::standard(42);
+
     // 3. Baseline: uniform layer-sequential execution, no optimizations.
-    let cfg = SchedulerConfig::default();
-    let base = run_scheme(Scheme::Baseline, &hw, &topo, &wl, &cfg);
-    println!("baseline latency : {:.3} ms", base.objective_value / 1e6);
+    let base = engine.schedule(&registry, "baseline")?;
+    println!("baseline latency : {:.3} ms", base.objective_value() / 1e6);
 
     // 4. MCMComm-GA: non-uniform partitions + diagonal links +
     //    on-package redistribution + asynchronized execution.
-    let ga = run_scheme(Scheme::Ga, &hw, &topo, &wl, &cfg);
+    let ga = engine.schedule(&registry, "ga")?;
     println!(
         "GA latency       : {:.3} ms  ({:.2}x speedup)",
-        ga.objective_value / 1e6,
-        base.objective_value / ga.objective_value
+        ga.objective_value() / 1e6,
+        base.objective_value() / ga.objective_value()
     );
 
-    // 5. Inspect the full cost breakdown of the optimized schedule.
-    let cost = evaluate(&hw, &topo, &wl, &ga.alloc, ga.flags);
-    let redist = cost.per_op.iter().filter(|o| o.redistributed_in).count();
+    // 5. Inspect the full cost report of the optimized plan.
+    let report = ga.report();
     println!(
         "energy {:.3} mJ | EDP {:.3e} pJ*ns | {} ops fed by on-package \
          redistribution",
-        cost.energy_pj / 1e9,
-        cost.edp(),
-        redist
+        report.energy_pj() / 1e9,
+        report.edp(),
+        report.redistributed_ops()
     );
 
-    // 6. The same API optimizes for EDP instead.
-    let cfg_edp =
-        SchedulerConfig { objective: Objective::Edp, ..Default::default() };
-    let edp = run_scheme(Scheme::Ga, &hw, &topo, &wl, &cfg_edp);
-    let edp_base =
-        evaluate(&hw, &topo, &wl, &base.alloc, OptFlags::NONE).edp();
+    // 6. The same API optimizes for EDP instead: objective is part of
+    //    the scenario, not scattered through solver arguments.
+    let edp_engine = Engine::new(
+        Scenario::builder()
+            .workload(alexnet(1))
+            .objective(Objective::Edp)
+            .build()?,
+    );
+    let edp = edp_engine.schedule(&registry, "ga")?;
+    let edp_base = edp_engine.schedule(&registry, "baseline")?;
     println!(
         "EDP objective    : {:.2}x improvement",
-        edp_base / edp.objective_value
+        edp_base.objective_value() / edp.objective_value()
     );
+    Ok(())
 }

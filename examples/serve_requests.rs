@@ -1,6 +1,6 @@
 //! Serving demo: the Layer-3 request loop batching inference requests
 //! onto the simulated MCM, with every batch actually executed through
-//! PJRT (Figure 1's "real-time applications" use case).
+//! the GEMM runtime (Figure 1's "real-time applications" use case).
 //!
 //! Run `make artifacts` first, then:
 //!
@@ -8,43 +8,38 @@
 
 use std::time::Duration;
 
-use mcmcomm::config::{HwConfig, MemKind, SystemType};
 use mcmcomm::coordinator::server::RunnerFactory;
 use mcmcomm::coordinator::{Executor, Server};
-use mcmcomm::cost::evaluator::evaluate;
-use mcmcomm::opt::{run_scheme, Scheme, SchedulerConfig};
+use mcmcomm::engine::{Engine, Scenario, SchedulerRegistry};
 use mcmcomm::pipeline::pipeline_speedup;
 use mcmcomm::runtime::{GemmRuntime, Manifest};
-use mcmcomm::topology::Topology;
+use mcmcomm::util::error::Result;
 use mcmcomm::workload::models::{scaled_down, vit};
 
-fn main() -> anyhow::Result<()> {
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
+fn main() -> Result<()> {
     let wl = scaled_down(&vit(1), 16, 16);
-    let cfg = SchedulerConfig::default();
-    let out = run_scheme(Scheme::Ga, &hw, &topo, &wl, &cfg);
+    let registry = SchedulerRegistry::standard(42);
+    let engine = Engine::new(Scenario::headline(wl));
+    let plan = engine.schedule(&registry, "ga")?.into_plan();
     println!(
-        "serving {} on 4x4 type-A HBM with the GA schedule",
-        wl.name
+        "serving {} on {} with the GA schedule",
+        engine.scenario().workload().name,
+        engine.scenario().label()
     );
 
-    let alloc = out.alloc.clone();
-    let flags = out.flags;
-    let (hw2, topo2, wl2) = (hw.clone(), topo.clone(), wl.clone());
-    // PJRT clients are not Send: the factory builds the runtime on the
-    // batcher thread.
+    let scenario = engine.scenario().clone();
+    // The runtime may not be Send (PJRT clients hold Rc): the factory
+    // builds it on the batcher thread.
     let factory: RunnerFactory = Box::new(move || {
         let runtime =
             GemmRuntime::new(&Manifest::default_dir()).expect("artifacts");
-        Executor::new(&hw2, &topo2, &wl2, &alloc, flags, &runtime)
+        Executor::from_plan(&scenario, &plan, &runtime)
             .run(0, false)
             .expect("warmup");
+        let cost = scenario.report(&plan).breakdown;
         Box::new(move |bsz| {
-            let exec =
-                Executor::new(&hw2, &topo2, &wl2, &alloc, flags, &runtime);
+            let exec = Executor::from_plan(&scenario, &plan, &runtime);
             exec.run(bsz as u64, false).expect("batch run");
-            let cost = evaluate(&hw2, &topo2, &wl2, &alloc, flags);
             let batch_ns = cost.latency_ns * bsz as f64
                 / pipeline_speedup(&cost, bsz.max(1));
             (batch_ns, batch_ns / bsz as f64)

@@ -1,22 +1,15 @@
 //! Bench: regenerate Figure 11 (pipelining speedup vs batch) and time
 //! the RCPSP list scheduler.
 use std::time::Duration;
-use mcmcomm::config::{HwConfig, MemKind, SystemType};
-use mcmcomm::cost::evaluator::{evaluate, OptFlags};
+use mcmcomm::engine::Scenario;
 use mcmcomm::eval::figures;
-use mcmcomm::partition::uniform_allocation;
 use mcmcomm::pipeline::{batch_tasks, list_schedule};
-use mcmcomm::topology::Topology;
 use mcmcomm::util::bench::{bench, black_box};
 use mcmcomm::workload::models::alexnet;
 
 fn main() {
     figures::fig11(&[2, 4, 8, 16]);
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
-    let wl = alexnet(1);
-    let alloc = uniform_allocation(&hw, &wl);
-    let cost = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
+    let cost = Scenario::headline(alexnet(1)).baseline_report().breakdown;
     for batch in [4usize, 16, 64] {
         let tasks = batch_tasks(&cost, batch);
         bench(&format!("rcpsp/list_schedule_batch{batch}"),

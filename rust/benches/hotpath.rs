@@ -1,9 +1,11 @@
 //! Hot-path micro-benchmarks for the §Perf pass: the cost evaluator (GA
-//! fitness inner loop), the MIQP surrogate eval/subgradient, and the
-//! redistribution model.
+//! fitness inner loop) both raw and through the engine's `Report`
+//! wrapper, the MIQP surrogate eval/subgradient, and the redistribution
+//! model.
 use std::time::Duration;
 use mcmcomm::config::{HwConfig, MemKind, SystemType};
 use mcmcomm::cost::evaluator::{evaluate, Objective, OptFlags};
+use mcmcomm::engine::Scenario;
 use mcmcomm::opt::miqp::objective::build;
 use mcmcomm::partition::uniform_allocation;
 use mcmcomm::redistribution::redistribute;
@@ -19,6 +21,15 @@ fn main() {
     let alloc = uniform_allocation(&hw, &wl);
     bench("evaluate/alexnet_4x4", Duration::from_secs(2), || {
         black_box(evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL).latency_ns);
+    });
+
+    // Same work through the engine front door: the wrapper must add no
+    // measurable overhead over the raw evaluator call above.
+    let scenario = Scenario::headline(alexnet(1));
+    bench("engine_report/alexnet_4x4", Duration::from_secs(2), || {
+        black_box(
+            scenario.report_allocation(&alloc, OptFlags::ALL).latency_ns(),
+        );
     });
 
     let wlv = vit(1);

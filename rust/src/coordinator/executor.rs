@@ -1,16 +1,21 @@
 //! Simulated-clock executor: runs a scheduled workload with **real
-//! numerics** — every chiplet chunk is a PJRT execution of the AOT
-//! Pallas GEMM — while the analytical evaluator advances the modeled MCM
-//! clock. Output correctness is checked against a plain CPU reference,
-//! proving all three layers compose.
-
-use anyhow::{Context, Result};
+//! numerics** — every chiplet chunk is executed through the GEMM
+//! runtime (PJRT or the interpreter backend) — while the analytical
+//! evaluator advances the modeled MCM clock. Output correctness is
+//! checked against a plain CPU reference, proving all three layers
+//! compose.
+//!
+//! Front door: [`Executor::from_plan`] consumes an engine
+//! ([`Scenario`], [`Plan`]) pair; [`Executor::new`] remains the
+//! low-level borrowed-parts constructor.
 
 use crate::config::HwConfig;
-use crate::cost::evaluator::{evaluate, CostBreakdown, OptFlags};
+use crate::cost::evaluator::{CostBreakdown, OptFlags};
+use crate::engine::{Plan, Scenario};
 use crate::partition::Allocation;
 use crate::runtime::pjrt::{reference_gemm, GemmRuntime};
 use crate::topology::Topology;
+use crate::util::error::{Context, Result};
 use crate::util::rng::Pcg;
 use crate::workload::Workload;
 
@@ -23,9 +28,9 @@ pub struct RunReport {
     pub modeled: CostBreakdown,
     /// Host wall time actually spent executing chunks.
     pub host_wall: std::time::Duration,
-    /// PJRT chunk executions performed.
+    /// Runtime chunk executions performed.
     pub chunks_executed: u64,
-    /// Max |pjrt - reference| over all op outputs.
+    /// Max |runtime - reference| over all op outputs.
     pub max_abs_err: f32,
     /// Final op output (row-major M x N).
     pub output: Vec<f32>,
@@ -42,8 +47,8 @@ pub fn random_matrix(rng: &mut Pcg, rows: usize, cols: usize) -> Vec<f32> {
 /// wrap-around replication — the deterministic stand-in for the im2col /
 /// pooling data reshuffles between layers whose dims do not match
 /// exactly (documented in DESIGN.md §Substitutions). Numerical
-/// correctness per op is still exact: both PJRT and the reference see
-/// identical operands.
+/// correctness per op is still exact: both backends see identical
+/// operands.
 pub fn reshape_wrap(
     src: &[f32],
     rows0: usize,
@@ -72,6 +77,7 @@ pub struct Executor<'a> {
 }
 
 impl<'a> Executor<'a> {
+    /// Low-level constructor from borrowed parts.
     pub fn new(
         hw: &'a HwConfig,
         topo: &'a Topology,
@@ -82,6 +88,23 @@ impl<'a> Executor<'a> {
     ) -> Self {
         let plan = build_plan(hw, wl, alloc);
         Executor { hw, topo, wl, alloc, flags, plan, runtime }
+    }
+
+    /// Engine front door: execute a scheduled [`Plan`] on its
+    /// [`Scenario`].
+    pub fn from_plan(
+        scenario: &'a Scenario,
+        plan: &'a Plan,
+        runtime: &'a GemmRuntime,
+    ) -> Self {
+        Executor::new(
+            scenario.hw(),
+            scenario.topo(),
+            scenario.workload(),
+            &plan.alloc,
+            plan.flags,
+            runtime,
+        )
     }
 
     /// Run the whole workload once on synthetic data seeded by `seed`.
@@ -113,7 +136,7 @@ impl<'a> Executor<'a> {
             let weights = random_matrix(&mut rng, op.k, op.n);
             let bias = random_matrix(&mut rng, 1, op.n);
 
-            // Execute every non-empty chunk via PJRT and assemble.
+            // Execute every non-empty chunk via the runtime and assemble.
             let mut out = vec![0.0f32; op.m * op.n];
             for c in &self.plan.per_op[i].chunks {
                 if c.is_empty() {
@@ -161,8 +184,9 @@ impl<'a> Executor<'a> {
             output = out;
         }
 
-        let modeled = evaluate(self.hw, self.topo, self.wl, self.alloc,
-                               self.flags);
+        let modeled = crate::engine::modeled_breakdown(
+            self.hw, self.topo, self.wl, self.alloc, self.flags,
+        );
         let chunks1 = self
             .runtime
             .executions
@@ -196,5 +220,5 @@ mod tests {
         assert_eq!(random_matrix(&mut a, 3, 4), random_matrix(&mut b, 3, 4));
     }
 
-    // PJRT-backed executor tests live in rust/tests/e2e_runtime.rs.
+    // Runtime-backed executor tests live in rust/tests/e2e_runtime.rs.
 }

@@ -1,0 +1,298 @@
+//! The engine API: the crate's front door.
+//!
+//! Three nouns (paper framing: one analytical pipeline from packaging
+//! config through scheduling to reports):
+//!
+//! * [`Scenario`] — validated problem statement: hardware + topology +
+//!   workload + requested co-optimization flags + objective.
+//! * [`Plan`] — a scheduling outcome with provenance (scheduler key,
+//!   effective flags, seed) and its true-evaluator score.
+//! * [`Report`] — full cost breakdown + per-op diagnostics + EDP.
+//!
+//! One verb: [`Scheduler::schedule`], implemented by the five Table-3
+//! schemes in [`schedulers`] and discovered through
+//! [`SchedulerRegistry`].
+//!
+//! ```no_run
+//! use mcmcomm::engine::{Engine, Scenario, SchedulerRegistry};
+//! use mcmcomm::workload::models::alexnet;
+//!
+//! let engine = Engine::new(Scenario::headline(alexnet(1)));
+//! let registry = SchedulerRegistry::standard(42);
+//! let report = engine
+//!     .schedule_with(registry.require("ga").unwrap())
+//!     .unwrap()
+//!     .report();
+//! println!("latency {:.3} ms", report.latency_ns() / 1e6);
+//! ```
+
+mod plan;
+mod registry;
+mod report;
+mod scenario;
+pub mod scheduler;
+
+pub use plan::Plan;
+pub use registry::SchedulerRegistry;
+pub use report::Report;
+pub use scenario::{Scenario, ScenarioBuilder};
+pub use scheduler::Scheduler;
+
+/// The five Table-3 scheduler implementations.
+pub mod schedulers {
+    pub use super::scheduler::{Baseline, Ga, Greedy, Miqp, SimbaLike};
+}
+
+pub(crate) use report::modeled_breakdown;
+
+use std::fmt;
+
+/// Engine-level failures: invalid scenarios, unknown schedulers,
+/// schedulers returning malformed plans.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// The scenario builder was not given a workload.
+    MissingWorkload,
+    /// Hardware validation failed (zero grid, non-positive bandwidth…).
+    InvalidHardware(String),
+    /// Workload validation failed (zero dims, bad chaining…).
+    InvalidWorkload(String),
+    /// An explicitly-supplied topology does not match the hardware.
+    TopologyMismatch { topo: String, hw: String },
+    /// Registry lookup failed.
+    UnknownScheduler { name: String, known: String },
+    /// A scheduler produced an allocation that does not validate.
+    InvalidPlan { scheduler: String, reason: String },
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::MissingWorkload => {
+                write!(f, "scenario has no workload")
+            }
+            EngineError::InvalidHardware(m) => {
+                write!(f, "invalid hardware config: {m}")
+            }
+            EngineError::InvalidWorkload(m) => {
+                write!(f, "invalid workload: {m}")
+            }
+            EngineError::TopologyMismatch { topo, hw } => {
+                write!(f, "topology {topo} does not match hardware {hw}")
+            }
+            EngineError::UnknownScheduler { name, known } => {
+                write!(f, "unknown scheduler '{name}' (known: {known})")
+            }
+            EngineError::InvalidPlan { scheduler, reason } => {
+                write!(f, "scheduler '{scheduler}' produced an invalid \
+                           plan: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// The orchestrator: owns a [`Scenario`] and drives schedulers over it.
+#[derive(Debug, Clone)]
+pub struct Engine {
+    scenario: Scenario,
+}
+
+impl Engine {
+    pub fn new(scenario: Scenario) -> Engine {
+        Engine { scenario }
+    }
+
+    pub fn scenario(&self) -> &Scenario {
+        &self.scenario
+    }
+
+    /// Run one scheduler; the returned [`Planned`] borrows the scenario
+    /// so `.report()` needs no extra arguments.
+    pub fn schedule_with(
+        &self,
+        scheduler: &dyn Scheduler,
+    ) -> Result<Planned<'_>, EngineError> {
+        let plan = scheduler.schedule(&self.scenario)?;
+        plan.alloc
+            .validate(self.scenario.workload(), self.scenario.hw())
+            .map_err(|reason| EngineError::InvalidPlan {
+                scheduler: scheduler.key().to_string(),
+                reason,
+            })?;
+        Ok(Planned { scenario: &self.scenario, plan })
+    }
+
+    /// Registry-keyed convenience for [`Engine::schedule_with`].
+    pub fn schedule(
+        &self,
+        registry: &SchedulerRegistry,
+        name: &str,
+    ) -> Result<Planned<'_>, EngineError> {
+        self.schedule_with(registry.require(name)?)
+    }
+
+    /// Batch API: run every scheduler on every scenario. One row per
+    /// scenario, outcomes in scheduler order — the substrate of the
+    /// figure harnesses and design-space sweeps. Outcomes carry plans
+    /// (with their solver-accepted scores); full [`Report`]s are
+    /// derived on demand via [`SweepRow::report`], not eagerly.
+    pub fn sweep(
+        scenarios: impl IntoIterator<Item = Scenario>,
+        schedulers: &[&dyn Scheduler],
+    ) -> Result<Vec<SweepRow>, EngineError> {
+        let mut rows = Vec::new();
+        for scenario in scenarios {
+            let engine = Engine::new(scenario);
+            let mut outcomes = Vec::with_capacity(schedulers.len());
+            for &s in schedulers {
+                let planned = engine.schedule_with(s)?;
+                outcomes.push(SweepOutcome {
+                    scheduler: s.key().to_string(),
+                    plan: planned.into_plan(),
+                });
+            }
+            rows.push(SweepRow { scenario: engine.into_scenario(), outcomes });
+        }
+        Ok(rows)
+    }
+
+    /// Take the scenario back out of the engine.
+    pub fn into_scenario(self) -> Scenario {
+        self.scenario
+    }
+}
+
+/// A plan still attached to its scenario: score it, inspect it, or take
+/// the plan out.
+#[derive(Debug, Clone)]
+pub struct Planned<'a> {
+    scenario: &'a Scenario,
+    plan: Plan,
+}
+
+impl Planned<'_> {
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    pub fn into_plan(self) -> Plan {
+        self.plan
+    }
+
+    /// The solver-accepted objective score.
+    pub fn objective_value(&self) -> f64 {
+        self.plan.objective_value
+    }
+
+    /// Full cost report (re-derived from the single-source-of-truth
+    /// evaluator; bit-identical to the score the scheduler accepted).
+    pub fn report(&self) -> Report {
+        self.scenario.report(&self.plan)
+    }
+}
+
+/// One (scenario × scheduler) result inside a sweep.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    pub scheduler: String,
+    pub plan: Plan,
+}
+
+/// One scenario's sweep results.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub scenario: Scenario,
+    pub outcomes: Vec<SweepOutcome>,
+}
+
+impl SweepRow {
+    /// Workload name (figure-table "model" column).
+    pub fn model(&self) -> &str {
+        &self.scenario.workload().name
+    }
+
+    /// System label (figure-table "system" column), e.g. `A-HBM-4x4`.
+    pub fn system(&self) -> String {
+        self.scenario.label()
+    }
+
+    pub fn outcome(&self, key: &str) -> Option<&SweepOutcome> {
+        self.outcomes.iter().find(|o| o.scheduler == key)
+    }
+
+    /// Full cost report for one outcome, derived on demand.
+    pub fn report(&self, key: &str) -> Option<Report> {
+        self.outcome(key).map(|o| self.scenario.report(&o.plan))
+    }
+
+    /// Objective values normalized to `baseline_key` (baseline == 1.0,
+    /// lower is better). `None` if the baseline is absent.
+    pub fn normalized_to(
+        &self,
+        baseline_key: &str,
+    ) -> Option<Vec<(String, f64)>> {
+        let base = self.outcome(baseline_key)?.plan.objective_value;
+        Some(
+            self.outcomes
+                .iter()
+                .map(|o| {
+                    (o.scheduler.clone(), o.plan.objective_value / base)
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::evaluator::Objective;
+    use crate::workload::models::alexnet;
+
+    #[test]
+    fn schedule_then_report_round_trip() {
+        let engine = Engine::new(Scenario::headline(alexnet(1)));
+        let planned =
+            engine.schedule_with(&schedulers::Baseline).unwrap();
+        let report = planned.report();
+        assert_eq!(report.scheduler, "baseline");
+        // The report re-derives exactly the score the plan was accepted
+        // at (same evaluator, same inputs — bit-identical).
+        assert_eq!(report.objective_value(), planned.objective_value());
+        assert!(report.latency_ns() > 0.0 && report.energy_pj() > 0.0);
+        assert_eq!(
+            report.objective_value(),
+            report.breakdown.objective(Objective::Latency)
+        );
+    }
+
+    #[test]
+    fn registry_keyed_schedule() {
+        let engine = Engine::new(Scenario::headline(alexnet(1)));
+        let registry = SchedulerRegistry::standard(42);
+        let planned = engine.schedule(&registry, "simba").unwrap();
+        assert_eq!(planned.plan().scheduler, "simba");
+        let err = engine.schedule(&registry, "bogus").unwrap_err();
+        assert!(matches!(err, EngineError::UnknownScheduler { .. }));
+    }
+
+    #[test]
+    fn sweep_rows_follow_scheduler_order() {
+        let registry = SchedulerRegistry::standard(42);
+        let scheds = registry.select(&["baseline", "simba"]).unwrap();
+        let scenarios = vec![
+            Scenario::headline(alexnet(1)),
+            Scenario::headline(alexnet(2)),
+        ];
+        let rows = Engine::sweep(scenarios, &scheds).unwrap();
+        assert_eq!(rows.len(), 2);
+        for row in &rows {
+            assert_eq!(row.outcomes.len(), 2);
+            assert_eq!(row.outcomes[0].scheduler, "baseline");
+            let norm = row.normalized_to("baseline").unwrap();
+            assert_eq!(norm[0].1, 1.0);
+        }
+    }
+}

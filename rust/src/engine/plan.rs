@@ -1,0 +1,24 @@
+//! [`Plan`]: a scheduling outcome — the allocation plus its provenance
+//! (which scheduler, which effective flags, which seed) and the
+//! true-evaluator score it was accepted at.
+
+use crate::cost::evaluator::{Objective, OptFlags};
+use crate::partition::Allocation;
+
+/// The output of [`super::Scheduler::schedule`].
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Per-op partitions + collection columns.
+    pub alloc: Allocation,
+    /// Registry key of the scheduler that produced this plan.
+    pub scheduler: String,
+    /// The *effective* flags the plan was scored under (non-MCMComm
+    /// schedulers force [`OptFlags::NONE`], Table 3).
+    pub flags: OptFlags,
+    /// RNG seed provenance (0 for deterministic schedulers).
+    pub seed: u64,
+    /// Objective the scheduler optimized.
+    pub objective: Objective,
+    /// True-evaluator score of `alloc` under `flags` and `objective`.
+    pub objective_value: f64,
+}

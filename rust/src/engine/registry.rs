@@ -1,0 +1,142 @@
+//! [`SchedulerRegistry`]: the set of available [`Scheduler`]s, looked up
+//! by key or alias and iterated as trait objects.
+
+use std::time::Duration;
+
+use crate::opt::ga::GaParams;
+
+use super::scheduler::{Baseline, Ga, Greedy, Miqp, Scheduler, SimbaLike};
+use super::EngineError;
+
+/// An ordered collection of schedulers (registration order is iteration
+/// order, which sweeps and figure tables rely on).
+pub struct SchedulerRegistry {
+    entries: Vec<Box<dyn Scheduler>>,
+}
+
+impl SchedulerRegistry {
+    pub fn empty() -> Self {
+        SchedulerRegistry { entries: Vec::new() }
+    }
+
+    /// All five Table-3 schemes with explicit solver knobs.
+    pub fn with_params(
+        ga: GaParams,
+        miqp_budget: Duration,
+        seed: u64,
+    ) -> Self {
+        let mut r = SchedulerRegistry::empty();
+        r.register(Box::new(Baseline));
+        r.register(Box::new(SimbaLike));
+        r.register(Box::new(Greedy));
+        r.register(Box::new(Ga::new(ga, seed)));
+        r.register(Box::new(Miqp::new(miqp_budget, seed)));
+        r
+    }
+
+    /// Default solver knobs (GA defaults, MIQP 20 s anytime budget).
+    /// The figure harness builds its quick/full-budget registries via
+    /// `eval::EvalConfig::registry` — those constants live there, once.
+    pub fn standard(seed: u64) -> Self {
+        Self::with_params(GaParams::default(), Duration::from_secs(20), seed)
+    }
+
+    /// Add a scheduler; later registrations shadow earlier ones with the
+    /// same key.
+    pub fn register(&mut self, s: Box<dyn Scheduler>) -> &mut Self {
+        self.entries.retain(|e| e.key() != s.key());
+        self.entries.push(s);
+        self
+    }
+
+    /// Look up by key, alias or display name (case-insensitive).
+    pub fn get(&self, name: &str) -> Option<&dyn Scheduler> {
+        let want = name.to_ascii_lowercase();
+        self.entries
+            .iter()
+            .find(|s| {
+                s.key().eq_ignore_ascii_case(&want)
+                    || s.name().eq_ignore_ascii_case(&want)
+                    || s.aliases()
+                        .iter()
+                        .any(|a| a.eq_ignore_ascii_case(&want))
+            })
+            .map(|b| b.as_ref())
+    }
+
+    /// Like [`SchedulerRegistry::get`] but with a descriptive error.
+    pub fn require(&self, name: &str) -> Result<&dyn Scheduler, EngineError> {
+        self.get(name).ok_or_else(|| {
+            EngineError::UnknownScheduler {
+                name: name.to_string(),
+                known: self.keys().join(", "),
+            }
+        })
+    }
+
+    /// Resolve several keys at once (figure scheme sets).
+    pub fn select(
+        &self,
+        names: &[&str],
+    ) -> Result<Vec<&dyn Scheduler>, EngineError> {
+        names.iter().map(|n| self.require(n)).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &dyn Scheduler> {
+        self.entries.iter().map(|b| b.as_ref())
+    }
+
+    pub fn keys(&self) -> Vec<&str> {
+        self.entries.iter().map(|s| s.key()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_registry_has_all_five() {
+        let r = SchedulerRegistry::standard(42);
+        assert_eq!(
+            r.keys(),
+            vec!["baseline", "simba", "greedy", "ga", "miqp"]
+        );
+        for key in ["baseline", "simba", "greedy", "ga", "miqp"] {
+            assert!(r.get(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn lookup_accepts_aliases_and_names() {
+        let r = SchedulerRegistry::standard(42);
+        assert_eq!(r.get("ls").unwrap().key(), "baseline");
+        assert_eq!(r.get("MCMComm-GA").unwrap().key(), "ga");
+        assert_eq!(r.get("BASELINE").unwrap().key(), "baseline");
+        assert!(r.get("does-not-exist").is_none());
+    }
+
+    #[test]
+    fn require_reports_known_keys() {
+        let r = SchedulerRegistry::standard(42);
+        let err = r.require("nope").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("nope") && msg.contains("baseline"), "{msg}");
+    }
+
+    #[test]
+    fn register_shadows_same_key() {
+        use crate::engine::schedulers::Ga;
+        let mut r = SchedulerRegistry::standard(1);
+        r.register(Box::new(Ga::seeded(99)));
+        assert_eq!(r.len(), 5);
+    }
+}

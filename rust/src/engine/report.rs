@@ -1,0 +1,73 @@
+//! [`Report`]: the scored outcome of a plan — full cost breakdown,
+//! per-op diagnostics and derived metrics. This is the public face of
+//! `cost::evaluator::evaluate`, which production call sites no longer
+//! touch directly.
+
+use crate::config::HwConfig;
+use crate::cost::evaluator::{
+    evaluate, CostBreakdown, Objective, OpCost, OptFlags,
+};
+use crate::partition::Allocation;
+use crate::topology::Topology;
+use crate::workload::Workload;
+
+/// Crate-internal bridge to the low-level evaluator; everything outside
+/// the `cost` module goes through [`Report`] / [`super::Scenario`].
+pub(crate) fn modeled_breakdown(
+    hw: &HwConfig,
+    topo: &Topology,
+    wl: &Workload,
+    alloc: &Allocation,
+    flags: OptFlags,
+) -> CostBreakdown {
+    evaluate(hw, topo, wl, alloc, flags)
+}
+
+/// End-to-end cost report for one (scenario, plan) pair.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Scheduler provenance (registry key, or `"manual"`).
+    pub scheduler: String,
+    /// Effective flags the allocation was scored under.
+    pub flags: OptFlags,
+    /// Objective the scenario optimizes.
+    pub objective: Objective,
+    /// Full eq.-3 cost decomposition.
+    pub breakdown: CostBreakdown,
+}
+
+impl Report {
+    pub fn latency_ns(&self) -> f64 {
+        self.breakdown.latency_ns
+    }
+
+    pub fn energy_pj(&self) -> f64 {
+        self.breakdown.energy_pj
+    }
+
+    /// Energy-delay product in pJ·ns.
+    pub fn edp(&self) -> f64 {
+        self.breakdown.edp()
+    }
+
+    /// The scenario objective evaluated on this breakdown — bit-identical
+    /// to `evaluate(..).objective(..)` on the same allocation.
+    pub fn objective_value(&self) -> f64 {
+        self.breakdown.objective(self.objective)
+    }
+
+    /// Per-op cost decomposition (diagnostics, pipelining inputs).
+    pub fn per_op(&self) -> &[OpCost] {
+        &self.breakdown.per_op
+    }
+
+    /// Number of ops whose activations arrived by on-package
+    /// redistribution (§5.2).
+    pub fn redistributed_ops(&self) -> usize {
+        self.breakdown
+            .per_op
+            .iter()
+            .filter(|o| o.redistributed_in)
+            .count()
+    }
+}

@@ -1,0 +1,321 @@
+//! [`Scenario`]: the validated problem statement of one engine run —
+//! hardware + topology + workload + co-optimization flags + objective —
+//! replacing the ad-hoc `(hw, topo, wl, flags, objective)` argument
+//! tuples the seed crate passed around.
+
+use crate::config::{HwConfig, MemKind, SystemType};
+use crate::cost::evaluator::{Objective, OptFlags};
+use crate::partition::Allocation;
+use crate::topology::Topology;
+use crate::workload::Workload;
+
+use super::plan::Plan;
+use super::report::{modeled_breakdown, Report};
+use super::EngineError;
+
+/// A complete, validated co-optimization scenario. Construct via
+/// [`Scenario::builder`]; every accessor is cheap.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    hw: HwConfig,
+    topo: Topology,
+    wl: Workload,
+    flags: OptFlags,
+    objective: Objective,
+}
+
+impl Scenario {
+    pub fn builder() -> ScenarioBuilder {
+        ScenarioBuilder::default()
+    }
+
+    /// The paper's headline evaluation point: 4x4 type-A HBM, all §5
+    /// co-optimizations requested, latency objective.
+    pub fn headline(wl: Workload) -> Scenario {
+        Scenario::builder()
+            .workload(wl)
+            .build()
+            .expect("headline scenario is always valid")
+    }
+
+    pub fn hw(&self) -> &HwConfig {
+        &self.hw
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn workload(&self) -> &Workload {
+        &self.wl
+    }
+
+    /// The *requested* co-optimization flags; schedulers that predate
+    /// the MCMComm optimizations (Table 3) ignore them.
+    pub fn flags(&self) -> OptFlags {
+        self.flags
+    }
+
+    pub fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    /// Short system label, e.g. `A-HBM-4x4` (figure tables).
+    pub fn label(&self) -> String {
+        format!(
+            "{}-{}-{}x{}",
+            self.hw.ty.short(),
+            self.hw.mem.name(),
+            self.hw.xdim,
+            self.hw.ydim
+        )
+    }
+
+    /// Score a plan on the single-source-of-truth evaluator.
+    pub fn report(&self, plan: &Plan) -> Report {
+        Report {
+            scheduler: plan.scheduler.clone(),
+            flags: plan.flags,
+            objective: self.objective,
+            breakdown: modeled_breakdown(
+                &self.hw, &self.topo, &self.wl, &plan.alloc, plan.flags,
+            ),
+        }
+    }
+
+    /// Score an arbitrary allocation under explicit flags (figure
+    /// harnesses, ablations, hand-written allocations).
+    pub fn report_allocation(
+        &self,
+        alloc: &Allocation,
+        flags: OptFlags,
+    ) -> Report {
+        Report {
+            scheduler: "manual".to_string(),
+            flags,
+            objective: self.objective,
+            breakdown: modeled_breakdown(
+                &self.hw, &self.topo, &self.wl, alloc, flags,
+            ),
+        }
+    }
+
+    /// The uniform layer-sequential reference point (no optimizations).
+    pub fn baseline_report(&self) -> Report {
+        let alloc = crate::partition::uniform_allocation(&self.hw, &self.wl);
+        let mut r = self.report_allocation(&alloc, OptFlags::NONE);
+        r.scheduler = "baseline".to_string();
+        r
+    }
+
+    /// Assemble a [`Plan`], scoring `alloc` on the true evaluator —
+    /// the constructor custom [`crate::engine::Scheduler`]
+    /// implementations should use, so `Plan::objective_value` is always
+    /// consistent with the allocation and flags it carries.
+    pub fn plan(
+        &self,
+        scheduler: &str,
+        alloc: Allocation,
+        flags: OptFlags,
+        seed: u64,
+    ) -> Plan {
+        let objective_value =
+            modeled_breakdown(&self.hw, &self.topo, &self.wl, &alloc, flags)
+                .objective(self.objective);
+        Plan {
+            scheduler: scheduler.to_string(),
+            alloc,
+            flags,
+            seed,
+            objective: self.objective,
+            objective_value,
+        }
+    }
+
+    /// Like [`Scenario::plan`] but trusting a solver-reported score
+    /// (already produced by the true evaluator inside the solver).
+    pub(crate) fn plan_scored(
+        &self,
+        scheduler: &str,
+        alloc: Allocation,
+        flags: OptFlags,
+        seed: u64,
+        objective_value: f64,
+    ) -> Plan {
+        Plan {
+            scheduler: scheduler.to_string(),
+            alloc,
+            flags,
+            seed,
+            objective: self.objective,
+            objective_value,
+        }
+    }
+}
+
+/// Builder for [`Scenario`]. Either set a full [`HwConfig`] via
+/// [`ScenarioBuilder::hw`] or compose one from
+/// [`ScenarioBuilder::system`] / [`ScenarioBuilder::mem`] /
+/// [`ScenarioBuilder::grid`] (paper Table-2 defaults).
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    hw: Option<HwConfig>,
+    ty: SystemType,
+    mem: MemKind,
+    grid: usize,
+    topo: Option<Topology>,
+    wl: Option<Workload>,
+    flags: OptFlags,
+    objective: Objective,
+}
+
+impl Default for ScenarioBuilder {
+    fn default() -> Self {
+        ScenarioBuilder {
+            hw: None,
+            ty: SystemType::A,
+            mem: MemKind::Hbm,
+            grid: 4,
+            topo: None,
+            wl: None,
+            flags: OptFlags::ALL,
+            objective: Objective::Latency,
+        }
+    }
+}
+
+impl ScenarioBuilder {
+    /// Use a fully custom hardware configuration (overrides
+    /// `system`/`mem`/`grid`).
+    pub fn hw(mut self, hw: HwConfig) -> Self {
+        self.hw = Some(hw);
+        self
+    }
+
+    pub fn system(mut self, ty: SystemType) -> Self {
+        self.ty = ty;
+        self
+    }
+
+    pub fn mem(mut self, mem: MemKind) -> Self {
+        self.mem = mem;
+        self
+    }
+
+    pub fn grid(mut self, grid: usize) -> Self {
+        self.grid = grid;
+        self
+    }
+
+    /// Override the derived topology (advanced; must match the grid).
+    pub fn topology(mut self, topo: Topology) -> Self {
+        self.topo = Some(topo);
+        self
+    }
+
+    pub fn workload(mut self, wl: Workload) -> Self {
+        self.wl = Some(wl);
+        self
+    }
+
+    pub fn flags(mut self, flags: OptFlags) -> Self {
+        self.flags = flags;
+        self
+    }
+
+    pub fn objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    /// Validate everything and assemble the scenario.
+    pub fn build(self) -> Result<Scenario, EngineError> {
+        let hw = self
+            .hw
+            .unwrap_or_else(|| HwConfig::paper(self.ty, self.mem, self.grid));
+        hw.validate().map_err(EngineError::InvalidHardware)?;
+        let wl = self.wl.ok_or(EngineError::MissingWorkload)?;
+        wl.validate().map_err(EngineError::InvalidWorkload)?;
+        let topo =
+            self.topo.unwrap_or_else(|| Topology::from_hw(&hw));
+        if topo.xdim != hw.xdim || topo.ydim != hw.ydim || topo.ty != hw.ty {
+            return Err(EngineError::TopologyMismatch {
+                topo: format!("{:?} {}x{}", topo.ty, topo.xdim, topo.ydim),
+                hw: format!("{:?} {}x{}", hw.ty, hw.xdim, hw.ydim),
+            });
+        }
+        Ok(Scenario {
+            hw,
+            topo,
+            wl,
+            flags: self.flags,
+            objective: self.objective,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::alexnet;
+    use crate::workload::{GemmOp, Workload};
+
+    #[test]
+    fn headline_defaults() {
+        let s = Scenario::headline(alexnet(1));
+        assert_eq!(s.hw().xdim, 4);
+        assert_eq!(s.hw().ty, SystemType::A);
+        assert_eq!(s.flags(), OptFlags::ALL);
+        assert_eq!(s.objective(), Objective::Latency);
+        assert_eq!(s.label(), "A-HBM-4x4");
+    }
+
+    #[test]
+    fn builder_rejects_zero_grid() {
+        let err = Scenario::builder()
+            .grid(0)
+            .workload(alexnet(1))
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, EngineError::InvalidHardware(_)), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_invalid_bandwidth() {
+        let mut hw = HwConfig::default_4x4_hbm();
+        hw.bw_nop = 0.0;
+        let err = Scenario::builder()
+            .hw(hw)
+            .workload(alexnet(1))
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, EngineError::InvalidHardware(_)), "{err}");
+    }
+
+    #[test]
+    fn builder_requires_workload() {
+        let err = Scenario::builder().build().unwrap_err();
+        assert!(matches!(err, EngineError::MissingWorkload));
+    }
+
+    #[test]
+    fn builder_rejects_invalid_workload() {
+        let wl = Workload {
+            name: "bad".into(),
+            ops: vec![GemmOp::dense("z", 0, 16, 16)],
+        };
+        let err = Scenario::builder().workload(wl).build().unwrap_err();
+        assert!(matches!(err, EngineError::InvalidWorkload(_)), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_mismatched_topology() {
+        let err = Scenario::builder()
+            .grid(4)
+            .topology(Topology::new(SystemType::A, 8, 8))
+            .workload(alexnet(1))
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, EngineError::TopologyMismatch { .. }), "{err}");
+    }
+}

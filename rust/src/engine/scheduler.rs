@@ -1,0 +1,260 @@
+//! The [`Scheduler`] trait and the five Table-3 implementations.
+//!
+//! Callers iterate `dyn Scheduler`s (usually from a
+//! [`super::SchedulerRegistry`]) instead of matching a scheme enum; new
+//! schedulers plug in by implementing the trait and registering.
+
+use std::time::Duration;
+
+use crate::cost::evaluator::OptFlags;
+use crate::opt::ga::GaParams;
+use crate::opt::{ga, greedy, miqp};
+use crate::partition::{simba_allocation, uniform_allocation};
+
+use super::plan::Plan;
+use super::scenario::Scenario;
+use super::EngineError;
+
+/// A scheduling strategy: consumes a [`Scenario`], produces a [`Plan`].
+///
+/// Implementations own their tuning knobs (population sizes, solver
+/// budgets, seeds); the scenario owns the problem (hardware, workload,
+/// requested flags, objective).
+pub trait Scheduler {
+    /// Human-readable name (figure tables), e.g. `"MCMComm-GA"`.
+    fn name(&self) -> &str;
+
+    /// Stable registry key, e.g. `"ga"`.
+    fn key(&self) -> &str;
+
+    /// Alternative lookup spellings accepted by the registry.
+    fn aliases(&self) -> &[&str] {
+        &[]
+    }
+
+    /// The flags this scheduler actually optimizes under. Schedulers
+    /// that predate the MCMComm co-optimizations run unoptimized
+    /// (Table 3 column "MCMComm Optimizations").
+    fn effective_flags(&self, requested: OptFlags) -> OptFlags {
+        let _ = requested;
+        OptFlags::NONE
+    }
+
+    /// Solve the scenario.
+    fn schedule(&self, scenario: &Scenario) -> Result<Plan, EngineError>;
+}
+
+/// Layer Sequential baseline: uniform partitioning, no optimizations.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Baseline;
+
+impl Scheduler for Baseline {
+    fn name(&self) -> &str {
+        "LS (baseline)"
+    }
+
+    fn key(&self) -> &str {
+        "baseline"
+    }
+
+    fn aliases(&self) -> &[&str] {
+        &["ls"]
+    }
+
+    fn schedule(&self, scenario: &Scenario) -> Result<Plan, EngineError> {
+        let alloc =
+            uniform_allocation(scenario.hw(), scenario.workload());
+        Ok(scenario.plan(self.key(), alloc, OptFlags::NONE, 0))
+    }
+}
+
+/// SIMBA-like inverse-distance partitioning, no optimizations (§3.1).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimbaLike;
+
+impl Scheduler for SimbaLike {
+    fn name(&self) -> &str {
+        "SIMBA-like"
+    }
+
+    fn key(&self) -> &str {
+        "simba"
+    }
+
+    fn schedule(&self, scenario: &Scenario) -> Result<Plan, EngineError> {
+        let alloc = simba_allocation(
+            scenario.hw(),
+            scenario.topo(),
+            scenario.workload(),
+        );
+        Ok(scenario.plan(self.key(), alloc, OptFlags::NONE, 0))
+    }
+}
+
+/// Greedy layer-by-layer hill climbing (§3.5 strawman).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Greedy;
+
+impl Scheduler for Greedy {
+    fn name(&self) -> &str {
+        "greedy"
+    }
+
+    fn key(&self) -> &str {
+        "greedy"
+    }
+
+    fn schedule(&self, scenario: &Scenario) -> Result<Plan, EngineError> {
+        let r = greedy::optimize(
+            scenario.hw(),
+            scenario.topo(),
+            scenario.workload(),
+            OptFlags::NONE,
+            scenario.objective(),
+        );
+        Ok(scenario.plan_scored(
+            self.key(),
+            r.alloc,
+            OptFlags::NONE,
+            0,
+            r.objective_value,
+        ))
+    }
+}
+
+/// MCMComm-GA (§6.2): genetic search over the §6.2 trust region, scored
+/// by the true evaluator under the scenario's requested flags.
+#[derive(Debug, Clone)]
+pub struct Ga {
+    pub params: GaParams,
+    pub seed: u64,
+}
+
+impl Ga {
+    pub fn new(params: GaParams, seed: u64) -> Self {
+        Ga { params, seed }
+    }
+
+    pub fn seeded(seed: u64) -> Self {
+        Ga { params: GaParams::default(), seed }
+    }
+}
+
+impl Scheduler for Ga {
+    fn name(&self) -> &str {
+        "MCMComm-GA"
+    }
+
+    fn key(&self) -> &str {
+        "ga"
+    }
+
+    fn effective_flags(&self, requested: OptFlags) -> OptFlags {
+        requested
+    }
+
+    fn schedule(&self, scenario: &Scenario) -> Result<Plan, EngineError> {
+        let flags = self.effective_flags(scenario.flags());
+        let mut params = self.params.clone();
+        params.seed = self.seed;
+        let r = ga::optimize(
+            scenario.hw(),
+            scenario.topo(),
+            scenario.workload(),
+            flags,
+            scenario.objective(),
+            &params,
+        );
+        Ok(scenario.plan_scored(
+            self.key(),
+            r.alloc,
+            flags,
+            self.seed,
+            r.objective_value,
+        ))
+    }
+}
+
+/// MCMComm-MIQP (§6.3): surrogate MIQP + branch & bound, re-scored on
+/// the true evaluator (anytime semantics bounded by `budget`).
+#[derive(Debug, Clone)]
+pub struct Miqp {
+    pub budget: Duration,
+    pub seed: u64,
+}
+
+impl Miqp {
+    pub fn new(budget: Duration, seed: u64) -> Self {
+        Miqp { budget, seed }
+    }
+
+    pub fn seeded(seed: u64) -> Self {
+        Miqp { budget: Duration::from_secs(20), seed }
+    }
+}
+
+impl Scheduler for Miqp {
+    fn name(&self) -> &str {
+        "MCMComm-MIQP"
+    }
+
+    fn key(&self) -> &str {
+        "miqp"
+    }
+
+    fn effective_flags(&self, requested: OptFlags) -> OptFlags {
+        requested
+    }
+
+    fn schedule(&self, scenario: &Scenario) -> Result<Plan, EngineError> {
+        let flags = self.effective_flags(scenario.flags());
+        let r = miqp::optimize(
+            scenario.hw(),
+            scenario.topo(),
+            scenario.workload(),
+            flags,
+            scenario.objective(),
+            self.budget,
+            self.seed,
+        );
+        Ok(scenario.plan_scored(
+            self.key(),
+            r.alloc,
+            flags,
+            self.seed,
+            r.objective_value,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::alexnet;
+
+    #[test]
+    fn table3_flag_gating() {
+        assert_eq!(Baseline.effective_flags(OptFlags::ALL), OptFlags::NONE);
+        assert_eq!(SimbaLike.effective_flags(OptFlags::ALL), OptFlags::NONE);
+        assert_eq!(Greedy.effective_flags(OptFlags::ALL), OptFlags::NONE);
+        assert_eq!(
+            Ga::seeded(1).effective_flags(OptFlags::ALL),
+            OptFlags::ALL
+        );
+        assert_eq!(
+            Miqp::seeded(1).effective_flags(OptFlags::ALL),
+            OptFlags::ALL
+        );
+    }
+
+    #[test]
+    fn baseline_plan_is_uniform_and_scored() {
+        let scenario = Scenario::headline(alexnet(1));
+        let plan = Baseline.schedule(&scenario).unwrap();
+        assert_eq!(plan.scheduler, "baseline");
+        assert_eq!(plan.flags, OptFlags::NONE);
+        assert!(plan.objective_value > 0.0);
+        let uni = uniform_allocation(scenario.hw(), scenario.workload());
+        assert_eq!(plan.alloc, uni);
+    }
+}

@@ -1,18 +1,18 @@
 //! Figure/table regeneration (paper §7). Every public `figN` function
 //! prints the paper-shaped rows and returns the raw numbers for tests
-//! and benches.
+//! and benches. All scheduling goes through the engine API — no direct
+//! evaluator calls.
 
 use crate::config::{HwConfig, MemKind, SystemType};
-use crate::cost::evaluator::{evaluate, Objective, OptFlags};
-use crate::opt::{ga, run_scheme, Scheme};
-use crate::partition::uniform_allocation;
+use crate::cost::evaluator::{Objective, OptFlags};
+use crate::engine::{schedulers, Engine, Scenario, Scheduler};
 use crate::pipeline;
-use crate::topology::{Pos, Topology};
+use crate::topology::Pos;
 use crate::util::bench::Reporter;
 use crate::util::math::geomean;
 use crate::workload::models::evaluation_suite;
 
-use super::{run_cell, scheme_geomean, Cell, EvalConfig};
+use super::{run_cell, scheduler_geomean, Cell, EvalConfig};
 
 /// Figure 3 output: scenario name -> (makespan ns, per-link utilization
 /// heat map rendered as ASCII).
@@ -87,9 +87,8 @@ fn print_heatmap(
     }
 }
 
-/// The standard scheme set the figures compare (Table 3).
-const FIG_SCHEMES: [Scheme; 4] =
-    [Scheme::Baseline, Scheme::SimbaLike, Scheme::Ga, Scheme::Miqp];
+/// The standard scheduler set the figures compare (Table 3).
+const FIG_KEYS: [&str; 4] = ["baseline", "simba", "ga", "miqp"];
 
 fn print_cells(title: &str, cells: &[Cell]) {
     let mut rep = Reporter::new(
@@ -97,28 +96,28 @@ fn print_cells(title: &str, cells: &[Cell]) {
         &["model", "system", "LS", "SIMBA-like", "GA", "MIQP"],
     );
     for c in cells {
-        let get = |s: Scheme| {
+        let get = |key: &str| {
             c.normalized
                 .iter()
-                .find(|(x, _)| *x == s)
+                .find(|(x, _)| x == key)
                 .map(|(_, v)| format!("{v:.3}"))
                 .unwrap_or_else(|| "-".into())
         };
         rep.row(vec![
             c.model.clone(),
             c.system.clone(),
-            get(Scheme::Baseline),
-            get(Scheme::SimbaLike),
-            get(Scheme::Ga),
-            get(Scheme::Miqp),
+            get("baseline"),
+            get("simba"),
+            get("ga"),
+            get("miqp"),
         ]);
     }
     rep.print();
     println!(
         "geo-mean speedup vs LS:  SIMBA-like {:+.1}%  GA {:+.1}%  MIQP {:+.1}%",
-        (1.0 / scheme_geomean(cells, Scheme::SimbaLike) - 1.0) * 100.0,
-        (1.0 / scheme_geomean(cells, Scheme::Ga) - 1.0) * 100.0,
-        (1.0 / scheme_geomean(cells, Scheme::Miqp) - 1.0) * 100.0,
+        (1.0 / scheduler_geomean(cells, "simba") - 1.0) * 100.0,
+        (1.0 / scheduler_geomean(cells, "ga") - 1.0) * 100.0,
+        (1.0 / scheduler_geomean(cells, "miqp") - 1.0) * 100.0,
     );
 }
 
@@ -129,7 +128,7 @@ pub fn fig8(cfg: &EvalConfig) -> Vec<Cell> {
         let hw = HwConfig::paper(ty, MemKind::Hbm, 4);
         for wl in evaluation_suite(1) {
             cells.push(run_cell(&hw, &wl, Objective::Latency, cfg,
-                                &FIG_SCHEMES));
+                                &FIG_KEYS));
         }
     }
     print_cells("Figure 8: normalized latency, 4x4 HBM, types A-D", &cells);
@@ -143,7 +142,7 @@ pub fn fig9(cfg: &EvalConfig, grids: &[usize]) -> Vec<Cell> {
         let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, g);
         for wl in evaluation_suite(1) {
             cells.push(run_cell(&hw, &wl, Objective::Latency, cfg,
-                                &FIG_SCHEMES));
+                                &FIG_KEYS));
         }
     }
     print_cells("Figure 9: normalized latency scaling, type-A HBM", &cells);
@@ -156,7 +155,7 @@ pub fn fig10(cfg: &EvalConfig, grids: &[usize]) -> Vec<Cell> {
     for &g in grids {
         let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, g);
         for wl in evaluation_suite(1) {
-            cells.push(run_cell(&hw, &wl, Objective::Edp, cfg, &FIG_SCHEMES));
+            cells.push(run_cell(&hw, &wl, Objective::Edp, cfg, &FIG_KEYS));
         }
     }
     print_cells("Figure 10: normalized EDP scaling, type-A HBM", &cells);
@@ -165,20 +164,22 @@ pub fn fig10(cfg: &EvalConfig, grids: &[usize]) -> Vec<Cell> {
 
 /// Figure 11 — per-sample pipelining speedup vs batch size.
 pub fn fig11(batches: &[usize]) -> Vec<(String, usize, f64)> {
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
     let mut rep = Reporter::new(
         "Figure 11: per-sample pipelining speedup vs LS",
         &["model", "batch", "speedup"],
     );
     let mut rows = Vec::new();
     for wl in evaluation_suite(1) {
-        let alloc = uniform_allocation(&hw, &wl);
-        let cost = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
+        let scenario = Scenario::headline(wl);
+        let cost = scenario.baseline_report().breakdown;
         for &b in batches {
             let s = pipeline::pipeline_speedup(&cost, b);
-            rep.row(vec![wl.name.clone(), b.to_string(), format!("{s:.2}x")]);
-            rows.push((wl.name.clone(), b, s));
+            rep.row(vec![
+                scenario.workload().name.clone(),
+                b.to_string(),
+                format!("{s:.2}x"),
+            ]);
+            rows.push((scenario.workload().name.clone(), b, s));
         }
     }
     rep.print();
@@ -191,8 +192,8 @@ pub fn fig12(cfg: &EvalConfig) -> (Vec<Cell>, Vec<Cell>) {
     let mut lat = Vec::new();
     let mut edp = Vec::new();
     for wl in evaluation_suite(1) {
-        lat.push(run_cell(&hw, &wl, Objective::Latency, cfg, &FIG_SCHEMES));
-        edp.push(run_cell(&hw, &wl, Objective::Edp, cfg, &FIG_SCHEMES));
+        lat.push(run_cell(&hw, &wl, Objective::Latency, cfg, &FIG_KEYS));
+        edp.push(run_cell(&hw, &wl, Objective::Edp, cfg, &FIG_KEYS));
     }
     print_cells("Figure 12a: normalized latency, 4x4 type-A DRAM", &lat);
     print_cells("Figure 12b: normalized EDP, 4x4 type-A DRAM", &edp);
@@ -203,8 +204,6 @@ pub fn fig12(cfg: &EvalConfig) -> (Vec<Cell>, Vec<Cell>) {
 /// +pipelining; for latency and EDP. Returns (config name, objective,
 /// normalized value).
 pub fn fig13(cfg: &EvalConfig) -> Vec<(String, String, f64)> {
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
     let stages: [(&str, OptFlags, bool); 3] = [
         ("partition only",
          OptFlags { diagonal: false, redistribution: true, async_fusion: false },
@@ -223,22 +222,28 @@ pub fn fig13(cfg: &EvalConfig) -> Vec<(String, String, f64)> {
     let mut out = Vec::new();
     let mut lat_cols: Vec<Vec<f64>> = vec![Vec::new(); stages.len()];
     let mut edp_cols: Vec<Vec<f64>> = vec![Vec::new(); stages.len()];
+    let ga = schedulers::Ga::new(cfg.ga_params(), cfg.seed);
     for wl in evaluation_suite(1) {
-        let base_alloc = uniform_allocation(&hw, &wl);
-        let base = evaluate(&hw, &topo, &wl, &base_alloc, OptFlags::NONE);
+        let base = Scenario::headline(wl.clone()).baseline_report();
         for (si, (_, flags, pipelined)) in stages.iter().enumerate() {
-            let mut p = cfg.scheduler(Objective::Latency).ga;
-            p.seed = cfg.seed;
-            let r = ga::optimize(&hw, &topo, &wl, *flags, Objective::Latency,
-                                 &p);
-            let c = evaluate(&hw, &topo, &wl, &r.alloc, *flags);
-            let (mut lat, mut edp) = (c.latency_ns, c.edp());
+            let scenario = Scenario::builder()
+                .workload(wl.clone())
+                .flags(*flags)
+                .objective(Objective::Latency)
+                .build()
+                .expect("valid ablation scenario");
+            let engine = Engine::new(scenario);
+            let c = engine
+                .schedule_with(&ga)
+                .expect("GA schedules every stage")
+                .report();
+            let (mut lat, mut edp) = (c.latency_ns(), c.edp());
             if *pipelined {
-                let speed = pipeline::pipeline_speedup(&c, 4);
+                let speed = pipeline::pipeline_speedup(&c.breakdown, 4);
                 lat /= speed;
                 edp /= speed * speed; // energy unchanged, delay shrinks
             }
-            lat_cols[si].push(base.latency_ns / lat);
+            lat_cols[si].push(base.latency_ns() / lat);
             edp_cols[si].push(base.edp() / edp);
         }
     }
@@ -257,31 +262,35 @@ pub fn fig13(cfg: &EvalConfig) -> Vec<(String, String, f64)> {
     out
 }
 
-/// §3.5 solver comparison: quality + solving time per scheme on the
+/// §3.5 solver comparison: quality + solving time per scheduler on the
 /// headline config.
-pub fn solver_compare(cfg: &EvalConfig) -> Vec<(Scheme, f64, f64)> {
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
-    let wl = crate::workload::models::alexnet(1);
-    let scfg = cfg.scheduler(Objective::Latency);
+pub fn solver_compare(cfg: &EvalConfig) -> Vec<(String, f64, f64)> {
+    let registry = cfg.registry();
+    let engine = Engine::new(Scenario::headline(
+        crate::workload::models::alexnet(1),
+    ));
     let mut rep = Reporter::new(
         "Solver comparison (AlexNet, 4x4 type-A HBM, latency)",
         &["scheme", "normalized latency", "solve time (s)"],
     );
     let mut out = Vec::new();
-    let base = run_scheme(Scheme::Baseline, &hw, &topo, &wl, &scfg)
-        .objective_value;
-    for s in [Scheme::Greedy, Scheme::Ga, Scheme::Miqp] {
+    let base = engine
+        .schedule(&registry, "baseline")
+        .expect("baseline always schedules")
+        .objective_value();
+    for key in ["greedy", "ga", "miqp"] {
+        let scheduler = registry.require(key).expect("table-3 scheduler");
         let t0 = std::time::Instant::now();
-        let r = run_scheme(s, &hw, &topo, &wl, &scfg);
+        let planned =
+            engine.schedule_with(scheduler).expect("scheduling failed");
         let dt = t0.elapsed().as_secs_f64();
-        let norm = r.objective_value / base;
+        let norm = planned.objective_value() / base;
         rep.row(vec![
-            s.name().to_string(),
+            scheduler.name().to_string(),
             format!("{norm:.3}"),
             format!("{dt:.2}"),
         ]);
-        out.push((s, norm, dt));
+        out.push((key.to_string(), norm, dt));
     }
     rep.print();
     out

@@ -1,5 +1,6 @@
 //! Evaluation harness (paper §7): one regeneration function per figure,
-//! shared by the CLI (`mcmcomm figures`) and the `cargo bench` targets.
+//! shared by the CLI (`mcmcomm figures`) and the `cargo bench` targets —
+//! all built on the engine's batch API ([`Engine::sweep`]).
 //!
 //! "Quick" mode shrinks solver budgets so every figure regenerates in
 //! seconds; "full" mode uses paper-scale budgets (GA ≈ 30 s class,
@@ -12,9 +13,9 @@ pub mod lp;
 use std::time::Duration;
 
 use crate::config::{HwConfig, MemKind, SystemType};
-use crate::cost::evaluator::{evaluate, Objective, OptFlags};
-use crate::opt::{ga::GaParams, run_scheme, Scheme, SchedulerConfig};
-use crate::topology::Topology;
+use crate::cost::evaluator::{Objective, OptFlags};
+use crate::engine::{Engine, Scenario, SchedulerRegistry};
+use crate::opt::ga::GaParams;
 use crate::workload::Workload;
 
 /// Harness-wide knobs.
@@ -31,87 +32,96 @@ impl Default for EvalConfig {
 }
 
 impl EvalConfig {
-    pub fn scheduler(&self, objective: Objective) -> SchedulerConfig {
+    /// GA knobs for this mode (quick: seconds-class, full: paper-class).
+    pub fn ga_params(&self) -> GaParams {
         if self.quick {
-            SchedulerConfig {
-                objective,
-                flags: OptFlags::ALL,
+            GaParams {
+                population: 24,
+                generations: 20,
                 seed: self.seed,
-                ga: GaParams {
-                    population: 24,
-                    generations: 20,
-                    seed: self.seed,
-                    ..Default::default()
-                },
-                miqp_budget: Duration::from_secs(4),
+                ..Default::default()
             }
         } else {
-            SchedulerConfig {
-                objective,
-                flags: OptFlags::ALL,
+            GaParams {
+                population: 48,
+                generations: 120,
                 seed: self.seed,
-                ga: GaParams {
-                    population: 48,
-                    generations: 120,
-                    seed: self.seed,
-                    budget: Some(Duration::from_secs(30)),
-                    ..Default::default()
-                },
-                miqp_budget: Duration::from_secs(120),
+                budget: Some(Duration::from_secs(30)),
+                ..Default::default()
             }
         }
     }
+
+    /// MIQP anytime budget for this mode.
+    pub fn miqp_budget(&self) -> Duration {
+        if self.quick {
+            Duration::from_secs(4)
+        } else {
+            Duration::from_secs(120)
+        }
+    }
+
+    /// The Table-3 scheduler set under this mode's solver budgets.
+    pub fn registry(&self) -> SchedulerRegistry {
+        SchedulerRegistry::with_params(
+            self.ga_params(),
+            self.miqp_budget(),
+            self.seed,
+        )
+    }
 }
 
-/// One (model, system) cell: objective value per scheme, normalized to
-/// the LS baseline (baseline == 1.0; lower is better).
+/// One (model, system) cell: objective value per scheduler key,
+/// normalized to the LS baseline (baseline == 1.0; lower is better).
 #[derive(Debug, Clone)]
 pub struct Cell {
     pub model: String,
     pub system: String,
-    pub normalized: Vec<(Scheme, f64)>,
+    pub normalized: Vec<(String, f64)>,
 }
 
-/// Run the Table-3 scheme set on one configuration.
+/// Run a scheduler set on one configuration through [`Engine::sweep`].
+/// The `"baseline"` scheduler is always run (it anchors normalization)
+/// even when absent from `keys`.
 pub fn run_cell(
     hw: &HwConfig,
     wl: &Workload,
     objective: Objective,
     cfg: &EvalConfig,
-    schemes: &[Scheme],
+    keys: &[&str],
 ) -> Cell {
-    let topo = Topology::from_hw(hw);
-    let scfg = cfg.scheduler(objective);
-    let base = run_scheme(Scheme::Baseline, hw, &topo, wl, &scfg);
-    let mut normalized = vec![(Scheme::Baseline, 1.0)];
-    for &s in schemes {
-        if s == Scheme::Baseline {
-            continue;
-        }
-        let out = run_scheme(s, hw, &topo, wl, &scfg);
-        normalized.push((s, out.objective_value / base.objective_value));
-    }
+    let registry = cfg.registry();
+    let mut all_keys = vec!["baseline"];
+    all_keys.extend(keys.iter().filter(|&&k| k != "baseline"));
+    let schedulers =
+        registry.select(&all_keys).expect("known scheduler keys");
+    let scenario = Scenario::builder()
+        .hw(hw.clone())
+        .workload(wl.clone())
+        .flags(OptFlags::ALL)
+        .objective(objective)
+        .build()
+        .expect("valid eval scenario");
+    let rows = Engine::sweep(std::iter::once(scenario), &schedulers)
+        .expect("sweep failed");
+    let row = rows.into_iter().next().expect("one scenario, one row");
+    let normalized =
+        row.normalized_to("baseline").expect("baseline always present");
     Cell {
-        model: wl.name.clone(),
-        system: format!(
-            "{}-{}-{}x{}",
-            hw.ty.short(),
-            hw.mem.name(),
-            hw.xdim,
-            hw.ydim
-        ),
+        model: row.model().to_string(),
+        system: row.system(),
         normalized,
     }
 }
 
-/// Geo-mean of the normalized values of one scheme across cells.
-pub fn scheme_geomean(cells: &[Cell], scheme: Scheme) -> f64 {
+/// Geo-mean of the normalized values of one scheduler across cells.
+pub fn scheduler_geomean(cells: &[Cell], key: &str) -> f64 {
     let vals: Vec<f64> = cells
         .iter()
         .filter_map(|c| {
             c.normalized
                 .iter()
-                .find(|(s, _)| *s == scheme)
+                .find(|(s, _)| s == key)
                 .map(|(_, v)| *v)
         })
         .collect();
@@ -123,13 +133,21 @@ pub fn suite() -> Vec<Workload> {
     crate::workload::models::evaluation_suite(1)
 }
 
-/// Convenience: evaluate one allocation-scheme on a fresh config.
-pub fn baseline_latency(ty: SystemType, mem: MemKind, grid: usize,
-                        wl: &Workload) -> f64 {
-    let hw = HwConfig::paper(ty, mem, grid);
-    let topo = Topology::from_hw(&hw);
-    let alloc = crate::partition::uniform_allocation(&hw, wl);
-    evaluate(&hw, &topo, wl, &alloc, OptFlags::NONE).latency_ns
+/// Convenience: uniform-LS latency on a fresh config.
+pub fn baseline_latency(
+    ty: SystemType,
+    mem: MemKind,
+    grid: usize,
+    wl: &Workload,
+) -> f64 {
+    let scenario = Scenario::builder()
+        .system(ty)
+        .mem(mem)
+        .grid(grid)
+        .workload(wl.clone())
+        .build()
+        .expect("valid baseline config");
+    scenario.baseline_report().latency_ns()
 }
 
 #[cfg(test)]
@@ -147,14 +165,14 @@ mod tests {
             &wl,
             Objective::Latency,
             &cfg,
-            &[Scheme::Baseline, Scheme::SimbaLike, Scheme::Ga],
+            &["baseline", "simba", "ga"],
         );
-        assert_eq!(cell.normalized[0], (Scheme::Baseline, 1.0));
+        assert_eq!(cell.normalized[0], ("baseline".to_string(), 1.0));
         // GA (with optimizations) must beat the baseline on type A HBM.
         let ga = cell
             .normalized
             .iter()
-            .find(|(s, _)| *s == Scheme::Ga)
+            .find(|(s, _)| s == "ga")
             .unwrap()
             .1;
         assert!(ga < 1.0, "GA normalized {ga} >= 1");
@@ -166,14 +184,23 @@ mod tests {
             Cell {
                 model: "a".into(),
                 system: "s".into(),
-                normalized: vec![(Scheme::Ga, 0.5)],
+                normalized: vec![("ga".into(), 0.5)],
             },
             Cell {
                 model: "b".into(),
                 system: "s".into(),
-                normalized: vec![(Scheme::Ga, 2.0)],
+                normalized: vec![("ga".into(), 2.0)],
             },
         ];
-        assert!((scheme_geomean(&cells, Scheme::Ga) - 1.0).abs() < 1e-12);
+        assert!((scheduler_geomean(&cells, "ga") - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quick_and_full_budgets_differ() {
+        let quick = EvalConfig { quick: true, seed: 1 };
+        let full = EvalConfig { quick: false, seed: 1 };
+        assert!(quick.ga_params().generations < full.ga_params().generations);
+        assert!(quick.miqp_budget() < full.miqp_budget());
+        assert_eq!(quick.registry().len(), 5);
     }
 }

@@ -5,28 +5,57 @@
 //! an end-to-end, congestion-aware and packaging-adaptive analytical
 //! framework for MCM accelerators, the diagonal-link / on-package
 //! redistribution / pipelining co-optimizations, and the GA + MIQP
-//! schedulers that solve the optimized framework — plus the PJRT runtime
+//! schedulers that solve the optimized framework — plus the runtime
 //! that executes the scheduled GEMM chunks on real tensors using HLO
 //! artifacts AOT-compiled from the JAX/Pallas layers (`python/compile`).
 //!
+//! ## Front door
+//!
+//! The public API is three nouns and one verb (see DESIGN.md):
+//! a [`Scenario`] (validated hardware + workload + flags + objective)
+//! is solved by a [`Scheduler`] into a [`Plan`], which scores into a
+//! [`Report`]:
+//!
+//! ```no_run
+//! use mcmcomm::{Engine, Scenario, SchedulerRegistry};
+//! use mcmcomm::workload::models::alexnet;
+//!
+//! let engine = Engine::new(Scenario::headline(alexnet(1)));
+//! let registry = SchedulerRegistry::standard(42);
+//! let report = engine
+//!     .schedule_with(registry.require("ga")?)?
+//!     .report();
+//! println!("latency {:.3} ms, EDP {:.3e}", report.latency_ns() / 1e6,
+//!          report.edp());
+//! # Ok::<(), mcmcomm::engine::EngineError>(())
+//! ```
+//!
 //! Module map (see DESIGN.md for the full inventory):
+//! * [`engine`] — Scenario → Plan → Report API, `Scheduler` trait +
+//!   registry, `Engine` orchestrator and batch sweeps
 //! * [`config`] — hardware configuration (paper §4.2.1, Table 2)
 //! * [`topology`] — grid types A–D, local indexing, hop models (§4.1, §5.1)
 //! * [`workload`] — GEMM-sequence IR + model zoo (§4.2.2, §7)
 //! * [`partition`] — workload allocations Px/Py (§4.2.3)
-//! * [`cost`] — latency / energy / EDP evaluator (§4.3–4.4, §5.3)
+//! * [`cost`] — latency / energy / EDP evaluator (§4.3–4.4, §5.3);
+//!   production call sites consume it through [`Report`]
 //! * [`redistribution`] — 3-step on-package redistribution (§5.2)
 //! * [`netsim`] — link-level congestion simulator (Fig. 3 substrate)
-//! * [`opt`] — GA, greedy and MIQP schedulers (§6)
+//! * [`opt`] — GA, greedy and MIQP solver backends (§6) behind the
+//!   [`Scheduler`] implementations in [`engine::schedulers`]
 //! * [`pipeline`] — RCPSP batch pipelining (§5.4)
-//! * [`runtime`] — PJRT execution of AOT HLO artifacts
+//! * [`runtime`] — execution of AOT HLO artifacts (PJRT when the
+//!   `pjrt-xla` feature is enabled, CPU interpreter otherwise)
 //! * [`coordinator`] — end-to-end orchestration + serving loop
-//! * [`eval`] — figure/table regeneration harnesses (§7)
-//! * [`util`] — offline substrates: RNG, JSON, CLI, bench, propcheck
+//! * [`eval`] — figure/table regeneration harnesses (§7), built on
+//!   [`Engine::sweep`]
+//! * [`util`] — offline substrates: RNG, JSON, CLI, bench, propcheck,
+//!   error handling
 
 pub mod config;
 pub mod coordinator;
 pub mod cost;
+pub mod engine;
 pub mod eval;
 pub mod netsim;
 pub mod opt;
@@ -37,3 +66,7 @@ pub mod runtime;
 pub mod topology;
 pub mod util;
 pub mod workload;
+
+pub use engine::{
+    Engine, Plan, Report, Scenario, Scheduler, SchedulerRegistry,
+};

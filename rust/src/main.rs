@@ -4,22 +4,22 @@
 //!   figures    regenerate the paper's figures (3, 8–13) and tables
 //!   optimize   run one scheduler on one workload/config and report
 //!   netsim     run the Figure-3 congestion study with custom knobs
-//!   run-e2e    execute a workload with real PJRT numerics end to end
+//!   run-e2e    execute a workload with real numerics end to end
 //!   serve      threaded batching-server demo on the simulated MCM
 //!   help       this text
 
 use std::time::Duration;
 
-use anyhow::{anyhow, bail, Result};
-
-use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::config::{MemKind, SystemType};
 use mcmcomm::coordinator::Executor;
-use mcmcomm::cost::evaluator::{evaluate, Objective};
+use mcmcomm::cost::evaluator::Objective;
+use mcmcomm::engine::{Engine, Scenario, Scheduler, SchedulerRegistry};
+use mcmcomm::ensure;
 use mcmcomm::eval::{figures, EvalConfig};
-use mcmcomm::opt::{run_scheme, Scheme, SchedulerConfig};
 use mcmcomm::runtime::{GemmRuntime, Manifest};
-use mcmcomm::topology::{Pos, Topology};
+use mcmcomm::topology::Pos;
 use mcmcomm::util::cli::Args;
+use mcmcomm::util::error::{Error, Result};
 use mcmcomm::workload::models;
 use mcmcomm::workload::Workload;
 
@@ -43,18 +43,7 @@ fn parse_model(name: &str, batch: usize) -> Result<Workload> {
         "vit" => models::vit(batch),
         "vision_mamba" | "vim" => models::vision_mamba(batch),
         "hydranet" => models::hydranet(batch),
-        _ => bail!("unknown model '{name}'"),
-    })
-}
-
-fn parse_scheme(name: &str) -> Result<Scheme> {
-    Ok(match name {
-        "baseline" | "ls" => Scheme::Baseline,
-        "simba" => Scheme::SimbaLike,
-        "greedy" => Scheme::Greedy,
-        "ga" => Scheme::Ga,
-        "miqp" => Scheme::Miqp,
-        _ => bail!("unknown scheme '{name}'"),
+        _ => return Err(Error::msg(format!("unknown model '{name}'"))),
     })
 }
 
@@ -64,7 +53,7 @@ fn parse_type(name: &str) -> Result<SystemType> {
         "B" => SystemType::B,
         "C" => SystemType::C,
         "D" => SystemType::D,
-        _ => bail!("unknown system type '{name}'"),
+        _ => return Err(Error::msg(format!("unknown system type '{name}'"))),
     })
 }
 
@@ -72,7 +61,7 @@ fn parse_mem(name: &str) -> Result<MemKind> {
     Ok(match name.to_ascii_lowercase().as_str() {
         "hbm" => MemKind::Hbm,
         "dram" => MemKind::Dram,
-        _ => bail!("unknown memory kind '{name}'"),
+        _ => return Err(Error::msg(format!("unknown memory kind '{name}'"))),
     })
 }
 
@@ -81,9 +70,9 @@ fn cmd_figures(mut args: Args) -> Result<()> {
     let fig = args.get("fig");
     let cfg = EvalConfig {
         quick: !args.flag("full"),
-        seed: args.get_usize("seed", 42).map_err(|e| anyhow!(e))? as u64,
+        seed: args.get_usize("seed", 42).map_err(Error::msg)? as u64,
     };
-    args.finish().map_err(|e| anyhow!(e))?;
+    args.finish().map_err(Error::msg)?;
     let grids: &[usize] = if cfg.quick { &[4, 8] } else { &[4, 8, 16] };
     let run = |f: &str| -> Result<()> {
         match f {
@@ -111,7 +100,7 @@ fn cmd_figures(mut args: Args) -> Result<()> {
             "solver" => {
                 figures::solver_compare(&cfg);
             }
-            _ => bail!("unknown figure '{f}'"),
+            _ => return Err(Error::msg(format!("unknown figure '{f}'"))),
         }
         Ok(())
     };
@@ -120,74 +109,82 @@ fn cmd_figures(mut args: Args) -> Result<()> {
             run(f)?;
         }
     } else {
-        run(&fig.ok_or_else(|| anyhow!("need --fig or --all"))?)?;
+        run(&fig.ok_or_else(|| Error::msg("need --fig or --all"))?)?;
     }
     Ok(())
 }
 
 fn cmd_optimize(mut args: Args) -> Result<()> {
     let model = args.get_or("model", "alexnet");
-    let scheme = parse_scheme(&args.get_or("scheme", "ga"))?;
+    let scheme = args.get_or("scheme", "ga");
     let ty = parse_type(&args.get_or("type", "A"))?;
     let mem = parse_mem(&args.get_or("mem", "hbm"))?;
-    let grid = args.get_usize("grid", 4).map_err(|e| anyhow!(e))?;
-    let batch = args.get_usize("batch", 1).map_err(|e| anyhow!(e))?;
+    let grid = args.get_usize("grid", 4).map_err(Error::msg)?;
+    let batch = args.get_usize("batch", 1).map_err(Error::msg)?;
     let objective = match args.get_or("objective", "latency").as_str() {
         "latency" => Objective::Latency,
         "edp" => Objective::Edp,
-        o => bail!("unknown objective '{o}'"),
+        o => return Err(Error::msg(format!("unknown objective '{o}'"))),
     };
-    let seed = args.get_usize("seed", 42).map_err(|e| anyhow!(e))? as u64;
-    args.finish().map_err(|e| anyhow!(e))?;
+    let seed = args.get_usize("seed", 42).map_err(Error::msg)? as u64;
+    args.finish().map_err(Error::msg)?;
 
-    let wl = parse_model(&model, batch)?;
-    let hw = HwConfig::paper(ty, mem, grid);
-    let topo = Topology::from_hw(&hw);
-    let cfg = SchedulerConfig { objective, seed, ..Default::default() };
+    let registry = SchedulerRegistry::standard(seed);
+    let scheduler = registry.require(&scheme)?;
+    let scenario = Scenario::builder()
+        .system(ty)
+        .mem(mem)
+        .grid(grid)
+        .workload(parse_model(&model, batch)?)
+        .objective(objective)
+        .build()?;
+    let engine = Engine::new(scenario);
 
     println!(
         "optimizing {} on {} {} {}x{} (objective: {objective:?}, scheme: {})",
-        wl.name,
-        hw.ty.name(),
-        hw.mem.name(),
+        engine.scenario().workload().name,
+        engine.scenario().hw().ty.name(),
+        engine.scenario().hw().mem.name(),
         grid,
         grid,
-        scheme.name()
+        scheduler.name()
     );
     let t0 = std::time::Instant::now();
-    let base = run_scheme(Scheme::Baseline, &hw, &topo, &wl, &cfg);
-    let out = run_scheme(scheme, &hw, &topo, &wl, &cfg);
-    let cost = evaluate(&hw, &topo, &wl, &out.alloc, out.flags);
+    let base = engine.schedule(&registry, "baseline")?;
+    let planned = engine.schedule_with(scheduler)?;
+    let report = planned.report();
     println!("solve time         : {:.2}s", t0.elapsed().as_secs_f64());
-    println!("baseline objective : {:.3e}", base.objective_value);
-    println!("optimized objective: {:.3e}", out.objective_value);
+    println!("baseline objective : {:.3e}", base.objective_value());
+    println!("optimized objective: {:.3e}", planned.objective_value());
     println!(
         "speedup            : {:.2}x",
-        base.objective_value / out.objective_value
+        base.objective_value() / planned.objective_value()
     );
     println!(
         "latency {:.3} ms | energy {:.3} mJ | EDP {:.3e} pJ*ns",
-        cost.latency_ns / 1e6,
-        cost.energy_pj / 1e9,
-        cost.edp()
+        report.latency_ns() / 1e6,
+        report.energy_pj() / 1e9,
+        report.edp()
     );
-    for (i, p) in out.alloc.parts.iter().enumerate().take(8) {
-        println!("  op {i:>2} {:<12} px={:?} py={:?}", wl.ops[i].name, p.px, p.py);
+    let plan = planned.plan();
+    let ops = &engine.scenario().workload().ops;
+    for (i, p) in plan.alloc.parts.iter().enumerate().take(8) {
+        println!("  op {i:>2} {:<12} px={:?} py={:?}", ops[i].name, p.px, p.py);
     }
-    if out.alloc.parts.len() > 8 {
-        println!("  ... ({} ops total)", out.alloc.parts.len());
+    if plan.alloc.parts.len() > 8 {
+        println!("  ... ({} ops total)", plan.alloc.parts.len());
     }
     Ok(())
 }
 
 fn cmd_netsim(mut args: Args) -> Result<()> {
-    let grid = args.get_usize("grid", 4).map_err(|e| anyhow!(e))?;
-    let bw_nop = args.get_f64("bw-nop", 60.0).map_err(|e| anyhow!(e))?;
-    let bw_mem = args.get_f64("bw-mem", 1024.0).map_err(|e| anyhow!(e))?;
+    let grid = args.get_usize("grid", 4).map_err(Error::msg)?;
+    let bw_nop = args.get_f64("bw-nop", 60.0).map_err(Error::msg)?;
+    let bw_mem = args.get_f64("bw-mem", 1024.0).map_err(Error::msg)?;
     let central = args.flag("central");
     let diagonal = args.flag("diagonal");
-    let gb = args.get_f64("gb", 1e9).map_err(|e| anyhow!(e))?;
-    args.finish().map_err(|e| anyhow!(e))?;
+    let gb = args.get_f64("gb", 1e9).map_err(Error::msg)?;
+    args.finish().map_err(Error::msg)?;
     let attach = if central {
         Pos::new((grid - 1) / 2, (grid - 1) / 2)
     } else {
@@ -206,30 +203,29 @@ fn cmd_netsim(mut args: Args) -> Result<()> {
 
 fn cmd_run_e2e(mut args: Args) -> Result<()> {
     let model = args.get_or("model", "alexnet");
-    let scheme = parse_scheme(&args.get_or("scheme", "ga"))?;
-    let scale = args.get_usize("scale", 16).map_err(|e| anyhow!(e))?;
+    let scheme = args.get_or("scheme", "ga");
+    let scale = args.get_usize("scale", 16).map_err(Error::msg)?;
     let artifacts = args.get_or(
         "artifacts",
         Manifest::default_dir().to_str().unwrap_or("artifacts"),
     );
-    let seed = args.get_usize("seed", 42).map_err(|e| anyhow!(e))? as u64;
-    args.finish().map_err(|e| anyhow!(e))?;
+    let seed = args.get_usize("seed", 42).map_err(Error::msg)? as u64;
+    args.finish().map_err(Error::msg)?;
 
     let full = parse_model(&model, 1)?;
     let wl = models::scaled_down(&full, scale, 16);
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
-    let cfg = SchedulerConfig { seed, ..Default::default() };
-    let out = run_scheme(scheme, &hw, &topo, &wl, &cfg);
+    let registry = SchedulerRegistry::standard(seed);
+    let engine = Engine::new(Scenario::headline(wl));
+    let planned = engine.schedule(&registry, &scheme)?;
 
     let runtime = GemmRuntime::new(std::path::Path::new(&artifacts))?;
-    println!("PJRT platform: {}", runtime.platform());
-    let exec =
-        Executor::new(&hw, &topo, &wl, &out.alloc, out.flags, &runtime);
+    println!("runtime platform: {}", runtime.platform());
+    let exec = Executor::from_plan(engine.scenario(), planned.plan(),
+                                   &runtime);
     let report = exec.run(seed, true)?;
     println!(
-        "{}: {} chunks via PJRT in {:.2?} host wall, max |err| vs CPU ref = {:.2e}",
-        wl.name,
+        "{}: {} chunks executed in {:.2?} host wall, max |err| vs CPU ref = {:.2e}",
+        engine.scenario().workload().name,
         report.chunks_executed,
         report.host_wall,
         report.max_abs_err
@@ -240,47 +236,41 @@ fn cmd_run_e2e(mut args: Args) -> Result<()> {
         report.modeled.energy_pj / 1e9,
         report.modeled.edp()
     );
-    anyhow::ensure!(report.max_abs_err < 1e-3, "numeric mismatch!");
+    ensure!(report.max_abs_err < 1e-3, "numeric mismatch!");
     println!("e2e OK");
     Ok(())
 }
 
 fn cmd_serve(mut args: Args) -> Result<()> {
-    let n_req = args.get_usize("requests", 32).map_err(|e| anyhow!(e))?;
-    let max_batch = args.get_usize("max-batch", 8).map_err(|e| anyhow!(e))?;
+    let n_req = args.get_usize("requests", 32).map_err(Error::msg)?;
+    let max_batch = args.get_usize("max-batch", 8).map_err(Error::msg)?;
     let model = args.get_or("model", "vit");
     let artifacts = args.get_or(
         "artifacts",
         Manifest::default_dir().to_str().unwrap_or("artifacts"),
     );
-    args.finish().map_err(|e| anyhow!(e))?;
+    args.finish().map_err(Error::msg)?;
 
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
     let full = parse_model(&model, 1)?;
     let wl = models::scaled_down(&full, 16, 16);
-    let cfg = SchedulerConfig::default();
-    let out = run_scheme(Scheme::Ga, &hw, &topo, &wl, &cfg);
-    let alloc = out.alloc.clone();
-    let flags = out.flags;
-    let hw2 = hw.clone();
-    let topo2 = topo.clone();
-    let wl2 = wl.clone();
-    // The PJRT client is not Send: build the runtime inside the batcher
-    // thread via the factory.
+    let registry = SchedulerRegistry::standard(42);
+    let engine = Engine::new(Scenario::headline(wl));
+    let plan = engine.schedule(&registry, "ga")?.into_plan();
+    let scenario = engine.scenario().clone();
+    // The runtime may not be Send (PJRT clients hold Rc): build it
+    // inside the batcher thread via the factory.
     let factory: mcmcomm::coordinator::server::RunnerFactory =
         Box::new(move || {
             let runtime = GemmRuntime::new(std::path::Path::new(&artifacts))
                 .expect("loading artifacts");
             // Warm the compile cache so serving latencies are steady.
-            Executor::new(&hw2, &topo2, &wl2, &alloc, flags, &runtime)
+            Executor::from_plan(&scenario, &plan, &runtime)
                 .run(0, false)
                 .expect("warmup run");
+            let cost = scenario.report(&plan).breakdown;
             Box::new(move |bsz| {
-                let exec = Executor::new(&hw2, &topo2, &wl2, &alloc, flags,
-                                         &runtime);
+                let exec = Executor::from_plan(&scenario, &plan, &runtime);
                 let _ = exec.run(bsz as u64, false);
-                let cost = evaluate(&hw2, &topo2, &wl2, &alloc, flags);
                 let batch_ns = cost.latency_ns * bsz as f64
                     / mcmcomm::pipeline::pipeline_speedup(&cost, bsz.max(1));
                 (batch_ns, batch_ns / bsz as f64)

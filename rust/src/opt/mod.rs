@@ -1,4 +1,12 @@
-//! Schedulers (paper §6): the four Table-3 schemes behind one interface.
+//! Scheduler solver backends (paper §6): the GA, greedy and MIQP
+//! optimizers, plus legacy shims for the pre-engine scheme API.
+//!
+//! The front door is `engine`: the five Table-3 schemes are
+//! [`crate::engine::schedulers`] implementing
+//! [`crate::engine::Scheduler`], discovered through
+//! [`crate::engine::SchedulerRegistry`]. The free functions in
+//! [`ga`], [`greedy`] and [`miqp`] remain the low-level solver entry
+//! points those implementations call.
 
 pub mod ga;
 pub mod greedy;
@@ -7,12 +15,18 @@ pub mod miqp;
 use std::time::Duration;
 
 use crate::config::HwConfig;
-use crate::cost::evaluator::{evaluate, Objective, OptFlags};
-use crate::partition::{simba_allocation, uniform_allocation, Allocation};
+use crate::cost::evaluator::{Objective, OptFlags};
+use crate::engine::{schedulers, Scenario, Scheduler};
+use crate::partition::Allocation;
 use crate::topology::Topology;
 use crate::workload::Workload;
 
 /// Table 3 — the evaluated scheduling schemes.
+#[deprecated(
+    since = "0.2.0",
+    note = "iterate `dyn Scheduler`s from `engine::SchedulerRegistry` \
+            instead of matching scheme enums"
+)]
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Scheme {
     /// Layer Sequential, uniform partitioning, no optimizations.
@@ -27,6 +41,7 @@ pub enum Scheme {
     Miqp,
 }
 
+#[allow(deprecated)]
 impl Scheme {
     pub const ALL: [Scheme; 5] = [
         Scheme::Baseline,
@@ -46,6 +61,17 @@ impl Scheme {
         }
     }
 
+    /// Registry key of the equivalent [`crate::engine::Scheduler`].
+    pub fn key(self) -> &'static str {
+        match self {
+            Scheme::Baseline => "baseline",
+            Scheme::SimbaLike => "simba",
+            Scheme::Greedy => "greedy",
+            Scheme::Ga => "ga",
+            Scheme::Miqp => "miqp",
+        }
+    }
+
     /// MCMComm optimizations apply only to the MCMComm schedulers
     /// (Table 3 column "MCMComm Optimizations").
     pub fn flags(self, requested: OptFlags) -> OptFlags {
@@ -58,7 +84,12 @@ impl Scheme {
     }
 }
 
-/// Configuration for a scheduling run.
+/// Configuration for a legacy scheduling run.
+#[deprecated(
+    since = "0.2.0",
+    note = "objective/flags live on `engine::Scenario`; solver knobs \
+            live on the `engine::schedulers` structs"
+)]
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
     pub objective: Objective,
@@ -68,6 +99,7 @@ pub struct SchedulerConfig {
     pub miqp_budget: Duration,
 }
 
+#[allow(deprecated)]
 impl Default for SchedulerConfig {
     fn default() -> Self {
         SchedulerConfig {
@@ -80,8 +112,10 @@ impl Default for SchedulerConfig {
     }
 }
 
-/// A scheduling outcome: allocation + true-evaluator score.
+/// A legacy scheduling outcome: allocation + true-evaluator score.
+#[deprecated(since = "0.2.0", note = "use `engine::Plan`")]
 #[derive(Debug, Clone)]
+#[allow(deprecated)]
 pub struct ScheduleOutcome {
     pub scheme: Scheme,
     pub alloc: Allocation,
@@ -89,7 +123,13 @@ pub struct ScheduleOutcome {
     pub flags: OptFlags,
 }
 
-/// Run one scheme end to end.
+/// Run one scheme end to end (legacy shim; thin delegation to the
+/// engine schedulers, so results are identical by construction).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `Engine::new(scenario).schedule_with(&scheduler)`"
+)]
+#[allow(deprecated)]
 pub fn run_scheme(
     scheme: Scheme,
     hw: &HwConfig,
@@ -97,45 +137,34 @@ pub fn run_scheme(
     wl: &Workload,
     cfg: &SchedulerConfig,
 ) -> ScheduleOutcome {
-    let flags = scheme.flags(cfg.flags);
-    let (alloc, objective_value) = match scheme {
-        Scheme::Baseline => {
-            let a = uniform_allocation(hw, wl);
-            let v = evaluate(hw, topo, wl, &a, flags).objective(cfg.objective);
-            (a, v)
-        }
-        Scheme::SimbaLike => {
-            let a = simba_allocation(hw, topo, wl);
-            let v = evaluate(hw, topo, wl, &a, flags).objective(cfg.objective);
-            (a, v)
-        }
-        Scheme::Greedy => {
-            let r = greedy::optimize(hw, topo, wl, flags, cfg.objective);
-            (r.alloc, r.objective_value)
-        }
-        Scheme::Ga => {
-            let mut p = cfg.ga.clone();
-            p.seed = cfg.seed;
-            let r = ga::optimize(hw, topo, wl, flags, cfg.objective, &p);
-            (r.alloc, r.objective_value)
-        }
-        Scheme::Miqp => {
-            let r = miqp::optimize(
-                hw,
-                topo,
-                wl,
-                flags,
-                cfg.objective,
-                cfg.miqp_budget,
-                cfg.seed,
-            );
-            (r.alloc, r.objective_value)
-        }
-    };
-    ScheduleOutcome { scheme, alloc, objective_value, flags }
+    let scenario = Scenario::builder()
+        .hw(hw.clone())
+        .topology(topo.clone())
+        .workload(wl.clone())
+        .flags(cfg.flags)
+        .objective(cfg.objective)
+        .build()
+        .expect("run_scheme: invalid hardware/workload");
+    let plan = match scheme {
+        Scheme::Baseline => schedulers::Baseline.schedule(&scenario),
+        Scheme::SimbaLike => schedulers::SimbaLike.schedule(&scenario),
+        Scheme::Greedy => schedulers::Greedy.schedule(&scenario),
+        Scheme::Ga => schedulers::Ga::new(cfg.ga.clone(), cfg.seed)
+            .schedule(&scenario),
+        Scheme::Miqp => schedulers::Miqp::new(cfg.miqp_budget, cfg.seed)
+            .schedule(&scenario),
+    }
+    .expect("run_scheme: scheduling failed");
+    ScheduleOutcome {
+        scheme,
+        alloc: plan.alloc,
+        objective_value: plan.objective_value,
+        flags: plan.flags,
+    }
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::config::{MemKind, SystemType};
@@ -166,6 +195,15 @@ mod tests {
             let out = run_scheme(s, &hw, &topo, &wl, &cfg);
             assert!(out.alloc.validate(&wl, &hw).is_ok(), "{}", s.name());
             assert!(out.objective_value > 0.0);
+        }
+    }
+
+    #[test]
+    fn scheme_keys_resolve_in_registry() {
+        let registry = crate::engine::SchedulerRegistry::standard(42);
+        for s in Scheme::ALL {
+            let sched = registry.get(s.key()).expect(s.key());
+            assert_eq!(sched.name(), s.name());
         }
     }
 }

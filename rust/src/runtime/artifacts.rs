@@ -9,9 +9,9 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::util::error::{Context, Error, Result};
 use crate::util::json::Json;
+use crate::{bail, err};
 
 /// One AOT-compiled GEMM bucket.
 #[derive(Debug, Clone, PartialEq)]
@@ -41,11 +41,11 @@ impl Manifest {
                     dir.display()
                 )
             })?;
-        let json = Json::parse(&raw).map_err(|e| anyhow!("{e}"))?;
+        let json = Json::parse(&raw).map_err(Error::msg)?;
         let version = json
             .get("version")
             .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow!("manifest missing version"))?;
+            .ok_or_else(|| err!("manifest missing version"))?;
         if version != 1 {
             bail!("unsupported manifest version {version}");
         }
@@ -53,23 +53,23 @@ impl Manifest {
         for b in json
             .get("buckets")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing buckets"))?
+            .ok_or_else(|| err!("manifest missing buckets"))?
         {
             let field = |k: &str| {
                 b.get(k)
                     .and_then(Json::as_usize)
-                    .ok_or_else(|| anyhow!("bucket missing '{k}'"))
+                    .ok_or_else(|| err!("bucket missing '{k}'"))
             };
             buckets.push(Bucket {
                 name: b
                     .get("name")
                     .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("bucket missing name"))?
+                    .ok_or_else(|| err!("bucket missing name"))?
                     .to_string(),
                 path: dir.join(
                     b.get("path")
                         .and_then(Json::as_str)
-                        .ok_or_else(|| anyhow!("bucket missing path"))?,
+                        .ok_or_else(|| err!("bucket missing path"))?,
                 ),
                 m: field("m")?,
                 k: field("k")?,
@@ -77,7 +77,7 @@ impl Manifest {
                 relu: b
                     .get("relu")
                     .and_then(Json::as_bool)
-                    .ok_or_else(|| anyhow!("bucket missing relu"))?,
+                    .ok_or_else(|| err!("bucket missing relu"))?,
             });
         }
         if buckets.is_empty() {
@@ -104,7 +104,7 @@ impl Manifest {
             })
             .min_by_key(|b| b.m * b.k + b.k * b.n + b.m * b.n)
             .ok_or_else(|| {
-                anyhow!(
+                err!(
                     "no bucket covers m={m} k={k} n={n} relu={relu} \
                      (largest emitted dim: {}); re-run aot.py with bigger \
                      --dims or scale the workload down",

@@ -1,72 +1,71 @@
-//! PJRT execution of AOT HLO artifacts — the only place Rust touches
-//! XLA. Loads `artifacts/*.hlo.txt` (HLO **text**: the id-safe
-//! interchange format, see python/compile/aot.py), compiles once per
-//! bucket on the CPU PJRT client, and executes padded GEMM chunks.
+//! GEMM runtime over the AOT bucket artifacts — the only place Rust
+//! would touch XLA. Loads `artifacts/manifest.json`, resolves every
+//! chunk to the smallest covering power-of-two bucket, pads, executes,
+//! and slices the result back.
+//!
+//! Two backends share the same bucket/padding contract:
+//!
+//! * **default** — a pure-Rust CPU interpreter: the padded GEMM is
+//!   computed by [`reference_gemm`]. Zero dependencies, bit-exact with
+//!   the reference by construction, so the whole e2e path (executor,
+//!   server, examples) runs on the offline image.
+//! * **`pjrt-xla` feature** — compiles each bucket's HLO text once on
+//!   the PJRT CPU client via the `xla` crate (vendor it yourself; the
+//!   offline image has no crates.io) and executes chunks there.
 //!
 //! Python never runs here: this is the request path.
 
-use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use crate::ensure;
+use crate::util::error::Result;
 
-use super::artifacts::{pad_matrix, unpad_matrix, Manifest};
+use super::artifacts::{pad_matrix, unpad_matrix, Bucket, Manifest};
 
-/// Lazily-compiled bucket executables over one PJRT client.
+#[cfg(feature = "pjrt-xla")]
+use crate::util::error::Context;
+
+/// Lazily-compiled bucket executables over one backend.
 pub struct GemmRuntime {
+    #[cfg(feature = "pjrt-xla")]
     client: xla::PjRtClient,
+    #[cfg(feature = "pjrt-xla")]
+    cache: Mutex<std::collections::HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Interpreter backend: buckets "compiled" (touched) so far.
+    #[cfg(not(feature = "pjrt-xla"))]
+    cache: Mutex<std::collections::HashSet<String>>,
     manifest: Manifest,
-    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
     /// Executed-chunk counter (metrics).
     pub executions: std::sync::atomic::AtomicU64,
 }
 
 impl GemmRuntime {
     pub fn new(artifact_dir: &Path) -> Result<Self> {
-        let client =
-            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let manifest = Manifest::load(artifact_dir)?;
         Ok(GemmRuntime {
-            client,
+            #[cfg(feature = "pjrt-xla")]
+            client: xla::PjRtClient::cpu()
+                .context("creating PJRT CPU client")?,
+            cache: Mutex::new(Default::default()),
             manifest,
-            cache: Mutex::new(HashMap::new()),
             executions: std::sync::atomic::AtomicU64::new(0),
         })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "pjrt-xla")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "pjrt-xla"))]
+        {
+            "cpu-interpreter".to_string()
+        }
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
-    }
-
-    /// Run `f` with the (lazily compiled) executable for a bucket.
-    /// `PjRtLoadedExecutable` is not `Clone`, so callers execute under
-    /// the cache lock; executions are short and the CPU client
-    /// serializes anyway.
-    fn with_executable<T>(
-        &self,
-        name: &str,
-        path: &Path,
-        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<T>,
-    ) -> Result<T> {
-        let mut cache = self.cache.lock().unwrap();
-        if !cache.contains_key(name) {
-            let proto =
-                xla::HloModuleProto::from_text_file(path).with_context(
-                    || format!("parsing HLO text {}", path.display()),
-                )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling bucket {name}"))?;
-            cache.insert(name.to_string(), exe);
-        }
-        f(cache.get(name).unwrap())
     }
 
     /// Number of compiled executables currently cached.
@@ -86,10 +85,10 @@ impl GemmRuntime {
         n: usize,
         relu: bool,
     ) -> Result<Vec<f32>> {
-        anyhow::ensure!(x.len() == m * k, "x: {} != {m}x{k}", x.len());
-        anyhow::ensure!(w.len() == k * n, "w: {} != {k}x{n}", w.len());
+        ensure!(x.len() == m * k, "x: {} != {m}x{k}", x.len());
+        ensure!(w.len() == k * n, "w: {} != {k}x{n}", w.len());
         if let Some(b) = bias {
-            anyhow::ensure!(b.len() == n, "bias: {} != {n}", b.len());
+            ensure!(b.len() == n, "bias: {} != {n}", b.len());
         }
         if m == 0 || n == 0 {
             return Ok(Vec::new());
@@ -101,24 +100,77 @@ impl GemmRuntime {
         if let Some(b) = bias {
             bp[..n].copy_from_slice(b);
         }
-        let lx = xla::Literal::vec1(&xp)
-            .reshape(&[bucket.m as i64, bucket.k as i64])?;
-        let lw = xla::Literal::vec1(&wp)
-            .reshape(&[bucket.k as i64, bucket.n as i64])?;
-        let lb = xla::Literal::vec1(&bp).reshape(&[bucket.n as i64])?;
-
-        let full = self.with_executable(&bucket.name, &bucket.path, |exe| {
-            let result = exe.execute::<xla::Literal>(&[lx, lw, lb])?[0][0]
-                .to_literal_sync()?;
-            Ok(result.to_tuple1()?.to_vec::<f32>()?)
-        })?;
+        let full = self.execute_bucket(bucket, &xp, &wp, &bp)?;
         self.executions
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         Ok(unpad_matrix(&full, bucket.m, bucket.n, m, n))
     }
+
+    /// Interpreter backend: the padded bucket GEMM is computed by the
+    /// CPU reference. Padding with zeros is exact for GEMM, so this is
+    /// bit-identical to slicing the true bucket result.
+    #[cfg(not(feature = "pjrt-xla"))]
+    fn execute_bucket(
+        &self,
+        bucket: &Bucket,
+        xp: &[f32],
+        wp: &[f32],
+        bp: &[f32],
+    ) -> Result<Vec<f32>> {
+        // "Compile" = record the bucket on first use, mirroring the
+        // one-executable-per-bucket cache of the XLA path.
+        self.cache.lock().unwrap().insert(bucket.name.clone());
+        Ok(reference_gemm(
+            xp,
+            wp,
+            Some(bp),
+            bucket.m,
+            bucket.k,
+            bucket.n,
+            bucket.relu,
+        ))
+    }
+
+    /// XLA backend: lazily compile the bucket's HLO text, then execute.
+    /// `PjRtLoadedExecutable` is not `Clone`, so execution happens under
+    /// the cache lock; executions are short and the CPU client
+    /// serializes anyway.
+    #[cfg(feature = "pjrt-xla")]
+    fn execute_bucket(
+        &self,
+        bucket: &Bucket,
+        xp: &[f32],
+        wp: &[f32],
+        bp: &[f32],
+    ) -> Result<Vec<f32>> {
+        let lx = xla::Literal::vec1(xp)
+            .reshape(&[bucket.m as i64, bucket.k as i64])?;
+        let lw = xla::Literal::vec1(wp)
+            .reshape(&[bucket.k as i64, bucket.n as i64])?;
+        let lb = xla::Literal::vec1(bp).reshape(&[bucket.n as i64])?;
+        let mut cache = self.cache.lock().unwrap();
+        if !cache.contains_key(&bucket.name) {
+            let proto = xla::HloModuleProto::from_text_file(&bucket.path)
+                .with_context(|| {
+                    format!("parsing HLO text {}", bucket.path.display())
+                })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling bucket {}", bucket.name))?;
+            cache.insert(bucket.name.clone(), exe);
+        }
+        let exe = cache.get(&bucket.name).unwrap();
+        let result =
+            exe.execute::<xla::Literal>(&[lx, lw, lb])?[0][0]
+                .to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
 }
 
-/// Plain CPU reference GEMM used to verify the PJRT path end to end.
+/// Plain CPU reference GEMM used to verify the runtime path end to end
+/// (and, in the interpreter backend, to execute it).
 pub fn reference_gemm(
     x: &[f32],
     w: &[f32],
@@ -173,6 +225,43 @@ mod tests {
         assert_eq!(out, [0.0, 2.0, 0.0, 4.0]);
     }
 
-    // PJRT-backed tests live in rust/tests/e2e_runtime.rs (they need
-    // `make artifacts` to have run).
+    #[cfg(not(feature = "pjrt-xla"))]
+    #[test]
+    fn interpreter_backend_matches_reference_through_padding() {
+        let dir =
+            std::env::temp_dir().join("mcmcomm_pjrt_interp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "buckets": [
+                {"name": "b16", "path": "b16.hlo.txt", "m": 16, "k": 16,
+                 "n": 16, "relu": false},
+                {"name": "b16r", "path": "b16r.hlo.txt", "m": 16, "k": 16,
+                 "n": 16, "relu": true}]}"#,
+        )
+        .unwrap();
+        let rt = GemmRuntime::new(&dir).unwrap();
+        assert_eq!(rt.platform(), "cpu-interpreter");
+        let mut rng = crate::util::rng::Pcg::seeded(9);
+        let (m, k, n) = (5, 11, 7); // ragged: forces padding
+        let x: Vec<f32> =
+            (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> =
+            (0..k * n).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        for relu in [false, true] {
+            let got = rt.gemm(&x, &w, Some(&b), m, k, n, relu).unwrap();
+            let want =
+                reference_gemm(&x, &w, Some(&b), m, k, n, relu);
+            assert_eq!(got, want, "relu={relu}");
+        }
+        assert_eq!(rt.compiled_count(), 2);
+        assert_eq!(
+            rt.executions.load(std::sync::atomic::Ordering::Relaxed),
+            2
+        );
+    }
+
+    // XLA-backed tests live in rust/tests/e2e_runtime.rs (they need
+    // `make artifacts` and the `pjrt-xla` feature).
 }

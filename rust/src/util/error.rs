@@ -1,0 +1,192 @@
+//! Minimal error substrate (anyhow is unavailable offline): a
+//! context-chaining error type plus the `err!` / `bail!` / `ensure!`
+//! macros and a `Context` extension trait.
+//!
+//! Semantics mirror the anyhow conventions the repo grew up with:
+//! `Display` prints the outermost context message, the alternate form
+//! (`{:#}`) prints the whole chain outermost-first, and `?` converts any
+//! `std::error::Error` automatically. Like `anyhow::Error`, [`Error`]
+//! deliberately does **not** implement `std::error::Error` — that is
+//! what makes the blanket `From` impl coherent.
+
+use std::fmt;
+
+/// A chain of human-readable messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Prepend a higher-level context message.
+    pub fn push_context(mut self, m: impl fmt::Display) -> Error {
+        self.chain.insert(0, m.to_string());
+        self
+    }
+
+    /// The messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (`anyhow::Context` shape).
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D)
+        -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::from(e).push_context(msg))
+    }
+
+    fn with_context<D: fmt::Display>(
+        self,
+        f: impl FnOnce() -> D,
+    ) -> Result<T> {
+        self.map_err(|e| Error::from(e).push_context(f()))
+    }
+}
+
+impl<T> Context<T> for std::result::Result<T, Error> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| e.push_context(msg))
+    }
+
+    fn with_context<D: fmt::Display>(
+        self,
+        f: impl FnOnce() -> D,
+    ) -> Result<T> {
+        self.map_err(|e| e.push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<D: fmt::Display>(
+        self,
+        f: impl FnOnce() -> D,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_prints_outermost_context() {
+        let e: Error =
+            Err::<(), _>(io_err()).context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+    }
+
+    #[test]
+    fn with_context_chains_on_crate_errors() {
+        let base: Result<()> = Err(Error::msg("inner"));
+        let e = base.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(e.to_string(), "outer 1");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["outer 1", "inner"]);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out");
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<usize> = None;
+        assert_eq!(
+            none.context("missing value").unwrap_err().to_string(),
+            "missing value"
+        );
+    }
+}

@@ -2,6 +2,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod math;
 pub mod propcheck;

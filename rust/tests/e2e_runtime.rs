@@ -1,23 +1,73 @@
-//! PJRT-backed end-to-end tests: AOT artifacts -> runtime -> executor.
-//! These need `make artifacts` to have been run (skipped gracefully
-//! otherwise so `cargo test` works on a fresh checkout).
+//! Runtime-backed end-to-end tests: bucket artifacts -> runtime ->
+//! executor, driven through the engine API.
+//!
+//! Default build (interpreter backend): a synthetic power-of-two bucket
+//! manifest is written to a temp dir, so these tests always run — the
+//! interpreter never reads the HLO files, only the manifest contract.
+//! With the `pjrt-xla` feature the tests need real AOT artifacts
+//! (`make artifacts`) and skip gracefully otherwise.
 
-use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::config::{MemKind, SystemType};
 use mcmcomm::coordinator::Executor;
-use mcmcomm::opt::{run_scheme, Scheme, SchedulerConfig};
+use mcmcomm::engine::{Engine, Scenario, SchedulerRegistry};
 use mcmcomm::runtime::pjrt::reference_gemm;
-use mcmcomm::runtime::{GemmRuntime, Manifest};
-use mcmcomm::topology::Topology;
+use mcmcomm::runtime::GemmRuntime;
 use mcmcomm::util::rng::Pcg;
 use mcmcomm::workload::models::{alexnet, scaled_down, vit};
+use mcmcomm::workload::Workload;
+
+/// Write a manifest of power-of-two buckets (16..=1024 per dim, both
+/// epilogues) and open a runtime over it.
+#[cfg(not(feature = "pjrt-xla"))]
+fn synth_runtime() -> GemmRuntime {
+    // Unique dir per call: tests run concurrently and must not race on
+    // the manifest file.
+    static NEXT: std::sync::atomic::AtomicUsize =
+        std::sync::atomic::AtomicUsize::new(0);
+    let id = NEXT.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!(
+        "mcmcomm_e2e_buckets_{}_{id}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let dims = [16usize, 32, 64, 128, 256, 512, 1024];
+    let mut buckets = Vec::new();
+    for &m in &dims {
+        for &k in &dims {
+            for &n in &dims {
+                for relu in [false, true] {
+                    let name = format!("g{m}x{k}x{n}{}",
+                                       if relu { "_relu" } else { "" });
+                    buckets.push(format!(
+                        r#"{{"name": "{name}", "path": "{name}.hlo.txt",
+                            "m": {m}, "k": {k}, "n": {n}, "relu": {relu}}}"#
+                    ));
+                }
+            }
+        }
+    }
+    let manifest = format!(
+        r#"{{"version": 1, "buckets": [{}]}}"#,
+        buckets.join(",\n")
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    GemmRuntime::new(&dir).expect("interpreter runtime over synth manifest")
+}
 
 fn runtime_or_skip() -> Option<GemmRuntime> {
-    let dir = Manifest::default_dir();
-    match GemmRuntime::new(&dir) {
-        Ok(r) => Some(r),
-        Err(e) => {
-            eprintln!("SKIP (run `make artifacts`): {e:#}");
-            None
+    #[cfg(not(feature = "pjrt-xla"))]
+    {
+        Some(synth_runtime())
+    }
+    #[cfg(feature = "pjrt-xla")]
+    {
+        use mcmcomm::runtime::Manifest;
+        match GemmRuntime::new(&Manifest::default_dir()) {
+            Ok(r) => Some(r),
+            Err(e) => {
+                eprintln!("SKIP (run `make artifacts`): {e:#}");
+                None
+            }
         }
     }
 }
@@ -37,7 +87,7 @@ fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
 }
 
 #[test]
-fn pjrt_gemm_matches_reference_exact_bucket() {
+fn runtime_gemm_matches_reference_exact_bucket() {
     let Some(rt) = runtime_or_skip() else { return };
     let mut rng = Pcg::seeded(1);
     let (m, k, n) = (16, 16, 16);
@@ -50,7 +100,7 @@ fn pjrt_gemm_matches_reference_exact_bucket() {
 }
 
 #[test]
-fn pjrt_gemm_matches_reference_padded_and_relu() {
+fn runtime_gemm_matches_reference_padded_and_relu() {
     let Some(rt) = runtime_or_skip() else { return };
     let mut rng = Pcg::seeded(2);
     // Ragged dims force padding into the 64/256 buckets.
@@ -67,7 +117,7 @@ fn pjrt_gemm_matches_reference_padded_and_relu() {
 }
 
 #[test]
-fn pjrt_gemm_no_bias() {
+fn runtime_gemm_no_bias() {
     let Some(rt) = runtime_or_skip() else { return };
     let mut rng = Pcg::seeded(3);
     let (m, k, n) = (32, 48, 24);
@@ -94,21 +144,26 @@ fn executable_cache_reuses_compilations() {
 #[test]
 fn executor_runs_alexnet_mini_with_verified_numerics() {
     let Some(rt) = runtime_or_skip() else { return };
-    let wl = scaled_down(&alexnet(1), 16, 16);
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
-    let cfg = SchedulerConfig::default();
-    let out = run_scheme(Scheme::Baseline, &hw, &topo, &wl, &cfg);
-    let exec = Executor::new(&hw, &topo, &wl, &out.alloc, out.flags, &rt);
+    let wl = scaled_down(&alexnet(1), 64, 16);
+    let engine = Engine::new(Scenario::headline(wl));
+    let registry = SchedulerRegistry::standard(7);
+    let planned = engine.schedule(&registry, "baseline").unwrap();
+    let exec = Executor::from_plan(engine.scenario(), planned.plan(), &rt);
     let report = exec.run(7, true).unwrap();
     assert!(report.chunks_executed > 0);
     assert!(
         report.max_abs_err < 1e-3,
-        "PJRT vs CPU mismatch: {}",
+        "runtime vs CPU mismatch: {}",
         report.max_abs_err
     );
     assert!(report.modeled.latency_ns > 0.0);
     assert!(!report.output.is_empty());
+    // The modeled cost must agree with the plan's report (same
+    // evaluator, same inputs).
+    assert_eq!(
+        report.modeled.latency_ns,
+        planned.report().latency_ns()
+    );
 }
 
 #[test]
@@ -117,17 +172,22 @@ fn executor_identical_output_across_schedules() {
     // schedule-invariant.
     let Some(rt) = runtime_or_skip() else { return };
     let wl = scaled_down(&vit(1), 32, 16);
-    let wl = mcmcomm::workload::Workload::new("vit-head",
-                                              wl.ops[..4].to_vec());
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
-    let cfg = SchedulerConfig::default();
-    let base = run_scheme(Scheme::Baseline, &hw, &topo, &wl, &cfg);
-    let simba = run_scheme(Scheme::SimbaLike, &hw, &topo, &wl, &cfg);
-    let r1 = Executor::new(&hw, &topo, &wl, &base.alloc, base.flags, &rt)
+    let wl = Workload::new("vit-head", wl.ops[..4].to_vec());
+    let scenario = Scenario::builder()
+        .system(SystemType::A)
+        .mem(MemKind::Hbm)
+        .grid(4)
+        .workload(wl)
+        .build()
+        .unwrap();
+    let engine = Engine::new(scenario);
+    let registry = SchedulerRegistry::standard(11);
+    let base = engine.schedule(&registry, "baseline").unwrap();
+    let simba = engine.schedule(&registry, "simba").unwrap();
+    let r1 = Executor::from_plan(engine.scenario(), base.plan(), &rt)
         .run(11, false)
         .unwrap();
-    let r2 = Executor::new(&hw, &topo, &wl, &simba.alloc, simba.flags, &rt)
+    let r2 = Executor::from_plan(engine.scenario(), simba.plan(), &rt)
         .run(11, false)
         .unwrap();
     assert_close(&r1.output, &r2.output, 1e-4, "schedule invariance");

@@ -1,0 +1,323 @@
+//! Engine API contract tests: scenario builder validation, registry
+//! completeness, sweep shape, and the legacy-vs-new equivalence
+//! acceptance criterion — the engine must report **bit-identical**
+//! objective values to the raw `cost::evaluator::evaluate` path for
+//! every (scheduler × {AlexNet, ViT}) cell at fixed seed.
+
+use std::time::Duration;
+
+use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::cost::evaluator::{evaluate, Objective, OptFlags};
+use mcmcomm::engine::{
+    schedulers, Engine, EngineError, Scenario, Scheduler,
+    SchedulerRegistry,
+};
+use mcmcomm::opt::ga::GaParams;
+use mcmcomm::topology::Topology;
+use mcmcomm::workload::models::{alexnet, vit};
+use mcmcomm::workload::Workload;
+
+const SEED: u64 = 42;
+
+fn quick_registry(seed: u64) -> SchedulerRegistry {
+    SchedulerRegistry::with_params(
+        GaParams {
+            population: 12,
+            generations: 6,
+            seed,
+            ..Default::default()
+        },
+        Duration::from_secs(2),
+        seed,
+    )
+}
+
+// ---------------------------------------------------------------- builder
+
+#[test]
+fn builder_rejects_zero_grid() {
+    let err = Scenario::builder()
+        .grid(0)
+        .workload(alexnet(1))
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, EngineError::InvalidHardware(_)), "{err}");
+    assert!(err.to_string().contains("grid"), "{err}");
+}
+
+#[test]
+fn builder_rejects_invalid_bandwidth() {
+    for bad_bw in [0.0, -5.0, f64::NEG_INFINITY] {
+        let mut hw = HwConfig::default_4x4_hbm();
+        hw.bw_mem = bad_bw;
+        let err = Scenario::builder()
+            .hw(hw)
+            .workload(alexnet(1))
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(err, EngineError::InvalidHardware(_)),
+            "bw {bad_bw}: {err}"
+        );
+    }
+}
+
+#[test]
+fn builder_requires_a_workload() {
+    assert!(matches!(
+        Scenario::builder().build().unwrap_err(),
+        EngineError::MissingWorkload
+    ));
+}
+
+#[test]
+fn builder_rejects_type_d_on_tiny_grids() {
+    let err = Scenario::builder()
+        .system(SystemType::D)
+        .grid(1)
+        .workload(alexnet(1))
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, EngineError::InvalidHardware(_)), "{err}");
+}
+
+// --------------------------------------------------------------- registry
+
+#[test]
+fn all_five_schemes_run_through_the_registry() {
+    let registry = quick_registry(SEED);
+    assert_eq!(registry.len(), 5);
+    let engine = Engine::new(Scenario::headline(alexnet(1)));
+    for scheduler in registry.iter() {
+        let planned = engine.schedule_with(scheduler).unwrap();
+        assert_eq!(planned.plan().scheduler, scheduler.key());
+        assert!(
+            planned.objective_value() > 0.0,
+            "{} produced a non-positive objective",
+            scheduler.key()
+        );
+        planned
+            .plan()
+            .alloc
+            .validate(engine.scenario().workload(), engine.scenario().hw())
+            .unwrap();
+    }
+}
+
+// ------------------------------------------------------------ equivalence
+
+/// Engine reports must be bit-identical to the raw evaluator on the
+/// same allocation: `Report::objective_value()` ==
+/// `evaluate(hw, topo, wl, alloc, flags).objective(obj)` with `==` on
+/// f64 (no tolerance).
+#[test]
+fn engine_reports_bit_identical_to_raw_evaluate() {
+    let registry = quick_registry(SEED);
+    for wl in [alexnet(1), vit(1)] {
+        for objective in [Objective::Latency, Objective::Edp] {
+            let scenario = Scenario::builder()
+                .workload(wl.clone())
+                .objective(objective)
+                .build()
+                .unwrap();
+            let engine = Engine::new(scenario);
+            let hw = engine.scenario().hw();
+            let topo = engine.scenario().topo();
+            for scheduler in registry.iter() {
+                let planned = engine.schedule_with(scheduler).unwrap();
+                let plan = planned.plan();
+                let legacy = evaluate(hw, topo, &wl, &plan.alloc, plan.flags)
+                    .objective(objective);
+                let report = planned.report();
+                assert_eq!(
+                    report.objective_value(),
+                    legacy,
+                    "{} on {wl_name} ({objective:?}): report != evaluate",
+                    scheduler.key(),
+                    wl_name = wl.name,
+                );
+                assert_eq!(
+                    plan.objective_value, legacy,
+                    "{} on {} ({objective:?}): plan score != evaluate",
+                    scheduler.key(),
+                    wl.name,
+                );
+            }
+        }
+    }
+}
+
+/// The deterministic schedulers must produce identical plans through
+/// the legacy `run_scheme` shim and the engine path (the shim delegates,
+/// so this pins the delegation).
+#[test]
+#[allow(deprecated)]
+fn legacy_run_scheme_matches_engine_for_deterministic_schedulers() {
+    use mcmcomm::opt::{run_scheme, Scheme, SchedulerConfig};
+    let ga_params = GaParams {
+        population: 12,
+        generations: 6,
+        seed: SEED,
+        ..Default::default()
+    };
+    for wl in [alexnet(1), vit(1)] {
+        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+        let topo = Topology::from_hw(&hw);
+        let cfg = SchedulerConfig {
+            seed: SEED,
+            ga: ga_params.clone(),
+            ..Default::default()
+        };
+        let scenario = Scenario::builder()
+            .hw(hw.clone())
+            .workload(wl.clone())
+            .build()
+            .unwrap();
+        let engine = Engine::new(scenario);
+        // MIQP excluded: its anytime wall-clock budget makes two solver
+        // runs legitimately diverge.
+        let cells: [(Scheme, Box<dyn Scheduler>); 4] = [
+            (Scheme::Baseline, Box::new(schedulers::Baseline)),
+            (Scheme::SimbaLike, Box::new(schedulers::SimbaLike)),
+            (Scheme::Greedy, Box::new(schedulers::Greedy)),
+            (
+                Scheme::Ga,
+                Box::new(schedulers::Ga::new(ga_params.clone(), SEED)),
+            ),
+        ];
+        for (scheme, scheduler) in &cells {
+            let legacy = run_scheme(*scheme, &hw, &topo, &wl, &cfg);
+            let planned = engine.schedule_with(scheduler.as_ref()).unwrap();
+            assert_eq!(
+                legacy.objective_value,
+                planned.objective_value(),
+                "{} on {}",
+                scheme.name(),
+                wl.name
+            );
+            assert_eq!(
+                legacy.alloc,
+                planned.plan().alloc,
+                "{} on {}: allocations diverge",
+                scheme.name(),
+                wl.name
+            );
+            assert_eq!(legacy.flags, planned.plan().flags);
+        }
+    }
+}
+
+// ------------------------------------------------------------------ sweep
+
+#[test]
+fn sweep_covers_scenarios_times_schedulers() {
+    let registry = quick_registry(3);
+    let scheds = registry.select(&["baseline", "simba", "greedy"]).unwrap();
+    let scenarios: Vec<Scenario> = [alexnet(1), vit(1)]
+        .into_iter()
+        .map(Scenario::headline)
+        .collect();
+    let rows = Engine::sweep(scenarios, &scheds).unwrap();
+    assert_eq!(rows.len(), 2);
+    assert_eq!(rows[0].model(), "alexnet");
+    assert_eq!(rows[1].model(), "vit");
+    for row in &rows {
+        assert_eq!(row.system(), "A-HBM-4x4");
+        assert_eq!(row.outcomes.len(), 3);
+        let norm = row.normalized_to("baseline").unwrap();
+        assert_eq!(norm[0], ("baseline".to_string(), 1.0));
+        for o in &row.outcomes {
+            // On-demand reports re-derive exactly the accepted score.
+            let report = row.report(&o.scheduler).unwrap();
+            assert_eq!(
+                report.objective_value(),
+                o.plan.objective_value,
+                "{}: report/plan score mismatch",
+                o.scheduler
+            );
+        }
+    }
+}
+
+#[test]
+fn custom_scheduler_plugs_into_the_engine() {
+    // A user-defined strategy: reuse the uniform baseline but claim the
+    // MCMComm flags — the registry and engine treat it like any other.
+    struct UniformOptimized;
+    impl Scheduler for UniformOptimized {
+        fn name(&self) -> &str {
+            "uniform+opts"
+        }
+        fn key(&self) -> &str {
+            "uniform-opt"
+        }
+        fn effective_flags(&self, requested: OptFlags) -> OptFlags {
+            requested
+        }
+        fn schedule(
+            &self,
+            scenario: &Scenario,
+        ) -> Result<mcmcomm::Plan, EngineError> {
+            let alloc = mcmcomm::partition::uniform_allocation(
+                scenario.hw(),
+                scenario.workload(),
+            );
+            // `Scenario::plan` scores on the true evaluator, so the
+            // plan's objective_value is consistent with its flags.
+            Ok(scenario.plan(
+                self.key(),
+                alloc,
+                self.effective_flags(scenario.flags()),
+                0,
+            ))
+        }
+    }
+
+    let mut registry = quick_registry(1);
+    registry.register(Box::new(UniformOptimized));
+    assert_eq!(registry.len(), 6);
+    let engine = Engine::new(Scenario::headline(alexnet(1)));
+    let planned = engine.schedule(&registry, "uniform-opt").unwrap();
+    // Flags pass through, and the report re-scores under them: with all
+    // §5 optimizations on a chained model, uniform+opts must beat the
+    // unoptimized baseline.
+    let base = engine.schedule(&registry, "baseline").unwrap();
+    assert!(planned.report().latency_ns() <= base.report().latency_ns());
+}
+
+#[test]
+fn invalid_plans_are_rejected_by_the_engine() {
+    struct Broken;
+    impl Scheduler for Broken {
+        fn name(&self) -> &str {
+            "broken"
+        }
+        fn key(&self) -> &str {
+            "broken"
+        }
+        fn schedule(
+            &self,
+            scenario: &Scenario,
+        ) -> Result<mcmcomm::Plan, EngineError> {
+            let mut plan = schedulers::Baseline.schedule(scenario)?;
+            plan.alloc.parts[0].px[0] += 1; // break sum(px) == M
+            Ok(plan)
+        }
+    }
+    let engine = Engine::new(Scenario::headline(alexnet(1)));
+    let err = engine.schedule_with(&Broken).unwrap_err();
+    assert!(matches!(err, EngineError::InvalidPlan { .. }), "{err}");
+}
+
+// --------------------------------------------------- workload invariants
+
+#[test]
+fn scenario_rejects_broken_workloads_that_bypass_constructors() {
+    use mcmcomm::workload::GemmOp;
+    let wl = Workload {
+        name: "bad".into(),
+        ops: vec![GemmOp::dense("a", 16, 16, 16).chained()],
+    };
+    let err = Scenario::builder().workload(wl).build().unwrap_err();
+    assert!(matches!(err, EngineError::InvalidWorkload(_)), "{err}");
+}

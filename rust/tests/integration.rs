@@ -1,47 +1,68 @@
 //! Cross-module integration: the paper's qualitative claims hold when
 //! all pieces run together (cost model + topology + model zoo +
-//! schedulers + pipeline).
+//! schedulers + pipeline), driven through the engine API.
 
 use std::time::Duration;
 
 use mcmcomm::config::{HwConfig, MemKind, SystemType};
-use mcmcomm::cost::evaluator::{evaluate, Objective, OptFlags};
+use mcmcomm::cost::evaluator::{Objective, OptFlags};
+use mcmcomm::engine::{Engine, Scenario, SchedulerRegistry};
 use mcmcomm::eval::{figures, EvalConfig};
-use mcmcomm::opt::{ga::GaParams, run_scheme, Scheme, SchedulerConfig};
+use mcmcomm::opt::ga::GaParams;
 use mcmcomm::partition::uniform_allocation;
-use mcmcomm::topology::Topology;
 use mcmcomm::workload::models::{alexnet, evaluation_suite};
+use mcmcomm::workload::Workload;
 
-fn quick_cfg(seed: u64) -> SchedulerConfig {
-    SchedulerConfig {
-        seed,
-        ga: GaParams {
+fn quick_registry(seed: u64) -> SchedulerRegistry {
+    SchedulerRegistry::with_params(
+        GaParams {
             population: 20,
             generations: 15,
             seed,
             ..Default::default()
         },
-        miqp_budget: Duration::from_secs(3),
-        ..Default::default()
-    }
+        Duration::from_secs(3),
+        seed,
+    )
+}
+
+fn scenario(
+    ty: SystemType,
+    mem: MemKind,
+    grid: usize,
+    wl: Workload,
+    objective: Objective,
+) -> Scenario {
+    Scenario::builder()
+        .system(ty)
+        .mem(mem)
+        .grid(grid)
+        .workload(wl)
+        .objective(objective)
+        .build()
+        .expect("valid test scenario")
 }
 
 #[test]
 fn ga_and_miqp_beat_baseline_on_every_model_type_a_hbm() {
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
-    let cfg = quick_cfg(3);
+    let registry = quick_registry(3);
     for wl in evaluation_suite(1) {
-        let base = run_scheme(Scheme::Baseline, &hw, &topo, &wl, &cfg);
-        for scheme in [Scheme::Ga, Scheme::Miqp] {
-            let out = run_scheme(scheme, &hw, &topo, &wl, &cfg);
+        let engine = Engine::new(scenario(
+            SystemType::A,
+            MemKind::Hbm,
+            4,
+            wl,
+            Objective::Latency,
+        ));
+        let base = engine.schedule(&registry, "baseline").unwrap();
+        for key in ["ga", "miqp"] {
+            let out = engine.schedule(&registry, key).unwrap();
             assert!(
-                out.objective_value < base.objective_value,
-                "{} on {}: {} !< {}",
-                scheme.name(),
-                wl.name,
-                out.objective_value,
-                base.objective_value
+                out.objective_value() < base.objective_value(),
+                "{key} on {}: {} !< {}",
+                engine.scenario().workload().name,
+                out.objective_value(),
+                base.objective_value()
             );
         }
     }
@@ -51,27 +72,27 @@ fn ga_and_miqp_beat_baseline_on_every_model_type_a_hbm() {
 fn simba_like_does_not_beat_optimized_schemes() {
     // §7.1: the SIMBA-like heuristic cannot optimize the end-to-end
     // scenario; MCMComm schedulers must dominate it.
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
-    let cfg = quick_cfg(4);
-    let wl = alexnet(1);
-    let simba = run_scheme(Scheme::SimbaLike, &hw, &topo, &wl, &cfg);
-    let ga = run_scheme(Scheme::Ga, &hw, &topo, &wl, &cfg);
-    assert!(ga.objective_value < simba.objective_value);
+    let registry = quick_registry(4);
+    let engine = Engine::new(Scenario::headline(alexnet(1)));
+    let simba = engine.schedule(&registry, "simba").unwrap();
+    let ga = engine.schedule(&registry, "ga").unwrap();
+    assert!(ga.objective_value() < simba.objective_value());
 }
 
 #[test]
 fn alexnet_gains_most_from_redistribution() {
     // §7.1: "MCMComm provides the largest speedup on Alexnet" because of
     // its fully chained structure.
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
     let mut speedups = Vec::new();
     for wl in evaluation_suite(1) {
-        let alloc = uniform_allocation(&hw, &wl);
-        let base = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
-        let opt = evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL);
-        speedups.push((wl.name.clone(), base.latency_ns / opt.latency_ns));
+        let sc = Scenario::headline(wl);
+        let alloc = uniform_allocation(sc.hw(), sc.workload());
+        let base = sc.baseline_report();
+        let opt = sc.report_allocation(&alloc, OptFlags::ALL);
+        speedups.push((
+            sc.workload().name.clone(),
+            base.latency_ns() / opt.latency_ns(),
+        ));
     }
     let alex = speedups[0].1;
     for (name, s) in &speedups[1..] {
@@ -86,14 +107,18 @@ fn alexnet_gains_most_from_redistribution() {
 #[test]
 fn type_d_shrinks_the_ga_miqp_gap() {
     // §7.1: in type-D the near-uniform memory distance makes GA ~ MIQP.
-    let cfg = quick_cfg(5);
-    let wl = alexnet(1);
+    let registry = quick_registry(5);
     let gap = |ty: SystemType| {
-        let hw = HwConfig::paper(ty, MemKind::Hbm, 4);
-        let topo = Topology::from_hw(&hw);
-        let ga = run_scheme(Scheme::Ga, &hw, &topo, &wl, &cfg);
-        let miqp = run_scheme(Scheme::Miqp, &hw, &topo, &wl, &cfg);
-        ga.objective_value / miqp.objective_value
+        let engine = Engine::new(scenario(
+            ty,
+            MemKind::Hbm,
+            4,
+            alexnet(1),
+            Objective::Latency,
+        ));
+        let ga = engine.schedule(&registry, "ga").unwrap();
+        let miqp = engine.schedule(&registry, "miqp").unwrap();
+        ga.objective_value() / miqp.objective_value()
     };
     let gap_a = gap(SystemType::A);
     let gap_d = gap(SystemType::D);
@@ -106,14 +131,20 @@ fn type_d_shrinks_the_ga_miqp_gap() {
 
 #[test]
 fn edp_objective_trades_latency() {
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
-    let wl = alexnet(1);
-    let mut cfg = quick_cfg(6);
-    cfg.objective = Objective::Edp;
-    let base = run_scheme(Scheme::Baseline, &hw, &topo, &wl, &cfg);
-    let ga = run_scheme(Scheme::Ga, &hw, &topo, &wl, &cfg);
-    assert!(ga.objective_value < base.objective_value, "EDP must improve");
+    let registry = quick_registry(6);
+    let engine = Engine::new(scenario(
+        SystemType::A,
+        MemKind::Hbm,
+        4,
+        alexnet(1),
+        Objective::Edp,
+    ));
+    let base = engine.schedule(&registry, "baseline").unwrap();
+    let ga = engine.schedule(&registry, "ga").unwrap();
+    assert!(
+        ga.objective_value() < base.objective_value(),
+        "EDP must improve"
+    );
 }
 
 #[test]
@@ -132,13 +163,17 @@ fn figure_harnesses_run_quick() {
 #[test]
 fn low_bw_case_still_improves() {
     // Fig 12 regime: DRAM, 4x4 type A.
-    let hw = HwConfig::paper(SystemType::A, MemKind::Dram, 4);
-    let topo = Topology::from_hw(&hw);
-    let cfg = quick_cfg(8);
-    let wl = alexnet(1);
-    let base = run_scheme(Scheme::Baseline, &hw, &topo, &wl, &cfg);
-    let miqp = run_scheme(Scheme::Miqp, &hw, &topo, &wl, &cfg);
-    assert!(miqp.objective_value < base.objective_value);
+    let registry = quick_registry(8);
+    let engine = Engine::new(scenario(
+        SystemType::A,
+        MemKind::Dram,
+        4,
+        alexnet(1),
+        Objective::Latency,
+    ));
+    let base = engine.schedule(&registry, "baseline").unwrap();
+    let miqp = engine.schedule(&registry, "miqp").unwrap();
+    assert!(miqp.objective_value() < base.objective_value());
 }
 
 #[test]
@@ -192,16 +227,16 @@ fn bigger_systolic_arrays_reduce_compute_latency() {
 fn grid_scaling_reduces_baseline_compute_bound_latency() {
     // On HBM, a compute-heavy workload should get faster on more
     // chiplets even under uniform LS.
-    use mcmcomm::workload::{GemmOp, Workload};
+    use mcmcomm::workload::GemmOp;
     let wl = Workload::new(
         "big",
         vec![GemmOp::dense("a", 8192, 4096, 8192)],
     );
     let lat = |g: usize| {
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, g);
-        let topo = Topology::from_hw(&hw);
-        let alloc = uniform_allocation(&hw, &wl);
-        evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE).latency_ns
+        scenario(SystemType::A, MemKind::Hbm, g, wl.clone(),
+                 Objective::Latency)
+            .baseline_report()
+            .latency_ns()
     };
     assert!(lat(8) < lat(4), "8x8 {} !< 4x4 {}", lat(8), lat(4));
 }
