@@ -1,62 +1,369 @@
 //! Hot-path micro-benchmarks for the §Perf pass: the cost evaluator (GA
-//! fitness inner loop) both raw and through the engine's `Report`
-//! wrapper, the MIQP surrogate eval/subgradient, and the redistribution
-//! model.
+//! fitness inner loop) raw / scratch-reuse / delta-cached, the engine
+//! `Report` wrapper, GA evolution against a faithful emulation of the
+//! pre-incremental-evaluator loop, parallel vs sequential sweeps, the
+//! MIQP surrogate, and the redistribution model.
+//!
+//! `--json [path]` additionally writes every stat plus the derived
+//! speedups to a machine-readable file (default `BENCH_hotpath.json`);
+//! CI runs this as a non-blocking step so regressions are visible in
+//! the logs without gating merges. Unknown arguments are ignored
+//! (`cargo bench` may inject harness flags).
+
+use std::collections::BTreeMap;
 use std::time::Duration;
+
 use mcmcomm::config::{HwConfig, MemKind, SystemType};
-use mcmcomm::cost::evaluator::{evaluate, Objective, OptFlags};
-use mcmcomm::engine::Scenario;
+use mcmcomm::cost::evaluator::{evaluate, evaluate_into, Objective, OptFlags};
+use mcmcomm::cost::{CachedEval, CostBreakdown, EvalScratch};
+use mcmcomm::engine::{schedulers, Engine, Scenario, Scheduler};
+use mcmcomm::opt::ga::{self, GaParams};
 use mcmcomm::opt::miqp::objective::build;
-use mcmcomm::partition::uniform_allocation;
+use mcmcomm::partition::{
+    dim_bounds, project_to_sum, simba_allocation, uniform_allocation,
+    Allocation,
+};
 use mcmcomm::redistribution::redistribute;
 use mcmcomm::topology::Topology;
-use mcmcomm::util::bench::{bench, black_box};
+use mcmcomm::util::bench::{bench, black_box, BenchStats};
+use mcmcomm::util::json::{obj, Json};
+use mcmcomm::util::rng::Pcg;
 use mcmcomm::workload::models::{alexnet, vit};
+use mcmcomm::workload::Workload;
+
+// ---- Pre-PR GA emulation ------------------------------------------------
+//
+// A faithful replica of the seed-commit GA generation loop: sequential
+// fitness through fresh full `evaluate` calls, full-population sort
+// every generation, cloned elites. This is the baseline the incremental
+// evaluator is measured against (ISSUE 2 acceptance: >= 3x on a GA
+// generation, population 48, AlexNet, 4x4).
+
+fn prepr_mutate(hw: &HwConfig, wl: &Workload, rng: &mut Pcg,
+                a: &mut Allocation, times: usize) {
+    for _ in 0..times {
+        let i = rng.range_usize(0, wl.ops.len() - 1);
+        let op = &wl.ops[i];
+        match rng.range_usize(0, 2) {
+            0 => {
+                let b = dim_bounds(op.m, hw.xdim, hw.r);
+                let px = &mut a.parts[i].px;
+                let from = rng.range_usize(0, px.len() - 1);
+                let to = rng.range_usize(0, px.len() - 1);
+                let step = b.step.min(px[from]);
+                if from != to && px[from] - step >= b.lo && px[to] + step <= b.hi
+                {
+                    px[from] -= step;
+                    px[to] += step;
+                }
+            }
+            1 => {
+                let b = dim_bounds(op.n, hw.ydim, hw.c);
+                let py = &mut a.parts[i].py;
+                let from = rng.range_usize(0, py.len() - 1);
+                let to = rng.range_usize(0, py.len() - 1);
+                let step = b.step.min(py[from]);
+                if from != to && py[from] - step >= b.lo && py[to] + step <= b.hi
+                {
+                    py[from] -= step;
+                    py[to] += step;
+                }
+            }
+            _ => {
+                a.collect_cols[i] = rng.range_usize(0, hw.ydim - 1);
+            }
+        }
+    }
+}
+
+fn prepr_crossover(wl: &Workload, rng: &mut Pcg, a: &Allocation,
+                   b: &Allocation, p: f64) -> Allocation {
+    let mut child = a.clone();
+    for i in 0..wl.ops.len() {
+        if rng.chance(p) {
+            child.parts[i] = b.parts[i].clone();
+            child.collect_cols[i] = b.collect_cols[i];
+        }
+    }
+    child
+}
+
+fn prepr_random_individual(hw: &HwConfig, wl: &Workload, rng: &mut Pcg)
+                           -> Allocation {
+    let mut a = uniform_allocation(hw, wl);
+    for (i, op) in wl.ops.iter().enumerate() {
+        let bx = dim_bounds(op.m, hw.xdim, hw.r);
+        let by = dim_bounds(op.n, hw.ydim, hw.c);
+        for v in a.parts[i].px.iter_mut() {
+            let jitter = rng.range_i64(-2, 2) * bx.step as i64;
+            *v = (*v as i64 + jitter).max(0) as usize;
+        }
+        project_to_sum(&mut a.parts[i].px, op.m, bx);
+        for v in a.parts[i].py.iter_mut() {
+            let jitter = rng.range_i64(-2, 2) * by.step as i64;
+            *v = (*v as i64 + jitter).max(0) as usize;
+        }
+        project_to_sum(&mut a.parts[i].py, op.n, by);
+        a.collect_cols[i] = rng.range_usize(0, hw.ydim - 1);
+    }
+    a
+}
+
+fn prepr_ga_evolve(hw: &HwConfig, topo: &Topology, wl: &Workload,
+                   flags: OptFlags, obj: Objective, params: &GaParams)
+                   -> f64 {
+    let fitness =
+        |a: &Allocation| evaluate(hw, topo, wl, a, flags).objective(obj);
+    let mut rng = Pcg::seeded(params.seed);
+    let mut pop: Vec<(Allocation, f64)> =
+        Vec::with_capacity(params.population);
+    let uni = uniform_allocation(hw, wl);
+    let f = fitness(&uni);
+    pop.push((uni, f));
+    let simba = simba_allocation(hw, topo, wl);
+    let f = fitness(&simba);
+    pop.push((simba, f));
+    while pop.len() < params.population {
+        let ind = prepr_random_individual(hw, wl, &mut rng);
+        let f = fitness(&ind);
+        pop.push((ind, f));
+    }
+    for _gen in 0..params.generations {
+        pop.sort_by(|a, b| a.1.total_cmp(&b.1));
+        let mut next: Vec<(Allocation, f64)> =
+            pop.iter().take(params.elite).cloned().collect();
+        while next.len() < params.population {
+            let mut pick = |rng: &mut Pcg| {
+                let mut best = rng.range_usize(0, pop.len() - 1);
+                for _ in 1..params.tournament {
+                    let c = rng.range_usize(0, pop.len() - 1);
+                    if pop[c].1 < pop[best].1 {
+                        best = c;
+                    }
+                }
+                best
+            };
+            let pa = pick(&mut rng);
+            let pb = pick(&mut rng);
+            let mut child = prepr_crossover(wl, &mut rng, &pop[pa].0,
+                                            &pop[pb].0, params.p_cross);
+            prepr_mutate(hw, wl, &mut rng, &mut child, params.mutations);
+            let f = fitness(&child);
+            next.push((child, f));
+        }
+        pop = next;
+    }
+    pop.sort_by(|a, b| a.1.total_cmp(&b.1));
+    pop[0].1
+}
+
+fn median_ns(stats: &[BenchStats], name: &str) -> f64 {
+    stats
+        .iter()
+        .find(|s| s.name == name)
+        .map(|s| s.median.as_nanos() as f64)
+        .unwrap_or(f64::NAN)
+}
 
 fn main() {
+    // Lenient arg parse: only `--json [path]` is recognized.
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut json_path: Option<String> = None;
+    let mut i = 0;
+    while i < argv.len() {
+        if argv[i] == "--json" {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                json_path = Some(argv[i + 1].clone());
+                i += 1;
+            } else {
+                json_path = Some("BENCH_hotpath.json".to_string());
+            }
+        }
+        i += 1;
+    }
+
+    let mut stats: Vec<BenchStats> = Vec::new();
     let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
     let topo = Topology::from_hw(&hw);
 
     let wl = alexnet(1);
     let alloc = uniform_allocation(&hw, &wl);
-    bench("evaluate/alexnet_4x4", Duration::from_secs(2), || {
+    stats.push(bench("evaluate/alexnet_4x4", Duration::from_secs(2), || {
         black_box(evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL).latency_ns);
-    });
+    }));
+
+    // Scratch-reuse form: identical math, zero allocations once warm.
+    let mut scratch = EvalScratch::default();
+    let mut out = CostBreakdown::default();
+    stats.push(bench("evaluate_into/alexnet_4x4", Duration::from_secs(2),
+                     || {
+        evaluate_into(&hw, &topo, &wl, &alloc, OptFlags::ALL, &mut scratch,
+                      &mut out);
+        black_box(out.latency_ns);
+    }));
+
+    // Delta-cached form, fully warm: the GA steady-state upper bound.
+    let mut cache = CachedEval::new(&hw, &topo, &wl, OptFlags::ALL);
+    stats.push(bench("cached_eval/alexnet_4x4_warm", Duration::from_secs(2),
+                     || {
+        black_box(cache.objective(&alloc, Objective::Latency));
+    }));
 
     // Same work through the engine front door: the wrapper must add no
     // measurable overhead over the raw evaluator call above.
     let scenario = Scenario::headline(alexnet(1));
-    bench("engine_report/alexnet_4x4", Duration::from_secs(2), || {
+    stats.push(bench("engine_report/alexnet_4x4", Duration::from_secs(2),
+                     || {
         black_box(
             scenario.report_allocation(&alloc, OptFlags::ALL).latency_ns(),
         );
-    });
+    }));
 
     let wlv = vit(1);
     let allocv = uniform_allocation(&hw, &wlv);
-    bench("evaluate/vit_4x4", Duration::from_secs(2), || {
+    stats.push(bench("evaluate/vit_4x4", Duration::from_secs(2), || {
         black_box(evaluate(&hw, &topo, &wlv, &allocv, OptFlags::ALL).latency_ns);
-    });
+    }));
 
     let hw16 = HwConfig::paper(SystemType::A, MemKind::Hbm, 16);
     let topo16 = Topology::from_hw(&hw16);
     let alloc16 = uniform_allocation(&hw16, &wl);
-    bench("evaluate/alexnet_16x16", Duration::from_secs(2), || {
-        black_box(evaluate(&hw16, &topo16, &wl, &alloc16, OptFlags::ALL).latency_ns);
-    });
+    stats.push(bench("evaluate/alexnet_16x16", Duration::from_secs(2), || {
+        black_box(
+            evaluate(&hw16, &topo16, &wl, &alloc16, OptFlags::ALL).latency_ns,
+        );
+    }));
+
+    // ---- GA evolution: pre-PR emulation vs the incremental optimizer.
+    // Population 48 on AlexNet 4x4 (the ISSUE 2 acceptance point); six
+    // generations amortize population seeding over the generation loop.
+    let ga_params = |threads: usize| GaParams {
+        population: 48,
+        generations: 6,
+        seed: 0xbead,
+        threads,
+        ..Default::default()
+    };
+    stats.push(bench("ga/evolve_pop48_gen6_prepr_seq",
+                     Duration::from_secs(3), || {
+        black_box(prepr_ga_evolve(&hw, &topo, &wl, OptFlags::ALL,
+                                  Objective::Latency, &ga_params(1)));
+    }));
+    stats.push(bench("ga/evolve_pop48_gen6_cached_seq",
+                     Duration::from_secs(3), || {
+        black_box(
+            ga::optimize(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency,
+                         &ga_params(1))
+            .objective_value,
+        );
+    }));
+    stats.push(bench("ga/evolve_pop48_gen6_cached_par",
+                     Duration::from_secs(3), || {
+        black_box(
+            ga::optimize(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency,
+                         &ga_params(0))
+            .objective_value,
+        );
+    }));
+
+    // ---- Engine sweep: scenario batch, sequential vs parallel.
+    let sweep_scenarios = || -> Vec<Scenario> {
+        mcmcomm::workload::models::evaluation_suite(1)
+            .into_iter()
+            .map(Scenario::headline)
+            .collect()
+    };
+    let ga_sched = schedulers::Ga::new(
+        GaParams { population: 12, generations: 4, threads: 1,
+                   ..Default::default() },
+        42,
+    );
+    let baseline = schedulers::Baseline;
+    let simba = schedulers::SimbaLike;
+    let scheds: Vec<&dyn Scheduler> = vec![&baseline, &simba, &ga_sched];
+    stats.push(bench("sweep/suite_ga12x4_seq", Duration::from_secs(3), || {
+        let rows = Engine::sweep_threaded(sweep_scenarios(), &scheds, 1)
+            .expect("sweep");
+        black_box(rows.len());
+    }));
+    stats.push(bench("sweep/suite_ga12x4_par", Duration::from_secs(3), || {
+        let rows = Engine::sweep_threaded(sweep_scenarios(), &scheds, 0)
+            .expect("sweep");
+        black_box(rows.len());
+    }));
 
     let f = build(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency);
-    let point: Vec<f64> = (0..f.model.dim()).map(|i| (i % 5) as f64 * 16.0 + 16.0).collect();
-    bench("miqp/surrogate_eval", Duration::from_secs(2), || {
+    let point: Vec<f64> =
+        (0..f.model.dim()).map(|i| (i % 5) as f64 * 16.0 + 16.0).collect();
+    stats.push(bench("miqp/surrogate_eval", Duration::from_secs(2), || {
         black_box(f.model.eval(&point));
-    });
-    bench("miqp/subgradient", Duration::from_secs(2), || {
+    }));
+    stats.push(bench("miqp/subgradient", Duration::from_secs(2), || {
         black_box(f.model.subgrad(&point));
-    });
+    }));
 
     let op = &wl.ops[1];
-    bench("redistribution/3step", Duration::from_secs(1), || {
+    stats.push(bench("redistribution/3step", Duration::from_secs(1), || {
         black_box(redistribute(&hw, op, &alloc.parts[1], &alloc.parts[2], 2)
             .total_ns());
-    });
+    }));
+
+    // ---- Derived headline ratios.
+    let ga_prepr = median_ns(&stats, "ga/evolve_pop48_gen6_prepr_seq");
+    let ga_seq = median_ns(&stats, "ga/evolve_pop48_gen6_cached_seq");
+    let ga_par = median_ns(&stats, "ga/evolve_pop48_gen6_cached_par");
+    let sweep_seq = median_ns(&stats, "sweep/suite_ga12x4_seq");
+    let sweep_par = median_ns(&stats, "sweep/suite_ga12x4_par");
+    let ga_speedup_seq = ga_prepr / ga_seq;
+    let ga_speedup_par = ga_prepr / ga_par;
+    let sweep_speedup = sweep_seq / sweep_par;
+    println!();
+    println!(
+        "ga evolve speedup vs pre-PR full-eval loop: {ga_speedup_seq:.2}x \
+         (cached, 1 thread), {ga_speedup_par:.2}x (cached, auto threads)"
+    );
+    println!("sweep parallel speedup: {sweep_speedup:.2}x");
+
+    if let Some(path) = json_path {
+        let mut benches = BTreeMap::new();
+        for s in &stats {
+            benches.insert(
+                s.name.clone(),
+                obj(vec![
+                    ("median_ns", Json::Num(s.median.as_nanos() as f64)),
+                    ("mean_ns", Json::Num(s.mean.as_nanos() as f64)),
+                    ("min_ns", Json::Num(s.min.as_nanos() as f64)),
+                    ("iters", Json::Num(s.iters as f64)),
+                ]),
+            );
+        }
+        let root = obj(vec![
+            ("schema", Json::Num(1.0)),
+            (
+                "note",
+                Json::Str(
+                    "Hot-path baseline; regenerate with: cargo bench \
+                     --bench hotpath -- --json BENCH_hotpath.json. The \
+                     ISSUE-2 acceptance ratio is \
+                     derived.ga_evolve_speedup_vs_prepr_par (pre-PR \
+                     sequential full-eval GA loop vs cached+parallel)."
+                        .to_string(),
+                ),
+            ),
+            ("benches", Json::Obj(benches)),
+            (
+                "derived",
+                obj(vec![
+                    ("ga_evolve_speedup_vs_prepr_seq",
+                     Json::Num(ga_speedup_seq)),
+                    ("ga_evolve_speedup_vs_prepr_par",
+                     Json::Num(ga_speedup_par)),
+                    ("sweep_parallel_speedup", Json::Num(sweep_speedup)),
+                ]),
+            ),
+        ]);
+        std::fs::write(&path, root.encode() + "\n")
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote {path}");
+    }
 }

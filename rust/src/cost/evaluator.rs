@@ -6,16 +6,17 @@
 //! clock.
 
 use crate::config::HwConfig;
-use crate::partition::Allocation;
-use crate::redistribution::redistribute;
+use crate::partition::{Allocation, Partition};
+use crate::redistribution::{redistribute, RedistCost};
 use crate::topology::Topology;
-use crate::workload::Workload;
+use crate::workload::{GemmOp, Workload};
 
 use super::compute::comp_ns;
 use super::energy::{
     collect_energy_pj, comp_energy_pj, load_energy_pj, offchip_energy_pj,
 };
-use super::latency::{load, offload};
+use super::latency::{load_into, offload_wall_ns};
+use super::scratch::EvalScratch;
 
 /// The §5 co-optimization toggles (ablated in Figure 13).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -98,120 +99,247 @@ pub fn evaluate(
     alloc: &Allocation,
     flags: OptFlags,
 ) -> CostBreakdown {
+    let mut scratch = EvalScratch::default();
+    let mut out = CostBreakdown::default();
+    evaluate_into(hw, topo, wl, alloc, flags, &mut scratch, &mut out);
+    out
+}
+
+/// [`evaluate`] writing into caller-provided scratch buffers and output:
+/// after the buffers warm up to the workload's size, the inner loops
+/// allocate nothing (§Perf). Results are bit-identical to [`evaluate`]
+/// (which is now a thin wrapper over this function).
+pub fn evaluate_into(
+    hw: &HwConfig,
+    topo: &Topology,
+    wl: &Workload,
+    alloc: &Allocation,
+    flags: OptFlags,
+    scratch: &mut EvalScratch,
+    out: &mut CostBreakdown,
+) {
     debug_assert!(alloc.parts.len() == wl.ops.len());
     let n = wl.ops.len();
-    let mut out = CostBreakdown::default();
+    out.latency_ns = 0.0;
+    out.energy_pj = 0.0;
+    out.per_op.clear();
     out.per_op.reserve(n);
 
     // Decide redistribution per edge (i -> i+1) up front; cache the
     // 3-step cost so the per-op loop never recomputes it (§Perf).
-    let mut redist_edge = vec![false; n]; // edge i: ops[i] -> ops[i+1]
-    let mut redist_cost = vec![None; n];
+    scratch.redist_edge.clear();
+    scratch.redist_edge.resize(n, false); // edge i: ops[i] -> ops[i+1]
+    scratch.redist_cost.clear();
+    scratch.redist_cost.resize(n, None);
     if flags.redistribution {
         for i in 0..n.saturating_sub(1) {
-            if !wl.ops[i].redistributable_to(&wl.ops[i + 1]) {
-                continue;
-            }
-            let r = redistribute(
+            if let Some(r) = edge_decision(
                 hw,
-                &wl.ops[i],
+                topo,
+                wl,
+                i,
                 &alloc.parts[i],
                 &alloc.parts[i + 1],
                 alloc.collect_cols[i],
-            );
-            let store = offload(hw, topo, &wl.ops[i], flags.diagonal);
-            let act_load_extra = {
-                let full = load(hw, topo, &wl.ops[i + 1],
-                                &alloc.parts[i + 1], flags.diagonal, true);
-                let wonly = load(hw, topo, &wl.ops[i + 1],
-                                 &alloc.parts[i + 1], flags.diagonal, false);
-                full.wall_ns() - wonly.wall_ns()
-            };
-            // Adopt redistribution when it beats the memory round-trip.
-            if r.total_ns() < store.wall_ns() + act_load_extra {
-                redist_edge[i] = true;
-                redist_cost[i] = Some(r);
+                flags.diagonal,
+                &mut scratch.bufs,
+            ) {
+                scratch.redist_edge[i] = true;
+                scratch.redist_cost[i] = Some(r);
             }
         }
     }
 
     for (i, op) in wl.ops.iter().enumerate() {
         let part = &alloc.parts[i];
-        let acts_from_redist = i > 0 && redist_edge[i - 1];
-
-        // ---- input stage
-        let in_cost = load(hw, topo, op, part, flags.diagonal, !acts_from_redist);
+        let acts_from_redist = i > 0 && scratch.redist_edge[i - 1];
+        let skip_store = i + 1 < n && scratch.redist_edge[i];
         let incoming = if acts_from_redist {
-            redist_cost[i - 1]
+            scratch.redist_cost[i - 1]
         } else {
             None
         };
-        let redist_ns = incoming.map_or(0.0, |r| r.total_ns());
-
-        // ---- compute stage (per chiplet)
-        let comp_per: Vec<f64> = (0..hw.xdim)
-            .flat_map(|x| {
-                (0..hw.ydim)
-                    .map(move |y| (x, y))
-            })
-            .map(|(x, y)| comp_ns(hw, op, part.px[x], part.py[y]))
-            .collect();
-        let comp_max = comp_per.iter().copied().fold(0.0, f64::max);
-
-        // in+comp wall time. Redistribution is a row/column-structured
-        // exchange that must finish before compute (it rewrites the
-        // operand layout), so it serializes with the fused part.
-        let in_comp_ns = if flags.async_fusion {
-            // §5.3: each chiplet starts as soon as its data is ready.
-            let fused = comp_per
-                .iter()
-                .enumerate()
-                .map(|(idx, &c)| in_cost.ready_ns(idx) + c)
-                .fold(0.0, f64::max);
-            redist_ns + fused
-        } else {
-            redist_ns + in_cost.wall_ns() + comp_max
-        };
-
-        // ---- output stage
-        let skip_store = i + 1 < n && redist_edge[i];
-        let out_ns = if skip_store {
-            0.0
-        } else {
-            offload(hw, topo, op, flags.diagonal).wall_ns()
-        };
-
-        // ---- energy
-        let mut pj = comp_energy_pj(hw, op, part);
-        // Off-chip: weights always; activations only when loaded.
-        let mut off_bytes = hw.bytes(op.k * op.n);
-        if !acts_from_redist {
-            off_bytes += hw.bytes(op.m * op.k);
-        }
-        if !skip_store {
-            off_bytes += hw.bytes(op.m * op.n);
-            pj += collect_energy_pj(hw, topo, op, part, flags.diagonal);
-        }
-        pj += offchip_energy_pj(hw, off_bytes);
-        pj += load_energy_pj(hw, topo, op, part, flags.diagonal,
-                             !acts_from_redist);
-        if let Some(r) = incoming {
-            pj += r.energy_pj;
-        }
-
-        let latency_ns = in_comp_ns + out_ns;
-        out.latency_ns += latency_ns;
-        out.energy_pj += pj;
-        out.per_op.push(OpCost {
-            in_ns: in_cost.wall_ns() + redist_ns,
-            comp_ns: comp_max,
-            out_ns,
-            redistributed_in: acts_from_redist,
-            energy_pj: pj,
-            latency_ns,
-        });
+        let terms = op_terms(
+            hw, topo, op, part, flags, acts_from_redist, skip_store,
+            &mut scratch.bufs,
+        );
+        let oc =
+            compose_op(&terms, incoming.as_ref(), skip_store, flags.async_fusion);
+        out.latency_ns += oc.latency_ns;
+        out.energy_pj += oc.energy_pj;
+        out.per_op.push(oc);
     }
-    out
+}
+
+/// The gene-dependent per-op cost terms the cache stores: everything in
+/// one op's cost except the incoming-redistribution contributions
+/// (which are additive and attributed at composition time). Produced by
+/// [`op_terms`], composed by [`compose_op`]; the association order of
+/// every floating-point expression replicates the historical monolithic
+/// `evaluate` loop exactly, which is what makes delta-scored results
+/// bit-identical to full evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct OpTerms {
+    /// Input-stage wall time (`load(..).wall_ns()`), activation traffic
+    /// gated by `acts_from_redist`.
+    pub in_wall_ns: f64,
+    /// §5.3 fused in+comp wall time; 0.0 when async fusion is off.
+    pub fused_ns: f64,
+    /// Slowest chiplet's compute time.
+    pub comp_max_ns: f64,
+    /// Output-stage wall time if a store happens (gene-independent).
+    pub store_ns: f64,
+    /// Energy except the incoming redistribution's `energy_pj`.
+    pub energy_pj: f64,
+}
+
+/// Compute one op's [`OpTerms`] (shared by the scratch evaluator and the
+/// cache's miss path). Uses `bufs.in_cost` / `bufs.comp_per` only.
+pub(crate) fn op_terms(
+    hw: &HwConfig,
+    topo: &Topology,
+    op: &GemmOp,
+    part: &Partition,
+    flags: OptFlags,
+    acts_from_redist: bool,
+    skip_store: bool,
+    bufs: &mut super::scratch::TermBufs,
+) -> OpTerms {
+    // ---- input stage
+    load_into(hw, topo, op, part, flags.diagonal, !acts_from_redist,
+              &mut bufs.in_cost);
+
+    // ---- compute stage (per chiplet, row-major)
+    bufs.comp_per.clear();
+    for x in 0..hw.xdim {
+        for y in 0..hw.ydim {
+            bufs.comp_per.push(comp_ns(hw, op, part.px[x], part.py[y]));
+        }
+    }
+    let comp_max = bufs.comp_per.iter().copied().fold(0.0, f64::max);
+    let fused = if flags.async_fusion {
+        // §5.3: each chiplet starts as soon as its data is ready.
+        bufs.comp_per
+            .iter()
+            .enumerate()
+            .map(|(idx, &c)| bufs.in_cost.ready_ns(idx) + c)
+            .fold(0.0, f64::max)
+    } else {
+        0.0
+    };
+
+    // ---- output stage (value unused when the store is skipped)
+    let store_ns = offload_wall_ns(hw, topo, op, flags.diagonal);
+
+    // ---- energy
+    let mut pj = comp_energy_pj(hw, op, part);
+    // Off-chip: weights always; activations only when loaded.
+    let mut off_bytes = hw.bytes(op.k * op.n);
+    if !acts_from_redist {
+        off_bytes += hw.bytes(op.m * op.k);
+    }
+    if !skip_store {
+        off_bytes += hw.bytes(op.m * op.n);
+        pj += collect_energy_pj(hw, topo, op, part, flags.diagonal);
+    }
+    pj += offchip_energy_pj(hw, off_bytes);
+    pj += load_energy_pj(hw, topo, op, part, flags.diagonal,
+                         !acts_from_redist);
+
+    OpTerms {
+        in_wall_ns: bufs.in_cost.wall_ns(),
+        fused_ns: fused,
+        comp_max_ns: comp_max,
+        store_ns,
+        energy_pj: pj,
+    }
+}
+
+/// Compose an op's [`OpTerms`] with its incoming redistribution (if any)
+/// into the final [`OpCost`]. `incoming` is `Some` exactly when the
+/// activations arrived by on-package redistribution.
+pub(crate) fn compose_op(
+    terms: &OpTerms,
+    incoming: Option<&RedistCost>,
+    skip_store: bool,
+    async_fusion: bool,
+) -> OpCost {
+    let redist_ns = incoming.map_or(0.0, |r| r.total_ns());
+    // Redistribution is a row/column-structured exchange that must
+    // finish before compute (it rewrites the operand layout), so it
+    // serializes with the fused part.
+    let in_comp_ns = if async_fusion {
+        redist_ns + terms.fused_ns
+    } else {
+        redist_ns + terms.in_wall_ns + terms.comp_max_ns
+    };
+    let out_ns = if skip_store { 0.0 } else { terms.store_ns };
+    let mut pj = terms.energy_pj;
+    if let Some(r) = incoming {
+        pj += r.energy_pj;
+    }
+    let latency_ns = in_comp_ns + out_ns;
+    OpCost {
+        in_ns: terms.in_wall_ns + redist_ns,
+        comp_ns: terms.comp_max_ns,
+        out_ns,
+        redistributed_in: incoming.is_some(),
+        energy_pj: pj,
+        latency_ns,
+    }
+}
+
+/// §6.1 "adaptive communication strategy" for edge `i -> i+1`: the
+/// redistribution cost when it is both legal (§5.2) and cheaper than
+/// the store + activation-reload memory round-trip, else `None`.
+/// Shared by the scratch evaluator and the cache's miss path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn edge_decision(
+    hw: &HwConfig,
+    topo: &Topology,
+    wl: &Workload,
+    i: usize,
+    producer_part: &Partition,
+    consumer_part: &Partition,
+    collect_col: usize,
+    diagonal: bool,
+    bufs: &mut super::scratch::TermBufs,
+) -> Option<RedistCost> {
+    if !wl.ops[i].redistributable_to(&wl.ops[i + 1]) {
+        return None;
+    }
+    let r = redistribute(hw, &wl.ops[i], producer_part, consumer_part,
+                         collect_col);
+    let store_wall = offload_wall_ns(hw, topo, &wl.ops[i], diagonal);
+    let act_load_extra =
+        act_load_extra_ns(hw, topo, &wl.ops[i + 1], consumer_part, diagonal,
+                          bufs);
+    // Adopt redistribution when it beats the memory round-trip.
+    if r.total_ns() < store_wall + act_load_extra {
+        Some(r)
+    } else {
+        None
+    }
+}
+
+/// The activation share of a consumer op's load wall time: full load
+/// minus weights-only load. What a producer's redistribution saves the
+/// consumer (§5.2).
+pub(crate) fn act_load_extra_ns(
+    hw: &HwConfig,
+    topo: &Topology,
+    consumer: &GemmOp,
+    consumer_part: &Partition,
+    diagonal: bool,
+    bufs: &mut super::scratch::TermBufs,
+) -> f64 {
+    load_into(hw, topo, consumer, consumer_part, diagonal, true,
+              &mut bufs.in_cost);
+    let full = bufs.in_cost.wall_ns();
+    load_into(hw, topo, consumer, consumer_part, diagonal, false,
+              &mut bufs.in_cost);
+    let wonly = bufs.in_cost.wall_ns();
+    full - wonly
 }
 
 #[cfg(test)]
@@ -303,6 +431,40 @@ mod tests {
         let asyn = evaluate(&hw, &topo, &wl, &alloc,
                             OptFlags { async_fusion: true, ..OptFlags::NONE });
         assert!(asyn.latency_ns <= sync.latency_ns);
+    }
+
+    #[test]
+    fn evaluate_into_reuses_scratch_bit_identically() {
+        // One scratch + one output reused across workloads of different
+        // sizes and flag sets must reproduce fresh `evaluate` exactly.
+        let (hw, topo) = setup(MemKind::Hbm);
+        let mut scratch = EvalScratch::default();
+        let mut out = CostBreakdown::default();
+        for wl in crate::workload::models::evaluation_suite(1) {
+            let alloc = uniform_allocation(&hw, &wl);
+            for flags in [
+                OptFlags::NONE,
+                OptFlags::ALL,
+                OptFlags { redistribution: true, ..OptFlags::NONE },
+                OptFlags { async_fusion: true, ..OptFlags::NONE },
+            ] {
+                let fresh = evaluate(&hw, &topo, &wl, &alloc, flags);
+                evaluate_into(&hw, &topo, &wl, &alloc, flags, &mut scratch,
+                              &mut out);
+                assert_eq!(fresh.latency_ns.to_bits(),
+                           out.latency_ns.to_bits(), "{}", wl.name);
+                assert_eq!(fresh.energy_pj.to_bits(),
+                           out.energy_pj.to_bits(), "{}", wl.name);
+                assert_eq!(fresh.per_op.len(), out.per_op.len());
+                for (a, b) in fresh.per_op.iter().zip(&out.per_op) {
+                    assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+                    assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+                    assert_eq!(a.in_ns.to_bits(), b.in_ns.to_bits());
+                    assert_eq!(a.out_ns.to_bits(), b.out_ns.to_bits());
+                    assert_eq!(a.redistributed_in, b.redistributed_in);
+                }
+            }
+        }
     }
 
     #[test]

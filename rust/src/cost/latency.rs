@@ -64,6 +64,26 @@ pub fn offload(hw: &HwConfig, topo: &Topology, op: &GemmOp, diagonal: bool) -> C
     }
 }
 
+/// Wall time of [`offload`] without materializing the per-chiplet vector
+/// (every chiplet's collection time is identical, so the max *is* the
+/// collection time). Bit-identical to `offload(..).wall_ns()` — pinned
+/// by a test below and relied on by the evaluator hot path (§Perf).
+pub fn offload_wall_ns(
+    hw: &HwConfig,
+    topo: &Topology,
+    op: &GemmOp,
+    diagonal: bool,
+) -> f64 {
+    let out_bytes = hw.bytes(op.m * op.n);
+    let entr = topo.entrance_links(diagonal);
+    let collection_ns = if entr == 0 {
+        0.0
+    } else {
+        out_bytes / (entr as f64 * hw.bw_nop)
+    };
+    out_bytes / hw.bw_mem + collection_ns
+}
+
 /// §4.3.3 — data loading: off-chip fetch + congestion-aware on-chip
 /// distribution. `load_acts` is false when on-package redistribution
 /// (§5.2) supplies the activations and only weights stream from memory.
@@ -75,8 +95,27 @@ pub fn load(
     diagonal: bool,
     load_acts: bool,
 ) -> CommCost {
+    let mut out = CommCost::default();
+    load_into(hw, topo, op, part, diagonal, load_acts, &mut out);
+    out
+}
+
+/// [`load`] writing into a caller-provided [`CommCost`], reusing its
+/// per-chiplet buffer — the zero-allocation form the evaluator scratch
+/// path uses (§Perf). Results are bit-identical to [`load`] (same code).
+pub fn load_into(
+    hw: &HwConfig,
+    topo: &Topology,
+    op: &GemmOp,
+    part: &Partition,
+    diagonal: bool,
+    load_acts: bool,
+    out: &mut CommCost,
+) {
     let hi = high_bw(hw);
-    let mut per_chiplet = Vec::with_capacity(topo.num_chiplets());
+    let per_chiplet = &mut out.per_chiplet_ns;
+    per_chiplet.clear();
+    per_chiplet.reserve(topo.num_chiplets());
     for p in topo.positions() {
         let Pos { row: x, col: y } = p;
         // Activation chunk px[x] * K is row-wise shared (every chiplet in
@@ -108,7 +147,7 @@ pub fn load(
     if load_acts {
         off_bytes += hw.bytes(op.m * op.k);
     }
-    CommCost { per_chiplet_ns: per_chiplet, offchip_ns: off_bytes / hw.bw_mem }
+    out.offchip_ns = off_bytes / hw.bw_mem;
 }
 
 #[cfg(test)]
@@ -193,6 +232,37 @@ mod tests {
         let wonly = load(&hw, &topo, &op, &part, false, false);
         assert!(wonly.offchip_ns < full.offchip_ns);
         assert!(wonly.max_onchip_ns() < full.max_onchip_ns());
+    }
+
+    #[test]
+    fn offload_wall_matches_full_offload() {
+        let op = GemmOp::dense("x", 480, 64, 100);
+        for ty in SystemType::ALL {
+            for diagonal in [false, true] {
+                let (hw, topo) = setup(ty, MemKind::Hbm);
+                let full = offload(&hw, &topo, &op, diagonal).wall_ns();
+                let fast = offload_wall_ns(&hw, &topo, &op, diagonal);
+                assert_eq!(full.to_bits(), fast.to_bits(), "{ty:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn load_into_reuses_buffer_bit_identically() {
+        let (hw, topo) = setup(SystemType::A, MemKind::Hbm);
+        let op = GemmOp::dense("x", 1024, 512, 1024);
+        let part = uniform(&hw, &op);
+        let fresh = load(&hw, &topo, &op, &part, true, true);
+        let mut buf = CommCost {
+            per_chiplet_ns: vec![99.0; 3], // stale garbage must be cleared
+            offchip_ns: -1.0,
+        };
+        load_into(&hw, &topo, &op, &part, true, true, &mut buf);
+        assert_eq!(fresh.offchip_ns.to_bits(), buf.offchip_ns.to_bits());
+        assert_eq!(fresh.per_chiplet_ns.len(), buf.per_chiplet_ns.len());
+        for (a, b) in fresh.per_chiplet_ns.iter().zip(&buf.per_chiplet_ns) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -6,5 +6,9 @@ pub mod compute;
 pub mod energy;
 pub mod evaluator;
 pub mod latency;
+pub mod scratch;
 
-pub use evaluator::{evaluate, CostBreakdown, Objective, OpCost, OptFlags};
+pub use evaluator::{
+    evaluate, evaluate_into, CostBreakdown, Objective, OpCost, OptFlags,
+};
+pub use scratch::{CacheStats, CachedEval, EvalScratch};

@@ -1,0 +1,520 @@
+//! Reusable evaluator state (§Perf): zero-allocation scratch buffers
+//! for [`super::evaluator::evaluate_into`] and the gene-keyed
+//! [`CachedEval`] that delta-scores GA children.
+//!
+//! # Cache invariants (see DESIGN.md §Performance architecture)
+//!
+//! Every cached value is keyed by *all* the genes that feed its
+//! computation, so reuse is bit-identical to recomputation by
+//! construction:
+//!
+//! * **Op core** ([`OpTerms`]) — keyed by op index, the op's own
+//!   partition `(Px, Py)`, and the two booleans derived from the
+//!   adjacent edge decisions (`acts_from_redist`, `skip_store`).
+//! * **Edge decision** (`Option<RedistCost>` for edge `i -> i+1`) —
+//!   keyed by edge index, both ops' partitions and the producer's
+//!   collection column.
+//! * **Activation-load share** (what redistribution saves the
+//!   consumer) — keyed by consumer index and consumer partition; a
+//!   sub-term of the edge decision cached separately because crossover
+//!   creates novel (producer, consumer) pairs whose consumer half was
+//!   already scored.
+//! * Gene-independent terms (store wall time, edge legality) are
+//!   precomputed once at construction.
+//!
+//! A GA child that mutated `k` ops therefore recomputes only those
+//! ops' cores plus the adjacent edges; everything else is a map hit.
+//! Debug builds re-run the full evaluator on every call and assert the
+//! composed result is bit-identical.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+use crate::config::HwConfig;
+use crate::partition::{Allocation, Partition};
+use crate::redistribution::RedistCost;
+use crate::topology::Topology;
+use crate::workload::Workload;
+
+use super::evaluator::{
+    act_load_extra_ns, compose_op, op_terms, CostBreakdown, Objective,
+    OpTerms, OptFlags,
+};
+use super::latency::{offload_wall_ns, CommCost};
+use crate::redistribution::redistribute;
+
+/// Per-call temporaries shared by the evaluator's input/compute stages.
+#[derive(Debug, Clone, Default)]
+pub struct TermBufs {
+    pub(crate) in_cost: CommCost,
+    pub(crate) comp_per: Vec<f64>,
+}
+
+/// Scratch buffers for [`super::evaluator::evaluate_into`]: reused
+/// across calls so the evaluator allocates nothing once warmed up to
+/// the workload size.
+#[derive(Debug, Clone, Default)]
+pub struct EvalScratch {
+    pub(crate) redist_edge: Vec<bool>,
+    pub(crate) redist_cost: Vec<Option<RedistCost>>,
+    pub(crate) bufs: TermBufs,
+}
+
+// ---- FNV-1a hashing -----------------------------------------------------
+//
+// The cache keys are short integer slices; SipHash (std's default,
+// DoS-resistant) costs more than the map probe itself here. FNV-1a is
+// the standard zero-dependency replacement for small fixed keys.
+
+pub(crate) struct Fnv64 {
+    state: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64 { state: 0xcbf29ce484222325 }
+    }
+}
+
+impl Hasher for Fnv64 {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut h = self.state;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        self.state = h;
+    }
+}
+
+type FnvMap<K, V> = HashMap<K, V, BuildHasherDefault<Fnv64>>;
+
+/// One op's partition genes, owned (map key).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct GeneKey {
+    px: Box<[usize]>,
+    py: Box<[usize]>,
+}
+
+impl GeneKey {
+    // Known follow-up: this boxes two small slices per probe even on
+    // hits (~tens of short-lived allocations per rescore). Exactness
+    // requires owning the genes, so the fix is interning each op's
+    // partition to a small integer id and keying edge/core maps on ids
+    // — deferred until a measured baseline shows it matters.
+    fn of(part: &Partition) -> GeneKey {
+        GeneKey {
+            px: Box::from(part.px.as_slice()),
+            py: Box::from(part.py.as_slice()),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CoreKey {
+    genes: GeneKey,
+    acts_from_redist: bool,
+    skip_store: bool,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct EdgeKey {
+    producer: GeneKey,
+    consumer: GeneKey,
+    collect_col: usize,
+}
+
+/// Cache telemetry (tests + the hotpath bench report these).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+/// Entry cap: beyond this the caches are dropped wholesale. Each entry
+/// is ~100 bytes for paper-scale grids, so the cap bounds a worker at
+/// tens of MB while never firing inside one GA generation.
+const CACHE_CAP_ENTRIES: usize = 1 << 18;
+
+/// A memoizing evaluator bound to one `(hw, topo, wl, flags)` problem.
+///
+/// [`CachedEval::objective`] / [`CachedEval::breakdown`] score an
+/// allocation exactly like [`super::evaluator::evaluate`] but reuse
+/// per-op/per-edge terms across calls (see the module docs for the key
+/// structure). The GA holds one per worker thread; values are
+/// bit-identical to full evaluation regardless of cache state, which
+/// is what keeps parallel and delta-scored runs equal to the
+/// sequential full evaluator.
+pub struct CachedEval<'a> {
+    hw: &'a HwConfig,
+    topo: &'a Topology,
+    wl: &'a Workload,
+    flags: OptFlags,
+    /// Edge `i -> i+1` legality (§5.2; gene-independent).
+    edge_legal: Vec<bool>,
+    /// `offload_wall_ns` per op (gene-independent).
+    store_wall: Vec<f64>,
+    core_cache: Vec<FnvMap<CoreKey, OpTerms>>,
+    edge_cache: Vec<FnvMap<EdgeKey, Option<RedistCost>>>,
+    act_cache: Vec<FnvMap<GeneKey, f64>>,
+    bufs: TermBufs,
+    redist_edge: Vec<bool>,
+    redist_cost: Vec<Option<RedistCost>>,
+    out: CostBreakdown,
+    hits: u64,
+    misses: u64,
+    entries: usize,
+}
+
+impl<'a> CachedEval<'a> {
+    pub fn new(
+        hw: &'a HwConfig,
+        topo: &'a Topology,
+        wl: &'a Workload,
+        flags: OptFlags,
+    ) -> CachedEval<'a> {
+        let n = wl.ops.len();
+        let edge_legal: Vec<bool> = (0..n)
+            .map(|i| {
+                i + 1 < n && wl.ops[i].redistributable_to(&wl.ops[i + 1])
+            })
+            .collect();
+        let store_wall: Vec<f64> = wl
+            .ops
+            .iter()
+            .map(|op| offload_wall_ns(hw, topo, op, flags.diagonal))
+            .collect();
+        CachedEval {
+            hw,
+            topo,
+            wl,
+            flags,
+            edge_legal,
+            store_wall,
+            core_cache: (0..n).map(|_| FnvMap::default()).collect(),
+            edge_cache: (0..n).map(|_| FnvMap::default()).collect(),
+            act_cache: (0..n).map(|_| FnvMap::default()).collect(),
+            bufs: TermBufs::default(),
+            redist_edge: vec![false; n],
+            redist_cost: vec![None; n],
+            out: CostBreakdown::default(),
+            hits: 0,
+            misses: 0,
+            entries: 0,
+        }
+    }
+
+    pub fn flags(&self) -> OptFlags {
+        self.flags
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            entries: self.entries,
+        }
+    }
+
+    /// Drop every memoized term (keeps the problem binding).
+    pub fn clear_cache(&mut self) {
+        for m in &mut self.core_cache {
+            m.clear();
+        }
+        for m in &mut self.edge_cache {
+            m.clear();
+        }
+        for m in &mut self.act_cache {
+            m.clear();
+        }
+        self.entries = 0;
+    }
+
+    /// Score `alloc` on the objective — bit-identical to
+    /// `evaluate(..).objective(obj)`.
+    pub fn objective(&mut self, alloc: &Allocation, obj: Objective) -> f64 {
+        self.rescore(alloc);
+        self.out.objective(obj)
+    }
+
+    /// Full cost breakdown — bit-identical to `evaluate(..)`. The
+    /// returned reference is valid until the next scoring call.
+    pub fn breakdown(&mut self, alloc: &Allocation) -> &CostBreakdown {
+        self.rescore(alloc);
+        &self.out
+    }
+
+    fn rescore(&mut self, alloc: &Allocation) {
+        if self.entries > CACHE_CAP_ENTRIES {
+            self.clear_cache();
+        }
+        let CachedEval {
+            hw,
+            topo,
+            wl,
+            flags,
+            edge_legal,
+            store_wall,
+            core_cache,
+            edge_cache,
+            act_cache,
+            bufs,
+            redist_edge,
+            redist_cost,
+            out,
+            hits,
+            misses,
+            entries,
+        } = self;
+        let (hw, topo, wl, flags) = (*hw, *topo, *wl, *flags);
+        let n = wl.ops.len();
+        debug_assert_eq!(alloc.parts.len(), n);
+
+        // ---- Phase 1: edge decisions (i -> i+1).
+        redist_edge.clear();
+        redist_edge.resize(n, false);
+        redist_cost.clear();
+        redist_cost.resize(n, None);
+        if flags.redistribution {
+            for i in 0..n.saturating_sub(1) {
+                if !edge_legal[i] {
+                    continue;
+                }
+                let key = EdgeKey {
+                    producer: GeneKey::of(&alloc.parts[i]),
+                    consumer: GeneKey::of(&alloc.parts[i + 1]),
+                    collect_col: alloc.collect_cols[i],
+                };
+                let decision = match edge_cache[i].entry(key) {
+                    Entry::Occupied(e) => {
+                        *hits += 1;
+                        *e.get()
+                    }
+                    Entry::Vacant(v) => {
+                        *misses += 1;
+                        *entries += 1;
+                        // Same terms, same order as
+                        // `evaluator::edge_decision` (legality already
+                        // checked; store wall precomputed; activation
+                        // share sub-cached by consumer genes).
+                        let r = redistribute(
+                            hw,
+                            &wl.ops[i],
+                            &alloc.parts[i],
+                            &alloc.parts[i + 1],
+                            alloc.collect_cols[i],
+                        );
+                        let act_extra = match act_cache[i + 1]
+                            .entry(GeneKey::of(&alloc.parts[i + 1]))
+                        {
+                            Entry::Occupied(e) => *e.get(),
+                            Entry::Vacant(av) => {
+                                *entries += 1;
+                                *av.insert(act_load_extra_ns(
+                                    hw,
+                                    topo,
+                                    &wl.ops[i + 1],
+                                    &alloc.parts[i + 1],
+                                    flags.diagonal,
+                                    bufs,
+                                ))
+                            }
+                        };
+                        let adopt =
+                            r.total_ns() < store_wall[i] + act_extra;
+                        *v.insert(if adopt { Some(r) } else { None })
+                    }
+                };
+                if let Some(r) = decision {
+                    redist_edge[i] = true;
+                    redist_cost[i] = Some(r);
+                }
+            }
+        }
+
+        // ---- Phase 2: per-op cores, composed in index order exactly
+        // like the full evaluator (same summation order => same bits).
+        out.latency_ns = 0.0;
+        out.energy_pj = 0.0;
+        out.per_op.clear();
+        out.per_op.reserve(n);
+        for (i, op) in wl.ops.iter().enumerate() {
+            let acts_from_redist = i > 0 && redist_edge[i - 1];
+            let skip_store = i + 1 < n && redist_edge[i];
+            let key = CoreKey {
+                genes: GeneKey::of(&alloc.parts[i]),
+                acts_from_redist,
+                skip_store,
+            };
+            let terms = match core_cache[i].entry(key) {
+                Entry::Occupied(e) => {
+                    *hits += 1;
+                    *e.get()
+                }
+                Entry::Vacant(v) => {
+                    *misses += 1;
+                    *entries += 1;
+                    *v.insert(op_terms(
+                        hw,
+                        topo,
+                        op,
+                        &alloc.parts[i],
+                        flags,
+                        acts_from_redist,
+                        skip_store,
+                        bufs,
+                    ))
+                }
+            };
+            let incoming = if acts_from_redist {
+                redist_cost[i - 1]
+            } else {
+                None
+            };
+            let oc = compose_op(
+                &terms,
+                incoming.as_ref(),
+                skip_store,
+                flags.async_fusion,
+            );
+            out.latency_ns += oc.latency_ns;
+            out.energy_pj += oc.energy_pj;
+            out.per_op.push(oc);
+        }
+
+        // Debug builds re-derive everything from scratch and insist the
+        // delta-scored composition is bit-identical (ISSUE 2 invariant).
+        #[cfg(debug_assertions)]
+        {
+            let full = super::evaluator::evaluate(hw, topo, wl, alloc, flags);
+            debug_assert_eq!(
+                full.latency_ns.to_bits(),
+                out.latency_ns.to_bits(),
+                "CachedEval latency diverged from full evaluate"
+            );
+            debug_assert_eq!(
+                full.energy_pj.to_bits(),
+                out.energy_pj.to_bits(),
+                "CachedEval energy diverged from full evaluate"
+            );
+            debug_assert_eq!(full.per_op.len(), out.per_op.len());
+            for (a, b) in full.per_op.iter().zip(out.per_op.iter()) {
+                debug_assert_eq!(a.latency_ns.to_bits(),
+                                 b.latency_ns.to_bits());
+                debug_assert_eq!(a.energy_pj.to_bits(),
+                                 b.energy_pj.to_bits());
+                debug_assert_eq!(a.in_ns.to_bits(), b.in_ns.to_bits());
+                debug_assert_eq!(a.comp_ns.to_bits(), b.comp_ns.to_bits());
+                debug_assert_eq!(a.out_ns.to_bits(), b.out_ns.to_bits());
+                debug_assert_eq!(a.redistributed_in, b.redistributed_in);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MemKind, SystemType};
+    use crate::cost::evaluator::evaluate;
+    use crate::partition::uniform_allocation;
+    use crate::workload::models::{alexnet, vit};
+
+    fn setup() -> (HwConfig, Topology) {
+        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+        let topo = Topology::from_hw(&hw);
+        (hw, topo)
+    }
+
+    #[test]
+    fn cached_matches_full_and_hits_on_repeat() {
+        let (hw, topo) = setup();
+        let wl = alexnet(1);
+        let alloc = uniform_allocation(&hw, &wl);
+        let mut cache = CachedEval::new(&hw, &topo, &wl, OptFlags::ALL);
+        let full = evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL);
+        let a = cache.objective(&alloc, Objective::Latency);
+        assert_eq!(a.to_bits(),
+                   full.objective(Objective::Latency).to_bits());
+        let miss_after_first = cache.stats().misses;
+        assert!(miss_after_first > 0);
+        // Identical allocation again: all terms hit.
+        let b = cache.objective(&alloc, Objective::Latency);
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert_eq!(cache.stats().misses, miss_after_first);
+        assert!(cache.stats().hits > 0);
+    }
+
+    #[test]
+    fn single_gene_change_recomputes_neighbors_only() {
+        let (hw, topo) = setup();
+        let wl = alexnet(1);
+        let mut alloc = uniform_allocation(&hw, &wl);
+        let mut cache = CachedEval::new(&hw, &topo, &wl, OptFlags::ALL);
+        cache.objective(&alloc, Objective::Latency);
+        let before = cache.stats().misses;
+        // Move one tile of rows in op 3: dirties op 3's core and the
+        // two adjacent edges (plus their neighbors' core-flag keys),
+        // not the whole workload.
+        alloc.parts[3].px[0] += 16;
+        alloc.parts[3].px[1] -= 16;
+        let v = cache.objective(&alloc, Objective::Edp);
+        let full = evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL)
+            .objective(Objective::Edp);
+        assert_eq!(v.to_bits(), full.to_bits());
+        let fresh = cache.stats().misses - before;
+        assert!(fresh <= 8, "expected a local recompute, got {fresh} misses");
+        assert!(fresh >= 1);
+    }
+
+    #[test]
+    fn edp_objective_matches_on_vit() {
+        let (hw, topo) = setup();
+        let wl = vit(1);
+        let alloc = uniform_allocation(&hw, &wl);
+        for flags in [OptFlags::NONE, OptFlags::ALL] {
+            let mut cache = CachedEval::new(&hw, &topo, &wl, flags);
+            let v = cache.objective(&alloc, Objective::Edp);
+            let full =
+                evaluate(&hw, &topo, &wl, &alloc, flags).objective(Objective::Edp);
+            assert_eq!(v.to_bits(), full.to_bits());
+        }
+    }
+
+    #[test]
+    fn clear_cache_keeps_answers_stable() {
+        let (hw, topo) = setup();
+        let wl = alexnet(1);
+        let alloc = uniform_allocation(&hw, &wl);
+        let mut cache = CachedEval::new(&hw, &topo, &wl, OptFlags::ALL);
+        let a = cache.objective(&alloc, Objective::Latency);
+        cache.clear_cache();
+        assert_eq!(cache.stats().entries, 0);
+        let b = cache.objective(&alloc, Objective::Latency);
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn fnv_hashes_differ_on_small_keys() {
+        use std::hash::Hash;
+        let h = |k: &GeneKey| {
+            let mut f = Fnv64::default();
+            k.hash(&mut f);
+            f.finish()
+        };
+        let a = GeneKey { px: Box::from([1usize, 2].as_slice()),
+                          py: Box::from([3usize].as_slice()) };
+        let b = GeneKey { px: Box::from([1usize, 3].as_slice()),
+                          py: Box::from([3usize].as_slice()) };
+        assert_ne!(h(&a), h(&b));
+        assert_eq!(h(&a), h(&a.clone()));
+    }
+}

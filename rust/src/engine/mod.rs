@@ -138,24 +138,49 @@ impl Engine {
     /// figure harnesses and design-space sweeps. Outcomes carry plans
     /// (with their solver-accepted scores); full [`Report`]s are
     /// derived on demand via [`SweepRow::report`], not eagerly.
+    ///
+    /// Scenarios are scheduled in parallel across worker threads (auto
+    /// thread count); rows come back in scenario order and every value
+    /// is bit-identical to a sequential run for deterministic
+    /// schedulers (see [`Engine::sweep_threaded`]).
     pub fn sweep(
         scenarios: impl IntoIterator<Item = Scenario>,
         schedulers: &[&dyn Scheduler],
     ) -> Result<Vec<SweepRow>, EngineError> {
-        let mut rows = Vec::new();
-        for scenario in scenarios {
-            let engine = Engine::new(scenario);
-            let mut outcomes = Vec::with_capacity(schedulers.len());
-            for &s in schedulers {
-                let planned = engine.schedule_with(s)?;
-                outcomes.push(SweepOutcome {
-                    scheduler: s.key().to_string(),
-                    plan: planned.into_plan(),
-                });
-            }
-            rows.push(SweepRow { scenario: engine.into_scenario(), outcomes });
-        }
-        Ok(rows)
+        Self::sweep_threaded(scenarios, schedulers, 0)
+    }
+
+    /// [`Engine::sweep`] with an explicit worker count: `0` = auto
+    /// (`MCMCOMM_THREADS` env or machine parallelism), `1` = fully
+    /// sequential. Each scenario is one work item; schedulers run in
+    /// registration order inside it, and no RNG state crosses threads
+    /// (every scheduler reseeds from its owned seed per call), so
+    /// thread count cannot change a deterministic scheduler's output
+    /// bits — pinned by `tests/perf_equivalence.rs`.
+    pub fn sweep_threaded(
+        scenarios: impl IntoIterator<Item = Scenario>,
+        schedulers: &[&dyn Scheduler],
+        threads: usize,
+    ) -> Result<Vec<SweepRow>, EngineError> {
+        let scenarios: Vec<Scenario> = scenarios.into_iter().collect();
+        let workers = crate::util::par::resolve_threads(threads);
+        let rows = crate::util::par::par_map(
+            workers,
+            &scenarios,
+            |_, scenario| -> Result<SweepRow, EngineError> {
+                let engine = Engine::new(scenario.clone());
+                let mut outcomes = Vec::with_capacity(schedulers.len());
+                for &s in schedulers {
+                    let planned = engine.schedule_with(s)?;
+                    outcomes.push(SweepOutcome {
+                        scheduler: s.key().to_string(),
+                        plan: planned.into_plan(),
+                    });
+                }
+                Ok(SweepRow { scenario: engine.into_scenario(), outcomes })
+            },
+        );
+        rows.into_iter().collect()
     }
 
     /// Take the scenario back out of the engine.

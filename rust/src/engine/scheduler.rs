@@ -20,7 +20,12 @@ use super::EngineError;
 /// Implementations own their tuning knobs (population sizes, solver
 /// budgets, seeds); the scenario owns the problem (hardware, workload,
 /// requested flags, objective).
-pub trait Scheduler {
+///
+/// `Sync` is a supertrait: [`crate::engine::Engine::sweep`] shares one
+/// scheduler across worker threads, so implementations must keep any
+/// mutable solver state local to `schedule` (all built-ins do — their
+/// RNGs are constructed per call from the owned seed).
+pub trait Scheduler: Sync {
     /// Human-readable name (figure tables), e.g. `"MCMComm-GA"`.
     fn name(&self) -> &str;
 

@@ -10,7 +10,9 @@ use crate::pipeline;
 use crate::topology::Pos;
 use crate::util::bench::Reporter;
 use crate::util::math::geomean;
+use crate::util::par::{auto_threads, par_map};
 use crate::workload::models::evaluation_suite;
+use crate::workload::Workload;
 
 use super::{run_cell, scheduler_geomean, Cell, EvalConfig};
 
@@ -90,6 +92,19 @@ fn print_heatmap(
 /// The standard scheduler set the figures compare (Table 3).
 const FIG_KEYS: [&str; 4] = ["baseline", "simba", "ga", "miqp"];
 
+/// Run one `run_cell` per (hardware, workload, objective) job in
+/// parallel; cells come back in job order so tables keep the paper's
+/// row layout. Per-cell solver seeds come from `cfg`, identical to a
+/// sequential run (RNGs never cross cells).
+fn run_cells_par(
+    jobs: &[(HwConfig, Workload, Objective)],
+    cfg: &EvalConfig,
+) -> Vec<Cell> {
+    par_map(auto_threads(), jobs, |_, (hw, wl, obj)| {
+        run_cell(hw, wl, *obj, cfg, &FIG_KEYS)
+    })
+}
+
 fn print_cells(title: &str, cells: &[Cell]) {
     let mut rep = Reporter::new(
         title,
@@ -123,41 +138,42 @@ fn print_cells(title: &str, cells: &[Cell]) {
 
 /// Figure 8 — normalized latency, 4x4 HBM, packaging types A–D.
 pub fn fig8(cfg: &EvalConfig) -> Vec<Cell> {
-    let mut cells = Vec::new();
+    let mut jobs = Vec::new();
     for ty in SystemType::ALL {
         let hw = HwConfig::paper(ty, MemKind::Hbm, 4);
         for wl in evaluation_suite(1) {
-            cells.push(run_cell(&hw, &wl, Objective::Latency, cfg,
-                                &FIG_KEYS));
+            jobs.push((hw.clone(), wl, Objective::Latency));
         }
     }
+    let cells = run_cells_par(&jobs, cfg);
     print_cells("Figure 8: normalized latency, 4x4 HBM, types A-D", &cells);
     cells
 }
 
 /// Figure 9 — latency scaling on type A (4x4 / 8x8 / 16x16).
 pub fn fig9(cfg: &EvalConfig, grids: &[usize]) -> Vec<Cell> {
-    let mut cells = Vec::new();
+    let mut jobs = Vec::new();
     for &g in grids {
         let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, g);
         for wl in evaluation_suite(1) {
-            cells.push(run_cell(&hw, &wl, Objective::Latency, cfg,
-                                &FIG_KEYS));
+            jobs.push((hw.clone(), wl, Objective::Latency));
         }
     }
+    let cells = run_cells_par(&jobs, cfg);
     print_cells("Figure 9: normalized latency scaling, type-A HBM", &cells);
     cells
 }
 
 /// Figure 10 — EDP scaling on type A.
 pub fn fig10(cfg: &EvalConfig, grids: &[usize]) -> Vec<Cell> {
-    let mut cells = Vec::new();
+    let mut jobs = Vec::new();
     for &g in grids {
         let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, g);
         for wl in evaluation_suite(1) {
-            cells.push(run_cell(&hw, &wl, Objective::Edp, cfg, &FIG_KEYS));
+            jobs.push((hw.clone(), wl, Objective::Edp));
         }
     }
+    let cells = run_cells_par(&jobs, cfg);
     print_cells("Figure 10: normalized EDP scaling, type-A HBM", &cells);
     cells
 }
@@ -189,11 +205,20 @@ pub fn fig11(batches: &[usize]) -> Vec<(String, usize, f64)> {
 /// Figure 12 — low-bandwidth (DRAM) latency + EDP, 4x4 type A.
 pub fn fig12(cfg: &EvalConfig) -> (Vec<Cell>, Vec<Cell>) {
     let hw = HwConfig::paper(SystemType::A, MemKind::Dram, 4);
+    let mut jobs = Vec::new();
+    for wl in evaluation_suite(1) {
+        jobs.push((hw.clone(), wl.clone(), Objective::Latency));
+        jobs.push((hw.clone(), wl, Objective::Edp));
+    }
+    let cells = run_cells_par(&jobs, cfg);
     let mut lat = Vec::new();
     let mut edp = Vec::new();
-    for wl in evaluation_suite(1) {
-        lat.push(run_cell(&hw, &wl, Objective::Latency, cfg, &FIG_KEYS));
-        edp.push(run_cell(&hw, &wl, Objective::Edp, cfg, &FIG_KEYS));
+    for (i, c) in cells.into_iter().enumerate() {
+        if i % 2 == 0 {
+            lat.push(c);
+        } else {
+            edp.push(c);
+        }
     }
     print_cells("Figure 12a: normalized latency, 4x4 type-A DRAM", &lat);
     print_cells("Figure 12b: normalized EDP, 4x4 type-A DRAM", &edp);
@@ -223,28 +248,42 @@ pub fn fig13(cfg: &EvalConfig) -> Vec<(String, String, f64)> {
     let mut lat_cols: Vec<Vec<f64>> = vec![Vec::new(); stages.len()];
     let mut edp_cols: Vec<Vec<f64>> = vec![Vec::new(); stages.len()];
     let ga = schedulers::Ga::new(cfg.ga_params(), cfg.seed);
-    for wl in evaluation_suite(1) {
-        let base = Scenario::headline(wl.clone()).baseline_report();
-        for (si, (_, flags, pipelined)) in stages.iter().enumerate() {
-            let scenario = Scenario::builder()
-                .workload(wl.clone())
-                .flags(*flags)
-                .objective(Objective::Latency)
-                .build()
-                .expect("valid ablation scenario");
-            let engine = Engine::new(scenario);
-            let c = engine
-                .schedule_with(&ga)
-                .expect("GA schedules every stage")
-                .report();
-            let (mut lat, mut edp) = (c.latency_ns(), c.edp());
-            if *pipelined {
-                let speed = pipeline::pipeline_speedup(&c.breakdown, 4);
-                lat /= speed;
-                edp /= speed * speed; // energy unchanged, delay shrinks
-            }
-            lat_cols[si].push(base.latency_ns() / lat);
-            edp_cols[si].push(base.edp() / edp);
+    // One parallel job per workload; each job runs its ablation stages
+    // in order (the GA reseeds per schedule call, so results match a
+    // sequential run).
+    let wls = evaluation_suite(1);
+    let per_wl: Vec<Vec<(f64, f64)>> =
+        par_map(auto_threads(), &wls, |_, wl| {
+            let base = Scenario::headline(wl.clone()).baseline_report();
+            stages
+                .iter()
+                .map(|(_, flags, pipelined)| {
+                    let scenario = Scenario::builder()
+                        .workload(wl.clone())
+                        .flags(*flags)
+                        .objective(Objective::Latency)
+                        .build()
+                        .expect("valid ablation scenario");
+                    let engine = Engine::new(scenario);
+                    let c = engine
+                        .schedule_with(&ga)
+                        .expect("GA schedules every stage")
+                        .report();
+                    let (mut lat, mut edp) = (c.latency_ns(), c.edp());
+                    if *pipelined {
+                        let speed =
+                            pipeline::pipeline_speedup(&c.breakdown, 4);
+                        lat /= speed;
+                        edp /= speed * speed; // energy unchanged
+                    }
+                    (base.latency_ns() / lat, base.edp() / edp)
+                })
+                .collect()
+        });
+    for stage_rows in per_wl {
+        for (si, (l, e)) in stage_rows.into_iter().enumerate() {
+            lat_cols[si].push(l);
+            edp_cols[si].push(e);
         }
     }
     for (si, (name, _, _)) in stages.iter().enumerate() {

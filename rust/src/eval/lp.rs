@@ -84,7 +84,7 @@ pub fn best_split(hw: &HwConfig, wl: &Workload, flags: OptFlags) -> usize {
         .min_by(|&a, &b| {
             let ca = lp_two_stage(hw, wl, a, flags).pipelined_ns;
             let cb = lp_two_stage(hw, wl, b, flags).pipelined_ns;
-            ca.partial_cmp(&cb).unwrap()
+            ca.total_cmp(&cb)
         })
         .unwrap_or(1)
 }

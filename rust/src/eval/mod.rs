@@ -33,12 +33,19 @@ impl Default for EvalConfig {
 
 impl EvalConfig {
     /// GA knobs for this mode (quick: seconds-class, full: paper-class).
+    ///
+    /// `threads: 1`: the figure harnesses already parallelize at the
+    /// (hw, workload, objective) cell level, so the GA inside each cell
+    /// runs sequentially — nesting auto-threaded GAs under the parallel
+    /// cell map would oversubscribe the machine and multiply per-worker
+    /// cache memory for no wall-clock gain.
     pub fn ga_params(&self) -> GaParams {
         if self.quick {
             GaParams {
                 population: 24,
                 generations: 20,
                 seed: self.seed,
+                threads: 1,
                 ..Default::default()
             }
         } else {
@@ -47,6 +54,7 @@ impl EvalConfig {
                 generations: 120,
                 seed: self.seed,
                 budget: Some(Duration::from_secs(30)),
+                threads: 1,
                 ..Default::default()
             }
         }

@@ -50,7 +50,7 @@
 //! * [`eval`] — figure/table regeneration harnesses (§7), built on
 //!   [`Engine::sweep`]
 //! * [`util`] — offline substrates: RNG, JSON, CLI, bench, propcheck,
-//!   error handling
+//!   scoped-thread parallel maps, error handling
 
 pub mod config;
 pub mod coordinator;

@@ -5,17 +5,28 @@
 //! two gene sets the paper crosses over and mutates. Partition genes are
 //! constrained to the §6.2 trust region (uniform ± 2 systolic tiles,
 //! floored at one tile) and always sum to the exact workload dims.
-//! Fitness is the true analytical evaluator (eq. 6).
+//! Fitness is the true analytical evaluator (eq. 6), delta-scored
+//! through per-worker [`CachedEval`]s and evaluated in parallel.
+//!
+//! Determinism (DESIGN.md §Performance architecture): every stochastic
+//! decision — population seeding, tournament picks, crossover masks,
+//! mutations — happens on the calling thread, in a fixed order, before
+//! each generation's fitness fan-out. Fitness values are bit-identical
+//! to the sequential full evaluator regardless of cache state or
+//! thread count, so the same seed yields the same result at any
+//! `threads` setting.
 
 use std::time::{Duration, Instant};
 
 use crate::config::HwConfig;
-use crate::cost::evaluator::{evaluate, Objective, OptFlags};
+use crate::cost::evaluator::{Objective, OptFlags};
+use crate::cost::CachedEval;
 use crate::partition::{
     dim_bounds, project_to_sum, simba_allocation, uniform_allocation,
     Allocation,
 };
 use crate::topology::Topology;
+use crate::util::par::{par_map_state, resolve_threads};
 use crate::util::rng::Pcg;
 use crate::workload::Workload;
 
@@ -32,6 +43,10 @@ pub struct GaParams {
     pub seed: u64,
     /// Optional wall-clock budget (paper: GA ≈ 30 s).
     pub budget: Option<Duration>,
+    /// Fitness worker threads; `0` = auto (`MCMCOMM_THREADS` env or the
+    /// machine's parallelism), `1` = fully sequential. Results are
+    /// bit-identical across all settings.
+    pub threads: usize,
 }
 
 impl Default for GaParams {
@@ -45,6 +60,7 @@ impl Default for GaParams {
             mutations: 4,
             seed: 0xc0ffee,
             budget: None,
+            threads: 0,
         }
     }
 }
@@ -60,16 +76,7 @@ pub struct GaResult {
 
 struct Ctx<'a> {
     hw: &'a HwConfig,
-    topo: &'a Topology,
     wl: &'a Workload,
-    flags: OptFlags,
-    obj: Objective,
-}
-
-impl Ctx<'_> {
-    fn fitness(&self, a: &Allocation) -> f64 {
-        evaluate(self.hw, self.topo, self.wl, a, self.flags).objective(self.obj)
-    }
 }
 
 fn mutate(ctx: &Ctx, rng: &mut Pcg, a: &mut Allocation, times: usize) {
@@ -142,6 +149,32 @@ fn random_individual(ctx: &Ctx, rng: &mut Pcg) -> Allocation {
     a
 }
 
+/// Score a batch of genomes across the per-worker caches; results in
+/// genome order, bit-identical to sequential full evaluation.
+fn eval_batch(
+    genomes: &[Allocation],
+    caches: &mut [CachedEval<'_>],
+    obj: Objective,
+) -> Vec<f64> {
+    par_map_state(genomes, caches, |cache, _i, g| cache.objective(g, obj))
+}
+
+/// Indices of the `k` best individuals, ascending by fitness. NaN-safe
+/// (`f64::total_cmp`): a poisoned objective sorts last instead of
+/// panicking mid-run.
+fn elite_indices(pop: &[(Allocation, f64)], k: usize) -> Vec<usize> {
+    let k = k.min(pop.len());
+    let mut idx: Vec<usize> = (0..pop.len()).collect();
+    if k > 0 && k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            pop[a].1.total_cmp(&pop[b].1)
+        });
+    }
+    idx.truncate(k);
+    idx.sort_unstable_by(|&a, &b| pop[a].1.total_cmp(&pop[b].1));
+    idx
+}
+
 /// Run the GA.
 pub fn optimize(
     hw: &HwConfig,
@@ -151,23 +184,27 @@ pub fn optimize(
     obj: Objective,
     params: &GaParams,
 ) -> GaResult {
-    let ctx = Ctx { hw, topo, wl, flags, obj };
+    let ctx = Ctx { hw, wl };
     let mut rng = Pcg::seeded(params.seed);
     let t0 = Instant::now();
 
-    // Seed the population with the two reference schemes + random jitter.
-    let mut pop: Vec<(Allocation, f64)> = Vec::with_capacity(params.population);
-    let uni = uniform_allocation(hw, wl);
-    let fit = ctx.fitness(&uni);
-    pop.push((uni, fit));
-    let simba = simba_allocation(hw, topo, wl);
-    let fit = ctx.fitness(&simba);
-    pop.push((simba, fit));
-    while pop.len() < params.population {
-        let ind = random_individual(&ctx, &mut rng);
-        let f = ctx.fitness(&ind);
-        pop.push((ind, f));
+    let workers = resolve_threads(params.threads)
+        .min(params.population.max(1));
+    let mut caches: Vec<CachedEval<'_>> = (0..workers)
+        .map(|_| CachedEval::new(hw, topo, wl, flags))
+        .collect();
+
+    // Seed the population with the two reference schemes + random jitter
+    // (genomes drawn on this thread, then scored as one batch).
+    let mut genomes: Vec<Allocation> = Vec::with_capacity(params.population);
+    genomes.push(uniform_allocation(hw, wl));
+    genomes.push(simba_allocation(hw, topo, wl));
+    while genomes.len() < params.population {
+        genomes.push(random_individual(&ctx, &mut rng));
     }
+    let fits = eval_batch(&genomes, &mut caches, obj);
+    let mut pop: Vec<(Allocation, f64)> =
+        genomes.into_iter().zip(fits).collect();
 
     let mut history = Vec::with_capacity(params.generations);
     let mut gens = 0;
@@ -178,33 +215,61 @@ pub fn optimize(
             }
         }
         gens += 1;
-        pop.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-        history.push(pop[0].1);
-        let mut next: Vec<(Allocation, f64)> =
-            pop.iter().take(params.elite).cloned().collect();
-        while next.len() < params.population {
-            let pick = |rng: &mut Pcg| {
-                let mut best = rng.range_usize(0, pop.len() - 1);
-                for _ in 1..params.tournament {
-                    let c = rng.range_usize(0, pop.len() - 1);
-                    if pop[c].1 < pop[best].1 {
-                        best = c;
-                    }
+        let elites = elite_indices(&pop, params.elite);
+        let best = pop
+            .iter()
+            .map(|(_, f)| *f)
+            .min_by(f64::total_cmp)
+            .expect("non-empty population");
+        history.push(best);
+
+        // Breed every child on this thread (fixed RNG order), then score
+        // the whole brood in parallel.
+        let n_children = params.population.saturating_sub(elites.len());
+        let mut children: Vec<Allocation> = Vec::with_capacity(n_children);
+        let pick = |rng: &mut Pcg, pop: &[(Allocation, f64)]| {
+            let mut best = rng.range_usize(0, pop.len() - 1);
+            for _ in 1..params.tournament {
+                let c = rng.range_usize(0, pop.len() - 1);
+                if pop[c].1 < pop[best].1 {
+                    best = c;
                 }
-                best
-            };
-            let pa = pick(&mut rng);
-            let pb = pick(&mut rng);
+            }
+            best
+        };
+        for _ in 0..n_children {
+            let pa = pick(&mut rng, pop.as_slice());
+            let pb = pick(&mut rng, pop.as_slice());
             let mut child =
-                crossover(&ctx, &mut rng, &pop[pa].0, &pop[pb].0, params.p_cross);
+                crossover(&ctx, &mut rng, &pop[pa].0, &pop[pb].0,
+                          params.p_cross);
             mutate(&ctx, &mut rng, &mut child, params.mutations);
-            let f = ctx.fitness(&child);
-            next.push((child, f));
+            children.push(child);
         }
+        let fits = eval_batch(&children, &mut caches, obj);
+
+        // Next generation: elites move over (no clones), children follow.
+        let mut next: Vec<(Allocation, f64)> =
+            Vec::with_capacity(elites.len() + n_children);
+        {
+            let mut take = elites;
+            take.sort_unstable_by(|a, b| b.cmp(a)); // descending index
+            let mut moved: Vec<(Allocation, f64)> =
+                take.into_iter().map(|i| pop.swap_remove(i)).collect();
+            moved.sort_by(|a, b| a.1.total_cmp(&b.1));
+            next.extend(moved);
+        }
+        next.extend(children.into_iter().zip(fits));
         pop = next;
     }
-    pop.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-    let (best, best_f) = pop.swap_remove(0);
+
+    let mut best_i = 0;
+    for j in 1..pop.len() {
+        if pop[j].1.total_cmp(&pop[best_i].1).is_lt() {
+            best_i = j;
+        }
+    }
+    let (best, best_f) = pop.swap_remove(best_i);
     GaResult {
         alloc: best,
         objective_value: best_f,
@@ -217,6 +282,7 @@ pub fn optimize(
 mod tests {
     use super::*;
     use crate::config::{MemKind, SystemType};
+    use crate::cost::evaluator::evaluate;
     use crate::workload::models::alexnet;
 
     fn setup() -> (HwConfig, Topology, Workload) {
@@ -265,6 +331,35 @@ mod tests {
                          &small_params(7));
         assert_eq!(a.objective_value, b.objective_value);
         assert_eq!(a.alloc, b.alloc);
+    }
+
+    #[test]
+    fn ga_result_score_matches_full_evaluator() {
+        // The reported objective must be the true evaluator's score of
+        // the reported allocation, bit-for-bit (delta-scoring and
+        // parallelism must not leak into results).
+        let (hw, topo, wl) = setup();
+        let r = optimize(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency,
+                         &small_params(5));
+        let full = evaluate(&hw, &topo, &wl, &r.alloc, OptFlags::ALL)
+            .objective(Objective::Latency);
+        assert_eq!(r.objective_value.to_bits(), full.to_bits());
+    }
+
+    #[test]
+    fn elite_selection_tolerates_nan() {
+        // A NaN objective must sort last, never panic (satellite:
+        // total_cmp population ordering).
+        let (hw, _, wl) = setup();
+        let a = uniform_allocation(&hw, &wl);
+        let pop = vec![
+            (a.clone(), f64::NAN),
+            (a.clone(), 2.0),
+            (a.clone(), 1.0),
+            (a, f64::NAN),
+        ];
+        let e = elite_indices(&pop, 2);
+        assert_eq!(e, vec![2, 1]);
     }
 
     #[test]

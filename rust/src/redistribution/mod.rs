@@ -132,7 +132,7 @@ pub fn best_collect_col(hw: &HwConfig, op: &GemmOp, part: &Partition,
         .min_by(|&a, &b| {
             let ca = redistribute(hw, op, part, next_part, a).total_ns();
             let cb = redistribute(hw, op, part, next_part, b).total_ns();
-            ca.partial_cmp(&cb).unwrap()
+            ca.total_cmp(&cb)
         })
         .unwrap_or(0)
 }

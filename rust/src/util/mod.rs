@@ -5,5 +5,6 @@ pub mod cli;
 pub mod error;
 pub mod json;
 pub mod math;
+pub mod par;
 pub mod propcheck;
 pub mod rng;

@@ -1,0 +1,218 @@
+//! Zero-dependency scoped-thread parallelism (rayon is unavailable
+//! offline).
+//!
+//! Two shapes cover every parallel site in the repo:
+//!
+//! * [`par_map`] — stateless indexed map with dynamic work stealing
+//!   (atomic counter); used for sweep scenario batches and the figure
+//!   harnesses, where item costs vary.
+//! * [`par_map_state`] — contiguous-chunk map where each worker owns a
+//!   mutable state (a [`crate::cost::CachedEval`] in the GA); states
+//!   persist across calls so caches stay warm between generations.
+//!
+//! Determinism rules (DESIGN.md §Performance architecture): results are
+//! always returned in item-index order, workers never share RNG state
+//! (all stochastic decisions happen on the caller's thread before the
+//! fan-out), and every closure must be a pure function of its `(index,
+//! item, state)` arguments — under those rules thread count cannot
+//! change a single output bit.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker count from the environment: `MCMCOMM_THREADS` if set and
+/// positive, else `std::thread::available_parallelism()`.
+pub fn auto_threads() -> usize {
+    if let Ok(v) = std::env::var("MCMCOMM_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Resolve a user-facing thread knob: `0` means "auto".
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        auto_threads()
+    } else {
+        requested
+    }
+}
+
+/// Parallel indexed map: `out[i] = f(i, &items[i])`, results in index
+/// order. Work is stolen from a shared atomic counter, so uneven item
+/// costs balance automatically. `threads <= 1` (or fewer than two
+/// items) runs inline on the caller's thread.
+pub fn par_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let workers = threads.min(n);
+    let counter = AtomicUsize::new(0);
+    let fref = &f;
+    let cref = &counter;
+    let per_worker: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = cref.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, fref(i, &items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("par_map worker panicked"))
+            .collect()
+    });
+    // Reassemble in index order regardless of which worker ran what.
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for chunk in per_worker {
+        for (i, r) in chunk {
+            slots[i] = Some(r);
+        }
+    }
+    slots
+        .into_iter()
+        .map(|o| o.expect("par_map missed a slot"))
+        .collect()
+}
+
+/// Parallel indexed map with one mutable state per worker: items are
+/// split into `states.len()` contiguous chunks and worker `w` maps its
+/// chunk through `&mut states[w]`. Results come back in item-index
+/// order. States persist across calls (warm caches); with a single
+/// state the map runs inline on the caller's thread.
+///
+/// Note the chunking is static: per-item costs should be roughly
+/// uniform (true for GA fitness, where every child scores the same
+/// workload).
+pub fn par_map_state<T, R, S, F>(items: &[T], states: &mut [S], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    S: Send,
+    F: Fn(&mut S, usize, &T) -> R + Sync,
+{
+    assert!(!states.is_empty(), "par_map_state needs at least one state");
+    let n = items.len();
+    let workers = states.len().min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        let s0 = &mut states[0];
+        return items.iter().enumerate().map(|(i, t)| f(s0, i, t)).collect();
+    }
+    let chunk = n.div_ceil(workers);
+    let fref = &f;
+    let parts: Vec<Vec<R>> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(workers);
+        for (w, state) in states.iter_mut().take(workers).enumerate() {
+            let start = (w * chunk).min(n);
+            let end = (start + chunk).min(n);
+            let slice = &items[start..end];
+            handles.push(s.spawn(move || {
+                slice
+                    .iter()
+                    .enumerate()
+                    .map(|(j, t)| fref(state, start + j, t))
+                    .collect::<Vec<R>>()
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("par_map_state worker panicked"))
+            .collect()
+    });
+    let mut out = Vec::with_capacity(n);
+    for p in parts {
+        out.extend(p);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_index_order() {
+        let items: Vec<usize> = (0..97).collect();
+        for threads in [1, 2, 3, 8] {
+            let out = par_map(threads, &items, |i, &x| {
+                assert_eq!(i, x);
+                x * 3
+            });
+            assert_eq!(out, (0..97).map(|x| x * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn par_map_handles_tiny_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(par_map(4, &empty, |_, &x| x).is_empty());
+        assert_eq!(par_map(4, &[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn par_map_state_chunks_and_orders() {
+        let items: Vec<u64> = (0..50).collect();
+        let mut states = vec![0u64; 4];
+        let out = par_map_state(&items, &mut states, |acc, _i, &x| {
+            *acc += 1;
+            x * 2
+        });
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+        // Every item was processed exactly once across the workers.
+        assert_eq!(states.iter().sum::<u64>(), 50);
+    }
+
+    #[test]
+    fn par_map_state_serial_with_one_state() {
+        let items = [1u32, 2, 3];
+        let mut states = vec![Vec::new()];
+        let out = par_map_state(&items, &mut states, |seen: &mut Vec<u32>, _i, &x| {
+            seen.push(x);
+            x
+        });
+        assert_eq!(out, vec![1, 2, 3]);
+        assert_eq!(states[0], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn parallel_equals_serial_bitwise() {
+        // The determinism contract: same inputs, any thread count, same
+        // bits. Uses an fp-heavy function where evaluation-order bugs
+        // would show.
+        let items: Vec<f64> = (0..64).map(|i| i as f64 * 0.37 + 1.0).collect();
+        let f = |_: usize, &x: &f64| (x.ln() * 3.0_f64).sin() / (x + 0.5);
+        let serial = par_map(1, &items, f);
+        for threads in [2, 3, 5] {
+            let par = par_map(threads, &items, f);
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_zero_is_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+}

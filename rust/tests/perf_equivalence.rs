@@ -1,0 +1,271 @@
+//! ISSUE 2 invariants: (1) delta-scoring through `CachedEval` is
+//! bit-identical to the sequential full evaluator under randomized
+//! mutate/crossover gene sequences, for every `OptFlags` combination
+//! and both objectives; (2) parallel GA and sweep runs are bit-identical
+//! to single-threaded runs for the same seed.
+
+use std::time::Duration;
+
+use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::cost::evaluator::{evaluate, Objective, OptFlags};
+use mcmcomm::cost::CachedEval;
+use mcmcomm::engine::{schedulers, Engine, Scenario, Scheduler};
+use mcmcomm::opt::ga::{self, GaParams};
+use mcmcomm::partition::{
+    dim_bounds, simba_allocation, uniform_allocation, Allocation,
+};
+use mcmcomm::topology::Topology;
+use mcmcomm::util::rng::Pcg;
+use mcmcomm::workload::models::{alexnet, vit};
+use mcmcomm::workload::Workload;
+
+fn all_flag_combos() -> Vec<OptFlags> {
+    let mut v = Vec::new();
+    for diagonal in [false, true] {
+        for redistribution in [false, true] {
+            for async_fusion in [false, true] {
+                v.push(OptFlags { diagonal, redistribution, async_fusion });
+            }
+        }
+    }
+    v
+}
+
+/// GA-style gene edit: move one systolic tile between grid rows/columns
+/// or re-pick a collection column (mirrors `opt::ga::mutate`).
+fn mutate(hw: &HwConfig, wl: &Workload, rng: &mut Pcg, a: &mut Allocation) {
+    let i = rng.range_usize(0, wl.ops.len() - 1);
+    let op = &wl.ops[i];
+    match rng.range_usize(0, 2) {
+        0 => {
+            let b = dim_bounds(op.m, hw.xdim, hw.r);
+            let px = &mut a.parts[i].px;
+            let from = rng.range_usize(0, px.len() - 1);
+            let to = rng.range_usize(0, px.len() - 1);
+            let step = b.step.min(px[from]);
+            if from != to && px[from] - step >= b.lo && px[to] + step <= b.hi {
+                px[from] -= step;
+                px[to] += step;
+            }
+        }
+        1 => {
+            let b = dim_bounds(op.n, hw.ydim, hw.c);
+            let py = &mut a.parts[i].py;
+            let from = rng.range_usize(0, py.len() - 1);
+            let to = rng.range_usize(0, py.len() - 1);
+            let step = b.step.min(py[from]);
+            if from != to && py[from] - step >= b.lo && py[to] + step <= b.hi {
+                py[from] -= step;
+                py[to] += step;
+            }
+        }
+        _ => {
+            a.collect_cols[i] = rng.range_usize(0, hw.ydim - 1);
+        }
+    }
+}
+
+/// GA-style uniform crossover (mirrors `opt::ga::crossover`).
+fn crossover(wl: &Workload, rng: &mut Pcg, a: &Allocation, b: &Allocation)
+             -> Allocation {
+    let mut child = a.clone();
+    for i in 0..wl.ops.len() {
+        if rng.chance(0.5) {
+            child.parts[i] = b.parts[i].clone();
+            child.collect_cols[i] = b.collect_cols[i];
+        }
+    }
+    child
+}
+
+fn assert_bit_identical(
+    cache: &mut CachedEval<'_>,
+    hw: &HwConfig,
+    topo: &Topology,
+    wl: &Workload,
+    alloc: &Allocation,
+    flags: OptFlags,
+    step: usize,
+) {
+    let full = evaluate(hw, topo, wl, alloc, flags);
+    let delta = cache.breakdown(alloc);
+    for obj in [Objective::Latency, Objective::Edp] {
+        assert_eq!(
+            delta.objective(obj).to_bits(),
+            full.objective(obj).to_bits(),
+            "{}: {obj:?} diverged at step {step} under {flags:?}",
+            wl.name
+        );
+    }
+    assert_eq!(delta.per_op.len(), full.per_op.len());
+    for (a, b) in delta.per_op.iter().zip(&full.per_op) {
+        assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        assert_eq!(a.redistributed_in, b.redistributed_in);
+    }
+}
+
+/// Satellite: randomized mutate/crossover sequences give bit-identical
+/// objectives via `CachedEval` delta-scoring vs. fresh `evaluate`,
+/// across all `OptFlags` combinations and both objectives.
+#[test]
+fn cached_delta_scoring_matches_full_evaluate_all_flag_combos() {
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    for (w, wl) in [alexnet(1), vit(1)].into_iter().enumerate() {
+        for (fi, flags) in all_flag_combos().into_iter().enumerate() {
+            let mut rng =
+                Pcg::seeded(0x5eed ^ ((w as u64) << 8) ^ fi as u64);
+            let mut cache = CachedEval::new(&hw, &topo, &wl, flags);
+            let mut cur = uniform_allocation(&hw, &wl);
+            // Crossover partners: the reference schemes the GA seeds
+            // with, plus a mutated drifter.
+            let mut partners =
+                vec![simba_allocation(&hw, &topo, &wl), cur.clone()];
+            for _ in 0..12 {
+                mutate(&hw, &wl, &mut rng, &mut partners[1]);
+            }
+            let steps = 30;
+            for step in 0..steps {
+                if rng.chance(0.3) {
+                    let p = rng.range_usize(0, partners.len() - 1);
+                    cur = crossover(&wl, &mut rng, &cur, &partners[p]);
+                } else {
+                    for _ in 0..rng.range_usize(1, 4) {
+                        mutate(&hw, &wl, &mut rng, &mut cur);
+                    }
+                }
+                assert_bit_identical(&mut cache, &hw, &topo, &wl, &cur,
+                                     flags, step);
+            }
+            let s = cache.stats();
+            assert!(s.hits > 0, "cache never hit under {flags:?}");
+        }
+    }
+}
+
+/// Delta scoring stays exact on non-headline hardware (DRAM low-BW
+/// regime + a packaging type with multiple global chiplets).
+#[test]
+fn cached_delta_scoring_matches_on_dram_and_type_b() {
+    for (ty, mem) in [(SystemType::A, MemKind::Dram),
+                      (SystemType::B, MemKind::Hbm)] {
+        let hw = HwConfig::paper(ty, mem, 4);
+        let topo = Topology::from_hw(&hw);
+        let wl = alexnet(1);
+        let flags = OptFlags::ALL;
+        let mut rng = Pcg::seeded(7);
+        let mut cache = CachedEval::new(&hw, &topo, &wl, flags);
+        let mut cur = uniform_allocation(&hw, &wl);
+        for step in 0..20 {
+            mutate(&hw, &wl, &mut rng, &mut cur);
+            assert_bit_identical(&mut cache, &hw, &topo, &wl, &cur, flags,
+                                 step);
+        }
+    }
+}
+
+/// Satellite: parallel GA results are bit-identical to single-threaded
+/// runs for the same seed.
+#[test]
+fn ga_parallel_bit_identical_to_sequential() {
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let wl = alexnet(1);
+    let params = |threads: usize| GaParams {
+        population: 14,
+        generations: 8,
+        seed: 0xabcd,
+        threads,
+        ..Default::default()
+    };
+    let seq = ga::optimize(&hw, &topo, &wl, OptFlags::ALL,
+                           Objective::Latency, &params(1));
+    for threads in [2, 4] {
+        let par = ga::optimize(&hw, &topo, &wl, OptFlags::ALL,
+                               Objective::Latency, &params(threads));
+        assert_eq!(seq.objective_value.to_bits(),
+                   par.objective_value.to_bits(),
+                   "threads={threads}");
+        assert_eq!(seq.alloc, par.alloc, "threads={threads}");
+        assert_eq!(seq.generations_run, par.generations_run);
+        assert_eq!(seq.history.len(), par.history.len());
+        for (a, b) in seq.history.iter().zip(&par.history) {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+        }
+    }
+}
+
+/// Satellite: parallel sweeps are bit-identical to sequential ones for
+/// deterministic schedulers (MIQP is excluded: its anytime budget makes
+/// it wall-clock dependent by design — its plans are instead pinned to
+/// the evaluator by `tests/engine_api.rs`).
+#[test]
+fn sweep_parallel_bit_identical_to_sequential() {
+    let ga_sched = schedulers::Ga::new(
+        GaParams { population: 10, generations: 4, ..Default::default() },
+        42,
+    );
+    let baseline = schedulers::Baseline;
+    let simba = schedulers::SimbaLike;
+    let greedy = schedulers::Greedy;
+    let scheds: Vec<&dyn Scheduler> =
+        vec![&baseline, &simba, &greedy, &ga_sched];
+    let scenarios = || {
+        vec![
+            Scenario::headline(alexnet(1)),
+            Scenario::headline(vit(1)),
+            Scenario::builder()
+                .system(SystemType::C)
+                .mem(MemKind::Dram)
+                .workload(alexnet(1))
+                .build()
+                .expect("valid scenario"),
+        ]
+    };
+    let seq = Engine::sweep_threaded(scenarios(), &scheds, 1)
+        .expect("sequential sweep");
+    let par = Engine::sweep_threaded(scenarios(), &scheds, 4)
+        .expect("parallel sweep");
+    assert_eq!(seq.len(), par.len());
+    for (rs, rp) in seq.iter().zip(&par) {
+        assert_eq!(rs.model(), rp.model());
+        assert_eq!(rs.system(), rp.system());
+        assert_eq!(rs.outcomes.len(), rp.outcomes.len());
+        for (os, op) in rs.outcomes.iter().zip(&rp.outcomes) {
+            assert_eq!(os.scheduler, op.scheduler);
+            assert_eq!(os.plan.objective_value.to_bits(),
+                       op.plan.objective_value.to_bits(),
+                       "{}/{}", rs.model(), os.scheduler);
+            assert_eq!(os.plan.alloc, op.plan.alloc);
+        }
+    }
+}
+
+/// The GA budget knob still interacts correctly with the parallel path
+/// (budgeted runs stop early without poisoning determinism of the
+/// generations that did run).
+#[test]
+fn budgeted_parallel_ga_is_valid() {
+    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let topo = Topology::from_hw(&hw);
+    let wl = vit(1);
+    let r = ga::optimize(
+        &hw,
+        &topo,
+        &wl,
+        OptFlags::ALL,
+        Objective::Edp,
+        &GaParams {
+            population: 12,
+            generations: 5_000,
+            budget: Some(Duration::from_millis(300)),
+            ..Default::default()
+        },
+    );
+    assert!(r.generations_run < 5_000);
+    assert!(r.alloc.validate(&wl, &hw).is_ok());
+    let full = evaluate(&hw, &topo, &wl, &r.alloc, OptFlags::ALL)
+        .objective(Objective::Edp);
+    assert_eq!(r.objective_value.to_bits(), full.to_bits());
+}
