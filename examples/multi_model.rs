@@ -1,0 +1,70 @@
+//! Multi-model scheduling: fuse two tenants (AlexNet + ViT) into one
+//! schedulable scenario with `Workload::multi_model`, sweep it through
+//! the engine in a single call, and read one cost row per model plus
+//! the fused total from the report's provenance spans.
+//!
+//!     cargo run --release --example multi_model
+
+use mcmcomm::cost::evaluator::Objective;
+use mcmcomm::engine::{Engine, Scenario, SchedulerRegistry, Scheduler};
+use mcmcomm::opt::ga::GaParams;
+use mcmcomm::util::error::Result;
+use mcmcomm::workload::models::{alexnet, vit, vit_residual};
+use mcmcomm::workload::Workload;
+
+fn main() -> Result<()> {
+    // 1. Fuse two tenants into one workload. Ops and dataflow edges are
+    //    concatenated (no cross-tenant edges), and each constituent
+    //    becomes a ModelSpan the report can attribute cost to.
+    let fused = Workload::multi_model(&[alexnet(1), vit(1)]);
+    println!(
+        "fused scenario '{}': {} ops, {} dataflow edges, {} models",
+        fused.name,
+        fused.ops.len(),
+        fused.edge_count(),
+        fused.model_spans().len()
+    );
+
+    // 2. One Engine::sweep call covers the fused scenario and a
+    //    branching single-model DAG (ViT with residual edges) at once.
+    let registry = SchedulerRegistry::with_params(
+        GaParams { population: 24, generations: 20, ..Default::default() },
+        std::time::Duration::from_secs(4),
+        42,
+    );
+    let schedulers: Vec<&dyn Scheduler> =
+        registry.select(&["baseline", "ga"])?;
+    let scenarios = vec![
+        Scenario::builder()
+            .workload(fused)
+            .objective(Objective::Latency)
+            .build()?,
+        Scenario::builder()
+            .workload(vit_residual(1))
+            .objective(Objective::Latency)
+            .build()?,
+    ];
+    let rows = Engine::sweep(scenarios, &schedulers)?;
+
+    // 3. Per-model attribution + fused totals, per scenario.
+    for row in &rows {
+        println!("\n== scenario {} ({}) ==", row.model(), row.system());
+        for key in ["baseline", "ga"] {
+            let report = row.report(key).expect("scheduled key");
+            println!(
+                "{key:>8}: fused latency {:.3} ms | energy {:.3} mJ",
+                report.latency_ns() / 1e6,
+                report.energy_pj() / 1e9
+            );
+            for t in report.model_totals() {
+                println!(
+                    "          - {:<12} {:.3} ms over {} ops",
+                    t.model,
+                    t.latency_ns / 1e6,
+                    t.ops
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -70,7 +70,11 @@ fn prepr_mutate(hw: &HwConfig, wl: &Workload, rng: &mut Pcg,
                 }
             }
             _ => {
-                a.collect_cols[i] = rng.range_usize(0, hw.ydim - 1);
+                // Collection genes are per dataflow edge.
+                if !a.collect_cols.is_empty() {
+                    let e = rng.range_usize(0, a.collect_cols.len() - 1);
+                    a.collect_cols[e] = rng.range_usize(0, hw.ydim - 1);
+                }
             }
         }
     }
@@ -82,7 +86,11 @@ fn prepr_crossover(wl: &Workload, rng: &mut Pcg, a: &Allocation,
     for i in 0..wl.ops.len() {
         if rng.chance(p) {
             child.parts[i] = b.parts[i].clone();
-            child.collect_cols[i] = b.collect_cols[i];
+        }
+    }
+    for (c, &bc) in child.collect_cols.iter_mut().zip(&b.collect_cols) {
+        if rng.chance(p) {
+            *c = bc;
         }
     }
     child
@@ -104,7 +112,9 @@ fn prepr_random_individual(hw: &HwConfig, wl: &Workload, rng: &mut Pcg)
             *v = (*v as i64 + jitter).max(0) as usize;
         }
         project_to_sum(&mut a.parts[i].py, op.n, by);
-        a.collect_cols[i] = rng.range_usize(0, hw.ydim - 1);
+    }
+    for c in a.collect_cols.iter_mut() {
+        *c = rng.range_usize(0, hw.ydim - 1);
     }
     a
 }

@@ -120,17 +120,45 @@ impl<'a> Executor<'a> {
         let mut max_err = 0.0f32;
         let first = &self.wl.ops[0];
         let mut acts = random_matrix(&mut rng, first.m, first.k);
-        let (mut cur_rows, mut cur_cols) = (first.m, first.k);
-        let mut output = Vec::new();
+        // Producer outputs, indexed by op id, so consumers follow the
+        // dataflow edges (not positional adjacency).
+        let mut outputs: Vec<Vec<f32>> = Vec::with_capacity(self.wl.ops.len());
 
         for (i, op) in self.wl.ops.iter().enumerate() {
-            // Activations: previous output (wrapped to this op's input
-            // shape) when chained, fresh data otherwise.
+            // Activations come from the op's dataflow producers: the
+            // sole producer's output wrapped to this op's input shape;
+            // fan-in (residual-style) edges sum their wrapped
+            // producers; edge-less ops read fresh data (the modeled
+            // memory round-trip).
             if i > 0 {
-                if op.chained {
-                    acts = reshape_wrap(&acts, cur_rows, cur_cols, op.m, op.k);
-                } else {
-                    acts = random_matrix(&mut rng, op.m, op.k);
+                let producers: Vec<usize> = self
+                    .wl
+                    .edges
+                    .iter()
+                    .filter(|e| e.dst == i)
+                    .map(|e| e.src)
+                    .collect();
+                match producers.as_slice() {
+                    [] => {
+                        acts = random_matrix(&mut rng, op.m, op.k);
+                    }
+                    [p] => {
+                        let src = &self.wl.ops[*p];
+                        acts = reshape_wrap(&outputs[*p], src.m, src.n,
+                                            op.m, op.k);
+                    }
+                    many => {
+                        let mut sum = vec![0.0f32; op.m * op.k];
+                        for &p in many {
+                            let src = &self.wl.ops[p];
+                            let w = reshape_wrap(&outputs[p], src.m, src.n,
+                                                 op.m, op.k);
+                            for (s, &v) in sum.iter_mut().zip(&w) {
+                                *s += v;
+                            }
+                        }
+                        acts = sum;
+                    }
                 }
             }
             let weights = random_matrix(&mut rng, op.k, op.n);
@@ -178,11 +206,9 @@ impl<'a> Executor<'a> {
                 }
             }
 
-            cur_rows = op.m;
-            cur_cols = op.n;
-            acts = out.clone();
-            output = out;
+            outputs.push(out);
         }
+        let output = outputs.pop().unwrap_or_default();
 
         let modeled = crate::engine::modeled_breakdown(
             self.hw, self.topo, self.wl, self.alloc, self.flags,

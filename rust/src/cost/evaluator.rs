@@ -119,43 +119,63 @@ pub fn evaluate_into(
     out: &mut CostBreakdown,
 ) {
     debug_assert!(alloc.parts.len() == wl.ops.len());
+    debug_assert!(alloc.collect_cols.len() == wl.edges.len());
     let n = wl.ops.len();
+    let ne = wl.edges.len();
     out.latency_ns = 0.0;
     out.energy_pj = 0.0;
     out.per_op.clear();
     out.per_op.reserve(n);
 
-    // Decide redistribution per edge (i -> i+1) up front; cache the
-    // 3-step cost so the per-op loop never recomputes it (§Perf).
+    // Per-op sole-edge maps: the op flags (`acts_from_redist`,
+    // `skip_store`) read the unique incoming/outgoing edge, which is
+    // also what makes redistribution legal on it (§5.2).
+    wl.sole_edges_into(&mut scratch.in_edge, &mut scratch.out_edge);
+
+    // Decide redistribution per dataflow edge up front, in edge-id
+    // order (sorted by (src, dst) — identical to the historical i ->
+    // i+1 sweep on linear chains); cache the 3-step cost so the per-op
+    // loop never recomputes it (§Perf).
     scratch.redist_edge.clear();
-    scratch.redist_edge.resize(n, false); // edge i: ops[i] -> ops[i+1]
+    scratch.redist_edge.resize(ne, false);
     scratch.redist_cost.clear();
-    scratch.redist_cost.resize(n, None);
+    scratch.redist_cost.resize(ne, None);
     if flags.redistribution {
-        for i in 0..n.saturating_sub(1) {
+        for (e, edge) in wl.edges.iter().enumerate() {
+            if !wl.edge_redistributable_with(e, &scratch.in_edge,
+                                             &scratch.out_edge) {
+                continue;
+            }
             if let Some(r) = edge_decision(
                 hw,
                 topo,
-                wl,
-                i,
-                &alloc.parts[i],
-                &alloc.parts[i + 1],
-                alloc.collect_cols[i],
+                &wl.ops[edge.src],
+                &wl.ops[edge.dst],
+                &alloc.parts[edge.src],
+                &alloc.parts[edge.dst],
+                alloc.collect_cols[e],
                 flags.diagonal,
                 &mut scratch.bufs,
             ) {
-                scratch.redist_edge[i] = true;
-                scratch.redist_cost[i] = Some(r);
+                scratch.redist_edge[e] = true;
+                scratch.redist_cost[e] = Some(r);
             }
         }
     }
 
     for (i, op) in wl.ops.iter().enumerate() {
         let part = &alloc.parts[i];
-        let acts_from_redist = i > 0 && scratch.redist_edge[i - 1];
-        let skip_store = i + 1 < n && scratch.redist_edge[i];
+        let in_e = scratch.in_edge[i];
+        let acts_from_redist = match in_e {
+            Some(e) => scratch.redist_edge[e],
+            None => false,
+        };
+        let skip_store = match scratch.out_edge[i] {
+            Some(e) => scratch.redist_edge[e],
+            None => false,
+        };
         let incoming = if acts_from_redist {
-            scratch.redist_cost[i - 1]
+            scratch.redist_cost[in_e.expect("redistributed op has an edge")]
         } else {
             None
         };
@@ -195,6 +215,7 @@ pub(crate) struct OpTerms {
 
 /// Compute one op's [`OpTerms`] (shared by the scratch evaluator and the
 /// cache's miss path). Uses `bufs.in_cost` / `bufs.comp_per` only.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn op_terms(
     hw: &HwConfig,
     topo: &Topology,
@@ -289,30 +310,29 @@ pub(crate) fn compose_op(
     }
 }
 
-/// §6.1 "adaptive communication strategy" for edge `i -> i+1`: the
-/// redistribution cost when it is both legal (§5.2) and cheaper than
-/// the store + activation-reload memory round-trip, else `None`.
-/// Shared by the scratch evaluator and the cache's miss path.
+/// §6.1 "adaptive communication strategy" for one dataflow edge
+/// `producer -> consumer`: the redistribution cost when it is cheaper
+/// than the store + activation-reload memory round-trip, else `None`.
+/// Legality (§5.2, [`Workload::edge_redistributable`]) is the caller's
+/// responsibility. Shared by the scratch evaluator and the cache's
+/// miss path.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn edge_decision(
     hw: &HwConfig,
     topo: &Topology,
-    wl: &Workload,
-    i: usize,
+    producer: &GemmOp,
+    consumer: &GemmOp,
     producer_part: &Partition,
     consumer_part: &Partition,
     collect_col: usize,
     diagonal: bool,
     bufs: &mut super::scratch::TermBufs,
 ) -> Option<RedistCost> {
-    if !wl.ops[i].redistributable_to(&wl.ops[i + 1]) {
-        return None;
-    }
-    let r = redistribute(hw, &wl.ops[i], producer_part, consumer_part,
+    let r = redistribute(hw, producer, producer_part, consumer_part,
                          collect_col);
-    let store_wall = offload_wall_ns(hw, topo, &wl.ops[i], diagonal);
+    let store_wall = offload_wall_ns(hw, topo, producer, diagonal);
     let act_load_extra =
-        act_load_extra_ns(hw, topo, &wl.ops[i + 1], consumer_part, diagonal,
+        act_load_extra_ns(hw, topo, consumer, consumer_part, diagonal,
                           bufs);
     // Adopt redistribution when it beats the memory round-trip.
     if r.total_ns() < store_wall + act_load_extra {

@@ -10,17 +10,19 @@
 //!
 //! * **Op core** ([`OpTerms`]) — keyed by op index, the op's own
 //!   partition `(Px, Py)`, and the two booleans derived from the
-//!   adjacent edge decisions (`acts_from_redist`, `skip_store`).
-//! * **Edge decision** (`Option<RedistCost>` for edge `i -> i+1`) —
-//!   keyed by edge index, both ops' partitions and the producer's
-//!   collection column.
+//!   incident edge decisions (`acts_from_redist`, `skip_store`).
+//! * **Edge decision** (`Option<RedistCost>` per dataflow edge
+//!   `src -> dst`) — keyed by edge id, both endpoint ops' partitions
+//!   and the edge's collection column. Cache invalidation is therefore
+//!   keyed by the edge **endpoints**: a mutation of op `i` dirties only
+//!   the decisions of edges incident to `i`.
 //! * **Activation-load share** (what redistribution saves the
-//!   consumer) — keyed by consumer index and consumer partition; a
+//!   consumer) — keyed by consumer op id and consumer partition; a
 //!   sub-term of the edge decision cached separately because crossover
 //!   creates novel (producer, consumer) pairs whose consumer half was
 //!   already scored.
-//! * Gene-independent terms (store wall time, edge legality) are
-//!   precomputed once at construction.
+//! * Gene-independent terms (store wall time, per-edge legality, the
+//!   sole-edge maps) are precomputed once at construction.
 //!
 //! A GA child that mutated `k` ops therefore recomputes only those
 //! ops' cores plus the adjacent edges; everything else is a map hit.
@@ -53,11 +55,17 @@ pub struct TermBufs {
 
 /// Scratch buffers for [`super::evaluator::evaluate_into`]: reused
 /// across calls so the evaluator allocates nothing once warmed up to
-/// the workload size.
+/// the workload size (op count and edge count).
 #[derive(Debug, Clone, Default)]
 pub struct EvalScratch {
+    /// Per dataflow edge: did the adaptive strategy adopt
+    /// redistribution?
     pub(crate) redist_edge: Vec<bool>,
     pub(crate) redist_cost: Vec<Option<RedistCost>>,
+    /// Per op: the unique incoming / outgoing edge id (in-/out-degree
+    /// exactly 1), from [`crate::workload::Workload::sole_edges_into`].
+    pub(crate) in_edge: Vec<Option<usize>>,
+    pub(crate) out_edge: Vec<Option<usize>>,
     pub(crate) bufs: TermBufs,
 }
 
@@ -158,12 +166,19 @@ pub struct CachedEval<'a> {
     topo: &'a Topology,
     wl: &'a Workload,
     flags: OptFlags,
-    /// Edge `i -> i+1` legality (§5.2; gene-independent).
+    /// Per dataflow edge: §5.2 legality (gene-independent).
     edge_legal: Vec<bool>,
+    /// Per op: the unique incoming / outgoing edge id, if the degree is
+    /// exactly 1 (gene-independent; drives the op flag derivation).
+    in_edge: Vec<Option<usize>>,
+    out_edge: Vec<Option<usize>>,
     /// `offload_wall_ns` per op (gene-independent).
     store_wall: Vec<f64>,
     core_cache: Vec<FnvMap<CoreKey, OpTerms>>,
+    /// Indexed by edge id: decisions keyed by both endpoint partitions
+    /// + the edge's collection column.
     edge_cache: Vec<FnvMap<EdgeKey, Option<RedistCost>>>,
+    /// Indexed by consumer op id.
     act_cache: Vec<FnvMap<GeneKey, f64>>,
     bufs: TermBufs,
     redist_edge: Vec<bool>,
@@ -182,10 +197,11 @@ impl<'a> CachedEval<'a> {
         flags: OptFlags,
     ) -> CachedEval<'a> {
         let n = wl.ops.len();
-        let edge_legal: Vec<bool> = (0..n)
-            .map(|i| {
-                i + 1 < n && wl.ops[i].redistributable_to(&wl.ops[i + 1])
-            })
+        let ne = wl.edges.len();
+        let (mut in_edge, mut out_edge) = (Vec::new(), Vec::new());
+        wl.sole_edges_into(&mut in_edge, &mut out_edge);
+        let edge_legal: Vec<bool> = (0..ne)
+            .map(|e| wl.edge_redistributable_with(e, &in_edge, &out_edge))
             .collect();
         let store_wall: Vec<f64> = wl
             .ops
@@ -198,13 +214,15 @@ impl<'a> CachedEval<'a> {
             wl,
             flags,
             edge_legal,
+            in_edge,
+            out_edge,
             store_wall,
             core_cache: (0..n).map(|_| FnvMap::default()).collect(),
-            edge_cache: (0..n).map(|_| FnvMap::default()).collect(),
+            edge_cache: (0..ne).map(|_| FnvMap::default()).collect(),
             act_cache: (0..n).map(|_| FnvMap::default()).collect(),
             bufs: TermBufs::default(),
-            redist_edge: vec![false; n],
-            redist_cost: vec![None; n],
+            redist_edge: vec![false; ne],
+            redist_cost: vec![None; ne],
             out: CostBreakdown::default(),
             hits: 0,
             misses: 0,
@@ -262,6 +280,8 @@ impl<'a> CachedEval<'a> {
             wl,
             flags,
             edge_legal,
+            in_edge,
+            out_edge,
             store_wall,
             core_cache,
             edge_cache,
@@ -276,27 +296,32 @@ impl<'a> CachedEval<'a> {
         } = self;
         let (hw, topo, wl, flags) = (*hw, *topo, *wl, *flags);
         let n = wl.ops.len();
+        let ne = wl.edges.len();
         debug_assert_eq!(alloc.parts.len(), n);
+        debug_assert_eq!(alloc.collect_cols.len(), ne);
 
-        // ---- Phase 1: edge decisions (i -> i+1).
+        // ---- Phase 1: decisions per dataflow edge, in edge-id order
+        // (sorted by (src, dst): the historical i -> i+1 sweep on
+        // linear chains).
         redist_edge.clear();
-        redist_edge.resize(n, false);
+        redist_edge.resize(ne, false);
         redist_cost.clear();
-        redist_cost.resize(n, None);
+        redist_cost.resize(ne, None);
         if flags.redistribution {
-            for i in 0..n.saturating_sub(1) {
-                if !edge_legal[i] {
+            for (e, edge) in wl.edges.iter().enumerate() {
+                if !edge_legal[e] {
                     continue;
                 }
+                let (src, dst) = (edge.src, edge.dst);
                 let key = EdgeKey {
-                    producer: GeneKey::of(&alloc.parts[i]),
-                    consumer: GeneKey::of(&alloc.parts[i + 1]),
-                    collect_col: alloc.collect_cols[i],
+                    producer: GeneKey::of(&alloc.parts[src]),
+                    consumer: GeneKey::of(&alloc.parts[dst]),
+                    collect_col: alloc.collect_cols[e],
                 };
-                let decision = match edge_cache[i].entry(key) {
-                    Entry::Occupied(e) => {
+                let decision = match edge_cache[e].entry(key) {
+                    Entry::Occupied(occ) => {
                         *hits += 1;
-                        *e.get()
+                        *occ.get()
                     }
                     Entry::Vacant(v) => {
                         *misses += 1;
@@ -307,35 +332,35 @@ impl<'a> CachedEval<'a> {
                         // share sub-cached by consumer genes).
                         let r = redistribute(
                             hw,
-                            &wl.ops[i],
-                            &alloc.parts[i],
-                            &alloc.parts[i + 1],
-                            alloc.collect_cols[i],
+                            &wl.ops[src],
+                            &alloc.parts[src],
+                            &alloc.parts[dst],
+                            alloc.collect_cols[e],
                         );
-                        let act_extra = match act_cache[i + 1]
-                            .entry(GeneKey::of(&alloc.parts[i + 1]))
+                        let act_extra = match act_cache[dst]
+                            .entry(GeneKey::of(&alloc.parts[dst]))
                         {
-                            Entry::Occupied(e) => *e.get(),
+                            Entry::Occupied(occ) => *occ.get(),
                             Entry::Vacant(av) => {
                                 *entries += 1;
                                 *av.insert(act_load_extra_ns(
                                     hw,
                                     topo,
-                                    &wl.ops[i + 1],
-                                    &alloc.parts[i + 1],
+                                    &wl.ops[dst],
+                                    &alloc.parts[dst],
                                     flags.diagonal,
                                     bufs,
                                 ))
                             }
                         };
                         let adopt =
-                            r.total_ns() < store_wall[i] + act_extra;
+                            r.total_ns() < store_wall[src] + act_extra;
                         *v.insert(if adopt { Some(r) } else { None })
                     }
                 };
                 if let Some(r) = decision {
-                    redist_edge[i] = true;
-                    redist_cost[i] = Some(r);
+                    redist_edge[e] = true;
+                    redist_cost[e] = Some(r);
                 }
             }
         }
@@ -347,8 +372,14 @@ impl<'a> CachedEval<'a> {
         out.per_op.clear();
         out.per_op.reserve(n);
         for (i, op) in wl.ops.iter().enumerate() {
-            let acts_from_redist = i > 0 && redist_edge[i - 1];
-            let skip_store = i + 1 < n && redist_edge[i];
+            let acts_from_redist = match in_edge[i] {
+                Some(e) => redist_edge[e],
+                None => false,
+            };
+            let skip_store = match out_edge[i] {
+                Some(e) => redist_edge[e],
+                None => false,
+            };
             let key = CoreKey {
                 genes: GeneKey::of(&alloc.parts[i]),
                 acts_from_redist,
@@ -375,7 +406,7 @@ impl<'a> CachedEval<'a> {
                 }
             };
             let incoming = if acts_from_redist {
-                redist_cost[i - 1]
+                redist_cost[in_edge[i].expect("redistributed op has an edge")]
             } else {
                 None
             };

@@ -34,7 +34,7 @@ pub mod scheduler;
 
 pub use plan::Plan;
 pub use registry::SchedulerRegistry;
-pub use report::Report;
+pub use report::{ModelTotal, Report};
 pub use scenario::{Scenario, ScenarioBuilder};
 pub use scheduler::Scheduler;
 
@@ -233,9 +233,22 @@ pub struct SweepRow {
 }
 
 impl SweepRow {
-    /// Workload name (figure-table "model" column).
+    /// Workload name (figure-table "model" column). For fused
+    /// multi-model scenarios this is the `a+b+…` composite name; see
+    /// [`SweepRow::models`] for the constituents.
     pub fn model(&self) -> &str {
         &self.scenario.workload().name
+    }
+
+    /// Constituent model names (provenance): one entry per
+    /// [`crate::workload::ModelSpan`] of the scheduled workload.
+    pub fn models(&self) -> Vec<String> {
+        self.scenario
+            .workload()
+            .model_spans()
+            .into_iter()
+            .map(|s| s.name)
+            .collect()
     }
 
     /// System label (figure-table "system" column), e.g. `A-HBM-4x4`.

@@ -9,7 +9,7 @@ use crate::cost::evaluator::{
 };
 use crate::partition::Allocation;
 use crate::topology::Topology;
-use crate::workload::Workload;
+use crate::workload::{ModelSpan, Workload};
 
 /// Crate-internal bridge to the low-level evaluator; everything outside
 /// the `cost` module goes through [`Report`] / [`super::Scenario`].
@@ -23,6 +23,23 @@ pub(crate) fn modeled_breakdown(
     evaluate(hw, topo, wl, alloc, flags)
 }
 
+/// Cost attributed to one constituent model of a (possibly fused)
+/// workload — the per-model rows of a multi-model report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelTotal {
+    pub model: String,
+    pub latency_ns: f64,
+    pub energy_pj: f64,
+    pub ops: usize,
+}
+
+impl ModelTotal {
+    /// Energy-delay product of this model's share in pJ·ns.
+    pub fn edp(&self) -> f64 {
+        self.latency_ns * self.energy_pj
+    }
+}
+
 /// End-to-end cost report for one (scenario, plan) pair.
 #[derive(Debug, Clone)]
 pub struct Report {
@@ -34,6 +51,10 @@ pub struct Report {
     pub objective: Objective,
     /// Full eq.-3 cost decomposition.
     pub breakdown: CostBreakdown,
+    /// Model provenance of the scored workload: one span per
+    /// constituent model ([`crate::workload::Workload::model_spans`]),
+    /// so multi-model sweeps report one total per tenant.
+    pub models: Vec<ModelSpan>,
 }
 
 impl Report {
@@ -69,5 +90,26 @@ impl Report {
             .iter()
             .filter(|o| o.redistributed_in)
             .count()
+    }
+
+    /// Per-model cost attribution: one [`ModelTotal`] per constituent
+    /// span (single-model workloads yield one row covering everything).
+    /// The rows sum to the fused totals up to floating-point
+    /// association (each row sums its own op range).
+    pub fn model_totals(&self) -> Vec<ModelTotal> {
+        self.models
+            .iter()
+            .map(|span| {
+                let ops = &self.breakdown.per_op
+                    [span.ops.start.min(self.breakdown.per_op.len())
+                        ..span.ops.end.min(self.breakdown.per_op.len())];
+                ModelTotal {
+                    model: span.name.clone(),
+                    latency_ns: ops.iter().map(|o| o.latency_ns).sum(),
+                    energy_pj: ops.iter().map(|o| o.energy_pj).sum(),
+                    ops: ops.len(),
+                }
+            })
+            .collect()
     }
 }

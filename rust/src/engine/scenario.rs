@@ -80,6 +80,7 @@ impl Scenario {
             breakdown: modeled_breakdown(
                 &self.hw, &self.topo, &self.wl, &plan.alloc, plan.flags,
             ),
+            models: self.wl.model_spans(),
         }
     }
 
@@ -97,6 +98,7 @@ impl Scenario {
             breakdown: modeled_breakdown(
                 &self.hw, &self.topo, &self.wl, alloc, flags,
             ),
+            models: self.wl.model_spans(),
         }
     }
 
@@ -303,6 +305,8 @@ mod tests {
         let wl = Workload {
             name: "bad".into(),
             ops: vec![GemmOp::dense("z", 0, 16, 16)],
+            edges: vec![],
+            models: vec![],
         };
         let err = Scenario::builder().workload(wl).build().unwrap_err();
         assert!(matches!(err, EngineError::InvalidWorkload(_)), "{err}");

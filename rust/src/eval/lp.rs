@@ -50,14 +50,32 @@ pub fn lp_two_stage(hw: &HwConfig, wl: &Workload, split_at: usize,
     far_hw.ty = SystemType::B;
     far_hw.bw_mem = hw.bw_nop * far_hw.ydim as f64; // boundary row links
 
-    let near_ops = wl.ops[..split_at].to_vec();
-    let mut far_ops = wl.ops[split_at..].to_vec();
-    // The first far op reads from the boundary, not from its own chain.
-    if let Some(op) = far_ops.first_mut() {
-        op.chained = false;
-    }
-    let near_wl = Workload::new(&format!("{}-near", wl.name), near_ops);
-    let far_wl = Workload::new(&format!("{}-far", wl.name), far_ops);
+    // Split the dataflow graph, keeping only the intra-half edges:
+    // cross-boundary consumers read from the stage boundary instead of
+    // a dataflow edge, which `from_graph` encodes by re-deriving their
+    // `chained` flags from the surviving edges.
+    let near_pairs: Vec<(usize, usize)> = wl
+        .edges
+        .iter()
+        .filter(|e| e.dst < split_at)
+        .map(|e| (e.src, e.dst))
+        .collect();
+    let far_pairs: Vec<(usize, usize)> = wl
+        .edges
+        .iter()
+        .filter(|e| e.src >= split_at)
+        .map(|e| (e.src - split_at, e.dst - split_at))
+        .collect();
+    let near_wl = Workload::from_graph(
+        &format!("{}-near", wl.name),
+        wl.ops[..split_at].to_vec(),
+        &near_pairs,
+    );
+    let far_wl = Workload::from_graph(
+        &format!("{}-far", wl.name),
+        wl.ops[split_at..].to_vec(),
+        &far_pairs,
+    );
 
     let near_topo = Topology::from_hw(&near_hw);
     let far_topo = Topology::from_hw(&far_hw);

@@ -83,7 +83,10 @@ impl EvalConfig {
 /// normalized to the LS baseline (baseline == 1.0; lower is better).
 #[derive(Debug, Clone)]
 pub struct Cell {
+    /// Workload name (`a+b` composite for fused multi-model scenarios).
     pub model: String,
+    /// Constituent model names (provenance; one entry per tenant).
+    pub models: Vec<String>,
     pub system: String,
     pub normalized: Vec<(String, f64)>,
 }
@@ -117,6 +120,7 @@ pub fn run_cell(
         row.normalized_to("baseline").expect("baseline always present");
     Cell {
         model: row.model().to_string(),
+        models: row.models(),
         system: row.system(),
         normalized,
     }
@@ -191,11 +195,13 @@ mod tests {
         let cells = vec![
             Cell {
                 model: "a".into(),
+                models: vec!["a".into()],
                 system: "s".into(),
                 normalized: vec![("ga".into(), 0.5)],
             },
             Cell {
                 model: "b".into(),
+                models: vec!["b".into()],
                 system: "s".into(),
                 normalized: vec![("ga".into(), 2.0)],
             },

@@ -35,7 +35,8 @@
 //!   registry, `Engine` orchestrator and batch sweeps
 //! * [`config`] — hardware configuration (paper §4.2.1, Table 2)
 //! * [`topology`] — grid types A–D, local indexing, hop models (§4.1, §5.1)
-//! * [`workload`] — GEMM-sequence IR + model zoo (§4.2.2, §7)
+//! * [`workload`] — graph workload IR (ops + explicit dataflow edges,
+//!   multi-model composition) + model zoo (§4.2.2, §7)
 //! * [`partition`] — workload allocations Px/Py (§4.2.3)
 //! * [`cost`] — latency / energy / EDP evaluator (§4.3–4.4, §5.3);
 //!   production call sites consume it through [`Report`]

@@ -29,7 +29,8 @@ mcmcomm — MCMComm reproduction (see README.md)
 USAGE: mcmcomm <subcommand> [--options]
 
   figures   --fig <3|8|9|10|11|12|13|solver> | --all   [--full] [--seed N]
-  optimize  --model <alexnet|vit|vision_mamba|hydranet> [--scheme <baseline|simba|greedy|ga|miqp>]
+  optimize  --model <alexnet|vit|vit_residual|vision_mamba|hydranet|hydranet_branched|multi>
+            [--scheme <baseline|simba|greedy|ga|miqp>]
             [--type <A|B|C|D>] [--mem <hbm|dram>] [--grid N] [--objective <latency|edp>]
             [--batch N] [--seed N]
   netsim    [--grid N] [--bw-nop G] [--bw-mem G] [--central] [--diagonal] [--gb BYTES]
@@ -41,8 +42,15 @@ fn parse_model(name: &str, batch: usize) -> Result<Workload> {
     Ok(match name {
         "alexnet" => models::alexnet(batch),
         "vit" => models::vit(batch),
+        "vit_residual" => models::vit_residual(batch),
         "vision_mamba" | "vim" => models::vision_mamba(batch),
         "hydranet" => models::hydranet(batch),
+        "hydranet_branched" => models::hydranet_branched(batch),
+        // Two-tenant fused scenario (graph IR multi-model composition).
+        "multi" => Workload::multi_model(&[
+            models::alexnet(batch),
+            models::vit(batch),
+        ]),
         _ => return Err(Error::msg(format!("unknown model '{name}'"))),
     })
 }

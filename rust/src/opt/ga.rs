@@ -1,12 +1,16 @@
 //! Genetic-algorithm scheduler (paper §6.2).
 //!
-//! Genome = a full [`Allocation`]: per-op partitions (Px, Py) plus the
-//! collection-chiplet columns used by on-package redistribution — the
-//! two gene sets the paper crosses over and mutates. Partition genes are
-//! constrained to the §6.2 trust region (uniform ± 2 systolic tiles,
-//! floored at one tile) and always sum to the exact workload dims.
-//! Fitness is the true analytical evaluator (eq. 6), delta-scored
-//! through per-worker [`CachedEval`]s and evaluated in parallel.
+//! Genome = a full [`Allocation`]: per-op partitions (Px, Py) plus one
+//! collection-chiplet column per **dataflow edge** used by on-package
+//! redistribution — the two gene sets the paper crosses over and
+//! mutates. Partition genes are constrained to the §6.2 trust region
+//! (uniform ± 2 systolic tiles, floored at one tile) and always sum to
+//! the exact workload dims; redistribution genes are mutated over edge
+//! neighborhoods (an op mutation perturbs only the collection columns
+//! of edges incident to that op, mirroring the cache's edge-endpoint
+//! invalidation). Fitness is the true analytical evaluator (eq. 6),
+//! delta-scored through per-worker [`CachedEval`]s and evaluated in
+//! parallel.
 //!
 //! Determinism (DESIGN.md §Performance architecture): every stochastic
 //! decision — population seeding, tournament picks, crossover masks,
@@ -77,6 +81,27 @@ pub struct GaResult {
 struct Ctx<'a> {
     hw: &'a HwConfig,
     wl: &'a Workload,
+    /// Per op: ids of every incident dataflow edge (in + out) — the
+    /// neighborhood a mutation of that op can perturb.
+    incident: Vec<Vec<usize>>,
+    /// Per op: ids of outgoing dataflow edges — the redistribution
+    /// genes that travel with the op under crossover (the producer owns
+    /// its edges' collection columns).
+    out_edges: Vec<Vec<usize>>,
+}
+
+impl<'a> Ctx<'a> {
+    fn new(hw: &'a HwConfig, wl: &'a Workload) -> Ctx<'a> {
+        let n = wl.ops.len();
+        let mut incident = vec![Vec::new(); n];
+        let mut out_edges = vec![Vec::new(); n];
+        for (e, edge) in wl.edges.iter().enumerate() {
+            incident[edge.src].push(e);
+            incident[edge.dst].push(e);
+            out_edges[edge.src].push(e);
+        }
+        Ctx { hw, wl, incident, out_edges }
+    }
 }
 
 fn mutate(ctx: &Ctx, rng: &mut Pcg, a: &mut Allocation, times: usize) {
@@ -110,8 +135,15 @@ fn mutate(ctx: &Ctx, rng: &mut Pcg, a: &mut Allocation, times: usize) {
                 }
             }
             _ => {
-                // Collection-chiplet gene.
-                a.collect_cols[i] = rng.range_usize(0, ctx.hw.ydim - 1);
+                // Collection-chiplet gene: re-pick the column of one
+                // edge in this op's neighborhood (mutation locality —
+                // only the edges whose cached decisions the op already
+                // dirties). Ops with no incident edges no-op.
+                let inc = &ctx.incident[i];
+                if !inc.is_empty() {
+                    let e = inc[rng.range_usize(0, inc.len() - 1)];
+                    a.collect_cols[e] = rng.range_usize(0, ctx.hw.ydim - 1);
+                }
             }
         }
     }
@@ -123,7 +155,10 @@ fn crossover(ctx: &Ctx, rng: &mut Pcg, a: &Allocation, b: &Allocation,
     for i in 0..ctx.wl.ops.len() {
         if rng.chance(p) {
             child.parts[i] = b.parts[i].clone();
-            child.collect_cols[i] = b.collect_cols[i];
+            // The producer's redistribution genes travel with it.
+            for &e in &ctx.out_edges[i] {
+                child.collect_cols[e] = b.collect_cols[e];
+            }
         }
     }
     child
@@ -144,7 +179,9 @@ fn random_individual(ctx: &Ctx, rng: &mut Pcg) -> Allocation {
             *v = (*v as i64 + jitter).max(0) as usize;
         }
         project_to_sum(&mut a.parts[i].py, op.n, by);
-        a.collect_cols[i] = rng.range_usize(0, ctx.hw.ydim - 1);
+    }
+    for c in a.collect_cols.iter_mut() {
+        *c = rng.range_usize(0, ctx.hw.ydim - 1);
     }
     a
 }
@@ -184,7 +221,7 @@ pub fn optimize(
     obj: Objective,
     params: &GaParams,
 ) -> GaResult {
-    let ctx = Ctx { hw, wl };
+    let ctx = Ctx::new(hw, wl);
     let mut rng = Pcg::seeded(params.seed);
     let t0 = Instant::now();
 

@@ -52,8 +52,10 @@ impl VarLayout {
 pub struct Formulation {
     pub model: Model,
     pub layout: VarLayout,
-    /// Redistribution decided per edge i -> i+1 (fixed strategy).
+    /// Redistribution decided per dataflow edge (`wl.edges` order;
+    /// fixed strategy).
     pub redist_edge: Vec<bool>,
+    /// Collection column per dataflow edge.
     pub collect_cols: Vec<usize>,
 }
 
@@ -101,22 +103,31 @@ pub fn build(
     }
     let layout = VarLayout { base_px, base_py, xdim: xd, ydim: yd };
 
-    // ---- fixed communication strategy: decide redistribution edges and
-    // collection columns from the uniform allocation (§6.1).
+    // ---- fixed communication strategy: decide redistribution per
+    // dataflow edge and the collection columns from the uniform
+    // allocation (§6.1). An op whose activations arrived by
+    // redistribution names its (unique) incoming edge.
     let uni = uniform_allocation(hw, wl);
     let uni_cost = evaluate(hw, topo, wl, &uni, flags);
-    let mut redist_edge = vec![false; n];
-    for i in 1..n {
-        redist_edge[i - 1] = uni_cost.per_op[i].redistributed_in;
+    let ne = wl.edges.len();
+    let (mut in_edge, mut out_edge) = (Vec::new(), Vec::new());
+    wl.sole_edges_into(&mut in_edge, &mut out_edge);
+    let mut redist_edge = vec![false; ne];
+    for (i, oc) in uni_cost.per_op.iter().enumerate() {
+        if oc.redistributed_in {
+            let e = in_edge[i]
+                .expect("redistributed op has a unique incoming edge");
+            redist_edge[e] = true;
+        }
     }
-    let mut collect_cols = vec![yd / 2; n];
-    for i in 0..n.saturating_sub(1) {
-        if redist_edge[i] {
-            collect_cols[i] = crate::redistribution::best_collect_col(
+    let mut collect_cols = vec![yd / 2; ne];
+    for (e, edge) in wl.edges.iter().enumerate() {
+        if redist_edge[e] {
+            collect_cols[e] = crate::redistribution::best_collect_col(
                 hw,
-                &wl.ops[i],
-                &uni.parts[i],
-                &uni.parts[i + 1],
+                &wl.ops[edge.src],
+                &uni.parts[edge.src],
+                &uni.parts[edge.dst],
             );
         }
     }
@@ -135,7 +146,8 @@ pub fn build(
     let bpe = hw.bytes_per_elem;
 
     for (i, op) in wl.ops.iter().enumerate() {
-        let acts_from_redist = i > 0 && redist_edge[i - 1];
+        let in_e = in_edge[i].filter(|&e| redist_edge[e]);
+        let acts_from_redist = in_e.is_some();
         let hi_bw = crate::cost::latency::high_bw(hw);
         let tile_cycles =
             (2 * hw.r + hw.c + crate::util::math::ceil_div(op.k, op.groups))
@@ -188,9 +200,9 @@ pub fn build(
         model.add_term(MaxTerm::of(&format!("{}::in+comp", op.name), cases));
 
         // ---- redistribution stage for the incoming edge.
-        if acts_from_redist {
-            let prev = i - 1;
-            let c_star = collect_cols[prev];
+        if let Some(e) = in_e {
+            let prev = wl.edges[e].src;
+            let c_star = collect_cols[e];
             let prev_n = wl.ops[prev].n as f64;
             // Step 1: max over rows x of max(left, right) bytes / bw.
             let mut s1 = Vec::new();
@@ -243,7 +255,10 @@ pub fn build(
         }
 
         // ---- output stage (constant in the partition).
-        let skip_store = i + 1 < n && redist_edge[i];
+        let skip_store = match out_edge[i] {
+            Some(e) => redist_edge[e],
+            None => false,
+        };
         if !skip_store {
             let store =
                 crate::cost::latency::offload(hw, topo, op, flags.diagonal)

@@ -1,209 +1,28 @@
 //! Scheduler solver backends (paper §6): the GA, greedy and MIQP
-//! optimizers, plus legacy shims for the pre-engine scheme API.
+//! optimizers.
 //!
 //! The front door is `engine`: the five Table-3 schemes are
 //! [`crate::engine::schedulers`] implementing
 //! [`crate::engine::Scheduler`], discovered through
 //! [`crate::engine::SchedulerRegistry`]. The free functions in
 //! [`ga`], [`greedy`] and [`miqp`] remain the low-level solver entry
-//! points those implementations call.
+//! points those implementations call. (The pre-engine `Scheme` /
+//! `run_scheme` shims, deprecated since 0.2.0, are gone — iterate
+//! `dyn Scheduler`s from the registry instead.)
 
 pub mod ga;
 pub mod greedy;
 pub mod miqp;
 
-use std::time::Duration;
-
-use crate::config::HwConfig;
-use crate::cost::evaluator::{Objective, OptFlags};
-use crate::engine::{schedulers, Scenario, Scheduler};
-use crate::partition::Allocation;
-use crate::topology::Topology;
-use crate::workload::Workload;
-
-/// Table 3 — the evaluated scheduling schemes.
-#[deprecated(
-    since = "0.2.0",
-    note = "iterate `dyn Scheduler`s from `engine::SchedulerRegistry` \
-            instead of matching scheme enums"
-)]
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Scheme {
-    /// Layer Sequential, uniform partitioning, no optimizations.
-    Baseline,
-    /// SIMBA-like inverse-distance partitioning, no optimizations.
-    SimbaLike,
-    /// Greedy layer-by-layer hill climbing (§3.5 strawman).
-    Greedy,
-    /// MCMComm-GA (§6.2).
-    Ga,
-    /// MCMComm-MIQP (§6.3).
-    Miqp,
-}
-
-#[allow(deprecated)]
-impl Scheme {
-    pub const ALL: [Scheme; 5] = [
-        Scheme::Baseline,
-        Scheme::SimbaLike,
-        Scheme::Greedy,
-        Scheme::Ga,
-        Scheme::Miqp,
-    ];
-
-    pub fn name(self) -> &'static str {
-        match self {
-            Scheme::Baseline => "LS (baseline)",
-            Scheme::SimbaLike => "SIMBA-like",
-            Scheme::Greedy => "greedy",
-            Scheme::Ga => "MCMComm-GA",
-            Scheme::Miqp => "MCMComm-MIQP",
-        }
-    }
-
-    /// Registry key of the equivalent [`crate::engine::Scheduler`].
-    pub fn key(self) -> &'static str {
-        match self {
-            Scheme::Baseline => "baseline",
-            Scheme::SimbaLike => "simba",
-            Scheme::Greedy => "greedy",
-            Scheme::Ga => "ga",
-            Scheme::Miqp => "miqp",
-        }
-    }
-
-    /// MCMComm optimizations apply only to the MCMComm schedulers
-    /// (Table 3 column "MCMComm Optimizations").
-    pub fn flags(self, requested: OptFlags) -> OptFlags {
-        match self {
-            Scheme::Baseline | Scheme::SimbaLike | Scheme::Greedy => {
-                OptFlags::NONE
-            }
-            Scheme::Ga | Scheme::Miqp => requested,
-        }
-    }
-}
-
-/// Configuration for a legacy scheduling run.
-#[deprecated(
-    since = "0.2.0",
-    note = "objective/flags live on `engine::Scenario`; solver knobs \
-            live on the `engine::schedulers` structs"
-)]
-#[derive(Debug, Clone)]
-pub struct SchedulerConfig {
-    pub objective: Objective,
-    pub flags: OptFlags,
-    pub seed: u64,
-    pub ga: ga::GaParams,
-    pub miqp_budget: Duration,
-}
-
-#[allow(deprecated)]
-impl Default for SchedulerConfig {
-    fn default() -> Self {
-        SchedulerConfig {
-            objective: Objective::Latency,
-            flags: OptFlags::ALL,
-            seed: 42,
-            ga: ga::GaParams::default(),
-            miqp_budget: Duration::from_secs(20),
-        }
-    }
-}
-
-/// A legacy scheduling outcome: allocation + true-evaluator score.
-#[deprecated(since = "0.2.0", note = "use `engine::Plan`")]
-#[derive(Debug, Clone)]
-#[allow(deprecated)]
-pub struct ScheduleOutcome {
-    pub scheme: Scheme,
-    pub alloc: Allocation,
-    pub objective_value: f64,
-    pub flags: OptFlags,
-}
-
-/// Run one scheme end to end (legacy shim; thin delegation to the
-/// engine schedulers, so results are identical by construction).
-#[deprecated(
-    since = "0.2.0",
-    note = "use `Engine::new(scenario).schedule_with(&scheduler)`"
-)]
-#[allow(deprecated)]
-pub fn run_scheme(
-    scheme: Scheme,
-    hw: &HwConfig,
-    topo: &Topology,
-    wl: &Workload,
-    cfg: &SchedulerConfig,
-) -> ScheduleOutcome {
-    let scenario = Scenario::builder()
-        .hw(hw.clone())
-        .topology(topo.clone())
-        .workload(wl.clone())
-        .flags(cfg.flags)
-        .objective(cfg.objective)
-        .build()
-        .expect("run_scheme: invalid hardware/workload");
-    let plan = match scheme {
-        Scheme::Baseline => schedulers::Baseline.schedule(&scenario),
-        Scheme::SimbaLike => schedulers::SimbaLike.schedule(&scenario),
-        Scheme::Greedy => schedulers::Greedy.schedule(&scenario),
-        Scheme::Ga => schedulers::Ga::new(cfg.ga.clone(), cfg.seed)
-            .schedule(&scenario),
-        Scheme::Miqp => schedulers::Miqp::new(cfg.miqp_budget, cfg.seed)
-            .schedule(&scenario),
-    }
-    .expect("run_scheme: scheduling failed");
-    ScheduleOutcome {
-        scheme,
-        alloc: plan.alloc,
-        objective_value: plan.objective_value,
-        flags: plan.flags,
-    }
-}
-
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
-    use super::*;
-    use crate::config::{MemKind, SystemType};
-    use crate::workload::models::alexnet;
+    use crate::engine::SchedulerRegistry;
 
     #[test]
-    fn non_mcmcomm_schemes_run_unoptimized() {
-        assert_eq!(Scheme::Baseline.flags(OptFlags::ALL), OptFlags::NONE);
-        assert_eq!(Scheme::SimbaLike.flags(OptFlags::ALL), OptFlags::NONE);
-        assert_eq!(Scheme::Ga.flags(OptFlags::ALL), OptFlags::ALL);
-    }
-
-    #[test]
-    fn all_schemes_produce_valid_allocations() {
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-        let topo = Topology::from_hw(&hw);
-        let wl = alexnet(1);
-        let cfg = SchedulerConfig {
-            ga: ga::GaParams {
-                population: 12,
-                generations: 6,
-                ..Default::default()
-            },
-            miqp_budget: Duration::from_secs(3),
-            ..Default::default()
-        };
-        for s in Scheme::ALL {
-            let out = run_scheme(s, &hw, &topo, &wl, &cfg);
-            assert!(out.alloc.validate(&wl, &hw).is_ok(), "{}", s.name());
-            assert!(out.objective_value > 0.0);
-        }
-    }
-
-    #[test]
-    fn scheme_keys_resolve_in_registry() {
-        let registry = crate::engine::SchedulerRegistry::standard(42);
-        for s in Scheme::ALL {
-            let sched = registry.get(s.key()).expect(s.key());
-            assert_eq!(sched.name(), s.name());
+    fn registry_serves_all_table3_keys() {
+        let registry = SchedulerRegistry::standard(42);
+        for key in ["baseline", "simba", "greedy", "ga", "miqp"] {
+            assert!(registry.get(key).is_some(), "missing scheduler {key}");
         }
     }
 }

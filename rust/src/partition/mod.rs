@@ -44,9 +44,10 @@ impl Partition {
     }
 }
 
-/// A full allocation: one partition per op, plus (for each op) the
-/// collection column used by on-package redistribution (§5.2/§6.2 —
-/// "positions of the collection chiplet" are GA genes).
+/// A full allocation: one partition per op (indexed by op id), plus one
+/// collection column per **dataflow edge** used by on-package
+/// redistribution (§5.2/§6.2 — "positions of the collection chiplet"
+/// are GA genes). `collect_cols[e]` belongs to `wl.edges[e]`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Allocation {
     pub parts: Vec<Partition>,
@@ -64,8 +65,12 @@ impl Allocation {
             }
             p.validate(op)?;
         }
-        if self.collect_cols.len() != wl.ops.len() {
-            return Err("collect_cols arity != op count".into());
+        if self.collect_cols.len() != wl.edge_count() {
+            return Err(format!(
+                "collect_cols arity {} != edge count {}",
+                self.collect_cols.len(),
+                wl.edge_count()
+            ));
         }
         for &c in &self.collect_cols {
             if c >= hw.ydim {
@@ -148,14 +153,14 @@ pub fn simba(hw: &HwConfig, topo: &Topology, op: &GemmOp) -> Partition {
 pub fn uniform_allocation(hw: &HwConfig, wl: &Workload) -> Allocation {
     Allocation {
         parts: wl.ops.iter().map(|op| uniform(hw, op)).collect(),
-        collect_cols: vec![hw.ydim / 2; wl.ops.len()],
+        collect_cols: vec![hw.ydim / 2; wl.edge_count()],
     }
 }
 
 pub fn simba_allocation(hw: &HwConfig, topo: &Topology, wl: &Workload) -> Allocation {
     Allocation {
         parts: wl.ops.iter().map(|op| simba(hw, topo, op)).collect(),
-        collect_cols: vec![hw.ydim / 2; wl.ops.len()],
+        collect_cols: vec![hw.ydim / 2; wl.edge_count()],
     }
 }
 

@@ -20,8 +20,8 @@
 //! strictly row-then-column; the three step latencies add.
 
 use crate::config::HwConfig;
-use crate::partition::Partition;
-use crate::workload::GemmOp;
+use crate::partition::{Allocation, Partition};
+use crate::workload::{EdgeId, GemmOp, Workload};
 
 /// Latency + energy of one redistribution between `op` (producer, with
 /// partition `part`) and the next op (consumer, with partition
@@ -90,11 +90,12 @@ pub fn redistribute(
     // producer's M x N output; scale row width to the consumed layout.
     let next_m: usize = next_part.px.iter().sum();
     let next_k = {
-        // Width of one consumed row in elements: K' of the next op is
-        // derived from this output (chained), expressed via the consumer
-        // partition total (see workload::GemmOp::redistributable_to).
-        // For im2col chains K' may exceed N; the moved data is the
-        // producer's rows, so the width is N.
+        // Width of one consumed row in elements: K' of the consumer is
+        // derived from this output (a dataflow edge), expressed via the
+        // consumer partition total (see
+        // `workload::Workload::edge_redistributable`). For im2col
+        // chains K' may exceed N; the moved data is the producer's
+        // rows, so the width is N.
         op.n
     };
     let xdim = part.px.len();
@@ -121,6 +122,27 @@ pub fn redistribute(
         step3_ns,
         energy_pj: energy_bits * e_nop_bit,
     }
+}
+
+/// Per-edge convenience over [`redistribute`]: the 3-step cost of
+/// moving the tensor on dataflow edge `e` of `wl` under `alloc`, using
+/// the edge's own collection-column gene. Legality is the caller's
+/// concern ([`Workload::edge_redistributable`]); the cost of an
+/// illegal move is still well-defined (diagnostics, what-if tooling).
+pub fn redistribute_edge(
+    hw: &HwConfig,
+    wl: &Workload,
+    alloc: &Allocation,
+    e: EdgeId,
+) -> RedistCost {
+    let edge = wl.edges[e];
+    redistribute(
+        hw,
+        &wl.ops[edge.src],
+        &alloc.parts[edge.src],
+        &alloc.parts[edge.dst],
+        alloc.collect_cols[e],
+    )
 }
 
 /// The collection column minimizing step-1 latency (§5.2: "best balances

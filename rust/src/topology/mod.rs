@@ -45,6 +45,10 @@ pub struct Topology {
     pub ydim: usize,
     pub ty: SystemType,
     globals: Vec<Pos>,
+    /// Per position (row-major): is this a global chiplet? O(1)
+    /// membership for the `entrance_links`/evaluator loops instead of
+    /// scanning `globals`.
+    global_mask: Vec<bool>,
     /// Per position (row-major): nearest global chiplet.
     nearest: Vec<Pos>,
     /// Per position: local (x, y) index.
@@ -90,11 +94,16 @@ impl Topology {
                 g
             }
         };
+        let mut global_mask = vec![false; xdim * ydim];
+        for g in &globals {
+            global_mask[g.row * ydim + g.col] = true;
+        }
         let mut t = Topology {
             xdim,
             ydim,
             ty,
             globals,
+            global_mask,
             nearest: Vec::new(),
             locals: Vec::new(),
             extents: Vec::new(),
@@ -153,8 +162,11 @@ impl Topology {
         &self.globals
     }
 
+    /// O(1): precomputed per-position bitmap (the linear scan over
+    /// `globals` used to sit inside `entrance_links` loops).
+    #[inline]
     pub fn is_global(&self, p: Pos) -> bool {
-        self.globals.contains(&p)
+        self.global_mask[self.idx(p)]
     }
 
     /// The closest global chiplet (paper: "each chiplet will only
@@ -198,7 +210,7 @@ impl Topology {
         }
         let mut count = 0;
         for g in &self.globals {
-            for (dr, dc) in neighbour_offsets(diagonal) {
+            for &(dr, dc) in neighbour_offsets(diagonal) {
                 let nr = g.row as isize + dr;
                 let nc = g.col as isize + dc;
                 if nr < 0
@@ -280,12 +292,27 @@ pub(crate) fn manhattan(a: Pos, b: Pos) -> usize {
     a.row.abs_diff(b.row) + a.col.abs_diff(b.col)
 }
 
-fn neighbour_offsets(diagonal: bool) -> Vec<(isize, isize)> {
-    let mut v = vec![(-1, 0), (1, 0), (0, -1), (0, 1)];
+/// Mesh neighbour offsets; the first four are the orthogonal links, the
+/// tail adds the §5.1 diagonals.
+const NEIGHBOUR_OFFSETS: [(isize, isize); 8] = [
+    (-1, 0),
+    (1, 0),
+    (0, -1),
+    (0, 1),
+    (-1, -1),
+    (-1, 1),
+    (1, -1),
+    (1, 1),
+];
+
+/// Const slice of neighbour offsets — no `Vec` allocation per call (it
+/// sits inside `entrance_links` loops).
+fn neighbour_offsets(diagonal: bool) -> &'static [(isize, isize)] {
     if diagonal {
-        v.extend([(-1, -1), (-1, 1), (1, -1), (1, 1)]);
+        &NEIGHBOUR_OFFSETS
+    } else {
+        &NEIGHBOUR_OFFSETS[..4]
     }
-    v
 }
 
 #[cfg(test)]

@@ -1,9 +1,34 @@
-//! Workload IR: the machine-learning task of paper §4.2.2 — a
-//! topologically-ordered sequence of GEMM operators with synchronization
-//! and sharing attributes, plus the model zoo used in the evaluation
+//! Workload IR: the machine-learning task of paper §4.2.2 as a small
+//! dataflow graph — GEMM operators plus explicit producer→consumer
+//! [`Edge`]s — together with the model zoo used in the evaluation
 //! (AlexNet, ViT, Vision Mamba, HydraNet).
+//!
+//! # Graph semantics
+//!
+//! `ops` is stored in a validated topological order of the DAG; every
+//! edge runs forward (`src < dst`). An edge `(p, c)` states that op
+//! `c`'s input activations are op `p`'s output — the relationship the
+//! legacy IR encoded as a `chained` flag on the *consumer* with an
+//! implicit `i → i+1` adjacency. `chained` is now **derived** from the
+//! edges (an op is chained iff it has an incoming dataflow edge), so
+//! branching structures (residual fan-out, multi-head models,
+//! multi-tenant scenarios) are first-class.
+//!
+//! On-package redistribution (§5.2) stays per-edge: an edge is
+//! redistributable only when the producer's store can actually be
+//! skipped (sole consumer) and the consumer's activations are exactly
+//! this producer's output (sole producer) — see
+//! [`Workload::edge_redistributable`]. For linear chains this reduces
+//! exactly to the historical `chained && groups == 1 && !sync` rule,
+//! which is what keeps the edge-indexed evaluator bit-identical to the
+//! pre-IR one on every existing model.
 
 pub mod models;
+
+use std::ops::Range;
+
+/// Edge index into [`Workload::edges`].
+pub type EdgeId = usize;
 
 /// One GEMM operator: `OP_i = {M, K, N, sync, shared_row, shared_col}`
 /// (eq. 2) plus execution attributes the co-optimizations need.
@@ -25,8 +50,10 @@ pub struct GemmOp {
     pub shared_col: bool,
     /// Fused ReLU epilogue (computed in the chiplet SIMD unit).
     pub relu: bool,
-    /// Input activations are the previous op's output (enables §5.2
-    /// on-package redistribution instead of a memory round-trip).
+    /// Input activations arrive over a dataflow edge rather than a
+    /// memory round-trip. Derived from [`Workload::edges`] by the graph
+    /// constructors; the builder flag remains the declaration syntax for
+    /// linear chains ([`Workload::new`] turns it into edges).
     pub chained: bool,
     /// Grouped GEMM factor (attention heads). Redistribution only applies
     /// to plain GEMMs (`groups == 1`); grouped ops keep complex head-wise
@@ -81,49 +108,275 @@ impl GemmOp {
     pub fn elems(&self) -> (usize, usize, usize) {
         (self.m * self.k, self.k * self.n, self.m * self.n)
     }
-
-    /// Redistribution between this op and the next is legal only for
-    /// chained plain GEMMs (the next op consumes exactly this output).
-    pub fn redistributable_to(&self, next: &GemmOp) -> bool {
-        next.chained && self.groups == 1 && next.groups == 1 && !self.sync
-    }
 }
 
-/// A workload: named, ordered GEMM sequence (one topological order of the
-/// model DAG, §4.2.2).
+/// Explicit dataflow edge: `ops[src]`'s output tensor feeds `ops[dst]`'s
+/// input activations. `rows × cols` is the tensor shape on the wire —
+/// validated to equal the producer's output `M × N`, so consumers of
+/// the IR (cost probes, exporters) can read the moved-tensor shape off
+/// the edge without chasing the producer op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Edge {
+    pub src: usize,
+    pub dst: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Model provenance inside a (possibly fused) workload: the contiguous
+/// op range contributed by one model. Multi-model scenarios built via
+/// [`Workload::concat`] / [`Workload::multi_model`] carry one span per
+/// constituent so reports can attribute cost per model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpan {
+    pub name: String,
+    pub ops: Range<usize>,
+}
+
+/// A workload: named op set in a validated topological order plus the
+/// explicit dataflow edges of the model DAG (§4.2.2).
 #[derive(Debug, Clone)]
 pub struct Workload {
     pub name: String,
     pub ops: Vec<GemmOp>,
+    /// Dataflow edges, sorted by `(src, dst)`. For workloads built with
+    /// [`Workload::new`] these are derived from the ops' `chained`
+    /// flags (edge `i-1 → i` iff `ops[i].chained`).
+    pub edges: Vec<Edge>,
+    /// Per-model op spans. Empty means "one implicit span covering all
+    /// ops" (the common single-model case); use
+    /// [`Workload::model_spans`] to read either form uniformly.
+    pub models: Vec<ModelSpan>,
 }
 
 impl Workload {
+    /// Legacy linear constructor: a topologically-ordered GEMM sequence
+    /// whose dataflow is declared via the ops' `chained` flags. Derives
+    /// one edge `i-1 → i` per chained op.
     pub fn new(name: &str, ops: Vec<GemmOp>) -> Self {
-        let w = Workload { name: name.to_string(), ops };
+        let edges = (1..ops.len())
+            .filter(|&i| ops[i].chained)
+            .map(|i| Edge {
+                src: i - 1,
+                dst: i,
+                rows: ops[i - 1].m,
+                cols: ops[i - 1].n,
+            })
+            .collect();
+        let w = Workload {
+            name: name.to_string(),
+            ops,
+            edges,
+            models: Vec::new(),
+        };
         w.validate().expect("invalid workload");
         w
+    }
+
+    /// Graph constructor: ops in topological order plus explicit
+    /// dataflow edges as `(src, dst)` index pairs. The ops' `chained`
+    /// flags are **derived** (an op is chained iff it has an incoming
+    /// edge); edge tensor shapes come from the producer dims.
+    pub fn from_graph(
+        name: &str,
+        mut ops: Vec<GemmOp>,
+        edge_pairs: &[(usize, usize)],
+    ) -> Self {
+        let mut edges: Vec<Edge> = edge_pairs
+            .iter()
+            .map(|&(src, dst)| Edge {
+                src,
+                dst,
+                rows: ops.get(src).map_or(0, |o| o.m),
+                cols: ops.get(src).map_or(0, |o| o.n),
+            })
+            .collect();
+        edges.sort_by_key(|e| (e.src, e.dst));
+        for op in ops.iter_mut() {
+            op.chained = false;
+        }
+        for e in &edges {
+            if let Some(op) = ops.get_mut(e.dst) {
+                op.chained = true;
+            }
+        }
+        let w = Workload {
+            name: name.to_string(),
+            ops,
+            edges,
+            models: Vec::new(),
+        };
+        w.validate().expect("invalid graph workload");
+        w
+    }
+
+    /// Fuse several workloads into one schedulable scenario: ops and
+    /// edges are concatenated with shifted indices (no cross-model
+    /// edges — independent tenants), and each constituent becomes one
+    /// [`ModelSpan`] so reports can attribute cost per model.
+    pub fn concat(name: &str, parts: &[Workload]) -> Self {
+        assert!(!parts.is_empty(), "concat of zero workloads");
+        let mut ops = Vec::new();
+        let mut edges = Vec::new();
+        let mut models = Vec::new();
+        for part in parts {
+            let off = ops.len();
+            models.extend(part.model_spans().into_iter().map(|s| ModelSpan {
+                name: s.name,
+                ops: s.ops.start + off..s.ops.end + off,
+            }));
+            ops.extend(part.ops.iter().cloned());
+            edges.extend(part.edges.iter().map(|e| Edge {
+                src: e.src + off,
+                dst: e.dst + off,
+                rows: e.rows,
+                cols: e.cols,
+            }));
+        }
+        // Disambiguate duplicate tenant names (`m#0`, `m#1`, …) so
+        // per-model report rows stay attributable.
+        {
+            use std::collections::HashMap;
+            let mut counts: HashMap<String, usize> = HashMap::new();
+            for span in &models {
+                *counts.entry(span.name.clone()).or_insert(0) += 1;
+            }
+            let mut seen: HashMap<String, usize> = HashMap::new();
+            for span in models.iter_mut() {
+                if counts[&span.name] > 1 {
+                    let k = seen.entry(span.name.clone()).or_insert(0);
+                    span.name = format!("{}#{k}", span.name);
+                    *k += 1;
+                }
+            }
+        }
+        let w = Workload { name: name.to_string(), ops, edges, models };
+        w.validate().expect("invalid fused workload");
+        w
+    }
+
+    /// Multi-tenant scenario: fuse the given models under an
+    /// auto-generated `a+b+…` name (one `Engine::sweep` cell schedules
+    /// them all together; the report carries one span per model).
+    pub fn multi_model(parts: &[Workload]) -> Self {
+        let name = parts
+            .iter()
+            .map(|w| w.name.as_str())
+            .collect::<Vec<_>>()
+            .join("+");
+        Workload::concat(&name, parts)
+    }
+
+    /// The per-model op spans: the stored provenance, or one implicit
+    /// span covering the whole workload.
+    pub fn model_spans(&self) -> Vec<ModelSpan> {
+        if self.models.is_empty() {
+            vec![ModelSpan { name: self.name.clone(), ops: 0..self.ops.len() }]
+        } else {
+            self.models.clone()
+        }
     }
 
     pub fn validate(&self) -> Result<(), String> {
         if self.ops.is_empty() {
             return Err(format!("workload '{}' has no ops", self.name));
         }
+        let n = self.ops.len();
         for (i, op) in self.ops.iter().enumerate() {
             if op.m == 0 || op.k == 0 || op.n == 0 {
                 return Err(format!("op {i} '{}' has a zero dim", op.name));
             }
-            if op.groups == 0 || op.k % op.groups != 0 {
-                // groups partition the contraction/head dim layout; we
-                // only require divisibility of K for grouped ops.
-                if op.groups != 1 {
+            if op.groups == 0 {
+                return Err(format!(
+                    "op {i} '{}': groups must be >= 1",
+                    op.name
+                ));
+            }
+            if op.groups > 1 && op.k % op.groups != 0 {
+                return Err(format!(
+                    "op {i} '{}': K={} not divisible by groups={}",
+                    op.name, op.k, op.groups
+                ));
+            }
+        }
+        // Edges: forward in the stored topological order, in range,
+        // no self-loops or duplicates, sorted by (src, dst).
+        for (e, edge) in self.edges.iter().enumerate() {
+            if edge.src >= n || edge.dst >= n {
+                return Err(format!(
+                    "edge {e} ({} -> {}) out of range (n={n})",
+                    edge.src, edge.dst
+                ));
+            }
+            if edge.src >= edge.dst {
+                return Err(format!(
+                    "edge {e} ({} -> {}) violates the stored topological \
+                     order (src must precede dst)",
+                    edge.src, edge.dst
+                ));
+            }
+            let src_op = &self.ops[edge.src];
+            if edge.rows != src_op.m || edge.cols != src_op.n {
+                return Err(format!(
+                    "edge {e} ({} -> {}) carries tensor shape {}x{} but \
+                     its producer '{}' outputs {}x{}",
+                    edge.src,
+                    edge.dst,
+                    edge.rows,
+                    edge.cols,
+                    src_op.name,
+                    src_op.m,
+                    src_op.n
+                ));
+            }
+            if e > 0 {
+                let prev = &self.edges[e - 1];
+                if (prev.src, prev.dst) == (edge.src, edge.dst) {
                     return Err(format!(
-                        "op {i} '{}': K={} not divisible by groups={}",
-                        op.name, op.k, op.groups
+                        "duplicate edge {} -> {}",
+                        edge.src, edge.dst
+                    ));
+                }
+                if (prev.src, prev.dst) > (edge.src, edge.dst) {
+                    return Err(format!(
+                        "edges not sorted by (src, dst) at index {e}"
                     ));
                 }
             }
-            if i == 0 && op.chained {
-                return Err("first op cannot be chained".into());
+        }
+        // Chained-derivation consistency: an op is chained iff it has an
+        // incoming dataflow edge. (Catches struct-literal construction
+        // that sets `chained` without declaring an edge — e.g. a chained
+        // first op, which can have no producer.)
+        for (i, op) in self.ops.iter().enumerate() {
+            let has_in = self.edges.iter().any(|e| e.dst == i);
+            if op.chained != has_in {
+                return Err(format!(
+                    "op {i} '{}': chained={} but {} incoming dataflow edge \
+                     (chained is derived from edges)",
+                    op.name,
+                    op.chained,
+                    if has_in { "has an" } else { "has no" }
+                ));
+            }
+        }
+        // Model spans (when present): contiguous ascending cover of ops.
+        if !self.models.is_empty() {
+            let mut at = 0usize;
+            for (s, span) in self.models.iter().enumerate() {
+                if span.ops.start != at || span.ops.end < span.ops.start {
+                    return Err(format!(
+                        "model span {s} '{}' does not tile the op range \
+                         (starts at {}, expected {at})",
+                        span.name, span.ops.start
+                    ));
+                }
+                at = span.ops.end;
+            }
+            if at != n {
+                return Err(format!(
+                    "model spans cover {at} ops, workload has {n}"
+                ));
             }
         }
         Ok(())
@@ -133,10 +386,130 @@ impl Workload {
         self.ops.iter().map(|o| o.macs()).sum()
     }
 
-    /// Indices `i` such that ops[i] -> ops[i+1] is redistributable.
+    /// Number of dataflow edges (the arity of the per-edge gene vectors:
+    /// `Allocation::collect_cols`, GA redistribution genes, MIQP edge
+    /// decisions).
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// In-degree of op `i` (number of dataflow producers).
+    pub fn in_degree(&self, i: usize) -> usize {
+        self.edges.iter().filter(|e| e.dst == i).count()
+    }
+
+    /// Out-degree of op `i` (number of dataflow consumers).
+    pub fn out_degree(&self, i: usize) -> usize {
+        self.edges.iter().filter(|e| e.src == i).count()
+    }
+
+    /// The unique incoming edge of op `i`, if its in-degree is exactly 1.
+    pub fn sole_in_edge(&self, i: usize) -> Option<EdgeId> {
+        let mut found = None;
+        for (e, edge) in self.edges.iter().enumerate() {
+            if edge.dst == i {
+                if found.is_some() {
+                    return None;
+                }
+                found = Some(e);
+            }
+        }
+        found
+    }
+
+    /// The unique outgoing edge of op `i`, if its out-degree is exactly 1.
+    pub fn sole_out_edge(&self, i: usize) -> Option<EdgeId> {
+        let mut found = None;
+        for (e, edge) in self.edges.iter().enumerate() {
+            if edge.src == i {
+                if found.is_some() {
+                    return None;
+                }
+                found = Some(e);
+            }
+        }
+        found
+    }
+
+    /// Fill `in_edge[c]` / `out_edge[p]` with each op's unique
+    /// incoming / outgoing edge id (`None` when the degree is 0 or > 1).
+    /// One O(|edges|) pass per side; buffers are reused allocation-free
+    /// once warmed to the op count (the evaluator hot path).
+    pub fn sole_edges_into(
+        &self,
+        in_edge: &mut Vec<Option<EdgeId>>,
+        out_edge: &mut Vec<Option<EdgeId>>,
+    ) {
+        let n = self.ops.len();
+        in_edge.clear();
+        in_edge.resize(n, None);
+        out_edge.clear();
+        out_edge.resize(n, None);
+        // Sentinel: usize::MAX marks "more than one edge seen".
+        const MANY: EdgeId = usize::MAX;
+        for (e, edge) in self.edges.iter().enumerate() {
+            in_edge[edge.dst] = match in_edge[edge.dst] {
+                None => Some(e),
+                Some(_) => Some(MANY),
+            };
+            out_edge[edge.src] = match out_edge[edge.src] {
+                None => Some(e),
+                Some(_) => Some(MANY),
+            };
+        }
+        for v in in_edge.iter_mut().chain(out_edge.iter_mut()) {
+            if *v == Some(MANY) {
+                *v = None;
+            }
+        }
+    }
+
+    /// §5.2 legality for one edge `p → c`: redistribution replaces the
+    /// producer's store *and* the consumer's activation load, so it
+    /// needs `c` to be `p`'s sole consumer (the store can be skipped)
+    /// and `p` to be `c`'s sole producer (the layout transform serves
+    /// the whole input), plain GEMMs on both ends, and no forced
+    /// synchronization on the producer. On linear chains this is the
+    /// historical `chained && groups == 1 && !sync` rule exactly.
+    pub fn edge_redistributable(&self, e: EdgeId) -> bool {
+        let (mut in_edge, mut out_edge) = (Vec::new(), Vec::new());
+        self.sole_edges_into(&mut in_edge, &mut out_edge);
+        self.edge_redistributable_with(e, &in_edge, &out_edge)
+    }
+
+    /// The single source of truth for [`Workload::edge_redistributable`]
+    /// given precomputed sole-edge maps — the O(1)-per-edge form the
+    /// evaluator hot path and `CachedEval` construction use so the
+    /// legality clauses exist exactly once.
+    pub fn edge_redistributable_with(
+        &self,
+        e: EdgeId,
+        in_edge: &[Option<EdgeId>],
+        out_edge: &[Option<EdgeId>],
+    ) -> bool {
+        let Edge { src, dst, .. } = self.edges[e];
+        out_edge[src] == Some(e)
+            && in_edge[dst] == Some(e)
+            && self.ops[src].groups == 1
+            && self.ops[dst].groups == 1
+            && !self.ops[src].sync
+    }
+
+    /// Ids of every redistribution-legal edge (§5.2).
+    pub fn redistributable_edges(&self) -> Vec<EdgeId> {
+        (0..self.edges.len())
+            .filter(|&e| self.edge_redistributable(e))
+            .collect()
+    }
+
+    /// Indices `i` such that the adjacent edge `ops[i] -> ops[i+1]`
+    /// exists and is redistributable (the legacy linear view; on
+    /// linear-chain workloads this covers every legal edge).
     pub fn redistributable_pairs(&self) -> Vec<usize> {
-        (0..self.ops.len().saturating_sub(1))
-            .filter(|&i| self.ops[i].redistributable_to(&self.ops[i + 1]))
+        self.redistributable_edges()
+            .into_iter()
+            .filter(|&e| self.edges[e].dst == self.edges[e].src + 1)
+            .map(|e| self.edges[e].src)
             .collect()
     }
 }
@@ -155,10 +528,14 @@ mod tests {
     }
 
     #[test]
-    fn chained_chain_accepted() {
+    fn chained_chain_accepted_and_edges_derived() {
         let a = GemmOp::dense("a", 8, 16, 32);
         let ok = GemmOp::dense("b", 8, 32, 64).chained();
-        assert!(Workload::new("w", vec![a, ok]).validate().is_ok());
+        let w = Workload::new("w", vec![a, ok]);
+        assert!(w.validate().is_ok());
+        assert_eq!(w.edges.len(), 1);
+        assert_eq!((w.edges[0].src, w.edges[0].dst), (0, 1));
+        assert_eq!((w.edges[0].rows, w.edges[0].cols), (8, 32));
     }
 
     #[test]
@@ -166,6 +543,8 @@ mod tests {
         let w = Workload {
             name: "w".into(),
             ops: vec![GemmOp::dense("a", 8, 16, 32).chained()],
+            edges: vec![],
+            models: vec![],
         };
         assert!(w.validate().is_err());
     }
@@ -181,6 +560,7 @@ mod tests {
         let w = Workload::new("w", ops);
         // a->b ok; b->c blocked (c grouped); c->d blocked (c sync+grouped).
         assert_eq!(w.redistributable_pairs(), vec![0]);
+        assert_eq!(w.redistributable_edges(), vec![0]);
     }
 
     #[test]
@@ -188,7 +568,169 @@ mod tests {
         let w = Workload {
             name: "w".into(),
             ops: vec![GemmOp::dense("a", 0, 16, 32)],
+            edges: vec![],
+            models: vec![],
         };
         assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn groups_validation_is_exact() {
+        let mut op = GemmOp::dense("a", 8, 48, 32);
+        op.groups = 0;
+        let w = Workload {
+            name: "w".into(),
+            ops: vec![op],
+            edges: vec![],
+            models: vec![],
+        };
+        assert!(w.validate().unwrap_err().contains("groups must be >= 1"));
+        let bad = Workload {
+            name: "w".into(),
+            ops: vec![GemmOp::dense("a", 8, 48, 32).grouped(5)],
+            edges: vec![],
+            models: vec![],
+        };
+        assert!(bad.validate().unwrap_err().contains("not divisible"));
+        // groups == 1 never requires divisibility; groups dividing K is
+        // fine.
+        assert!(Workload::new(
+            "ok",
+            vec![GemmOp::dense("a", 8, 48, 32).grouped(4)]
+        )
+        .validate()
+        .is_ok());
+    }
+
+    #[test]
+    fn from_graph_derives_chained_and_sorts_edges() {
+        let ops = vec![
+            GemmOp::dense("a", 8, 16, 32),
+            GemmOp::dense("b", 8, 32, 32),
+            GemmOp::dense("c", 8, 32, 16),
+        ];
+        // Declared out of order; fan-out a -> {b, c}.
+        let w = Workload::from_graph("w", ops, &[(0, 2), (0, 1)]);
+        assert_eq!(
+            w.edges.iter().map(|e| (e.src, e.dst)).collect::<Vec<_>>(),
+            vec![(0, 1), (0, 2)]
+        );
+        assert!(!w.ops[0].chained && w.ops[1].chained && w.ops[2].chained);
+        // Fan-out producer: neither edge is redistributable (the store
+        // cannot be skipped while another consumer still reads it).
+        assert!(w.redistributable_edges().is_empty());
+    }
+
+    #[test]
+    fn graph_rejects_backward_and_duplicate_edges() {
+        let ops = || {
+            vec![
+                GemmOp::dense("a", 8, 16, 32),
+                GemmOp::dense("b", 8, 32, 32),
+            ]
+        };
+        let backward = Workload {
+            name: "w".into(),
+            ops: {
+                let mut o = ops();
+                o[0].chained = true;
+                o
+            },
+            edges: vec![Edge { src: 1, dst: 0, rows: 8, cols: 32 }],
+            models: vec![],
+        };
+        assert!(backward.validate().is_err());
+        let dup = Workload {
+            name: "w".into(),
+            ops: {
+                let mut o = ops();
+                o[1].chained = true;
+                o
+            },
+            edges: vec![
+                Edge { src: 0, dst: 1, rows: 8, cols: 32 },
+                Edge { src: 0, dst: 1, rows: 8, cols: 32 },
+            ],
+            models: vec![],
+        };
+        assert!(dup.validate().is_err());
+    }
+
+    #[test]
+    fn degrees_and_sole_edges() {
+        let ops = vec![
+            GemmOp::dense("a", 8, 16, 32),
+            GemmOp::dense("b", 8, 32, 32),
+            GemmOp::dense("c", 8, 64, 16),
+            GemmOp::dense("d", 8, 16, 16),
+        ];
+        // a -> b, a -> c, b -> d, c -> d (diamond).
+        let w = Workload::from_graph("w", ops, &[(0, 1), (0, 2), (1, 3), (2, 3)]);
+        assert_eq!((w.in_degree(0), w.out_degree(0)), (0, 2));
+        assert_eq!((w.in_degree(3), w.out_degree(3)), (2, 0));
+        assert_eq!(w.sole_in_edge(1), Some(0));
+        assert_eq!(w.sole_out_edge(1), Some(2));
+        assert_eq!(w.sole_in_edge(3), None);
+        assert_eq!(w.sole_out_edge(0), None);
+        let (mut ie, mut oe) = (Vec::new(), Vec::new());
+        w.sole_edges_into(&mut ie, &mut oe);
+        assert_eq!(ie, vec![None, Some(0), Some(1), None]);
+        assert_eq!(oe, vec![None, Some(2), Some(3), None]);
+    }
+
+    #[test]
+    fn concat_offsets_ops_edges_and_spans() {
+        let a = Workload::new(
+            "a",
+            vec![
+                GemmOp::dense("a0", 8, 16, 32),
+                GemmOp::dense("a1", 8, 32, 16).chained(),
+            ],
+        );
+        let b = Workload::new(
+            "b",
+            vec![
+                GemmOp::dense("b0", 4, 8, 8),
+                GemmOp::dense("b1", 4, 8, 8).chained(),
+            ],
+        );
+        let fused = Workload::multi_model(&[a, b]);
+        assert_eq!(fused.name, "a+b");
+        assert_eq!(fused.ops.len(), 4);
+        assert_eq!(
+            fused.edges.iter().map(|e| (e.src, e.dst)).collect::<Vec<_>>(),
+            vec![(0, 1), (2, 3)]
+        );
+        let spans = fused.model_spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!((spans[0].name.as_str(), spans[0].ops.clone()), ("a", 0..2));
+        assert_eq!((spans[1].name.as_str(), spans[1].ops.clone()), ("b", 2..4));
+        // No cross-model redistribution can exist (no cross-model edges).
+        for e in fused.redistributable_edges() {
+            let edge = fused.edges[e];
+            let same = spans.iter().any(|s| {
+                s.ops.contains(&edge.src) && s.ops.contains(&edge.dst)
+            });
+            assert!(same);
+        }
+    }
+
+    #[test]
+    fn concat_disambiguates_duplicate_tenant_names() {
+        let a = Workload::new("m", vec![GemmOp::dense("x", 8, 16, 32)]);
+        let fused = Workload::multi_model(&[a.clone(), a]);
+        assert_eq!(fused.name, "m+m");
+        let names: Vec<String> =
+            fused.model_spans().into_iter().map(|s| s.name).collect();
+        assert_eq!(names, vec!["m#0".to_string(), "m#1".to_string()]);
+    }
+
+    #[test]
+    fn model_spans_implicit_for_single_model() {
+        let w = Workload::new("w", vec![GemmOp::dense("a", 8, 16, 32)]);
+        let spans = w.model_spans();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].ops, 0..1);
+        assert_eq!(spans[0].name, "w");
     }
 }

@@ -3,14 +3,22 @@
 //! The production model is proprietary; per DESIGN.md §Substitutions we
 //! build the published shape: a shared convolutional backbone (RegNet-ish
 //! stages, im2col GEMMs) feeding a BiFPN-like fusion layer and three task
-//! heads (detection, lane/line, traffic-light). Heads branch from the
-//! same feature map, so the ops at branch points are *not* chained —
-//! exactly the mixed structure the paper's end-to-end scheduler must
-//! handle.
+//! heads (detection, lane/line, traffic-light).
+//!
+//! Two IR views of the same op list:
+//! * [`hydranet`] — the linear-chain view the paper's LS scheduler
+//!   sees (heads after the first re-read the shared feature map, so
+//!   the branch points are simply non-chained);
+//! * [`hydranet_branched`] — the dataflow-graph view with the real
+//!   branch edges: multi-scale fusion fans *in* (`s3 + s4 → fpn.mix`)
+//!   and the three heads fan *out* of `fpn.mix`. The fan-out producer
+//!   must keep its store (three consumers), while each head's internal
+//!   chain stays redistribution-legal — the mixed structure the
+//!   edge-indexed scheduler must handle.
 
 use crate::workload::{GemmOp, Workload};
 
-pub fn hydranet(batch: usize) -> Workload {
+fn hydranet_ops(batch: usize) -> Vec<GemmOp> {
     assert!(batch >= 1);
     let b = batch;
     let mut ops = Vec::new();
@@ -53,7 +61,43 @@ pub fn hydranet(batch: usize) -> Workload {
     ops.push(GemmOp::dense("light.conv", b * 10 * 8, 3 * 3 * 256, 128)
         .relu());
     ops.push(GemmOp::dense("light.out", b * 10 * 8, 128, 16).chained());
-    Workload::new("hydranet", ops)
+    ops
+}
+
+/// The linear-chain view (§4.2.2 topological order with `chained`
+/// declarations) — the paper's evaluation workload.
+pub fn hydranet(batch: usize) -> Workload {
+    Workload::new("hydranet", hydranet_ops(batch))
+}
+
+/// The dataflow-graph view with the real branch edges. Op indices:
+/// 0 stem, 1 s1.conv, 2 s2.conv1, 3 s2.conv2, 4 s3.conv1, 5 s3.conv2,
+/// 6 s4.conv, 7 fpn.mix, 8 det.conv, 9 det.out, 10 lane.conv,
+/// 11 lane.out, 12 light.conv, 13 light.out.
+pub fn hydranet_branched(batch: usize) -> Workload {
+    let ops = hydranet_ops(batch);
+    let edges: &[(usize, usize)] = &[
+        // Backbone chain.
+        (0, 1),
+        (1, 2),
+        (2, 3),
+        (3, 4),
+        (4, 5),
+        (5, 6),
+        // Fusion fan-in: s3 and s4 features both feed fpn.mix, so
+        // s3.conv2 fans out (6 and 7) and fpn.mix fans in (5 and 6).
+        (5, 7),
+        (6, 7),
+        // Head fan-out from the shared feature map.
+        (7, 8),
+        (7, 10),
+        (7, 12),
+        // Per-head chains.
+        (8, 9),
+        (10, 11),
+        (12, 13),
+    ];
+    Workload::from_graph("hydranet-branched", ops, edges)
 }
 
 #[cfg(test)]
@@ -76,5 +120,34 @@ mod tests {
     fn macs_in_edge_model_range() {
         let macs = hydranet(1).total_macs() as f64;
         assert!(macs > 0.5e9 && macs < 10e9, "macs={macs}");
+    }
+
+    #[test]
+    fn branched_variant_fans_in_and_out() {
+        let w = hydranet_branched(1);
+        assert!(w.validate().is_ok());
+        assert_eq!(w.ops.len(), 14);
+        // fpn.mix: fan-in 2, fan-out 3.
+        assert_eq!(w.in_degree(7), 2);
+        assert_eq!(w.out_degree(7), 3);
+        // s3.conv2 fans out (chain + fusion), so its chain edge to
+        // s4.conv loses §5.2 legality (the store must happen anyway).
+        assert_eq!(w.out_degree(5), 2);
+        let legal = w.redistributable_edges();
+        assert!(!legal.iter().any(|&e| w.edges[e].src == 5));
+        // The head fan-out edges are illegal too (three consumers)...
+        assert!(!legal.iter().any(|&e| w.edges[e].src == 7));
+        // ...but the early backbone and the per-head chains stay legal.
+        assert!(legal.iter().any(|&e| w.edges[e] == w.edges[0]));
+        for (src, dst) in [(8, 9), (10, 11), (12, 13)] {
+            assert!(
+                legal
+                    .iter()
+                    .any(|&e| w.edges[e].src == src && w.edges[e].dst == dst),
+                "head chain {src}->{dst} should be redistribution-legal"
+            );
+        }
+        // Same compute as the linear view.
+        assert_eq!(w.total_macs(), hydranet(1).total_macs());
     }
 }

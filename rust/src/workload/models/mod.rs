@@ -11,9 +11,9 @@ mod vision_mamba;
 mod vit;
 
 pub use alexnet::alexnet;
-pub use hydranet::hydranet;
+pub use hydranet::{hydranet, hydranet_branched};
 pub use vision_mamba::vision_mamba;
-pub use vit::vit;
+pub use vit::{vit, vit_residual};
 
 use super::Workload;
 
@@ -27,9 +27,23 @@ pub fn evaluation_suite(batch: usize) -> Vec<Workload> {
     ]
 }
 
+/// Workloads with genuine DAG structure (fan-in/fan-out dataflow
+/// edges): the graph-IR views of the zoo models plus a two-tenant
+/// fused scenario — the scenarios the edge-indexed scheduler stack
+/// opens up beyond the paper's linear chains.
+pub fn branching_suite(batch: usize) -> Vec<Workload> {
+    vec![
+        vit_residual(batch),
+        hydranet_branched(batch),
+        Workload::multi_model(&[alexnet(batch), vit(batch)]),
+    ]
+}
+
 /// Scale a workload's dims by `1/s` (floored at `floor`), preserving
 /// structure — used by the end-to-end runtime example to keep the
 /// interpret-mode GEMMs small while exercising the identical schedule.
+/// Dataflow edges and model provenance carry over unchanged (edge
+/// tensor shapes are re-derived from the scaled producer dims).
 pub fn scaled_down(w: &Workload, s: usize, floor: usize) -> Workload {
     let ops = w
         .ops
@@ -48,7 +62,13 @@ pub fn scaled_down(w: &Workload, s: usize, floor: usize) -> Workload {
             o
         })
         .collect();
-    Workload::new(&format!("{}-mini", w.name), ops)
+    let pairs: Vec<(usize, usize)> =
+        w.edges.iter().map(|e| (e.src, e.dst)).collect();
+    let mut mini =
+        Workload::from_graph(&format!("{}-mini", w.name), ops, &pairs);
+    mini.models = w.models.clone();
+    debug_assert!(mini.validate().is_ok());
+    mini
 }
 
 #[cfg(test)]
@@ -101,5 +121,30 @@ mod tests {
             assert!(b.m >= 16 && b.k >= 16 && b.n >= 16);
             assert_eq!(b.k % b.groups, 0);
         }
+    }
+
+    #[test]
+    fn scaled_down_preserves_graph_edges() {
+        let w = hydranet_branched(1);
+        let s = scaled_down(&w, 8, 16);
+        assert_eq!(w.edges.len(), s.edges.len());
+        for (a, b) in w.edges.iter().zip(&s.edges) {
+            assert_eq!((a.src, a.dst), (b.src, b.dst));
+        }
+    }
+
+    #[test]
+    fn branching_suite_builds_with_edges_and_provenance() {
+        let suite = branching_suite(1);
+        for w in &suite {
+            assert!(w.validate().is_ok(), "{} invalid", w.name);
+            assert!(w.edge_count() > 0, "{} has no edges", w.name);
+        }
+        // The fused two-tenant scenario carries one span per model.
+        let fused = suite.last().unwrap();
+        let spans = fused.model_spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].name, "alexnet");
+        assert_eq!(spans[1].name, "vit");
     }
 }

@@ -4,6 +4,15 @@
 //! notes grouped operators keep complex head-wise mappings, so
 //! redistribution applies only to the (plain) MLP projections (§7.1).
 //! Softmax / layer-norm boundaries are `sync` ops.
+//!
+//! Two IR views of the same op list:
+//! * [`vit`] — the paper's linear-chain view (the evaluation workload;
+//!   pinned bit-identical across the graph-IR refactor);
+//! * [`vit_residual`] — the dataflow-graph view with the real residual
+//!   edges around attention (`block input → proj`), giving `proj` a
+//!   fan-in of 2. The residual consumer re-reads fused activations, so
+//!   those edges are never redistribution-legal — exactly the
+//!   branching structure the edge-indexed stack must schedule.
 
 use crate::workload::{GemmOp, Workload};
 
@@ -14,7 +23,7 @@ const HEAD_D: usize = D / HEADS;
 const MLP: usize = 3072;
 const BLOCKS: usize = 12;
 
-pub fn vit(batch: usize) -> Workload {
+fn vit_ops(batch: usize) -> Vec<GemmOp> {
     assert!(batch >= 1);
     let s = batch * SEQ;
     let mut ops = Vec::new();
@@ -42,7 +51,37 @@ pub fn vit(batch: usize) -> Workload {
         ops.push(GemmOp::dense(&p("fc2"), s, MLP, D).chained());
     }
     ops.push(GemmOp::dense("head", batch, D, 1000));
-    Workload::new("vit", ops)
+    ops
+}
+
+/// The linear-chain view (one topological order, dataflow declared via
+/// `chained`; §4.2.2) — the paper's evaluation workload.
+pub fn vit(batch: usize) -> Workload {
+    Workload::new("vit", vit_ops(batch))
+}
+
+/// Op index of block `blk`'s `stage`-th op (0 = qkv … 5 = fc2).
+fn blk_op(blk: usize, stage: usize) -> usize {
+    1 + 6 * blk + stage
+}
+
+/// The dataflow-graph view with real residual edges: per block, the
+/// chain edges `attn_v → proj` and `fc1 → fc2` plus the attention
+/// residual `block input → proj` (block input = previous block's fc2,
+/// or the patch embedding for block 0). `proj`'s fan-in of 2 makes its
+/// incoming edges redistribution-illegal on top of ViT's grouped/sync
+/// restrictions — a genuinely branching DAG the edge-indexed stack
+/// must schedule end to end.
+pub fn vit_residual(batch: usize) -> Workload {
+    let ops = vit_ops(batch);
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    for blk in 0..BLOCKS {
+        let block_in = if blk == 0 { 0 } else { blk_op(blk - 1, 5) };
+        edges.push((blk_op(blk, 2), blk_op(blk, 3))); // attn_v -> proj
+        edges.push((block_in, blk_op(blk, 3))); // residual -> proj
+        edges.push((blk_op(blk, 4), blk_op(blk, 5))); // fc1 -> fc2
+    }
+    Workload::from_graph("vit-residual", ops, &edges)
 }
 
 #[cfg(test)]
@@ -77,5 +116,23 @@ mod tests {
                 "unexpected redistributable edge into {nxt}"
             );
         }
+    }
+
+    #[test]
+    fn residual_variant_branches_without_legal_redistribution() {
+        let w = vit_residual(1);
+        assert!(w.validate().is_ok());
+        assert_eq!(w.edges.len(), 3 * BLOCKS);
+        // Every proj has fan-in 2 (attn_v + residual).
+        for blk in 0..BLOCKS {
+            assert_eq!(w.in_degree(blk_op(blk, 3)), 2, "blk {blk} proj");
+        }
+        // ViT's grouped attention (attn_v), LN sync (fc1) and the
+        // residual fan-in (proj) leave no §5.2-legal edge — same as the
+        // linear view, whose redistributable pairs are also empty.
+        assert!(w.redistributable_edges().is_empty());
+        assert!(vit(1).redistributable_pairs().is_empty());
+        // Same compute, different dataflow.
+        assert_eq!(w.total_macs(), vit(1).total_macs());
     }
 }

@@ -13,7 +13,6 @@ use mcmcomm::engine::{
     SchedulerRegistry,
 };
 use mcmcomm::opt::ga::GaParams;
-use mcmcomm::topology::Topology;
 use mcmcomm::workload::models::{alexnet, vit};
 use mcmcomm::workload::Workload;
 
@@ -147,13 +146,11 @@ fn engine_reports_bit_identical_to_raw_evaluate() {
     }
 }
 
-/// The deterministic schedulers must produce identical plans through
-/// the legacy `run_scheme` shim and the engine path (the shim delegates,
-/// so this pins the delegation).
+/// Deterministic schedulers must reproduce their plans bit-for-bit
+/// across engine runs (the determinism contract the deleted
+/// `run_scheme` shim used to pin via delegation).
 #[test]
-#[allow(deprecated)]
-fn legacy_run_scheme_matches_engine_for_deterministic_schedulers() {
-    use mcmcomm::opt::{run_scheme, Scheme, SchedulerConfig};
+fn deterministic_schedulers_reproduce_plans() {
     let ga_params = GaParams {
         population: 12,
         generations: 6,
@@ -162,12 +159,6 @@ fn legacy_run_scheme_matches_engine_for_deterministic_schedulers() {
     };
     for wl in [alexnet(1), vit(1)] {
         let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-        let topo = Topology::from_hw(&hw);
-        let cfg = SchedulerConfig {
-            seed: SEED,
-            ga: ga_params.clone(),
-            ..Default::default()
-        };
         let scenario = Scenario::builder()
             .hw(hw.clone())
             .workload(wl.clone())
@@ -176,33 +167,30 @@ fn legacy_run_scheme_matches_engine_for_deterministic_schedulers() {
         let engine = Engine::new(scenario);
         // MIQP excluded: its anytime wall-clock budget makes two solver
         // runs legitimately diverge.
-        let cells: [(Scheme, Box<dyn Scheduler>); 4] = [
-            (Scheme::Baseline, Box::new(schedulers::Baseline)),
-            (Scheme::SimbaLike, Box::new(schedulers::SimbaLike)),
-            (Scheme::Greedy, Box::new(schedulers::Greedy)),
-            (
-                Scheme::Ga,
-                Box::new(schedulers::Ga::new(ga_params.clone(), SEED)),
-            ),
+        let cells: [Box<dyn Scheduler>; 4] = [
+            Box::new(schedulers::Baseline),
+            Box::new(schedulers::SimbaLike),
+            Box::new(schedulers::Greedy),
+            Box::new(schedulers::Ga::new(ga_params.clone(), SEED)),
         ];
-        for (scheme, scheduler) in &cells {
-            let legacy = run_scheme(*scheme, &hw, &topo, &wl, &cfg);
-            let planned = engine.schedule_with(scheduler.as_ref()).unwrap();
+        for scheduler in &cells {
+            let a = engine.schedule_with(scheduler.as_ref()).unwrap();
+            let b = engine.schedule_with(scheduler.as_ref()).unwrap();
             assert_eq!(
-                legacy.objective_value,
-                planned.objective_value(),
+                a.objective_value().to_bits(),
+                b.objective_value().to_bits(),
                 "{} on {}",
-                scheme.name(),
+                scheduler.key(),
                 wl.name
             );
             assert_eq!(
-                legacy.alloc,
-                planned.plan().alloc,
+                a.plan().alloc,
+                b.plan().alloc,
                 "{} on {}: allocations diverge",
-                scheme.name(),
+                scheduler.key(),
                 wl.name
             );
-            assert_eq!(legacy.flags, planned.plan().flags);
+            assert_eq!(a.plan().flags, b.plan().flags);
         }
     }
 }
@@ -314,9 +302,13 @@ fn invalid_plans_are_rejected_by_the_engine() {
 #[test]
 fn scenario_rejects_broken_workloads_that_bypass_constructors() {
     use mcmcomm::workload::GemmOp;
+    // `chained` without a matching dataflow edge violates the derived
+    // chained-from-edges invariant of the graph IR.
     let wl = Workload {
         name: "bad".into(),
         ops: vec![GemmOp::dense("a", 16, 16, 16).chained()],
+        edges: vec![],
+        models: vec![],
     };
     let err = Scenario::builder().workload(wl).build().unwrap_err();
     assert!(matches!(err, EngineError::InvalidWorkload(_)), "{err}");

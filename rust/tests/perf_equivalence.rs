@@ -60,19 +60,31 @@ fn mutate(hw: &HwConfig, wl: &Workload, rng: &mut Pcg, a: &mut Allocation) {
             }
         }
         _ => {
-            a.collect_cols[i] = rng.range_usize(0, hw.ydim - 1);
+            // Collection genes are per dataflow edge; re-pick one.
+            if !a.collect_cols.is_empty() {
+                let e = rng.range_usize(0, a.collect_cols.len() - 1);
+                a.collect_cols[e] = rng.range_usize(0, hw.ydim - 1);
+            }
         }
     }
 }
 
-/// GA-style uniform crossover (mirrors `opt::ga::crossover`).
+/// GA-style uniform crossover: per-op partition genes plus per-edge
+/// collection genes. Unlike `opt::ga::crossover` (which transfers an
+/// edge's collection gene only together with its producer's partition),
+/// this oracle flips every gene independently — a superset of the GA's
+/// reachable gene mixes, which is what the bit-identity check wants.
 fn crossover(wl: &Workload, rng: &mut Pcg, a: &Allocation, b: &Allocation)
              -> Allocation {
     let mut child = a.clone();
     for i in 0..wl.ops.len() {
         if rng.chance(0.5) {
             child.parts[i] = b.parts[i].clone();
-            child.collect_cols[i] = b.collect_cols[i];
+        }
+    }
+    for (c, &bc) in child.collect_cols.iter_mut().zip(&b.collect_cols) {
+        if rng.chance(0.5) {
+            *c = bc;
         }
     }
     child

@@ -147,9 +147,11 @@ fn prop_random_valid_allocations_evaluate_finite() {
             let mut rng = Pcg::seeded(seed);
             let px = gens::composition(&mut rng, m, 4);
             let py = gens::composition(&mut rng, n, 4);
+            // One op, zero dataflow edges: the collection-column gene
+            // vector is empty (it is indexed per edge).
             let alloc = Allocation {
                 parts: vec![Partition { px, py }],
-                collect_cols: vec![rng.range_usize(0, 3)],
+                collect_cols: vec![],
             };
             prop_assert!(alloc.validate(&wl, &hw).is_ok(), "invalid alloc");
             for flags in [OptFlags::NONE, OptFlags::ALL] {
@@ -333,6 +335,133 @@ fn prop_netsim_conserves_bytes_on_memory_link() {
                     "flow {i} finished faster than line rate"
                 );
             }
+            Ok(())
+        },
+    );
+}
+
+/// A uniformly random topological order of the DAG `(n, pairs)`:
+/// Kahn's algorithm with a random pick among the ready set.
+/// Returns `order` with `order[new_pos] = old_id`.
+fn random_topo_order(
+    rng: &mut Pcg,
+    n: usize,
+    pairs: &[(usize, usize)],
+) -> Vec<usize> {
+    let mut in_deg = vec![0usize; n];
+    for &(_, d) in pairs {
+        in_deg[d] += 1;
+    }
+    let mut ready: Vec<usize> =
+        (0..n).filter(|&i| in_deg[i] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while !ready.is_empty() {
+        let pick = rng.range_usize(0, ready.len() - 1);
+        let node = ready.swap_remove(pick);
+        order.push(node);
+        for &(s, d) in pairs {
+            if s == node {
+                in_deg[d] -= 1;
+                if in_deg[d] == 0 {
+                    ready.push(d);
+                }
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "graph was not a DAG");
+    order
+}
+
+#[test]
+fn prop_dag_evaluation_invariant_under_topological_order() {
+    // Tentpole invariant of the graph IR: evaluating a DAG workload
+    // depends only on the graph, not on which valid topological order
+    // the ops are stored in. Per-op costs must be bit-identical
+    // (matched by op name); the fused totals agree up to summation
+    // order.
+    forall(
+        30,
+        0xAB,
+        |rng| (rng.range_usize(3, 7), rng.next_u64()),
+        |&(n_ops, seed)| {
+            let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+            let topo = Topology::from_hw(&hw);
+            let mut rng = Pcg::seeded(seed);
+            let ops: Vec<GemmOp> = (0..n_ops)
+                .map(|i| {
+                    GemmOp::dense(
+                        &format!("op{i}"),
+                        rng.range_usize(16, 512),
+                        rng.range_usize(16, 512),
+                        rng.range_usize(16, 512),
+                    )
+                })
+                .collect();
+            // Random forward edges.
+            let mut pairs = Vec::new();
+            for d in 1..n_ops {
+                for s in 0..d {
+                    if rng.chance(0.35) {
+                        pairs.push((s, d));
+                    }
+                }
+            }
+            let wl = Workload::from_graph("dag", ops.clone(), &pairs);
+            let mut alloc = uniform_allocation(&hw, &wl);
+            for c in alloc.collect_cols.iter_mut() {
+                *c = rng.range_usize(0, 3);
+            }
+            let base = evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL);
+
+            // Re-store the same graph under a different topological
+            // order and re-evaluate.
+            let order = random_topo_order(&mut rng, n_ops, &pairs);
+            let mut inv = vec![0usize; n_ops];
+            for (new_pos, &old) in order.iter().enumerate() {
+                inv[old] = new_pos;
+            }
+            let perm_ops: Vec<GemmOp> =
+                order.iter().map(|&old| ops[old].clone()).collect();
+            let perm_pairs: Vec<(usize, usize)> =
+                pairs.iter().map(|&(s, d)| (inv[s], inv[d])).collect();
+            let wl2 = Workload::from_graph("dag2", perm_ops, &perm_pairs);
+            let mut alloc2 = uniform_allocation(&hw, &wl2);
+            for (new_pos, &old) in order.iter().enumerate() {
+                alloc2.parts[new_pos] = alloc.parts[old].clone();
+            }
+            // Carry each edge's collection gene across the re-sort.
+            use std::collections::HashMap;
+            let old_cols: HashMap<(usize, usize), usize> = wl
+                .edges
+                .iter()
+                .enumerate()
+                .map(|(e, edge)| ((edge.src, edge.dst), alloc.collect_cols[e]))
+                .collect();
+            for (e2, edge2) in wl2.edges.iter().enumerate() {
+                let old_key = (order[edge2.src], order[edge2.dst]);
+                alloc2.collect_cols[e2] = old_cols[&old_key];
+            }
+            let perm = evaluate(&hw, &topo, &wl2, &alloc2, OptFlags::ALL);
+
+            // Per-op costs: bit-identical, matched through the
+            // permutation.
+            for (old, op) in wl.ops.iter().enumerate() {
+                let a = &base.per_op[old];
+                let b = &perm.per_op[inv[old]];
+                prop_assert!(
+                    a.latency_ns.to_bits() == b.latency_ns.to_bits()
+                        && a.energy_pj.to_bits() == b.energy_pj.to_bits()
+                        && a.redistributed_in == b.redistributed_in,
+                    "op '{}' cost changed under reordering", op.name
+                );
+            }
+            // Totals: equal up to float summation order.
+            let rel = (base.latency_ns - perm.latency_ns).abs()
+                / base.latency_ns.max(1e-300);
+            prop_assert!(rel < 1e-9, "total latency drifted: rel={rel}");
+            let rel_e = (base.energy_pj - perm.energy_pj).abs()
+                / base.energy_pj.max(1e-300);
+            prop_assert!(rel_e < 1e-9, "total energy drifted: rel={rel_e}");
             Ok(())
         },
     );
