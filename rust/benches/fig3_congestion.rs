@@ -10,12 +10,14 @@ fn main() {
     assert_eq!(rows.len(), 6);
     bench("netsim/4x4_16pulls_hbm", Duration::from_secs(2), || {
         let (_, r) = mcmcomm::netsim::all_pull_from_memory(
-            4, 1e9, 60.0, 1024.0, Pos::new(0, 0), false);
+            4, 1e9, 60.0, 1024.0, Pos::new(0, 0), false)
+            .expect("mesh routes");
         black_box(r.makespan_ns);
     });
     bench("netsim/8x8_64pulls_hbm", Duration::from_secs(2), || {
         let (_, r) = mcmcomm::netsim::all_pull_from_memory(
-            8, 1e9, 60.0, 1024.0, Pos::new(0, 0), false);
+            8, 1e9, 60.0, 1024.0, Pos::new(0, 0), false)
+            .expect("mesh routes");
         black_box(r.makespan_ns);
     });
 }

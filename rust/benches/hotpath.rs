@@ -23,8 +23,8 @@ use mcmcomm::partition::{
     dim_bounds, project_to_sum, simba_allocation, uniform_allocation,
     Allocation,
 };
+use mcmcomm::platform::Platform;
 use mcmcomm::redistribution::redistribute;
-use mcmcomm::topology::Topology;
 use mcmcomm::util::bench::{bench, black_box, BenchStats};
 use mcmcomm::util::json::{obj, Json};
 use mcmcomm::util::rng::Pcg;
@@ -39,14 +39,14 @@ use mcmcomm::workload::Workload;
 // evaluator is measured against (ISSUE 2 acceptance: >= 3x on a GA
 // generation, population 48, AlexNet, 4x4).
 
-fn prepr_mutate(hw: &HwConfig, wl: &Workload, rng: &mut Pcg,
+fn prepr_mutate(plat: &Platform, wl: &Workload, rng: &mut Pcg,
                 a: &mut Allocation, times: usize) {
     for _ in 0..times {
         let i = rng.range_usize(0, wl.ops.len() - 1);
         let op = &wl.ops[i];
         match rng.range_usize(0, 2) {
             0 => {
-                let b = dim_bounds(op.m, hw.xdim, hw.r);
+                let b = dim_bounds(op.m, plat.xdim, plat.r);
                 let px = &mut a.parts[i].px;
                 let from = rng.range_usize(0, px.len() - 1);
                 let to = rng.range_usize(0, px.len() - 1);
@@ -58,7 +58,7 @@ fn prepr_mutate(hw: &HwConfig, wl: &Workload, rng: &mut Pcg,
                 }
             }
             1 => {
-                let b = dim_bounds(op.n, hw.ydim, hw.c);
+                let b = dim_bounds(op.n, plat.ydim, plat.c);
                 let py = &mut a.parts[i].py;
                 let from = rng.range_usize(0, py.len() - 1);
                 let to = rng.range_usize(0, py.len() - 1);
@@ -73,7 +73,7 @@ fn prepr_mutate(hw: &HwConfig, wl: &Workload, rng: &mut Pcg,
                 // Collection genes are per dataflow edge.
                 if !a.collect_cols.is_empty() {
                     let e = rng.range_usize(0, a.collect_cols.len() - 1);
-                    a.collect_cols[e] = rng.range_usize(0, hw.ydim - 1);
+                    a.collect_cols[e] = rng.range_usize(0, plat.ydim - 1);
                 }
             }
         }
@@ -96,12 +96,12 @@ fn prepr_crossover(wl: &Workload, rng: &mut Pcg, a: &Allocation,
     child
 }
 
-fn prepr_random_individual(hw: &HwConfig, wl: &Workload, rng: &mut Pcg)
+fn prepr_random_individual(plat: &Platform, wl: &Workload, rng: &mut Pcg)
                            -> Allocation {
-    let mut a = uniform_allocation(hw, wl);
+    let mut a = uniform_allocation(plat, wl);
     for (i, op) in wl.ops.iter().enumerate() {
-        let bx = dim_bounds(op.m, hw.xdim, hw.r);
-        let by = dim_bounds(op.n, hw.ydim, hw.c);
+        let bx = dim_bounds(op.m, plat.xdim, plat.r);
+        let by = dim_bounds(op.n, plat.ydim, plat.c);
         for v in a.parts[i].px.iter_mut() {
             let jitter = rng.range_i64(-2, 2) * bx.step as i64;
             *v = (*v as i64 + jitter).max(0) as usize;
@@ -114,27 +114,27 @@ fn prepr_random_individual(hw: &HwConfig, wl: &Workload, rng: &mut Pcg)
         project_to_sum(&mut a.parts[i].py, op.n, by);
     }
     for c in a.collect_cols.iter_mut() {
-        *c = rng.range_usize(0, hw.ydim - 1);
+        *c = rng.range_usize(0, plat.ydim - 1);
     }
     a
 }
 
-fn prepr_ga_evolve(hw: &HwConfig, topo: &Topology, wl: &Workload,
+fn prepr_ga_evolve(plat: &Platform, wl: &Workload,
                    flags: OptFlags, obj: Objective, params: &GaParams)
                    -> f64 {
     let fitness =
-        |a: &Allocation| evaluate(hw, topo, wl, a, flags).objective(obj);
+        |a: &Allocation| evaluate(plat, wl, a, flags).objective(obj);
     let mut rng = Pcg::seeded(params.seed);
     let mut pop: Vec<(Allocation, f64)> =
         Vec::with_capacity(params.population);
-    let uni = uniform_allocation(hw, wl);
+    let uni = uniform_allocation(plat, wl);
     let f = fitness(&uni);
     pop.push((uni, f));
-    let simba = simba_allocation(hw, topo, wl);
+    let simba = simba_allocation(plat, wl);
     let f = fitness(&simba);
     pop.push((simba, f));
     while pop.len() < params.population {
-        let ind = prepr_random_individual(hw, wl, &mut rng);
+        let ind = prepr_random_individual(plat, wl, &mut rng);
         let f = fitness(&ind);
         pop.push((ind, f));
     }
@@ -157,7 +157,7 @@ fn prepr_ga_evolve(hw: &HwConfig, topo: &Topology, wl: &Workload,
             let pb = pick(&mut rng);
             let mut child = prepr_crossover(wl, &mut rng, &pop[pa].0,
                                             &pop[pb].0, params.p_cross);
-            prepr_mutate(hw, wl, &mut rng, &mut child, params.mutations);
+            prepr_mutate(plat, wl, &mut rng, &mut child, params.mutations);
             let f = fitness(&child);
             next.push((child, f));
         }
@@ -193,13 +193,30 @@ fn main() {
     }
 
     let mut stats: Vec<BenchStats> = Vec::new();
+    let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
+
+    // Platform construction + hop-table build: the per-scenario setup
+    // cost the data-driven packaging redesign added (amortized over
+    // every evaluation of that scenario).
+    stats.push(bench("platform/build_4x4", Duration::from_secs(1), || {
+        black_box(
+            Platform::preset(SystemType::A, MemKind::Hbm, 4).num_chiplets(),
+        );
+    }));
+    stats.push(bench("platform/build_16x16", Duration::from_secs(1), || {
+        black_box(
+            Platform::preset(SystemType::B, MemKind::Hbm, 16).num_chiplets(),
+        );
+    }));
     let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
+    stats.push(bench("platform/from_hw_4x4", Duration::from_secs(1), || {
+        black_box(Platform::from_hw(&hw).num_chiplets());
+    }));
 
     let wl = alexnet(1);
-    let alloc = uniform_allocation(&hw, &wl);
+    let alloc = uniform_allocation(&plat, &wl);
     stats.push(bench("evaluate/alexnet_4x4", Duration::from_secs(2), || {
-        black_box(evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL).latency_ns);
+        black_box(evaluate(&plat, &wl, &alloc, OptFlags::ALL).latency_ns);
     }));
 
     // Scratch-reuse form: identical math, zero allocations once warm.
@@ -207,13 +224,13 @@ fn main() {
     let mut out = CostBreakdown::default();
     stats.push(bench("evaluate_into/alexnet_4x4", Duration::from_secs(2),
                      || {
-        evaluate_into(&hw, &topo, &wl, &alloc, OptFlags::ALL, &mut scratch,
+        evaluate_into(&plat, &wl, &alloc, OptFlags::ALL, &mut scratch,
                       &mut out);
         black_box(out.latency_ns);
     }));
 
     // Delta-cached form, fully warm: the GA steady-state upper bound.
-    let mut cache = CachedEval::new(&hw, &topo, &wl, OptFlags::ALL);
+    let mut cache = CachedEval::new(&plat, &wl, OptFlags::ALL);
     stats.push(bench("cached_eval/alexnet_4x4_warm", Duration::from_secs(2),
                      || {
         black_box(cache.objective(&alloc, Objective::Latency));
@@ -230,17 +247,16 @@ fn main() {
     }));
 
     let wlv = vit(1);
-    let allocv = uniform_allocation(&hw, &wlv);
+    let allocv = uniform_allocation(&plat, &wlv);
     stats.push(bench("evaluate/vit_4x4", Duration::from_secs(2), || {
-        black_box(evaluate(&hw, &topo, &wlv, &allocv, OptFlags::ALL).latency_ns);
+        black_box(evaluate(&plat, &wlv, &allocv, OptFlags::ALL).latency_ns);
     }));
 
-    let hw16 = HwConfig::paper(SystemType::A, MemKind::Hbm, 16);
-    let topo16 = Topology::from_hw(&hw16);
-    let alloc16 = uniform_allocation(&hw16, &wl);
+    let plat16 = Platform::preset(SystemType::A, MemKind::Hbm, 16);
+    let alloc16 = uniform_allocation(&plat16, &wl);
     stats.push(bench("evaluate/alexnet_16x16", Duration::from_secs(2), || {
         black_box(
-            evaluate(&hw16, &topo16, &wl, &alloc16, OptFlags::ALL).latency_ns,
+            evaluate(&plat16, &wl, &alloc16, OptFlags::ALL).latency_ns,
         );
     }));
 
@@ -256,13 +272,13 @@ fn main() {
     };
     stats.push(bench("ga/evolve_pop48_gen6_prepr_seq",
                      Duration::from_secs(3), || {
-        black_box(prepr_ga_evolve(&hw, &topo, &wl, OptFlags::ALL,
+        black_box(prepr_ga_evolve(&plat, &wl, OptFlags::ALL,
                                   Objective::Latency, &ga_params(1)));
     }));
     stats.push(bench("ga/evolve_pop48_gen6_cached_seq",
                      Duration::from_secs(3), || {
         black_box(
-            ga::optimize(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency,
+            ga::optimize(&plat, &wl, OptFlags::ALL, Objective::Latency,
                          &ga_params(1))
             .objective_value,
         );
@@ -270,7 +286,7 @@ fn main() {
     stats.push(bench("ga/evolve_pop48_gen6_cached_par",
                      Duration::from_secs(3), || {
         black_box(
-            ga::optimize(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency,
+            ga::optimize(&plat, &wl, OptFlags::ALL, Objective::Latency,
                          &ga_params(0))
             .objective_value,
         );
@@ -302,7 +318,7 @@ fn main() {
         black_box(rows.len());
     }));
 
-    let f = build(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency);
+    let f = build(&plat, &wl, OptFlags::ALL, Objective::Latency);
     let point: Vec<f64> =
         (0..f.model.dim()).map(|i| (i % 5) as f64 * 16.0 + 16.0).collect();
     stats.push(bench("miqp/surrogate_eval", Duration::from_secs(2), || {
@@ -314,7 +330,7 @@ fn main() {
 
     let op = &wl.ops[1];
     stats.push(bench("redistribution/3step", Duration::from_secs(1), || {
-        black_box(redistribute(&hw, op, &alloc.parts[1], &alloc.parts[2], 2)
+        black_box(redistribute(&plat, op, &alloc.parts[1], &alloc.parts[2], 2)
             .total_ns());
     }));
 

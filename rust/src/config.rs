@@ -83,7 +83,7 @@ impl MemKind {
 }
 
 /// Energy coefficients (Table 2).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EnergyParams {
     /// NoP link energy, pJ per bit per hop.
     pub nop_pj_bit_hop: f64,
@@ -103,8 +103,14 @@ impl Default for EnergyParams {
     }
 }
 
-/// The full hardware configuration `HW = {BW_nop, BW_mem, X, Y, R, C,
-/// type}` (§4.2.1) plus modeling constants.
+/// The paper's hardware tuple `HW = {BW_nop, BW_mem, X, Y, R, C, type}`
+/// (§4.2.1) plus modeling constants.
+///
+/// Since the platform redesign this type survives only as a thin,
+/// ergonomic *constructor* onto [`crate::platform::Platform`] — the
+/// engine, cost stack, and optimizers all consume `Platform` (which
+/// describes packaging as data: attachment sets + link classes +
+/// precomputed hop tables) rather than matching on [`SystemType`].
 #[derive(Debug, Clone)]
 pub struct HwConfig {
     pub ty: SystemType,
@@ -162,6 +168,13 @@ impl HwConfig {
     /// Element count -> bytes.
     pub fn bytes(&self, elems: usize) -> f64 {
         elems as f64 * self.bytes_per_elem
+    }
+
+    /// Expand this description into a full [`crate::platform::Platform`]
+    /// (validates, places the packaging-type attachment set, and builds
+    /// the hop tables).
+    pub fn platform(&self) -> Result<crate::platform::Platform, String> {
+        crate::platform::Platform::try_from_hw(self)
     }
 
     pub fn validate(&self) -> Result<(), String> {

@@ -9,12 +9,11 @@
 //! ([`Scenario`], [`Plan`]) pair; [`Executor::new`] remains the
 //! low-level borrowed-parts constructor.
 
-use crate::config::HwConfig;
 use crate::cost::evaluator::{CostBreakdown, OptFlags};
 use crate::engine::{Plan, Scenario};
 use crate::partition::Allocation;
+use crate::platform::Platform;
 use crate::runtime::pjrt::{reference_gemm, GemmRuntime};
-use crate::topology::Topology;
 use crate::util::error::{Context, Result};
 use crate::util::rng::Pcg;
 use crate::workload::Workload;
@@ -64,11 +63,10 @@ pub fn reshape_wrap(
     (0..rows1 * cols1).map(|i| src[i % n]).collect()
 }
 
-/// The executor: owns the runtime + plan for one (hw, workload,
+/// The executor: owns the runtime + plan for one (platform, workload,
 /// allocation) triple.
 pub struct Executor<'a> {
-    pub hw: &'a HwConfig,
-    pub topo: &'a Topology,
+    pub plat: &'a Platform,
     pub wl: &'a Workload,
     pub alloc: &'a Allocation,
     pub flags: OptFlags,
@@ -79,15 +77,14 @@ pub struct Executor<'a> {
 impl<'a> Executor<'a> {
     /// Low-level constructor from borrowed parts.
     pub fn new(
-        hw: &'a HwConfig,
-        topo: &'a Topology,
+        plat: &'a Platform,
         wl: &'a Workload,
         alloc: &'a Allocation,
         flags: OptFlags,
         runtime: &'a GemmRuntime,
     ) -> Self {
-        let plan = build_plan(hw, wl, alloc);
-        Executor { hw, topo, wl, alloc, flags, plan, runtime }
+        let plan = build_plan(plat, wl, alloc);
+        Executor { plat, wl, alloc, flags, plan, runtime }
     }
 
     /// Engine front door: execute a scheduled [`Plan`] on its
@@ -98,8 +95,7 @@ impl<'a> Executor<'a> {
         runtime: &'a GemmRuntime,
     ) -> Self {
         Executor::new(
-            scenario.hw(),
-            scenario.topo(),
+            scenario.platform(),
             scenario.workload(),
             &plan.alloc,
             plan.flags,
@@ -211,7 +207,7 @@ impl<'a> Executor<'a> {
         let output = outputs.pop().unwrap_or_default();
 
         let modeled = crate::engine::modeled_breakdown(
-            self.hw, self.topo, self.wl, self.alloc, self.flags,
+            self.plat, self.wl, self.alloc, self.flags,
         );
         let chunks1 = self
             .runtime

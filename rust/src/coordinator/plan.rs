@@ -1,8 +1,8 @@
 //! Execution plan: the bridge from an optimized [`Allocation`] to
 //! concrete per-chiplet GEMM chunks the runtime executes.
 
-use crate::config::HwConfig;
 use crate::partition::Allocation;
+use crate::platform::Platform;
 use crate::workload::Workload;
 
 /// One chiplet's share of one op: a rectangle of the output matrix.
@@ -45,23 +45,23 @@ pub struct ExecutionPlan {
 }
 
 /// Turn partition prefix sums into chunk rectangles.
-pub fn build_plan(hw: &HwConfig, wl: &Workload, alloc: &Allocation)
+pub fn build_plan(plat: &Platform, wl: &Workload, alloc: &Allocation)
                   -> ExecutionPlan {
-    debug_assert!(alloc.validate(wl, hw).is_ok());
+    debug_assert!(alloc.validate(wl, plat).is_ok());
     let mut per_op = Vec::with_capacity(wl.ops.len());
     for (i, _op) in wl.ops.iter().enumerate() {
         let part = &alloc.parts[i];
-        let mut row_off = vec![0usize; hw.xdim + 1];
-        for x in 0..hw.xdim {
+        let mut row_off = vec![0usize; plat.xdim + 1];
+        for x in 0..plat.xdim {
             row_off[x + 1] = row_off[x] + part.px[x];
         }
-        let mut col_off = vec![0usize; hw.ydim + 1];
-        for y in 0..hw.ydim {
+        let mut col_off = vec![0usize; plat.ydim + 1];
+        for y in 0..plat.ydim {
             col_off[y + 1] = col_off[y] + part.py[y];
         }
-        let mut chunks = Vec::with_capacity(hw.num_chiplets());
-        for x in 0..hw.xdim {
-            for y in 0..hw.ydim {
+        let mut chunks = Vec::with_capacity(plat.num_chiplets());
+        for x in 0..plat.xdim {
+            for y in 0..plat.ydim {
                 chunks.push(Chunk {
                     chiplet: (x, y),
                     row0: row_off[x],
@@ -85,10 +85,12 @@ mod tests {
 
     #[test]
     fn chunks_tile_the_output_exactly() {
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+        let plat = crate::platform::Platform::preset(
+            SystemType::A, MemKind::Hbm, 4,
+        );
         let wl = alexnet(1);
-        let alloc = uniform_allocation(&hw, &wl);
-        let plan = build_plan(&hw, &wl, &alloc);
+        let alloc = uniform_allocation(&plat, &wl);
+        let plan = build_plan(&plat, &wl, &alloc);
         for (op, p) in wl.ops.iter().zip(&plan.per_op) {
             assert_eq!(p.chunks.len(), 16);
             // Row/col coverage without overlap.
@@ -103,14 +105,16 @@ mod tests {
 
     #[test]
     fn skewed_partition_yields_empty_chunks() {
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+        let plat = crate::platform::Platform::preset(
+            SystemType::A, MemKind::Hbm, 4,
+        );
         let wl = crate::workload::Workload::new(
             "w",
             vec![crate::workload::GemmOp::dense("a", 10, 16, 10)],
         );
-        let mut alloc = uniform_allocation(&hw, &wl);
+        let mut alloc = uniform_allocation(&plat, &wl);
         alloc.parts[0].px = vec![10, 0, 0, 0];
-        let plan = build_plan(&hw, &wl, &alloc);
+        let plan = build_plan(&plat, &wl, &alloc);
         let empties =
             plan.per_op[0].chunks.iter().filter(|c| c.is_empty()).count();
         assert_eq!(empties, 12); // 3 idle rows x 4 cols

@@ -9,12 +9,12 @@
 //! still occupies the full array — exactly the under-utilization the
 //! paper's min-partition constraint avoids).
 
-use crate::config::HwConfig;
+use crate::platform::Platform;
 use crate::util::math::ceil_div;
 use crate::workload::GemmOp;
 
 /// Cycles for one chiplet computing a (px x py) output chunk of `op`.
-pub fn comp_cycles(hw: &HwConfig, op: &GemmOp, px: usize, py: usize) -> f64 {
+pub fn comp_cycles(plat: &Platform, op: &GemmOp, px: usize, py: usize) -> f64 {
     if px == 0 || py == 0 {
         return 0.0;
     }
@@ -22,14 +22,14 @@ pub fn comp_cycles(hw: &HwConfig, op: &GemmOp, px: usize, py: usize) -> f64 {
     // K/groups; the fill/drain overhead is paid per group.
     let g = op.groups.max(1);
     let k_per = ceil_div(op.k, g);
-    let tile_cycles = (2 * hw.r + hw.c + k_per).saturating_sub(2) as f64;
-    let tiles = (ceil_div(px, hw.r) * ceil_div(py, hw.c)) as f64;
+    let tile_cycles = (2 * plat.r + plat.c + k_per).saturating_sub(2) as f64;
+    let tiles = (ceil_div(px, plat.r) * ceil_div(py, plat.c)) as f64;
     g as f64 * tile_cycles * tiles
 }
 
 /// Nanoseconds for the same chunk.
-pub fn comp_ns(hw: &HwConfig, op: &GemmOp, px: usize, py: usize) -> f64 {
-    hw.cycles_to_ns(comp_cycles(hw, op, px, py))
+pub fn comp_ns(plat: &Platform, op: &GemmOp, px: usize, py: usize) -> f64 {
+    plat.cycles_to_ns(comp_cycles(plat, op, px, py))
 }
 
 #[cfg(test)]
@@ -37,23 +37,23 @@ mod tests {
     use super::*;
     use crate::config::{MemKind, SystemType};
 
-    fn hw() -> HwConfig {
-        HwConfig::paper(SystemType::A, MemKind::Hbm, 4) // R=C=16
+    fn plat() -> Platform {
+        Platform::preset(SystemType::A, MemKind::Hbm, 4) // R=C=16
     }
 
     #[test]
     fn eq7_single_tile() {
         // (2*16 + 16 + K - 2) * 1 * 1 with K = 64.
         let op = GemmOp::dense("x", 16, 64, 16);
-        assert_eq!(comp_cycles(&hw(), &op, 16, 16), (32 + 16 + 64 - 2) as f64);
+        assert_eq!(comp_cycles(&plat(), &op, 16, 16), (32 + 16 + 64 - 2) as f64);
     }
 
     #[test]
     fn eq7_tile_scaling() {
         let op = GemmOp::dense("x", 64, 32, 64);
-        let one = comp_cycles(&hw(), &op, 16, 16);
-        assert_eq!(comp_cycles(&hw(), &op, 32, 32), 4.0 * one);
-        assert_eq!(comp_cycles(&hw(), &op, 64, 16), 4.0 * one);
+        let one = comp_cycles(&plat(), &op, 16, 16);
+        assert_eq!(comp_cycles(&plat(), &op, 32, 32), 4.0 * one);
+        assert_eq!(comp_cycles(&plat(), &op, 64, 16), 4.0 * one);
     }
 
     #[test]
@@ -61,34 +61,36 @@ mod tests {
         let op = GemmOp::dense("x", 40, 32, 40);
         // 17 rows -> 2 row tiles, same as 32 rows.
         assert_eq!(
-            comp_cycles(&hw(), &op, 17, 16),
-            comp_cycles(&hw(), &op, 32, 16)
+            comp_cycles(&plat(), &op, 17, 16),
+            comp_cycles(&plat(), &op, 32, 16)
         );
     }
 
     #[test]
     fn zero_chunk_is_free() {
         let op = GemmOp::dense("x", 16, 16, 16);
-        assert_eq!(comp_cycles(&hw(), &op, 0, 16), 0.0);
+        assert_eq!(comp_cycles(&plat(), &op, 0, 16), 0.0);
     }
 
     #[test]
     fn grouped_pays_fill_drain_per_group() {
-        let h = hw();
+        let p = plat();
         let plain = GemmOp::dense("x", 16, 128, 16);
         let grouped = GemmOp::dense("x", 16, 128, 16).grouped(4);
         // Same MAC count, more fill/drain overhead.
         assert!(
-            comp_cycles(&h, &grouped, 16, 16) > comp_cycles(&h, &plain, 16, 16)
+            comp_cycles(&p, &grouped, 16, 16) > comp_cycles(&p, &plain, 16, 16)
         );
     }
 
     #[test]
     fn ns_uses_clock() {
-        let mut h = hw();
+        let p = plat();
         let op = GemmOp::dense("x", 16, 16, 16);
-        let base = comp_ns(&h, &op, 16, 16);
-        h.freq_ghz = 2.0;
-        assert!((comp_ns(&h, &op, 16, 16) - base / 2.0).abs() < 1e-9);
+        let base = comp_ns(&p, &op, 16, 16);
+        let mut spec = p.spec().clone();
+        spec.freq_ghz = 2.0;
+        let fast = Platform::new(spec).unwrap();
+        assert!((comp_ns(&fast, &op, 16, 16) - base / 2.0).abs() < 1e-9);
     }
 }

@@ -2,76 +2,74 @@
 //! transfer energy, and hop-weighted NoP transfer energy. EDP is the
 //! product of total energy and the end-to-end latency (§4.4 intro).
 
-use crate::config::HwConfig;
-use crate::partition::Partition;
-use crate::topology::{Pos, Topology};
-use crate::workload::GemmOp;
 use super::compute::comp_cycles;
+use crate::partition::Partition;
+use crate::platform::Platform;
+use crate::topology::Pos;
+use crate::workload::GemmOp;
 
 /// §4.4.1 — computation energy over all chiplets for one op:
 /// `c_SRAM * bits(inp+filt+out) + c_MAC * cycles * R * C` summed
 /// per chiplet (the paper's `(X*Y)` factor distributed over the actual
 /// per-chiplet cycle counts, so non-uniform partitions are credited).
-pub fn comp_energy_pj(hw: &HwConfig, op: &GemmOp, part: &Partition) -> f64 {
+pub fn comp_energy_pj(plat: &Platform, op: &GemmOp, part: &Partition) -> f64 {
     let mut pj = 0.0;
     for &px in &part.px {
         for &py in &part.py {
             let (inp, filt, out) =
                 (px * op.k, op.k * py, px * py);
-            let bits = hw.bytes(inp + filt + out) * 8.0;
-            pj += hw.energy.sram_pj_bit * bits;
-            pj += hw.energy.mac_pj_cycle
-                * comp_cycles(hw, op, px, py)
-                * (hw.r * hw.c) as f64;
+            let bits = plat.bytes(inp + filt + out) * 8.0;
+            pj += plat.energy.sram_pj_bit * bits;
+            pj += plat.energy.mac_pj_cycle
+                * comp_cycles(plat, op, px, py)
+                * (plat.r * plat.c) as f64;
         }
     }
     pj
 }
 
 /// §4.4.2 — off-chip transfer energy: `c_offchip * sizeof(data)`.
-pub fn offchip_energy_pj(hw: &HwConfig, bytes: f64) -> f64 {
-    hw.mem.energy_pj_per_bit() * bytes * 8.0
+pub fn offchip_energy_pj(plat: &Platform, bytes: f64) -> f64 {
+    plat.mem_pj_bit * bytes * 8.0
 }
 
 /// §4.4.3 — on-chip (NoP) energy for distributing one op's inputs:
 /// `c_NoP * sizeof(data) * hops` per chiplet chunk, hop counts from the
 /// actual traversed path (diagonals shorten it).
 pub fn load_energy_pj(
-    hw: &HwConfig,
-    topo: &Topology,
+    plat: &Platform,
     op: &GemmOp,
     part: &Partition,
     diagonal: bool,
     load_acts: bool,
 ) -> f64 {
     let mut pj = 0.0;
-    for p in topo.positions() {
+    for p in plat.positions() {
         let Pos { row: x, col: y } = p;
-        let hops = topo.hops_energy(p, diagonal) as f64;
-        let mut bytes = hw.bytes(op.k * part.py[y]);
+        let hops = plat.hops_energy(p, diagonal) as f64;
+        let mut bytes = plat.bytes(op.k * part.py[y]);
         if load_acts {
-            bytes += hw.bytes(part.px[x] * op.k);
+            bytes += plat.bytes(part.px[x] * op.k);
         }
-        pj += hw.energy.nop_pj_bit_hop * bytes * 8.0 * hops;
+        pj += plat.energy.nop_pj_bit_hop * bytes * 8.0 * hops;
     }
     pj
 }
 
 /// §4.4.3 applied to output collection (offload step 1): each chunk
-/// travels from its chiplet to the serving global chiplet.
+/// travels from its chiplet to the serving attachment chiplet.
 pub fn collect_energy_pj(
-    hw: &HwConfig,
-    topo: &Topology,
+    plat: &Platform,
     _op: &GemmOp,
     part: &Partition,
     diagonal: bool,
 ) -> f64 {
     let mut pj = 0.0;
-    for p in topo.positions() {
+    for p in plat.positions() {
         let Pos { row: x, col: y } = p;
-        let hops = topo.hops_energy(p, diagonal) as f64;
-        let bytes = hw.bytes(part.px[x] * part.py[y]);
-        pj += hw.energy.nop_pj_bit_hop * bytes * 8.0 * hops;
+        let hops = plat.hops_energy(p, diagonal) as f64;
+        let bytes = plat.bytes(part.px[x] * part.py[y]);
+        pj += plat.energy.nop_pj_bit_hop * bytes * 8.0 * hops;
     }
     pj
 }
@@ -82,18 +80,16 @@ mod tests {
     use crate::config::{MemKind, SystemType};
     use crate::partition::uniform;
 
-    fn setup() -> (HwConfig, Topology) {
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-        let topo = Topology::from_hw(&hw);
-        (hw, topo)
+    fn setup() -> Platform {
+        Platform::preset(SystemType::A, MemKind::Hbm, 4)
     }
 
     #[test]
     fn comp_energy_components() {
-        let (hw, _) = setup();
+        let plat = setup();
         let op = GemmOp::dense("x", 64, 64, 64);
-        let part = uniform(&hw, &op);
-        let pj = comp_energy_pj(&hw, &op, &part);
+        let part = uniform(&plat, &op);
+        let pj = comp_energy_pj(&plat, &op, &part);
         assert!(pj > 0.0);
         // MAC term alone is a lower bound.
         let mac_only: f64 = part
@@ -103,7 +99,8 @@ mod tests {
                 part.py.iter().map(move |&py| (px, py))
             })
             .map(|(px, py)| {
-                hw.energy.mac_pj_cycle * comp_cycles(&hw, &op, px, py) * 256.0
+                plat.energy.mac_pj_cycle * comp_cycles(&plat, &op, px, py)
+                    * 256.0
             })
             .sum();
         assert!(pj > mac_only);
@@ -111,29 +108,27 @@ mod tests {
 
     #[test]
     fn dram_costs_more_than_hbm_per_byte() {
-        let (mut hw, _) = setup();
-        let hbm = offchip_energy_pj(&hw, 1000.0);
-        hw.mem = MemKind::Dram;
-        let dram = offchip_energy_pj(&hw, 1000.0);
+        let hbm = offchip_energy_pj(&setup(), 1000.0);
+        let plat_d = Platform::preset(SystemType::A, MemKind::Dram, 4);
+        let dram = offchip_energy_pj(&plat_d, 1000.0);
         assert!(dram > hbm * 3.0);
     }
 
     #[test]
     fn diagonal_cuts_nop_energy() {
-        let (hw, topo) = setup();
+        let plat = setup();
         let op = GemmOp::dense("x", 512, 128, 512);
-        let part = uniform(&hw, &op);
-        let base = load_energy_pj(&hw, &topo, &op, &part, false, true);
-        let diag = load_energy_pj(&hw, &topo, &op, &part, true, true);
+        let part = uniform(&plat, &op);
+        let base = load_energy_pj(&plat, &op, &part, false, true);
+        let diag = load_energy_pj(&plat, &op, &part, true, true);
         assert!(diag < base);
     }
 
     #[test]
     fn collect_energy_zero_for_type_c() {
-        let hw = HwConfig::paper(SystemType::C, MemKind::Hbm, 4);
-        let topo = Topology::from_hw(&hw);
+        let plat = Platform::preset(SystemType::C, MemKind::Hbm, 4);
         let op = GemmOp::dense("x", 512, 128, 512);
-        let part = uniform(&hw, &op);
-        assert_eq!(collect_energy_pj(&hw, &topo, &op, &part, false), 0.0);
+        let part = uniform(&plat, &op);
+        assert_eq!(collect_energy_pj(&plat, &op, &part, false), 0.0);
     }
 }

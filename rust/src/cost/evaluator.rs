@@ -3,12 +3,12 @@
 //! with the co-optimizations of §5 toggled by [`OptFlags`]. This is the
 //! single source of truth scored by the GA, re-scored after MIQP, driven
 //! by the figure harnesses, and used by the coordinator's simulated
-//! clock.
+//! clock. Packaging enters exclusively through the [`Platform`] hop
+//! tables, so arbitrary memory layouts cost identically to presets.
 
-use crate::config::HwConfig;
 use crate::partition::{Allocation, Partition};
+use crate::platform::Platform;
 use crate::redistribution::{redistribute, RedistCost};
-use crate::topology::Topology;
 use crate::workload::{GemmOp, Workload};
 
 use super::compute::comp_ns;
@@ -84,7 +84,7 @@ impl CostBreakdown {
     }
 }
 
-/// Evaluate `alloc` for `wl` on `hw` under `flags` (eqs. 3–5).
+/// Evaluate `alloc` for `wl` on `plat` under `flags` (eqs. 3–5).
 ///
 /// LS scheduling: ops run in sequence. Per op the stages are
 /// `in → comp → out`; §5.3 async fusion merges in+comp per chiplet when
@@ -93,15 +93,14 @@ impl CostBreakdown {
 /// activation load whenever it is the cheaper strategy ("adaptive
 /// communication strategy", §6.1).
 pub fn evaluate(
-    hw: &HwConfig,
-    topo: &Topology,
+    plat: &Platform,
     wl: &Workload,
     alloc: &Allocation,
     flags: OptFlags,
 ) -> CostBreakdown {
     let mut scratch = EvalScratch::default();
     let mut out = CostBreakdown::default();
-    evaluate_into(hw, topo, wl, alloc, flags, &mut scratch, &mut out);
+    evaluate_into(plat, wl, alloc, flags, &mut scratch, &mut out);
     out
 }
 
@@ -110,8 +109,7 @@ pub fn evaluate(
 /// allocate nothing (§Perf). Results are bit-identical to [`evaluate`]
 /// (which is now a thin wrapper over this function).
 pub fn evaluate_into(
-    hw: &HwConfig,
-    topo: &Topology,
+    plat: &Platform,
     wl: &Workload,
     alloc: &Allocation,
     flags: OptFlags,
@@ -147,8 +145,7 @@ pub fn evaluate_into(
                 continue;
             }
             if let Some(r) = edge_decision(
-                hw,
-                topo,
+                plat,
                 &wl.ops[edge.src],
                 &wl.ops[edge.dst],
                 &alloc.parts[edge.src],
@@ -180,7 +177,7 @@ pub fn evaluate_into(
             None
         };
         let terms = op_terms(
-            hw, topo, op, part, flags, acts_from_redist, skip_store,
+            plat, op, part, flags, acts_from_redist, skip_store,
             &mut scratch.bufs,
         );
         let oc =
@@ -217,8 +214,7 @@ pub(crate) struct OpTerms {
 /// cache's miss path). Uses `bufs.in_cost` / `bufs.comp_per` only.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn op_terms(
-    hw: &HwConfig,
-    topo: &Topology,
+    plat: &Platform,
     op: &GemmOp,
     part: &Partition,
     flags: OptFlags,
@@ -227,14 +223,14 @@ pub(crate) fn op_terms(
     bufs: &mut super::scratch::TermBufs,
 ) -> OpTerms {
     // ---- input stage
-    load_into(hw, topo, op, part, flags.diagonal, !acts_from_redist,
+    load_into(plat, op, part, flags.diagonal, !acts_from_redist,
               &mut bufs.in_cost);
 
     // ---- compute stage (per chiplet, row-major)
     bufs.comp_per.clear();
-    for x in 0..hw.xdim {
-        for y in 0..hw.ydim {
-            bufs.comp_per.push(comp_ns(hw, op, part.px[x], part.py[y]));
+    for x in 0..plat.xdim {
+        for y in 0..plat.ydim {
+            bufs.comp_per.push(comp_ns(plat, op, part.px[x], part.py[y]));
         }
     }
     let comp_max = bufs.comp_per.iter().copied().fold(0.0, f64::max);
@@ -250,21 +246,21 @@ pub(crate) fn op_terms(
     };
 
     // ---- output stage (value unused when the store is skipped)
-    let store_ns = offload_wall_ns(hw, topo, op, flags.diagonal);
+    let store_ns = offload_wall_ns(plat, op, flags.diagonal);
 
     // ---- energy
-    let mut pj = comp_energy_pj(hw, op, part);
+    let mut pj = comp_energy_pj(plat, op, part);
     // Off-chip: weights always; activations only when loaded.
-    let mut off_bytes = hw.bytes(op.k * op.n);
+    let mut off_bytes = plat.bytes(op.k * op.n);
     if !acts_from_redist {
-        off_bytes += hw.bytes(op.m * op.k);
+        off_bytes += plat.bytes(op.m * op.k);
     }
     if !skip_store {
-        off_bytes += hw.bytes(op.m * op.n);
-        pj += collect_energy_pj(hw, topo, op, part, flags.diagonal);
+        off_bytes += plat.bytes(op.m * op.n);
+        pj += collect_energy_pj(plat, op, part, flags.diagonal);
     }
-    pj += offchip_energy_pj(hw, off_bytes);
-    pj += load_energy_pj(hw, topo, op, part, flags.diagonal,
+    pj += offchip_energy_pj(plat, off_bytes);
+    pj += load_energy_pj(plat, op, part, flags.diagonal,
                          !acts_from_redist);
 
     OpTerms {
@@ -318,8 +314,7 @@ pub(crate) fn compose_op(
 /// miss path.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn edge_decision(
-    hw: &HwConfig,
-    topo: &Topology,
+    plat: &Platform,
     producer: &GemmOp,
     consumer: &GemmOp,
     producer_part: &Partition,
@@ -328,12 +323,11 @@ pub(crate) fn edge_decision(
     diagonal: bool,
     bufs: &mut super::scratch::TermBufs,
 ) -> Option<RedistCost> {
-    let r = redistribute(hw, producer, producer_part, consumer_part,
+    let r = redistribute(plat, producer, producer_part, consumer_part,
                          collect_col);
-    let store_wall = offload_wall_ns(hw, topo, producer, diagonal);
+    let store_wall = offload_wall_ns(plat, producer, diagonal);
     let act_load_extra =
-        act_load_extra_ns(hw, topo, consumer, consumer_part, diagonal,
-                          bufs);
+        act_load_extra_ns(plat, consumer, consumer_part, diagonal, bufs);
     // Adopt redistribution when it beats the memory round-trip.
     if r.total_ns() < store_wall + act_load_extra {
         Some(r)
@@ -346,17 +340,16 @@ pub(crate) fn edge_decision(
 /// minus weights-only load. What a producer's redistribution saves the
 /// consumer (§5.2).
 pub(crate) fn act_load_extra_ns(
-    hw: &HwConfig,
-    topo: &Topology,
+    plat: &Platform,
     consumer: &GemmOp,
     consumer_part: &Partition,
     diagonal: bool,
     bufs: &mut super::scratch::TermBufs,
 ) -> f64 {
-    load_into(hw, topo, consumer, consumer_part, diagonal, true,
+    load_into(plat, consumer, consumer_part, diagonal, true,
               &mut bufs.in_cost);
     let full = bufs.in_cost.wall_ns();
-    load_into(hw, topo, consumer, consumer_part, diagonal, false,
+    load_into(plat, consumer, consumer_part, diagonal, false,
               &mut bufs.in_cost);
     let wonly = bufs.in_cost.wall_ns();
     full - wonly
@@ -370,18 +363,16 @@ mod tests {
     use crate::workload::models::alexnet;
     use crate::workload::{GemmOp, Workload};
 
-    fn setup(mem: MemKind) -> (HwConfig, Topology) {
-        let hw = HwConfig::paper(SystemType::A, mem, 4);
-        let topo = Topology::from_hw(&hw);
-        (hw, topo)
+    fn setup(mem: MemKind) -> Platform {
+        Platform::preset(SystemType::A, mem, 4)
     }
 
     #[test]
     fn cost_is_positive_and_additive() {
-        let (hw, topo) = setup(MemKind::Hbm);
+        let plat = setup(MemKind::Hbm);
         let wl = alexnet(1);
-        let alloc = uniform_allocation(&hw, &wl);
-        let c = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
+        let alloc = uniform_allocation(&plat, &wl);
+        let c = evaluate(&plat, &wl, &alloc, OptFlags::NONE);
         assert!(c.latency_ns > 0.0 && c.energy_pj > 0.0);
         let sum: f64 = c.per_op.iter().map(|o| o.latency_ns).sum();
         assert!((sum - c.latency_ns).abs() < 1e-6);
@@ -390,11 +381,11 @@ mod tests {
 
     #[test]
     fn optimizations_never_hurt_latency() {
-        let (hw, topo) = setup(MemKind::Hbm);
+        let plat = setup(MemKind::Hbm);
         for wl in crate::workload::models::evaluation_suite(1) {
-            let alloc = uniform_allocation(&hw, &wl);
-            let base = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
-            let opt = evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL);
+            let alloc = uniform_allocation(&plat, &wl);
+            let base = evaluate(&plat, &wl, &alloc, OptFlags::NONE);
+            let opt = evaluate(&plat, &wl, &alloc, OptFlags::ALL);
             assert!(
                 opt.latency_ns <= base.latency_ns * 1.0001,
                 "{}: opt {} > base {}",
@@ -407,10 +398,10 @@ mod tests {
 
     #[test]
     fn redistribution_fires_on_alexnet_hbm() {
-        let (hw, topo) = setup(MemKind::Hbm);
+        let plat = setup(MemKind::Hbm);
         let wl = alexnet(1);
-        let alloc = uniform_allocation(&hw, &wl);
-        let c = evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL);
+        let alloc = uniform_allocation(&plat, &wl);
+        let c = evaluate(&plat, &wl, &alloc, OptFlags::ALL);
         let n_redist =
             c.per_op.iter().filter(|o| o.redistributed_in).count();
         assert!(n_redist >= 4, "only {n_redist} redistributed inputs");
@@ -418,10 +409,10 @@ mod tests {
 
     #[test]
     fn edp_is_product() {
-        let (hw, topo) = setup(MemKind::Dram);
+        let plat = setup(MemKind::Dram);
         let wl = alexnet(1);
-        let alloc = uniform_allocation(&hw, &wl);
-        let c = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
+        let alloc = uniform_allocation(&plat, &wl);
+        let c = evaluate(&plat, &wl, &alloc, OptFlags::NONE);
         assert!((c.edp() - c.latency_ns * c.energy_pj).abs() < 1.0);
         assert_eq!(c.objective(Objective::Latency), c.latency_ns);
         assert_eq!(c.objective(Objective::Edp), c.edp());
@@ -430,25 +421,25 @@ mod tests {
     #[test]
     fn dram_slower_than_hbm() {
         let wl = alexnet(1);
-        let (hw_h, topo_h) = setup(MemKind::Hbm);
-        let (hw_d, topo_d) = setup(MemKind::Dram);
-        let a_h = uniform_allocation(&hw_h, &wl);
-        let c_h = evaluate(&hw_h, &topo_h, &wl, &a_h, OptFlags::NONE);
-        let c_d = evaluate(&hw_d, &topo_d, &wl, &a_h, OptFlags::NONE);
+        let plat_h = setup(MemKind::Hbm);
+        let plat_d = setup(MemKind::Dram);
+        let a_h = uniform_allocation(&plat_h, &wl);
+        let c_h = evaluate(&plat_h, &wl, &a_h, OptFlags::NONE);
+        let c_d = evaluate(&plat_d, &wl, &a_h, OptFlags::NONE);
         assert!(c_d.latency_ns > c_h.latency_ns);
     }
 
     #[test]
     fn async_fusion_helps_skewed_partitions() {
-        let (hw, topo) = setup(MemKind::Hbm);
+        let plat = setup(MemKind::Hbm);
         let wl = Workload::new(
             "w",
             vec![GemmOp::dense("a", 4096, 512, 4096)],
         );
-        let alloc = uniform_allocation(&hw, &wl);
-        let sync = evaluate(&hw, &topo, &wl, &alloc,
+        let alloc = uniform_allocation(&plat, &wl);
+        let sync = evaluate(&plat, &wl, &alloc,
                             OptFlags { async_fusion: false, ..OptFlags::NONE });
-        let asyn = evaluate(&hw, &topo, &wl, &alloc,
+        let asyn = evaluate(&plat, &wl, &alloc,
                             OptFlags { async_fusion: true, ..OptFlags::NONE });
         assert!(asyn.latency_ns <= sync.latency_ns);
     }
@@ -457,19 +448,19 @@ mod tests {
     fn evaluate_into_reuses_scratch_bit_identically() {
         // One scratch + one output reused across workloads of different
         // sizes and flag sets must reproduce fresh `evaluate` exactly.
-        let (hw, topo) = setup(MemKind::Hbm);
+        let plat = setup(MemKind::Hbm);
         let mut scratch = EvalScratch::default();
         let mut out = CostBreakdown::default();
         for wl in crate::workload::models::evaluation_suite(1) {
-            let alloc = uniform_allocation(&hw, &wl);
+            let alloc = uniform_allocation(&plat, &wl);
             for flags in [
                 OptFlags::NONE,
                 OptFlags::ALL,
                 OptFlags { redistribution: true, ..OptFlags::NONE },
                 OptFlags { async_fusion: true, ..OptFlags::NONE },
             ] {
-                let fresh = evaluate(&hw, &topo, &wl, &alloc, flags);
-                evaluate_into(&hw, &topo, &wl, &alloc, flags, &mut scratch,
+                let fresh = evaluate(&plat, &wl, &alloc, flags);
+                evaluate_into(&plat, &wl, &alloc, flags, &mut scratch,
                               &mut out);
                 assert_eq!(fresh.latency_ns.to_bits(),
                            out.latency_ns.to_bits(), "{}", wl.name);
@@ -492,16 +483,36 @@ mod tests {
         let wl = alexnet(1);
         let mut lats = Vec::new();
         for ty in SystemType::ALL {
-            let hw = HwConfig::paper(ty, MemKind::Hbm, 4);
-            let topo = Topology::from_hw(&hw);
-            let alloc = uniform_allocation(&hw, &wl);
+            let plat = Platform::preset(ty, MemKind::Hbm, 4);
+            let alloc = uniform_allocation(&plat, &wl);
             lats.push((
                 ty,
-                evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE).latency_ns,
+                evaluate(&plat, &wl, &alloc, OptFlags::NONE).latency_ns,
             ));
         }
         let type_a = lats[0].1;
         let type_c = lats[2].1;
         assert!(type_c < type_a, "C={type_c} A={type_a}");
+    }
+
+    #[test]
+    fn custom_platform_evaluates_end_to_end() {
+        // A non-preset, asymmetric attachment layout runs through the
+        // full evaluator with finite positive costs and benefits from
+        // the co-optimizations like any preset.
+        use crate::platform::MemAttachment;
+        let mut spec = Platform::headline().spec().clone();
+        spec.name = "asym".into();
+        spec.attachments = vec![
+            MemAttachment::new(0, 0, 600.0),
+            MemAttachment::new(3, 3, 400.0),
+        ];
+        let plat = Platform::new(spec).unwrap();
+        let wl = alexnet(1);
+        let alloc = uniform_allocation(&plat, &wl);
+        let base = evaluate(&plat, &wl, &alloc, OptFlags::NONE);
+        let opt = evaluate(&plat, &wl, &alloc, OptFlags::ALL);
+        assert!(base.latency_ns.is_finite() && base.latency_ns > 0.0);
+        assert!(opt.latency_ns <= base.latency_ns * 1.0001);
     }
 }

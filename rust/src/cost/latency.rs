@@ -1,11 +1,13 @@
 //! Communication latency model (paper §4.3.2–4.3.3): data offloading,
 //! data loading in the low-BW (DRAM) and high-BW (HBM) congestion
 //! regimes, and the shared/non-shared hop models — congestion-aware and
-//! packaging-adaptive through the `Topology` hop functions.
+//! packaging-adaptive through the [`Platform`] hop tables (precomputed
+//! from link-graph routing, so arbitrary memory layouts are costed
+//! identically to the paper presets).
 
-use crate::config::HwConfig;
-use crate::topology::{Pos, Topology};
 use crate::partition::Partition;
+use crate::platform::Platform;
+use crate::topology::Pos;
 use crate::workload::GemmOp;
 
 /// Cost of one communication stage. The paper decomposes every off-chip
@@ -16,7 +18,7 @@ use crate::workload::GemmOp;
 #[derive(Debug, Clone, Default)]
 pub struct CommCost {
     /// On-chip distribution/collection time per chiplet, row-major; empty
-    /// means "no on-chip stage" (e.g. type C collection).
+    /// means "no on-chip stage" (e.g. 3D-stacked collection).
     pub per_chiplet_ns: Vec<f64>,
     /// Serialized off-chip (memory-interface) time.
     pub offchip_ns: f64,
@@ -44,23 +46,24 @@ impl CommCost {
 /// Is this configuration in the high-bandwidth regime (§4.3.3 case 2)?
 /// When the memory interface outruns a NoP link, congestion moves onto
 /// the package network.
-pub fn high_bw(hw: &HwConfig) -> bool {
-    hw.bw_mem > hw.bw_nop
+pub fn high_bw(plat: &Platform) -> bool {
+    plat.bw_mem > plat.bw_nop
 }
 
-/// §4.3.2 — data offloading: collect outputs at the global chiplet(s)
-/// (eq. 8: bottlenecked on the entrance links), then write to memory.
-pub fn offload(hw: &HwConfig, topo: &Topology, op: &GemmOp, diagonal: bool) -> CommCost {
-    let out_bytes = hw.bytes(op.m * op.n);
-    let entr = topo.entrance_links(diagonal);
+/// §4.3.2 — data offloading: collect outputs at the attachment
+/// chiplet(s) (eq. 8: bottlenecked on the entrance links), then write to
+/// memory.
+pub fn offload(plat: &Platform, op: &GemmOp, diagonal: bool) -> CommCost {
+    let out_bytes = plat.bytes(op.m * op.n);
+    let entr = plat.entrance_links(diagonal);
     let collection_ns = if entr == 0 {
-        0.0 // type C: outputs go straight up to the local stack
+        0.0 // every chiplet is an attachment: outputs go straight up
     } else {
-        out_bytes / (entr as f64 * hw.bw_nop)
+        out_bytes / (entr as f64 * plat.bw_nop)
     };
     CommCost {
-        per_chiplet_ns: vec![collection_ns; topo.num_chiplets()],
-        offchip_ns: out_bytes / hw.bw_mem,
+        per_chiplet_ns: vec![collection_ns; plat.num_chiplets()],
+        offchip_ns: out_bytes / plat.bw_mem,
     }
 }
 
@@ -68,35 +71,29 @@ pub fn offload(hw: &HwConfig, topo: &Topology, op: &GemmOp, diagonal: bool) -> C
 /// (every chiplet's collection time is identical, so the max *is* the
 /// collection time). Bit-identical to `offload(..).wall_ns()` — pinned
 /// by a test below and relied on by the evaluator hot path (§Perf).
-pub fn offload_wall_ns(
-    hw: &HwConfig,
-    topo: &Topology,
-    op: &GemmOp,
-    diagonal: bool,
-) -> f64 {
-    let out_bytes = hw.bytes(op.m * op.n);
-    let entr = topo.entrance_links(diagonal);
+pub fn offload_wall_ns(plat: &Platform, op: &GemmOp, diagonal: bool) -> f64 {
+    let out_bytes = plat.bytes(op.m * op.n);
+    let entr = plat.entrance_links(diagonal);
     let collection_ns = if entr == 0 {
         0.0
     } else {
-        out_bytes / (entr as f64 * hw.bw_nop)
+        out_bytes / (entr as f64 * plat.bw_nop)
     };
-    out_bytes / hw.bw_mem + collection_ns
+    out_bytes / plat.bw_mem + collection_ns
 }
 
 /// §4.3.3 — data loading: off-chip fetch + congestion-aware on-chip
 /// distribution. `load_acts` is false when on-package redistribution
 /// (§5.2) supplies the activations and only weights stream from memory.
 pub fn load(
-    hw: &HwConfig,
-    topo: &Topology,
+    plat: &Platform,
     op: &GemmOp,
     part: &Partition,
     diagonal: bool,
     load_acts: bool,
 ) -> CommCost {
     let mut out = CommCost::default();
-    load_into(hw, topo, op, part, diagonal, load_acts, &mut out);
+    load_into(plat, op, part, diagonal, load_acts, &mut out);
     out
 }
 
@@ -104,50 +101,50 @@ pub fn load(
 /// per-chiplet buffer — the zero-allocation form the evaluator scratch
 /// path uses (§Perf). Results are bit-identical to [`load`] (same code).
 pub fn load_into(
-    hw: &HwConfig,
-    topo: &Topology,
+    plat: &Platform,
     op: &GemmOp,
     part: &Partition,
     diagonal: bool,
     load_acts: bool,
     out: &mut CommCost,
 ) {
-    let hi = high_bw(hw);
+    let hi = high_bw(plat);
     let per_chiplet = &mut out.per_chiplet_ns;
     per_chiplet.clear();
-    per_chiplet.reserve(topo.num_chiplets());
-    for p in topo.positions() {
+    per_chiplet.reserve(plat.num_chiplets());
+    for p in plat.positions() {
         let Pos { row: x, col: y } = p;
         // Activation chunk px[x] * K is row-wise shared (every chiplet in
         // grid row x needs it); weight chunk K * py[y] is column-shared.
         let act_bytes = if load_acts {
-            hw.bytes(part.px[x] * op.k)
+            plat.bytes(part.px[x] * op.k)
         } else {
             0.0
         };
-        let w_bytes = hw.bytes(op.k * part.py[y]);
+        let w_bytes = plat.bytes(op.k * part.py[y]);
         let (act_hops, w_hops) = if hi {
             // §4.3.3 case 2: congestion on the package network; eqs.
             // 11–12 fold the farthest-first waiting slots into the hop
             // count.
             (
-                topo.hops_row_shared(p, diagonal) as f64,
-                topo.hops_col_shared(p, diagonal) as f64,
+                plat.hops_row_shared(p, diagonal) as f64,
+                plat.hops_col_shared(p, diagonal) as f64,
             )
         } else {
             // §4.3.3 case 1 (eq. 9–10): no contention, minimal-path
             // store-and-forward.
-            let h = topo.hops_low_bw(p, diagonal) as f64;
+            let h = plat.hops_low_bw(p, diagonal) as f64;
             (h, h)
         };
-        per_chiplet.push((act_bytes * act_hops + w_bytes * w_hops) / hw.bw_nop);
+        per_chiplet
+            .push((act_bytes * act_hops + w_bytes * w_hops) / plat.bw_nop);
     }
     // Unique bytes through the memory interface.
-    let mut off_bytes = hw.bytes(op.k * op.n); // weights (K x N)
+    let mut off_bytes = plat.bytes(op.k * op.n); // weights (K x N)
     if load_acts {
-        off_bytes += hw.bytes(op.m * op.k);
+        off_bytes += plat.bytes(op.m * op.k);
     }
-    out.offchip_ns = off_bytes / hw.bw_mem;
+    out.offchip_ns = off_bytes / plat.bw_mem;
 }
 
 #[cfg(test)]
@@ -156,31 +153,29 @@ mod tests {
     use crate::config::{MemKind, SystemType};
     use crate::partition::uniform;
 
-    fn setup(ty: SystemType, mem: MemKind) -> (HwConfig, Topology) {
-        let hw = HwConfig::paper(ty, mem, 4);
-        let topo = Topology::from_hw(&hw);
-        (hw, topo)
+    fn setup(ty: SystemType, mem: MemKind) -> Platform {
+        Platform::preset(ty, mem, 4)
     }
 
     #[test]
     fn eq8_offload_entrance_bottleneck() {
-        let (hw, topo) = setup(SystemType::A, MemKind::Hbm);
+        let plat = setup(SystemType::A, MemKind::Hbm);
         let op = GemmOp::dense("x", 480, 64, 100);
-        let c = offload(&hw, &topo, &op, false);
+        let c = offload(&plat, &op, false);
         // 48000 bytes over 2 entrance links x 60 GB/s.
         assert!((c.max_onchip_ns() - 48000.0 / 120.0).abs() < 1e-9);
         // HBM: off-chip much faster than collection -> collection wins.
         assert!(c.wall_ns() > c.offchip_ns);
         // Diagonal entrance (3 links) cuts collection by 1/3 (§5.1).
-        let cd = offload(&hw, &topo, &op, true);
+        let cd = offload(&plat, &op, true);
         assert!((cd.max_onchip_ns() * 1.5 - c.max_onchip_ns()).abs() < 1e-6);
     }
 
     #[test]
     fn type_c_offload_is_memory_only() {
-        let (hw, topo) = setup(SystemType::C, MemKind::Hbm);
+        let plat = setup(SystemType::C, MemKind::Hbm);
         let op = GemmOp::dense("x", 480, 64, 100);
-        let c = offload(&hw, &topo, &op, false);
+        let c = offload(&plat, &op, false);
         assert_eq!(c.max_onchip_ns(), 0.0);
         assert!(c.offchip_ns > 0.0);
     }
@@ -190,12 +185,12 @@ mod tests {
         // §3.2: with DRAM the off-chip share of the load dominates much
         // more than with HBM (where congestion moves onto the NoP).
         let op = GemmOp::dense("x", 1024, 512, 1024);
-        let (hw_d, topo_d) = setup(SystemType::A, MemKind::Dram);
-        let (hw_h, topo_h) = setup(SystemType::A, MemKind::Hbm);
-        assert!(!high_bw(&hw_d) && high_bw(&hw_h));
-        let part = uniform(&hw_d, &op);
-        let d = load(&hw_d, &topo_d, &op, &part, false, true);
-        let h = load(&hw_h, &topo_h, &op, &part, false, true);
+        let plat_d = setup(SystemType::A, MemKind::Dram);
+        let plat_h = setup(SystemType::A, MemKind::Hbm);
+        assert!(!high_bw(&plat_d) && high_bw(&plat_h));
+        let part = uniform(&plat_d, &op);
+        let d = load(&plat_d, &op, &part, false, true);
+        let h = load(&plat_h, &op, &part, false, true);
         let off_share = |c: &CommCost| c.offchip_ns / c.wall_ns();
         assert!(off_share(&d) > 3.0 * off_share(&h),
                 "DRAM off-share {} vs HBM {}", off_share(&d), off_share(&h));
@@ -205,31 +200,31 @@ mod tests {
 
     #[test]
     fn hbm_load_is_noc_bound() {
-        let (hw, topo) = setup(SystemType::A, MemKind::Hbm);
+        let plat = setup(SystemType::A, MemKind::Hbm);
         let op = GemmOp::dense("x", 1024, 512, 1024);
-        let part = uniform(&hw, &op);
-        let c = load(&hw, &topo, &op, &part, false, true);
-        assert!(high_bw(&hw));
+        let part = uniform(&plat, &op);
+        let c = load(&plat, &op, &part, false, true);
+        assert!(high_bw(&plat));
         assert!(c.max_onchip_ns() > c.offchip_ns);
     }
 
     #[test]
     fn diagonal_reduces_hbm_distribution() {
-        let (hw, topo) = setup(SystemType::A, MemKind::Hbm);
+        let plat = setup(SystemType::A, MemKind::Hbm);
         let op = GemmOp::dense("x", 1024, 512, 1024);
-        let part = uniform(&hw, &op);
-        let base = load(&hw, &topo, &op, &part, false, true);
-        let diag = load(&hw, &topo, &op, &part, true, true);
+        let part = uniform(&plat, &op);
+        let base = load(&plat, &op, &part, false, true);
+        let diag = load(&plat, &op, &part, true, true);
         assert!(diag.max_onchip_ns() < base.max_onchip_ns());
     }
 
     #[test]
     fn weights_only_load_drops_activation_traffic() {
-        let (hw, topo) = setup(SystemType::A, MemKind::Hbm);
+        let plat = setup(SystemType::A, MemKind::Hbm);
         let op = GemmOp::dense("x", 1024, 512, 1024);
-        let part = uniform(&hw, &op);
-        let full = load(&hw, &topo, &op, &part, false, true);
-        let wonly = load(&hw, &topo, &op, &part, false, false);
+        let part = uniform(&plat, &op);
+        let full = load(&plat, &op, &part, false, true);
+        let wonly = load(&plat, &op, &part, false, false);
         assert!(wonly.offchip_ns < full.offchip_ns);
         assert!(wonly.max_onchip_ns() < full.max_onchip_ns());
     }
@@ -239,9 +234,9 @@ mod tests {
         let op = GemmOp::dense("x", 480, 64, 100);
         for ty in SystemType::ALL {
             for diagonal in [false, true] {
-                let (hw, topo) = setup(ty, MemKind::Hbm);
-                let full = offload(&hw, &topo, &op, diagonal).wall_ns();
-                let fast = offload_wall_ns(&hw, &topo, &op, diagonal);
+                let plat = setup(ty, MemKind::Hbm);
+                let full = offload(&plat, &op, diagonal).wall_ns();
+                let fast = offload_wall_ns(&plat, &op, diagonal);
                 assert_eq!(full.to_bits(), fast.to_bits(), "{ty:?}");
             }
         }
@@ -249,20 +244,38 @@ mod tests {
 
     #[test]
     fn load_into_reuses_buffer_bit_identically() {
-        let (hw, topo) = setup(SystemType::A, MemKind::Hbm);
+        let plat = setup(SystemType::A, MemKind::Hbm);
         let op = GemmOp::dense("x", 1024, 512, 1024);
-        let part = uniform(&hw, &op);
-        let fresh = load(&hw, &topo, &op, &part, true, true);
+        let part = uniform(&plat, &op);
+        let fresh = load(&plat, &op, &part, true, true);
         let mut buf = CommCost {
             per_chiplet_ns: vec![99.0; 3], // stale garbage must be cleared
             offchip_ns: -1.0,
         };
-        load_into(&hw, &topo, &op, &part, true, true, &mut buf);
+        load_into(&plat, &op, &part, true, true, &mut buf);
         assert_eq!(fresh.offchip_ns.to_bits(), buf.offchip_ns.to_bits());
         assert_eq!(fresh.per_chiplet_ns.len(), buf.per_chiplet_ns.len());
         for (a, b) in fresh.per_chiplet_ns.iter().zip(&buf.per_chiplet_ns) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn asymmetric_platform_loads_cost_less_near_memory() {
+        // A custom attachment set: the congestion-aware load must favor
+        // chiplets close to their serving attachment.
+        use crate::platform::MemAttachment;
+        let mut spec = Platform::headline().spec().clone();
+        spec.name = "asym".into();
+        spec.attachments = vec![MemAttachment::new(0, 0, 500.0),
+                                MemAttachment::new(3, 3, 500.0)];
+        let plat = Platform::new(spec).unwrap();
+        let op = GemmOp::dense("x", 1024, 512, 1024);
+        let part = uniform(&plat, &op);
+        let c = load(&plat, &op, &part, false, true);
+        let near = c.per_chiplet_ns[0]; // (0, 0): an attachment
+        let far = c.per_chiplet_ns[6]; // (1, 2): interior
+        assert!(near < far, "near={near} far={far}");
     }
 
     #[test]

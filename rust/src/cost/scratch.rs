@@ -22,7 +22,10 @@
 //!   creates novel (producer, consumer) pairs whose consumer half was
 //!   already scored.
 //! * Gene-independent terms (store wall time, per-edge legality, the
-//!   sole-edge maps) are precomputed once at construction.
+//!   sole-edge maps) are precomputed once at construction. The
+//!   [`Platform`] hop tables are immutable per platform, so no gene can
+//!   invalidate them (a different platform means a different
+//!   `CachedEval`).
 //!
 //! A GA child that mutated `k` ops therefore recomputes only those
 //! ops' cores plus the adjacent edges; everything else is a map hit.
@@ -33,10 +36,9 @@ use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
 
-use crate::config::HwConfig;
 use crate::partition::{Allocation, Partition};
-use crate::redistribution::RedistCost;
-use crate::topology::Topology;
+use crate::platform::Platform;
+use crate::redistribution::{redistribute, RedistCost};
 use crate::workload::Workload;
 
 use super::evaluator::{
@@ -44,7 +46,6 @@ use super::evaluator::{
     OpTerms, OptFlags,
 };
 use super::latency::{offload_wall_ns, CommCost};
-use crate::redistribution::redistribute;
 
 /// Per-call temporaries shared by the evaluator's input/compute stages.
 #[derive(Debug, Clone, Default)]
@@ -152,7 +153,7 @@ pub struct CacheStats {
 /// tens of MB while never firing inside one GA generation.
 const CACHE_CAP_ENTRIES: usize = 1 << 18;
 
-/// A memoizing evaluator bound to one `(hw, topo, wl, flags)` problem.
+/// A memoizing evaluator bound to one `(platform, wl, flags)` problem.
 ///
 /// [`CachedEval::objective`] / [`CachedEval::breakdown`] score an
 /// allocation exactly like [`super::evaluator::evaluate`] but reuse
@@ -162,8 +163,7 @@ const CACHE_CAP_ENTRIES: usize = 1 << 18;
 /// is what keeps parallel and delta-scored runs equal to the
 /// sequential full evaluator.
 pub struct CachedEval<'a> {
-    hw: &'a HwConfig,
-    topo: &'a Topology,
+    plat: &'a Platform,
     wl: &'a Workload,
     flags: OptFlags,
     /// Per dataflow edge: §5.2 legality (gene-independent).
@@ -191,8 +191,7 @@ pub struct CachedEval<'a> {
 
 impl<'a> CachedEval<'a> {
     pub fn new(
-        hw: &'a HwConfig,
-        topo: &'a Topology,
+        plat: &'a Platform,
         wl: &'a Workload,
         flags: OptFlags,
     ) -> CachedEval<'a> {
@@ -206,11 +205,10 @@ impl<'a> CachedEval<'a> {
         let store_wall: Vec<f64> = wl
             .ops
             .iter()
-            .map(|op| offload_wall_ns(hw, topo, op, flags.diagonal))
+            .map(|op| offload_wall_ns(plat, op, flags.diagonal))
             .collect();
         CachedEval {
-            hw,
-            topo,
+            plat,
             wl,
             flags,
             edge_legal,
@@ -275,8 +273,7 @@ impl<'a> CachedEval<'a> {
             self.clear_cache();
         }
         let CachedEval {
-            hw,
-            topo,
+            plat,
             wl,
             flags,
             edge_legal,
@@ -294,7 +291,7 @@ impl<'a> CachedEval<'a> {
             misses,
             entries,
         } = self;
-        let (hw, topo, wl, flags) = (*hw, *topo, *wl, *flags);
+        let (plat, wl, flags) = (*plat, *wl, *flags);
         let n = wl.ops.len();
         let ne = wl.edges.len();
         debug_assert_eq!(alloc.parts.len(), n);
@@ -331,7 +328,7 @@ impl<'a> CachedEval<'a> {
                         // checked; store wall precomputed; activation
                         // share sub-cached by consumer genes).
                         let r = redistribute(
-                            hw,
+                            plat,
                             &wl.ops[src],
                             &alloc.parts[src],
                             &alloc.parts[dst],
@@ -344,8 +341,7 @@ impl<'a> CachedEval<'a> {
                             Entry::Vacant(av) => {
                                 *entries += 1;
                                 *av.insert(act_load_extra_ns(
-                                    hw,
-                                    topo,
+                                    plat,
                                     &wl.ops[dst],
                                     &alloc.parts[dst],
                                     flags.diagonal,
@@ -394,8 +390,7 @@ impl<'a> CachedEval<'a> {
                     *misses += 1;
                     *entries += 1;
                     *v.insert(op_terms(
-                        hw,
-                        topo,
+                        plat,
                         op,
                         &alloc.parts[i],
                         flags,
@@ -425,7 +420,7 @@ impl<'a> CachedEval<'a> {
         // delta-scored composition is bit-identical (ISSUE 2 invariant).
         #[cfg(debug_assertions)]
         {
-            let full = super::evaluator::evaluate(hw, topo, wl, alloc, flags);
+            let full = super::evaluator::evaluate(plat, wl, alloc, flags);
             debug_assert_eq!(
                 full.latency_ns.to_bits(),
                 out.latency_ns.to_bits(),
@@ -459,19 +454,17 @@ mod tests {
     use crate::partition::uniform_allocation;
     use crate::workload::models::{alexnet, vit};
 
-    fn setup() -> (HwConfig, Topology) {
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-        let topo = Topology::from_hw(&hw);
-        (hw, topo)
+    fn setup() -> Platform {
+        Platform::preset(SystemType::A, MemKind::Hbm, 4)
     }
 
     #[test]
     fn cached_matches_full_and_hits_on_repeat() {
-        let (hw, topo) = setup();
+        let plat = setup();
         let wl = alexnet(1);
-        let alloc = uniform_allocation(&hw, &wl);
-        let mut cache = CachedEval::new(&hw, &topo, &wl, OptFlags::ALL);
-        let full = evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL);
+        let alloc = uniform_allocation(&plat, &wl);
+        let mut cache = CachedEval::new(&plat, &wl, OptFlags::ALL);
+        let full = evaluate(&plat, &wl, &alloc, OptFlags::ALL);
         let a = cache.objective(&alloc, Objective::Latency);
         assert_eq!(a.to_bits(),
                    full.objective(Objective::Latency).to_bits());
@@ -486,10 +479,10 @@ mod tests {
 
     #[test]
     fn single_gene_change_recomputes_neighbors_only() {
-        let (hw, topo) = setup();
+        let plat = setup();
         let wl = alexnet(1);
-        let mut alloc = uniform_allocation(&hw, &wl);
-        let mut cache = CachedEval::new(&hw, &topo, &wl, OptFlags::ALL);
+        let mut alloc = uniform_allocation(&plat, &wl);
+        let mut cache = CachedEval::new(&plat, &wl, OptFlags::ALL);
         cache.objective(&alloc, Objective::Latency);
         let before = cache.stats().misses;
         // Move one tile of rows in op 3: dirties op 3's core and the
@@ -498,7 +491,7 @@ mod tests {
         alloc.parts[3].px[0] += 16;
         alloc.parts[3].px[1] -= 16;
         let v = cache.objective(&alloc, Objective::Edp);
-        let full = evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL)
+        let full = evaluate(&plat, &wl, &alloc, OptFlags::ALL)
             .objective(Objective::Edp);
         assert_eq!(v.to_bits(), full.to_bits());
         let fresh = cache.stats().misses - before;
@@ -508,24 +501,24 @@ mod tests {
 
     #[test]
     fn edp_objective_matches_on_vit() {
-        let (hw, topo) = setup();
+        let plat = setup();
         let wl = vit(1);
-        let alloc = uniform_allocation(&hw, &wl);
+        let alloc = uniform_allocation(&plat, &wl);
         for flags in [OptFlags::NONE, OptFlags::ALL] {
-            let mut cache = CachedEval::new(&hw, &topo, &wl, flags);
+            let mut cache = CachedEval::new(&plat, &wl, flags);
             let v = cache.objective(&alloc, Objective::Edp);
             let full =
-                evaluate(&hw, &topo, &wl, &alloc, flags).objective(Objective::Edp);
+                evaluate(&plat, &wl, &alloc, flags).objective(Objective::Edp);
             assert_eq!(v.to_bits(), full.to_bits());
         }
     }
 
     #[test]
     fn clear_cache_keeps_answers_stable() {
-        let (hw, topo) = setup();
+        let plat = setup();
         let wl = alexnet(1);
-        let alloc = uniform_allocation(&hw, &wl);
-        let mut cache = CachedEval::new(&hw, &topo, &wl, OptFlags::ALL);
+        let alloc = uniform_allocation(&plat, &wl);
+        let mut cache = CachedEval::new(&plat, &wl, OptFlags::ALL);
         let a = cache.objective(&alloc, Objective::Latency);
         cache.clear_cache();
         assert_eq!(cache.stats().entries, 0);

@@ -3,8 +3,9 @@
 //! Three nouns (paper framing: one analytical pipeline from packaging
 //! config through scheduling to reports):
 //!
-//! * [`Scenario`] — validated problem statement: hardware + topology +
-//!   workload + requested co-optimization flags + objective.
+//! * [`Scenario`] — validated problem statement: platform (data-driven
+//!   packaging) + workload + requested co-optimization flags +
+//!   objective.
 //! * [`Plan`] — a scheduling outcome with provenance (scheduler key,
 //!   effective flags, seed) and its true-evaluator score.
 //! * [`Report`] — full cost breakdown + per-op diagnostics + EDP.
@@ -57,8 +58,6 @@ pub enum EngineError {
     InvalidHardware(String),
     /// Workload validation failed (zero dims, bad chaining…).
     InvalidWorkload(String),
-    /// An explicitly-supplied topology does not match the hardware.
-    TopologyMismatch { topo: String, hw: String },
     /// Registry lookup failed.
     UnknownScheduler { name: String, known: String },
     /// A scheduler produced an allocation that does not validate.
@@ -76,9 +75,6 @@ impl fmt::Display for EngineError {
             }
             EngineError::InvalidWorkload(m) => {
                 write!(f, "invalid workload: {m}")
-            }
-            EngineError::TopologyMismatch { topo, hw } => {
-                write!(f, "topology {topo} does not match hardware {hw}")
             }
             EngineError::UnknownScheduler { name, known } => {
                 write!(f, "unknown scheduler '{name}' (known: {known})")
@@ -116,7 +112,7 @@ impl Engine {
     ) -> Result<Planned<'_>, EngineError> {
         let plan = scheduler.schedule(&self.scenario)?;
         plan.alloc
-            .validate(self.scenario.workload(), self.scenario.hw())
+            .validate(self.scenario.workload(), self.scenario.platform())
             .map_err(|reason| EngineError::InvalidPlan {
                 scheduler: scheduler.key().to_string(),
                 reason,

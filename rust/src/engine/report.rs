@@ -3,24 +3,22 @@
 //! `cost::evaluator::evaluate`, which production call sites no longer
 //! touch directly.
 
-use crate::config::HwConfig;
 use crate::cost::evaluator::{
     evaluate, CostBreakdown, Objective, OpCost, OptFlags,
 };
 use crate::partition::Allocation;
-use crate::topology::Topology;
+use crate::platform::Platform;
 use crate::workload::{ModelSpan, Workload};
 
 /// Crate-internal bridge to the low-level evaluator; everything outside
 /// the `cost` module goes through [`Report`] / [`super::Scenario`].
 pub(crate) fn modeled_breakdown(
-    hw: &HwConfig,
-    topo: &Topology,
+    plat: &Platform,
     wl: &Workload,
     alloc: &Allocation,
     flags: OptFlags,
 ) -> CostBreakdown {
-    evaluate(hw, topo, wl, alloc, flags)
+    evaluate(plat, wl, alloc, flags)
 }
 
 /// Cost attributed to one constituent model of a (possibly fused)

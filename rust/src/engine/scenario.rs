@@ -1,12 +1,20 @@
 //! [`Scenario`]: the validated problem statement of one engine run —
-//! hardware + topology + workload + co-optimization flags + objective —
-//! replacing the ad-hoc `(hw, topo, wl, flags, objective)` argument
-//! tuples the seed crate passed around.
+//! platform + workload + co-optimization flags + objective — replacing
+//! the ad-hoc `(hw, topo, wl, flags, objective)` argument tuples the
+//! seed crate passed around.
+//!
+//! The hardware half is a [`Platform`] (data-driven packaging: grid,
+//! link classes, arbitrary memory-attachment sets, precomputed hop
+//! tables). The legacy [`HwConfig`] / `SystemType` spellings remain as
+//! thin constructors: [`ScenarioBuilder::system`] / `mem` / `grid`
+//! compose a preset, [`ScenarioBuilder::hw`] expands a full config, and
+//! [`ScenarioBuilder::platform`] takes any platform — including one
+//! loaded from JSON (`--platform file.json`).
 
 use crate::config::{HwConfig, MemKind, SystemType};
 use crate::cost::evaluator::{Objective, OptFlags};
 use crate::partition::Allocation;
-use crate::topology::Topology;
+use crate::platform::Platform;
 use crate::workload::Workload;
 
 use super::plan::Plan;
@@ -17,8 +25,7 @@ use super::EngineError;
 /// [`Scenario::builder`]; every accessor is cheap.
 #[derive(Debug, Clone)]
 pub struct Scenario {
-    hw: HwConfig,
-    topo: Topology,
+    plat: Platform,
     wl: Workload,
     flags: OptFlags,
     objective: Objective,
@@ -38,12 +45,10 @@ impl Scenario {
             .expect("headline scenario is always valid")
     }
 
-    pub fn hw(&self) -> &HwConfig {
-        &self.hw
-    }
-
-    pub fn topo(&self) -> &Topology {
-        &self.topo
+    /// The hardware platform (packaging description + precomputed hop
+    /// tables).
+    pub fn platform(&self) -> &Platform {
+        &self.plat
     }
 
     pub fn workload(&self) -> &Workload {
@@ -60,15 +65,10 @@ impl Scenario {
         self.objective
     }
 
-    /// Short system label, e.g. `A-HBM-4x4` (figure tables).
+    /// Short system label, e.g. `A-HBM-4x4` for presets or the
+    /// platform's own name for custom descriptions (figure tables).
     pub fn label(&self) -> String {
-        format!(
-            "{}-{}-{}x{}",
-            self.hw.ty.short(),
-            self.hw.mem.name(),
-            self.hw.xdim,
-            self.hw.ydim
-        )
+        self.plat.name.clone()
     }
 
     /// Score a plan on the single-source-of-truth evaluator.
@@ -78,7 +78,7 @@ impl Scenario {
             flags: plan.flags,
             objective: self.objective,
             breakdown: modeled_breakdown(
-                &self.hw, &self.topo, &self.wl, &plan.alloc, plan.flags,
+                &self.plat, &self.wl, &plan.alloc, plan.flags,
             ),
             models: self.wl.model_spans(),
         }
@@ -95,16 +95,14 @@ impl Scenario {
             scheduler: "manual".to_string(),
             flags,
             objective: self.objective,
-            breakdown: modeled_breakdown(
-                &self.hw, &self.topo, &self.wl, alloc, flags,
-            ),
+            breakdown: modeled_breakdown(&self.plat, &self.wl, alloc, flags),
             models: self.wl.model_spans(),
         }
     }
 
     /// The uniform layer-sequential reference point (no optimizations).
     pub fn baseline_report(&self) -> Report {
-        let alloc = crate::partition::uniform_allocation(&self.hw, &self.wl);
+        let alloc = crate::partition::uniform_allocation(&self.plat, &self.wl);
         let mut r = self.report_allocation(&alloc, OptFlags::NONE);
         r.scheduler = "baseline".to_string();
         r
@@ -122,7 +120,7 @@ impl Scenario {
         seed: u64,
     ) -> Plan {
         let objective_value =
-            modeled_breakdown(&self.hw, &self.topo, &self.wl, &alloc, flags)
+            modeled_breakdown(&self.plat, &self.wl, &alloc, flags)
                 .objective(self.objective);
         Plan {
             scheduler: scheduler.to_string(),
@@ -155,17 +153,19 @@ impl Scenario {
     }
 }
 
-/// Builder for [`Scenario`]. Either set a full [`HwConfig`] via
-/// [`ScenarioBuilder::hw`] or compose one from
+/// Builder for [`Scenario`]. Pick the hardware through exactly one of
+/// three spellings, most to least specific:
+/// [`ScenarioBuilder::platform`] (any [`Platform`], including JSON
+/// files), [`ScenarioBuilder::hw`] (a full legacy [`HwConfig`]), or
 /// [`ScenarioBuilder::system`] / [`ScenarioBuilder::mem`] /
-/// [`ScenarioBuilder::grid`] (paper Table-2 defaults).
+/// [`ScenarioBuilder::grid`] (paper Table-2 preset defaults).
 #[derive(Debug, Clone)]
 pub struct ScenarioBuilder {
+    plat: Option<Platform>,
     hw: Option<HwConfig>,
     ty: SystemType,
     mem: MemKind,
     grid: usize,
-    topo: Option<Topology>,
     wl: Option<Workload>,
     flags: OptFlags,
     objective: Objective,
@@ -174,11 +174,11 @@ pub struct ScenarioBuilder {
 impl Default for ScenarioBuilder {
     fn default() -> Self {
         ScenarioBuilder {
+            plat: None,
             hw: None,
             ty: SystemType::A,
             mem: MemKind::Hbm,
             grid: 4,
-            topo: None,
             wl: None,
             flags: OptFlags::ALL,
             objective: Objective::Latency,
@@ -187,8 +187,16 @@ impl Default for ScenarioBuilder {
 }
 
 impl ScenarioBuilder {
-    /// Use a fully custom hardware configuration (overrides
-    /// `system`/`mem`/`grid`).
+    /// Use a fully custom platform (overrides `hw`/`system`/`mem`/
+    /// `grid`). The platform is already validated by construction.
+    pub fn platform(mut self, plat: Platform) -> Self {
+        self.plat = Some(plat);
+        self
+    }
+
+    /// Use a legacy hardware configuration (overrides
+    /// `system`/`mem`/`grid`); expanded onto a [`Platform`] at build
+    /// time.
     pub fn hw(mut self, hw: HwConfig) -> Self {
         self.hw = Some(hw);
         self
@@ -209,12 +217,6 @@ impl ScenarioBuilder {
         self
     }
 
-    /// Override the derived topology (advanced; must match the grid).
-    pub fn topology(mut self, topo: Topology) -> Self {
-        self.topo = Some(topo);
-        self
-    }
-
     pub fn workload(mut self, wl: Workload) -> Self {
         self.wl = Some(wl);
         self
@@ -232,23 +234,21 @@ impl ScenarioBuilder {
 
     /// Validate everything and assemble the scenario.
     pub fn build(self) -> Result<Scenario, EngineError> {
-        let hw = self
-            .hw
-            .unwrap_or_else(|| HwConfig::paper(self.ty, self.mem, self.grid));
-        hw.validate().map_err(EngineError::InvalidHardware)?;
+        let plat = match (self.plat, self.hw) {
+            (Some(plat), _) => plat,
+            (None, Some(hw)) => hw
+                .platform()
+                .map_err(EngineError::InvalidHardware)?,
+            (None, None) => {
+                HwConfig::paper(self.ty, self.mem, self.grid)
+                    .platform()
+                    .map_err(EngineError::InvalidHardware)?
+            }
+        };
         let wl = self.wl.ok_or(EngineError::MissingWorkload)?;
         wl.validate().map_err(EngineError::InvalidWorkload)?;
-        let topo =
-            self.topo.unwrap_or_else(|| Topology::from_hw(&hw));
-        if topo.xdim != hw.xdim || topo.ydim != hw.ydim || topo.ty != hw.ty {
-            return Err(EngineError::TopologyMismatch {
-                topo: format!("{:?} {}x{}", topo.ty, topo.xdim, topo.ydim),
-                hw: format!("{:?} {}x{}", hw.ty, hw.xdim, hw.ydim),
-            });
-        }
         Ok(Scenario {
-            hw,
-            topo,
+            plat,
             wl,
             flags: self.flags,
             objective: self.objective,
@@ -259,14 +259,15 @@ impl ScenarioBuilder {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::platform::MemAttachment;
     use crate::workload::models::alexnet;
     use crate::workload::{GemmOp, Workload};
 
     #[test]
     fn headline_defaults() {
         let s = Scenario::headline(alexnet(1));
-        assert_eq!(s.hw().xdim, 4);
-        assert_eq!(s.hw().ty, SystemType::A);
+        assert_eq!(s.platform().xdim, 4);
+        assert_eq!(s.platform().globals().len(), 1);
         assert_eq!(s.flags(), OptFlags::ALL);
         assert_eq!(s.objective(), Objective::Latency);
         assert_eq!(s.label(), "A-HBM-4x4");
@@ -313,13 +314,35 @@ mod tests {
     }
 
     #[test]
-    fn builder_rejects_mismatched_topology() {
-        let err = Scenario::builder()
-            .grid(4)
-            .topology(Topology::new(SystemType::A, 8, 8))
+    fn builder_accepts_custom_platform() {
+        let mut spec = Platform::headline().spec().clone();
+        spec.name = "custom".into();
+        spec.attachments = vec![
+            MemAttachment::new(0, 0, 750.0),
+            MemAttachment::new(2, 3, 250.0),
+        ];
+        let plat = Platform::new(spec).unwrap();
+        let s = Scenario::builder()
+            .platform(plat)
             .workload(alexnet(1))
             .build()
-            .unwrap_err();
-        assert!(matches!(err, EngineError::TopologyMismatch { .. }), "{err}");
+            .unwrap();
+        assert_eq!(s.label(), "custom");
+        assert_eq!(s.platform().globals().len(), 2);
+        // The custom platform reports end to end.
+        let r = s.baseline_report();
+        assert!(r.latency_ns() > 0.0 && r.energy_pj() > 0.0);
+    }
+
+    #[test]
+    fn platform_overrides_preset_knobs() {
+        let s = Scenario::builder()
+            .system(SystemType::D)
+            .grid(8)
+            .platform(Platform::headline())
+            .workload(alexnet(1))
+            .build()
+            .unwrap();
+        assert_eq!(s.label(), "A-HBM-4x4");
     }
 }

@@ -68,7 +68,7 @@ impl Scheduler for Baseline {
 
     fn schedule(&self, scenario: &Scenario) -> Result<Plan, EngineError> {
         let alloc =
-            uniform_allocation(scenario.hw(), scenario.workload());
+            uniform_allocation(scenario.platform(), scenario.workload());
         Ok(scenario.plan(self.key(), alloc, OptFlags::NONE, 0))
     }
 }
@@ -88,8 +88,7 @@ impl Scheduler for SimbaLike {
 
     fn schedule(&self, scenario: &Scenario) -> Result<Plan, EngineError> {
         let alloc = simba_allocation(
-            scenario.hw(),
-            scenario.topo(),
+            scenario.platform(),
             scenario.workload(),
         );
         Ok(scenario.plan(self.key(), alloc, OptFlags::NONE, 0))
@@ -111,8 +110,7 @@ impl Scheduler for Greedy {
 
     fn schedule(&self, scenario: &Scenario) -> Result<Plan, EngineError> {
         let r = greedy::optimize(
-            scenario.hw(),
-            scenario.topo(),
+            scenario.platform(),
             scenario.workload(),
             OptFlags::NONE,
             scenario.objective(),
@@ -163,8 +161,7 @@ impl Scheduler for Ga {
         let mut params = self.params.clone();
         params.seed = self.seed;
         let r = ga::optimize(
-            scenario.hw(),
-            scenario.topo(),
+            scenario.platform(),
             scenario.workload(),
             flags,
             scenario.objective(),
@@ -214,8 +211,7 @@ impl Scheduler for Miqp {
     fn schedule(&self, scenario: &Scenario) -> Result<Plan, EngineError> {
         let flags = self.effective_flags(scenario.flags());
         let r = miqp::optimize(
-            scenario.hw(),
-            scenario.topo(),
+            scenario.platform(),
             scenario.workload(),
             flags,
             scenario.objective(),
@@ -259,7 +255,7 @@ mod tests {
         assert_eq!(plan.scheduler, "baseline");
         assert_eq!(plan.flags, OptFlags::NONE);
         assert!(plan.objective_value > 0.0);
-        let uni = uniform_allocation(scenario.hw(), scenario.workload());
+        let uni = uniform_allocation(scenario.platform(), scenario.workload());
         assert_eq!(plan.alloc, uni);
     }
 }

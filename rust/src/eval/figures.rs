@@ -3,10 +3,11 @@
 //! and benches. All scheduling goes through the engine API — no direct
 //! evaluator calls.
 
-use crate::config::{HwConfig, MemKind, SystemType};
+use crate::config::{MemKind, SystemType};
 use crate::cost::evaluator::{Objective, OptFlags};
 use crate::engine::{schedulers, Engine, Scenario, Scheduler};
 use crate::pipeline;
+use crate::platform::Platform;
 use crate::topology::Pos;
 use crate::util::bench::Reporter;
 use crate::util::math::geomean;
@@ -46,7 +47,8 @@ pub fn fig3(print_heatmaps: bool) -> Vec<Fig3Row> {
     for (name, bw_nop, bw_mem, attach) in scenarios {
         let (graph, res) = crate::netsim::all_pull_from_memory(
             4, gb, bw_nop, bw_mem, attach, false,
-        );
+        )
+        .expect("figure-3 mesh routes are well-formed");
         if base.is_none() {
             base = Some(res.makespan_ns);
         }
@@ -97,11 +99,11 @@ const FIG_KEYS: [&str; 4] = ["baseline", "simba", "ga", "miqp"];
 /// row layout. Per-cell solver seeds come from `cfg`, identical to a
 /// sequential run (RNGs never cross cells).
 fn run_cells_par(
-    jobs: &[(HwConfig, Workload, Objective)],
+    jobs: &[(Platform, Workload, Objective)],
     cfg: &EvalConfig,
 ) -> Vec<Cell> {
-    par_map(auto_threads(), jobs, |_, (hw, wl, obj)| {
-        run_cell(hw, wl, *obj, cfg, &FIG_KEYS)
+    par_map(auto_threads(), jobs, |_, (plat, wl, obj)| {
+        run_cell(plat, wl, *obj, cfg, &FIG_KEYS)
     })
 }
 
@@ -140,9 +142,9 @@ fn print_cells(title: &str, cells: &[Cell]) {
 pub fn fig8(cfg: &EvalConfig) -> Vec<Cell> {
     let mut jobs = Vec::new();
     for ty in SystemType::ALL {
-        let hw = HwConfig::paper(ty, MemKind::Hbm, 4);
+        let plat = Platform::preset(ty, MemKind::Hbm, 4);
         for wl in evaluation_suite(1) {
-            jobs.push((hw.clone(), wl, Objective::Latency));
+            jobs.push((plat.clone(), wl, Objective::Latency));
         }
     }
     let cells = run_cells_par(&jobs, cfg);
@@ -154,9 +156,9 @@ pub fn fig8(cfg: &EvalConfig) -> Vec<Cell> {
 pub fn fig9(cfg: &EvalConfig, grids: &[usize]) -> Vec<Cell> {
     let mut jobs = Vec::new();
     for &g in grids {
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, g);
+        let plat = Platform::preset(SystemType::A, MemKind::Hbm, g);
         for wl in evaluation_suite(1) {
-            jobs.push((hw.clone(), wl, Objective::Latency));
+            jobs.push((plat.clone(), wl, Objective::Latency));
         }
     }
     let cells = run_cells_par(&jobs, cfg);
@@ -168,9 +170,9 @@ pub fn fig9(cfg: &EvalConfig, grids: &[usize]) -> Vec<Cell> {
 pub fn fig10(cfg: &EvalConfig, grids: &[usize]) -> Vec<Cell> {
     let mut jobs = Vec::new();
     for &g in grids {
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, g);
+        let plat = Platform::preset(SystemType::A, MemKind::Hbm, g);
         for wl in evaluation_suite(1) {
-            jobs.push((hw.clone(), wl, Objective::Edp));
+            jobs.push((plat.clone(), wl, Objective::Edp));
         }
     }
     let cells = run_cells_par(&jobs, cfg);
@@ -204,11 +206,11 @@ pub fn fig11(batches: &[usize]) -> Vec<(String, usize, f64)> {
 
 /// Figure 12 — low-bandwidth (DRAM) latency + EDP, 4x4 type A.
 pub fn fig12(cfg: &EvalConfig) -> (Vec<Cell>, Vec<Cell>) {
-    let hw = HwConfig::paper(SystemType::A, MemKind::Dram, 4);
+    let plat = Platform::preset(SystemType::A, MemKind::Dram, 4);
     let mut jobs = Vec::new();
     for wl in evaluation_suite(1) {
-        jobs.push((hw.clone(), wl.clone(), Objective::Latency));
-        jobs.push((hw.clone(), wl, Objective::Edp));
+        jobs.push((plat.clone(), wl.clone(), Objective::Latency));
+        jobs.push((plat.clone(), wl, Objective::Edp));
     }
     let cells = run_cells_par(&jobs, cfg);
     let mut lat = Vec::new();

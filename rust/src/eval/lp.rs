@@ -5,16 +5,20 @@
 //! main memory can be modeled using type A and the other … using type B
 //! where the first system serves as the distributed interface."
 //!
-//! This module implements exactly that construction: split the op
-//! sequence into two stages, model the near-memory stage on a type-A
-//! half-grid and the far stage on a type-B half-grid (its "memory" is
-//! the boundary row of the first stage), and report the pipelined
-//! throughput (stage max) instead of the LS sum.
+//! This module implements exactly that construction on the platform
+//! API: split the op sequence into two stages, model the near-memory
+//! stage on a corner-attachment half-grid and the far stage on an
+//! edge-attachment half-grid whose "memory" is the boundary row of the
+//! first stage (interface bandwidth = the NoP boundary links, not the
+//! off-chip link), and report the pipelined throughput (stage max)
+//! instead of the LS sum. The virtual stages are ordinary [`Platform`]s
+//! built from the parent's spec — exactly the kind of derived packaging
+//! the data-driven description exists for.
 
-use crate::config::{HwConfig, SystemType};
+use crate::config::SystemType;
 use crate::cost::evaluator::{evaluate, CostBreakdown, OptFlags};
 use crate::partition::uniform_allocation;
-use crate::topology::Topology;
+use crate::platform::{preset_attachments, Platform};
 use crate::workload::Workload;
 
 /// Result of a two-stage LP split.
@@ -29,26 +33,49 @@ pub struct LpSplit {
     pub ls_ns: f64,
 }
 
-/// Model `wl` split after `split_at` ops onto two half-grids of `hw`
+/// Derive the two virtual stage platforms of the §2.2 construction from
+/// the parent platform: `(near, far)`.
+fn stage_platforms(plat: &Platform) -> (Platform, Platform) {
+    // Near-memory half: corner attachment (type-A pattern), X/2 rows.
+    let mut near_spec = plat.spec().clone();
+    near_spec.name = format!("{}-lp-near", plat.name);
+    near_spec.xdim = plat.xdim / 2;
+    near_spec.attachments = preset_attachments(
+        SystemType::A,
+        near_spec.xdim,
+        near_spec.ydim,
+        near_spec.bw_mem,
+    );
+    // Far half: edge attachments (type-B pattern) — fed along its full
+    // edge by the near stage, which acts as the distributed memory
+    // interface; the interface bandwidth is the NoP boundary, not the
+    // off-chip link.
+    let mut far_spec = plat.spec().clone();
+    far_spec.name = format!("{}-lp-far", plat.name);
+    far_spec.xdim = plat.xdim - near_spec.xdim;
+    far_spec.bw_mem = plat.bw_nop * far_spec.ydim as f64; // boundary links
+    far_spec.attachments = preset_attachments(
+        SystemType::B,
+        far_spec.xdim,
+        far_spec.ydim,
+        far_spec.bw_mem,
+    );
+    (
+        Platform::new(near_spec).expect("near half-grid is valid"),
+        Platform::new(far_spec).expect("far half-grid is valid"),
+    )
+}
+
+/// Model `wl` split after `split_at` ops onto two half-grids of `plat`
 /// (rows halved). Stages use the uniform allocation (callers can refine
 /// each stage with any scheduler — the sub-grids are ordinary
-/// `HwConfig`s).
-pub fn lp_two_stage(hw: &HwConfig, wl: &Workload, split_at: usize,
+/// [`Platform`]s).
+pub fn lp_two_stage(plat: &Platform, wl: &Workload, split_at: usize,
                     flags: OptFlags) -> LpSplit {
     assert!(split_at > 0 && split_at < wl.ops.len(), "split inside the net");
-    assert!(hw.xdim >= 2, "need at least two chiplet rows to split");
+    assert!(plat.xdim >= 2, "need at least two chiplet rows to split");
 
-    // Near-memory half: type A (corner memory), X/2 rows.
-    let mut near_hw = hw.clone();
-    near_hw.xdim = hw.xdim / 2;
-    near_hw.ty = SystemType::A;
-    // Far half: type B — fed along its full edge by the near stage,
-    // which acts as the distributed memory interface; the interface
-    // bandwidth is the NoP boundary, not the off-chip link.
-    let mut far_hw = hw.clone();
-    far_hw.xdim = hw.xdim - near_hw.xdim;
-    far_hw.ty = SystemType::B;
-    far_hw.bw_mem = hw.bw_nop * far_hw.ydim as f64; // boundary row links
+    let (near_plat, far_plat) = stage_platforms(plat);
 
     // Split the dataflow graph, keeping only the intra-half edges:
     // cross-boundary consumers read from the stage boundary instead of
@@ -77,15 +104,12 @@ pub fn lp_two_stage(hw: &HwConfig, wl: &Workload, split_at: usize,
         &far_pairs,
     );
 
-    let near_topo = Topology::from_hw(&near_hw);
-    let far_topo = Topology::from_hw(&far_hw);
-    let near = evaluate(&near_hw, &near_topo, &near_wl,
-                        &uniform_allocation(&near_hw, &near_wl), flags);
-    let far = evaluate(&far_hw, &far_topo, &far_wl,
-                       &uniform_allocation(&far_hw, &far_wl), flags);
+    let near = evaluate(&near_plat, &near_wl,
+                        &uniform_allocation(&near_plat, &near_wl), flags);
+    let far = evaluate(&far_plat, &far_wl,
+                       &uniform_allocation(&far_plat, &far_wl), flags);
 
-    let topo = Topology::from_hw(hw);
-    let ls = evaluate(hw, &topo, wl, &uniform_allocation(hw, wl), flags);
+    let ls = evaluate(plat, wl, &uniform_allocation(plat, wl), flags);
 
     LpSplit {
         pipelined_ns: near.latency_ns.max(far.latency_ns),
@@ -97,11 +121,11 @@ pub fn lp_two_stage(hw: &HwConfig, wl: &Workload, split_at: usize,
 
 /// The split point minimizing the pipelined stage time (balanced
 /// stages).
-pub fn best_split(hw: &HwConfig, wl: &Workload, flags: OptFlags) -> usize {
+pub fn best_split(plat: &Platform, wl: &Workload, flags: OptFlags) -> usize {
     (1..wl.ops.len())
         .min_by(|&a, &b| {
-            let ca = lp_two_stage(hw, wl, a, flags).pipelined_ns;
-            let cb = lp_two_stage(hw, wl, b, flags).pipelined_ns;
+            let ca = lp_two_stage(plat, wl, a, flags).pipelined_ns;
+            let cb = lp_two_stage(plat, wl, b, flags).pipelined_ns;
             ca.total_cmp(&cb)
         })
         .unwrap_or(1)
@@ -113,11 +137,14 @@ mod tests {
     use crate::config::MemKind;
     use crate::workload::models::alexnet;
 
+    fn plat() -> Platform {
+        Platform::preset(SystemType::A, MemKind::Hbm, 4)
+    }
+
     #[test]
     fn lp_split_stages_cover_all_ops() {
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
         let wl = alexnet(1);
-        let s = lp_two_stage(&hw, &wl, 4, OptFlags::NONE);
+        let s = lp_two_stage(&plat(), &wl, 4, OptFlags::NONE);
         assert_eq!(s.near.per_op.len() + s.far.per_op.len(), wl.ops.len());
         assert!(s.pipelined_ns >= s.near.latency_ns.max(s.far.latency_ns) - 1e-9);
     }
@@ -126,10 +153,10 @@ mod tests {
     fn balanced_split_improves_steady_state_throughput() {
         // Per-sample steady-state time under LP (stage max on half
         // grids) should beat LS on the full grid for a deep chain.
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+        let p = plat();
         let wl = alexnet(1);
-        let best = best_split(&hw, &wl, OptFlags::NONE);
-        let s = lp_two_stage(&hw, &wl, best, OptFlags::NONE);
+        let best = best_split(&p, &wl, OptFlags::NONE);
+        let s = lp_two_stage(&p, &wl, best, OptFlags::NONE);
         assert!(
             s.pipelined_ns < s.ls_ns,
             "LP steady state {} !< LS {}",
@@ -140,9 +167,14 @@ mod tests {
 
     #[test]
     fn far_stage_sees_distributed_interface() {
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+        let p = plat();
+        let (near, far) = stage_platforms(&p);
+        // 2x4 halves; the far half's "memory" is the 4-link boundary.
+        assert_eq!((near.xdim, far.xdim), (2, 2));
+        assert_eq!(far.bw_mem, p.bw_nop * 4.0);
+        assert_eq!(far.globals().len(), 2 * 2); // both edge columns
         let wl = alexnet(1);
-        let s = lp_two_stage(&hw, &wl, 4, OptFlags::NONE);
+        let s = lp_two_stage(&p, &wl, 4, OptFlags::NONE);
         // Far stage costs exist and are finite.
         assert!(s.far.latency_ns.is_finite() && s.far.latency_ns > 0.0);
     }
@@ -150,8 +182,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "split inside")]
     fn degenerate_split_rejected() {
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
         let wl = alexnet(1);
-        let _ = lp_two_stage(&hw, &wl, 0, OptFlags::NONE);
+        let _ = lp_two_stage(&plat(), &wl, 0, OptFlags::NONE);
     }
 }

@@ -12,10 +12,11 @@ pub mod lp;
 
 use std::time::Duration;
 
-use crate::config::{HwConfig, MemKind, SystemType};
+use crate::config::{MemKind, SystemType};
 use crate::cost::evaluator::{Objective, OptFlags};
 use crate::engine::{Engine, Scenario, SchedulerRegistry};
 use crate::opt::ga::GaParams;
+use crate::platform::Platform;
 use crate::workload::Workload;
 
 /// Harness-wide knobs.
@@ -95,7 +96,7 @@ pub struct Cell {
 /// The `"baseline"` scheduler is always run (it anchors normalization)
 /// even when absent from `keys`.
 pub fn run_cell(
-    hw: &HwConfig,
+    plat: &Platform,
     wl: &Workload,
     objective: Objective,
     cfg: &EvalConfig,
@@ -107,7 +108,7 @@ pub fn run_cell(
     let schedulers =
         registry.select(&all_keys).expect("known scheduler keys");
     let scenario = Scenario::builder()
-        .hw(hw.clone())
+        .platform(plat.clone())
         .workload(wl.clone())
         .flags(OptFlags::ALL)
         .objective(objective)
@@ -169,11 +170,11 @@ mod tests {
 
     #[test]
     fn cell_normalizes_to_baseline() {
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+        let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
         let wl = alexnet(1);
         let cfg = EvalConfig { quick: true, seed: 7 };
         let cell = run_cell(
-            &hw,
+            &plat,
             &wl,
             Objective::Latency,
             &cfg,

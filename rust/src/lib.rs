@@ -33,8 +33,15 @@
 //! Module map (see DESIGN.md for the full inventory):
 //! * [`engine`] — Scenario → Plan → Report API, `Scheduler` trait +
 //!   registry, `Engine` orchestrator and batch sweeps
-//! * [`config`] — hardware configuration (paper §4.2.1, Table 2)
-//! * [`topology`] — grid types A–D, local indexing, hop models (§4.1, §5.1)
+//! * [`platform`] — data-driven packaging descriptions: declarative
+//!   `PlatformSpec` (grid, link classes, arbitrary memory-attachment
+//!   sets, Table-2 constants), validated `Platform` with hop tables
+//!   precomputed from link-graph routing, paper presets A–D, JSON
+//!   load/save
+//! * [`config`] — thin preset constructors (paper §4.2.1, Table 2)
+//!   onto [`platform::Platform`]
+//! * [`topology`] — grid positions, local-index types, explicit NoP
+//!   link graph (§4.1, §5.1)
 //! * [`workload`] — graph workload IR (ops + explicit dataflow edges,
 //!   multi-model composition) + model zoo (§4.2.2, §7)
 //! * [`partition`] — workload allocations Px/Py (§4.2.3)
@@ -62,6 +69,7 @@ pub mod netsim;
 pub mod opt;
 pub mod partition;
 pub mod pipeline;
+pub mod platform;
 pub mod redistribution;
 pub mod runtime;
 pub mod topology;
@@ -71,3 +79,4 @@ pub mod workload;
 pub use engine::{
     Engine, Plan, Report, Scenario, Scheduler, SchedulerRegistry,
 };
+pub use platform::{Platform, PlatformSpec};

@@ -10,12 +10,15 @@
 
 use std::time::Duration;
 
+use std::path::Path;
+
 use mcmcomm::config::{MemKind, SystemType};
 use mcmcomm::coordinator::Executor;
 use mcmcomm::cost::evaluator::Objective;
 use mcmcomm::engine::{Engine, Scenario, Scheduler, SchedulerRegistry};
 use mcmcomm::ensure;
 use mcmcomm::eval::{figures, EvalConfig};
+use mcmcomm::platform::Platform;
 use mcmcomm::runtime::{GemmRuntime, Manifest};
 use mcmcomm::topology::Pos;
 use mcmcomm::util::cli::Args;
@@ -32,7 +35,9 @@ USAGE: mcmcomm <subcommand> [--options]
   optimize  --model <alexnet|vit|vit_residual|vision_mamba|hydranet|hydranet_branched|multi>
             [--scheme <baseline|simba|greedy|ga|miqp>]
             [--type <A|B|C|D>] [--mem <hbm|dram>] [--grid N] [--objective <latency|edp>]
+            [--platform FILE.json] [--list-platforms]
             [--batch N] [--seed N]
+  platforms --validate FILE.json | --validate-dir DIR | --list
   netsim    [--grid N] [--bw-nop G] [--bw-mem G] [--central] [--diagonal] [--gb BYTES]
   run-e2e   [--model NAME] [--scheme NAME] [--scale S] [--artifacts DIR] [--seed N]
   serve     [--requests N] [--max-batch N] [--model NAME] [--artifacts DIR]
@@ -122,6 +127,25 @@ fn cmd_figures(mut args: Args) -> Result<()> {
     Ok(())
 }
 
+/// Print the built-in preset platforms (the `--list-platforms` flag).
+fn list_platforms() {
+    println!("built-in preset platforms (use --type/--mem/--grid):");
+    for ty in SystemType::ALL {
+        for mem in [MemKind::Hbm, MemKind::Dram] {
+            let plat = Platform::preset(ty, mem, 4);
+            println!(
+                "  {:<14} {} — {} memory attachment(s)",
+                plat.name,
+                ty.name(),
+                plat.globals().len()
+            );
+        }
+    }
+    println!(
+        "custom platforms: --platform <file.json> (see examples/platforms/)"
+    );
+}
+
 fn cmd_optimize(mut args: Args) -> Result<()> {
     let model = args.get_or("model", "alexnet");
     let scheme = args.get_or("scheme", "ga");
@@ -129,6 +153,8 @@ fn cmd_optimize(mut args: Args) -> Result<()> {
     let mem = parse_mem(&args.get_or("mem", "hbm"))?;
     let grid = args.get_usize("grid", 4).map_err(Error::msg)?;
     let batch = args.get_usize("batch", 1).map_err(Error::msg)?;
+    let platform_file = args.get("platform");
+    let list = args.flag("list-platforms");
     let objective = match args.get_or("objective", "latency").as_str() {
         "latency" => Objective::Latency,
         "edp" => Objective::Edp,
@@ -136,25 +162,34 @@ fn cmd_optimize(mut args: Args) -> Result<()> {
     };
     let seed = args.get_usize("seed", 42).map_err(Error::msg)? as u64;
     args.finish().map_err(Error::msg)?;
+    if list {
+        list_platforms();
+        return Ok(());
+    }
 
     let registry = SchedulerRegistry::standard(seed);
     let scheduler = registry.require(&scheme)?;
-    let scenario = Scenario::builder()
-        .system(ty)
-        .mem(mem)
-        .grid(grid)
+    // The headline 4x4 type-A HBM preset stays the default; a JSON
+    // description overrides the preset knobs.
+    let mut builder = Scenario::builder().system(ty).mem(mem).grid(grid);
+    if let Some(path) = &platform_file {
+        builder = builder.platform(Platform::load(Path::new(path))?);
+    }
+    let scenario = builder
         .workload(parse_model(&model, batch)?)
         .objective(objective)
         .build()?;
     let engine = Engine::new(scenario);
 
+    let plat = engine.scenario().platform();
     println!(
-        "optimizing {} on {} {} {}x{} (objective: {objective:?}, scheme: {})",
+        "optimizing {} on platform {} ({}x{} grid, {} memory \
+         attachment(s), objective: {objective:?}, scheme: {})",
         engine.scenario().workload().name,
-        engine.scenario().hw().ty.name(),
-        engine.scenario().hw().mem.name(),
-        grid,
-        grid,
+        plat.name,
+        plat.xdim,
+        plat.ydim,
+        plat.globals().len(),
         scheduler.name()
     );
     let t0 = std::time::Instant::now();
@@ -185,6 +220,45 @@ fn cmd_optimize(mut args: Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_platforms(mut args: Args) -> Result<()> {
+    let file = args.get("validate");
+    let dir = args.get("validate-dir");
+    let list = args.flag("list");
+    args.finish().map_err(Error::msg)?;
+    if list || (file.is_none() && dir.is_none()) {
+        list_platforms();
+        return Ok(());
+    }
+    let mut files: Vec<std::path::PathBuf> = Vec::new();
+    if let Some(f) = file {
+        files.push(f.into());
+    }
+    if let Some(d) = dir {
+        let mut entries: Vec<_> = std::fs::read_dir(&d)
+            .map_err(|e| Error::msg(format!("reading {d}: {e}")))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "json"))
+            .collect();
+        entries.sort();
+        ensure!(!entries.is_empty(), "no *.json platform files in {d}");
+        files.extend(entries);
+    }
+    for path in &files {
+        let plat = Platform::load(path)?;
+        println!(
+            "OK  {:<40} {} ({}x{} grid, {} attachment(s))",
+            path.display(),
+            plat.name,
+            plat.xdim,
+            plat.ydim,
+            plat.globals().len()
+        );
+    }
+    println!("validated {} platform file(s)", files.len());
+    Ok(())
+}
+
 fn cmd_netsim(mut args: Args) -> Result<()> {
     let grid = args.get_usize("grid", 4).map_err(Error::msg)?;
     let bw_nop = args.get_f64("bw-nop", 60.0).map_err(Error::msg)?;
@@ -200,7 +274,7 @@ fn cmd_netsim(mut args: Args) -> Result<()> {
     };
     let (_, res) = mcmcomm::netsim::all_pull_from_memory(
         grid, gb, bw_nop, bw_mem, attach, diagonal,
-    );
+    )?;
     println!(
         "grid {grid}x{grid}, NoP {bw_nop} GB/s, mem {bw_mem} GB/s, attach {:?}, diagonal {diagonal}",
         attach
@@ -327,6 +401,7 @@ fn main() {
     let result = match sub.as_str() {
         "figures" => cmd_figures(args),
         "optimize" => cmd_optimize(args),
+        "platforms" => cmd_platforms(args),
         "netsim" => cmd_netsim(args),
         "run-e2e" => cmd_run_e2e(args),
         "serve" => cmd_serve(args),

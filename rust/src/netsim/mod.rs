@@ -9,7 +9,9 @@
 //! Outputs per-link carried bytes (the Fig. 3(a–c) utilization heatmaps)
 //! and flow/total completion times (Fig. 3(d)).
 
+use crate::platform::Platform;
 use crate::topology::links::{LinkGraph, LinkId, NodeId};
+use crate::util::error::Result;
 
 /// One transfer: `bytes` from `src` to `dst` along the graph's
 /// deterministic route.
@@ -101,10 +103,13 @@ fn maxmin_rates(
 }
 
 /// Run all flows to completion; returns per-flow finish times and
-/// per-link carried bytes.
-pub fn simulate(graph: &LinkGraph, flows: &[Flow]) -> SimResult {
-    let routes: Vec<Vec<LinkId>> =
-        flows.iter().map(|f| graph.route(f.src, f.dst)).collect();
+/// per-link carried bytes. Errors if a flow's route cannot be
+/// materialized (malformed graph / node ids).
+pub fn simulate(graph: &LinkGraph, flows: &[Flow]) -> Result<SimResult> {
+    let routes: Vec<Vec<LinkId>> = flows
+        .iter()
+        .map(|f| graph.route(f.src, f.dst))
+        .collect::<Result<_>>()?;
     let mut remaining: Vec<f64> = flows.iter().map(|f| f.bytes).collect();
     let mut active: Vec<bool> = remaining.iter().map(|&b| b > 0.0).collect();
     let mut finish = vec![0.0f64; flows.len()];
@@ -148,7 +153,7 @@ pub fn simulate(graph: &LinkGraph, flows: &[Flow]) -> SimResult {
             }
         }
     }
-    SimResult { flow_finish_ns: finish, link_bytes, makespan_ns: now }
+    Ok(SimResult { flow_finish_ns: finish, link_bytes, makespan_ns: now })
 }
 
 /// The Figure 3 scenario: every chiplet of an `n x n` mesh pulls `bytes`
@@ -160,7 +165,7 @@ pub fn all_pull_from_memory(
     bw_mem: f64,
     attach: crate::topology::Pos,
     diagonal: bool,
-) -> (LinkGraph, SimResult) {
+) -> Result<(LinkGraph, SimResult)> {
     let mut g = LinkGraph::mesh(n, n, diagonal, bw_nop);
     let mem = g.attach_memory(attach, bw_mem);
     let flows: Vec<Flow> = (0..n)
@@ -171,8 +176,43 @@ pub fn all_pull_from_memory(
             bytes,
         })
         .collect();
-    let res = simulate(&g, &flows);
-    (g, res)
+    let res = simulate(&g, &flows)?;
+    Ok((g, res))
+}
+
+/// The same all-pull study on an arbitrary [`Platform`]: every chiplet
+/// pulls `bytes` from the memory stack of its *nearest* attachment
+/// (mirroring the analytical model's serving-attachment assumption),
+/// over the platform's own link graph — per-class NoP/diagonal
+/// bandwidths and per-attachment off-chip bandwidths included.
+pub fn platform_pull_from_memory(
+    plat: &Platform,
+    bytes: f64,
+    diagonal: bool,
+) -> Result<(LinkGraph, SimResult)> {
+    let g = plat.link_graph(diagonal);
+    // Memory nodes were appended after the chiplets, in attachment
+    // declaration order.
+    let n_chiplets = plat.num_chiplets();
+    let mem_of = |pos: crate::topology::Pos| -> NodeId {
+        let i = plat
+            .spec()
+            .attachments
+            .iter()
+            .position(|a| a.pos == pos)
+            .expect("nearest_global returns an attachment position");
+        n_chiplets + i
+    };
+    let flows: Vec<Flow> = plat
+        .positions()
+        .map(|p| Flow {
+            src: mem_of(plat.nearest_global(p)),
+            dst: g.chiplet_id(p),
+            bytes,
+        })
+        .collect();
+    let res = simulate(&g, &flows)?;
+    Ok((g, res))
 }
 
 #[cfg(test)]
@@ -184,7 +224,7 @@ mod tests {
     fn single_flow_full_bandwidth() {
         let g = LinkGraph::mesh(2, 2, false, 60.0);
         let f = [Flow { src: 0, dst: 1, bytes: 600.0 }];
-        let r = simulate(&g, &f);
+        let r = simulate(&g, &f).unwrap();
         assert!((r.makespan_ns - 10.0).abs() < 1e-6);
         assert_eq!(r.flow_finish_ns[0], r.makespan_ns);
     }
@@ -197,7 +237,7 @@ mod tests {
             Flow { src: 0, dst: 1, bytes: 600.0 },
             Flow { src: 0, dst: 2, bytes: 600.0 },
         ];
-        let r = simulate(&g, &f);
+        let r = simulate(&g, &f).unwrap();
         // Flow 0 shares 0->1 (30 each) until flow... both finish their
         // 600 B: flow0 at t=20 (after sharing), flow1 continues at full
         // rate on the second hop.
@@ -210,9 +250,11 @@ mod tests {
         // Fig 3(d), DRAM: doubling NoP bandwidth yields no benefit.
         let b = 1e6;
         let (_, slow) =
-            all_pull_from_memory(4, b, 60.0, 60.0, Pos::new(0, 0), false);
+            all_pull_from_memory(4, b, 60.0, 60.0, Pos::new(0, 0), false)
+                .unwrap();
         let (_, fast) =
-            all_pull_from_memory(4, b, 120.0, 60.0, Pos::new(0, 0), false);
+            all_pull_from_memory(4, b, 120.0, 60.0, Pos::new(0, 0), false)
+                .unwrap();
         let ratio = slow.makespan_ns / fast.makespan_ns;
         assert!((ratio - 1.0).abs() < 0.05, "ratio={ratio}");
         // Memory link carries everything: 16 * b bytes.
@@ -225,9 +267,11 @@ mod tests {
         // Fig 3(d), HBM: performance scales ~linearly with NoP bandwidth.
         let b = 1e6;
         let (_, slow) =
-            all_pull_from_memory(4, b, 60.0, 1024.0, Pos::new(0, 0), false);
+            all_pull_from_memory(4, b, 60.0, 1024.0, Pos::new(0, 0), false)
+                .unwrap();
         let (_, fast) =
-            all_pull_from_memory(4, b, 120.0, 1024.0, Pos::new(0, 0), false);
+            all_pull_from_memory(4, b, 120.0, 1024.0, Pos::new(0, 0), false)
+                .unwrap();
         let ratio = slow.makespan_ns / fast.makespan_ns;
         assert!(ratio > 1.7, "ratio={ratio}");
     }
@@ -238,9 +282,11 @@ mod tests {
         // (paper: 1.53x).
         let b = 1e6;
         let (_, peri) =
-            all_pull_from_memory(4, b, 60.0, 1024.0, Pos::new(0, 0), false);
+            all_pull_from_memory(4, b, 60.0, 1024.0, Pos::new(0, 0), false)
+                .unwrap();
         let (_, cent) =
-            all_pull_from_memory(4, b, 60.0, 1024.0, Pos::new(1, 1), false);
+            all_pull_from_memory(4, b, 60.0, 1024.0, Pos::new(1, 1), false)
+                .unwrap();
         let speedup = peri.makespan_ns / cent.makespan_ns;
         assert!(speedup > 1.3 && speedup < 2.2, "speedup={speedup}");
     }
@@ -249,7 +295,8 @@ mod tests {
     fn conservation_of_bytes() {
         let b = 1e5;
         let (g, r) =
-            all_pull_from_memory(3, b, 60.0, 200.0, Pos::new(0, 0), false);
+            all_pull_from_memory(3, b, 60.0, 200.0, Pos::new(0, 0), false)
+                .unwrap();
         // The memory attachment link must carry exactly 9 * b minus the
         // attach chiplet's own flow (which crosses it too: src==mem).
         let mem_out: f64 = g
@@ -265,19 +312,46 @@ mod tests {
     #[test]
     fn utilization_bounded_by_one() {
         let (g, r) =
-            all_pull_from_memory(4, 1e5, 60.0, 1024.0, Pos::new(0, 0), false);
+            all_pull_from_memory(4, 1e5, 60.0, 1024.0, Pos::new(0, 0), false)
+                .unwrap();
         for u in r.utilization(&g) {
             assert!((0.0..=1.0 + 1e-9).contains(&u));
         }
     }
 
     #[test]
+    fn platform_pull_favors_distributed_attachments() {
+        // Same aggregate demand: the edge-attachment preset drains the
+        // package much faster than the single-corner one (16 stacks of
+        // entrances vs 2 links), the §3.3 motivation for
+        // packaging-adaptive optimization.
+        use crate::config::{MemKind, SystemType};
+        let b = 1e6;
+        let (_, corner) = platform_pull_from_memory(
+            &Platform::preset(SystemType::A, MemKind::Hbm, 4), b, false,
+        )
+        .unwrap();
+        let (_, edges) = platform_pull_from_memory(
+            &Platform::preset(SystemType::B, MemKind::Hbm, 4), b, false,
+        )
+        .unwrap();
+        assert!(
+            edges.makespan_ns < corner.makespan_ns / 2.0,
+            "edges {} vs corner {}",
+            edges.makespan_ns,
+            corner.makespan_ns
+        );
+    }
+
+    #[test]
     fn diagonal_links_relieve_corner_congestion() {
         let b = 1e6;
         let (_, base) =
-            all_pull_from_memory(4, b, 60.0, 1024.0, Pos::new(0, 0), false);
+            all_pull_from_memory(4, b, 60.0, 1024.0, Pos::new(0, 0), false)
+                .unwrap();
         let (_, diag) =
-            all_pull_from_memory(4, b, 60.0, 1024.0, Pos::new(0, 0), true);
+            all_pull_from_memory(4, b, 60.0, 1024.0, Pos::new(0, 0), true)
+                .unwrap();
         assert!(diag.makespan_ns < base.makespan_ns);
     }
 }

@@ -22,14 +22,13 @@
 
 use std::time::{Duration, Instant};
 
-use crate::config::HwConfig;
 use crate::cost::evaluator::{Objective, OptFlags};
 use crate::cost::CachedEval;
 use crate::partition::{
     dim_bounds, project_to_sum, simba_allocation, uniform_allocation,
     Allocation,
 };
-use crate::topology::Topology;
+use crate::platform::Platform;
 use crate::util::par::{par_map_state, resolve_threads};
 use crate::util::rng::Pcg;
 use crate::workload::Workload;
@@ -79,7 +78,7 @@ pub struct GaResult {
 }
 
 struct Ctx<'a> {
-    hw: &'a HwConfig,
+    plat: &'a Platform,
     wl: &'a Workload,
     /// Per op: ids of every incident dataflow edge (in + out) — the
     /// neighborhood a mutation of that op can perturb.
@@ -91,7 +90,7 @@ struct Ctx<'a> {
 }
 
 impl<'a> Ctx<'a> {
-    fn new(hw: &'a HwConfig, wl: &'a Workload) -> Ctx<'a> {
+    fn new(plat: &'a Platform, wl: &'a Workload) -> Ctx<'a> {
         let n = wl.ops.len();
         let mut incident = vec![Vec::new(); n];
         let mut out_edges = vec![Vec::new(); n];
@@ -100,7 +99,7 @@ impl<'a> Ctx<'a> {
             incident[edge.dst].push(e);
             out_edges[edge.src].push(e);
         }
-        Ctx { hw, wl, incident, out_edges }
+        Ctx { plat, wl, incident, out_edges }
     }
 }
 
@@ -111,7 +110,7 @@ fn mutate(ctx: &Ctx, rng: &mut Pcg, a: &mut Allocation, times: usize) {
         match rng.range_usize(0, 2) {
             0 => {
                 // Move one tile of rows between two grid rows.
-                let b = dim_bounds(op.m, ctx.hw.xdim, ctx.hw.r);
+                let b = dim_bounds(op.m, ctx.plat.xdim, ctx.plat.r);
                 let px = &mut a.parts[i].px;
                 let from = rng.range_usize(0, px.len() - 1);
                 let to = rng.range_usize(0, px.len() - 1);
@@ -123,7 +122,7 @@ fn mutate(ctx: &Ctx, rng: &mut Pcg, a: &mut Allocation, times: usize) {
                 }
             }
             1 => {
-                let b = dim_bounds(op.n, ctx.hw.ydim, ctx.hw.c);
+                let b = dim_bounds(op.n, ctx.plat.ydim, ctx.plat.c);
                 let py = &mut a.parts[i].py;
                 let from = rng.range_usize(0, py.len() - 1);
                 let to = rng.range_usize(0, py.len() - 1);
@@ -142,7 +141,7 @@ fn mutate(ctx: &Ctx, rng: &mut Pcg, a: &mut Allocation, times: usize) {
                 let inc = &ctx.incident[i];
                 if !inc.is_empty() {
                     let e = inc[rng.range_usize(0, inc.len() - 1)];
-                    a.collect_cols[e] = rng.range_usize(0, ctx.hw.ydim - 1);
+                    a.collect_cols[e] = rng.range_usize(0, ctx.plat.ydim - 1);
                 }
             }
         }
@@ -165,10 +164,10 @@ fn crossover(ctx: &Ctx, rng: &mut Pcg, a: &Allocation, b: &Allocation,
 }
 
 fn random_individual(ctx: &Ctx, rng: &mut Pcg) -> Allocation {
-    let mut a = uniform_allocation(ctx.hw, ctx.wl);
+    let mut a = uniform_allocation(ctx.plat, ctx.wl);
     for (i, op) in ctx.wl.ops.iter().enumerate() {
-        let bx = dim_bounds(op.m, ctx.hw.xdim, ctx.hw.r);
-        let by = dim_bounds(op.n, ctx.hw.ydim, ctx.hw.c);
+        let bx = dim_bounds(op.m, ctx.plat.xdim, ctx.plat.r);
+        let by = dim_bounds(op.n, ctx.plat.ydim, ctx.plat.c);
         for v in a.parts[i].px.iter_mut() {
             let jitter = rng.range_i64(-2, 2) * bx.step as i64;
             *v = (*v as i64 + jitter).max(0) as usize;
@@ -181,7 +180,7 @@ fn random_individual(ctx: &Ctx, rng: &mut Pcg) -> Allocation {
         project_to_sum(&mut a.parts[i].py, op.n, by);
     }
     for c in a.collect_cols.iter_mut() {
-        *c = rng.range_usize(0, ctx.hw.ydim - 1);
+        *c = rng.range_usize(0, ctx.plat.ydim - 1);
     }
     a
 }
@@ -214,28 +213,27 @@ fn elite_indices(pop: &[(Allocation, f64)], k: usize) -> Vec<usize> {
 
 /// Run the GA.
 pub fn optimize(
-    hw: &HwConfig,
-    topo: &Topology,
+    plat: &Platform,
     wl: &Workload,
     flags: OptFlags,
     obj: Objective,
     params: &GaParams,
 ) -> GaResult {
-    let ctx = Ctx::new(hw, wl);
+    let ctx = Ctx::new(plat, wl);
     let mut rng = Pcg::seeded(params.seed);
     let t0 = Instant::now();
 
     let workers = resolve_threads(params.threads)
         .min(params.population.max(1));
     let mut caches: Vec<CachedEval<'_>> = (0..workers)
-        .map(|_| CachedEval::new(hw, topo, wl, flags))
+        .map(|_| CachedEval::new(plat, wl, flags))
         .collect();
 
     // Seed the population with the two reference schemes + random jitter
     // (genomes drawn on this thread, then scored as one batch).
     let mut genomes: Vec<Allocation> = Vec::with_capacity(params.population);
-    genomes.push(uniform_allocation(hw, wl));
-    genomes.push(simba_allocation(hw, topo, wl));
+    genomes.push(uniform_allocation(plat, wl));
+    genomes.push(simba_allocation(plat, wl));
     while genomes.len() < params.population {
         genomes.push(random_individual(&ctx, &mut rng));
     }
@@ -322,10 +320,8 @@ mod tests {
     use crate::cost::evaluator::evaluate;
     use crate::workload::models::alexnet;
 
-    fn setup() -> (HwConfig, Topology, Workload) {
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-        let topo = Topology::from_hw(&hw);
-        (hw, topo, alexnet(1))
+    fn setup() -> (Platform, Workload) {
+        (Platform::preset(SystemType::A, MemKind::Hbm, 4), alexnet(1))
     }
 
     fn small_params(seed: u64) -> GaParams {
@@ -339,20 +335,20 @@ mod tests {
 
     #[test]
     fn ga_never_worse_than_uniform() {
-        let (hw, topo, wl) = setup();
-        let uni = uniform_allocation(&hw, &wl);
-        let base = evaluate(&hw, &topo, &wl, &uni, OptFlags::ALL)
+        let (plat, wl) = setup();
+        let uni = uniform_allocation(&plat, &wl);
+        let base = evaluate(&plat, &wl, &uni, OptFlags::ALL)
             .objective(Objective::Latency);
-        let r = optimize(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency,
+        let r = optimize(&plat, &wl, OptFlags::ALL, Objective::Latency,
                          &small_params(1));
         assert!(r.objective_value <= base * 1.0001);
-        assert!(r.alloc.validate(&wl, &hw).is_ok());
+        assert!(r.alloc.validate(&wl, &plat).is_ok());
     }
 
     #[test]
     fn ga_monotone_history() {
-        let (hw, topo, wl) = setup();
-        let r = optimize(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency,
+        let (plat, wl) = setup();
+        let r = optimize(&plat, &wl, OptFlags::ALL, Objective::Latency,
                          &small_params(2));
         for w in r.history.windows(2) {
             assert!(w[1] <= w[0] * 1.0001, "elitism must be monotone");
@@ -361,10 +357,10 @@ mod tests {
 
     #[test]
     fn ga_deterministic_per_seed() {
-        let (hw, topo, wl) = setup();
-        let a = optimize(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency,
+        let (plat, wl) = setup();
+        let a = optimize(&plat, &wl, OptFlags::ALL, Objective::Latency,
                          &small_params(7));
-        let b = optimize(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency,
+        let b = optimize(&plat, &wl, OptFlags::ALL, Objective::Latency,
                          &small_params(7));
         assert_eq!(a.objective_value, b.objective_value);
         assert_eq!(a.alloc, b.alloc);
@@ -375,10 +371,10 @@ mod tests {
         // The reported objective must be the true evaluator's score of
         // the reported allocation, bit-for-bit (delta-scoring and
         // parallelism must not leak into results).
-        let (hw, topo, wl) = setup();
-        let r = optimize(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency,
+        let (plat, wl) = setup();
+        let r = optimize(&plat, &wl, OptFlags::ALL, Objective::Latency,
                          &small_params(5));
-        let full = evaluate(&hw, &topo, &wl, &r.alloc, OptFlags::ALL)
+        let full = evaluate(&plat, &wl, &r.alloc, OptFlags::ALL)
             .objective(Objective::Latency);
         assert_eq!(r.objective_value.to_bits(), full.to_bits());
     }
@@ -387,8 +383,8 @@ mod tests {
     fn elite_selection_tolerates_nan() {
         // A NaN objective must sort last, never panic (satellite:
         // total_cmp population ordering).
-        let (hw, _, wl) = setup();
-        let a = uniform_allocation(&hw, &wl);
+        let (plat, wl) = setup();
+        let a = uniform_allocation(&plat, &wl);
         let pop = vec![
             (a.clone(), f64::NAN),
             (a.clone(), 2.0),
@@ -401,10 +397,9 @@ mod tests {
 
     #[test]
     fn budget_caps_generations() {
-        let (hw, topo, wl) = setup();
+        let (plat, wl) = setup();
         let r = optimize(
-            &hw,
-            &topo,
+            &plat,
             &wl,
             OptFlags::ALL,
             Objective::Latency,

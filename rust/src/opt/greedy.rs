@@ -8,27 +8,25 @@
 //! stores) that the end-to-end evaluator scores. That blindness is
 //! exactly why it can lose to plain uniform LS end-to-end (§7.1).
 
-use crate::config::HwConfig;
 use crate::cost::compute::comp_ns;
 use crate::cost::evaluator::{evaluate, Objective, OptFlags};
 use crate::cost::latency::{load, offload};
 use crate::partition::{dim_bounds, uniform_allocation, Allocation};
-use crate::topology::Topology;
+use crate::platform::Platform;
 use crate::workload::{GemmOp, Workload};
 
 /// Standalone (single-layer) cost of one op under a candidate partition.
 fn layer_cost(
-    hw: &HwConfig,
-    topo: &Topology,
+    plat: &Platform,
     op: &GemmOp,
     part: &crate::partition::Partition,
 ) -> f64 {
-    let in_ns = load(hw, topo, op, part, false, true).wall_ns();
-    let comp = (0..hw.xdim)
-        .flat_map(|x| (0..hw.ydim).map(move |y| (x, y)))
-        .map(|(x, y)| comp_ns(hw, op, part.px[x], part.py[y]))
+    let in_ns = load(plat, op, part, false, true).wall_ns();
+    let comp = (0..plat.xdim)
+        .flat_map(|x| (0..plat.ydim).map(move |y| (x, y)))
+        .map(|(x, y)| comp_ns(plat, op, part.px[x], part.py[y]))
         .fold(0.0, f64::max);
-    let out_ns = offload(hw, topo, op, false).wall_ns();
+    let out_ns = offload(plat, op, false).wall_ns();
     in_ns + comp + out_ns
 }
 
@@ -40,26 +38,25 @@ pub struct GreedyResult {
 
 /// Layer-by-layer greedy optimization (near-instant, §3.5).
 pub fn optimize(
-    hw: &HwConfig,
-    topo: &Topology,
+    plat: &Platform,
     wl: &Workload,
     flags: OptFlags,
     obj: Objective,
 ) -> GreedyResult {
-    let mut alloc = uniform_allocation(hw, wl);
+    let mut alloc = uniform_allocation(plat, wl);
     for (i, op) in wl.ops.iter().enumerate() {
-        let bx = dim_bounds(op.m, hw.xdim, hw.r);
-        let by = dim_bounds(op.n, hw.ydim, hw.c);
-        let mut cur = layer_cost(hw, topo, op, &alloc.parts[i]);
+        let bx = dim_bounds(op.m, plat.xdim, plat.r);
+        let by = dim_bounds(op.n, plat.ydim, plat.c);
+        let mut cur = layer_cost(plat, op, &alloc.parts[i]);
         let mut improved = true;
         while improved {
             improved = false;
             // Try every single-tile exchange in px then py.
             for dim in 0..2 {
                 let (len, step, lo, hi) = if dim == 0 {
-                    (hw.xdim, bx.step, bx.lo, bx.hi)
+                    (plat.xdim, bx.step, bx.lo, bx.hi)
                 } else {
-                    (hw.ydim, by.step, by.lo, by.hi)
+                    (plat.ydim, by.step, by.lo, by.hi)
                 };
                 for from in 0..len {
                     for to in 0..len {
@@ -80,7 +77,7 @@ pub fn optimize(
                         }
                         vals[from] -= s;
                         vals[to] += s;
-                        let c = layer_cost(hw, topo, op, &alloc.parts[i]);
+                        let c = layer_cost(plat, op, &alloc.parts[i]);
                         if c + 1e-9 < cur {
                             cur = c;
                             improved = true;
@@ -98,7 +95,7 @@ pub fn optimize(
             }
         }
     }
-    let objective_value = evaluate(hw, topo, wl, &alloc, flags).objective(obj);
+    let objective_value = evaluate(plat, wl, &alloc, flags).objective(obj);
     GreedyResult { alloc, objective_value }
 }
 
@@ -110,27 +107,25 @@ mod tests {
 
     #[test]
     fn greedy_is_valid_and_fast() {
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-        let topo = Topology::from_hw(&hw);
+        let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
         let wl = alexnet(1);
         let t0 = std::time::Instant::now();
-        let r = optimize(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency);
-        assert!(r.alloc.validate(&wl, &hw).is_ok());
+        let r = optimize(&plat, &wl, OptFlags::ALL, Objective::Latency);
+        assert!(r.alloc.validate(&wl, &plat).is_ok());
         assert!(r.objective_value > 0.0);
         assert!(t0.elapsed().as_secs() < 10, "greedy must be near-instant");
     }
 
     #[test]
     fn greedy_improves_layer_cost_vs_uniform() {
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-        let topo = Topology::from_hw(&hw);
+        let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
         let wl = alexnet(1);
-        let uni = uniform_allocation(&hw, &wl);
-        let r = optimize(&hw, &topo, &wl, OptFlags::NONE, Objective::Latency);
+        let uni = uniform_allocation(&plat, &wl);
+        let r = optimize(&plat, &wl, OptFlags::NONE, Objective::Latency);
         // Per its objective (standalone layer cost) greedy must not lose.
         for (i, op) in wl.ops.iter().enumerate() {
-            let g = layer_cost(&hw, &topo, op, &r.alloc.parts[i]);
-            let u = layer_cost(&hw, &topo, op, &uni.parts[i]);
+            let g = layer_cost(&plat, op, &r.alloc.parts[i]);
+            let u = layer_cost(&plat, op, &uni.parts[i]);
             assert!(g <= u + 1e-6, "op {i}: greedy {g} > uniform {u}");
         }
     }

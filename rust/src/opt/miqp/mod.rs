@@ -12,10 +12,9 @@ pub mod solve;
 
 use std::time::Duration;
 
-use crate::config::HwConfig;
 use crate::cost::evaluator::{evaluate, Objective, OptFlags};
 use crate::partition::Allocation;
-use crate::topology::Topology;
+use crate::platform::Platform;
 use crate::workload::Workload;
 
 /// Result of an MIQP optimization run.
@@ -31,24 +30,23 @@ pub struct MiqpResult {
 
 /// Optimize workload partitions with the MIQP scheduler.
 pub fn optimize(
-    hw: &HwConfig,
-    topo: &Topology,
+    plat: &Platform,
     wl: &Workload,
     flags: OptFlags,
     obj: Objective,
     budget: Duration,
     seed: u64,
 ) -> MiqpResult {
-    let f = objective::build(hw, topo, wl, flags, obj);
+    let f = objective::build(plat, wl, flags, obj);
     let params = solve::SolveParams { budget, seed, ..Default::default() };
     let sol = solve::solve(&f.model, &params);
-    let alloc = objective::decode(&f, hw, wl, &sol.point);
+    let alloc = objective::decode(&f, plat, wl, &sol.point);
     // Always re-score on the single source of truth.
-    let cost = evaluate(hw, topo, wl, &alloc, flags);
+    let cost = evaluate(plat, wl, &alloc, flags);
     // Keep the better of {decoded, uniform} — the solver must never
     // return something worse than the baseline it started from.
-    let uni = crate::partition::uniform_allocation(hw, wl);
-    let uni_cost = evaluate(hw, topo, wl, &uni, flags);
+    let uni = crate::partition::uniform_allocation(plat, wl);
+    let uni_cost = evaluate(plat, wl, &uni, flags);
     if uni_cost.objective(obj) < cost.objective(obj) {
         return MiqpResult {
             alloc: uni,

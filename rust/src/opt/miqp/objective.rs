@@ -17,10 +17,10 @@
 //!   (the paper's "fixed communication strategy", §6.1), with the
 //!   collection column at its §5.2 balanced optimum.
 
-use crate::config::HwConfig;
 use crate::cost::evaluator::{evaluate, Objective, OptFlags};
 use crate::partition::{dim_bounds, uniform_allocation, Allocation, Partition};
-use crate::topology::{Pos, Topology};
+use crate::platform::Platform;
+use crate::topology::Pos;
 use crate::workload::Workload;
 
 use super::expr::{MaxTerm, QuadExpr};
@@ -59,25 +59,24 @@ pub struct Formulation {
     pub collect_cols: Vec<usize>,
 }
 
-/// Build the MIQP model for `wl` on `hw` with the §5 optimizations in
+/// Build the MIQP model for `wl` on `plat` with the §5 optimizations in
 /// `flags`, optimizing `obj`.
 pub fn build(
-    hw: &HwConfig,
-    topo: &Topology,
+    plat: &Platform,
     wl: &Workload,
     flags: OptFlags,
     obj: Objective,
 ) -> Formulation {
     let n = wl.ops.len();
-    let (xd, yd) = (hw.xdim, hw.ydim);
+    let (xd, yd) = (plat.xdim, plat.ydim);
     let mut model = Model::default();
     let mut base_px = Vec::with_capacity(n);
     let mut base_py = Vec::with_capacity(n);
 
     // ---- variables + partition constraints (§4.2.3, Algorithm 1).
     for op in &wl.ops {
-        let bx = dim_bounds(op.m, xd, hw.r);
-        let by = dim_bounds(op.n, yd, hw.c);
+        let bx = dim_bounds(op.m, xd, plat.r);
+        let by = dim_bounds(op.n, yd, plat.c);
         let b0 = model.dim();
         for x in 0..xd {
             model.add_var(
@@ -107,8 +106,8 @@ pub fn build(
     // dataflow edge and the collection columns from the uniform
     // allocation (§6.1). An op whose activations arrived by
     // redistribution names its (unique) incoming edge.
-    let uni = uniform_allocation(hw, wl);
-    let uni_cost = evaluate(hw, topo, wl, &uni, flags);
+    let uni = uniform_allocation(plat, wl);
+    let uni_cost = evaluate(plat, wl, &uni, flags);
     let ne = wl.edges.len();
     let (mut in_edge, mut out_edge) = (Vec::new(), Vec::new());
     wl.sole_edges_into(&mut in_edge, &mut out_edge);
@@ -124,7 +123,7 @@ pub fn build(
     for (e, edge) in wl.edges.iter().enumerate() {
         if redist_edge[e] {
             collect_cols[e] = crate::redistribution::best_collect_col(
-                hw,
+                plat,
                 &wl.ops[edge.src],
                 &uni.parts[edge.src],
                 &uni.parts[edge.dst],
@@ -142,36 +141,36 @@ pub fn build(
         Objective::Edp => (1.0, l0 / e0),
     };
 
-    let bw = hw.bw_nop;
-    let bpe = hw.bytes_per_elem;
+    let bw = plat.bw_nop;
+    let bpe = plat.bytes_per_elem;
 
     for (i, op) in wl.ops.iter().enumerate() {
         let in_e = in_edge[i].filter(|&e| redist_edge[e]);
         let acts_from_redist = in_e.is_some();
-        let hi_bw = crate::cost::latency::high_bw(hw);
+        let hi_bw = crate::cost::latency::high_bw(plat);
         let tile_cycles =
-            (2 * hw.r + hw.c + crate::util::math::ceil_div(op.k, op.groups))
+            (2 * plat.r + plat.c + crate::util::math::ceil_div(op.k, op.groups))
                 .saturating_sub(2) as f64
                 * op.groups as f64;
         let comp_coeff =
-            hw.cycles_to_ns(tile_cycles) / (hw.r as f64 * hw.c as f64);
+            plat.cycles_to_ns(tile_cycles) / (plat.r as f64 * plat.c as f64);
 
         // ---- in + comp stage: max over chiplets of (in(x,y) + comp(x,y)).
         let mut off_bytes = op.k as f64 * op.n as f64 * bpe;
         if !acts_from_redist {
             off_bytes += op.m as f64 * op.k as f64 * bpe;
         }
-        let offchip_ns = off_bytes / hw.bw_mem;
+        let offchip_ns = off_bytes / plat.bw_mem;
         let mut cases = Vec::with_capacity(xd * yd);
-        for p in topo.positions() {
+        for p in plat.positions() {
             let Pos { row: x, col: y } = p;
             let (act_hops, w_hops) = if hi_bw {
                 (
-                    topo.hops_row_shared(p, flags.diagonal) as f64,
-                    topo.hops_col_shared(p, flags.diagonal) as f64,
+                    plat.hops_row_shared(p, flags.diagonal) as f64,
+                    plat.hops_col_shared(p, flags.diagonal) as f64,
                 )
             } else {
-                let h = topo.hops_low_bw(p, flags.diagonal) as f64;
+                let h = plat.hops_low_bw(p, flags.diagonal) as f64;
                 (h, h)
             };
             let vpx = QuadExpr::var(layout.px(i, x));
@@ -261,7 +260,7 @@ pub fn build(
         };
         if !skip_store {
             let store =
-                crate::cost::latency::offload(hw, topo, op, flags.diagonal)
+                crate::cost::latency::offload(plat, op, flags.diagonal)
                     .wall_ns();
             model.add_quad(
                 &format!("{}::store", op.name),
@@ -272,12 +271,12 @@ pub fn build(
         // ---- energy (only weighted in for EDP).
         if w_en > 0.0 {
             let mut en = QuadExpr::zero();
-            for p in topo.positions() {
+            for p in plat.positions() {
                 let Pos { row: x, col: y } = p;
                 let vpx = QuadExpr::var(layout.px(i, x));
                 let vpy = QuadExpr::var(layout.py(i, y));
                 // SRAM: (px*K + K*py + px*py) bytes * 8 * c_sram.
-                let sram = hw.energy.sram_pj_bit * 8.0 * bpe;
+                let sram = plat.energy.sram_pj_bit * 8.0 * bpe;
                 en = en
                     .add(&vpx.clone().scale(op.k as f64 * sram))
                     .add(&vpy.clone().scale(op.k as f64 * sram))
@@ -286,13 +285,13 @@ pub fn build(
                 // px*py/(R*C) * R*C.
                 en = en.add(
                     &vpx.mul(&vpy).scale(
-                        hw.energy.mac_pj_cycle * tile_cycles
-                            / (hw.r as f64 * hw.c as f64),
+                        plat.energy.mac_pj_cycle * tile_cycles
+                            / (plat.r as f64 * plat.c as f64),
                     ),
                 );
                 // NoP distribution energy (linear).
-                let hops = topo.hops_energy(p, flags.diagonal) as f64;
-                let e_hop = hw.energy.nop_pj_bit_hop * 8.0 * bpe * hops;
+                let hops = plat.hops_energy(p, flags.diagonal) as f64;
+                let e_hop = plat.energy.nop_pj_bit_hop * 8.0 * bpe * hops;
                 if !acts_from_redist {
                     en = en.add(&vpx.clone().scale(op.k as f64 * e_hop));
                 }
@@ -311,7 +310,7 @@ pub fn build(
                 off_b += op.m as f64 * op.n as f64 * bpe;
             }
             en = en.add(&QuadExpr::constant(
-                hw.mem.energy_pj_per_bit() * off_b * 8.0,
+                plat.mem_pj_bit * off_b * 8.0,
             ));
             model.add_quad(
                 &format!("{}::energy", op.name),
@@ -327,16 +326,16 @@ pub fn build(
 /// and restoring exact sums).
 pub fn decode(
     f: &Formulation,
-    hw: &HwConfig,
+    plat: &Platform,
     wl: &Workload,
     point: &[f64],
 ) -> Allocation {
     let mut parts = Vec::with_capacity(wl.ops.len());
     for (i, op) in wl.ops.iter().enumerate() {
-        let mut px: Vec<usize> = (0..hw.xdim)
+        let mut px: Vec<usize> = (0..plat.xdim)
             .map(|x| point[f.layout.px(i, x)].round().max(0.0) as usize)
             .collect();
-        let mut py: Vec<usize> = (0..hw.ydim)
+        let mut py: Vec<usize> = (0..plat.ydim)
             .map(|y| point[f.layout.py(i, y)].round().max(0.0) as usize)
             .collect();
         fix_sum(&mut px, op.m);
@@ -374,17 +373,15 @@ mod tests {
     use crate::config::{MemKind, SystemType};
     use crate::workload::models::alexnet;
 
-    fn setup() -> (HwConfig, Topology, Workload) {
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-        let topo = Topology::from_hw(&hw);
-        (hw, topo, alexnet(1))
+    fn setup() -> (Platform, Workload) {
+        (Platform::preset(SystemType::A, MemKind::Hbm, 4), alexnet(1))
     }
 
     #[test]
     fn model_dimensions() {
-        let (hw, topo, wl) = setup();
-        let f = build(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency);
-        assert_eq!(f.model.dim(), wl.ops.len() * (hw.xdim + hw.ydim));
+        let (plat, wl) = setup();
+        let f = build(&plat, &wl, OptFlags::ALL, Objective::Latency);
+        assert_eq!(f.model.dim(), wl.ops.len() * (plat.xdim + plat.ydim));
         assert_eq!(f.model.groups.len(), wl.ops.len() * 2);
         assert!(!f.model.terms.is_empty());
     }
@@ -393,9 +390,9 @@ mod tests {
     fn surrogate_tracks_evaluator_on_uniform_point() {
         // The surrogate at the uniform point should be within ~2x of the
         // true latency (it is a structured approximation, not exact).
-        let (hw, topo, wl) = setup();
-        let f = build(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency);
-        let uni = uniform_allocation(&hw, &wl);
+        let (plat, wl) = setup();
+        let f = build(&plat, &wl, OptFlags::ALL, Objective::Latency);
+        let uni = uniform_allocation(&plat, &wl);
         let mut point = vec![0.0; f.model.dim()];
         for (i, p) in uni.parts.iter().enumerate() {
             for (x, &v) in p.px.iter().enumerate() {
@@ -406,7 +403,7 @@ mod tests {
             }
         }
         let surrogate = f.model.eval(&point);
-        let truth = evaluate(&hw, &topo, &wl, &uni, OptFlags::ALL).latency_ns;
+        let truth = evaluate(&plat, &wl, &uni, OptFlags::ALL).latency_ns;
         let ratio = surrogate / truth;
         assert!(
             (0.5..2.0).contains(&ratio),
@@ -416,13 +413,13 @@ mod tests {
 
     #[test]
     fn decode_produces_valid_allocation() {
-        let (hw, topo, wl) = setup();
-        let f = build(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency);
+        let (plat, wl) = setup();
+        let f = build(&plat, &wl, OptFlags::ALL, Objective::Latency);
         // A garbage point still decodes to a valid allocation.
         let point: Vec<f64> =
             (0..f.model.dim()).map(|i| (i % 7) as f64 * 50.0).collect();
-        let alloc = decode(&f, &hw, &wl, &point);
-        assert!(alloc.validate(&wl, &hw).is_ok());
+        let alloc = decode(&f, &plat, &wl, &point);
+        assert!(alloc.validate(&wl, &plat).is_ok());
     }
 
     #[test]
@@ -440,9 +437,9 @@ mod tests {
 
     #[test]
     fn edp_objective_adds_energy_terms() {
-        let (hw, topo, wl) = setup();
-        let lat = build(&hw, &topo, &wl, OptFlags::ALL, Objective::Latency);
-        let edp = build(&hw, &topo, &wl, OptFlags::ALL, Objective::Edp);
+        let (plat, wl) = setup();
+        let lat = build(&plat, &wl, OptFlags::ALL, Objective::Latency);
+        let edp = build(&plat, &wl, OptFlags::ALL, Objective::Edp);
         assert!(edp.model.terms.len() > lat.model.terms.len());
     }
 }

@@ -3,8 +3,8 @@
 //! the §6.2 search-space constraints, and the baseline partitioners
 //! (uniform LS, SIMBA-like inverse-distance).
 
-use crate::config::HwConfig;
-use crate::topology::{Pos, Topology};
+use crate::platform::Platform;
+use crate::topology::Pos;
 use crate::workload::{GemmOp, Workload};
 
 /// Partition of one GEMM: `px[x]` output rows for chiplet grid row `x`,
@@ -55,12 +55,16 @@ pub struct Allocation {
 }
 
 impl Allocation {
-    pub fn validate(&self, wl: &Workload, hw: &HwConfig) -> Result<(), String> {
+    pub fn validate(
+        &self,
+        wl: &Workload,
+        plat: &Platform,
+    ) -> Result<(), String> {
         if self.parts.len() != wl.ops.len() {
             return Err("allocation arity != op count".into());
         }
         for (p, op) in self.parts.iter().zip(&wl.ops) {
-            if p.px.len() != hw.xdim || p.py.len() != hw.ydim {
+            if p.px.len() != plat.xdim || p.py.len() != plat.ydim {
                 return Err(format!("partition arity mismatch for '{}'", op.name));
             }
             p.validate(op)?;
@@ -73,7 +77,7 @@ impl Allocation {
             ));
         }
         for &c in &self.collect_cols {
-            if c >= hw.ydim {
+            if c >= plat.ydim {
                 return Err(format!("collect col {c} out of range"));
             }
         }
@@ -116,29 +120,29 @@ pub fn uniform_split(total: usize, parts: usize) -> Vec<usize> {
 }
 
 /// The paper's baseline: uniform partitioning in both dimensions.
-pub fn uniform(hw: &HwConfig, op: &GemmOp) -> Partition {
+pub fn uniform(plat: &Platform, op: &GemmOp) -> Partition {
     Partition {
-        px: uniform_split(op.m, hw.xdim),
-        py: uniform_split(op.n, hw.ydim),
+        px: uniform_split(op.m, plat.xdim),
+        py: uniform_split(op.n, plat.ydim),
     }
 }
 
 /// SIMBA-like heuristic (§3.1): share inversely proportional to the
 /// chiplet's communication distance from off-chip memory, per grid row /
 /// column (marginalized over the other dimension).
-pub fn simba(hw: &HwConfig, topo: &Topology, op: &GemmOp) -> Partition {
+pub fn simba(plat: &Platform, op: &GemmOp) -> Partition {
     let inv = |d: usize| 1.0 / (d as f64 + 1.0);
-    let row_w: Vec<f64> = (0..hw.xdim)
+    let row_w: Vec<f64> = (0..plat.xdim)
         .map(|x| {
-            (0..hw.ydim)
-                .map(|y| inv(topo.distance_to_memory(Pos::new(x, y))))
+            (0..plat.ydim)
+                .map(|y| inv(plat.distance_to_memory(Pos::new(x, y))))
                 .sum()
         })
         .collect();
-    let col_w: Vec<f64> = (0..hw.ydim)
+    let col_w: Vec<f64> = (0..plat.ydim)
         .map(|y| {
-            (0..hw.xdim)
-                .map(|x| inv(topo.distance_to_memory(Pos::new(x, y))))
+            (0..plat.xdim)
+                .map(|x| inv(plat.distance_to_memory(Pos::new(x, y))))
                 .sum()
         })
         .collect();
@@ -150,17 +154,17 @@ pub fn simba(hw: &HwConfig, topo: &Topology, op: &GemmOp) -> Partition {
 
 /// Whole-workload allocations for the two non-optimized schemes
 /// (Table 3 rows "Layer Sequential" and "SIMBA-like").
-pub fn uniform_allocation(hw: &HwConfig, wl: &Workload) -> Allocation {
+pub fn uniform_allocation(plat: &Platform, wl: &Workload) -> Allocation {
     Allocation {
-        parts: wl.ops.iter().map(|op| uniform(hw, op)).collect(),
-        collect_cols: vec![hw.ydim / 2; wl.edge_count()],
+        parts: wl.ops.iter().map(|op| uniform(plat, op)).collect(),
+        collect_cols: vec![plat.ydim / 2; wl.edge_count()],
     }
 }
 
-pub fn simba_allocation(hw: &HwConfig, topo: &Topology, wl: &Workload) -> Allocation {
+pub fn simba_allocation(plat: &Platform, wl: &Workload) -> Allocation {
     Allocation {
-        parts: wl.ops.iter().map(|op| simba(hw, topo, op)).collect(),
-        collect_cols: vec![hw.ydim / 2; wl.edge_count()],
+        parts: wl.ops.iter().map(|op| simba(plat, op)).collect(),
+        collect_cols: vec![plat.ydim / 2; wl.edge_count()],
     }
 }
 
@@ -256,8 +260,8 @@ mod tests {
     use super::*;
     use crate::config::{MemKind, SystemType};
 
-    fn hw() -> HwConfig {
-        HwConfig::paper(SystemType::A, MemKind::Hbm, 4)
+    fn plat() -> Platform {
+        Platform::preset(SystemType::A, MemKind::Hbm, 4)
     }
 
     #[test]
@@ -280,17 +284,16 @@ mod tests {
     #[test]
     fn uniform_partition_valid() {
         let op = GemmOp::dense("x", 1000, 64, 300);
-        let p = uniform(&hw(), &op);
+        let p = uniform(&plat(), &op);
         assert!(p.validate(&op).is_ok());
         assert_eq!(p.px.len(), 4);
     }
 
     #[test]
     fn simba_prefers_near_chiplets_type_a() {
-        let h = hw();
-        let topo = Topology::from_hw(&h);
+        let t = plat();
         let op = GemmOp::dense("x", 1000, 64, 1000);
-        let p = simba(&h, &topo, &op);
+        let p = simba(&t, &op);
         assert!(p.validate(&op).is_ok());
         // Row 0 (contains the global chiplet) gets the largest share.
         assert!(p.px[0] > p.px[3], "px={:?}", p.px);
@@ -299,10 +302,9 @@ mod tests {
 
     #[test]
     fn simba_uniform_on_type_c() {
-        let h = HwConfig::paper(SystemType::C, MemKind::Hbm, 4);
-        let topo = Topology::from_hw(&h);
+        let t = Platform::preset(SystemType::C, MemKind::Hbm, 4);
         let op = GemmOp::dense("x", 400, 64, 400);
-        let p = simba(&h, &topo, &op);
+        let p = simba(&t, &op);
         assert_eq!(p.px, uniform_split(400, 4));
     }
 
@@ -335,14 +337,14 @@ mod tests {
 
     #[test]
     fn allocation_validation() {
-        let h = hw();
+        let t = plat();
         let wl = Workload::new(
             "w",
             vec![GemmOp::dense("a", 100, 32, 64)],
         );
-        let mut a = uniform_allocation(&h, &wl);
-        assert!(a.validate(&wl, &h).is_ok());
+        let mut a = uniform_allocation(&t, &wl);
+        assert!(a.validate(&wl, &t).is_ok());
         a.parts[0].px[0] += 1;
-        assert!(a.validate(&wl, &h).is_err());
+        assert!(a.validate(&wl, &t).is_err());
     }
 }

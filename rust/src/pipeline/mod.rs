@@ -304,18 +304,17 @@ pub fn validate_schedule(tasks: &[Task], s: &Schedule) -> Result<(), String> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{HwConfig, MemKind, SystemType};
+    use crate::config::{MemKind, SystemType};
     use crate::cost::evaluator::{evaluate, OptFlags};
     use crate::partition::uniform_allocation;
-    use crate::topology::Topology;
+    use crate::platform::Platform;
     use crate::workload::models::alexnet;
 
     fn alexnet_cost() -> CostBreakdown {
-        let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-        let topo = Topology::from_hw(&hw);
+        let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
         let wl = alexnet(1);
-        let alloc = uniform_allocation(&hw, &wl);
-        evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE)
+        let alloc = uniform_allocation(&plat, &wl);
+        evaluate(&plat, &wl, &alloc, OptFlags::NONE)
     }
 
     #[test]

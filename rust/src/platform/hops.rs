@@ -1,0 +1,203 @@
+//! [`HopTables`]: the §4.3.3 / §5.1.1 hop models precomputed once per
+//! platform from explicit [`LinkGraph`] routing.
+//!
+//! The legacy `Topology` computed hops with per-`SystemType` closed-form
+//! match arms. Here the *minimal* hop counts (eq. 10 low-bandwidth
+//! loading and the §4.4.3 energy model) are the measured length of the
+//! deterministic route from each chiplet's serving attachment through
+//! the actual link graph — so an arbitrary attachment layout gets
+//! correct hops with no new formulas — while the congestion-folded
+//! shared-data counts (eqs. 11–12) derive from the same generalized
+//! local-index/region-extent geometry the closed forms used. On the
+//! four paper presets every entry is equal to the legacy closed forms
+//! (pinned exhaustively by `tests/platform.rs` over 2x2–6x6 grids,
+//! diagonal on and off), which is what keeps preset reports
+//! bit-identical.
+//!
+//! All lookups are O(1) reads on the cost-model hot path; the §Perf
+//! cache-invalidation rules are unaffected because tables are immutable
+//! per platform (see DESIGN.md §Platform model).
+
+use crate::topology::links::LinkGraph;
+use crate::topology::{neighbour_offsets, LocalIdx, Pos};
+
+use super::PlatformSpec;
+
+/// Precomputed hop counts, indexed `[diagonal as usize][row-major pos]`.
+#[derive(Debug, Clone)]
+pub struct HopTables {
+    /// Minimal route length from the serving attachment (eq. 10 and the
+    /// energy model's travelled-path length).
+    min_hops: [Vec<u32>; 2],
+    /// Eq. 11 row-wise-shared loading hops (waiting slots folded in).
+    row_shared: [Vec<u32>; 2],
+    /// Eq. 12 column-wise-shared loading hops.
+    col_shared: [Vec<u32>; 2],
+    /// Eq. 8 entrance-link counts, `[diagonal as usize]`.
+    entrance: [usize; 2],
+}
+
+impl HopTables {
+    /// Build the tables for `spec` from link-graph routing plus the
+    /// precomputed per-position geometry (`nearest` / `locals` /
+    /// `extents`, all row-major).
+    pub(crate) fn build(
+        spec: &PlatformSpec,
+        globals: &[Pos],
+        global_mask: &[bool],
+        nearest: &[Pos],
+        locals: &[LocalIdx],
+        extents: &[(usize, usize)],
+    ) -> Result<HopTables, String> {
+        let n = spec.xdim * spec.ydim;
+        debug_assert_eq!(nearest.len(), n);
+        let mut min_hops = [vec![0u32; n], vec![0u32; n]];
+        let mut row_shared = [vec![0u32; n], vec![0u32; n]];
+        let mut col_shared = [vec![0u32; n], vec![0u32; n]];
+        let mut entrance = [0usize; 2];
+
+        for (di, diagonal) in [false, true].into_iter().enumerate() {
+            // Chiplet mesh only: minimal hops count NoP traversals from
+            // the serving attachment chiplet (the off-chip link is the
+            // separate serialized stage of the model).
+            let graph = LinkGraph::mesh(
+                spec.xdim,
+                spec.ydim,
+                diagonal,
+                spec.bw_nop,
+            );
+            for (i, &l) in locals.iter().enumerate() {
+                let p = Pos::new(i / spec.ydim, i % spec.ydim);
+                let src = graph.chiplet_id(nearest[i]);
+                let dst = graph.chiplet_id(p);
+                let route = graph.route(src, dst).map_err(|e| {
+                    format!(
+                        "platform '{}': hop-table routing failed: {e:#}",
+                        spec.name
+                    )
+                })?;
+                min_hops[di][i] = route.len() as u32;
+                // The deterministic router walks a minimal path, so the
+                // measured length equals the geometric distance.
+                debug_assert_eq!(
+                    route.len(),
+                    if diagonal { l.x.max(l.y) } else { l.x + l.y }
+                );
+                // Eqs. 11–12: congestion on the first column/row is
+                // resolved farthest-first, adding (X - x) waiting slots:
+                // total = X + y. With diagonal links (§5.1.1) the
+                // alternative route costs (X - x) + max(x, y); the two
+                // strategies use disjoint links, so take the min.
+                let (xr, yr) = extents[i];
+                let row_base = (xr + l.y) as u32;
+                row_shared[di][i] = if diagonal {
+                    row_base.min((xr - l.x + l.x.max(l.y)) as u32)
+                } else {
+                    row_base
+                };
+                let col_base = (yr + l.x) as u32;
+                col_shared[di][i] = if diagonal {
+                    col_base.min((yr - l.y + l.x.max(l.y)) as u32)
+                } else {
+                    col_base
+                };
+            }
+            // Eq. 8: NoP links entering attachment chiplets from
+            // non-attachment neighbours. Zero when every chiplet is an
+            // attachment (collection is a no-op, e.g. 3D stacking).
+            let mut count = 0;
+            for g in globals {
+                for &(dr, dc) in neighbour_offsets(diagonal) {
+                    let nr = g.row as isize + dr;
+                    let nc = g.col as isize + dc;
+                    if nr < 0
+                        || nc < 0
+                        || nr >= spec.xdim as isize
+                        || nc >= spec.ydim as isize
+                    {
+                        continue;
+                    }
+                    if !global_mask[nr as usize * spec.ydim + nc as usize] {
+                        count += 1;
+                    }
+                }
+            }
+            entrance[di] = count;
+        }
+        Ok(HopTables { min_hops, row_shared, col_shared, entrance })
+    }
+
+    #[inline]
+    pub fn min_hops(&self, idx: usize, diagonal: bool) -> usize {
+        self.min_hops[diagonal as usize][idx] as usize
+    }
+
+    #[inline]
+    pub fn row_shared(&self, idx: usize, diagonal: bool) -> usize {
+        self.row_shared[diagonal as usize][idx] as usize
+    }
+
+    #[inline]
+    pub fn col_shared(&self, idx: usize, diagonal: bool) -> usize {
+        self.col_shared[diagonal as usize][idx] as usize
+    }
+
+    #[inline]
+    pub fn entrance_links(&self, diagonal: bool) -> usize {
+        self.entrance[diagonal as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::MemKind;
+    use crate::platform::Platform;
+    use crate::topology::Pos;
+
+    #[test]
+    fn tables_match_route_lengths_on_presets() {
+        use crate::config::SystemType;
+        for ty in SystemType::ALL {
+            let plat = Platform::preset(ty, MemKind::Hbm, 4);
+            for diagonal in [false, true] {
+                let graph = plat.link_graph(diagonal);
+                for p in plat.positions() {
+                    let src = graph.chiplet_id(plat.nearest_global(p));
+                    let dst = graph.chiplet_id(p);
+                    let len = graph.route(src, dst).unwrap().len();
+                    assert_eq!(
+                        plat.hops_low_bw(p, diagonal),
+                        len,
+                        "{ty:?} {p:?} diagonal={diagonal}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shared_hops_dominate_min_hops() {
+        // Waiting slots only ever add hops.
+        let plat = Platform::headline();
+        for diagonal in [false, true] {
+            for p in plat.positions() {
+                assert!(
+                    plat.hops_row_shared(p, diagonal)
+                        >= plat.hops_low_bw(p, diagonal)
+                );
+                assert!(
+                    plat.hops_col_shared(p, diagonal)
+                        >= plat.hops_low_bw(p, diagonal)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn corner_chiplet_is_free_everywhere() {
+        let plat = Platform::headline();
+        let origin = Pos::new(0, 0);
+        assert_eq!(plat.hops_low_bw(origin, false), 0);
+        assert_eq!(plat.hops_energy(origin, true), 0);
+    }
+}

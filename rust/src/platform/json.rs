@@ -1,0 +1,257 @@
+//! JSON codec for platform descriptions (`util::json` substrate; serde
+//! is unavailable offline).
+//!
+//! Schema (see `examples/platforms/`):
+//!
+//! ```json
+//! {
+//!   "name": "asym-l-shape",
+//!   "grid": {"xdim": 4, "ydim": 4},
+//!   "systolic": {"r": 16, "c": 16},
+//!   "links": {"nop_gbps": 60.0, "diagonal_gbps": 60.0,
+//!             "offchip_gbps": 1000.0},
+//!   "freq_ghz": 1.0,
+//!   "bytes_per_elem": 1.0,
+//!   "energy": {"nop_pj_bit_hop": 1.285, "sram_pj_bit": 0.28,
+//!              "mac_pj_cycle": 4.6, "mem_pj_bit": 4.11},
+//!   "attachments": [{"row": 0, "col": 0, "bw_gbps": 1000.0}]
+//! }
+//! ```
+//!
+//! Optional fields and their defaults: `links.diagonal_gbps` (=
+//! `links.nop_gbps`), attachment `bw_gbps` (= an even share of
+//! `links.offchip_gbps` over the attachments, like the presets),
+//! `freq_ghz` (1.0), `bytes_per_elem` (1.0). Numbers round-trip
+//! bit-exactly (shortest-representation f64 encoding), so save → load
+//! reproduces an identical platform (pinned by `tests/properties.rs`).
+
+use std::path::Path;
+
+use crate::config::EnergyParams;
+use crate::util::error::{Context, Error, Result};
+use crate::util::json::{obj, Json};
+
+use super::{MemAttachment, Platform, PlatformSpec};
+
+fn req<'a>(v: &'a Json, key: &str) -> Result<&'a Json> {
+    v.get(key)
+        .with_context(|| format!("platform json: missing field '{key}'"))
+}
+
+fn req_f64(v: &Json, key: &str) -> Result<f64> {
+    req(v, key)?
+        .as_f64()
+        .with_context(|| format!("platform json: '{key}' must be a number"))
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    let n = req_f64(v, key)?;
+    if n < 0.0 || n.fract() != 0.0 {
+        return Err(Error::msg(format!(
+            "platform json: '{key}' must be a non-negative integer, got {n}"
+        )));
+    }
+    Ok(n as usize)
+}
+
+fn opt_f64(v: &Json, key: &str, default: f64) -> Result<f64> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(j) => j.as_f64().with_context(|| {
+            format!("platform json: '{key}' must be a number")
+        }),
+    }
+}
+
+impl PlatformSpec {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            (
+                "grid",
+                obj(vec![
+                    ("xdim", Json::Num(self.xdim as f64)),
+                    ("ydim", Json::Num(self.ydim as f64)),
+                ]),
+            ),
+            (
+                "systolic",
+                obj(vec![
+                    ("r", Json::Num(self.r as f64)),
+                    ("c", Json::Num(self.c as f64)),
+                ]),
+            ),
+            (
+                "links",
+                obj(vec![
+                    ("nop_gbps", Json::Num(self.bw_nop)),
+                    ("diagonal_gbps", Json::Num(self.bw_diag)),
+                    ("offchip_gbps", Json::Num(self.bw_mem)),
+                ]),
+            ),
+            ("freq_ghz", Json::Num(self.freq_ghz)),
+            ("bytes_per_elem", Json::Num(self.bytes_per_elem)),
+            (
+                "energy",
+                obj(vec![
+                    (
+                        "nop_pj_bit_hop",
+                        Json::Num(self.energy.nop_pj_bit_hop),
+                    ),
+                    ("sram_pj_bit", Json::Num(self.energy.sram_pj_bit)),
+                    ("mac_pj_cycle", Json::Num(self.energy.mac_pj_cycle)),
+                    ("mem_pj_bit", Json::Num(self.mem_pj_bit)),
+                ]),
+            ),
+            (
+                "attachments",
+                Json::Arr(
+                    self.attachments
+                        .iter()
+                        .map(|a| {
+                            obj(vec![
+                                ("row", Json::Num(a.pos.row as f64)),
+                                ("col", Json::Num(a.pos.col as f64)),
+                                ("bw_gbps", Json::Num(a.bw)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<PlatformSpec> {
+        let name = req(v, "name")?
+            .as_str()
+            .context("platform json: 'name' must be a string")?
+            .to_string();
+        let grid = req(v, "grid")?;
+        let systolic = req(v, "systolic")?;
+        let links = req(v, "links")?;
+        let energy = req(v, "energy")?;
+        let bw_nop = req_f64(links, "nop_gbps")?;
+        let bw_mem = req_f64(links, "offchip_gbps")?;
+        let bw_diag = opt_f64(links, "diagonal_gbps", bw_nop)?;
+        let attachments_json = req(v, "attachments")?
+            .as_arr()
+            .context("platform json: 'attachments' must be an array")?;
+        // Default per-attachment bandwidth: an even share of the
+        // aggregate, matching the preset semantics (the link graph then
+        // offers exactly what the analytical model serializes at).
+        let bw_share = bw_mem / attachments_json.len().max(1) as f64;
+        let mut attachments = Vec::with_capacity(attachments_json.len());
+        for (i, a) in attachments_json.iter().enumerate() {
+            let row = req_usize(a, "row")
+                .with_context(|| format!("attachment {i}"))?;
+            let col = req_usize(a, "col")
+                .with_context(|| format!("attachment {i}"))?;
+            let bw = opt_f64(a, "bw_gbps", bw_share)
+                .with_context(|| format!("attachment {i}"))?;
+            attachments.push(MemAttachment::new(row, col, bw));
+        }
+        Ok(PlatformSpec {
+            name,
+            xdim: req_usize(grid, "xdim")?,
+            ydim: req_usize(grid, "ydim")?,
+            r: req_usize(systolic, "r")?,
+            c: req_usize(systolic, "c")?,
+            bw_nop,
+            bw_diag,
+            bw_mem,
+            freq_ghz: opt_f64(v, "freq_ghz", 1.0)?,
+            bytes_per_elem: opt_f64(v, "bytes_per_elem", 1.0)?,
+            mem_pj_bit: req_f64(energy, "mem_pj_bit")?,
+            energy: EnergyParams {
+                nop_pj_bit_hop: req_f64(energy, "nop_pj_bit_hop")?,
+                sram_pj_bit: req_f64(energy, "sram_pj_bit")?,
+                mac_pj_cycle: req_f64(energy, "mac_pj_cycle")?,
+            },
+            attachments,
+        })
+    }
+}
+
+impl Platform {
+    /// Serialize the declarative description (not the precomputes —
+    /// they are rebuilt on load).
+    pub fn to_json(&self) -> Json {
+        self.spec().to_json()
+    }
+
+    /// Parse + validate + precompute from a JSON value.
+    pub fn from_json(v: &Json) -> Result<Platform> {
+        Platform::new(PlatformSpec::from_json(v)?).map_err(Error::msg)
+    }
+
+    /// Load a platform description file (the `--platform file.json` CLI
+    /// path).
+    pub fn load(path: &Path) -> Result<Platform> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading platform file {path:?}"))?;
+        let v = Json::parse(&src)
+            .with_context(|| format!("parsing platform file {path:?}"))?;
+        Platform::from_json(&v)
+            .with_context(|| format!("loading platform file {path:?}"))
+    }
+
+    /// Save the description as canonical JSON (sorted keys, compact).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().encode() + "\n")
+            .with_context(|| format!("writing platform file {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MemKind;
+
+    #[test]
+    fn roundtrip_preserves_spec_exactly() {
+        let plat = Platform::type_d(MemKind::Dram, 6);
+        let encoded = plat.to_json().encode();
+        let back = Platform::from_json(&Json::parse(&encoded).unwrap())
+            .unwrap();
+        assert_eq!(plat.spec(), back.spec());
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let src = r#"{
+            "name": "mini",
+            "grid": {"xdim": 2, "ydim": 2},
+            "systolic": {"r": 8, "c": 8},
+            "links": {"nop_gbps": 60.0, "offchip_gbps": 200.0},
+            "energy": {"nop_pj_bit_hop": 1.0, "sram_pj_bit": 0.2,
+                       "mac_pj_cycle": 4.0, "mem_pj_bit": 5.0},
+            "attachments": [{"row": 0, "col": 1}]
+        }"#;
+        let p = Platform::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(p.bw_diag, 60.0);
+        assert_eq!(p.freq_ghz, 1.0);
+        assert_eq!(p.bytes_per_elem, 1.0);
+        assert_eq!(p.attachments[0].bw, 200.0);
+    }
+
+    #[test]
+    fn missing_fields_are_structured_errors() {
+        let src = r#"{"name": "x"}"#;
+        let err = Platform::from_json(&Json::parse(src).unwrap())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("grid"), "{err:#}");
+    }
+
+    #[test]
+    fn invalid_specs_fail_validation_on_load() {
+        let mut spec = Platform::headline().spec().clone();
+        spec.attachments.clear();
+        let encoded = spec.to_json().encode();
+        let err = Platform::from_json(&Json::parse(&encoded).unwrap())
+            .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("attachment"),
+            "{err:#}"
+        );
+    }
+}

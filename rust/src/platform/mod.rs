@@ -1,0 +1,792 @@
+//! The [`Platform`] API: packaging as *data*.
+//!
+//! The paper's first contribution is a packaging-adaptive analytical
+//! framework, but the original reproduction hard-coded packaging as a
+//! closed `SystemType {A, B, C, D}` enum with per-type closed-form hop
+//! formulas. This module replaces that with one declarative, validated
+//! description — [`PlatformSpec`] — covering grid dims, per-class link
+//! bandwidths (orthogonal NoP, §5.1 diagonal, off-chip), an *arbitrary*
+//! memory-attachment set (any set of [`Pos`] with per-attachment
+//! bandwidth, generalizing corner / edges / stacked / quadrant
+//! placements), systolic dims, frequency, and the Table-2 energy
+//! coefficients.
+//!
+//! [`Platform::new`] validates the spec and precomputes everything the
+//! cost-model hot paths query per chiplet:
+//!
+//! * nearest attachment, local `(x, y)` index, and serving-region
+//!   extents (Figure 4 generalized to any attachment set);
+//! * [`HopTables`] — the eq. 9–12 / §5.1.1 hop counts, derived once
+//!   from [`LinkGraph`] routing over the explicit link graph instead of
+//!   per-type match arms, so cost-model hot paths stay O(1) lookups and
+//!   arbitrary layouts get correct hops for free;
+//! * the eq. 8 entrance-link counts.
+//!
+//! The four paper packagings are named presets ([`Platform::type_a`] …
+//! [`Platform::type_d`]) whose reports are bit-identical to the legacy
+//! `SystemType` runs (pinned by `tests/platform.rs`).
+//! [`crate::config::HwConfig`] and `SystemType` survive only as thin
+//! constructors onto `Platform`. JSON descriptions load and save
+//! through [`json`] (`mcmcomm optimize --platform file.json`; examples
+//! under `examples/platforms/`).
+
+pub mod hops;
+pub mod json;
+
+use std::ops::Deref;
+
+use crate::config::{EnergyParams, HwConfig, MemKind, SystemType};
+use crate::topology::links::LinkGraph;
+use crate::topology::{grid_positions, manhattan, LocalIdx, Pos};
+
+pub use hops::HopTables;
+
+/// One off-chip memory attachment point: the chiplet it is wired to and
+/// the bandwidth of that individual interface link (GB/s). The
+/// *aggregate* serialized memory bandwidth of the package is
+/// [`PlatformSpec::bw_mem`]; per-attachment bandwidths feed the link
+/// graph capacities (netsim / congestion studies).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemAttachment {
+    pub pos: Pos,
+    pub bw: f64,
+}
+
+impl MemAttachment {
+    pub fn new(row: usize, col: usize, bw: f64) -> Self {
+        MemAttachment { pos: Pos::new(row, col), bw }
+    }
+}
+
+/// The declarative platform description. Every field is plain data; no
+/// packaging enum — the attachment set *is* the packaging.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformSpec {
+    /// Short label, e.g. `A-HBM-4x4` for presets (figure-table "system"
+    /// column) or a free-form name for JSON platforms.
+    pub name: String,
+    /// Chiplet grid rows (X) and columns (Y).
+    pub xdim: usize,
+    pub ydim: usize,
+    /// Systolic array rows (R) and columns (C) per chiplet.
+    pub r: usize,
+    pub c: usize,
+    /// Orthogonal NoP link bandwidth, GB/s (Table 2: 60).
+    pub bw_nop: f64,
+    /// §5.1 diagonal link bandwidth, GB/s — the capacity of the
+    /// diagonal link class in the explicit link graph
+    /// ([`Platform::link_graph`], netsim). The closed-form analytical
+    /// model (eqs. 9–12) folds diagonal shortcuts into *hop counts* and
+    /// charges all NoP traffic at [`PlatformSpec::bw_nop`], so keep
+    /// `bw_diag == bw_nop` (the preset value) when analytical and
+    /// simulated numbers must agree.
+    pub bw_diag: f64,
+    /// Aggregate off-chip (memory interface) bandwidth, GB/s — the
+    /// paper's `BW_mem` that serializes every off-chip transfer.
+    pub bw_mem: f64,
+    /// Chiplet clock in GHz; converts eq. 7 cycles to ns.
+    pub freq_ghz: f64,
+    /// Datapath element width in bytes (int8 inference default).
+    pub bytes_per_elem: f64,
+    /// Off-chip transfer energy, pJ per bit (Table 2 per memory kind).
+    pub mem_pj_bit: f64,
+    /// NoP / SRAM / MAC energy coefficients (Table 2).
+    pub energy: EnergyParams,
+    /// Memory attachment set — any non-empty set of in-bounds grid
+    /// positions. The chiplets listed here are the "global chiplets" of
+    /// the paper.
+    pub attachments: Vec<MemAttachment>,
+}
+
+impl PlatformSpec {
+    pub fn num_chiplets(&self) -> usize {
+        self.xdim * self.ydim
+    }
+
+    /// Element count -> bytes.
+    pub fn bytes(&self, elems: usize) -> f64 {
+        elems as f64 * self.bytes_per_elem
+    }
+
+    /// Cycle count -> nanoseconds.
+    pub fn cycles_to_ns(&self, cycles: f64) -> f64 {
+        cycles / self.freq_ghz
+    }
+
+    /// Largest accepted chiplet count. The hop tables and link graph
+    /// are O(grid²) in memory; this cap keeps a malformed JSON
+    /// description a structured error instead of an allocation abort
+    /// (paper-scale grids are <= 16x16).
+    pub const MAX_CHIPLETS: usize = 64 * 64;
+
+    /// Structural validation; [`Platform::new`] calls this before any
+    /// precomputation.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.xdim == 0 || self.ydim == 0 {
+            return Err(format!(
+                "platform '{}': grid dims must be positive",
+                self.name
+            ));
+        }
+        if self
+            .xdim
+            .checked_mul(self.ydim)
+            .is_none_or(|n| n > Self::MAX_CHIPLETS)
+        {
+            return Err(format!(
+                "platform '{}': grid {}x{} exceeds the {}-chiplet limit",
+                self.name,
+                self.xdim,
+                self.ydim,
+                Self::MAX_CHIPLETS
+            ));
+        }
+        if self.r == 0 || self.c == 0 {
+            return Err(format!(
+                "platform '{}': systolic dims must be positive",
+                self.name
+            ));
+        }
+        let pos_finite = |v: f64| v > 0.0 && v.is_finite();
+        if !(pos_finite(self.bw_nop)
+            && pos_finite(self.bw_diag)
+            && pos_finite(self.bw_mem)
+            && pos_finite(self.freq_ghz)
+            && pos_finite(self.bytes_per_elem))
+        {
+            return Err(format!(
+                "platform '{}': bandwidths, frequency and element width \
+                 must be positive and finite",
+                self.name
+            ));
+        }
+        let coeff_ok = |v: f64| v.is_finite() && v >= 0.0;
+        if !(coeff_ok(self.mem_pj_bit)
+            && coeff_ok(self.energy.nop_pj_bit_hop)
+            && coeff_ok(self.energy.sram_pj_bit)
+            && coeff_ok(self.energy.mac_pj_cycle))
+        {
+            return Err(format!(
+                "platform '{}': energy coefficients must be finite and \
+                 non-negative",
+                self.name
+            ));
+        }
+        if self.attachments.is_empty() {
+            return Err(format!(
+                "platform '{}': needs at least one memory attachment",
+                self.name
+            ));
+        }
+        for (i, a) in self.attachments.iter().enumerate() {
+            if a.pos.row >= self.xdim || a.pos.col >= self.ydim {
+                return Err(format!(
+                    "platform '{}': attachment {i} at ({}, {}) outside \
+                     the {}x{} grid",
+                    self.name, a.pos.row, a.pos.col, self.xdim, self.ydim
+                ));
+            }
+            if !pos_finite(a.bw) {
+                return Err(format!(
+                    "platform '{}': attachment {i} bandwidth must be \
+                     positive and finite",
+                    self.name
+                ));
+            }
+        }
+        for (i, a) in self.attachments.iter().enumerate() {
+            for b in &self.attachments[i + 1..] {
+                if a.pos == b.pos {
+                    return Err(format!(
+                        "platform '{}': duplicate attachment at ({}, {})",
+                        self.name, a.pos.row, a.pos.col
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A validated platform with every topology-derived quantity the cost
+/// model's per-chiplet loops query precomputed at construction (GA
+/// fitness is the hottest path in the repo, §Perf).
+///
+/// `Platform` derefs to its [`PlatformSpec`], so scalar fields read
+/// exactly like the old `HwConfig` did (`plat.bw_nop`, `plat.xdim`,
+/// `plat.bytes(..)`) — that, plus hop accessors replicating the old
+/// `Topology` API bit-for-bit on presets, is what keeps preset reports
+/// identical to the pre-platform code.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    spec: PlatformSpec,
+    /// Attachment positions in declaration order (the paper's "global
+    /// chiplets").
+    globals: Vec<Pos>,
+    /// Per position (row-major): is this an attachment chiplet?
+    global_mask: Vec<bool>,
+    /// Per position: nearest attachment chiplet (Manhattan metric, ties
+    /// broken toward the smaller position for determinism).
+    nearest: Vec<Pos>,
+    /// Per position: local (x, y) index.
+    locals: Vec<LocalIdx>,
+    /// Per position: serving region extent (X, Y).
+    extents: Vec<(usize, usize)>,
+    hops: HopTables,
+}
+
+impl Deref for Platform {
+    type Target = PlatformSpec;
+
+    fn deref(&self) -> &PlatformSpec {
+        &self.spec
+    }
+}
+
+impl Platform {
+    /// Validate `spec` and precompute nearest attachments, local
+    /// indices, region extents and the routing-derived [`HopTables`].
+    pub fn new(spec: PlatformSpec) -> Result<Platform, String> {
+        spec.validate()?;
+        let n = spec.num_chiplets();
+        let globals: Vec<Pos> =
+            spec.attachments.iter().map(|a| a.pos).collect();
+        let mut global_mask = vec![false; n];
+        for g in &globals {
+            global_mask[g.row * spec.ydim + g.col] = true;
+        }
+        let mut nearest = Vec::with_capacity(n);
+        let mut locals = Vec::with_capacity(n);
+        for p in grid_positions(spec.xdim, spec.ydim) {
+            let g = *globals
+                .iter()
+                .min_by_key(|g| (manhattan(p, **g), (g.row, g.col)))
+                .expect("validated: at least one attachment");
+            nearest.push(g);
+            locals.push(LocalIdx {
+                x: p.row.abs_diff(g.row),
+                y: p.col.abs_diff(g.col),
+            });
+        }
+        // Region extents per serving attachment, then scatter per
+        // position.
+        use std::collections::HashMap;
+        let mut per_global: HashMap<Pos, (usize, usize)> = HashMap::new();
+        for i in 0..n {
+            let g = nearest[i];
+            let l = locals[i];
+            let e = per_global.entry(g).or_insert((0, 0));
+            e.0 = e.0.max(l.x);
+            e.1 = e.1.max(l.y);
+        }
+        let extents: Vec<(usize, usize)> = (0..n)
+            .map(|i| {
+                let (mx, my) = per_global[&nearest[i]];
+                (mx + 1, my + 1)
+            })
+            .collect();
+        let hops = HopTables::build(
+            &spec,
+            &globals,
+            &global_mask,
+            &nearest,
+            &locals,
+            &extents,
+        )?;
+        Ok(Platform {
+            spec,
+            globals,
+            global_mask,
+            nearest,
+            locals,
+            extents,
+            hops,
+        })
+    }
+
+    /// The declarative description this platform was built from.
+    pub fn spec(&self) -> &PlatformSpec {
+        &self.spec
+    }
+
+    /// The precomputed hop tables.
+    pub fn hop_tables(&self) -> &HopTables {
+        &self.hops
+    }
+
+    // ---- presets (the four paper packagings + headline) ----------------
+
+    /// Table-2 preset: 16x16 PE chiplets, 60 GB/s NoP, chosen square
+    /// grid, packaging type and memory kind. Bit-identical reports to
+    /// the legacy `HwConfig::paper` + `Topology` pair.
+    pub fn preset(ty: SystemType, mem: MemKind, grid: usize) -> Platform {
+        Self::preset_grid(ty, mem, grid, grid)
+    }
+
+    /// [`Platform::preset`] with a rectangular grid.
+    pub fn preset_grid(
+        ty: SystemType,
+        mem: MemKind,
+        xdim: usize,
+        ydim: usize,
+    ) -> Platform {
+        Self::try_preset_grid(ty, mem, xdim, ydim)
+            .expect("paper presets are always valid")
+    }
+
+    /// Fallible preset constructor (zero grids etc. report instead of
+    /// panicking).
+    pub fn try_preset_grid(
+        ty: SystemType,
+        mem: MemKind,
+        xdim: usize,
+        ydim: usize,
+    ) -> Result<Platform, String> {
+        let bw_mem = mem.bandwidth_gbps();
+        Platform::new(PlatformSpec {
+            name: format!("{}-{}-{}x{}", ty.short(), mem.name(), xdim, ydim),
+            xdim,
+            ydim,
+            r: 16,
+            c: 16,
+            bw_nop: 60.0,
+            bw_diag: 60.0,
+            bw_mem,
+            freq_ghz: 1.0,
+            bytes_per_elem: 1.0,
+            mem_pj_bit: mem.energy_pj_per_bit(),
+            energy: EnergyParams::default(),
+            attachments: preset_attachments(ty, xdim, ydim, bw_mem),
+        })
+    }
+
+    /// 2.5D, memory at one corner (SIMBA, Manticore).
+    pub fn type_a(mem: MemKind, grid: usize) -> Platform {
+        Self::preset(SystemType::A, mem, grid)
+    }
+
+    /// 2.5D, memory along two opposite edges (MTIA).
+    pub fn type_b(mem: MemKind, grid: usize) -> Platform {
+        Self::preset(SystemType::B, mem, grid)
+    }
+
+    /// 3D, memory stacked on every chiplet.
+    pub fn type_c(mem: MemKind, grid: usize) -> Platform {
+        Self::preset(SystemType::C, mem, grid)
+    }
+
+    /// 2.5D + 3D mix, stacks over the quadrant centers (Chiplet-Gym).
+    pub fn type_d(mem: MemKind, grid: usize) -> Platform {
+        Self::preset(SystemType::D, mem, grid)
+    }
+
+    /// The paper's headline evaluation point: 4x4 type-A HBM.
+    pub fn headline() -> Platform {
+        Self::type_a(MemKind::Hbm, 4)
+    }
+
+    /// Expand a legacy [`HwConfig`] description (thin-constructor path).
+    /// Panics on invalid configs; use [`Platform::try_from_hw`] (or
+    /// [`HwConfig::platform`]) where the config is untrusted.
+    pub fn from_hw(hw: &HwConfig) -> Platform {
+        Self::try_from_hw(hw).expect("invalid HwConfig")
+    }
+
+    pub fn try_from_hw(hw: &HwConfig) -> Result<Platform, String> {
+        hw.validate()?;
+        Platform::new(PlatformSpec {
+            name: format!(
+                "{}-{}-{}x{}",
+                hw.ty.short(),
+                hw.mem.name(),
+                hw.xdim,
+                hw.ydim
+            ),
+            xdim: hw.xdim,
+            ydim: hw.ydim,
+            r: hw.r,
+            c: hw.c,
+            bw_nop: hw.bw_nop,
+            bw_diag: hw.bw_nop,
+            bw_mem: hw.bw_mem,
+            freq_ghz: hw.freq_ghz,
+            bytes_per_elem: hw.bytes_per_elem,
+            mem_pj_bit: hw.mem.energy_pj_per_bit(),
+            energy: hw.energy,
+            attachments: preset_attachments(
+                hw.ty, hw.xdim, hw.ydim, hw.bw_mem,
+            ),
+        })
+    }
+
+    // ---- topology queries (all O(1), precomputed) ----------------------
+
+    #[inline]
+    fn idx(&self, p: Pos) -> usize {
+        p.row * self.spec.ydim + p.col
+    }
+
+    /// All grid positions, row-major.
+    pub fn positions(&self) -> impl Iterator<Item = Pos> + '_ {
+        grid_positions(self.spec.xdim, self.spec.ydim)
+    }
+
+    /// Attachment chiplets (wired to main memory) — the paper's "global
+    /// chiplets" — in declaration order.
+    pub fn globals(&self) -> &[Pos] {
+        &self.globals
+    }
+
+    /// O(1): is this chiplet wired to memory?
+    #[inline]
+    pub fn is_global(&self, p: Pos) -> bool {
+        self.global_mask[self.idx(p)]
+    }
+
+    /// The closest attachment chiplet (paper: "each chiplet will only
+    /// communicate with the closest global chiplet"); Manhattan metric,
+    /// ties broken toward the smaller position for determinism.
+    #[inline]
+    pub fn nearest_global(&self, p: Pos) -> Pos {
+        self.nearest[self.idx(p)]
+    }
+
+    /// The paper's local index `(x, y)` for a chiplet.
+    #[inline]
+    pub fn local_index(&self, p: Pos) -> LocalIdx {
+        self.locals[self.idx(p)]
+    }
+
+    /// Manhattan distance to the serving attachment (SIMBA's
+    /// partitioning key; §3.1).
+    pub fn distance_to_memory(&self, p: Pos) -> usize {
+        let l = self.local_index(p);
+        l.x + l.y
+    }
+
+    /// Extent (X, Y) of the serving region of `p`'s attachment: the
+    /// dims that enter the waiting-hop terms of eqs. 11–12.
+    #[inline]
+    pub fn region_extent(&self, p: Pos) -> (usize, usize) {
+        self.extents[self.idx(p)]
+    }
+
+    /// Number of NoP links that enter the attachment chiplet(s) from
+    /// non-attachment neighbours — the "bandwidth to entrances"
+    /// multiplier of eq. 8 (0 when every chiplet is an attachment:
+    /// collection is a no-op). Diagonal links add the diagonal
+    /// neighbours (§5.1).
+    #[inline]
+    pub fn entrance_links(&self, diagonal: bool) -> usize {
+        self.hops.entrance_links(diagonal)
+    }
+
+    // ---- hop lookups (§4.3.3, §5.1.1) — O(1) table reads ---------------
+
+    /// Eq. 10 — low off-chip BW: links drain faster than memory feeds
+    /// them, no contention, minimal path. Precomputed from the actual
+    /// [`LinkGraph`] route length.
+    #[inline]
+    pub fn hops_low_bw(&self, p: Pos, diagonal: bool) -> usize {
+        self.hops.min_hops(self.idx(p), diagonal)
+    }
+
+    /// Eq. 11 — high BW, row-wise-shared data: waiting hops folded in;
+    /// with diagonal links the alternative §5.1.1 route is taken when
+    /// cheaper.
+    #[inline]
+    pub fn hops_row_shared(&self, p: Pos, diagonal: bool) -> usize {
+        self.hops.row_shared(self.idx(p), diagonal)
+    }
+
+    /// Eq. 12 — high BW, column-wise-shared data: symmetric to eq. 11.
+    #[inline]
+    pub fn hops_col_shared(&self, p: Pos, diagonal: bool) -> usize {
+        self.hops.col_shared(self.idx(p), diagonal)
+    }
+
+    /// Hop count used by the on-chip energy model (§4.4.3): actual path
+    /// length travelled, i.e. the minimal route.
+    #[inline]
+    pub fn hops_energy(&self, p: Pos, diagonal: bool) -> usize {
+        self.hops.min_hops(self.idx(p), diagonal)
+    }
+
+    /// Materialize the explicit link graph of this platform: the chiplet
+    /// mesh (with diagonals when `diagonal`, at [`PlatformSpec::bw_diag`])
+    /// plus one memory node per attachment at its own bandwidth. The
+    /// netsim congestion studies run on this.
+    pub fn link_graph(&self, diagonal: bool) -> LinkGraph {
+        let mut g = LinkGraph::mesh_classes(
+            self.spec.xdim,
+            self.spec.ydim,
+            self.spec.bw_nop,
+            if diagonal { Some(self.spec.bw_diag) } else { None },
+        );
+        for a in &self.spec.attachments {
+            g.attach_memory(a.pos, a.bw);
+        }
+        g
+    }
+}
+
+/// The attachment set of one paper packaging type (Figure 2 / §4.1) —
+/// every preset and the [`HwConfig`] thin-constructor path share this
+/// placement code, and the LP half-grid construction (`eval::lp`)
+/// reuses it for its virtual stages.
+///
+/// `bw_total` is the platform's *aggregate* off-chip bandwidth
+/// ([`PlatformSpec::bw_mem`]); it is split evenly over the placed
+/// attachments so the explicit link graph (netsim) offers exactly the
+/// aggregate the analytical model serializes at — the two models stay
+/// consistent for every preset, whatever the attachment count.
+pub fn preset_attachments(
+    ty: SystemType,
+    xdim: usize,
+    ydim: usize,
+    bw_total: f64,
+) -> Vec<MemAttachment> {
+    let positions: Vec<Pos> = match ty {
+        // Corner memory: single entry point at (0, 0).
+        SystemType::A => vec![Pos::new(0, 0)],
+        // Edge memory: first and last column are attachments (each row
+        // has an entrance on both sides). Degenerates to one column for
+        // ydim == 1.
+        SystemType::B => {
+            let mut g: Vec<Pos> = (0..xdim).map(|r| Pos::new(r, 0)).collect();
+            if ydim > 1 {
+                g.extend((0..xdim).map(|r| Pos::new(r, ydim - 1)));
+            }
+            g
+        }
+        // 3D stacked: every chiplet has its own memory interface.
+        SystemType::C => grid_positions(xdim, ydim).collect(),
+        // Mixed 2.5D+3D: four stacks over the quadrant centers.
+        SystemType::D => {
+            let qr = [(xdim - 1) / 2, xdim / 2];
+            let qc = [(ydim - 1) / 2, ydim / 2];
+            let mut g = vec![
+                Pos::new(qr[0], qc[0]),
+                Pos::new(qr[0], qc[1]),
+                Pos::new(qr[1], qc[0]),
+                Pos::new(qr[1], qc[1]),
+            ];
+            g.sort();
+            g.dedup();
+            g
+        }
+    };
+    let bw = bw_total / positions.len() as f64;
+    positions
+        .into_iter()
+        .map(|pos| MemAttachment { pos, bw })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn type_a_single_corner_global() {
+        let t = Platform::type_a(MemKind::Hbm, 4);
+        assert_eq!(t.globals(), &[Pos::new(0, 0)]);
+        assert_eq!(t.local_index(Pos::new(3, 2)), LocalIdx { x: 3, y: 2 });
+        assert_eq!(t.region_extent(Pos::new(1, 1)), (4, 4));
+        assert_eq!(t.name, "A-HBM-4x4");
+        assert_eq!(t.bw_mem, 1000.0);
+    }
+
+    #[test]
+    fn type_b_edge_globals() {
+        let t = Platform::type_b(MemKind::Hbm, 4);
+        assert_eq!(t.globals().len(), 8);
+        // Interior chiplet is served by the nearest edge, same row.
+        let l = t.local_index(Pos::new(2, 1));
+        assert_eq!((l.x, l.y), (0, 1));
+        // Region extent spans half the row.
+        let (xr, yr) = t.region_extent(Pos::new(2, 1));
+        assert_eq!(xr, 1);
+        assert!(yr >= 2);
+    }
+
+    #[test]
+    fn type_c_all_global_zero_distance() {
+        let t = Platform::type_c(MemKind::Hbm, 4);
+        assert_eq!(t.globals().len(), 16);
+        for p in t.positions() {
+            assert_eq!(t.distance_to_memory(p), 0);
+            assert_eq!(t.hops_low_bw(p, false), 0);
+        }
+        assert_eq!(t.entrance_links(false), 0);
+    }
+
+    #[test]
+    fn type_d_quadrant_centers_near_uniform() {
+        let t = Platform::type_d(MemKind::Hbm, 4);
+        assert_eq!(t.globals().len(), 4);
+        let max_d = t
+            .positions()
+            .map(|p| t.distance_to_memory(p))
+            .max()
+            .unwrap();
+        assert!(max_d <= 2, "type D should be near-uniform, max={max_d}");
+    }
+
+    #[test]
+    fn eq8_entrance_links_type_a() {
+        let t = Platform::type_a(MemKind::Hbm, 4);
+        // Corner global: 2 mesh links; +1 diagonal = 3 (the paper's "50%
+        // more bandwidth on the bottleneck").
+        assert_eq!(t.entrance_links(false), 2);
+        assert_eq!(t.entrance_links(true), 3);
+    }
+
+    #[test]
+    fn eq10_low_bw_hops() {
+        let t = Platform::type_a(MemKind::Hbm, 5);
+        assert_eq!(t.hops_low_bw(Pos::new(3, 2), false), 5);
+        assert_eq!(t.hops_low_bw(Pos::new(3, 2), true), 3);
+        assert_eq!(t.hops_low_bw(Pos::new(0, 0), false), 0);
+    }
+
+    #[test]
+    fn eq11_row_shared_hops_and_diagonal() {
+        let t = Platform::type_a(MemKind::Hbm, 5);
+        let p = Pos::new(3, 2);
+        // eq. 11: X + y = 5 + 2 = 7.
+        assert_eq!(t.hops_row_shared(p, false), 7);
+        // §5.1.1: (X - x) + max(x, y) = 2 + 3 = 5; min(7, 5) = 5.
+        assert_eq!(t.hops_row_shared(p, true), 5);
+    }
+
+    #[test]
+    fn eq12_col_shared_symmetric() {
+        let t = Platform::type_a(MemKind::Hbm, 5);
+        let p = Pos::new(2, 3);
+        assert_eq!(t.hops_col_shared(p, false), 5 + 2);
+        assert_eq!(t.hops_col_shared(p, true), (5 - 3 + 3).min(7));
+    }
+
+    #[test]
+    fn diagonal_never_worse() {
+        for ty in SystemType::ALL {
+            let t = Platform::preset(ty, MemKind::Hbm, 5);
+            for p in t.positions() {
+                assert!(
+                    t.hops_row_shared(p, true) <= t.hops_row_shared(p, false)
+                );
+                assert!(
+                    t.hops_col_shared(p, true) <= t.hops_col_shared(p, false)
+                );
+                assert!(t.hops_energy(p, true) <= t.hops_energy(p, false));
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_global_is_actually_nearest() {
+        for ty in SystemType::ALL {
+            let t = Platform::preset_grid(ty, MemKind::Hbm, 6, 5);
+            for p in t.positions() {
+                let g = t.nearest_global(p);
+                let d = manhattan(p, g);
+                for other in t.globals() {
+                    assert!(d <= manhattan(p, *other));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_hw_matches_preset() {
+        let hw = HwConfig::paper(SystemType::B, MemKind::Dram, 4);
+        let a = Platform::from_hw(&hw);
+        let b = Platform::type_b(MemKind::Dram, 4);
+        assert_eq!(a.spec(), b.spec());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_specs() {
+        let ok = Platform::headline().spec().clone();
+        assert!(ok.validate().is_ok());
+        let mut s = ok.clone();
+        s.xdim = 0;
+        assert!(s.validate().unwrap_err().contains("grid"));
+        let mut s = ok.clone();
+        s.bw_mem = f64::NEG_INFINITY;
+        assert!(s.validate().is_err());
+        let mut s = ok.clone();
+        s.attachments.clear();
+        assert!(s.validate().unwrap_err().contains("attachment"));
+        let mut s = ok.clone();
+        s.attachments = vec![MemAttachment::new(9, 9, 1000.0)];
+        assert!(s.validate().unwrap_err().contains("outside"));
+        let mut s = ok.clone();
+        s.attachments =
+            vec![MemAttachment::new(0, 0, 1.0), MemAttachment::new(0, 0, 2.0)];
+        assert!(s.validate().unwrap_err().contains("duplicate"));
+        let mut s = ok;
+        s.energy.mac_pj_cycle = f64::NAN;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn asymmetric_attachments_are_first_class() {
+        // An L-shaped attachment set no SystemType can express.
+        let mut spec = Platform::headline().spec().clone();
+        spec.name = "asym-L".into();
+        spec.attachments = vec![
+            MemAttachment::new(0, 0, 500.0),
+            MemAttachment::new(0, 3, 250.0),
+            MemAttachment::new(3, 0, 250.0),
+        ];
+        let p = Platform::new(spec).unwrap();
+        assert_eq!(p.globals().len(), 3);
+        // (3, 3) is served by one of the arm tips, 3 hops away.
+        assert_eq!(p.distance_to_memory(Pos::new(3, 3)), 3);
+        // Entrances: each of the three corner attachments has exactly
+        // two in-grid orthogonal neighbours, none of them attachments.
+        assert_eq!(p.entrance_links(false), 2 + 2 + 2);
+        for pos in p.positions() {
+            let g = p.nearest_global(pos);
+            assert_eq!(
+                p.hops_low_bw(pos, false),
+                manhattan(pos, g),
+                "{pos:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn link_graph_carries_attachment_bandwidths() {
+        let plat = Platform::type_b(MemKind::Hbm, 3);
+        let g = plat.link_graph(false);
+        // 9 chiplets + 6 memory nodes (two edge columns x 3 rows).
+        assert_eq!(g.nodes.len(), 9 + 6);
+        let mem_links: Vec<f64> = g
+            .links
+            .iter()
+            .filter(|l| l.from >= 9)
+            .map(|l| l.capacity)
+            .collect();
+        assert_eq!(mem_links.len(), 6);
+        // The aggregate bw_mem is split evenly over the attachments, so
+        // netsim offers exactly what the analytical model serializes.
+        assert!(mem_links.iter().all(|&c| c == 1000.0 / 6.0));
+        let sum: f64 = mem_links.iter().sum();
+        assert!((sum - plat.bw_mem).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_caps_grid_size() {
+        let mut s = Platform::headline().spec().clone();
+        s.xdim = 1 << 20;
+        s.ydim = 1 << 20;
+        assert!(s.validate().unwrap_err().contains("limit"));
+        let mut s = Platform::headline().spec().clone();
+        s.xdim = PlatformSpec::MAX_CHIPLETS + 1;
+        s.ydim = 1;
+        assert!(s.validate().is_err());
+    }
+}

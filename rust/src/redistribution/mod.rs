@@ -19,7 +19,7 @@
 //! Vertical links "help little during row reduction" (§5.2), so steps are
 //! strictly row-then-column; the three step latencies add.
 
-use crate::config::HwConfig;
+use crate::platform::Platform;
 use crate::partition::{Allocation, Partition};
 use crate::workload::{EdgeId, GemmOp, Workload};
 
@@ -42,15 +42,15 @@ impl RedistCost {
 
 /// Cost of the 3-step redistribution (§5.2).
 pub fn redistribute(
-    hw: &HwConfig,
+    plat: &Platform,
     op: &GemmOp,
     part: &Partition,
     next_part: &Partition,
     c_star: usize,
 ) -> RedistCost {
     assert!(c_star < part.py.len(), "collection column out of range");
-    let bw = hw.bw_nop;
-    let e_nop_bit = hw.energy.nop_pj_bit_hop;
+    let bw = plat.bw_nop;
+    let e_nop_bit = plat.energy.nop_pj_bit_hop;
 
     // ---- Step 1: row reduction toward c*.
     // Per row x: left side carries sum of chunks with y < c*, right side
@@ -62,7 +62,7 @@ pub fn redistribute(
         let mut left = 0.0;
         let mut right = 0.0;
         for (y, &py) in part.py.iter().enumerate() {
-            let chunk_bytes = hw.bytes(px * py);
+            let chunk_bytes = plat.bytes(px * py);
             let hops = y.abs_diff(c_star) as f64;
             if y < c_star {
                 left += chunk_bytes;
@@ -79,7 +79,7 @@ pub fn redistribute(
     let ydim = part.py.len();
     let mut step2_ns: f64 = 0.0;
     for &px in &part.px {
-        let row_bytes = hw.bytes(px * op.n);
+        let row_bytes = plat.bytes(px * op.n);
         step2_ns = step2_ns.max(row_bytes / bw);
         // Every one of the (ydim - 1) row links carries the full block.
         energy_bits += row_bytes * 8.0 * (ydim - 1) as f64;
@@ -110,7 +110,7 @@ pub fn redistribute(
         cum_a += part.px[b] as f64;
         cum_b += next_part.px[b] as f64 * scale;
         let rows_moved = (cum_a - cum_b).abs();
-        let bytes = rows_moved * hw.bytes(next_k);
+        let bytes = rows_moved * plat.bytes(next_k);
         step3_worst_bytes = step3_worst_bytes.max(bytes);
         energy_bits += bytes * 8.0;
     }
@@ -130,14 +130,14 @@ pub fn redistribute(
 /// concern ([`Workload::edge_redistributable`]); the cost of an
 /// illegal move is still well-defined (diagnostics, what-if tooling).
 pub fn redistribute_edge(
-    hw: &HwConfig,
+    plat: &Platform,
     wl: &Workload,
     alloc: &Allocation,
     e: EdgeId,
 ) -> RedistCost {
     let edge = wl.edges[e];
     redistribute(
-        hw,
+        plat,
         &wl.ops[edge.src],
         &alloc.parts[edge.src],
         &alloc.parts[edge.dst],
@@ -148,12 +148,12 @@ pub fn redistribute_edge(
 /// The collection column minimizing step-1 latency (§5.2: "best balances
 /// the left-coming and right-coming data size") — the default gene value
 /// the GA starts from and the value MIQP fixes.
-pub fn best_collect_col(hw: &HwConfig, op: &GemmOp, part: &Partition,
+pub fn best_collect_col(plat: &Platform, op: &GemmOp, part: &Partition,
                         next_part: &Partition) -> usize {
     (0..part.py.len())
         .min_by(|&a, &b| {
-            let ca = redistribute(hw, op, part, next_part, a).total_ns();
-            let cb = redistribute(hw, op, part, next_part, b).total_ns();
+            let ca = redistribute(plat, op, part, next_part, a).total_ns();
+            let cb = redistribute(plat, op, part, next_part, b).total_ns();
             ca.total_cmp(&cb)
         })
         .unwrap_or(0)
@@ -165,8 +165,8 @@ mod tests {
     use crate::config::{MemKind, SystemType};
     use crate::partition::{uniform, Partition};
 
-    fn hw() -> HwConfig {
-        HwConfig::paper(SystemType::A, MemKind::Hbm, 4)
+    fn hw() -> Platform {
+        Platform::preset(SystemType::A, MemKind::Hbm, 4)
     }
 
     fn op() -> GemmOp {
@@ -209,14 +209,12 @@ mod tests {
     fn cheaper_than_memory_roundtrip_high_bw() {
         // The whole point of §5.2: beat offload+reload via memory.
         use crate::cost::latency::{load, offload};
-        use crate::topology::Topology;
         let h = hw();
-        let topo = Topology::from_hw(&h);
         let o = op();
         let p = uniform(&h, &o);
         let redist = redistribute(&h, &o, &p, &p, 2).total_ns();
-        let roundtrip = offload(&h, &topo, &o, false).wall_ns()
-            + load(&h, &topo, &o, &p, false, true).wall_ns();
+        let roundtrip = offload(&h, &o, false).wall_ns()
+            + load(&h, &o, &p, false, true).wall_ns();
         assert!(
             redist < roundtrip,
             "redist={redist} roundtrip={roundtrip}"

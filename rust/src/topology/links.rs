@@ -1,8 +1,16 @@
 //! Explicit NoP link graph: nodes, directed links, and XY(+diagonal)
 //! routing. This is the substrate under `netsim` (the ASTRA-sim
-//! substitute used for Figure 3) and the per-link congestion ablations.
+//! substitute used for Figure 3), the per-link congestion ablations,
+//! and the [`crate::platform::HopTables`] precomputation.
+//!
+//! Link lookup is a flat per-node adjacency index (a node has at most
+//! 9 neighbours: 4 mesh + 4 diagonal + 1 memory), not a hash map; a
+//! malformed graph makes [`LinkGraph::route`] return a structured
+//! [`crate::util::error::Error`] instead of panicking.
 
 use super::Pos;
+use crate::err;
+use crate::util::error::Result;
 
 /// Node in the package network: a chiplet or an off-package memory stack.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,34 +39,52 @@ pub struct LinkGraph {
     pub diagonal: bool,
     pub nodes: Vec<Node>,
     pub links: Vec<Link>,
-    /// link index by (from, to)
-    by_ends: std::collections::HashMap<(NodeId, NodeId), LinkId>,
+    /// Per-node outgoing adjacency `(to, link id)` — the flat index that
+    /// replaced the `HashMap<(from, to), LinkId>` lookup (degree <= 9,
+    /// so a linear probe beats hashing).
+    adj: Vec<Vec<(NodeId, LinkId)>>,
 }
 
 impl LinkGraph {
     /// Build the chiplet mesh (all chiplet nodes + bidirectional NoP
-    /// links, plus diagonals when enabled).
+    /// links, plus diagonals when enabled). Orthogonal and diagonal
+    /// links share one capacity; see [`LinkGraph::mesh_classes`] for
+    /// per-class bandwidths.
     pub fn mesh(xdim: usize, ydim: usize, diagonal: bool, bw_nop: f64) -> Self {
+        Self::mesh_classes(xdim, ydim, bw_nop, if diagonal { Some(bw_nop) } else { None })
+    }
+
+    /// [`LinkGraph::mesh`] with per-class link bandwidths: orthogonal
+    /// NoP links at `bw_nop`, diagonal links (§5.1) at `bw_diag` when
+    /// present.
+    pub fn mesh_classes(
+        xdim: usize,
+        ydim: usize,
+        bw_nop: f64,
+        bw_diag: Option<f64>,
+    ) -> Self {
         let mut g = LinkGraph {
             xdim,
             ydim,
-            diagonal,
+            diagonal: bw_diag.is_some(),
             nodes: Vec::new(),
             links: Vec::new(),
-            by_ends: Default::default(),
+            adj: Vec::new(),
         };
         for r in 0..xdim {
             for c in 0..ydim {
                 g.nodes.push(Node::Chiplet(Pos::new(r, c)));
+                g.adj.push(Vec::new());
             }
         }
-        let mut offsets: Vec<(isize, isize)> = vec![(0, 1), (1, 0)];
-        if diagonal {
-            offsets.extend([(1, 1), (1, -1)]);
+        let mut offsets: Vec<(isize, isize, f64)> =
+            vec![(0, 1, bw_nop), (1, 0, bw_nop)];
+        if let Some(bd) = bw_diag {
+            offsets.extend([(1, 1, bd), (1, -1, bd)]);
         }
         for r in 0..xdim {
             for c in 0..ydim {
-                for &(dr, dc) in &offsets {
+                for &(dr, dc, bw) in &offsets {
                     let (nr, nc) = (r as isize + dr, c as isize + dc);
                     if nr < 0
                         || nc < 0
@@ -69,7 +95,7 @@ impl LinkGraph {
                     }
                     let a = g.chiplet_id(Pos::new(r, c));
                     let b = g.chiplet_id(Pos::new(nr as usize, nc as usize));
-                    g.add_duplex(a, b, bw_nop);
+                    g.add_duplex(a, b, bw);
                 }
             }
         }
@@ -80,6 +106,7 @@ impl LinkGraph {
     pub fn attach_memory(&mut self, pos: Pos, bw_mem: f64) -> NodeId {
         let id = self.nodes.len();
         self.nodes.push(Node::Memory { attach: pos });
+        self.adj.push(Vec::new());
         let c = self.chiplet_id(pos);
         self.add_duplex(id, c, bw_mem);
         id
@@ -89,7 +116,7 @@ impl LinkGraph {
         for (f, t) in [(a, b), (b, a)] {
             let id = self.links.len();
             self.links.push(Link { from: f, to: t, capacity: cap });
-            self.by_ends.insert((f, t), id);
+            self.adj[f].push((t, id));
         }
     }
 
@@ -98,28 +125,49 @@ impl LinkGraph {
         p.row * self.ydim + p.col
     }
 
+    /// The link `from -> to`, if it exists (linear probe over the flat
+    /// adjacency row).
     pub fn link_between(&self, from: NodeId, to: NodeId) -> Option<LinkId> {
-        self.by_ends.get(&(from, to)).copied()
+        self.adj
+            .get(from)?
+            .iter()
+            .find(|&&(t, _)| t == to)
+            .map(|&(_, id)| id)
     }
 
     /// Deterministic routing from `src` to `dst`:
     ///   * memory endpoints hop through their attachment chiplet;
     ///   * diagonal steps first while both coordinates differ (when the
     ///     mesh has diagonals), then dimension-order X-then-Y.
-    /// Returns the traversed link ids in order.
-    pub fn route(&self, src: NodeId, dst: NodeId) -> Vec<LinkId> {
-        if src == dst {
-            return Vec::new();
+    /// Returns the traversed link ids in order, or a structured error on
+    /// malformed graphs (out-of-range node ids, missing links) instead
+    /// of panicking.
+    pub fn route(&self, src: NodeId, dst: NodeId) -> Result<Vec<LinkId>> {
+        if src >= self.nodes.len() || dst >= self.nodes.len() {
+            return Err(err!(
+                "route {src} -> {dst}: node id out of range (graph has {} \
+                 nodes)",
+                self.nodes.len()
+            ));
         }
+        if src == dst {
+            return Ok(Vec::new());
+        }
+        let step_to = |cur: NodeId, next: NodeId| -> Result<LinkId> {
+            self.link_between(cur, next).ok_or_else(|| {
+                err!("route {src} -> {dst}: no link {cur} -> {next} \
+                      (malformed graph)")
+            })
+        };
         let mut path = Vec::new();
         let mut cur = src;
         // Leave a memory node through its attachment.
         if let Node::Memory { attach } = self.nodes[cur] {
             let next = self.chiplet_id(attach);
-            path.push(self.by_ends[&(cur, next)]);
+            path.push(step_to(cur, next)?);
             cur = next;
             if cur == dst {
-                return path;
+                return Ok(path);
             }
         }
         let target_pos = match self.nodes[dst] {
@@ -129,7 +177,12 @@ impl LinkGraph {
         loop {
             let cur_pos = match self.nodes[cur] {
                 Node::Chiplet(p) => p,
-                Node::Memory { .. } => unreachable!("mid-route memory node"),
+                Node::Memory { .. } => {
+                    return Err(err!(
+                        "route {src} -> {dst}: walked onto memory node \
+                         {cur} mid-route (malformed graph)"
+                    ))
+                }
             };
             if cur_pos == target_pos {
                 break;
@@ -148,16 +201,14 @@ impl LinkGraph {
                 (cur_pos.col as isize + step.1) as usize,
             );
             let next = self.chiplet_id(next_pos);
-            path.push(
-                self.by_ends[&(cur, next)],
-            );
+            path.push(step_to(cur, next)?);
             cur = next;
         }
         // Enter a memory destination through its attachment link.
         if cur != dst {
-            path.push(self.by_ends[&(cur, dst)]);
+            path.push(step_to(cur, dst)?);
         }
-        path
+        Ok(path)
     }
 }
 
@@ -177,11 +228,24 @@ mod tests {
     }
 
     #[test]
+    fn per_class_diagonal_bandwidth() {
+        let g = LinkGraph::mesh_classes(3, 3, 60.0, Some(30.0));
+        assert!(g.diagonal);
+        let a = g.chiplet_id(Pos::new(0, 0));
+        let b = g.chiplet_id(Pos::new(1, 1));
+        let diag = g.link_between(a, b).expect("diagonal link exists");
+        assert_eq!(g.links[diag].capacity, 30.0);
+        let c = g.chiplet_id(Pos::new(0, 1));
+        let orth = g.link_between(a, c).expect("mesh link exists");
+        assert_eq!(g.links[orth].capacity, 60.0);
+    }
+
+    #[test]
     fn route_is_connected_and_minimal() {
         let g = LinkGraph::mesh(4, 4, false, 60.0);
         let src = g.chiplet_id(Pos::new(0, 0));
         let dst = g.chiplet_id(Pos::new(3, 2));
-        let path = g.route(src, dst);
+        let path = g.route(src, dst).unwrap();
         assert_eq!(path.len(), 5); // Manhattan distance
         // Links chain: from[i+1] == to[i].
         for w in path.windows(2) {
@@ -196,7 +260,7 @@ mod tests {
         let g = LinkGraph::mesh(5, 5, true, 60.0);
         let src = g.chiplet_id(Pos::new(0, 0));
         let dst = g.chiplet_id(Pos::new(3, 2));
-        assert_eq!(g.route(src, dst).len(), 3); // max(3, 2)
+        assert_eq!(g.route(src, dst).unwrap().len(), 3); // max(3, 2)
     }
 
     #[test]
@@ -204,11 +268,11 @@ mod tests {
         let mut g = LinkGraph::mesh(4, 4, false, 60.0);
         let mem = g.attach_memory(Pos::new(0, 0), 1000.0);
         let dst = g.chiplet_id(Pos::new(2, 2));
-        let path = g.route(mem, dst);
+        let path = g.route(mem, dst).unwrap();
         assert_eq!(path.len(), 1 + 4);
         assert_eq!(g.links[path[0]].capacity, 1000.0);
         // And the reverse direction enters memory last.
-        let back = g.route(dst, mem);
+        let back = g.route(dst, mem).unwrap();
         assert_eq!(back.len(), 5);
         assert_eq!(g.links[*back.last().unwrap()].to, mem);
     }
@@ -216,6 +280,46 @@ mod tests {
     #[test]
     fn self_route_is_empty() {
         let g = LinkGraph::mesh(3, 3, false, 60.0);
-        assert!(g.route(4, 4).is_empty());
+        assert!(g.route(4, 4).unwrap().is_empty());
+    }
+
+    #[test]
+    fn link_between_matches_adjacency() {
+        let g = LinkGraph::mesh(3, 3, true, 60.0);
+        let a = g.chiplet_id(Pos::new(1, 1));
+        // All 8 neighbours reachable, self not.
+        assert!(g.link_between(a, a).is_none());
+        for (dr, dc) in [(0isize, 1isize), (1, 0), (1, 1), (1, -1)] {
+            let b = g.chiplet_id(Pos::new(
+                (1 + dr) as usize,
+                (1 + dc) as usize,
+            ));
+            let fwd = g.link_between(a, b).expect("forward link");
+            let bwd = g.link_between(b, a).expect("reverse link");
+            assert_eq!(g.links[fwd].from, a);
+            assert_eq!(g.links[bwd].to, a);
+        }
+    }
+
+    #[test]
+    fn malformed_graphs_error_instead_of_panicking() {
+        let g = LinkGraph::mesh(3, 3, false, 60.0);
+        // Out-of-range node ids.
+        let err = g.route(0, 999).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // A disconnected graph (nodes without links).
+        let broken = LinkGraph {
+            xdim: 1,
+            ydim: 2,
+            diagonal: false,
+            nodes: vec![
+                Node::Chiplet(Pos::new(0, 0)),
+                Node::Chiplet(Pos::new(0, 1)),
+            ],
+            links: Vec::new(),
+            adj: vec![Vec::new(), Vec::new()],
+        };
+        let err = broken.route(0, 1).unwrap_err();
+        assert!(err.to_string().contains("no link"), "{err}");
     }
 }

@@ -1,15 +1,15 @@
-//! Chiplet-grid topology: per-type global-chiplet placement, the paper's
-//! local (x, y) indexing (§4.2.1, Figure 4), and the hop models of
-//! §4.3.3 and §5.1.1 (diagonal links).
+//! Grid geometry substrate: absolute positions, the paper's local
+//! (x, y) indexing types (§4.2.1, Figure 4), and the explicit NoP link
+//! graph ([`links`]).
 //!
-//! The paper encodes *all* topological information needed by the cost
-//! model in a local index per chiplet: `(x, y)` = rows/columns away from
-//! the nearest **global chiplet** (the chiplet wired to main memory).
-//! Each packaging type places global chiplets differently, so the same
-//! cost equations adapt to 2.5D corner memory (A), edge memory (B),
-//! 3D-stacked memory (C) and the mixed case (D) just by re-indexing.
-
-use crate::config::{HwConfig, SystemType};
+//! The packaging-specific parts that used to live here — global-chiplet
+//! placement per `SystemType` and the closed-form hop models of §4.3.3
+//! and §5.1.1 — are now data, not code: a [`crate::platform::Platform`]
+//! carries an arbitrary memory-attachment set and precomputes its
+//! [`crate::platform::HopTables`] from [`links::LinkGraph`] routing, so
+//! the same cost equations adapt to 2.5D corner memory, edge memory,
+//! 3D-stacked memory, the mixed case, and any layout a platform
+//! description file can express.
 
 pub mod links;
 
@@ -34,257 +34,11 @@ pub struct LocalIdx {
     pub y: usize,
 }
 
-/// The topology of one MCM: grid dims + packaging type.
-///
-/// Local indices, serving globals and region extents are precomputed at
-/// construction: the cost evaluator queries them inside per-chiplet
-/// loops (GA fitness is the hottest path in the repo, §Perf).
-#[derive(Debug, Clone)]
-pub struct Topology {
-    pub xdim: usize,
-    pub ydim: usize,
-    pub ty: SystemType,
-    globals: Vec<Pos>,
-    /// Per position (row-major): is this a global chiplet? O(1)
-    /// membership for the `entrance_links`/evaluator loops instead of
-    /// scanning `globals`.
-    global_mask: Vec<bool>,
-    /// Per position (row-major): nearest global chiplet.
-    nearest: Vec<Pos>,
-    /// Per position: local (x, y) index.
-    locals: Vec<LocalIdx>,
-    /// Per position: serving region extent (X, Y).
-    extents: Vec<(usize, usize)>,
-}
-
-impl Topology {
-    pub fn new(ty: SystemType, xdim: usize, ydim: usize) -> Self {
-        assert!(xdim > 0 && ydim > 0);
-        let globals = match ty {
-            // Corner memory: single entry point at (0, 0).
-            SystemType::A => vec![Pos::new(0, 0)],
-            // Edge memory: first and last column are global (each row has
-            // an entrance on both sides). Degenerates to one column for
-            // ydim == 1.
-            SystemType::B => {
-                let mut g: Vec<Pos> =
-                    (0..xdim).map(|r| Pos::new(r, 0)).collect();
-                if ydim > 1 {
-                    g.extend((0..xdim).map(|r| Pos::new(r, ydim - 1)));
-                }
-                g
-            }
-            // 3D stacked: every chiplet has its own memory interface.
-            SystemType::C => (0..xdim)
-                .flat_map(|r| (0..ydim).map(move |c| Pos::new(r, c)))
-                .collect(),
-            // Mixed 2.5D+3D: four stacks over the quadrant centers.
-            SystemType::D => {
-                let qr = [(xdim - 1) / 2, xdim / 2];
-                let qc = [(ydim - 1) / 2, ydim / 2];
-                let mut g = vec![
-                    Pos::new(qr[0], qc[0]),
-                    Pos::new(qr[0], qc[1]),
-                    Pos::new(qr[1], qc[0]),
-                    Pos::new(qr[1], qc[1]),
-                ];
-                g.dedup();
-                g.sort();
-                g.dedup();
-                g
-            }
-        };
-        let mut global_mask = vec![false; xdim * ydim];
-        for g in &globals {
-            global_mask[g.row * ydim + g.col] = true;
-        }
-        let mut t = Topology {
-            xdim,
-            ydim,
-            ty,
-            globals,
-            global_mask,
-            nearest: Vec::new(),
-            locals: Vec::new(),
-            extents: Vec::new(),
-        };
-        // Precompute nearest globals + local indices.
-        for p in grid_positions(xdim, ydim) {
-            let g = *t
-                .globals
-                .iter()
-                .min_by_key(|g| (manhattan(p, **g), (g.row, g.col)))
-                .expect("topology has at least one global chiplet");
-            t.nearest.push(g);
-            t.locals.push(LocalIdx {
-                x: p.row.abs_diff(g.row),
-                y: p.col.abs_diff(g.col),
-            });
-        }
-        // Region extents per serving global, then scatter per position.
-        use std::collections::HashMap;
-        let mut per_global: HashMap<Pos, (usize, usize)> = HashMap::new();
-        for (i, p) in grid_positions(xdim, ydim).enumerate() {
-            let _ = p;
-            let g = t.nearest[i];
-            let l = t.locals[i];
-            let e = per_global.entry(g).or_insert((0, 0));
-            e.0 = e.0.max(l.x);
-            e.1 = e.1.max(l.y);
-        }
-        for i in 0..xdim * ydim {
-            let (mx, my) = per_global[&t.nearest[i]];
-            t.extents.push((mx + 1, my + 1));
-        }
-        t
-    }
-
-    #[inline]
-    fn idx(&self, p: Pos) -> usize {
-        p.row * self.ydim + p.col
-    }
-
-    pub fn from_hw(hw: &HwConfig) -> Self {
-        Self::new(hw.ty, hw.xdim, hw.ydim)
-    }
-
-    pub fn num_chiplets(&self) -> usize {
-        self.xdim * self.ydim
-    }
-
-    /// All grid positions, row-major.
-    pub fn positions(&self) -> impl Iterator<Item = Pos> + '_ {
-        grid_positions(self.xdim, self.ydim)
-    }
-
-    /// Global chiplets (wired to main memory).
-    pub fn globals(&self) -> &[Pos] {
-        &self.globals
-    }
-
-    /// O(1): precomputed per-position bitmap (the linear scan over
-    /// `globals` used to sit inside `entrance_links` loops).
-    #[inline]
-    pub fn is_global(&self, p: Pos) -> bool {
-        self.global_mask[self.idx(p)]
-    }
-
-    /// The closest global chiplet (paper: "each chiplet will only
-    /// communicate with the closest global chiplet"); Manhattan metric,
-    /// ties broken toward the smaller position for determinism.
-    #[inline]
-    pub fn nearest_global(&self, p: Pos) -> Pos {
-        self.nearest[self.idx(p)]
-    }
-
-    /// The paper's local index `(x, y)` for a chiplet.
-    #[inline]
-    pub fn local_index(&self, p: Pos) -> LocalIdx {
-        self.locals[self.idx(p)]
-    }
-
-    /// Manhattan distance to the serving global chiplet (SIMBA's
-    /// partitioning key; §3.1).
-    pub fn distance_to_memory(&self, p: Pos) -> usize {
-        let l = self.local_index(p);
-        l.x + l.y
-    }
-
-    /// Extent (X, Y) of the serving region of `p`'s global chiplet: the
-    /// dims that enter the waiting-hop terms of eqs. 11–12. For type A
-    /// this is the whole grid; for B it is the half-grid served by one
-    /// edge; for C it is a single chiplet.
-    #[inline]
-    pub fn region_extent(&self, p: Pos) -> (usize, usize) {
-        self.extents[self.idx(p)]
-    }
-
-    /// Number of NoP links that enter the global chiplet(s) from
-    /// non-global neighbours — the "bandwidth to entrances" multiplier of
-    /// eq. 8. Diagonal links add the diagonal neighbours (§5.1: +50% for
-    /// the type-A corner).
-    pub fn entrance_links(&self, diagonal: bool) -> usize {
-        if self.ty == SystemType::C {
-            // Every chiplet is global: collection is a no-op.
-            return 0;
-        }
-        let mut count = 0;
-        for g in &self.globals {
-            for &(dr, dc) in neighbour_offsets(diagonal) {
-                let nr = g.row as isize + dr;
-                let nc = g.col as isize + dc;
-                if nr < 0
-                    || nc < 0
-                    || nr >= self.xdim as isize
-                    || nc >= self.ydim as isize
-                {
-                    continue;
-                }
-                let n = Pos::new(nr as usize, nc as usize);
-                if !self.is_global(n) {
-                    count += 1;
-                }
-            }
-        }
-        count
-    }
-
-    // ---- hop models (§4.3.3, §5.1.1) -----------------------------------
-
-    /// Eq. 10 — low off-chip BW: links drain faster than memory feeds
-    /// them, no contention, minimal path (Chebyshev when diagonal links
-    /// provide shortcuts).
-    pub fn hops_low_bw(&self, p: Pos, diagonal: bool) -> usize {
-        let l = self.local_index(p);
-        if diagonal {
-            l.x.max(l.y)
-        } else {
-            l.x + l.y
-        }
-    }
-
-    /// Eq. 11 — high BW, row-wise-shared data: congestion on the first
-    /// column resolved farthest-row-first, so waiting hops (X - x) are
-    /// added: total = X + y. With diagonal links (§5.1.1) the alternative
-    /// route costs (X - x) + max(x, y); the two strategies use disjoint
-    /// links, so take the min.
-    pub fn hops_row_shared(&self, p: Pos, diagonal: bool) -> usize {
-        let l = self.local_index(p);
-        let (xr, _) = self.region_extent(p);
-        let base = xr + l.y;
-        if diagonal {
-            base.min(xr - l.x + l.x.max(l.y))
-        } else {
-            base
-        }
-    }
-
-    /// Eq. 12 — high BW, column-wise-shared data: symmetric to eq. 11.
-    pub fn hops_col_shared(&self, p: Pos, diagonal: bool) -> usize {
-        let l = self.local_index(p);
-        let (_, yr) = self.region_extent(p);
-        let base = yr + l.x;
-        if diagonal {
-            base.min(yr - l.y + l.x.max(l.y))
-        } else {
-            base
-        }
-    }
-
-    /// Hop count used by the on-chip energy model (§4.4.3): actual path
-    /// length travelled, i.e. the minimal route (diagonal links shorten
-    /// it to the Chebyshev distance).
-    pub fn hops_energy(&self, p: Pos, diagonal: bool) -> usize {
-        let l = self.local_index(p);
-        if diagonal {
-            l.x.max(l.y)
-        } else {
-            l.x + l.y
-        }
-    }
-}
-
-fn grid_positions(xdim: usize, ydim: usize) -> impl Iterator<Item = Pos> {
+/// All grid positions, row-major.
+pub(crate) fn grid_positions(
+    xdim: usize,
+    ydim: usize,
+) -> impl Iterator<Item = Pos> {
     (0..xdim).flat_map(move |r| (0..ydim).map(move |c| Pos::new(r, c)))
 }
 
@@ -306,8 +60,8 @@ const NEIGHBOUR_OFFSETS: [(isize, isize); 8] = [
 ];
 
 /// Const slice of neighbour offsets — no `Vec` allocation per call (it
-/// sits inside `entrance_links` loops).
-fn neighbour_offsets(diagonal: bool) -> &'static [(isize, isize)] {
+/// sits inside the entrance-link counting loops).
+pub(crate) fn neighbour_offsets(diagonal: bool) -> &'static [(isize, isize)] {
     if diagonal {
         &NEIGHBOUR_OFFSETS
     } else {
@@ -320,107 +74,23 @@ mod tests {
     use super::*;
 
     #[test]
-    fn type_a_single_corner_global() {
-        let t = Topology::new(SystemType::A, 4, 4);
-        assert_eq!(t.globals(), &[Pos::new(0, 0)]);
-        assert_eq!(t.local_index(Pos::new(3, 2)), LocalIdx { x: 3, y: 2 });
-        assert_eq!(t.region_extent(Pos::new(1, 1)), (4, 4));
+    fn grid_positions_row_major() {
+        let ps: Vec<Pos> = grid_positions(2, 3).collect();
+        assert_eq!(ps.len(), 6);
+        assert_eq!(ps[0], Pos::new(0, 0));
+        assert_eq!(ps[1], Pos::new(0, 1));
+        assert_eq!(ps[3], Pos::new(1, 0));
     }
 
     #[test]
-    fn type_b_edge_globals() {
-        let t = Topology::new(SystemType::B, 4, 4);
-        assert_eq!(t.globals().len(), 8);
-        // Interior chiplet is served by the nearest edge, same row.
-        let l = t.local_index(Pos::new(2, 1));
-        assert_eq!((l.x, l.y), (0, 1));
-        // Region extent spans half the row.
-        let (xr, yr) = t.region_extent(Pos::new(2, 1));
-        assert_eq!(xr, 1);
-        assert!(yr >= 2);
+    fn manhattan_distance() {
+        assert_eq!(manhattan(Pos::new(0, 0), Pos::new(3, 2)), 5);
+        assert_eq!(manhattan(Pos::new(2, 2), Pos::new(2, 2)), 0);
     }
 
     #[test]
-    fn type_c_all_global_zero_distance() {
-        let t = Topology::new(SystemType::C, 4, 4);
-        assert_eq!(t.globals().len(), 16);
-        for p in t.positions() {
-            assert_eq!(t.distance_to_memory(p), 0);
-            assert_eq!(t.hops_low_bw(p, false), 0);
-        }
-        assert_eq!(t.entrance_links(false), 0);
-    }
-
-    #[test]
-    fn type_d_quadrant_centers_near_uniform() {
-        let t = Topology::new(SystemType::D, 4, 4);
-        assert_eq!(t.globals().len(), 4);
-        let max_d = t
-            .positions()
-            .map(|p| t.distance_to_memory(p))
-            .max()
-            .unwrap();
-        assert!(max_d <= 2, "type D should be near-uniform, max={max_d}");
-    }
-
-    #[test]
-    fn eq8_entrance_links_type_a() {
-        let t = Topology::new(SystemType::A, 4, 4);
-        // Corner global: 2 mesh links; +1 diagonal = 3 (the paper's "50%
-        // more bandwidth on the bottleneck").
-        assert_eq!(t.entrance_links(false), 2);
-        assert_eq!(t.entrance_links(true), 3);
-    }
-
-    #[test]
-    fn eq10_low_bw_hops() {
-        let t = Topology::new(SystemType::A, 5, 5);
-        assert_eq!(t.hops_low_bw(Pos::new(3, 2), false), 5);
-        assert_eq!(t.hops_low_bw(Pos::new(3, 2), true), 3);
-        assert_eq!(t.hops_low_bw(Pos::new(0, 0), false), 0);
-    }
-
-    #[test]
-    fn eq11_row_shared_hops_and_diagonal() {
-        let t = Topology::new(SystemType::A, 5, 5);
-        let p = Pos::new(3, 2);
-        // eq. 11: X + y = 5 + 2 = 7.
-        assert_eq!(t.hops_row_shared(p, false), 7);
-        // §5.1.1: (X - x) + max(x, y) = 2 + 3 = 5; min(7, 5) = 5.
-        assert_eq!(t.hops_row_shared(p, true), 5);
-    }
-
-    #[test]
-    fn eq12_col_shared_symmetric() {
-        let t = Topology::new(SystemType::A, 5, 5);
-        let p = Pos::new(2, 3);
-        assert_eq!(t.hops_col_shared(p, false), 5 + 2);
-        assert_eq!(t.hops_col_shared(p, true), (5 - 3 + 3).min(7));
-    }
-
-    #[test]
-    fn diagonal_never_worse() {
-        for ty in SystemType::ALL {
-            let t = Topology::new(ty, 5, 5);
-            for p in t.positions() {
-                assert!(t.hops_row_shared(p, true) <= t.hops_row_shared(p, false));
-                assert!(t.hops_col_shared(p, true) <= t.hops_col_shared(p, false));
-                assert!(t.hops_energy(p, true) <= t.hops_energy(p, false));
-            }
-        }
-    }
-
-    #[test]
-    fn nearest_global_is_actually_nearest() {
-        for ty in SystemType::ALL {
-            let t = Topology::new(ty, 6, 5);
-            for p in t.positions() {
-                let g = t.nearest_global(p);
-                let d = manhattan(p, g);
-                for other in t.globals() {
-                    assert!(d <= manhattan(p, *other));
-                }
-            }
-        }
+    fn neighbour_offsets_lengths() {
+        assert_eq!(neighbour_offsets(false).len(), 4);
+        assert_eq!(neighbour_offsets(true).len(), 8);
     }
 }

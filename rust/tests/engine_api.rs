@@ -98,7 +98,10 @@ fn all_five_schemes_run_through_the_registry() {
         planned
             .plan()
             .alloc
-            .validate(engine.scenario().workload(), engine.scenario().hw())
+            .validate(
+                engine.scenario().workload(),
+                engine.scenario().platform(),
+            )
             .unwrap();
     }
 }
@@ -107,7 +110,7 @@ fn all_five_schemes_run_through_the_registry() {
 
 /// Engine reports must be bit-identical to the raw evaluator on the
 /// same allocation: `Report::objective_value()` ==
-/// `evaluate(hw, topo, wl, alloc, flags).objective(obj)` with `==` on
+/// `evaluate(plat, wl, alloc, flags).objective(obj)` with `==` on
 /// f64 (no tolerance).
 #[test]
 fn engine_reports_bit_identical_to_raw_evaluate() {
@@ -120,12 +123,11 @@ fn engine_reports_bit_identical_to_raw_evaluate() {
                 .build()
                 .unwrap();
             let engine = Engine::new(scenario);
-            let hw = engine.scenario().hw();
-            let topo = engine.scenario().topo();
+            let plat = engine.scenario().platform();
             for scheduler in registry.iter() {
                 let planned = engine.schedule_with(scheduler).unwrap();
                 let plan = planned.plan();
-                let legacy = evaluate(hw, topo, &wl, &plan.alloc, plan.flags)
+                let legacy = evaluate(plat, &wl, &plan.alloc, plan.flags)
                     .objective(objective);
                 let report = planned.report();
                 assert_eq!(
@@ -247,7 +249,7 @@ fn custom_scheduler_plugs_into_the_engine() {
             scenario: &Scenario,
         ) -> Result<mcmcomm::Plan, EngineError> {
             let alloc = mcmcomm::partition::uniform_allocation(
-                scenario.hw(),
+                scenario.platform(),
                 scenario.workload(),
             );
             // `Scenario::plan` scores on the true evaluator, so the

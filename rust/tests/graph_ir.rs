@@ -11,13 +11,13 @@
 //!    with the GA and report one cost total per model plus the fused
 //!    total.
 
-use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::config::{MemKind, SystemType};
 use mcmcomm::cost::evaluator::{evaluate, Objective, OptFlags};
 use mcmcomm::cost::CachedEval;
 use mcmcomm::engine::{Engine, Scenario, Scheduler, SchedulerRegistry};
 use mcmcomm::opt::ga::GaParams;
 use mcmcomm::partition::uniform_allocation;
-use mcmcomm::topology::Topology;
+use mcmcomm::platform::Platform;
 use mcmcomm::workload::models::{
     alexnet, hydranet_branched, vit, vit_residual,
 };
@@ -45,16 +45,15 @@ fn graph_twin(w: &Workload) -> Workload {
 
 #[test]
 fn linear_chains_bit_identical_across_all_flag_combos() {
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
+    let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
     for wl in [alexnet(1), vit(1)] {
         let twin = graph_twin(&wl);
         assert_eq!(wl.edges, twin.edges, "{}: edge derivation", wl.name);
-        let alloc = uniform_allocation(&hw, &wl);
+        let alloc = uniform_allocation(&plat, &wl);
         assert_eq!(alloc.collect_cols.len(), wl.edge_count());
         for flags in all_flag_combos() {
-            let a = evaluate(&hw, &topo, &wl, &alloc, flags);
-            let b = evaluate(&hw, &topo, &twin, &alloc, flags);
+            let a = evaluate(&plat, &wl, &alloc, flags);
+            let b = evaluate(&plat, &twin, &alloc, flags);
             assert_eq!(
                 a.latency_ns.to_bits(),
                 b.latency_ns.to_bits(),
@@ -78,7 +77,7 @@ fn linear_chains_bit_identical_across_all_flag_combos() {
             }
             // Delta-scoring path, both IR views.
             for w in [&wl, &twin] {
-                let mut cache = CachedEval::new(&hw, &topo, w, flags);
+                let mut cache = CachedEval::new(&plat, w, flags);
                 for obj in [Objective::Latency, Objective::Edp] {
                     assert_eq!(
                         cache.objective(&alloc, obj).to_bits(),
@@ -100,7 +99,7 @@ fn linear_chain_reports_byte_identical_via_engine() {
         let twin = graph_twin(&wl);
         let s1 = Scenario::headline(wl);
         let s2 = Scenario::headline(twin);
-        let a1 = uniform_allocation(s1.hw(), s1.workload());
+        let a1 = uniform_allocation(s1.platform(), s1.workload());
         let r1 = s1.report_allocation(&a1, OptFlags::ALL);
         let r2 = s2.report_allocation(&a1, OptFlags::ALL);
         assert_eq!(
@@ -184,11 +183,10 @@ fn fan_out_producers_keep_their_store() {
     // hydranet-branched: fpn.mix (op 7) fans out to three heads, so its
     // store can never be skipped, and its fan-in of 2 means its
     // activations can never arrive by redistribution.
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
+    let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
     let wl = hydranet_branched(1);
-    let alloc = uniform_allocation(&hw, &wl);
-    let c = evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL);
+    let alloc = uniform_allocation(&plat, &wl);
+    let c = evaluate(&plat, &wl, &alloc, OptFlags::ALL);
     assert!(c.per_op[7].out_ns > 0.0, "fan-out store was skipped");
     assert!(!c.per_op[7].redistributed_in, "fan-in op took redistribution");
     // Ops whose in-degree != 1 can never be redistribution-fed.
@@ -203,17 +201,17 @@ fn fan_out_producers_keep_their_store() {
     assert!(n_redist >= 1, "no redistribution fired on the DAG");
     // Per-edge cost probe: moving the tensor on the first backbone
     // edge has a well-defined positive 3-step cost.
-    let r = mcmcomm::redistribution::redistribute_edge(&hw, &wl, &alloc, 0);
+    let r = mcmcomm::redistribution::redistribute_edge(&plat, &wl, &alloc, 0);
     assert!(r.total_ns() > 0.0);
 }
 
 #[test]
 fn allocation_arity_is_per_edge() {
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+    let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
     let wl = hydranet_branched(1);
-    let mut alloc = uniform_allocation(&hw, &wl);
+    let mut alloc = uniform_allocation(&plat, &wl);
     assert_eq!(alloc.collect_cols.len(), wl.edge_count());
-    assert!(alloc.validate(&wl, &hw).is_ok());
+    assert!(alloc.validate(&wl, &plat).is_ok());
     alloc.collect_cols.pop();
-    assert!(alloc.validate(&wl, &hw).is_err());
+    assert!(alloc.validate(&wl, &plat).is_err());
 }

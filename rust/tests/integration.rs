@@ -4,7 +4,7 @@
 
 use std::time::Duration;
 
-use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::config::{MemKind, SystemType};
 use mcmcomm::cost::evaluator::{Objective, OptFlags};
 use mcmcomm::engine::{Engine, Scenario, SchedulerRegistry};
 use mcmcomm::eval::{figures, EvalConfig};
@@ -86,7 +86,7 @@ fn alexnet_gains_most_from_redistribution() {
     let mut speedups = Vec::new();
     for wl in evaluation_suite(1) {
         let sc = Scenario::headline(wl);
-        let alloc = uniform_allocation(sc.hw(), sc.workload());
+        let alloc = uniform_allocation(sc.platform(), sc.workload());
         let base = sc.baseline_report();
         let opt = sc.report_allocation(&alloc, OptFlags::ALL);
         speedups.push((
@@ -188,7 +188,7 @@ fn netsim_two_sided_memory_halves_pressure() {
     let flows1: Vec<Flow> = (0..16)
         .map(|i| Flow { src: m1, dst: i, bytes: 1e6 })
         .collect();
-    let r1 = simulate(&g1, &flows1);
+    let r1 = simulate(&g1, &flows1).unwrap();
 
     let mut g2 = LinkGraph::mesh(4, 4, false, 60.0);
     let ma = g2.attach_memory(Pos::new(0, 0), 512.0);
@@ -200,7 +200,7 @@ fn netsim_two_sided_memory_halves_pressure() {
             bytes: 1e6,
         })
         .collect();
-    let r2 = simulate(&g2, &flows2);
+    let r2 = simulate(&g2, &flows2).unwrap();
     assert!(
         r2.makespan_ns < r1.makespan_ns,
         "two-sided {} !< corner {}",
@@ -212,14 +212,16 @@ fn netsim_two_sided_memory_halves_pressure() {
 #[test]
 fn bigger_systolic_arrays_reduce_compute_latency() {
     use mcmcomm::cost::compute::comp_cycles;
+    use mcmcomm::platform::Platform;
     use mcmcomm::workload::GemmOp;
     let op = GemmOp::dense("a", 512, 256, 512);
-    let hw16 = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let mut hw32 = hw16.clone();
-    hw32.r = 32;
-    hw32.c = 32;
+    let p16 = Platform::preset(SystemType::A, MemKind::Hbm, 4);
+    let mut spec32 = p16.spec().clone();
+    spec32.r = 32;
+    spec32.c = 32;
+    let p32 = Platform::new(spec32).unwrap();
     assert!(
-        comp_cycles(&hw32, &op, 128, 128) < comp_cycles(&hw16, &op, 128, 128)
+        comp_cycles(&p32, &op, 128, 128) < comp_cycles(&p16, &op, 128, 128)
     );
 }
 

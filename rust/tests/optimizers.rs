@@ -3,23 +3,21 @@
 
 use std::time::{Duration, Instant};
 
-use mcmcomm::config::{HwConfig, MemKind, SystemType};
-use mcmcomm::opt::{ga, greedy, miqp};
+use mcmcomm::config::{MemKind, SystemType};
 use mcmcomm::cost::evaluator::{Objective, OptFlags};
-use mcmcomm::topology::Topology;
+use mcmcomm::opt::{ga, greedy, miqp};
+use mcmcomm::platform::Platform;
 use mcmcomm::workload::models::alexnet;
 
 #[test]
 fn quality_ordering_miqp_ge_ga_ge_greedy() {
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
+    let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
     let wl = alexnet(1);
     let flags = OptFlags::ALL;
 
-    let g = greedy::optimize(&hw, &topo, &wl, flags, Objective::Latency);
+    let g = greedy::optimize(&plat, &wl, flags, Objective::Latency);
     let ga_r = ga::optimize(
-        &hw,
-        &topo,
+        &plat,
         &wl,
         flags,
         Objective::Latency,
@@ -27,8 +25,7 @@ fn quality_ordering_miqp_ge_ga_ge_greedy() {
                         ..Default::default() },
     );
     let mi = miqp::optimize(
-        &hw,
-        &topo,
+        &plat,
         &wl,
         flags,
         Objective::Latency,
@@ -55,19 +52,17 @@ fn quality_ordering_miqp_ge_ga_ge_greedy() {
 fn solve_time_ordering() {
     // §3.5: heuristics instantaneous, GA seconds, MIQP minutes (here all
     // scaled down, but the ordering must hold).
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
+    let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
     let wl = alexnet(1);
 
     let t0 = Instant::now();
-    let _ = greedy::optimize(&hw, &topo, &wl, OptFlags::ALL,
+    let _ = greedy::optimize(&plat, &wl, OptFlags::ALL,
                              Objective::Latency);
     let t_greedy = t0.elapsed();
 
     let t0 = Instant::now();
     let _ = ga::optimize(
-        &hw,
-        &topo,
+        &plat,
         &wl,
         OptFlags::ALL,
         Objective::Latency,
@@ -85,12 +80,10 @@ fn solve_time_ordering() {
 
 #[test]
 fn miqp_surrogate_solver_explores() {
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
+    let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
     let wl = alexnet(1);
     let r = miqp::optimize(
-        &hw,
-        &topo,
+        &plat,
         &wl,
         OptFlags::ALL,
         Objective::Latency,
@@ -98,19 +91,17 @@ fn miqp_surrogate_solver_explores() {
         7,
     );
     assert!(r.nodes_explored > 0, "B&B explored no nodes");
-    assert!(r.alloc.validate(&wl, &hw).is_ok());
+    assert!(r.alloc.validate(&wl, &plat).is_ok());
     assert!(r.surrogate_value.is_finite());
 }
 
 #[test]
 fn ga_seeds_differ_but_both_improve() {
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
+    let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
     let wl = alexnet(1);
     let run = |seed| {
         ga::optimize(
-            &hw,
-            &topo,
+            &plat,
             &wl,
             OptFlags::ALL,
             Objective::Latency,
@@ -130,17 +121,15 @@ fn ga_seeds_differ_but_both_improve() {
 fn optimizers_respect_grouped_and_sync_ops() {
     // ViT has grouped + sync ops; schedulers must produce valid
     // allocations and not crash on them.
-    let hw = HwConfig::paper(SystemType::B, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
+    let plat = Platform::preset(SystemType::B, MemKind::Hbm, 4);
     let wl = mcmcomm::workload::models::vit(1);
     let r = ga::optimize(
-        &hw,
-        &topo,
+        &plat,
         &wl,
         OptFlags::ALL,
         Objective::Latency,
         &ga::GaParams { population: 12, generations: 5, seed: 2,
                         ..Default::default() },
     );
-    assert!(r.alloc.validate(&wl, &hw).is_ok());
+    assert!(r.alloc.validate(&wl, &plat).is_ok());
 }

@@ -6,7 +6,7 @@
 
 use std::time::Duration;
 
-use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::config::{MemKind, SystemType};
 use mcmcomm::cost::evaluator::{evaluate, Objective, OptFlags};
 use mcmcomm::cost::CachedEval;
 use mcmcomm::engine::{schedulers, Engine, Scenario, Scheduler};
@@ -14,7 +14,7 @@ use mcmcomm::opt::ga::{self, GaParams};
 use mcmcomm::partition::{
     dim_bounds, simba_allocation, uniform_allocation, Allocation,
 };
-use mcmcomm::topology::Topology;
+use mcmcomm::platform::Platform;
 use mcmcomm::util::rng::Pcg;
 use mcmcomm::workload::models::{alexnet, vit};
 use mcmcomm::workload::Workload;
@@ -33,12 +33,12 @@ fn all_flag_combos() -> Vec<OptFlags> {
 
 /// GA-style gene edit: move one systolic tile between grid rows/columns
 /// or re-pick a collection column (mirrors `opt::ga::mutate`).
-fn mutate(hw: &HwConfig, wl: &Workload, rng: &mut Pcg, a: &mut Allocation) {
+fn mutate(plat: &Platform, wl: &Workload, rng: &mut Pcg, a: &mut Allocation) {
     let i = rng.range_usize(0, wl.ops.len() - 1);
     let op = &wl.ops[i];
     match rng.range_usize(0, 2) {
         0 => {
-            let b = dim_bounds(op.m, hw.xdim, hw.r);
+            let b = dim_bounds(op.m, plat.xdim, plat.r);
             let px = &mut a.parts[i].px;
             let from = rng.range_usize(0, px.len() - 1);
             let to = rng.range_usize(0, px.len() - 1);
@@ -49,7 +49,7 @@ fn mutate(hw: &HwConfig, wl: &Workload, rng: &mut Pcg, a: &mut Allocation) {
             }
         }
         1 => {
-            let b = dim_bounds(op.n, hw.ydim, hw.c);
+            let b = dim_bounds(op.n, plat.ydim, plat.c);
             let py = &mut a.parts[i].py;
             let from = rng.range_usize(0, py.len() - 1);
             let to = rng.range_usize(0, py.len() - 1);
@@ -63,7 +63,7 @@ fn mutate(hw: &HwConfig, wl: &Workload, rng: &mut Pcg, a: &mut Allocation) {
             // Collection genes are per dataflow edge; re-pick one.
             if !a.collect_cols.is_empty() {
                 let e = rng.range_usize(0, a.collect_cols.len() - 1);
-                a.collect_cols[e] = rng.range_usize(0, hw.ydim - 1);
+                a.collect_cols[e] = rng.range_usize(0, plat.ydim - 1);
             }
         }
     }
@@ -92,14 +92,13 @@ fn crossover(wl: &Workload, rng: &mut Pcg, a: &Allocation, b: &Allocation)
 
 fn assert_bit_identical(
     cache: &mut CachedEval<'_>,
-    hw: &HwConfig,
-    topo: &Topology,
+    plat: &Platform,
     wl: &Workload,
     alloc: &Allocation,
     flags: OptFlags,
     step: usize,
 ) {
-    let full = evaluate(hw, topo, wl, alloc, flags);
+    let full = evaluate(plat, wl, alloc, flags);
     let delta = cache.breakdown(alloc);
     for obj in [Objective::Latency, Objective::Edp] {
         assert_eq!(
@@ -122,20 +121,19 @@ fn assert_bit_identical(
 /// across all `OptFlags` combinations and both objectives.
 #[test]
 fn cached_delta_scoring_matches_full_evaluate_all_flag_combos() {
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
+    let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
     for (w, wl) in [alexnet(1), vit(1)].into_iter().enumerate() {
         for (fi, flags) in all_flag_combos().into_iter().enumerate() {
             let mut rng =
                 Pcg::seeded(0x5eed ^ ((w as u64) << 8) ^ fi as u64);
-            let mut cache = CachedEval::new(&hw, &topo, &wl, flags);
-            let mut cur = uniform_allocation(&hw, &wl);
+            let mut cache = CachedEval::new(&plat, &wl, flags);
+            let mut cur = uniform_allocation(&plat, &wl);
             // Crossover partners: the reference schemes the GA seeds
             // with, plus a mutated drifter.
             let mut partners =
-                vec![simba_allocation(&hw, &topo, &wl), cur.clone()];
+                vec![simba_allocation(&plat, &wl), cur.clone()];
             for _ in 0..12 {
-                mutate(&hw, &wl, &mut rng, &mut partners[1]);
+                mutate(&plat, &wl, &mut rng, &mut partners[1]);
             }
             let steps = 30;
             for step in 0..steps {
@@ -144,10 +142,10 @@ fn cached_delta_scoring_matches_full_evaluate_all_flag_combos() {
                     cur = crossover(&wl, &mut rng, &cur, &partners[p]);
                 } else {
                     for _ in 0..rng.range_usize(1, 4) {
-                        mutate(&hw, &wl, &mut rng, &mut cur);
+                        mutate(&plat, &wl, &mut rng, &mut cur);
                     }
                 }
-                assert_bit_identical(&mut cache, &hw, &topo, &wl, &cur,
+                assert_bit_identical(&mut cache, &plat, &wl, &cur,
                                      flags, step);
             }
             let s = cache.stats();
@@ -162,16 +160,15 @@ fn cached_delta_scoring_matches_full_evaluate_all_flag_combos() {
 fn cached_delta_scoring_matches_on_dram_and_type_b() {
     for (ty, mem) in [(SystemType::A, MemKind::Dram),
                       (SystemType::B, MemKind::Hbm)] {
-        let hw = HwConfig::paper(ty, mem, 4);
-        let topo = Topology::from_hw(&hw);
+        let plat = Platform::preset(ty, mem, 4);
         let wl = alexnet(1);
         let flags = OptFlags::ALL;
         let mut rng = Pcg::seeded(7);
-        let mut cache = CachedEval::new(&hw, &topo, &wl, flags);
-        let mut cur = uniform_allocation(&hw, &wl);
+        let mut cache = CachedEval::new(&plat, &wl, flags);
+        let mut cur = uniform_allocation(&plat, &wl);
         for step in 0..20 {
-            mutate(&hw, &wl, &mut rng, &mut cur);
-            assert_bit_identical(&mut cache, &hw, &topo, &wl, &cur, flags,
+            mutate(&plat, &wl, &mut rng, &mut cur);
+            assert_bit_identical(&mut cache, &plat, &wl, &cur, flags,
                                  step);
         }
     }
@@ -181,8 +178,7 @@ fn cached_delta_scoring_matches_on_dram_and_type_b() {
 /// runs for the same seed.
 #[test]
 fn ga_parallel_bit_identical_to_sequential() {
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
+    let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
     let wl = alexnet(1);
     let params = |threads: usize| GaParams {
         population: 14,
@@ -191,10 +187,10 @@ fn ga_parallel_bit_identical_to_sequential() {
         threads,
         ..Default::default()
     };
-    let seq = ga::optimize(&hw, &topo, &wl, OptFlags::ALL,
+    let seq = ga::optimize(&plat, &wl, OptFlags::ALL,
                            Objective::Latency, &params(1));
     for threads in [2, 4] {
-        let par = ga::optimize(&hw, &topo, &wl, OptFlags::ALL,
+        let par = ga::optimize(&plat, &wl, OptFlags::ALL,
                                Objective::Latency, &params(threads));
         assert_eq!(seq.objective_value.to_bits(),
                    par.objective_value.to_bits(),
@@ -259,12 +255,10 @@ fn sweep_parallel_bit_identical_to_sequential() {
 /// generations that did run).
 #[test]
 fn budgeted_parallel_ga_is_valid() {
-    let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-    let topo = Topology::from_hw(&hw);
+    let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
     let wl = vit(1);
     let r = ga::optimize(
-        &hw,
-        &topo,
+        &plat,
         &wl,
         OptFlags::ALL,
         Objective::Edp,
@@ -276,8 +270,8 @@ fn budgeted_parallel_ga_is_valid() {
         },
     );
     assert!(r.generations_run < 5_000);
-    assert!(r.alloc.validate(&wl, &hw).is_ok());
-    let full = evaluate(&hw, &topo, &wl, &r.alloc, OptFlags::ALL)
+    assert!(r.alloc.validate(&wl, &plat).is_ok());
+    let full = evaluate(&plat, &wl, &r.alloc, OptFlags::ALL)
         .objective(Objective::Edp);
     assert_eq!(r.objective_value.to_bits(), full.to_bits());
 }

@@ -1,0 +1,975 @@
+//! ISSUE 4 acceptance: the data-driven platform API.
+//!
+//! 1. **Pre-PR pin** — the `legacy` module below is a verbatim copy of
+//!    the pre-platform code paths: the closed-form `SystemType` hop
+//!    formulas that used to live on `Topology` and the monolithic
+//!    evaluator orchestration that consumed them. Preset platforms
+//!    A/B/C/D must reproduce that reference **bit-identically** (f64
+//!    `to_bits` equality) across all 8 `OptFlags` combinations, both
+//!    memory kinds, and uniform + perturbed allocations.
+//! 2. **Hop-table equivalence** — `HopTables` equals the legacy closed
+//!    forms for every chiplet on 2x2–6x6 grids, diagonal on and off,
+//!    including entrance links, region extents, and local indices.
+//! 3. **Adaptivity** — a non-preset platform with an asymmetric
+//!    attachment set (expressible only as data, not as a `SystemType`)
+//!    runs end-to-end through `Engine::sweep`, the GA, and MIQP.
+//! 4. **Description files** — every `examples/platforms/*.json` loads
+//!    and validates (the CI step runs the same check via the
+//!    `platforms` subcommand).
+
+use std::time::Duration;
+
+use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::cost::evaluator::{evaluate, Objective, OptFlags};
+use mcmcomm::engine::{Engine, Scenario, Scheduler, SchedulerRegistry};
+use mcmcomm::opt::ga::GaParams;
+use mcmcomm::partition::{uniform_allocation, Allocation};
+use mcmcomm::platform::{MemAttachment, Platform};
+use mcmcomm::topology::Pos;
+use mcmcomm::workload::models::{alexnet, vit};
+use mcmcomm::workload::Workload;
+
+fn all_flag_combos() -> Vec<OptFlags> {
+    let mut v = Vec::new();
+    for diagonal in [false, true] {
+        for redistribution in [false, true] {
+            for async_fusion in [false, true] {
+                v.push(OptFlags { diagonal, redistribution, async_fusion });
+            }
+        }
+    }
+    v
+}
+
+/// Verbatim pre-PR reference implementation. Everything in here is a
+/// frozen copy of the code this PR replaced — per-`SystemType` global
+/// placement, closed-form hop match arms, and the evaluator float
+/// arithmetic in its exact historical association order. Do not
+/// "clean up": its only job is to pin the pre-PR bits.
+mod legacy {
+    use mcmcomm::config::{HwConfig, SystemType};
+    use mcmcomm::cost::evaluator::OptFlags;
+    use mcmcomm::partition::{Allocation, Partition};
+    use mcmcomm::topology::Pos;
+    use mcmcomm::util::math::ceil_div;
+    use mcmcomm::workload::{GemmOp, Workload};
+
+    pub struct Topo {
+        pub xdim: usize,
+        pub ydim: usize,
+        pub ty: SystemType,
+        pub globals: Vec<Pos>,
+        nearest: Vec<Pos>,
+        locals: Vec<(usize, usize)>,
+        extents: Vec<(usize, usize)>,
+    }
+
+    fn manhattan(a: Pos, b: Pos) -> usize {
+        a.row.abs_diff(b.row) + a.col.abs_diff(b.col)
+    }
+
+    const NEIGHBOUR_OFFSETS: [(isize, isize); 8] = [
+        (-1, 0),
+        (1, 0),
+        (0, -1),
+        (0, 1),
+        (-1, -1),
+        (-1, 1),
+        (1, -1),
+        (1, 1),
+    ];
+
+    impl Topo {
+        pub fn new(ty: SystemType, xdim: usize, ydim: usize) -> Topo {
+            assert!(xdim > 0 && ydim > 0);
+            let globals = match ty {
+                SystemType::A => vec![Pos::new(0, 0)],
+                SystemType::B => {
+                    let mut g: Vec<Pos> =
+                        (0..xdim).map(|r| Pos::new(r, 0)).collect();
+                    if ydim > 1 {
+                        g.extend((0..xdim).map(|r| Pos::new(r, ydim - 1)));
+                    }
+                    g
+                }
+                SystemType::C => (0..xdim)
+                    .flat_map(|r| (0..ydim).map(move |c| Pos::new(r, c)))
+                    .collect(),
+                SystemType::D => {
+                    let qr = [(xdim - 1) / 2, xdim / 2];
+                    let qc = [(ydim - 1) / 2, ydim / 2];
+                    let mut g = vec![
+                        Pos::new(qr[0], qc[0]),
+                        Pos::new(qr[0], qc[1]),
+                        Pos::new(qr[1], qc[0]),
+                        Pos::new(qr[1], qc[1]),
+                    ];
+                    g.dedup();
+                    g.sort();
+                    g.dedup();
+                    g
+                }
+            };
+            let mut t = Topo {
+                xdim,
+                ydim,
+                ty,
+                globals,
+                nearest: Vec::new(),
+                locals: Vec::new(),
+                extents: Vec::new(),
+            };
+            for p in positions(xdim, ydim) {
+                let g = *t
+                    .globals
+                    .iter()
+                    .min_by_key(|g| (manhattan(p, **g), (g.row, g.col)))
+                    .unwrap();
+                t.nearest.push(g);
+                t.locals
+                    .push((p.row.abs_diff(g.row), p.col.abs_diff(g.col)));
+            }
+            use std::collections::HashMap;
+            let mut per_global: HashMap<Pos, (usize, usize)> =
+                HashMap::new();
+            for i in 0..xdim * ydim {
+                let g = t.nearest[i];
+                let l = t.locals[i];
+                let e = per_global.entry(g).or_insert((0, 0));
+                e.0 = e.0.max(l.0);
+                e.1 = e.1.max(l.1);
+            }
+            for i in 0..xdim * ydim {
+                let (mx, my) = per_global[&t.nearest[i]];
+                t.extents.push((mx + 1, my + 1));
+            }
+            t
+        }
+
+        fn idx(&self, p: Pos) -> usize {
+            p.row * self.ydim + p.col
+        }
+
+        pub fn num_chiplets(&self) -> usize {
+            self.xdim * self.ydim
+        }
+
+        pub fn nearest_global(&self, p: Pos) -> Pos {
+            self.nearest[self.idx(p)]
+        }
+
+        pub fn local_index(&self, p: Pos) -> (usize, usize) {
+            self.locals[self.idx(p)]
+        }
+
+        pub fn region_extent(&self, p: Pos) -> (usize, usize) {
+            self.extents[self.idx(p)]
+        }
+
+        pub fn entrance_links(&self, diagonal: bool) -> usize {
+            if self.ty == SystemType::C {
+                return 0;
+            }
+            let offsets: &[(isize, isize)] = if diagonal {
+                &NEIGHBOUR_OFFSETS
+            } else {
+                &NEIGHBOUR_OFFSETS[..4]
+            };
+            let mut count = 0;
+            for g in &self.globals {
+                for &(dr, dc) in offsets {
+                    let nr = g.row as isize + dr;
+                    let nc = g.col as isize + dc;
+                    if nr < 0
+                        || nc < 0
+                        || nr >= self.xdim as isize
+                        || nc >= self.ydim as isize
+                    {
+                        continue;
+                    }
+                    let n = Pos::new(nr as usize, nc as usize);
+                    if !self.globals.contains(&n) {
+                        count += 1;
+                    }
+                }
+            }
+            count
+        }
+
+        pub fn hops_low_bw(&self, p: Pos, diagonal: bool) -> usize {
+            let (x, y) = self.local_index(p);
+            if diagonal {
+                x.max(y)
+            } else {
+                x + y
+            }
+        }
+
+        pub fn hops_row_shared(&self, p: Pos, diagonal: bool) -> usize {
+            let (x, y) = self.local_index(p);
+            let (xr, _) = self.region_extent(p);
+            let base = xr + y;
+            if diagonal {
+                base.min(xr - x + x.max(y))
+            } else {
+                base
+            }
+        }
+
+        pub fn hops_col_shared(&self, p: Pos, diagonal: bool) -> usize {
+            let (x, y) = self.local_index(p);
+            let (_, yr) = self.region_extent(p);
+            let base = yr + x;
+            if diagonal {
+                base.min(yr - y + x.max(y))
+            } else {
+                base
+            }
+        }
+
+        pub fn hops_energy(&self, p: Pos, diagonal: bool) -> usize {
+            let (x, y) = self.local_index(p);
+            if diagonal {
+                x.max(y)
+            } else {
+                x + y
+            }
+        }
+    }
+
+    pub fn positions(
+        xdim: usize,
+        ydim: usize,
+    ) -> impl Iterator<Item = Pos> {
+        (0..xdim).flat_map(move |r| (0..ydim).map(move |c| Pos::new(r, c)))
+    }
+
+    // ---- frozen cost model -------------------------------------------
+
+    struct CommCost {
+        per_chiplet_ns: Vec<f64>,
+        offchip_ns: f64,
+    }
+
+    impl CommCost {
+        fn wall_ns(&self) -> f64 {
+            self.offchip_ns + self.max_onchip_ns()
+        }
+
+        fn max_onchip_ns(&self) -> f64 {
+            self.per_chiplet_ns.iter().copied().fold(0.0, f64::max)
+        }
+
+        fn ready_ns(&self, idx: usize) -> f64 {
+            let on = self.per_chiplet_ns.get(idx).copied().unwrap_or(0.0);
+            self.offchip_ns + on
+        }
+    }
+
+    fn high_bw(hw: &HwConfig) -> bool {
+        hw.bw_mem > hw.bw_nop
+    }
+
+    fn offload_wall_ns(
+        hw: &HwConfig,
+        topo: &Topo,
+        op: &GemmOp,
+        diagonal: bool,
+    ) -> f64 {
+        let out_bytes = hw.bytes(op.m * op.n);
+        let entr = topo.entrance_links(diagonal);
+        let collection_ns = if entr == 0 {
+            0.0
+        } else {
+            out_bytes / (entr as f64 * hw.bw_nop)
+        };
+        out_bytes / hw.bw_mem + collection_ns
+    }
+
+    fn load(
+        hw: &HwConfig,
+        topo: &Topo,
+        op: &GemmOp,
+        part: &Partition,
+        diagonal: bool,
+        load_acts: bool,
+    ) -> CommCost {
+        let hi = high_bw(hw);
+        let mut per_chiplet = Vec::with_capacity(topo.num_chiplets());
+        for p in positions(topo.xdim, topo.ydim) {
+            let Pos { row: x, col: y } = p;
+            let act_bytes = if load_acts {
+                hw.bytes(part.px[x] * op.k)
+            } else {
+                0.0
+            };
+            let w_bytes = hw.bytes(op.k * part.py[y]);
+            let (act_hops, w_hops) = if hi {
+                (
+                    topo.hops_row_shared(p, diagonal) as f64,
+                    topo.hops_col_shared(p, diagonal) as f64,
+                )
+            } else {
+                let h = topo.hops_low_bw(p, diagonal) as f64;
+                (h, h)
+            };
+            per_chiplet
+                .push((act_bytes * act_hops + w_bytes * w_hops) / hw.bw_nop);
+        }
+        let mut off_bytes = hw.bytes(op.k * op.n);
+        if load_acts {
+            off_bytes += hw.bytes(op.m * op.k);
+        }
+        CommCost { per_chiplet_ns: per_chiplet, offchip_ns: off_bytes / hw.bw_mem }
+    }
+
+    fn comp_cycles(hw: &HwConfig, op: &GemmOp, px: usize, py: usize) -> f64 {
+        if px == 0 || py == 0 {
+            return 0.0;
+        }
+        let g = op.groups.max(1);
+        let k_per = ceil_div(op.k, g);
+        let tile_cycles = (2 * hw.r + hw.c + k_per).saturating_sub(2) as f64;
+        let tiles = (ceil_div(px, hw.r) * ceil_div(py, hw.c)) as f64;
+        g as f64 * tile_cycles * tiles
+    }
+
+    fn comp_ns(hw: &HwConfig, op: &GemmOp, px: usize, py: usize) -> f64 {
+        hw.cycles_to_ns(comp_cycles(hw, op, px, py))
+    }
+
+    fn comp_energy_pj(hw: &HwConfig, op: &GemmOp, part: &Partition) -> f64 {
+        let mut pj = 0.0;
+        for &px in &part.px {
+            for &py in &part.py {
+                let (inp, filt, out) = (px * op.k, op.k * py, px * py);
+                let bits = hw.bytes(inp + filt + out) * 8.0;
+                pj += hw.energy.sram_pj_bit * bits;
+                pj += hw.energy.mac_pj_cycle
+                    * comp_cycles(hw, op, px, py)
+                    * (hw.r * hw.c) as f64;
+            }
+        }
+        pj
+    }
+
+    fn offchip_energy_pj(hw: &HwConfig, bytes: f64) -> f64 {
+        hw.mem.energy_pj_per_bit() * bytes * 8.0
+    }
+
+    fn load_energy_pj(
+        hw: &HwConfig,
+        topo: &Topo,
+        op: &GemmOp,
+        part: &Partition,
+        diagonal: bool,
+        load_acts: bool,
+    ) -> f64 {
+        let mut pj = 0.0;
+        for p in positions(topo.xdim, topo.ydim) {
+            let Pos { row: x, col: y } = p;
+            let hops = topo.hops_energy(p, diagonal) as f64;
+            let mut bytes = hw.bytes(op.k * part.py[y]);
+            if load_acts {
+                bytes += hw.bytes(part.px[x] * op.k);
+            }
+            pj += hw.energy.nop_pj_bit_hop * bytes * 8.0 * hops;
+        }
+        pj
+    }
+
+    fn collect_energy_pj(
+        hw: &HwConfig,
+        topo: &Topo,
+        part: &Partition,
+        diagonal: bool,
+    ) -> f64 {
+        let mut pj = 0.0;
+        for p in positions(topo.xdim, topo.ydim) {
+            let Pos { row: x, col: y } = p;
+            let hops = topo.hops_energy(p, diagonal) as f64;
+            let bytes = hw.bytes(part.px[x] * part.py[y]);
+            pj += hw.energy.nop_pj_bit_hop * bytes * 8.0 * hops;
+        }
+        pj
+    }
+
+    #[derive(Clone, Copy)]
+    struct RedistCost {
+        step1_ns: f64,
+        step2_ns: f64,
+        step3_ns: f64,
+        energy_pj: f64,
+    }
+
+    impl RedistCost {
+        fn total_ns(&self) -> f64 {
+            self.step1_ns + self.step2_ns + self.step3_ns
+        }
+    }
+
+    fn redistribute(
+        hw: &HwConfig,
+        op: &GemmOp,
+        part: &Partition,
+        next_part: &Partition,
+        c_star: usize,
+    ) -> RedistCost {
+        assert!(c_star < part.py.len());
+        let bw = hw.bw_nop;
+        let e_nop_bit = hw.energy.nop_pj_bit_hop;
+
+        let mut step1_ns: f64 = 0.0;
+        let mut energy_bits = 0.0;
+        for &px in &part.px {
+            let mut left = 0.0;
+            let mut right = 0.0;
+            for (y, &py) in part.py.iter().enumerate() {
+                let chunk_bytes = hw.bytes(px * py);
+                let hops = y.abs_diff(c_star) as f64;
+                if y < c_star {
+                    left += chunk_bytes;
+                } else if y > c_star {
+                    right += chunk_bytes;
+                }
+                energy_bits += chunk_bytes * 8.0 * hops;
+            }
+            step1_ns = step1_ns.max(left.max(right) / bw);
+        }
+
+        let ydim = part.py.len();
+        let mut step2_ns: f64 = 0.0;
+        for &px in &part.px {
+            let row_bytes = hw.bytes(px * op.n);
+            step2_ns = step2_ns.max(row_bytes / bw);
+            energy_bits += row_bytes * 8.0 * (ydim - 1) as f64;
+        }
+
+        let next_m: usize = next_part.px.iter().sum();
+        let next_k = op.n;
+        let xdim = part.px.len();
+        let mut step3_worst_bytes: f64 = 0.0;
+        let m: usize = part.px.iter().sum();
+        let scale = m as f64 / next_m.max(1) as f64;
+        let mut cum_a = 0.0f64;
+        let mut cum_b = 0.0f64;
+        for b in 0..xdim.saturating_sub(1) {
+            cum_a += part.px[b] as f64;
+            cum_b += next_part.px[b] as f64 * scale;
+            let rows_moved = (cum_a - cum_b).abs();
+            let bytes = rows_moved * hw.bytes(next_k);
+            step3_worst_bytes = step3_worst_bytes.max(bytes);
+            energy_bits += bytes * 8.0;
+        }
+        let step3_ns = step3_worst_bytes / bw;
+
+        RedistCost {
+            step1_ns,
+            step2_ns,
+            step3_ns,
+            energy_pj: energy_bits * e_nop_bit,
+        }
+    }
+
+    fn act_load_extra_ns(
+        hw: &HwConfig,
+        topo: &Topo,
+        consumer: &GemmOp,
+        consumer_part: &Partition,
+        diagonal: bool,
+    ) -> f64 {
+        let full = load(hw, topo, consumer, consumer_part, diagonal, true)
+            .wall_ns();
+        let wonly = load(hw, topo, consumer, consumer_part, diagonal, false)
+            .wall_ns();
+        full - wonly
+    }
+
+    pub struct OpCostRef {
+        pub in_ns: f64,
+        pub comp_ns: f64,
+        pub out_ns: f64,
+        pub redistributed_in: bool,
+        pub energy_pj: f64,
+        pub latency_ns: f64,
+    }
+
+    pub struct CostRef {
+        pub latency_ns: f64,
+        pub energy_pj: f64,
+        pub per_op: Vec<OpCostRef>,
+    }
+
+    /// The pre-PR `evaluate` orchestration, frozen.
+    pub fn evaluate(
+        hw: &HwConfig,
+        topo: &Topo,
+        wl: &Workload,
+        alloc: &Allocation,
+        flags: OptFlags,
+    ) -> CostRef {
+        let ne = wl.edges.len();
+        let (mut in_edge, mut out_edge) = (Vec::new(), Vec::new());
+        wl.sole_edges_into(&mut in_edge, &mut out_edge);
+
+        let mut redist_edge = vec![false; ne];
+        let mut redist_cost: Vec<Option<RedistCost>> = vec![None; ne];
+        if flags.redistribution {
+            for (e, edge) in wl.edges.iter().enumerate() {
+                if !wl.edge_redistributable_with(e, &in_edge, &out_edge) {
+                    continue;
+                }
+                let r = redistribute(
+                    hw,
+                    &wl.ops[edge.src],
+                    &alloc.parts[edge.src],
+                    &alloc.parts[edge.dst],
+                    alloc.collect_cols[e],
+                );
+                let store_wall = offload_wall_ns(
+                    hw,
+                    topo,
+                    &wl.ops[edge.src],
+                    flags.diagonal,
+                );
+                let act_extra = act_load_extra_ns(
+                    hw,
+                    topo,
+                    &wl.ops[edge.dst],
+                    &alloc.parts[edge.dst],
+                    flags.diagonal,
+                );
+                if r.total_ns() < store_wall + act_extra {
+                    redist_edge[e] = true;
+                    redist_cost[e] = Some(r);
+                }
+            }
+        }
+
+        let mut out = CostRef {
+            latency_ns: 0.0,
+            energy_pj: 0.0,
+            per_op: Vec::new(),
+        };
+        for (i, op) in wl.ops.iter().enumerate() {
+            let part = &alloc.parts[i];
+            let acts_from_redist = match in_edge[i] {
+                Some(e) => redist_edge[e],
+                None => false,
+            };
+            let skip_store = match out_edge[i] {
+                Some(e) => redist_edge[e],
+                None => false,
+            };
+            let incoming = if acts_from_redist {
+                redist_cost[in_edge[i].unwrap()]
+            } else {
+                None
+            };
+
+            // ---- input stage
+            let in_cost =
+                load(hw, topo, op, part, flags.diagonal, !acts_from_redist);
+
+            // ---- compute stage
+            let mut comp_per = Vec::with_capacity(topo.num_chiplets());
+            for x in 0..hw.xdim {
+                for y in 0..hw.ydim {
+                    comp_per.push(comp_ns(hw, op, part.px[x], part.py[y]));
+                }
+            }
+            let comp_max = comp_per.iter().copied().fold(0.0, f64::max);
+            let fused = if flags.async_fusion {
+                comp_per
+                    .iter()
+                    .enumerate()
+                    .map(|(idx, &c)| in_cost.ready_ns(idx) + c)
+                    .fold(0.0, f64::max)
+            } else {
+                0.0
+            };
+
+            // ---- output stage
+            let store_ns = offload_wall_ns(hw, topo, op, flags.diagonal);
+
+            // ---- energy
+            let mut pj = comp_energy_pj(hw, op, part);
+            let mut off_bytes = hw.bytes(op.k * op.n);
+            if !acts_from_redist {
+                off_bytes += hw.bytes(op.m * op.k);
+            }
+            if !skip_store {
+                off_bytes += hw.bytes(op.m * op.n);
+                pj += collect_energy_pj(hw, topo, part, flags.diagonal);
+            }
+            pj += offchip_energy_pj(hw, off_bytes);
+            pj += load_energy_pj(hw, topo, op, part, flags.diagonal,
+                                 !acts_from_redist);
+
+            // ---- compose
+            let redist_ns =
+                incoming.map_or(0.0, |r: RedistCost| r.total_ns());
+            let in_comp_ns = if flags.async_fusion {
+                redist_ns + fused
+            } else {
+                redist_ns + in_cost.wall_ns() + comp_max
+            };
+            let out_ns = if skip_store { 0.0 } else { store_ns };
+            if let Some(r) = incoming {
+                pj += r.energy_pj;
+            }
+            let latency_ns = in_comp_ns + out_ns;
+            let oc = OpCostRef {
+                in_ns: in_cost.wall_ns() + redist_ns,
+                comp_ns: comp_max,
+                out_ns,
+                redistributed_in: incoming.is_some(),
+                energy_pj: pj,
+                latency_ns,
+            };
+            out.latency_ns += oc.latency_ns;
+            out.energy_pj += oc.energy_pj;
+            out.per_op.push(oc);
+        }
+        out
+    }
+}
+
+/// Deterministic allocation perturbation in the GA gene space (tile
+/// moves + collection-column tweaks), so the pin covers non-uniform
+/// partitions and redistribution decisions flipping.
+fn perturb(plat: &Platform, wl: &Workload, alloc: &mut Allocation) {
+    for (i, op) in wl.ops.iter().enumerate() {
+        if op.m > 2 * plat.r && i % 2 == 0 {
+            let px = &mut alloc.parts[i].px;
+            let step = plat.r.min(px[0]);
+            let last = px.len() - 1;
+            px[0] -= step;
+            px[last] += step;
+        }
+        if op.n > 2 * plat.c && i % 3 == 0 {
+            let py = &mut alloc.parts[i].py;
+            let step = plat.c.min(py[py.len() - 1]);
+            let last = py.len() - 1;
+            py[last] -= step;
+            py[0] += step;
+        }
+    }
+    for (e, c) in alloc.collect_cols.iter_mut().enumerate() {
+        *c = e % plat.ydim;
+    }
+}
+
+#[test]
+fn preset_reports_bit_identical_to_pre_pr_reference() {
+    for ty in SystemType::ALL {
+        for mem in [MemKind::Hbm, MemKind::Dram] {
+            let hw = HwConfig::paper(ty, mem, 4);
+            let topo = legacy::Topo::new(ty, 4, 4);
+            let plat = Platform::preset(ty, mem, 4);
+            for wl in [alexnet(1), vit(1)] {
+                let mut alloc = uniform_allocation(&plat, &wl);
+                for round in 0..2 {
+                    if round == 1 {
+                        perturb(&plat, &wl, &mut alloc);
+                    }
+                    for flags in all_flag_combos() {
+                        let want =
+                            legacy::evaluate(&hw, &topo, &wl, &alloc, flags);
+                        let got = evaluate(&plat, &wl, &alloc, flags);
+                        let ctx = format!(
+                            "{ty:?}/{mem:?}/{}/round{round}/{flags:?}",
+                            wl.name
+                        );
+                        assert_eq!(
+                            want.latency_ns.to_bits(),
+                            got.latency_ns.to_bits(),
+                            "latency diverged: {ctx}"
+                        );
+                        assert_eq!(
+                            want.energy_pj.to_bits(),
+                            got.energy_pj.to_bits(),
+                            "energy diverged: {ctx}"
+                        );
+                        assert_eq!(want.per_op.len(), got.per_op.len());
+                        for (w, g) in want.per_op.iter().zip(&got.per_op) {
+                            assert_eq!(
+                                w.latency_ns.to_bits(),
+                                g.latency_ns.to_bits(),
+                                "{ctx}"
+                            );
+                            assert_eq!(
+                                w.energy_pj.to_bits(),
+                                g.energy_pj.to_bits(),
+                                "{ctx}"
+                            );
+                            assert_eq!(w.in_ns.to_bits(), g.in_ns.to_bits());
+                            assert_eq!(
+                                w.comp_ns.to_bits(),
+                                g.comp_ns.to_bits()
+                            );
+                            assert_eq!(w.out_ns.to_bits(), g.out_ns.to_bits());
+                            assert_eq!(
+                                w.redistributed_in,
+                                g.redistributed_in,
+                                "{ctx}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_reports_pin_to_pre_pr_reference() {
+    // The same pin through the public engine surface: a Scenario built
+    // from preset knobs reports the legacy bits.
+    for ty in SystemType::ALL {
+        let hw = HwConfig::paper(ty, MemKind::Hbm, 4);
+        let topo = legacy::Topo::new(ty, 4, 4);
+        let scenario = Scenario::builder()
+            .system(ty)
+            .workload(alexnet(1))
+            .build()
+            .unwrap();
+        let alloc =
+            uniform_allocation(scenario.platform(), scenario.workload());
+        for flags in [OptFlags::NONE, OptFlags::ALL] {
+            let report = scenario.report_allocation(&alloc, flags);
+            let want =
+                legacy::evaluate(&hw, &topo, &alexnet(1), &alloc, flags);
+            assert_eq!(
+                report.latency_ns().to_bits(),
+                want.latency_ns.to_bits(),
+                "{ty:?} {flags:?}"
+            );
+            assert_eq!(
+                report.energy_pj().to_bits(),
+                want.energy_pj.to_bits(),
+                "{ty:?} {flags:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn hop_tables_equal_legacy_closed_forms_on_2x2_to_6x6() {
+    for ty in SystemType::ALL {
+        for xdim in 2..=6usize {
+            for ydim in 2..=6usize {
+                let topo = legacy::Topo::new(ty, xdim, ydim);
+                let plat =
+                    Platform::preset_grid(ty, MemKind::Hbm, xdim, ydim);
+                for diagonal in [false, true] {
+                    assert_eq!(
+                        plat.entrance_links(diagonal),
+                        topo.entrance_links(diagonal),
+                        "{ty:?} {xdim}x{ydim} entrance (diag={diagonal})"
+                    );
+                    for p in legacy::positions(xdim, ydim) {
+                        let ctx = format!(
+                            "{ty:?} {xdim}x{ydim} {p:?} diag={diagonal}"
+                        );
+                        assert_eq!(
+                            plat.hops_low_bw(p, diagonal),
+                            topo.hops_low_bw(p, diagonal),
+                            "low-bw hops: {ctx}"
+                        );
+                        assert_eq!(
+                            plat.hops_row_shared(p, diagonal),
+                            topo.hops_row_shared(p, diagonal),
+                            "row-shared hops: {ctx}"
+                        );
+                        assert_eq!(
+                            plat.hops_col_shared(p, diagonal),
+                            topo.hops_col_shared(p, diagonal),
+                            "col-shared hops: {ctx}"
+                        );
+                        assert_eq!(
+                            plat.hops_energy(p, diagonal),
+                            topo.hops_energy(p, diagonal),
+                            "energy hops: {ctx}"
+                        );
+                    }
+                }
+                // Geometry underneath the tables.
+                for p in legacy::positions(xdim, ydim) {
+                    assert_eq!(
+                        plat.nearest_global(p),
+                        topo.nearest_global(p)
+                    );
+                    let l = plat.local_index(p);
+                    assert_eq!((l.x, l.y), topo.local_index(p));
+                    assert_eq!(plat.region_extent(p), topo.region_extent(p));
+                }
+                assert_eq!(plat.globals(), topo.globals.as_slice());
+            }
+        }
+    }
+}
+
+fn asymmetric_platform() -> Platform {
+    let mut spec = Platform::headline().spec().clone();
+    spec.name = "asym-l-shape".into();
+    spec.attachments = vec![
+        MemAttachment::new(0, 0, 500.0),
+        MemAttachment::new(0, 3, 250.0),
+        MemAttachment::new(3, 0, 250.0),
+    ];
+    Platform::new(spec).unwrap()
+}
+
+fn quick_registry(seed: u64) -> SchedulerRegistry {
+    SchedulerRegistry::with_params(
+        GaParams {
+            population: 12,
+            generations: 6,
+            seed,
+            ..Default::default()
+        },
+        Duration::from_secs(2),
+        seed,
+    )
+}
+
+#[test]
+fn asymmetric_platform_runs_sweep_ga_and_miqp_end_to_end() {
+    // Acceptance: at least one non-preset platform (asymmetric memory
+    // attachments) runs end-to-end through Engine::sweep, the GA, and
+    // MIQP, and the optimizers still beat the uniform baseline.
+    let registry = quick_registry(11);
+    let schedulers: Vec<&dyn Scheduler> =
+        registry.select(&["baseline", "simba", "ga", "miqp"]).unwrap();
+    let scenarios = vec![
+        Scenario::builder()
+            .platform(asymmetric_platform())
+            .workload(alexnet(1))
+            .build()
+            .unwrap(),
+        Scenario::builder()
+            .platform(asymmetric_platform())
+            .workload(vit(1))
+            .objective(Objective::Edp)
+            .build()
+            .unwrap(),
+    ];
+    let rows = Engine::sweep(scenarios, &schedulers).unwrap();
+    assert_eq!(rows.len(), 2);
+    for row in &rows {
+        assert_eq!(row.system(), "asym-l-shape");
+        assert_eq!(row.outcomes.len(), 4);
+        let base = row.outcome("baseline").unwrap().plan.objective_value;
+        assert!(base.is_finite() && base > 0.0);
+        for key in ["ga", "miqp"] {
+            let v = row.outcome(key).unwrap().plan.objective_value;
+            assert!(
+                v <= base * 1.0001,
+                "{key} on {}: {v} worse than baseline {base}",
+                row.model()
+            );
+            // Reports re-derive the accepted score bit-identically.
+            let report = row.report(key).unwrap();
+            assert_eq!(report.objective_value().to_bits(), v.to_bits());
+        }
+    }
+}
+
+#[test]
+fn asymmetric_platform_differs_from_every_preset() {
+    // The adaptivity claim is only meaningful if the custom layout is
+    // genuinely a new design point: its baseline cost matches no
+    // preset's.
+    let wl = alexnet(1);
+    let custom = Scenario::builder()
+        .platform(asymmetric_platform())
+        .workload(wl.clone())
+        .build()
+        .unwrap()
+        .baseline_report()
+        .latency_ns();
+    for ty in SystemType::ALL {
+        let preset = Scenario::builder()
+            .system(ty)
+            .workload(wl.clone())
+            .build()
+            .unwrap()
+            .baseline_report()
+            .latency_ns();
+        assert_ne!(
+            custom.to_bits(),
+            preset.to_bits(),
+            "custom layout collapsed onto preset {ty:?}"
+        );
+    }
+}
+
+#[test]
+fn engine_schedule_with_ga_works_on_custom_platform() {
+    let engine = Engine::new(
+        Scenario::builder()
+            .platform(asymmetric_platform())
+            .workload(alexnet(1))
+            .build()
+            .unwrap(),
+    );
+    let registry = quick_registry(3);
+    let planned = engine.schedule(&registry, "ga").unwrap();
+    assert!(planned.objective_value() > 0.0);
+    planned
+        .plan()
+        .alloc
+        .validate(engine.scenario().workload(), engine.scenario().platform())
+        .unwrap();
+}
+
+#[test]
+fn example_platform_files_load_and_validate() {
+    // Mirrors the CI step (`mcmcomm platforms --validate-dir
+    // examples/platforms`): every shipped description must load, pass
+    // Platform::validate, and round-trip through JSON identically.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/platforms");
+    let mut n = 0;
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("reading {dir:?}: {e}"))
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let plat = Platform::load(&path)
+            .unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        assert!(plat.spec().validate().is_ok());
+        let encoded = plat.to_json().encode();
+        let back = Platform::from_json(
+            &mcmcomm::util::json::Json::parse(&encoded).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(plat.spec(), back.spec(), "{path:?} did not roundtrip");
+        n += 1;
+    }
+    assert!(n >= 3, "expected at least 3 example platforms, found {n}");
+    // The shipped asymmetric example must be loadable and non-preset.
+    let asym = Platform::load(&dir.join("asym_l_shape.json")).unwrap();
+    assert!(asym.globals().len() != 1 && asym.globals().len() != 16);
+    assert_ne!(asym.globals(), Platform::type_b(MemKind::Hbm, 4).globals());
+}
+
+#[test]
+fn hop_tables_match_link_graph_routes_on_asymmetric_layouts() {
+    let plat = asymmetric_platform();
+    for diagonal in [false, true] {
+        let graph = plat.link_graph(diagonal);
+        for p in plat.positions() {
+            let src = graph.chiplet_id(plat.nearest_global(p));
+            let dst = graph.chiplet_id(p);
+            let len = graph.route(src, dst).unwrap().len();
+            assert_eq!(plat.hops_low_bw(p, diagonal), len, "{p:?}");
+        }
+    }
+    // Spot-check the serving structure: (3, 3) is closer to the (0, 3)
+    // arm than to the corner.
+    assert_eq!(plat.nearest_global(Pos::new(3, 3)), Pos::new(0, 3));
+}

@@ -2,19 +2,56 @@
 //! batching/scheduling, cost-model structure), using the in-repo
 //! propcheck substrate.
 
-use mcmcomm::config::{HwConfig, MemKind, SystemType};
+use mcmcomm::config::{MemKind, SystemType};
 use mcmcomm::cost::evaluator::{evaluate, OptFlags};
 use mcmcomm::partition::{
     dim_bounds, project_to_sum, proportional_split, uniform_allocation,
     Allocation, Partition,
 };
 use mcmcomm::pipeline::{batch_tasks, list_schedule, validate_schedule};
+use mcmcomm::platform::{MemAttachment, Platform};
 use mcmcomm::prop_assert;
 use mcmcomm::topology::links::LinkGraph;
-use mcmcomm::topology::{Pos, Topology};
+use mcmcomm::topology::Pos;
+use mcmcomm::util::json::Json;
 use mcmcomm::util::propcheck::{forall, gens};
 use mcmcomm::util::rng::Pcg;
 use mcmcomm::workload::{GemmOp, Workload};
+
+/// A random *valid* platform: random grid, random non-empty attachment
+/// set, random per-class bandwidths. The generator mirrors what a JSON
+/// description file can express.
+fn rand_platform(rng: &mut Pcg) -> Platform {
+    let xdim = rng.range_usize(1, 7);
+    let ydim = rng.range_usize(1, 7);
+    let bw_mem = 50.0 + rng.f64() * 2000.0;
+    let mut positions: Vec<Pos> = Vec::new();
+    let n_att = rng.range_usize(1, xdim * ydim);
+    while positions.len() < n_att {
+        let p = Pos::new(
+            rng.range_usize(0, xdim - 1),
+            rng.range_usize(0, ydim - 1),
+        );
+        if !positions.contains(&p) {
+            positions.push(p);
+        }
+    }
+    let mut spec = Platform::headline().spec().clone();
+    spec.name = format!("rand-{xdim}x{ydim}-{n_att}");
+    spec.xdim = xdim;
+    spec.ydim = ydim;
+    spec.bw_nop = 10.0 + rng.f64() * 100.0;
+    spec.bw_diag = 10.0 + rng.f64() * 100.0;
+    spec.bw_mem = bw_mem;
+    spec.attachments = positions
+        .into_iter()
+        .map(|p| MemAttachment {
+            pos: p,
+            bw: 10.0 + rng.f64() * bw_mem,
+        })
+        .collect();
+    Platform::new(spec).expect("generator only emits valid specs")
+}
 
 fn rand_type(rng: &mut Pcg) -> SystemType {
     *rng.choose(&SystemType::ALL)
@@ -35,13 +72,136 @@ fn prop_local_index_within_grid() {
             (ty, x, y)
         },
         |&(ty, x, y)| {
-            let t = Topology::new(ty, x, y);
+            let t = Platform::preset_grid(ty, MemKind::Hbm, x, y);
             for p in t.positions() {
                 let l = t.local_index(p);
                 prop_assert!(l.x < x && l.y < y, "index {l:?} out of {x}x{y}");
                 let (rx, ry) = t.region_extent(p);
                 prop_assert!(l.x < rx && l.y < ry,
                              "local index outside region extent");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hop_tables_equal_link_graph_route_lengths() {
+    // Satellite: on random valid platforms, every minimal-hop table
+    // entry equals the length of the corresponding `LinkGraph::route`
+    // path from the serving attachment, diagonal on and off.
+    forall(
+        80,
+        0xB1,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Pcg::seeded(seed);
+            let plat = rand_platform(&mut rng);
+            for diagonal in [false, true] {
+                let graph = plat.link_graph(diagonal);
+                for p in plat.positions() {
+                    let src = graph.chiplet_id(plat.nearest_global(p));
+                    let dst = graph.chiplet_id(p);
+                    let len = graph
+                        .route(src, dst)
+                        .map_err(|e| format!("{e:#}"))?
+                        .len();
+                    prop_assert!(
+                        plat.hops_low_bw(p, diagonal) == len,
+                        "{}: table {} != route {len} at {p:?} \
+                         (diagonal={diagonal})",
+                        plat.name,
+                        plat.hops_low_bw(p, diagonal)
+                    );
+                    prop_assert!(
+                        plat.hops_energy(p, diagonal) == len,
+                        "energy hops diverge at {p:?}"
+                    );
+                    // Shared-data hops fold waiting slots in: they can
+                    // only add to the minimal route.
+                    prop_assert!(
+                        plat.hops_row_shared(p, diagonal) >= len
+                            && plat.hops_col_shared(p, diagonal) >= len,
+                        "shared hops below route length at {p:?}"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_platform_json_roundtrips_identically() {
+    // Satellite: save -> load reproduces an identical platform spec
+    // (bit-exact numbers) and identical hop tables.
+    forall(
+        60,
+        0xB2,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Pcg::seeded(seed);
+            let plat = rand_platform(&mut rng);
+            let encoded = plat.to_json().encode();
+            let parsed = Json::parse(&encoded)
+                .map_err(|e| format!("re-parse failed: {e}"))?;
+            let back = Platform::from_json(&parsed)
+                .map_err(|e| format!("reload failed: {e:#}"))?;
+            prop_assert!(
+                plat.spec() == back.spec(),
+                "spec drifted across JSON roundtrip"
+            );
+            for diagonal in [false, true] {
+                for p in plat.positions() {
+                    prop_assert!(
+                        plat.hops_low_bw(p, diagonal)
+                            == back.hops_low_bw(p, diagonal)
+                            && plat.hops_row_shared(p, diagonal)
+                                == back.hops_row_shared(p, diagonal)
+                            && plat.hops_col_shared(p, diagonal)
+                                == back.hops_col_shared(p, diagonal),
+                        "hop tables drifted across JSON roundtrip"
+                    );
+                }
+                prop_assert!(
+                    plat.entrance_links(diagonal)
+                        == back.entrance_links(diagonal),
+                    "entrance links drifted"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_random_platforms_evaluate_finite() {
+    // Arbitrary attachment layouts run the full evaluator end to end.
+    forall(
+        40,
+        0xB3,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Pcg::seeded(seed);
+            let plat = rand_platform(&mut rng);
+            let wl = Workload::new(
+                "w",
+                vec![
+                    GemmOp::dense("a", 256, 64, 256),
+                    GemmOp::dense("b", 256, 256, 128).chained(),
+                ],
+            );
+            let alloc = uniform_allocation(&plat, &wl);
+            for flags in [OptFlags::NONE, OptFlags::ALL] {
+                let c = evaluate(&plat, &wl, &alloc, flags);
+                prop_assert!(
+                    c.latency_ns.is_finite() && c.latency_ns > 0.0,
+                    "{}: latency {} invalid", plat.name, c.latency_ns
+                );
+                prop_assert!(
+                    c.energy_pj.is_finite() && c.energy_pj > 0.0,
+                    "{}: energy invalid", plat.name
+                );
             }
             Ok(())
         },
@@ -64,7 +224,7 @@ fn prop_routes_connect_and_are_minimal() {
             let g = LinkGraph::mesh(n, n, diagonal, 60.0);
             let src = g.chiplet_id(Pos::new(a.0, a.1));
             let dst = g.chiplet_id(Pos::new(b.0, b.1));
-            let path = g.route(src, dst);
+            let path = g.route(src, dst).map_err(|e| format!("{e:#}"))?;
             // Chained and of minimal length.
             let mut cur = src;
             for &l in &path {
@@ -141,8 +301,7 @@ fn prop_random_valid_allocations_evaluate_finite() {
             (ty, mem, m, k, n, seed)
         },
         |&(ty, mem, m, k, n, seed)| {
-            let hw = HwConfig::paper(ty, mem, 4);
-            let topo = Topology::from_hw(&hw);
+            let plat = Platform::preset(ty, mem, 4);
             let wl = Workload::new("w", vec![GemmOp::dense("a", m, k, n)]);
             let mut rng = Pcg::seeded(seed);
             let px = gens::composition(&mut rng, m, 4);
@@ -153,9 +312,9 @@ fn prop_random_valid_allocations_evaluate_finite() {
                 parts: vec![Partition { px, py }],
                 collect_cols: vec![],
             };
-            prop_assert!(alloc.validate(&wl, &hw).is_ok(), "invalid alloc");
+            prop_assert!(alloc.validate(&wl, &plat).is_ok(), "invalid alloc");
             for flags in [OptFlags::NONE, OptFlags::ALL] {
-                let c = evaluate(&hw, &topo, &wl, &alloc, flags);
+                let c = evaluate(&plat, &wl, &alloc, flags);
                 prop_assert!(
                     c.latency_ns.is_finite() && c.latency_ns > 0.0,
                     "latency {} not finite-positive", c.latency_ns
@@ -183,8 +342,7 @@ fn prop_optimizations_never_hurt() {
             (ty, mem, n_ops, rng.next_u64())
         },
         |&(ty, mem, n_ops, seed)| {
-            let hw = HwConfig::paper(ty, mem, 4);
-            let topo = Topology::from_hw(&hw);
+            let plat = Platform::preset(ty, mem, 4);
             let mut rng = Pcg::seeded(seed);
             let mut ops = Vec::new();
             for i in 0..n_ops {
@@ -200,9 +358,9 @@ fn prop_optimizations_never_hurt() {
                 ops.push(op);
             }
             let wl = Workload::new("w", ops);
-            let alloc = uniform_allocation(&hw, &wl);
-            let base = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
-            let opt = evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL);
+            let alloc = uniform_allocation(&plat, &wl);
+            let base = evaluate(&plat, &wl, &alloc, OptFlags::NONE);
+            let opt = evaluate(&plat, &wl, &alloc, OptFlags::ALL);
             prop_assert!(
                 opt.latency_ns <= base.latency_ns * 1.0001,
                 "optimizations hurt: {} > {}",
@@ -225,8 +383,7 @@ fn prop_schedules_always_valid() {
             (n_ops, batch, rng.next_u64())
         },
         |&(n_ops, batch, seed)| {
-            let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-            let topo = Topology::from_hw(&hw);
+            let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
             let mut rng = Pcg::seeded(seed);
             let ops = (0..n_ops)
                 .map(|i| {
@@ -239,8 +396,8 @@ fn prop_schedules_always_valid() {
                 })
                 .collect();
             let wl = Workload::new("w", ops);
-            let alloc = uniform_allocation(&hw, &wl);
-            let cost = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
+            let alloc = uniform_allocation(&plat, &wl);
+            let cost = evaluate(&plat, &wl, &alloc, OptFlags::NONE);
             let tasks = batch_tasks(&cost, batch);
             let s = list_schedule(&tasks);
             validate_schedule(&tasks, &s).map_err(|e| e)?;
@@ -265,7 +422,7 @@ fn prop_best_collect_col_is_argmin() {
             (m, n, rng.next_u64())
         },
         |&(m, n, seed)| {
-            let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
+            let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
             let op = GemmOp::dense("a", m, 64, n);
             let mut rng = Pcg::seeded(seed);
             let p = Partition {
@@ -276,10 +433,10 @@ fn prop_best_collect_col_is_argmin() {
                 px: gens::composition(&mut rng, m, 4),
                 py: p.py.clone(),
             };
-            let best = best_collect_col(&hw, &op, &p, &q);
-            let best_cost = redistribute(&hw, &op, &p, &q, best).total_ns();
+            let best = best_collect_col(&plat, &op, &p, &q);
+            let best_cost = redistribute(&plat, &op, &p, &q, best).total_ns();
             for c in 0..4 {
-                let cost = redistribute(&hw, &op, &p, &q, c).total_ns();
+                let cost = redistribute(&plat, &op, &p, &q, c).total_ns();
                 prop_assert!(
                     best_cost <= cost + 1e-9,
                     "col {c} ({cost}) beats chosen {best} ({best_cost})"
@@ -316,7 +473,7 @@ fn prop_netsim_conserves_bytes_on_memory_link() {
                     bytes: rng.range_usize(1, 100_000) as f64,
                 })
                 .collect();
-            let res = simulate(&g, &flows);
+            let res = simulate(&g, &flows).map_err(|e| format!("{e:#}"))?;
             let expected: f64 = flows.iter().map(|f| f.bytes).sum();
             let mem_out: f64 = g
                 .links
@@ -384,8 +541,7 @@ fn prop_dag_evaluation_invariant_under_topological_order() {
         0xAB,
         |rng| (rng.range_usize(3, 7), rng.next_u64()),
         |&(n_ops, seed)| {
-            let hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-            let topo = Topology::from_hw(&hw);
+            let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
             let mut rng = Pcg::seeded(seed);
             let ops: Vec<GemmOp> = (0..n_ops)
                 .map(|i| {
@@ -407,11 +563,11 @@ fn prop_dag_evaluation_invariant_under_topological_order() {
                 }
             }
             let wl = Workload::from_graph("dag", ops.clone(), &pairs);
-            let mut alloc = uniform_allocation(&hw, &wl);
+            let mut alloc = uniform_allocation(&plat, &wl);
             for c in alloc.collect_cols.iter_mut() {
                 *c = rng.range_usize(0, 3);
             }
-            let base = evaluate(&hw, &topo, &wl, &alloc, OptFlags::ALL);
+            let base = evaluate(&plat, &wl, &alloc, OptFlags::ALL);
 
             // Re-store the same graph under a different topological
             // order and re-evaluate.
@@ -425,7 +581,7 @@ fn prop_dag_evaluation_invariant_under_topological_order() {
             let perm_pairs: Vec<(usize, usize)> =
                 pairs.iter().map(|&(s, d)| (inv[s], inv[d])).collect();
             let wl2 = Workload::from_graph("dag2", perm_ops, &perm_pairs);
-            let mut alloc2 = uniform_allocation(&hw, &wl2);
+            let mut alloc2 = uniform_allocation(&plat, &wl2);
             for (new_pos, &old) in order.iter().enumerate() {
                 alloc2.parts[new_pos] = alloc.parts[old].clone();
             }
@@ -441,7 +597,7 @@ fn prop_dag_evaluation_invariant_under_topological_order() {
                 let old_key = (order[edge2.src], order[edge2.dst]);
                 alloc2.collect_cols[e2] = old_cols[&old_key];
             }
-            let perm = evaluate(&hw, &topo, &wl2, &alloc2, OptFlags::ALL);
+            let perm = evaluate(&plat, &wl2, &alloc2, OptFlags::ALL);
 
             // Per-op costs: bit-identical, matched through the
             // permutation.
@@ -481,12 +637,14 @@ fn prop_evaluator_latency_monotone_in_bandwidth() {
         },
         |&(m, k, n)| {
             let wl = Workload::new("w", vec![GemmOp::dense("a", m, k, n)]);
-            let mut hw = HwConfig::paper(SystemType::A, MemKind::Hbm, 4);
-            let topo = Topology::from_hw(&hw);
-            let alloc = uniform_allocation(&hw, &wl);
-            let slow = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
-            hw.bw_nop *= 2.0;
-            let fast = evaluate(&hw, &topo, &wl, &alloc, OptFlags::NONE);
+            let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
+            let alloc = uniform_allocation(&plat, &wl);
+            let slow = evaluate(&plat, &wl, &alloc, OptFlags::NONE);
+            let mut spec = plat.spec().clone();
+            spec.bw_nop *= 2.0;
+            spec.bw_diag *= 2.0;
+            let fast_plat = Platform::new(spec).unwrap();
+            let fast = evaluate(&fast_plat, &wl, &alloc, OptFlags::NONE);
             prop_assert!(
                 fast.latency_ns <= slow.latency_ns + 1e-9,
                 "doubling NoP bandwidth increased latency"
