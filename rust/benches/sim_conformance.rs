@@ -1,0 +1,78 @@
+//! Bench: the plan-level discrete-event simulator — event-loop
+//! throughput on the headline scenario, conformance vs overlap modes,
+//! and the simulated/analytical latency ratio per scheduler (the
+//! numbers the conformance suite grades; printed here for quick
+//! eyeballing without running the release test job).
+
+use std::time::Duration;
+
+use mcmcomm::cost::evaluator::OptFlags;
+use mcmcomm::engine::{Engine, Scenario, SchedulerRegistry};
+use mcmcomm::netsim::conformance::check_plan;
+use mcmcomm::netsim::sim::{simulate_plan, SimConfig, SimMode};
+use mcmcomm::partition::uniform_allocation;
+use mcmcomm::platform::Platform;
+use mcmcomm::util::bench::{bench, black_box};
+use mcmcomm::workload::models::alexnet;
+
+fn main() {
+    let plat = Platform::headline();
+    let wl = alexnet(1);
+    let alloc = uniform_allocation(&plat, &wl);
+
+    bench("sim/alexnet_conformance", Duration::from_secs(2), || {
+        let r = simulate_plan(
+            &plat,
+            &wl,
+            &alloc,
+            OptFlags::ALL,
+            &SimConfig::default(),
+        )
+        .expect("plan simulates");
+        black_box(r.makespan_ns);
+    });
+    bench("sim/alexnet_overlap", Duration::from_secs(2), || {
+        let r = simulate_plan(
+            &plat,
+            &wl,
+            &alloc,
+            OptFlags::ALL,
+            &SimConfig { mode: SimMode::Overlap, hop_latency_ns: 0.0 },
+        )
+        .expect("plan simulates");
+        black_box(r.makespan_ns);
+    });
+    bench("sim/alexnet_batch8_conformance", Duration::from_secs(2), || {
+        let wl8 = alexnet(8);
+        let alloc8 = uniform_allocation(&plat, &wl8);
+        let r = simulate_plan(
+            &plat,
+            &wl8,
+            &alloc8,
+            OptFlags::ALL,
+            &SimConfig::default(),
+        )
+        .expect("plan simulates");
+        black_box(r.makespan_ns);
+    });
+
+    // Conformance ratios per scheduler (informational).
+    let registry = SchedulerRegistry::standard(42);
+    let engine = Engine::new(Scenario::headline(alexnet(1)));
+    println!("\nsimulated / analytical latency (AlexNet, A-HBM-4x4):");
+    for key in ["baseline", "simba", "greedy"] {
+        let plan = engine
+            .schedule(&registry, key)
+            .expect("scheduler runs")
+            .into_plan();
+        let c = check_plan(engine.scenario(), &plan).expect("sim runs");
+        println!(
+            "  {:<8} ratio {:.3}  (band [{:.2}, {:.2}] -> {})",
+            key,
+            c.ratio,
+            c.tolerance.lo,
+            c.tolerance.hi,
+            if c.pass() { "ok" } else { "FAIL" }
+        );
+    }
+}

@@ -23,8 +23,14 @@ use super::plan::{build_plan, ExecutionPlan};
 /// Result of one end-to-end run.
 #[derive(Debug)]
 pub struct RunReport {
-    /// Analytical (simulated MCM) cost of the run.
+    /// Analytical (modeled MCM) cost of the run.
     pub modeled: CostBreakdown,
+    /// Discrete-event makespan of the same plan
+    /// (`netsim::sim::simulate_plan`, conformance mode) — the
+    /// independent cross-check on `modeled.latency_ns`. Populated on
+    /// verification runs (`run(.., true)`); `None` on fast-path runs or
+    /// if the plan could not be lowered.
+    pub simulated_ns: Option<f64>,
     /// Host wall time actually spent executing chunks.
     pub host_wall: std::time::Duration,
     /// Runtime chunk executions performed.
@@ -209,12 +215,28 @@ impl<'a> Executor<'a> {
         let modeled = crate::engine::modeled_breakdown(
             self.plat, self.wl, self.alloc, self.flags,
         );
+        // The DES cross-check rides the verification path only (serve
+        // batches call `run(.., false)` in a hot loop).
+        let simulated_ns = if verify {
+            crate::netsim::sim::simulate_plan(
+                self.plat,
+                self.wl,
+                self.alloc,
+                self.flags,
+                &crate::netsim::sim::SimConfig::default(),
+            )
+            .ok()
+            .map(|r| r.makespan_ns)
+        } else {
+            None
+        };
         let chunks1 = self
             .runtime
             .executions
             .load(std::sync::atomic::Ordering::Relaxed);
         Ok(RunReport {
             modeled,
+            simulated_ns,
             host_wall: t0.elapsed(),
             chunks_executed: chunks1 - chunks0,
             max_abs_err: max_err,

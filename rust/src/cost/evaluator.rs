@@ -49,7 +49,8 @@ pub enum Objective {
     Edp,
 }
 
-/// Per-op cost decomposition (diagnostics + pipeline task durations).
+/// Per-op cost decomposition (diagnostics + pipeline task durations +
+/// the per-phase terms the simulation comparator reads).
 #[derive(Debug, Clone, Default)]
 pub struct OpCost {
     pub in_ns: f64,
@@ -60,6 +61,13 @@ pub struct OpCost {
     pub energy_pj: f64,
     /// Total latency contribution of this op.
     pub latency_ns: f64,
+    /// §5.2 incoming-redistribution share of `in_ns` (0.0 when the
+    /// activations came from memory).
+    pub redist_ns: f64,
+    /// Serialized off-chip (memory-interface) share of the load stage —
+    /// the §4.3.2/4.3.3 "step 1" term the `simulate` CLI's phase
+    /// comparison aligns with the simulator's off-chip pull window.
+    pub in_offchip_ns: f64,
 }
 
 /// End-to-end cost (eq. 3).
@@ -81,6 +89,30 @@ impl CostBreakdown {
             Objective::Latency => self.latency_ns,
             Objective::Edp => self.edp(),
         }
+    }
+
+    // ---- per-phase aggregates (the conformance comparator and the
+    // `simulate` CLI align these with the simulator's stage windows).
+
+    /// Total input-stage time across ops (loads + incoming
+    /// redistribution).
+    pub fn in_total_ns(&self) -> f64 {
+        self.per_op.iter().map(|o| o.in_ns).sum()
+    }
+
+    /// Total §5.2 redistribution time across ops.
+    pub fn redist_total_ns(&self) -> f64 {
+        self.per_op.iter().map(|o| o.redist_ns).sum()
+    }
+
+    /// Total compute time across ops (slowest-chiplet terms).
+    pub fn comp_total_ns(&self) -> f64 {
+        self.per_op.iter().map(|o| o.comp_ns).sum()
+    }
+
+    /// Total writeback time across ops.
+    pub fn out_total_ns(&self) -> f64 {
+        self.per_op.iter().map(|o| o.out_ns).sum()
     }
 }
 
@@ -200,6 +232,10 @@ pub(crate) struct OpTerms {
     /// Input-stage wall time (`load(..).wall_ns()`), activation traffic
     /// gated by `acts_from_redist`.
     pub in_wall_ns: f64,
+    /// The serialized off-chip share of `in_wall_ns` (surfaced as
+    /// [`OpCost::in_offchip_ns`] for the `simulate` CLI's phase
+    /// comparison).
+    pub in_offchip_ns: f64,
     /// §5.3 fused in+comp wall time; 0.0 when async fusion is off.
     pub fused_ns: f64,
     /// Slowest chiplet's compute time.
@@ -265,6 +301,7 @@ pub(crate) fn op_terms(
 
     OpTerms {
         in_wall_ns: bufs.in_cost.wall_ns(),
+        in_offchip_ns: bufs.in_cost.offchip_ns,
         fused_ns: fused,
         comp_max_ns: comp_max,
         store_ns,
@@ -303,6 +340,8 @@ pub(crate) fn compose_op(
         redistributed_in: incoming.is_some(),
         energy_pj: pj,
         latency_ns,
+        redist_ns,
+        in_offchip_ns: terms.in_offchip_ns,
     }
 }
 

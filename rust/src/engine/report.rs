@@ -90,6 +90,35 @@ impl Report {
             .count()
     }
 
+    /// Check this report's end-to-end latency against the plan-level
+    /// discrete-event simulator: re-executes `plan` on `scenario`'s
+    /// platform in conformance mode and grades the
+    /// simulated-vs-analytical ratio against the scheduler's tolerance
+    /// band (`netsim::conformance::scheme_tolerance`; DESIGN.md
+    /// §Validation). `scenario` and `plan` must be the pair this report
+    /// was derived from — enforced: the analytical side is re-derived
+    /// from them, and the single-evaluator rule makes it bit-identical
+    /// to this report, so any mismatch is a structured error rather
+    /// than a silently mis-attributed verdict.
+    pub fn validate_against_sim(
+        &self,
+        scenario: &crate::engine::Scenario,
+        plan: &crate::engine::Plan,
+    ) -> crate::util::error::Result<crate::netsim::conformance::Conformance>
+    {
+        let c = crate::netsim::conformance::check_plan(scenario, plan)?;
+        if c.analytical_ns.to_bits() != self.latency_ns().to_bits() {
+            return Err(crate::err!(
+                "validate_against_sim: (scenario, plan) re-derives \
+                 latency {} ns but this report holds {} ns — the pair \
+                 does not correspond to this report",
+                c.analytical_ns,
+                self.latency_ns()
+            ));
+        }
+        Ok(c)
+    }
+
     /// Per-model cost attribution: one [`ModelTotal`] per constituent
     /// span (single-model workloads yield one row covering everything).
     /// The rows sum to the fused totals up to floating-point

@@ -71,6 +71,27 @@ impl Scenario {
         self.plat.name.clone()
     }
 
+    /// Execute a plan on the plan-level discrete-event simulator
+    /// (conformance mode: layer-sequential barriers, zero hop latency —
+    /// the configuration comparable to [`Scenario::report`]). See
+    /// [`Scenario::simulate_with`] for other modes.
+    pub fn simulate(
+        &self,
+        plan: &Plan,
+    ) -> crate::util::error::Result<crate::netsim::sim::SimReport> {
+        self.simulate_with(plan, &crate::netsim::sim::SimConfig::default())
+    }
+
+    /// [`Scenario::simulate`] with explicit simulation knobs (overlap
+    /// mode, per-hop latency).
+    pub fn simulate_with(
+        &self,
+        plan: &Plan,
+        cfg: &crate::netsim::sim::SimConfig,
+    ) -> crate::util::error::Result<crate::netsim::sim::SimReport> {
+        crate::netsim::conformance::simulate_scenario_plan(self, plan, cfg)
+    }
+
     /// Score a plan on the single-source-of-truth evaluator.
     pub fn report(&self, plan: &Plan) -> Report {
         Report {

@@ -26,6 +26,12 @@ pub struct Fig3Row {
 
 /// Figure 3 — motivation study: 16 chiplets pull 1 GB each over a 4x4
 /// mesh; DRAM vs HBM, peripheral vs central placement, 1x vs 2x NoP.
+///
+/// Since the validation PR this replay runs on the plan-level
+/// discrete-event engine (`netsim::sim`): each pull lowers to one
+/// dependency-free transfer task of the same event loop that executes
+/// whole schedules, so the motivation study and the conformance oracle
+/// share one simulator.
 pub fn fig3(print_heatmaps: bool) -> Vec<Fig3Row> {
     // Paper constants: DRAM 60 GB/s, HBM 1024 GB/s (Fig. 3 caption),
     // NoP 60 / 120 GB/s, 1 GB per chiplet.

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   figures    regenerate the paper's figures (3, 8–13) and tables
 //!   optimize   run one scheduler on one workload/config and report
+//!   simulate   execute a plan on the discrete-event simulator and
+//!              compare against the analytical model (conformance)
 //!   netsim     run the Figure-3 congestion study with custom knobs
 //!   run-e2e    execute a workload with real numerics end to end
 //!   serve      threaded batching-server demo on the simulated MCM
@@ -38,6 +40,9 @@ USAGE: mcmcomm <subcommand> [--options]
             [--platform FILE.json] [--list-platforms]
             [--batch N] [--seed N]
   platforms --validate FILE.json | --validate-dir DIR | --list
+  simulate  --model NAME [--scheme NAME] [--type T] [--mem M] [--grid N]
+            [--platform FILE.json] [--batch N] [--seed N] [--overlap]
+            [--hop-latency NS]
   netsim    [--grid N] [--bw-nop G] [--bw-mem G] [--central] [--diagonal] [--gb BYTES]
   run-e2e   [--model NAME] [--scheme NAME] [--scale S] [--artifacts DIR] [--seed N]
   serve     [--requests N] [--max-batch N] [--model NAME] [--artifacts DIR]
@@ -259,6 +264,115 @@ fn cmd_platforms(mut args: Args) -> Result<()> {
     Ok(())
 }
 
+/// `simulate`: schedule a workload, execute the plan on the plan-level
+/// discrete-event simulator, and compare against the analytical model.
+fn cmd_simulate(mut args: Args) -> Result<()> {
+    use mcmcomm::netsim::sim::{SimConfig, SimMode};
+
+    let model = args.get_or("model", "alexnet");
+    let scheme = args.get_or("scheme", "ga");
+    let ty = parse_type(&args.get_or("type", "A"))?;
+    let mem = parse_mem(&args.get_or("mem", "hbm"))?;
+    let grid = args.get_usize("grid", 4).map_err(Error::msg)?;
+    let batch = args.get_usize("batch", 1).map_err(Error::msg)?;
+    let platform_file = args.get("platform");
+    let seed = args.get_usize("seed", 42).map_err(Error::msg)? as u64;
+    let overlap = args.flag("overlap");
+    let hop_latency =
+        args.get_f64("hop-latency", 0.0).map_err(Error::msg)?;
+    args.finish().map_err(Error::msg)?;
+
+    let mut builder = Scenario::builder().system(ty).mem(mem).grid(grid);
+    if let Some(path) = &platform_file {
+        builder = builder.platform(Platform::load(Path::new(path))?);
+    }
+    let scenario =
+        builder.workload(parse_model(&model, batch)?).build()?;
+    let engine = Engine::new(scenario);
+    let registry = SchedulerRegistry::standard(seed);
+    let planned = engine.schedule(&registry, &scheme)?;
+    let report = planned.report();
+    let plan = planned.plan();
+
+    let cfg = SimConfig {
+        mode: if overlap { SimMode::Overlap } else { SimMode::Conformance },
+        hop_latency_ns: hop_latency,
+    };
+    let sim = engine.scenario().simulate_with(plan, &cfg)?;
+
+    println!(
+        "simulated {} on {} (scheme {}, mode {:?})",
+        engine.scenario().workload().name,
+        engine.scenario().label(),
+        plan.scheduler,
+        cfg.mode,
+    );
+    // LS stage terms: `in_ns` folds redistribution in, so subtract it
+    // back out for a disjoint load | redist | comp | out split. Under
+    // async fusion the stages overlap, so their sum exceeds the total.
+    let b = &report.breakdown;
+    let load_ns = b.in_total_ns() - b.redist_total_ns();
+    let offchip_ns: f64 = b.per_op.iter().map(|o| o.in_offchip_ns).sum();
+    println!(
+        "analytical latency : {:.4} ms  (load {:.4} of which offchip \
+         {:.4} | redist {:.4} | comp {:.4} | out {:.4}{})",
+        report.latency_ns() / 1e6,
+        load_ns / 1e6,
+        offchip_ns / 1e6,
+        b.redist_total_ns() / 1e6,
+        b.comp_total_ns() / 1e6,
+        b.out_total_ns() / 1e6,
+        if plan.flags.async_fusion {
+            "; fusion overlaps load+comp, stages sum above the total"
+        } else {
+            ""
+        },
+    );
+    println!(
+        "simulated makespan : {:.4} ms  ({} redistributed edge(s), \
+         energy {:.3} mJ)",
+        sim.makespan_ns / 1e6,
+        sim.redistributed_edges(),
+        sim.energy.total_pj() / 1e9,
+    );
+    println!("top links by mean utilization:");
+    for (l, u) in sim.top_links(5) {
+        let link = &sim.graph.links[l];
+        println!(
+            "  {:>3} -> {:<3} {:>6.1}%  ({:.0} GB/s)",
+            link.from,
+            link.to,
+            u * 100.0,
+            link.capacity
+        );
+    }
+    if overlap || hop_latency != 0.0 {
+        println!(
+            "({} not comparable to the analytical LS model)",
+            if overlap { "overlap mode:" } else { "nonzero hop latency:" }
+        );
+    } else {
+        // Grade the run we already have (no second simulation): the
+        // default config above IS conformance mode.
+        let tol =
+            mcmcomm::netsim::conformance::scheme_tolerance(&plan.scheduler);
+        let ratio = sim.makespan_ns / report.latency_ns();
+        let pass = tol.contains(ratio);
+        println!(
+            "conformance        : ratio {:.3} in band [{:.2}, {:.2}] -> {}",
+            ratio,
+            tol.lo,
+            tol.hi,
+            if pass { "ok" } else { "FAIL" }
+        );
+        ensure!(
+            pass,
+            "simulated/analytical ratio {ratio:.3} outside tolerance"
+        );
+    }
+    Ok(())
+}
+
 fn cmd_netsim(mut args: Args) -> Result<()> {
     let grid = args.get_usize("grid", 4).map_err(Error::msg)?;
     let bw_nop = args.get_f64("bw-nop", 60.0).map_err(Error::msg)?;
@@ -318,6 +432,13 @@ fn cmd_run_e2e(mut args: Args) -> Result<()> {
         report.modeled.energy_pj / 1e9,
         report.modeled.edp()
     );
+    if let Some(sim_ns) = report.simulated_ns {
+        println!(
+            "simulated MCM latency {:.3} ms (DES cross-check, ratio {:.3})",
+            sim_ns / 1e6,
+            sim_ns / report.modeled.latency_ns
+        );
+    }
     ensure!(report.max_abs_err < 1e-3, "numeric mismatch!");
     println!("e2e OK");
     Ok(())
@@ -402,6 +523,7 @@ fn main() {
         "figures" => cmd_figures(args),
         "optimize" => cmd_optimize(args),
         "platforms" => cmd_platforms(args),
+        "simulate" => cmd_simulate(args),
         "netsim" => cmd_netsim(args),
         "run-e2e" => cmd_run_e2e(args),
         "serve" => cmd_serve(args),

@@ -1,0 +1,297 @@
+//! Analytical-vs-simulated conformance: the comparison layer between
+//! `cost::evaluate` (the paper's closed-form end-to-end framework) and
+//! the plan-level discrete-event simulator ([`super::sim`]).
+//!
+//! A [`Conformance`] record compares one scheduled plan's analytical
+//! latency against the simulated makespan of the *same* allocation
+//! under the *same* effective flags, in the simulator's conformance
+//! (layer-sequential) mode. The pass criterion is a per-scheme ratio
+//! band ([`scheme_tolerance`]): `lo <= simulated / analytical <= hi`.
+//!
+//! # Why bands, and why these widths (see DESIGN.md §Validation)
+//!
+//! The two models share the compute model, the off-chip serialization
+//! assumption and the §5.2 redistribution step times — those terms
+//! agree exactly on a congestion-free package. They deliberately differ
+//! on on-chip congestion: the analytical model folds waiting slots into
+//! shared-hop counts (eqs. 11–12), while the simulator runs unicast
+//! flows under max-min fair contention. That disagreement is the whole
+//! point — the band is where the hop-folding approximation must live.
+//! Schemes that run with the §5 co-optimizations enabled (greedy, GA,
+//! MIQP) exercise redistribution and fusion on skewed partitions, so
+//! their band is slightly wider than the unoptimized baselines.
+//!
+//! Any PR that *loosens* a band must say so in CHANGES.md (the
+//! tolerance table is a ratchet; see DESIGN.md).
+
+use std::path::Path;
+
+use crate::engine::{Plan, Scenario};
+use crate::util::error::{Context, Result};
+use crate::util::math::geomean;
+
+use super::sim::{simulate_plan, SimConfig, SimReport};
+
+/// Allowed `simulated / analytical` latency ratio band.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tolerance {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Tolerance {
+    pub fn contains(&self, ratio: f64) -> bool {
+        ratio.is_finite() && ratio >= self.lo && ratio <= self.hi
+    }
+}
+
+/// The documented per-scheme tolerance table (DESIGN.md §Validation).
+/// Unknown scheduler keys get the widest (optimized-scheme) band.
+///
+/// These are the *first-calibration* bands: the eq. 11–12 hop folding
+/// sits between what unicast fluid contention (the simulator's choice)
+/// and a perfect multicast tree would produce, so per-stage ratios span
+/// roughly 0.5–2.4x across the preset matrix before the exact terms
+/// (compute, off-chip serialization, redistribution) dilute them. The
+/// calibration table artifact records the measured ratios per run;
+/// tightening the bands toward those is welcome, loosening them
+/// requires a CHANGES.md entry.
+pub fn scheme_tolerance(scheduler: &str) -> Tolerance {
+    match scheduler {
+        // No co-optimizations (Table 3 forces OptFlags::NONE): uniform
+        // or near-uniform partitions, no redistribution, no fusion —
+        // only the hop-folding vs unicast-contention gap remains.
+        "baseline" | "simba" => Tolerance { lo: 0.40, hi: 2.8 },
+        // Optimized schemes additionally exercise diagonal routing,
+        // redistribution and async fusion on skewed partitions.
+        _ => Tolerance { lo: 0.33, hi: 3.0 },
+    }
+}
+
+/// One (scenario × plan) conformance measurement.
+#[derive(Debug, Clone)]
+pub struct Conformance {
+    pub model: String,
+    pub system: String,
+    pub scheduler: String,
+    /// `cost::evaluate` end-to-end latency of the plan.
+    pub analytical_ns: f64,
+    /// Discrete-event makespan of the same plan (conformance mode).
+    pub simulated_ns: f64,
+    /// `simulated_ns / analytical_ns`.
+    pub ratio: f64,
+    pub tolerance: Tolerance,
+}
+
+impl Conformance {
+    pub fn pass(&self) -> bool {
+        self.tolerance.contains(self.ratio)
+    }
+
+    /// One formatted table row (markdown).
+    fn row(&self) -> String {
+        format!(
+            "| {} | {} | {} | {:.4} | {:.4} | {:.3} | [{:.2}, {:.2}] | {} |",
+            self.model,
+            self.system,
+            self.scheduler,
+            self.analytical_ns / 1e6,
+            self.simulated_ns / 1e6,
+            self.ratio,
+            self.tolerance.lo,
+            self.tolerance.hi,
+            if self.pass() { "ok" } else { "FAIL" }
+        )
+    }
+}
+
+/// Simulate a scheduled plan in conformance mode (the
+/// [`Scenario::simulate`] backend).
+pub fn simulate_scenario_plan(
+    scenario: &Scenario,
+    plan: &Plan,
+    cfg: &SimConfig,
+) -> Result<SimReport> {
+    simulate_plan(
+        scenario.platform(),
+        scenario.workload(),
+        &plan.alloc,
+        plan.flags,
+        cfg,
+    )
+    .with_context(|| {
+        format!(
+            "simulating plan of scheduler '{}' on {}",
+            plan.scheduler,
+            scenario.label()
+        )
+    })
+}
+
+/// Run the simulator against the plan's analytical score and grade the
+/// ratio against the scheduler's tolerance band.
+pub fn check_plan(scenario: &Scenario, plan: &Plan) -> Result<Conformance> {
+    check_plan_perturbed(scenario, plan, 1.0)
+}
+
+/// [`check_plan`] with the analytical latency multiplied by `scale`
+/// before grading — the suite's "does the oracle have teeth" hook: a
+/// large injected perturbation of the cost model must push every
+/// scenario outside its band.
+pub fn check_plan_perturbed(
+    scenario: &Scenario,
+    plan: &Plan,
+    scale: f64,
+) -> Result<Conformance> {
+    let analytical_ns =
+        scenario.report(plan).latency_ns() * scale;
+    let sim = simulate_scenario_plan(scenario, plan, &SimConfig::default())?;
+    let ratio = if analytical_ns > 0.0 {
+        sim.makespan_ns / analytical_ns
+    } else {
+        f64::INFINITY
+    };
+    Ok(Conformance {
+        model: scenario.workload().name.clone(),
+        system: scenario.label(),
+        scheduler: plan.scheduler.clone(),
+        analytical_ns,
+        simulated_ns: sim.makespan_ns,
+        ratio,
+        tolerance: scheme_tolerance(&plan.scheduler),
+    })
+}
+
+/// Render the calibration table artifact (markdown): one row per
+/// measurement plus a per-scheme ratio summary.
+pub fn calibration_table(rows: &[Conformance]) -> String {
+    let mut s = String::new();
+    s.push_str(
+        "# Conformance calibration: analytical vs simulated latency\n\n\
+         Generated by the conformance suite (`cargo test --release -q \
+         conformance`).\nRatio = simulated / analytical; the band is the \
+         per-scheme tolerance\n(DESIGN.md §Validation). Loosening a band \
+         must be called out in CHANGES.md.\n\n",
+    );
+    s.push_str(
+        "| model | system | scheduler | analytical (ms) | simulated (ms) \
+         | ratio | band | verdict |\n\
+         |---|---|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        s.push_str(&r.row());
+        s.push('\n');
+    }
+    // Per-scheme summary.
+    let mut keys: Vec<&str> =
+        rows.iter().map(|r| r.scheduler.as_str()).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    s.push_str("\n## Per-scheme ratio summary\n\n");
+    s.push_str(
+        "| scheduler | cells | min | geomean | max | band |\n\
+         |---|---|---|---|---|---|\n",
+    );
+    for key in keys {
+        let ratios: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.scheduler == key)
+            .map(|r| r.ratio)
+            .collect();
+        let min = ratios.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = ratios.iter().copied().fold(0.0f64, f64::max);
+        let tol = scheme_tolerance(key);
+        s.push_str(&format!(
+            "| {} | {} | {:.3} | {:.3} | {:.3} | [{:.2}, {:.2}] |\n",
+            key,
+            ratios.len(),
+            min,
+            geomean(&ratios),
+            max,
+            tol.lo,
+            tol.hi
+        ));
+    }
+    s
+}
+
+/// Write the calibration table to `path` (CI uploads it as a workflow
+/// artifact).
+pub fn write_calibration(rows: &[Conformance], path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, calibration_table(rows))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{schedulers, Engine};
+    use crate::workload::models::alexnet;
+
+    #[test]
+    fn tolerance_table_shape() {
+        let base = scheme_tolerance("baseline");
+        let ga = scheme_tolerance("ga");
+        assert!(base.lo > 0.0 && base.lo < 1.0 && base.hi > 1.0);
+        assert!(ga.lo <= base.lo && ga.hi >= base.hi);
+        // Unknown schedulers get the widest band.
+        let unk = scheme_tolerance("custom-solver");
+        assert_eq!(unk.lo, ga.lo);
+        assert_eq!(unk.hi, ga.hi);
+        assert!(base.contains(1.0));
+        assert!(!base.contains(f64::NAN));
+        assert!(!base.contains(100.0));
+    }
+
+    #[test]
+    fn headline_baseline_plan_conforms() {
+        let engine = Engine::new(Scenario::headline(alexnet(1)));
+        let plan =
+            engine.schedule_with(&schedulers::Baseline).unwrap().into_plan();
+        let c = check_plan(engine.scenario(), &plan).unwrap();
+        assert!(
+            c.pass(),
+            "baseline AlexNet ratio {} outside [{}, {}]",
+            c.ratio,
+            c.tolerance.lo,
+            c.tolerance.hi
+        );
+        assert!(c.analytical_ns > 0.0 && c.simulated_ns > 0.0);
+    }
+
+    #[test]
+    fn perturbation_breaks_the_band() {
+        let engine = Engine::new(Scenario::headline(alexnet(1)));
+        let plan =
+            engine.schedule_with(&schedulers::Baseline).unwrap().into_plan();
+        let hi = check_plan_perturbed(engine.scenario(), &plan, 100.0)
+            .unwrap();
+        assert!(!hi.pass(), "100x inflation passed: ratio {}", hi.ratio);
+        let lo = check_plan_perturbed(engine.scenario(), &plan, 0.01)
+            .unwrap();
+        assert!(!lo.pass(), "100x deflation passed: ratio {}", lo.ratio);
+    }
+
+    #[test]
+    fn calibration_table_formats() {
+        let rows = vec![Conformance {
+            model: "alexnet".into(),
+            system: "A-HBM-4x4".into(),
+            scheduler: "ga".into(),
+            analytical_ns: 2e6,
+            simulated_ns: 2.4e6,
+            ratio: 1.2,
+            tolerance: scheme_tolerance("ga"),
+        }];
+        let t = calibration_table(&rows);
+        assert!(t.contains("| alexnet | A-HBM-4x4 | ga |"), "{t}");
+        assert!(t.contains("Per-scheme ratio summary"));
+        assert!(t.contains("| ga | 1 |"));
+    }
+}

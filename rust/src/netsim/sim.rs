@@ -1,0 +1,1137 @@
+//! Plan-level discrete-event simulation (the validation oracle).
+//!
+//! [`simulate_plan`] takes the exact inputs the analytical evaluator
+//! scores — a [`Platform`], a [`Workload`], an [`Allocation`] and the
+//! effective [`OptFlags`] — lowers them to a dependency graph of
+//! per-chiplet compute events and max-min-fair fluid transfers over the
+//! platform's explicit [`LinkGraph`], and advances one event loop that
+//! overlaps compute with communication under per-link contention.
+//!
+//! # Lowering (conformance mode)
+//!
+//! Communication honors the paper's phase decomposition so the
+//! simulator independently *re-derives* what `cost::evaluate` computes
+//! in closed form, replacing the hop-count congestion folding of
+//! eqs. 9–12 with actual per-link max-min contention:
+//!
+//! * **Off-chip pull** (§4.3.2 step 1): the op's *unique* off-chip
+//!   bytes (weights `K×N`, plus activations `M×K` unless they arrive by
+//!   redistribution), apportioned over the memory attachments by the
+//!   demand of the chiplets each attachment serves, each share flowing
+//!   over that attachment's own memory link. For every preset this
+//!   serializes at the aggregate `bw_mem`, exactly the analytical
+//!   assumption.
+//! * **On-chip distribution** (step 2): one unicast flow per chiplet
+//!   from its serving attachment carrying its partition chunk. Where
+//!   the analytical model folds waiting slots into shared-hop counts,
+//!   the simulator lets the flows contend on real links.
+//! * **Redistribution** (§5.2): the three steps as real flows — row
+//!   reduction toward the collection column, a per-direction pipelined
+//!   broadcast wavefront (modeled as one flow to the farthest endpoint
+//!   per side, matching the wormhole "one block transfer" wall time),
+//!   and per-boundary cross-row moves. On a congestion-free package the
+//!   fluid step times equal the analytical `RedistCost` terms exactly.
+//! * **Writeback**: per-chiplet collection flows into the serving
+//!   attachment, then demand-apportioned off-chip store flows.
+//! * **Compute** (§4.3.1): one fixed-duration event per chiplet from
+//!   the same `comp_ns` the evaluator uses. With §5.3 async fusion a
+//!   chiplet's compute starts as soon as *its own* distribution flow
+//!   lands; otherwise computes wait for the whole distribution stage.
+//!
+//! Conformance mode keeps the analytical model's layer-sequential
+//! barrier between ops; [`SimMode::Overlap`] drops it and wires
+//! dataflow dependencies instead: an op's load stage waits only for
+//! its producers' writebacks (ops with no dataflow producers load at
+//! t=0), so independent branches and far-apart layers overlap under
+//! real link contention. This exposes cross-layer pipelining headroom
+//! the LS formulation leaves on the table — conservatively, since the
+//! weight share of a load rides the same gated stage as the
+//! activations rather than prefetching.
+//!
+//! The redistribution decisions are taken by the *same* adaptive
+//! strategy code as the evaluator ([`edge_decision`]), so the simulator
+//! executes exactly the plan the cost model priced.
+
+use crate::cost::compute::comp_ns;
+use crate::cost::energy::comp_energy_pj;
+use crate::cost::evaluator::edge_decision;
+use crate::cost::scratch::TermBufs;
+use crate::err;
+use crate::partition::Allocation;
+use crate::platform::Platform;
+use crate::topology::links::{LinkGraph, LinkId, NodeId};
+use crate::topology::Pos;
+use crate::util::error::Result;
+use crate::workload::{EdgeId, Workload};
+
+use super::maxmin_rates;
+use crate::cost::evaluator::OptFlags;
+
+/// What the event loop schedules: a fixed-duration compute event or a
+/// fluid byte transfer along a fixed route.
+#[derive(Debug, Clone)]
+pub(crate) enum Work {
+    Compute { dur_ns: f64 },
+    Transfer { route: Vec<LinkId>, bytes: f64 },
+}
+
+/// One node of the lowered dependency graph.
+#[derive(Debug, Clone)]
+pub(crate) struct Task {
+    pub(crate) work: Work,
+    /// Task ids that must complete before this one starts.
+    pub(crate) deps: Vec<usize>,
+}
+
+impl Task {
+    pub(crate) fn transfer(route: Vec<LinkId>, bytes: f64) -> Task {
+        Task { work: Work::Transfer { route, bytes }, deps: Vec::new() }
+    }
+}
+
+/// Raw event-loop output: per-task start/finish plus per-link bytes.
+#[derive(Debug, Clone)]
+pub(crate) struct RunOutcome {
+    pub(crate) start: Vec<f64>,
+    pub(crate) finish: Vec<f64>,
+    pub(crate) link_bytes: Vec<f64>,
+    pub(crate) makespan_ns: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Pending,
+    /// Transfer paying its serial head-flit (pipeline-fill) latency.
+    Latency,
+    /// Draining bytes (transfer) or burning cycles (compute).
+    Active,
+    Done,
+}
+
+/// Advance the task graph to completion. Degenerate tasks (zero bytes,
+/// empty route, zero duration) complete the instant their dependencies
+/// do. Transfers pay `(hops - 1) * hop_latency_ns` serially before
+/// draining at the max-min fair rate. Errors on dependency cycles and
+/// on zero-rate deadlocks (zero-capacity links) instead of panicking.
+pub(crate) fn run_tasks(
+    graph: &LinkGraph,
+    tasks: &[Task],
+    hop_latency_ns: f64,
+) -> Result<RunOutcome> {
+    let n = tasks.len();
+    let mut unmet: Vec<usize> = tasks.iter().map(|t| t.deps.len()).collect();
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, t) in tasks.iter().enumerate() {
+        for &d in &t.deps {
+            if d >= n {
+                return Err(err!(
+                    "task {i} depends on nonexistent task {d} (graph has \
+                     {n} tasks)"
+                ));
+            }
+            dependents[d].push(i);
+        }
+    }
+    let routes: Vec<&[LinkId]> = tasks
+        .iter()
+        .map(|t| match &t.work {
+            Work::Transfer { route, .. } => route.as_slice(),
+            Work::Compute { .. } => &[],
+        })
+        .collect();
+
+    let mut state = vec![State::Pending; n];
+    let mut remaining = vec![0.0f64; n];
+    let mut lat_left = vec![0.0f64; n];
+    let mut start = vec![0.0f64; n];
+    let mut finish = vec![0.0f64; n];
+    let mut link_bytes = vec![0.0f64; graph.links.len()];
+    let mut done = 0usize;
+    let mut now = 0.0f64;
+
+    let mut ready: Vec<usize> =
+        (0..n).filter(|&i| unmet[i] == 0).collect();
+    let mut completions: Vec<usize> = Vec::new();
+    // Reused across iterations (the maxmin internals still allocate
+    // per call — acceptable for an oracle path that is not the GA hot
+    // loop; see DESIGN.md §Performance architecture for the pattern).
+    let mut draining = vec![false; n];
+
+    loop {
+        // Activate ready tasks; degenerate ones complete instantly and
+        // may cascade further activations at the same timestamp.
+        while let Some(i) = ready.pop() {
+            start[i] = now;
+            let instant = match &tasks[i].work {
+                Work::Compute { dur_ns } => *dur_ns <= 0.0,
+                Work::Transfer { route, bytes } => {
+                    route.is_empty() || *bytes <= 0.0
+                }
+            };
+            if instant {
+                state[i] = State::Done;
+                finish[i] = now;
+                done += 1;
+                for &d in &dependents[i] {
+                    unmet[d] -= 1;
+                    if unmet[d] == 0 {
+                        ready.push(d);
+                    }
+                }
+            } else {
+                match &tasks[i].work {
+                    Work::Compute { dur_ns } => {
+                        remaining[i] = *dur_ns;
+                        state[i] = State::Active;
+                    }
+                    Work::Transfer { route, bytes } => {
+                        remaining[i] = *bytes;
+                        lat_left[i] = (route.len() - 1) as f64
+                            * hop_latency_ns;
+                        state[i] = if lat_left[i] > 0.0 {
+                            State::Latency
+                        } else {
+                            State::Active
+                        };
+                    }
+                }
+            }
+        }
+        if done == n {
+            break;
+        }
+        if !state
+            .iter()
+            .any(|s| matches!(s, State::Active | State::Latency))
+        {
+            return Err(err!(
+                "simulation stalled with {} tasks blocked on unmet \
+                 dependencies (cycle in the lowered task graph)",
+                n - done
+            ));
+        }
+
+        // Max-min fair rates over the transfers currently draining.
+        for i in 0..n {
+            draining[i] = state[i] == State::Active
+                && matches!(tasks[i].work, Work::Transfer { .. });
+        }
+        let rate = maxmin_rates(graph, &routes, &draining);
+
+        // Next event: a compute finishing, a fill latency elapsing, or
+        // a transfer draining its last byte.
+        let mut dt = f64::INFINITY;
+        for i in 0..n {
+            match state[i] {
+                State::Latency => dt = dt.min(lat_left[i]),
+                State::Active => match tasks[i].work {
+                    Work::Compute { .. } => dt = dt.min(remaining[i]),
+                    Work::Transfer { .. } => {
+                        if rate[i] > 0.0 {
+                            dt = dt.min(remaining[i] / rate[i]);
+                        }
+                    }
+                },
+                _ => {}
+            }
+        }
+        if !dt.is_finite() {
+            return Err(err!(
+                "simulation deadlock: active transfer with zero rate \
+                 (zero-capacity link on a route?)"
+            ));
+        }
+        now += dt;
+        for i in 0..n {
+            match state[i] {
+                State::Latency => {
+                    lat_left[i] -= dt;
+                    if lat_left[i] <= 1e-12 {
+                        lat_left[i] = 0.0;
+                        state[i] = State::Active;
+                    }
+                }
+                State::Active => match &tasks[i].work {
+                    Work::Compute { dur_ns } => {
+                        remaining[i] -= dt;
+                        if remaining[i] <= 1e-9 * dur_ns.max(1.0) {
+                            completions.push(i);
+                        }
+                    }
+                    Work::Transfer { route, bytes } => {
+                        if rate[i] > 0.0 {
+                            let moved = rate[i] * dt;
+                            remaining[i] -= moved;
+                            for &l in route {
+                                link_bytes[l] += moved;
+                            }
+                            if remaining[i] <= 1e-9 * bytes.max(1.0) {
+                                completions.push(i);
+                            }
+                        }
+                    }
+                },
+                _ => {}
+            }
+        }
+        for &i in &completions {
+            state[i] = State::Done;
+            remaining[i] = 0.0;
+            finish[i] = now;
+            done += 1;
+            for &d in &dependents[i] {
+                unmet[d] -= 1;
+                if unmet[d] == 0 {
+                    ready.push(d);
+                }
+            }
+        }
+        completions.clear();
+    }
+    Ok(RunOutcome { start, finish, link_bytes, makespan_ns: now })
+}
+
+// ---------------------------------------------------------------------
+// Plan lowering
+// ---------------------------------------------------------------------
+
+/// Inter-op dependency policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimMode {
+    /// Layer-sequential barrier between ops — the overlap assumption
+    /// the analytical model makes, and what the conformance suite pins
+    /// against.
+    #[default]
+    Conformance,
+    /// Dataflow dependencies only: an op's load stage waits for its
+    /// producers' writebacks (its compute, for redistributed edges);
+    /// ops with no dataflow producers load at t=0. Weights ride the
+    /// same gated load stage as the activations (no separate
+    /// prefetch), so the exposed cross-layer pipelining headroom is a
+    /// conservative bound. Not comparable to `cost::evaluate`.
+    Overlap,
+}
+
+/// Simulation knobs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimConfig {
+    pub mode: SimMode,
+    /// Serial head-flit latency per traversed hop beyond the first
+    /// (wormhole fill). The analytical model has no per-hop constant,
+    /// so conformance runs keep the 0.0 default.
+    pub hop_latency_ns: f64,
+}
+
+/// Which stage of an op's lifecycle a task belongs to (timeline
+/// attribution).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimPhase {
+    LoadOffchip,
+    LoadOnchip,
+    Redistribute,
+    Compute,
+    StoreOnchip,
+    StoreOffchip,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct TaskMeta {
+    op: usize,
+    phase: SimPhase,
+    edge: Option<EdgeId>,
+}
+
+/// A half-open simulated time window.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Span {
+    pub start_ns: f64,
+    pub end_ns: f64,
+}
+
+impl Span {
+    pub fn duration_ns(&self) -> f64 {
+        self.end_ns - self.start_ns
+    }
+}
+
+fn widen(slot: &mut Option<Span>, start: f64, end: f64) {
+    match slot {
+        Some(s) => {
+            s.start_ns = s.start_ns.min(start);
+            s.end_ns = s.end_ns.max(end);
+        }
+        None => *slot = Some(Span { start_ns: start, end_ns: end }),
+    }
+}
+
+/// Per-op timeline: when its input stage (redistribution + loads), its
+/// compute stage, and its writeback ran.
+#[derive(Debug, Clone)]
+pub struct OpSpan {
+    pub op: usize,
+    pub input: Span,
+    pub compute: Span,
+    /// `None` when the writeback was skipped (redistributed out-edge).
+    pub output: Option<Span>,
+}
+
+impl OpSpan {
+    /// The op's whole simulated window.
+    pub fn total(&self) -> Span {
+        Span {
+            start_ns: self.input.start_ns.min(self.compute.start_ns),
+            end_ns: self
+                .output
+                .map_or(self.compute.end_ns, |o| o.end_ns)
+                .max(self.compute.end_ns),
+        }
+    }
+}
+
+/// Simulated energy, from the Table-2 constants applied to simulated
+/// traffic: every byte crossing a NoP link is charged per link
+/// traversal (the §4.4.3 per-hop coefficient), every byte through a
+/// memory link at the off-chip energy, and compute/SRAM energy via the
+/// same §4.4.1 model the evaluator uses.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimEnergy {
+    pub offchip_pj: f64,
+    pub nop_pj: f64,
+    pub compute_pj: f64,
+}
+
+impl SimEnergy {
+    pub fn total_pj(&self) -> f64 {
+        self.offchip_pj + self.nop_pj + self.compute_pj
+    }
+}
+
+/// Everything the discrete-event run produced.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// End-to-end simulated latency.
+    pub makespan_ns: f64,
+    /// Per-op stage windows, op-indexed.
+    pub op_spans: Vec<OpSpan>,
+    /// Per dataflow edge: the redistribution window, when the adaptive
+    /// strategy adopted it (mirrors `OpCost::redistributed_in`).
+    pub edge_spans: Vec<Option<Span>>,
+    /// Total bytes carried per link of [`SimReport::graph`].
+    pub link_bytes: Vec<f64>,
+    /// The link graph the run executed on (chiplet mesh + memory nodes).
+    pub graph: LinkGraph,
+    pub energy: SimEnergy,
+}
+
+impl SimReport {
+    /// Mean utilization per link over the whole run.
+    pub fn utilization(&self) -> Vec<f64> {
+        self.link_bytes
+            .iter()
+            .zip(&self.graph.links)
+            .map(|(b, l)| {
+                if self.makespan_ns > 0.0 {
+                    b / (l.capacity * self.makespan_ns)
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// The `k` busiest links, by mean utilization, descending (ties
+    /// broken by link id for determinism).
+    pub fn top_links(&self, k: usize) -> Vec<(LinkId, f64)> {
+        let mut pairs: Vec<(LinkId, f64)> =
+            self.utilization().into_iter().enumerate().collect();
+        pairs.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        pairs.truncate(k);
+        pairs
+    }
+
+    /// Number of dataflow edges executed as on-package redistribution.
+    pub fn redistributed_edges(&self) -> usize {
+        self.edge_spans.iter().flatten().count()
+    }
+
+    /// Deterministic text summary (the golden-snapshot payload):
+    /// makespan, energy split, redistributed-edge count and the top-5
+    /// link utilizations.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("makespan_ns {:.9e}\n", self.makespan_ns));
+        s.push_str(&format!(
+            "energy_pj total {:.9e} offchip {:.9e} nop {:.9e} compute \
+             {:.9e}\n",
+            self.energy.total_pj(),
+            self.energy.offchip_pj,
+            self.energy.nop_pj,
+            self.energy.compute_pj
+        ));
+        s.push_str(&format!(
+            "redistributed_edges {}\n",
+            self.redistributed_edges()
+        ));
+        for (l, u) in self.top_links(5) {
+            let link = &self.graph.links[l];
+            s.push_str(&format!(
+                "link {} -> {} util {:.9}\n",
+                link.from, link.to, u
+            ));
+        }
+        s
+    }
+}
+
+fn push(
+    tasks: &mut Vec<Task>,
+    meta: &mut Vec<TaskMeta>,
+    work: Work,
+    deps: Vec<usize>,
+    m: TaskMeta,
+) -> usize {
+    let id = tasks.len();
+    tasks.push(Task { work, deps });
+    meta.push(m);
+    id
+}
+
+/// Lower a plan to the event graph and run it to completion (see the
+/// module docs for the lowering). `flags` must be the *effective* flags
+/// the plan was scored under (`Plan::flags`), so the simulator adopts
+/// exactly the redistribution decisions the evaluator priced.
+pub fn simulate_plan(
+    plat: &Platform,
+    wl: &Workload,
+    alloc: &Allocation,
+    flags: OptFlags,
+    cfg: &SimConfig,
+) -> Result<SimReport> {
+    if alloc.parts.len() != wl.ops.len()
+        || alloc.collect_cols.len() != wl.edges.len()
+    {
+        return Err(err!(
+            "allocation arity mismatch: {} partitions / {} collect cols \
+             for {} ops / {} edges",
+            alloc.parts.len(),
+            alloc.collect_cols.len(),
+            wl.ops.len(),
+            wl.edges.len()
+        ));
+    }
+    let graph = plat.link_graph(flags.diagonal);
+    let n_ops = wl.ops.len();
+    let ne = wl.edges.len();
+    let n_chiplets = plat.num_chiplets();
+    let atts = &plat.spec().attachments;
+
+    // The same §6.1 adaptive strategy the evaluator commits to, edge by
+    // edge.
+    let (mut in_edge, mut out_edge) = (Vec::new(), Vec::new());
+    wl.sole_edges_into(&mut in_edge, &mut out_edge);
+    let mut bufs = TermBufs::default();
+    let mut redist_edge = vec![false; ne];
+    if flags.redistribution {
+        for (e, edge) in wl.edges.iter().enumerate() {
+            if !wl.edge_redistributable_with(e, &in_edge, &out_edge) {
+                continue;
+            }
+            let adopted = edge_decision(
+                plat,
+                &wl.ops[edge.src],
+                &wl.ops[edge.dst],
+                &alloc.parts[edge.src],
+                &alloc.parts[edge.dst],
+                alloc.collect_cols[e],
+                flags.diagonal,
+                &mut bufs,
+            );
+            redist_edge[e] = adopted.is_some();
+        }
+    }
+
+    // Serving attachment index per chiplet (row-major, matching
+    // chiplet node ids); memory nodes follow the chiplets in
+    // attachment declaration order.
+    let serving: Vec<usize> = plat
+        .positions()
+        .map(|p| {
+            let g = plat.nearest_global(p);
+            atts.iter()
+                .position(|a| a.pos == g)
+                .expect("nearest_global returns an attachment position")
+        })
+        .collect();
+    let att_node = |a: usize| -> NodeId { n_chiplets + a };
+
+    let mut tasks: Vec<Task> = Vec::new();
+    let mut meta: Vec<TaskMeta> = Vec::new();
+    let mut prev_done: Vec<usize> = Vec::new();
+    let mut compute_ids: Vec<Vec<usize>> = Vec::with_capacity(n_ops);
+    let mut op_done_ids: Vec<Vec<usize>> = Vec::with_capacity(n_ops);
+
+    for (i, op) in wl.ops.iter().enumerate() {
+        let part = &alloc.parts[i];
+        let acts_from_redist =
+            in_edge[i].is_some_and(|e| redist_edge[e]);
+        let skip_store = out_edge[i].is_some_and(|e| redist_edge[e]);
+        let load_acts = !acts_from_redist;
+        let barrier: Vec<usize> = match cfg.mode {
+            SimMode::Conformance => prev_done.clone(),
+            SimMode::Overlap => Vec::new(),
+        };
+
+        // ---- incoming redistribution: §5.2 steps 1-3 as real flows.
+        let mut redist_last: Vec<usize> = Vec::new();
+        if acts_from_redist {
+            let e = in_edge[i].expect("redistributed op has an edge");
+            let edge = wl.edges[e];
+            let p_op = &wl.ops[edge.src];
+            let p_part = &alloc.parts[edge.src];
+            let c_star = alloc.collect_cols[e];
+            let mut deps0: Vec<usize> = barrier.clone();
+            deps0.extend(compute_ids[edge.src].iter().copied());
+            let rmeta =
+                TaskMeta { op: i, phase: SimPhase::Redistribute, edge: Some(e) };
+
+            // Step 1: row reduction toward the collection column.
+            let mut step1: Vec<usize> = Vec::new();
+            for x in 0..plat.xdim {
+                for y in 0..plat.ydim {
+                    if y == c_star {
+                        continue;
+                    }
+                    let bytes = plat.bytes(p_part.px[x] * p_part.py[y]);
+                    if bytes <= 0.0 {
+                        continue;
+                    }
+                    let route = graph.route(
+                        graph.chiplet_id(Pos::new(x, y)),
+                        graph.chiplet_id(Pos::new(x, c_star)),
+                    )?;
+                    step1.push(push(
+                        &mut tasks,
+                        &mut meta,
+                        Work::Transfer { route, bytes },
+                        deps0.clone(),
+                        rmeta,
+                    ));
+                }
+            }
+            // Step 2: wormhole row broadcast — one wavefront per
+            // direction, one block transfer of Px[x] x N bytes.
+            let s2_deps =
+                if step1.is_empty() { deps0.clone() } else { step1.clone() };
+            let mut step2: Vec<usize> = Vec::new();
+            for x in 0..plat.xdim {
+                let row_bytes = plat.bytes(p_part.px[x] * p_op.n);
+                if row_bytes <= 0.0 {
+                    continue;
+                }
+                let src = graph.chiplet_id(Pos::new(x, c_star));
+                for far in [0usize, plat.ydim - 1] {
+                    if far == c_star {
+                        continue;
+                    }
+                    let route =
+                        graph.route(src, graph.chiplet_id(Pos::new(x, far)))?;
+                    step2.push(push(
+                        &mut tasks,
+                        &mut meta,
+                        Work::Transfer { route, bytes: row_bytes },
+                        s2_deps.clone(),
+                        rmeta,
+                    ));
+                }
+            }
+            // Step 3: per-boundary cross-row moves, bytes from the
+            // shared `redistribution::step3_boundary_bytes` helper (one
+            // source of truth with the closed form). Direction does not
+            // affect fluid timing — each boundary's duplex vertical
+            // link pair is dedicated — so flows go row b -> b+1.
+            let s3_deps =
+                if step2.is_empty() { s2_deps } else { step2.clone() };
+            let boundary_bytes = crate::redistribution::step3_boundary_bytes(
+                plat, p_op, p_part, part,
+            );
+            let mut step3: Vec<usize> = Vec::new();
+            for (b, &bytes) in boundary_bytes.iter().enumerate() {
+                if bytes <= 0.0 {
+                    continue;
+                }
+                let route = graph.route(
+                    graph.chiplet_id(Pos::new(b, c_star)),
+                    graph.chiplet_id(Pos::new(b + 1, c_star)),
+                )?;
+                step3.push(push(
+                    &mut tasks,
+                    &mut meta,
+                    Work::Transfer { route, bytes },
+                    s3_deps.clone(),
+                    rmeta,
+                ));
+            }
+            redist_last = if step3.is_empty() { s3_deps } else { step3 };
+        }
+
+        // ---- load: demand-apportioned off-chip pull, then unicast
+        // on-chip distribution.
+        let load_deps: Vec<usize> = if acts_from_redist {
+            redist_last
+        } else {
+            match cfg.mode {
+                SimMode::Conformance => barrier.clone(),
+                SimMode::Overlap => {
+                    // Activations come out of memory: wait for every
+                    // producer's writeback (its compute, if the
+                    // producer skipped its store).
+                    let mut d = Vec::new();
+                    for edge in wl.edges.iter().filter(|e| e.dst == i) {
+                        d.extend(op_done_ids[edge.src].iter().copied());
+                    }
+                    d
+                }
+            }
+        };
+        let mut off_unique = plat.bytes(op.k * op.n);
+        if load_acts {
+            off_unique += plat.bytes(op.m * op.k);
+        }
+        let mut demand = vec![0.0f64; n_chiplets];
+        for (idx, p) in plat.positions().enumerate() {
+            let Pos { row: x, col: y } = p;
+            let mut d = plat.bytes(op.k * part.py[y]);
+            if load_acts {
+                d += plat.bytes(part.px[x] * op.k);
+            }
+            demand[idx] = d;
+        }
+        let total_demand: f64 = demand.iter().sum();
+        let mut att_demand = vec![0.0f64; atts.len()];
+        for idx in 0..n_chiplets {
+            att_demand[serving[idx]] += demand[idx];
+        }
+        let mut off_tasks: Vec<usize> = Vec::new();
+        for (a, att) in atts.iter().enumerate() {
+            let share = if total_demand > 0.0 {
+                att_demand[a] / total_demand
+            } else {
+                0.0
+            };
+            let bytes = off_unique * share;
+            if bytes <= 0.0 {
+                continue;
+            }
+            let route =
+                graph.route(att_node(a), graph.chiplet_id(att.pos))?;
+            off_tasks.push(push(
+                &mut tasks,
+                &mut meta,
+                Work::Transfer { route, bytes },
+                load_deps.clone(),
+                TaskMeta { op: i, phase: SimPhase::LoadOffchip, edge: None },
+            ));
+        }
+        let dist_deps =
+            if off_tasks.is_empty() { load_deps } else { off_tasks };
+        let mut dist_tasks: Vec<usize> = Vec::with_capacity(n_chiplets);
+        for (idx, p) in plat.positions().enumerate() {
+            let route = graph.route(
+                graph.chiplet_id(plat.nearest_global(p)),
+                graph.chiplet_id(p),
+            )?;
+            dist_tasks.push(push(
+                &mut tasks,
+                &mut meta,
+                Work::Transfer { route, bytes: demand[idx] },
+                dist_deps.clone(),
+                TaskMeta { op: i, phase: SimPhase::LoadOnchip, edge: None },
+            ));
+        }
+
+        // ---- compute.
+        let mut comp_tasks: Vec<usize> = Vec::with_capacity(n_chiplets);
+        for (idx, p) in plat.positions().enumerate() {
+            let Pos { row: x, col: y } = p;
+            let dur = comp_ns(plat, op, part.px[x], part.py[y]);
+            let deps = if flags.async_fusion {
+                vec![dist_tasks[idx]]
+            } else {
+                dist_tasks.clone()
+            };
+            comp_tasks.push(push(
+                &mut tasks,
+                &mut meta,
+                Work::Compute { dur_ns: dur },
+                deps,
+                TaskMeta { op: i, phase: SimPhase::Compute, edge: None },
+            ));
+        }
+
+        // ---- writeback (skipped when a redistributed out-edge
+        // replaces the store).
+        let op_done: Vec<usize> = if skip_store {
+            comp_tasks.clone()
+        } else {
+            let out_total = plat.bytes(op.m * op.n);
+            let mut att_out = vec![0.0f64; atts.len()];
+            let mut collect_tasks: Vec<usize> =
+                Vec::with_capacity(n_chiplets);
+            for (idx, p) in plat.positions().enumerate() {
+                let Pos { row: x, col: y } = p;
+                let bytes = plat.bytes(part.px[x] * part.py[y]);
+                att_out[serving[idx]] += bytes;
+                let route = graph.route(
+                    graph.chiplet_id(p),
+                    graph.chiplet_id(plat.nearest_global(p)),
+                )?;
+                collect_tasks.push(push(
+                    &mut tasks,
+                    &mut meta,
+                    Work::Transfer { route, bytes },
+                    comp_tasks.clone(),
+                    TaskMeta {
+                        op: i,
+                        phase: SimPhase::StoreOnchip,
+                        edge: None,
+                    },
+                ));
+            }
+            let total_out: f64 = att_out.iter().sum();
+            let mut store_off: Vec<usize> = Vec::new();
+            for (a, att) in atts.iter().enumerate() {
+                let share =
+                    if total_out > 0.0 { att_out[a] / total_out } else { 0.0 };
+                let bytes = out_total * share;
+                if bytes <= 0.0 {
+                    continue;
+                }
+                let route =
+                    graph.route(graph.chiplet_id(att.pos), att_node(a))?;
+                store_off.push(push(
+                    &mut tasks,
+                    &mut meta,
+                    Work::Transfer { route, bytes },
+                    collect_tasks.clone(),
+                    TaskMeta {
+                        op: i,
+                        phase: SimPhase::StoreOffchip,
+                        edge: None,
+                    },
+                ));
+            }
+            if store_off.is_empty() { collect_tasks } else { store_off }
+        };
+        prev_done = op_done.clone();
+        op_done_ids.push(op_done);
+        compute_ids.push(comp_tasks);
+    }
+
+    let run = run_tasks(&graph, &tasks, cfg.hop_latency_ns)?;
+
+    // ---- spans, per op and per redistributed edge.
+    let mut input: Vec<Option<Span>> = vec![None; n_ops];
+    let mut compute: Vec<Option<Span>> = vec![None; n_ops];
+    let mut output: Vec<Option<Span>> = vec![None; n_ops];
+    let mut edge_spans: Vec<Option<Span>> = vec![None; ne];
+    for (t, m) in meta.iter().enumerate() {
+        let (s, f) = (run.start[t], run.finish[t]);
+        match m.phase {
+            SimPhase::LoadOffchip
+            | SimPhase::LoadOnchip
+            | SimPhase::Redistribute => widen(&mut input[m.op], s, f),
+            SimPhase::Compute => widen(&mut compute[m.op], s, f),
+            SimPhase::StoreOnchip | SimPhase::StoreOffchip => {
+                widen(&mut output[m.op], s, f)
+            }
+        }
+        if let Some(e) = m.edge {
+            widen(&mut edge_spans[e], s, f);
+        }
+    }
+    let op_spans: Vec<OpSpan> = (0..n_ops)
+        .map(|i| OpSpan {
+            op: i,
+            input: input[i].unwrap_or_default(),
+            compute: compute[i].unwrap_or_default(),
+            output: output[i],
+        })
+        .collect();
+
+    // ---- energy from simulated traffic + the shared compute model.
+    let mut energy = SimEnergy::default();
+    for (l, link) in graph.links.iter().enumerate() {
+        let bits = run.link_bytes[l] * 8.0;
+        if link.from >= n_chiplets || link.to >= n_chiplets {
+            energy.offchip_pj += bits * plat.mem_pj_bit;
+        } else {
+            energy.nop_pj += bits * plat.energy.nop_pj_bit_hop;
+        }
+    }
+    energy.compute_pj = wl
+        .ops
+        .iter()
+        .zip(&alloc.parts)
+        .map(|(op, part)| comp_energy_pj(plat, op, part))
+        .sum();
+
+    Ok(SimReport {
+        makespan_ns: run.makespan_ns,
+        op_spans,
+        edge_spans,
+        link_bytes: run.link_bytes,
+        graph,
+        energy,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MemKind, SystemType};
+    use crate::cost::evaluator::evaluate;
+    use crate::partition::uniform_allocation;
+    use crate::workload::models::{alexnet, evaluation_suite};
+    use crate::workload::{GemmOp, Workload};
+
+    fn sim(
+        plat: &Platform,
+        wl: &Workload,
+        flags: OptFlags,
+        mode: SimMode,
+    ) -> SimReport {
+        let alloc = uniform_allocation(plat, wl);
+        simulate_plan(
+            plat,
+            wl,
+            &alloc,
+            flags,
+            &SimConfig { mode, hop_latency_ns: 0.0 },
+        )
+        .expect("plan simulates")
+    }
+
+    #[test]
+    fn type_c_single_op_matches_analytical_exactly() {
+        // 3D-stacked: no on-chip stages in either model, so simulated
+        // and analytical decompositions coincide term by term.
+        let plat = Platform::preset(SystemType::C, MemKind::Hbm, 4);
+        let wl =
+            Workload::new("w", vec![GemmOp::dense("a", 512, 256, 512)]);
+        let alloc = uniform_allocation(&plat, &wl);
+        let analytical =
+            evaluate(&plat, &wl, &alloc, OptFlags::NONE).latency_ns;
+        let r = sim(&plat, &wl, OptFlags::NONE, SimMode::Conformance);
+        let rel = (r.makespan_ns - analytical).abs() / analytical;
+        assert!(
+            rel < 1e-6,
+            "sim {} vs analytical {analytical} (rel {rel})",
+            r.makespan_ns
+        );
+    }
+
+    #[test]
+    fn redistribution_window_matches_analytical_steps() {
+        // On a congestion-free package the fluid step times equal the
+        // closed-form RedistCost terms, so the simulated exchange
+        // window must equal step1+step2+step3.
+        let plat = Platform::preset(SystemType::A, MemKind::Hbm, 4);
+        let wl = Workload::new(
+            "w",
+            vec![
+                GemmOp::dense("a", 512, 128, 512),
+                GemmOp::dense("b", 512, 512, 256).chained(),
+            ],
+        );
+        let alloc = uniform_allocation(&plat, &wl);
+        let flags = OptFlags {
+            redistribution: true,
+            diagonal: false,
+            async_fusion: false,
+        };
+        let analytical = evaluate(&plat, &wl, &alloc, flags);
+        assert!(
+            analytical.per_op[1].redistributed_in,
+            "test premise: redistribution adopted"
+        );
+        let expected = crate::redistribution::redistribute_edge(
+            &plat, &wl, &alloc, 0,
+        )
+        .total_ns();
+        let cfg = SimConfig::default();
+        let r = simulate_plan(&plat, &wl, &alloc, flags, &cfg).unwrap();
+        let span = r.edge_spans[0].expect("edge 0 redistributed in sim");
+        let rel = (span.duration_ns() - expected).abs() / expected;
+        assert!(
+            rel < 1e-6,
+            "sim window {} vs analytical {expected} (rel {rel})",
+            span.duration_ns()
+        );
+        assert_eq!(r.redistributed_edges(), 1);
+
+        // Skewed consumer partition: step 3 is nonzero (cross-row
+        // moves) and the fluid window must still equal all three
+        // closed-form steps.
+        let mut alloc2 = alloc.clone();
+        alloc2.parts[1] = crate::partition::Partition {
+            px: vec![200, 120, 120, 72],
+            py: vec![64; 4],
+        };
+        let analytical2 = evaluate(&plat, &wl, &alloc2, flags);
+        assert!(
+            analytical2.per_op[1].redistributed_in,
+            "test premise: still adopted under the skewed consumer"
+        );
+        let r2c = crate::redistribution::redistribute_edge(
+            &plat, &wl, &alloc2, 0,
+        );
+        assert!(r2c.step3_ns > 0.0, "skew must exercise step 3");
+        let r2 = simulate_plan(&plat, &wl, &alloc2, flags, &cfg).unwrap();
+        let span2 = r2.edge_spans[0].expect("still redistributed");
+        let rel2 = (span2.duration_ns() - r2c.total_ns()).abs()
+            / r2c.total_ns();
+        assert!(
+            rel2 < 1e-6,
+            "skewed sim window {} vs analytical {} (rel {rel2})",
+            span2.duration_ns(),
+            r2c.total_ns()
+        );
+    }
+
+    #[test]
+    fn sim_redistribution_decisions_match_evaluator() {
+        // The simulator reuses the evaluator's adaptive strategy, so
+        // per-edge adoption must agree exactly on every zoo model.
+        let plat = Platform::headline();
+        for wl in evaluation_suite(1) {
+            let alloc = uniform_allocation(&plat, &wl);
+            let analytical = evaluate(&plat, &wl, &alloc, OptFlags::ALL);
+            let n_model = analytical
+                .per_op
+                .iter()
+                .filter(|o| o.redistributed_in)
+                .count();
+            let r = sim(&plat, &wl, OptFlags::ALL, SimMode::Conformance);
+            assert_eq!(
+                r.redistributed_edges(),
+                n_model,
+                "{}: sim and evaluator disagree on redistribution",
+                wl.name
+            );
+        }
+    }
+
+    #[test]
+    fn async_fusion_never_slower_in_sim() {
+        let plat = Platform::headline();
+        let wl =
+            Workload::new("w", vec![GemmOp::dense("a", 4096, 512, 4096)]);
+        let sync = sim(
+            &plat,
+            &wl,
+            OptFlags { async_fusion: false, ..OptFlags::NONE },
+            SimMode::Conformance,
+        );
+        let fused = sim(
+            &plat,
+            &wl,
+            OptFlags { async_fusion: true, ..OptFlags::NONE },
+            SimMode::Conformance,
+        );
+        assert!(
+            fused.makespan_ns <= sync.makespan_ns + 1e-9,
+            "fused {} > sync {}",
+            fused.makespan_ns,
+            sync.makespan_ns
+        );
+    }
+
+    #[test]
+    fn zoo_simulates_finite_on_presets() {
+        for ty in SystemType::ALL {
+            let plat = Platform::preset(ty, MemKind::Hbm, 4);
+            for wl in evaluation_suite(1) {
+                let r =
+                    sim(&plat, &wl, OptFlags::ALL, SimMode::Conformance);
+                assert!(
+                    r.makespan_ns.is_finite() && r.makespan_ns > 0.0,
+                    "{}/{:?}",
+                    wl.name,
+                    ty
+                );
+                assert!(r.energy.total_pj() > 0.0);
+                for u in r.utilization() {
+                    assert!((0.0..=1.0 + 1e-9).contains(&u));
+                }
+                assert_eq!(r.op_spans.len(), wl.ops.len());
+                // Stage windows are ordered per op.
+                for s in &r.op_spans {
+                    assert!(
+                        s.compute.end_ns >= s.input.start_ns - 1e-9
+                    );
+                    if let Some(out) = s.output {
+                        assert!(out.end_ns >= s.compute.start_ns - 1e-9);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_mode_is_sane_and_no_slower_than_ls_within_margin() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let conf = sim(&plat, &wl, OptFlags::ALL, SimMode::Conformance);
+        let over = sim(&plat, &wl, OptFlags::ALL, SimMode::Overlap);
+        assert!(over.makespan_ns.is_finite() && over.makespan_ns > 0.0);
+        // Fewer dependencies, same work: fluid-schedule anomalies are
+        // possible in principle but must stay small.
+        assert!(
+            over.makespan_ns <= conf.makespan_ns * 1.5,
+            "overlap {} vs conformance {}",
+            over.makespan_ns,
+            conf.makespan_ns
+        );
+    }
+
+    #[test]
+    fn hop_latency_config_slows_conformance_run() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let alloc = uniform_allocation(&plat, &wl);
+        let base = simulate_plan(
+            &plat,
+            &wl,
+            &alloc,
+            OptFlags::NONE,
+            &SimConfig::default(),
+        )
+        .unwrap();
+        let lat = simulate_plan(
+            &plat,
+            &wl,
+            &alloc,
+            OptFlags::NONE,
+            &SimConfig { mode: SimMode::Conformance, hop_latency_ns: 50.0 },
+        )
+        .unwrap();
+        assert!(lat.makespan_ns > base.makespan_ns);
+    }
+
+    #[test]
+    fn arity_mismatch_is_a_structured_error() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let mut alloc = uniform_allocation(&plat, &wl);
+        alloc.parts.pop();
+        let err = simulate_plan(
+            &plat,
+            &wl,
+            &alloc,
+            OptFlags::NONE,
+            &SimConfig::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("arity"), "{err}");
+    }
+}

@@ -86,31 +86,11 @@ pub fn redistribute(
     }
 
     // ---- Step 3: column redistribution to the next partition's Px'.
-    // The consumer reads M' x K' activations whose rows map onto the
-    // producer's M x N output; scale row width to the consumed layout.
-    let next_m: usize = next_part.px.iter().sum();
-    let next_k = {
-        // Width of one consumed row in elements: K' of the consumer is
-        // derived from this output (a dataflow edge), expressed via the
-        // consumer partition total (see
-        // `workload::Workload::edge_redistributable`). For im2col
-        // chains K' may exceed N; the moved data is the producer's
-        // rows, so the width is N.
-        op.n
-    };
-    let xdim = part.px.len();
-    // Cumulative mismatch across each row boundary, mapped through the
-    // row-count rescale when M' != M.
+    // Per-boundary bytes come from the shared helper (the
+    // discrete-event simulator lowers the same numbers to per-boundary
+    // flows, so the two models cannot drift apart).
     let mut step3_worst_bytes: f64 = 0.0;
-    let m: usize = part.px.iter().sum();
-    let scale = m as f64 / next_m.max(1) as f64;
-    let mut cum_a = 0.0f64;
-    let mut cum_b = 0.0f64;
-    for b in 0..xdim.saturating_sub(1) {
-        cum_a += part.px[b] as f64;
-        cum_b += next_part.px[b] as f64 * scale;
-        let rows_moved = (cum_a - cum_b).abs();
-        let bytes = rows_moved * plat.bytes(next_k);
+    for &bytes in &step3_boundary_bytes(plat, op, part, next_part) {
         step3_worst_bytes = step3_worst_bytes.max(bytes);
         energy_bits += bytes * 8.0;
     }
@@ -122,6 +102,40 @@ pub fn redistribute(
         step3_ns,
         energy_pj: energy_bits * e_nop_bit,
     }
+}
+
+/// Step-3 bytes crossing each grid-row boundary `b` (between rows `b`
+/// and `b+1`): the cumulative mismatch between the producer's `Px` and
+/// the consumer's `Px'`, mapped through the row-count rescale when
+/// `M' != M`. The moved data is the producer's output rows, so the row
+/// width is `N` (for im2col chains the consumer's `K'` may exceed `N`;
+/// see [`crate::workload::Workload::edge_redistributable`]).
+///
+/// Single source of truth for the step-3 arithmetic: [`redistribute`]
+/// maxes/sums these bytes into `step3_ns`/energy, and the plan-level
+/// discrete-event simulator (`netsim::sim`) lowers the same values to
+/// one flow per boundary — which is what keeps the simulated exchange
+/// window equal to the closed form on a congestion-free package.
+pub fn step3_boundary_bytes(
+    plat: &Platform,
+    op: &GemmOp,
+    part: &Partition,
+    next_part: &Partition,
+) -> Vec<f64> {
+    let next_m: usize = next_part.px.iter().sum();
+    let xdim = part.px.len();
+    let m: usize = part.px.iter().sum();
+    let scale = m as f64 / next_m.max(1) as f64;
+    let mut cum_a = 0.0f64;
+    let mut cum_b = 0.0f64;
+    let mut out = Vec::with_capacity(xdim.saturating_sub(1));
+    for b in 0..xdim.saturating_sub(1) {
+        cum_a += part.px[b] as f64;
+        cum_b += next_part.px[b] as f64 * scale;
+        let rows_moved = (cum_a - cum_b).abs();
+        out.push(rows_moved * plat.bytes(op.n));
+    }
+    out
 }
 
 /// Per-edge convenience over [`redistribute`]: the 3-step cost of
@@ -219,6 +233,28 @@ mod tests {
             redist < roundtrip,
             "redist={redist} roundtrip={roundtrip}"
         );
+    }
+
+    #[test]
+    fn step3_helper_is_the_single_source_of_truth() {
+        // `redistribute`'s step-3 time is exactly the worst boundary of
+        // the shared helper — the invariant the simulator lowering
+        // relies on (one flow per boundary, worst link dominates).
+        let h = hw();
+        let o = op();
+        let p = uniform(&h, &o);
+        let skew =
+            Partition { px: vec![200, 120, 120, 72], py: p.py.clone() };
+        let c = redistribute(&h, &o, &p, &skew, 2);
+        let worst = step3_boundary_bytes(&h, &o, &p, &skew)
+            .into_iter()
+            .fold(0.0f64, f64::max);
+        assert_eq!(c.step3_ns.to_bits(), (worst / h.bw_nop).to_bits());
+        assert!(c.step3_ns > 0.0);
+        // Identical partitions: every boundary is zero.
+        assert!(step3_boundary_bytes(&h, &o, &p, &p)
+            .into_iter()
+            .all(|b| b == 0.0));
     }
 
     #[test]

@@ -164,6 +164,11 @@ fn executor_runs_alexnet_mini_with_verified_numerics() {
         report.modeled.latency_ns,
         planned.report().latency_ns()
     );
+    // Verification runs carry the discrete-event cross-check.
+    let sim_ns = report
+        .simulated_ns
+        .expect("verify run populates the DES makespan");
+    assert!(sim_ns.is_finite() && sim_ns > 0.0);
 }
 
 #[test]

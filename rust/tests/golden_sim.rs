@@ -1,0 +1,97 @@
+//! Golden snapshot of the headline simulation (satellite): the
+//! `SimReport` summary — makespan, energy split, redistributed-edge
+//! count, top-5 link utilizations — for AlexNet on the type-A 4×4 HBM
+//! preset under the uniform allocation with all §5 co-optimizations.
+//!
+//! The snapshot pins the simulator against silent drift across
+//! refactors. Blessing protocol (no toolchain ran in the authoring
+//! sandbox, so the first toolchain-bearing run records the bits):
+//!
+//! * `tests/golden/alexnet_typeA_sim.golden` absent → the test writes
+//!   it and passes, printing a "blessed" note (commit the file).
+//! * present → the freshly simulated summary must match byte for byte.
+//! * `MCMCOMM_BLESS=1` → rewrite unconditionally (for *intentional*
+//!   simulator-model changes, which must be called out in CHANGES.md).
+//!
+//! Structural assertions below hold regardless of blessing state, so
+//! the test has teeth even on a fresh checkout.
+
+use std::path::PathBuf;
+
+use mcmcomm::cost::evaluator::OptFlags;
+use mcmcomm::netsim::sim::{simulate_plan, SimConfig};
+use mcmcomm::partition::uniform_allocation;
+use mcmcomm::platform::Platform;
+use mcmcomm::workload::models::alexnet;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/alexnet_typeA_sim.golden")
+}
+
+#[test]
+fn headline_sim_summary_matches_golden() {
+    let plat = Platform::headline(); // type-A HBM 4x4
+    let wl = alexnet(1);
+    let alloc = uniform_allocation(&plat, &wl);
+    let report = simulate_plan(
+        &plat,
+        &wl,
+        &alloc,
+        OptFlags::ALL,
+        &SimConfig::default(),
+    )
+    .expect("headline scenario simulates");
+
+    // ---- structural pins (independent of the snapshot file).
+    assert!(report.makespan_ns.is_finite() && report.makespan_ns > 0.0);
+    assert!(report.energy.total_pj() > 0.0);
+    assert!(
+        report.redistributed_edges() >= 4,
+        "AlexNet chains should redistribute (got {})",
+        report.redistributed_edges()
+    );
+    let top = report.top_links(5);
+    assert_eq!(top.len(), 5);
+    for w in top.windows(2) {
+        assert!(w[0].1 >= w[1].1, "top links not sorted: {top:?}");
+    }
+    for (_, u) in &top {
+        assert!((0.0..=1.0 + 1e-9).contains(u));
+    }
+    // The busiest links of the corner-fed preset touch the attachment
+    // corner or its memory node (ids 0 and 16).
+    let (l, _) = top[0];
+    let link = &report.graph.links[l];
+    assert!(
+        link.from == 0 || link.to == 0 || link.from >= 16 || link.to >= 16,
+        "busiest link {} -> {} does not touch the corner/memory",
+        link.from,
+        link.to
+    );
+
+    // ---- byte-exact snapshot.
+    let summary = report.summary();
+    let path = golden_path();
+    let bless = std::env::var("MCMCOMM_BLESS").is_ok_and(|v| v == "1");
+    match std::fs::read_to_string(&path) {
+        Ok(golden) if !bless => {
+            assert_eq!(
+                summary, golden,
+                "simulated summary drifted from the golden snapshot at \
+                 {} — if the simulator model changed intentionally, \
+                 re-bless with MCMCOMM_BLESS=1 and say so in CHANGES.md",
+                path.display()
+            );
+        }
+        _ => {
+            std::fs::create_dir_all(path.parent().unwrap())
+                .expect("create tests/golden");
+            std::fs::write(&path, &summary).expect("write golden");
+            eprintln!(
+                "blessed golden snapshot at {} — commit it:\n{summary}",
+                path.display()
+            );
+        }
+    }
+}

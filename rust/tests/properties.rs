@@ -624,6 +624,114 @@ fn prop_dag_evaluation_invariant_under_topological_order() {
 }
 
 #[test]
+fn prop_single_flow_transfer_time_is_exact() {
+    // Satellite: a lone, congestion-free flow finishes at exactly
+    // bytes / bandwidth + (hops - 1) * hop_latency — the simulator adds
+    // no other delay (and src == dst flows finish at t = 0).
+    use mcmcomm::netsim::{simulate_with_latency, Flow};
+    forall(
+        120,
+        0xAC,
+        |rng| {
+            let n = rng.range_usize(2, 6);
+            let diagonal = rng.chance(0.5);
+            let bw = 10.0 + rng.f64() * 200.0;
+            let bytes = 1.0 + rng.f64() * 1e6;
+            let lat = rng.f64() * 20.0;
+            let a = (rng.range_usize(0, n - 1), rng.range_usize(0, n - 1));
+            let b = (rng.range_usize(0, n - 1), rng.range_usize(0, n - 1));
+            (n, diagonal, bw, bytes, lat, a, b)
+        },
+        |&(n, diagonal, bw, bytes, lat, a, b)| {
+            let g = LinkGraph::mesh(n, n, diagonal, bw);
+            let src = g.chiplet_id(Pos::new(a.0, a.1));
+            let dst = g.chiplet_id(Pos::new(b.0, b.1));
+            let hops = g
+                .route(src, dst)
+                .map_err(|e| format!("{e:#}"))?
+                .len();
+            let r = simulate_with_latency(
+                &g,
+                &[Flow { src, dst, bytes }],
+                lat,
+            )
+            .map_err(|e| format!("{e:#}"))?;
+            let expect = if hops == 0 {
+                0.0
+            } else {
+                bytes / bw + (hops - 1) as f64 * lat
+            };
+            prop_assert!(
+                (r.flow_finish_ns[0] - expect).abs()
+                    <= 1e-6 * expect.max(1.0),
+                "finish {} != bytes/bw + fill latency {expect} \
+                 (hops {hops})",
+                r.flow_finish_ns[0]
+            );
+            prop_assert!(
+                r.makespan_ns == r.flow_finish_ns[0],
+                "makespan diverges from the only flow's finish"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_makespan_monotone_when_bytes_grow() {
+    // Satellite: growing any flow's bytes never shrinks the makespan.
+    // Scoped to the memory-bottleneck regime (bw_mem <= bw_nop), where
+    // the shared memory link makes the system exactly
+    // processor-sharing and monotonicity is a theorem. In the high-BW
+    // regime max-min fair sharing is genuinely non-monotone — a
+    // longer-lived flow can keep throttling a competitor that was
+    // starving a third flow — so that regime is out of scope by
+    // design, not by accident.
+    use mcmcomm::netsim::{simulate, Flow};
+    forall(
+        60,
+        0xAD,
+        |rng| {
+            let n = rng.range_usize(2, 5);
+            let nf = rng.range_usize(2, 7);
+            (n, nf, rng.next_u64())
+        },
+        |&(n, nf, seed)| {
+            let mut rng = Pcg::seeded(seed);
+            let bw_mem = 10.0 + rng.f64() * 40.0;
+            let bw_nop = bw_mem + 10.0 + rng.f64() * 100.0;
+            let mut g = LinkGraph::mesh(n, n, false, bw_nop);
+            let attach = Pos::new(
+                rng.range_usize(0, n - 1),
+                rng.range_usize(0, n - 1),
+            );
+            let mem = g.attach_memory(attach, bw_mem);
+            let mut flows: Vec<Flow> = (0..nf)
+                .map(|_| Flow {
+                    src: mem,
+                    dst: rng.range_usize(0, n * n - 1),
+                    bytes: rng.range_usize(1, 200_000) as f64,
+                })
+                .collect();
+            let base =
+                simulate(&g, &flows).map_err(|e| format!("{e:#}"))?;
+            let j = rng.range_usize(0, nf - 1);
+            flows[j].bytes *= 1.0 + rng.f64() * 3.0;
+            let grown =
+                simulate(&g, &flows).map_err(|e| format!("{e:#}"))?;
+            prop_assert!(
+                grown.makespan_ns
+                    >= base.makespan_ns * (1.0 - 1e-9),
+                "makespan shrank when flow {j} grew: {} -> {}",
+                base.makespan_ns,
+                grown.makespan_ns
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_evaluator_latency_monotone_in_bandwidth() {
     // More NoP bandwidth can never make the modeled latency worse.
     forall(
