@@ -8,8 +8,8 @@
 
 use std::time::Duration;
 
-use mcmcomm::coordinator::server::RunnerFactory;
-use mcmcomm::coordinator::{Executor, Server};
+use mcmcomm::coordinator::Executor;
+use mcmcomm::serving::server::{RunnerFactory, Server};
 use mcmcomm::engine::{Engine, Scenario, SchedulerRegistry};
 use mcmcomm::pipeline::pipeline_speedup;
 use mcmcomm::runtime::{GemmRuntime, Manifest};
@@ -50,11 +50,13 @@ fn main() -> Result<()> {
     let client = server.client();
     let n_req = 24;
     let t0 = std::time::Instant::now();
-    let waiters: Vec<_> = (0..n_req).map(|_| client.submit()).collect();
+    let waiters: Vec<_> = (0..n_req)
+        .map(|_| client.submit())
+        .collect::<Result<_>>()?;
     let mut batch_sizes = Vec::new();
     let mut per_sample = Vec::new();
     for w in waiters {
-        let r = w.recv()?;
+        let r = w.recv()?.done().expect("best-effort requests never shed");
         batch_sizes.push(r.batch_size);
         per_sample.push(r.modeled_per_sample_ns);
     }

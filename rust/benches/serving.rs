@@ -1,0 +1,187 @@
+//! Serving-layer benchmarks: plan-cache hit/miss economics, admission
+//! decision cost, trace generation, and the virtual-time load harness
+//! end to end (how many virtual requests per host second the DES-backed
+//! driver sustains).
+//!
+//! `--json [path]` additionally writes every stat plus the derived
+//! ratios to a machine-readable file (default `BENCH_serving.json`);
+//! CI runs this as a non-blocking step and, on pushes to main, commits
+//! the measured baseline back so the repo carries real numbers.
+//! Unknown arguments are ignored (`cargo bench` may inject harness
+//! flags).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use mcmcomm::engine::{Engine, Scenario, SchedulerRegistry};
+use mcmcomm::serving::{
+    AdmissionInputs, AdmissionPolicy, HarnessConfig, LoadHarness, PlanCache,
+    PlanKey, Trace,
+};
+use mcmcomm::util::bench::{bench, black_box, BenchStats};
+use mcmcomm::util::json::{obj, Json};
+use mcmcomm::workload::models::{alexnet, scaled_down, vit};
+use mcmcomm::workload::Workload;
+
+fn median_ns(stats: &[BenchStats], name: &str) -> f64 {
+    stats
+        .iter()
+        .find(|s| s.name == name)
+        .map(|s| s.median.as_nanos() as f64)
+        .unwrap_or(f64::NAN)
+}
+
+fn main() {
+    // Lenient arg parse: only `--json [path]` is recognized.
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut json_path: Option<String> = None;
+    let mut i = 0;
+    while i < argv.len() {
+        if argv[i] == "--json" {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                json_path = Some(argv[i + 1].clone());
+                i += 1;
+            } else {
+                json_path = Some("BENCH_serving.json".to_string());
+            }
+        }
+        i += 1;
+    }
+
+    let mut stats: Vec<BenchStats> = Vec::new();
+    let registry = SchedulerRegistry::standard(42);
+    let greedy = registry.require("greedy").expect("greedy registered");
+    let scen = Scenario::headline(alexnet(1));
+    let key = PlanKey::of(&scen, "greedy");
+    let compute = || {
+        Ok(Engine::new(scen.clone()).schedule_with(greedy)?.into_plan())
+    };
+
+    // Cold path: every lookup misses (fresh single-slot cache), so the
+    // cost is key hash + greedy optimization — what a tenant's first
+    // request pays.
+    stats.push(bench("cache/miss_cold_greedy", Duration::from_secs(2), || {
+        let cache = PlanCache::new(1).verify_hits(false);
+        let (plan, hit) = cache.get_or_compute(&key, compute).unwrap();
+        black_box((plan.objective_value, hit));
+    }));
+
+    // Warm path: read-lock + Arc clone. The gap between these two
+    // medians is what the plan cache saves per repeated-tenant request.
+    let warm = PlanCache::new(8).verify_hits(false);
+    warm.get_or_compute(&key, compute).unwrap();
+    stats.push(bench("cache/hit_warm", Duration::from_secs(1), || {
+        let (plan, hit) = warm.get_or_compute(&key, compute).unwrap();
+        black_box((plan.objective_value, hit));
+    }));
+
+    // Admission decision: pure arithmetic, must be nanoseconds.
+    let policy = AdmissionPolicy::default();
+    let inputs = AdmissionInputs {
+        now_ns: 1.0e6,
+        deadline_ns: Some(3.0e6),
+        queue_len: 17,
+        queue_cap: 256,
+        has_idle_capacity: false,
+        est_wait_ns: 4.0e5,
+        est_batch_service_ns: 1.1e6,
+        est_solo_service_ns: 7.0e5,
+    };
+    stats.push(bench("admission/decide", Duration::from_secs(1), || {
+        black_box(policy.decide(&inputs));
+    }));
+
+    // Open-loop trace generation: 10k seeded Poisson arrivals.
+    stats.push(bench("trace/poisson_10k", Duration::from_secs(1), || {
+        black_box(Trace::poisson(10_000, 5_000.0, 3, Some(2e6), 42).len());
+    }));
+
+    // The load harness end to end: 2k requests over 2 mini-model
+    // tenants in virtual time. The harness is reused across iterations,
+    // so after the first run the plan cache and tenant service models
+    // are warm — this measures the steady-state driver, not cold
+    // optimization.
+    let base = Scenario::headline(Workload::multi_model(&[
+        scaled_down(&alexnet(1), 16, 16),
+        scaled_down(&vit(1), 16, 16),
+    ]));
+    let cfg = HarnessConfig {
+        modules: 4,
+        max_batch: 8,
+        queue_cap: 256,
+        scheduler: "greedy".to_string(),
+        verify_cache: false,
+        ..HarnessConfig::default()
+    };
+    let harness = LoadHarness::multi_tenant(&base, cfg).expect("harness");
+    let n_req = 2_000;
+    let trace = Trace::poisson(n_req, 5_000.0, 2, None, 42);
+    let mut virtual_makespan_ns = f64::NAN;
+    let mut run = || {
+        let report = harness.run(&trace).expect("run");
+        virtual_makespan_ns = report.makespan_ns;
+        black_box(report.completed);
+    };
+    run(); // warm the cache + service models outside the timed region
+    stats.push(bench("harness/run_2k_warm", Duration::from_secs(3), run));
+
+    // ---- Derived headline ratios.
+    let miss = median_ns(&stats, "cache/miss_cold_greedy");
+    let hit = median_ns(&stats, "cache/hit_warm");
+    let run_ns = median_ns(&stats, "harness/run_2k_warm");
+    let cache_speedup = miss / hit;
+    let vreq_per_host_sec = n_req as f64 / (run_ns / 1e9);
+    let time_compression = virtual_makespan_ns / run_ns;
+    println!();
+    println!(
+        "plan-cache hit vs cold greedy optimization: {cache_speedup:.0}x"
+    );
+    println!(
+        "load harness: {vreq_per_host_sec:.0} virtual req/s of host time \
+         ({time_compression:.1}x faster than real time)"
+    );
+
+    if let Some(path) = json_path {
+        let mut benches = BTreeMap::new();
+        for s in &stats {
+            benches.insert(
+                s.name.clone(),
+                obj(vec![
+                    ("median_ns", Json::Num(s.median.as_nanos() as f64)),
+                    ("mean_ns", Json::Num(s.mean.as_nanos() as f64)),
+                    ("min_ns", Json::Num(s.min.as_nanos() as f64)),
+                    ("iters", Json::Num(s.iters as f64)),
+                ]),
+            );
+        }
+        let root = obj(vec![
+            ("schema", Json::Num(1.0)),
+            (
+                "note",
+                Json::Str(
+                    "Serving-layer baseline; regenerate with: cargo bench \
+                     --bench serving -- --json BENCH_serving.json. \
+                     derived.cache_hit_speedup is what the plan cache \
+                     saves per repeated-tenant request; \
+                     derived.virtual_req_per_host_sec is the load \
+                     harness's sustained rate."
+                        .to_string(),
+                ),
+            ),
+            ("benches", Json::Obj(benches)),
+            (
+                "derived",
+                obj(vec![
+                    ("cache_hit_speedup", Json::Num(cache_speedup)),
+                    ("virtual_req_per_host_sec",
+                     Json::Num(vreq_per_host_sec)),
+                    ("virtual_time_compression",
+                     Json::Num(time_compression)),
+                ]),
+            ),
+        ]);
+        std::fs::write(&path, root.encode() + "\n")
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote {path}");
+    }
+}

@@ -1,11 +1,15 @@
 //! Layer-3 coordinator: turns an optimized schedule into execution —
-//! the plan builder, the simulated-clock executor with real PJRT
-//! numerics, and the threaded batching server.
+//! the plan builder and the simulated-clock executor with real PJRT
+//! numerics. The threaded batching server grew into the full serving
+//! subsystem ([`crate::serving`]); the old paths re-export from there.
 
 pub mod executor;
 pub mod plan;
-pub mod server;
+
+/// The serving loop moved to [`crate::serving::server`]; this alias
+/// keeps `coordinator::server::*` paths working.
+pub use crate::serving::server;
+pub use crate::serving::server::{Client, Response, Server, ServerStats};
 
 pub use executor::{Executor, RunReport};
 pub use plan::{build_plan, Chunk, ExecutionPlan};
-pub use server::{Client, Response, Server, ServerStats};

@@ -71,6 +71,27 @@ impl Scenario {
         self.plat.name.clone()
     }
 
+    /// Stable content fingerprint of the whole problem statement:
+    /// platform description, workload graph, requested flags and
+    /// objective. Two scenarios with equal fingerprints are solved to
+    /// bit-identical plans by any deterministic scheduler, which is
+    /// what lets the serving layer's plan cache
+    /// ([`crate::serving::PlanCache`]) return cached plans without
+    /// re-validating them.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::hash::Fnv1a::new();
+        h.write_u64(self.plat.fingerprint());
+        h.write_u64(self.wl.fingerprint());
+        h.write_bool(self.flags.diagonal);
+        h.write_bool(self.flags.redistribution);
+        h.write_bool(self.flags.async_fusion);
+        h.write_u8(match self.objective {
+            Objective::Latency => 0,
+            Objective::Edp => 1,
+        });
+        h.finish()
+    }
+
     /// Execute a plan on the plan-level discrete-event simulator
     /// (conformance mode: layer-sequential barriers, zero hop latency —
     /// the configuration comparable to [`Scenario::report`]). See

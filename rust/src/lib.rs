@@ -54,7 +54,11 @@
 //! * [`pipeline`] — RCPSP batch pipelining (§5.4)
 //! * [`runtime`] — execution of AOT HLO artifacts (PJRT when the
 //!   `pjrt-xla` feature is enabled, CPU interpreter otherwise)
-//! * [`coordinator`] — end-to-end orchestration + serving loop
+//! * [`coordinator`] — end-to-end orchestration (plan builder +
+//!   executor)
+//! * [`serving`] — the serving subsystem: concurrent plan cache,
+//!   SLO-aware admission, continuous batching, open-loop traces and
+//!   the virtual-time DES-backed load harness + threaded server
 //! * [`eval`] — figure/table regeneration harnesses (§7), built on
 //!   [`Engine::sweep`]
 //! * [`util`] — offline substrates: RNG, JSON, CLI, bench, propcheck,
@@ -72,6 +76,7 @@ pub mod pipeline;
 pub mod platform;
 pub mod redistribution;
 pub mod runtime;
+pub mod serving;
 pub mod topology;
 pub mod util;
 pub mod workload;

@@ -7,7 +7,9 @@
 //!              compare against the analytical model (conformance)
 //!   netsim     run the Figure-3 congestion study with custom knobs
 //!   run-e2e    execute a workload with real numerics end to end
-//!   serve      threaded batching-server demo on the simulated MCM
+//!   serve      virtual-time serving study: open-loop load, continuous
+//!              batching, plan cache, SLO shedding (--live: wall-clock
+//!              threaded server demo)
 //!   help       this text
 
 use std::time::Duration;
@@ -45,7 +47,16 @@ USAGE: mcmcomm <subcommand> [--options]
             [--hop-latency NS]
   netsim    [--grid N] [--bw-nop G] [--bw-mem G] [--central] [--diagonal] [--gb BYTES]
   run-e2e   [--model NAME] [--scheme NAME] [--scale S] [--artifacts DIR] [--seed N]
-  serve     [--requests N] [--max-batch N] [--model NAME] [--artifacts DIR]
+  serve     [--requests N] [--rate RPS] [--slack-ms MS] [--model NAME]
+            [--scheme NAME] [--modules N] [--max-batch N] [--queue-cap N]
+            [--seed N] [--trace FILE.json] [--save-trace FILE.json]
+            [--json FILE]
+            virtual-time load study: seeded Poisson arrivals (or a replayed
+            --trace) against N simulated MCM replicas; continuous batching,
+            plan-cache reuse, SLO-aware shedding; reports p50/p99/p99.9,
+            goodput, shed and cache-hit rates
+  serve --live  [--requests N] [--max-batch N] [--model NAME] [--artifacts DIR]
+            wall-clock threaded batching server over the GEMM runtime
 ";
 
 fn parse_model(name: &str, batch: usize) -> Result<Workload> {
@@ -445,6 +456,73 @@ fn cmd_run_e2e(mut args: Args) -> Result<()> {
 }
 
 fn cmd_serve(mut args: Args) -> Result<()> {
+    if args.flag("live") {
+        return cmd_serve_live(args);
+    }
+    let n_req = args.get_usize("requests", 2000).map_err(Error::msg)?;
+    let rate = args.get_f64("rate", 5000.0).map_err(Error::msg)?;
+    let slack_ms = args.get_f64("slack-ms", 0.0).map_err(Error::msg)?;
+    let model = args.get_or("model", "multi");
+    let scheme = args.get_or("scheme", "greedy");
+    let modules = args.get_usize("modules", 4).map_err(Error::msg)?;
+    let max_batch = args.get_usize("max-batch", 8).map_err(Error::msg)?;
+    let queue_cap = args.get_usize("queue-cap", 256).map_err(Error::msg)?;
+    let seed = args.get_usize("seed", 42).map_err(Error::msg)? as u64;
+    let trace_in = args.get("trace");
+    let trace_out = args.get("save-trace");
+    let json_out = args.get("json");
+    args.finish().map_err(Error::msg)?;
+    ensure!(rate > 0.0, "--rate must be > 0");
+
+    // One tenant per model span of the (possibly fused) workload; the
+    // trace's tenant ids index those spans.
+    let base = Scenario::headline(parse_model(&model, 1)?);
+    let cfg = mcmcomm::serving::HarnessConfig {
+        modules,
+        max_batch,
+        queue_cap,
+        scheduler: scheme.clone(),
+        seed,
+        // miqp's anytime budget is nondeterministic: recomputation may
+        // legitimately differ, so skip hit re-verification for it.
+        verify_cache: scheme != "miqp",
+        ..mcmcomm::serving::HarnessConfig::default()
+    };
+    let harness = mcmcomm::serving::LoadHarness::multi_tenant(&base, cfg)?;
+    let trace = match trace_in {
+        Some(path) => mcmcomm::serving::Trace::load(Path::new(&path))?,
+        None => mcmcomm::serving::Trace::poisson(
+            n_req,
+            1e9 / rate,
+            harness.tenant_count(),
+            (slack_ms > 0.0).then_some(slack_ms * 1e6),
+            seed,
+        ),
+    };
+    if let Some(path) = trace_out {
+        trace.save(Path::new(&path))?;
+        println!("trace saved to {path}");
+    }
+    println!(
+        "serving {} ({} tenants) with '{scheme}' plans: {} requests \
+         in virtual time",
+        base.workload().name,
+        harness.tenant_count(),
+        trace.len(),
+    );
+    let report = harness.run(&trace)?;
+    println!("{}", report.summary());
+    if let Some(path) = json_out {
+        std::fs::write(&path, report.to_json().encode())
+            .map_err(|e| Error::msg(format!("writing {path}: {e}")))?;
+        println!("report written to {path}");
+    }
+    Ok(())
+}
+
+/// The legacy wall-clock demo: a threaded batching server over the
+/// GEMM runtime (`serve --live`).
+fn cmd_serve_live(mut args: Args) -> Result<()> {
     let n_req = args.get_usize("requests", 32).map_err(Error::msg)?;
     let max_batch = args.get_usize("max-batch", 8).map_err(Error::msg)?;
     let model = args.get_or("model", "vit");
@@ -486,10 +564,12 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     );
     let client = server.client();
     let t0 = std::time::Instant::now();
-    let waiters: Vec<_> = (0..n_req).map(|_| client.submit()).collect();
+    let waiters: Vec<_> = (0..n_req)
+        .map(|_| client.submit())
+        .collect::<Result<_>>()?;
     let mut per_sample = Vec::new();
     for w in waiters {
-        let r = w.recv()?;
+        let r = w.recv()?.done().expect("best-effort requests never shed");
         per_sample.push(r.modeled_per_sample_ns);
     }
     let wall = t0.elapsed();

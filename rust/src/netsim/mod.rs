@@ -15,9 +15,11 @@
 
 pub mod conformance;
 pub mod sim;
+pub mod vtime;
 
 pub use conformance::{check_plan, scheme_tolerance, Conformance};
 pub use sim::{simulate_plan, SimConfig, SimMode, SimReport};
+pub use vtime::ModulePool;
 
 use crate::platform::Platform;
 use crate::topology::links::{LinkGraph, LinkId, NodeId};

@@ -1,0 +1,150 @@
+//! Virtual-time queueing substrate for the serving load harness.
+//!
+//! The serving layer ([`crate::serving`]) measures sustained-stream
+//! behavior — queueing delay, SLO attainment, goodput — by advancing a
+//! *virtual* clock in nanoseconds instead of sleeping through wall
+//! time: a load test of a million requests costs only the event
+//! bookkeeping. Per-batch **service times** come from the plan-level
+//! discrete-event simulator ([`super::sim`], ultimately
+//! `sim::run_tasks`), so the queueing model sits on top of the same
+//! oracle the conformance suite validates; this module provides the
+//! queueing half: a deterministic pool of parallel service modules (N
+//! simulated MCMs behind one router) tracked in virtual time.
+//!
+//! Determinism rules: module selection is lowest-index-first, time
+//! comparisons are exact `f64` comparisons (all quantities derive from
+//! deterministic arithmetic on trace and simulator outputs — no wall
+//! clock anywhere), so a run is bit-reproducible from its inputs.
+
+/// A pool of `n` identical service modules advancing in virtual time.
+/// Each module serves one batch at a time; the pool answers "who is
+/// idle at `now`", "when does the next busy module free up" and "how
+/// much service backlog is in flight" — the three questions the
+/// continuous batcher and the admission estimator ask.
+#[derive(Debug, Clone)]
+pub struct ModulePool {
+    /// Virtual completion time per module; `<= now` means idle.
+    busy_until: Vec<f64>,
+}
+
+impl ModulePool {
+    /// `n` must be at least 1 (a pool with no modules can never serve).
+    pub fn new(n: usize) -> ModulePool {
+        assert!(n >= 1, "ModulePool needs at least one module");
+        ModulePool { busy_until: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.busy_until.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // by construction: n >= 1
+    }
+
+    /// Lowest-indexed module idle at `now`, if any.
+    pub fn idle_at(&self, now_ns: f64) -> Option<usize> {
+        self.busy_until.iter().position(|&t| t <= now_ns)
+    }
+
+    /// Number of modules idle at `now`.
+    pub fn idle_count(&self, now_ns: f64) -> usize {
+        self.busy_until.iter().filter(|&&t| t <= now_ns).count()
+    }
+
+    /// Occupy module `m` until `until_ns`. Panics if the module is
+    /// still busy at `now_ns` or the interval runs backwards — both
+    /// are driver bugs, not load conditions.
+    pub fn occupy(&mut self, m: usize, now_ns: f64, until_ns: f64) {
+        assert!(
+            self.busy_until[m] <= now_ns,
+            "module {m} occupied at t={now_ns} while busy until {}",
+            self.busy_until[m]
+        );
+        assert!(
+            until_ns >= now_ns,
+            "module {m} service interval runs backwards \
+             ({now_ns} -> {until_ns})"
+        );
+        self.busy_until[m] = until_ns;
+    }
+
+    /// The next completion strictly after `now`: `(module, time)` of
+    /// the busy module finishing earliest (lowest index on ties).
+    /// `None` when every module is already idle.
+    pub fn next_completion(&self, now_ns: f64) -> Option<(usize, f64)> {
+        let mut best: Option<(usize, f64)> = None;
+        for (m, &t) in self.busy_until.iter().enumerate() {
+            if t > now_ns && best.is_none_or(|(_, bt)| t < bt) {
+                best = Some((m, t));
+            }
+        }
+        best
+    }
+
+    /// Total remaining in-flight service at `now` (summed over busy
+    /// modules) — the admission estimator's view of work the pool has
+    /// already committed to.
+    pub fn remaining_ns(&self, now_ns: f64) -> f64 {
+        self.busy_until
+            .iter()
+            .filter(|&&t| t > now_ns)
+            .map(|&t| t - now_ns)
+            .sum()
+    }
+
+    /// Virtual time the last module frees up (0.0 if nothing ever ran).
+    pub fn last_completion_ns(&self) -> f64 {
+        self.busy_until.iter().fold(0.0f64, |a, &b| a.max(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_then_busy_then_idle() {
+        let mut pool = ModulePool::new(2);
+        assert_eq!(pool.idle_at(0.0), Some(0));
+        assert_eq!(pool.idle_count(0.0), 2);
+        assert_eq!(pool.next_completion(0.0), None);
+
+        pool.occupy(0, 0.0, 100.0);
+        assert_eq!(pool.idle_at(0.0), Some(1));
+        pool.occupy(1, 0.0, 50.0);
+        assert_eq!(pool.idle_at(0.0), None);
+        assert_eq!(pool.next_completion(0.0), Some((1, 50.0)));
+        assert_eq!(pool.remaining_ns(0.0), 150.0);
+
+        // At t=50 module 1 frees; module 0 still busy.
+        assert_eq!(pool.idle_at(50.0), Some(1));
+        assert_eq!(pool.next_completion(50.0), Some((0, 100.0)));
+        assert_eq!(pool.remaining_ns(50.0), 50.0);
+        assert_eq!(pool.last_completion_ns(), 100.0);
+    }
+
+    #[test]
+    fn ties_pick_lowest_index() {
+        let mut pool = ModulePool::new(3);
+        pool.occupy(0, 0.0, 70.0);
+        pool.occupy(1, 0.0, 70.0);
+        assert_eq!(pool.next_completion(0.0), Some((0, 70.0)));
+        // Module 2 idle: reuse fills lowest index first.
+        assert_eq!(pool.idle_at(0.0), Some(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "occupied")]
+    fn double_occupy_panics() {
+        let mut pool = ModulePool::new(1);
+        pool.occupy(0, 0.0, 100.0);
+        pool.occupy(0, 10.0, 200.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one module")]
+    fn zero_modules_rejected() {
+        let _ = ModulePool::new(0);
+    }
+}

@@ -314,6 +314,17 @@ impl Platform {
         &self.hops
     }
 
+    /// Stable content fingerprint of the packaging description (the
+    /// serving layer's plan-cache key component). Hashes the canonical
+    /// JSON encoding of the spec — sorted keys, every field that can
+    /// change a cost-model answer — with FNV-1a, so two platforms
+    /// fingerprint identically iff their descriptions are identical
+    /// (the name included: presets are distinguishable even when their
+    /// numbers coincide).
+    pub fn fingerprint(&self) -> u64 {
+        crate::util::hash::fnv1a_64(self.spec.to_json().encode().as_bytes())
+    }
+
     // ---- presets (the four paper packagings + headline) ----------------
 
     /// Table-2 preset: 16x16 PE chiplets, 60 GB/s NoP, chosen square

@@ -1,0 +1,205 @@
+//! SLO-aware admission control: decide at arrival time whether a
+//! request can still meet its deadline, and shed it immediately if not.
+//!
+//! Shedding at admission (rather than timing out in the queue) is what
+//! protects goodput under overload: a request that cannot meet its
+//! deadline anyway would only add queueing delay to every request
+//! behind it. The policy is deliberately estimate-based and cheap —
+//! one comparison against `now + predicted wait + predicted service`;
+//! the virtual-time harness ([`super::harness`]) and the real-time
+//! server ([`super::server`]) both feed it their own notions of time
+//! and predicted service.
+
+/// Why a request was refused at admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The wait queue is at capacity and no module is idle
+    /// (backpressure; an idle module means the request starts
+    /// immediately and never queues, so a full — or even zero-length —
+    /// queue alone is not grounds to shed).
+    QueueFull,
+    /// The deadline had already passed at arrival.
+    DeadlineExpired,
+    /// Admission-time prediction says the deadline cannot be met, even
+    /// with expedited (queue-jumping, solo-batch) service.
+    DeadlinePredictedMiss,
+}
+
+impl ShedReason {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::DeadlineExpired => "deadline_expired",
+            ShedReason::DeadlinePredictedMiss => "deadline_predicted_miss",
+        }
+    }
+}
+
+/// Outcome of [`AdmissionPolicy::decide`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    /// Join the tail of the queue, batched normally.
+    Admit,
+    /// Jump the queue and run as a solo batch — the deadline is too
+    /// tight to survive normal queueing but still feasible.
+    Expedite,
+    Shed(ShedReason),
+}
+
+/// Everything the policy reads, in one bag so callers can't misorder
+/// nine positional floats. All times are in the caller's clock domain
+/// (virtual ns in the harness, host ns in the server) — the policy
+/// only ever compares them to each other.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionInputs {
+    pub now_ns: f64,
+    /// Absolute deadline; `None` = best-effort (never deadline-shed).
+    pub deadline_ns: Option<f64>,
+    /// Requests currently waiting (not yet in service).
+    pub queue_len: usize,
+    /// Queue bound; `usize::MAX` = unbounded.
+    pub queue_cap: usize,
+    /// Whether some service module is idle right now.
+    pub has_idle_capacity: bool,
+    /// Predicted time until service would start for a tail-of-queue
+    /// admit.
+    pub est_wait_ns: f64,
+    /// Predicted (batch-amortized) service time for this request.
+    pub est_batch_service_ns: f64,
+    /// Predicted solo-batch service time (the expedite path).
+    pub est_solo_service_ns: f64,
+}
+
+/// The admission policy: bound the queue, never queue a dead request,
+/// expedite salvageable tight deadlines (if enabled).
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionPolicy {
+    /// Allow the queue-jumping solo path. Off = strict FIFO fairness.
+    pub allow_expedite: bool,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy { allow_expedite: true }
+    }
+}
+
+impl AdmissionPolicy {
+    pub fn decide(&self, inp: &AdmissionInputs) -> AdmissionDecision {
+        if let Some(d) = inp.deadline_ns {
+            if d < inp.now_ns {
+                return AdmissionDecision::Shed(ShedReason::DeadlineExpired);
+            }
+        }
+        if !inp.has_idle_capacity && inp.queue_len >= inp.queue_cap {
+            return AdmissionDecision::Shed(ShedReason::QueueFull);
+        }
+        let Some(d) = inp.deadline_ns else {
+            return AdmissionDecision::Admit;
+        };
+        if inp.now_ns + inp.est_wait_ns + inp.est_batch_service_ns <= d {
+            return AdmissionDecision::Admit;
+        }
+        if self.allow_expedite && inp.now_ns + inp.est_solo_service_ns <= d {
+            return AdmissionDecision::Expedite;
+        }
+        AdmissionDecision::Shed(ShedReason::DeadlinePredictedMiss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> AdmissionInputs {
+        AdmissionInputs {
+            now_ns: 1000.0,
+            deadline_ns: None,
+            queue_len: 0,
+            queue_cap: 64,
+            has_idle_capacity: true,
+            est_wait_ns: 0.0,
+            est_batch_service_ns: 100.0,
+            est_solo_service_ns: 150.0,
+        }
+    }
+
+    #[test]
+    fn best_effort_always_admits_with_capacity() {
+        let p = AdmissionPolicy::default();
+        assert_eq!(p.decide(&base()), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn expired_deadline_sheds_even_when_idle() {
+        let p = AdmissionPolicy::default();
+        let inp = AdmissionInputs { deadline_ns: Some(999.0), ..base() };
+        assert_eq!(
+            p.decide(&inp),
+            AdmissionDecision::Shed(ShedReason::DeadlineExpired)
+        );
+    }
+
+    #[test]
+    fn zero_capacity_queue_still_admits_onto_idle_module() {
+        // The queue_cap = 0 edge: a request that would start immediately
+        // never queues, so it must not be shed as QueueFull.
+        let p = AdmissionPolicy::default();
+        let inp = AdmissionInputs { queue_cap: 0, ..base() };
+        assert_eq!(p.decide(&inp), AdmissionDecision::Admit);
+        let inp = AdmissionInputs {
+            queue_cap: 0,
+            has_idle_capacity: false,
+            ..base()
+        };
+        assert_eq!(
+            p.decide(&inp),
+            AdmissionDecision::Shed(ShedReason::QueueFull)
+        );
+    }
+
+    #[test]
+    fn full_queue_sheds_only_without_idle_capacity() {
+        let p = AdmissionPolicy::default();
+        let full = AdmissionInputs { queue_len: 64, ..base() };
+        assert_eq!(p.decide(&full), AdmissionDecision::Admit);
+        let full_busy = AdmissionInputs {
+            has_idle_capacity: false,
+            ..full
+        };
+        assert_eq!(
+            p.decide(&full_busy),
+            AdmissionDecision::Shed(ShedReason::QueueFull)
+        );
+    }
+
+    #[test]
+    fn tight_deadline_expedites_then_sheds() {
+        let p = AdmissionPolicy::default();
+        // Wait makes the batch path miss (1000+500+100 > 1200) but a
+        // solo run fits (1000+150 <= 1200): expedite.
+        let tight = AdmissionInputs {
+            deadline_ns: Some(1200.0),
+            est_wait_ns: 500.0,
+            has_idle_capacity: false,
+            queue_len: 3,
+            ..base()
+        };
+        assert_eq!(p.decide(&tight), AdmissionDecision::Expedite);
+        // Even solo misses: predicted-miss shed.
+        let hopeless = AdmissionInputs {
+            deadline_ns: Some(1100.0),
+            ..tight
+        };
+        assert_eq!(
+            p.decide(&hopeless),
+            AdmissionDecision::Shed(ShedReason::DeadlinePredictedMiss)
+        );
+        // Expedite disabled: strict policy sheds the tight one too.
+        let strict = AdmissionPolicy { allow_expedite: false };
+        assert_eq!(
+            strict.decide(&tight),
+            AdmissionDecision::Shed(ShedReason::DeadlinePredictedMiss)
+        );
+    }
+}

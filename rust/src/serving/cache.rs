@@ -1,0 +1,348 @@
+//! Concurrent plan cache: optimized plans keyed by the full problem
+//! statement so repeated tenants skip the scheduler entirely.
+//!
+//! Key design: a [`PlanKey`] is (platform fingerprint, workload
+//! fingerprint, scheduler registry key, opt-flag/objective bits) — the
+//! complete input set of [`crate::engine::Scheduler::schedule`] for a
+//! deterministic scheduler, so a cache hit is *guaranteed*
+//! bit-identical to recomputation. That guarantee is actively checked:
+//! with [`PlanCache::verify_hits`] enabled (the default under
+//! `debug_assertions`), the first hit on every entry recomputes the
+//! plan and asserts bit-identity (allocation, flags, seed, and the
+//! exact `objective_value` bits). Disable it for nondeterministic
+//! schedulers (`miqp` runs under a wall-clock anytime budget).
+//!
+//! Concurrency: the map is sharded (FNV of the key selects the shard),
+//! each shard behind its own `RwLock`, so readers on different shards
+//! never contend and hits take only a read lock. Eviction is FIFO per
+//! shard; counters are relaxed atomics.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::cost::evaluator::{Objective, OptFlags};
+use crate::engine::{Plan, Scenario};
+use crate::util::error::Result;
+use crate::util::hash::Fnv1a;
+
+/// Complete identity of one scheduling problem: everything a
+/// deterministic scheduler reads. Equal keys ⇒ bit-identical plans.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// [`crate::platform::Platform::fingerprint`] of the packaging
+    /// description.
+    pub platform_fp: u64,
+    /// [`crate::workload::Workload::fingerprint`] of the op/edge graph.
+    pub workload_fp: u64,
+    /// Scheduler registry key (`"greedy"`, `"ga"`, …).
+    pub scheduler: String,
+    /// Requested [`OptFlags`] (bits 0–2) and [`Objective`] (bit 3).
+    pub opt_bits: u8,
+}
+
+impl PlanKey {
+    /// Key for scheduling `scenario` with the scheduler registered
+    /// under `scheduler`.
+    pub fn of(scenario: &Scenario, scheduler: &str) -> PlanKey {
+        PlanKey {
+            platform_fp: scenario.platform().fingerprint(),
+            workload_fp: scenario.workload().fingerprint(),
+            scheduler: scheduler.to_string(),
+            opt_bits: pack_bits(scenario.flags(), scenario.objective()),
+        }
+    }
+
+    /// Stable content hash (shard selector; also usable as a compact
+    /// cross-process cache id).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        h.write_u64(self.platform_fp);
+        h.write_u64(self.workload_fp);
+        h.write_str(&self.scheduler);
+        h.write_u8(self.opt_bits);
+        h.finish()
+    }
+}
+
+fn pack_bits(flags: OptFlags, objective: Objective) -> u8 {
+    (flags.diagonal as u8)
+        | (flags.redistribution as u8) << 1
+        | (flags.async_fusion as u8) << 2
+        | match objective {
+            Objective::Latency => 0,
+            Objective::Edp => 1 << 3,
+        }
+}
+
+/// Monotonic cache counters (snapshot).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PlanCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Hits that were re-verified against a fresh computation.
+    pub verified: u64,
+    /// Current number of cached plans.
+    pub entries: usize,
+}
+
+impl PlanCacheStats {
+    /// Hit fraction in [0, 1]; 0 when the cache was never queried.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Slot {
+    plan: Arc<Plan>,
+    /// Whether a hit has already re-verified this entry.
+    verified: bool,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<PlanKey, Slot>,
+    /// Insertion order for FIFO eviction.
+    order: VecDeque<PlanKey>,
+}
+
+/// Sharded concurrent plan cache. See the module docs for the key and
+/// verification contracts.
+pub struct PlanCache {
+    shards: Vec<RwLock<Shard>>,
+    cap_per_shard: usize,
+    verify_hits: bool,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    verified: AtomicU64,
+}
+
+impl std::fmt::Debug for PlanCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlanCache")
+            .field("shards", &self.shards.len())
+            .field("cap_per_shard", &self.cap_per_shard)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl PlanCache {
+    /// Cache holding at most `capacity` plans, spread over 8 shards
+    /// (capacity is rounded up to a multiple of the shard count). Hit
+    /// verification defaults to on under `debug_assertions`, off in
+    /// release.
+    pub fn new(capacity: usize) -> PlanCache {
+        Self::with_shards(capacity, 8)
+    }
+
+    pub fn with_shards(capacity: usize, nshards: usize) -> PlanCache {
+        let nshards = nshards.max(1);
+        PlanCache {
+            shards: (0..nshards)
+                .map(|_| RwLock::new(Shard::default()))
+                .collect(),
+            cap_per_shard: capacity.div_ceil(nshards).max(1),
+            verify_hits: cfg!(debug_assertions),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            verified: AtomicU64::new(0),
+        }
+    }
+
+    /// Toggle first-hit re-verification. Must be off for
+    /// nondeterministic schedulers (e.g. `miqp`'s anytime budget),
+    /// whose recomputation legitimately differs.
+    pub fn verify_hits(mut self, on: bool) -> PlanCache {
+        self.verify_hits = on;
+        self
+    }
+
+    /// Fetch the plan for `key`, computing (and caching) it on a miss.
+    /// Returns `(plan, hit)`. On a verified hit the cached plan has
+    /// been asserted bit-identical to a fresh `compute()`.
+    pub fn get_or_compute(
+        &self,
+        key: &PlanKey,
+        compute: impl Fn() -> Result<Plan>,
+    ) -> Result<(Arc<Plan>, bool)> {
+        let shard =
+            &self.shards[(key.fingerprint() % self.shards.len() as u64) as usize];
+
+        let (cached, needs_verify) = {
+            let g = shard.read().expect("plan cache poisoned");
+            match g.map.get(key) {
+                Some(slot) => {
+                    (Some(slot.plan.clone()), self.verify_hits && !slot.verified)
+                }
+                None => (None, false),
+            }
+        };
+        if let Some(plan) = cached {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            if needs_verify {
+                let fresh = compute()?;
+                assert!(
+                    plans_identical(&plan, &fresh),
+                    "plan cache hit diverged from recomputation for \
+                     scheduler '{}' — is it deterministic?",
+                    key.scheduler
+                );
+                self.verified.fetch_add(1, Ordering::Relaxed);
+                let mut g = shard.write().expect("plan cache poisoned");
+                if let Some(slot) = g.map.get_mut(key) {
+                    slot.verified = true;
+                }
+            }
+            return Ok((plan, true));
+        }
+
+        // Miss: compute outside any lock (scheduling can be expensive),
+        // then insert. A racing thread may have inserted meanwhile —
+        // keep the first entry so later hits verify against one canon.
+        let plan = Arc::new(compute()?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut g = shard.write().expect("plan cache poisoned");
+        if let Some(slot) = g.map.get(key) {
+            return Ok((slot.plan.clone(), false));
+        }
+        while g.map.len() >= self.cap_per_shard {
+            let Some(old) = g.order.pop_front() else { break };
+            g.map.remove(&old);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        g.map.insert(
+            key.clone(),
+            Slot { plan: plan.clone(), verified: false },
+        );
+        g.order.push_back(key.clone());
+        Ok((plan, false))
+    }
+
+    pub fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            verified: self.verified.load(Ordering::Relaxed),
+            entries: self
+                .shards
+                .iter()
+                .map(|s| s.read().expect("plan cache poisoned").map.len())
+                .sum(),
+        }
+    }
+}
+
+/// Bit-identity across every field that defines a plan, including the
+/// exact bit pattern of the score (`to_bits`, not an epsilon).
+pub fn plans_identical(a: &Plan, b: &Plan) -> bool {
+    a.scheduler == b.scheduler
+        && a.alloc == b.alloc
+        && a.flags == b.flags
+        && a.seed == b.seed
+        && a.objective == b.objective
+        && a.objective_value.to_bits() == b.objective_value.to_bits()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Engine, SchedulerRegistry};
+    use crate::workload::models::alexnet;
+
+    fn key_for(batch: usize) -> (Scenario, PlanKey) {
+        let s = Scenario::headline(alexnet(batch));
+        let k = PlanKey::of(&s, "greedy");
+        (s, k)
+    }
+
+    fn compute(s: &Scenario) -> Result<Plan> {
+        let engine = Engine::new(s.clone());
+        let reg = SchedulerRegistry::standard(7);
+        Ok(engine
+            .schedule_with(reg.require("greedy").unwrap())?
+            .into_plan())
+    }
+
+    #[test]
+    fn hit_after_miss_and_bit_identity() {
+        let cache = PlanCache::new(16).verify_hits(true);
+        let (s, k) = key_for(1);
+        let (p1, hit1) = cache.get_or_compute(&k, || compute(&s)).unwrap();
+        assert!(!hit1);
+        // The hit path re-verifies against a fresh computation (the
+        // assert inside get_or_compute) and returns the same Arc.
+        let (p2, hit2) = cache.get_or_compute(&k, || compute(&s)).unwrap();
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert!(plans_identical(&p1, &compute(&s).unwrap()));
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
+        assert_eq!(st.verified, 1);
+        assert!((st.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_problems_get_distinct_keys() {
+        let (s1, k1) = key_for(1);
+        let (_, k2) = key_for(4);
+        assert_ne!(k1, k2);
+        assert_ne!(k1.fingerprint(), k2.fingerprint());
+        // Same scenario, different scheduler: different key too.
+        assert_ne!(k1, PlanKey::of(&s1, "simba"));
+        // Key is a pure function of content.
+        assert_eq!(k1, PlanKey::of(&Scenario::headline(alexnet(1)), "greedy"));
+    }
+
+    #[test]
+    fn fifo_eviction_respects_capacity() {
+        let cache = PlanCache::with_shards(1, 1).verify_hits(false);
+        let (s1, k1) = key_for(1);
+        let (s2, k2) = key_for(2);
+        cache.get_or_compute(&k1, || compute(&s1)).unwrap();
+        cache.get_or_compute(&k2, || compute(&s2)).unwrap();
+        let st = cache.stats();
+        assert_eq!(st.entries, 1);
+        assert_eq!(st.evictions, 1);
+        // k1 was evicted: re-fetching is a miss.
+        let (_, hit) = cache.get_or_compute(&k1, || compute(&s1)).unwrap();
+        assert!(!hit);
+    }
+
+    #[test]
+    fn concurrent_readers_share_one_entry() {
+        let cache = Arc::new(PlanCache::new(16).verify_hits(false));
+        let (s, k) = key_for(1);
+        let canon = cache.get_or_compute(&k, || compute(&s)).unwrap().0;
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let cache = cache.clone();
+            let (s, k) = (s.clone(), k.clone());
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..8 {
+                    let (p, hit) =
+                        cache.get_or_compute(&k, || compute(&s)).unwrap();
+                    assert!(hit);
+                    assert_eq!(p.scheduler, "greedy");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let st = cache.stats();
+        assert_eq!(st.hits, 32);
+        assert_eq!(st.misses, 1);
+        let now = cache.get_or_compute(&k, || compute(&s)).unwrap().0;
+        assert!(plans_identical(&canon, &now));
+    }
+}

@@ -1,0 +1,689 @@
+//! The virtual-time load harness: open-loop traces played against a
+//! pool of simulated MCM replicas, with continuous batching, SLO-aware
+//! admission, and plan-cache accounting — entirely in virtual time.
+//!
+//! Service times are DES-backed: each tenant's plan is optimized once
+//! (through the [`PlanCache`]), executed once on the plan-level
+//! discrete-event simulator ([`crate::netsim::sim`]) for its batch-1
+//! makespan, and extended to batch sizes via the crate's pipelining
+//! model ([`crate::pipeline::pipeline_speedup`]) — the same
+//! `batch_ns = base · b / speedup(b)` law the `serve` CLI has always
+//! reported. The queueing layer on top is
+//! [`crate::netsim::vtime::ModulePool`].
+//!
+//! Continuous batching: a batch is formed the moment a module goes
+//! idle, from the head-of-queue request plus up to `max_batch - 1`
+//! same-tenant requests further back (others keep their order). There
+//! is no artificial linger — under light load requests run solo with
+//! minimal latency, under load batches grow naturally as the queue
+//! fills, which is exactly the continuous-batching trade-off.
+//!
+//! Everything is deterministic: same trace + same config ⇒ a
+//! bit-identical [`HarnessReport`] (pinned by `tests/serving_load.rs`).
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::engine::{Engine, Plan, Scenario, SchedulerRegistry};
+use crate::netsim::vtime::ModulePool;
+use crate::pipeline::pipeline_speedup;
+use crate::util::error::Result;
+use crate::util::json::{obj, Json};
+
+use super::admission::{
+    AdmissionDecision, AdmissionInputs, AdmissionPolicy, ShedReason,
+};
+use super::cache::{PlanCache, PlanCacheStats, PlanKey};
+use super::metrics::LatencyStats;
+use super::trace::Trace;
+
+/// Harness knobs. `Default` is a sensible mid-size serving setup.
+#[derive(Debug, Clone)]
+pub struct HarnessConfig {
+    /// Number of MCM replicas behind the router.
+    pub modules: usize,
+    /// Largest batch one module runs at once.
+    pub max_batch: usize,
+    /// Bound on requests waiting (not in service); `usize::MAX` =
+    /// unbounded. 0 means requests only run if a module is idle.
+    pub queue_cap: usize,
+    /// Scheduler registry key used to plan every tenant.
+    pub scheduler: String,
+    /// Seed for the scheduler registry (stochastic schedulers).
+    pub seed: u64,
+    pub policy: AdmissionPolicy,
+    /// Plan-cache capacity (ignored when a cache is shared in via
+    /// [`LoadHarness::with_cache`]).
+    pub cache_capacity: usize,
+    /// Re-verify first cache hits against recomputation (must be off
+    /// for nondeterministic schedulers such as `miqp`).
+    pub verify_cache: bool,
+}
+
+impl Default for HarnessConfig {
+    fn default() -> Self {
+        HarnessConfig {
+            modules: 4,
+            max_batch: 8,
+            queue_cap: 256,
+            scheduler: "greedy".to_string(),
+            seed: 0,
+            policy: AdmissionPolicy::default(),
+            cache_capacity: 64,
+            verify_cache: cfg!(debug_assertions),
+        }
+    }
+}
+
+/// Resolved per-tenant service model: one cached plan, one DES run,
+/// a batch-size → service-time table.
+struct TenantModel {
+    /// `batch_ns[b]` = modeled service time of a size-`b` batch;
+    /// index 0 unused.
+    batch_ns: Vec<f64>,
+    /// Per-request amortized service at full batch (admission's
+    /// optimistic estimate).
+    amortized_ns: f64,
+}
+
+impl TenantModel {
+    fn build(
+        scen: &Scenario,
+        plan: &Plan,
+        max_batch: usize,
+    ) -> Result<TenantModel> {
+        let sim = scen.simulate(plan)?;
+        crate::ensure!(
+            sim.makespan_ns.is_finite() && sim.makespan_ns > 0.0,
+            "tenant '{}' simulated to a degenerate makespan {}",
+            scen.workload().name,
+            sim.makespan_ns
+        );
+        let breakdown = scen.report(plan).breakdown;
+        let mut batch_ns = vec![0.0; max_batch + 1];
+        for (b, slot) in batch_ns.iter_mut().enumerate().skip(1) {
+            *slot =
+                sim.makespan_ns * b as f64 / pipeline_speedup(&breakdown, b);
+        }
+        let amortized_ns = batch_ns[max_batch] / max_batch as f64;
+        Ok(TenantModel { batch_ns, amortized_ns })
+    }
+}
+
+/// One admitted request waiting or in service.
+struct Queued {
+    tenant: usize,
+    arrival_ns: f64,
+    deadline_ns: Option<f64>,
+    /// The service estimate charged to the backlog at admission
+    /// (credited back at dispatch).
+    est_ns: f64,
+}
+
+/// Mutable event-loop state, split out so the borrow checker sees it
+/// disjoint from the tenant table.
+struct RunState {
+    pool: ModulePool,
+    queue: VecDeque<Queued>,
+    expedite: VecDeque<Queued>,
+    inflight: Vec<Option<Vec<Queued>>>,
+    /// Estimated service backlog of everything queued (ns).
+    queued_work_ns: f64,
+    now: f64,
+    latencies: Vec<f64>,
+    good: usize,
+    batches: usize,
+    batch_total: usize,
+    shed_queue_full: usize,
+    shed_deadline_expired: usize,
+    shed_predicted_miss: usize,
+}
+
+impl RunState {
+    fn new(modules: usize) -> RunState {
+        RunState {
+            pool: ModulePool::new(modules),
+            queue: VecDeque::new(),
+            expedite: VecDeque::new(),
+            inflight: (0..modules).map(|_| None).collect(),
+            queued_work_ns: 0.0,
+            now: 0.0,
+            latencies: Vec::new(),
+            good: 0,
+            batches: 0,
+            batch_total: 0,
+            shed_queue_full: 0,
+            shed_deadline_expired: 0,
+            shed_predicted_miss: 0,
+        }
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queue.len() + self.expedite.len()
+    }
+
+    /// Fill idle modules at `now`: expedited requests first (solo
+    /// batches), then head-of-queue continuous batches.
+    fn dispatch(
+        &mut self,
+        now: f64,
+        models: &[Option<TenantModel>],
+        max_batch: usize,
+    ) {
+        while let Some(m) = self.pool.idle_at(now) {
+            let (batch, service) = if let Some(q) = self.expedite.pop_front()
+            {
+                let model =
+                    models[q.tenant].as_ref().expect("resolved at admission");
+                (vec![q], model.batch_ns[1])
+            } else if let Some(head) = self.queue.pop_front() {
+                let tenant = head.tenant;
+                let model =
+                    models[tenant].as_ref().expect("resolved at admission");
+                let mut batch = vec![head];
+                let mut rest = VecDeque::with_capacity(self.queue.len());
+                for q in std::mem::take(&mut self.queue) {
+                    if q.tenant == tenant && batch.len() < max_batch {
+                        batch.push(q);
+                    } else {
+                        rest.push_back(q);
+                    }
+                }
+                self.queue = rest;
+                let service = model.batch_ns[batch.len()];
+                (batch, service)
+            } else {
+                break;
+            };
+            for q in &batch {
+                self.queued_work_ns -= q.est_ns;
+            }
+            self.queued_work_ns = self.queued_work_ns.max(0.0);
+            self.pool.occupy(m, now, now + service);
+            self.batches += 1;
+            self.batch_total += batch.len();
+            self.inflight[m] = Some(batch);
+        }
+    }
+
+    fn complete(&mut self, m: usize, done_ns: f64) {
+        let batch =
+            self.inflight[m].take().expect("completion without a batch");
+        for q in batch {
+            self.latencies.push(done_ns - q.arrival_ns);
+            if q.deadline_ns.is_none_or(|d| done_ns <= d) {
+                self.good += 1;
+            }
+        }
+    }
+
+    /// Advance virtual time processing completions up to `until`
+    /// (inclusive — a batch finishing exactly at an arrival's timestamp
+    /// frees its module *before* the arrival is admitted).
+    fn drain(
+        &mut self,
+        until: f64,
+        models: &[Option<TenantModel>],
+        max_batch: usize,
+    ) {
+        loop {
+            self.dispatch(self.now, models, max_batch);
+            match self.pool.next_completion(self.now) {
+                Some((m, done)) if done <= until => {
+                    self.now = done;
+                    self.complete(m, done);
+                }
+                _ => break,
+            }
+        }
+    }
+
+    fn record_shed(&mut self, reason: ShedReason) {
+        match reason {
+            ShedReason::QueueFull => self.shed_queue_full += 1,
+            ShedReason::DeadlineExpired => self.shed_deadline_expired += 1,
+            ShedReason::DeadlinePredictedMiss => self.shed_predicted_miss += 1,
+        }
+    }
+}
+
+/// End-of-run serving metrics. Deterministic: same harness + same
+/// trace ⇒ bit-identical report (compare via [`HarnessReport::to_json`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HarnessReport {
+    pub submitted: usize,
+    pub completed: usize,
+    pub shed_queue_full: usize,
+    pub shed_deadline_expired: usize,
+    pub shed_predicted_miss: usize,
+    /// Completions that met their deadline (best-effort always counts).
+    pub good: usize,
+    pub batches: usize,
+    /// Virtual time from t=0 to the last completion (or last arrival
+    /// if later).
+    pub makespan_ns: f64,
+    pub latency: LatencyStats,
+    /// Plan-cache snapshot at the end of the run (cumulative if the
+    /// cache is shared across runs).
+    pub cache: PlanCacheStats,
+}
+
+impl HarnessReport {
+    pub fn shed(&self) -> usize {
+        self.shed_queue_full + self.shed_deadline_expired
+            + self.shed_predicted_miss
+    }
+
+    /// Shed fraction of submitted requests, in [0, 1].
+    pub fn shed_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.shed() as f64 / self.submitted as f64
+        }
+    }
+
+    /// Deadline-meeting completions per *virtual* second.
+    pub fn goodput_rps(&self) -> f64 {
+        if self.makespan_ns <= 0.0 {
+            0.0
+        } else {
+            self.good as f64 / (self.makespan_ns / 1e9)
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.completed as f64 / self.batches as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema", Json::Num(1.0)),
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("shed_queue_full", Json::Num(self.shed_queue_full as f64)),
+            (
+                "shed_deadline_expired",
+                Json::Num(self.shed_deadline_expired as f64),
+            ),
+            (
+                "shed_predicted_miss",
+                Json::Num(self.shed_predicted_miss as f64),
+            ),
+            ("shed_rate", Json::Num(self.shed_rate())),
+            ("good", Json::Num(self.good as f64)),
+            ("goodput_rps", Json::Num(self.goodput_rps())),
+            ("batches", Json::Num(self.batches as f64)),
+            ("mean_batch", Json::Num(self.mean_batch())),
+            ("makespan_ns", Json::Num(self.makespan_ns)),
+            ("latency", self.latency.to_json()),
+            (
+                "cache",
+                obj(vec![
+                    ("hits", Json::Num(self.cache.hits as f64)),
+                    ("misses", Json::Num(self.cache.misses as f64)),
+                    ("evictions", Json::Num(self.cache.evictions as f64)),
+                    ("entries", Json::Num(self.cache.entries as f64)),
+                    ("hit_rate", Json::Num(self.cache.hit_rate())),
+                ]),
+            ),
+        ])
+    }
+
+    /// Human-readable multi-line summary (CLI + CI artifact).
+    pub fn summary(&self) -> String {
+        format!(
+            "requests   {} submitted, {} completed, {} shed ({:.2}%)\n\
+             sheds      queue_full {}  deadline_expired {}  \
+             predicted_miss {}\n\
+             latency    p50 {:.3} ms  p99 {:.3} ms  p99.9 {:.3} ms  \
+             max {:.3} ms\n\
+             goodput    {:.1} req/s (virtual), {} within deadline\n\
+             batching   {} batches, mean size {:.2}\n\
+             plan cache {} hits / {} misses ({:.2}% hit rate), \
+             {} evictions",
+            self.submitted,
+            self.completed,
+            self.shed(),
+            100.0 * self.shed_rate(),
+            self.shed_queue_full,
+            self.shed_deadline_expired,
+            self.shed_predicted_miss,
+            self.latency.p50_ns / 1e6,
+            self.latency.p99_ns / 1e6,
+            self.latency.p999_ns / 1e6,
+            self.latency.max_ns / 1e6,
+            self.goodput_rps(),
+            self.good,
+            self.batches,
+            self.mean_batch(),
+            self.cache.hits,
+            self.cache.misses,
+            100.0 * self.cache.hit_rate(),
+            self.cache.evictions,
+        )
+    }
+}
+
+/// The harness itself: a tenant table (one [`Scenario`] per tenant), a
+/// scheduler, and a plan cache. Reusable across traces; the cache
+/// persists between [`LoadHarness::run`] calls.
+pub struct LoadHarness {
+    tenants: Vec<Scenario>,
+    cfg: HarnessConfig,
+    registry: SchedulerRegistry,
+    cache: Arc<PlanCache>,
+}
+
+impl LoadHarness {
+    pub fn new(
+        tenants: Vec<Scenario>,
+        cfg: HarnessConfig,
+    ) -> Result<LoadHarness> {
+        crate::ensure!(!tenants.is_empty(), "harness needs >= 1 tenant");
+        crate::ensure!(cfg.modules >= 1, "harness needs >= 1 module");
+        crate::ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        let registry = SchedulerRegistry::standard(cfg.seed);
+        registry.require(&cfg.scheduler)?;
+        let cache = Arc::new(
+            PlanCache::new(cfg.cache_capacity.max(tenants.len()))
+                .verify_hits(cfg.verify_cache),
+        );
+        Ok(LoadHarness { tenants, cfg, registry, cache })
+    }
+
+    /// One tenant per [`crate::workload::ModelSpan`] of a fused
+    /// multi-model scenario: trace tenant `i` maps to the `i`-th span
+    /// (via [`crate::workload::Workload::split_models`]), all sharing
+    /// the scenario's platform, flags and objective.
+    pub fn multi_tenant(
+        base: &Scenario,
+        cfg: HarnessConfig,
+    ) -> Result<LoadHarness> {
+        let tenants = base
+            .workload()
+            .split_models()
+            .into_iter()
+            .map(|wl| {
+                Scenario::builder()
+                    .platform(base.platform().clone())
+                    .workload(wl)
+                    .flags(base.flags())
+                    .objective(base.objective())
+                    .build()
+            })
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        LoadHarness::new(tenants, cfg)
+    }
+
+    /// Share a plan cache (e.g. across harnesses or with a server).
+    pub fn with_cache(mut self, cache: Arc<PlanCache>) -> LoadHarness {
+        self.cache = cache;
+        self
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Play `trace` to completion in virtual time.
+    pub fn run(&self, trace: &Trace) -> Result<HarnessReport> {
+        crate::ensure!(
+            trace.tenant_count() <= self.tenants.len(),
+            "trace references tenant {} but only {} are configured",
+            trace.tenant_count().saturating_sub(1),
+            self.tenants.len()
+        );
+        let scheduler = self.registry.require(&self.cfg.scheduler)?;
+        let keys: Vec<PlanKey> = self
+            .tenants
+            .iter()
+            .map(|s| PlanKey::of(s, &self.cfg.scheduler))
+            .collect();
+        let mut models: Vec<Option<TenantModel>> =
+            (0..self.tenants.len()).map(|_| None).collect();
+        let mut st = RunState::new(self.cfg.modules);
+
+        for req in &trace.requests {
+            let t = req.arrival_ns;
+            st.drain(t, &models, self.cfg.max_batch);
+            st.now = t;
+
+            // Resolve the tenant's plan through the cache on *every*
+            // request — that is the lookup stream the hit rate
+            // measures; repeated tenants hit after their first miss.
+            let tn = req.tenant;
+            let scen = &self.tenants[tn];
+            let (plan, _hit) = self.cache.get_or_compute(&keys[tn], || {
+                Ok(Engine::new(scen.clone())
+                    .schedule_with(scheduler)?
+                    .into_plan())
+            })?;
+            if models[tn].is_none() {
+                models[tn] = Some(TenantModel::build(
+                    scen,
+                    &plan,
+                    self.cfg.max_batch,
+                )?);
+            }
+            let model = models[tn].as_ref().expect("just resolved");
+
+            let decision = self.cfg.policy.decide(&AdmissionInputs {
+                now_ns: t,
+                deadline_ns: req.deadline_ns,
+                queue_len: st.queue_len(),
+                queue_cap: self.cfg.queue_cap,
+                has_idle_capacity: st.pool.idle_count(t) > 0,
+                est_wait_ns: (st.queued_work_ns + st.pool.remaining_ns(t))
+                    / self.cfg.modules as f64,
+                est_batch_service_ns: model.amortized_ns,
+                est_solo_service_ns: model.batch_ns[1],
+            });
+            match decision {
+                AdmissionDecision::Shed(reason) => st.record_shed(reason),
+                AdmissionDecision::Admit => {
+                    let est_ns = model.amortized_ns;
+                    st.queued_work_ns += est_ns;
+                    st.queue.push_back(Queued {
+                        tenant: tn,
+                        arrival_ns: t,
+                        deadline_ns: req.deadline_ns,
+                        est_ns,
+                    });
+                }
+                AdmissionDecision::Expedite => {
+                    let est_ns = model.batch_ns[1];
+                    st.queued_work_ns += est_ns;
+                    st.expedite.push_back(Queued {
+                        tenant: tn,
+                        arrival_ns: t,
+                        deadline_ns: req.deadline_ns,
+                        est_ns,
+                    });
+                }
+            }
+            st.dispatch(t, &models, self.cfg.max_batch);
+        }
+        st.drain(f64::INFINITY, &models, self.cfg.max_batch);
+        debug_assert_eq!(st.queue_len(), 0, "drain left requests queued");
+
+        let completed = st.latencies.len();
+        let shed = st.shed_queue_full
+            + st.shed_deadline_expired
+            + st.shed_predicted_miss;
+        debug_assert_eq!(
+            completed + shed,
+            trace.len(),
+            "request conservation violated"
+        );
+        let last_arrival =
+            trace.requests.last().map_or(0.0, |r| r.arrival_ns);
+        Ok(HarnessReport {
+            submitted: trace.len(),
+            completed,
+            shed_queue_full: st.shed_queue_full,
+            shed_deadline_expired: st.shed_deadline_expired,
+            shed_predicted_miss: st.shed_predicted_miss,
+            good: st.good,
+            batches: st.batches,
+            makespan_ns: st.now.max(last_arrival),
+            latency: LatencyStats::from_samples(st.latencies),
+            cache: self.cache.stats(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::{alexnet, scaled_down};
+    use crate::workload::Workload;
+
+    /// Two small tenants on the headline platform (mini dims keep
+    /// debug-build scheduling and DES fast).
+    fn tenants() -> Vec<Scenario> {
+        let a = scaled_down(&alexnet(1), 16, 16);
+        let mut b = scaled_down(&alexnet(2), 16, 16);
+        b.name = "alexnet-b2-mini".to_string();
+        vec![Scenario::headline(a), Scenario::headline(b)]
+    }
+
+    fn cfg() -> HarnessConfig {
+        HarnessConfig {
+            modules: 2,
+            max_batch: 4,
+            queue_cap: 32,
+            ..HarnessConfig::default()
+        }
+    }
+
+    #[test]
+    fn smoke_run_conserves_requests_and_hits_cache() {
+        let h = LoadHarness::new(tenants(), cfg()).unwrap();
+        let trace = Trace::poisson(300, 50_000.0, 2, None, 9);
+        let r = h.run(&trace).unwrap();
+        assert_eq!(r.submitted, 300);
+        assert_eq!(r.completed + r.shed(), 300);
+        // Best-effort: nothing deadline-shed, only backpressure can
+        // shed, and every completion counts as good.
+        assert_eq!(r.shed_deadline_expired + r.shed_predicted_miss, 0);
+        assert_eq!(r.good, r.completed);
+        assert!(r.latency.p50_ns > 0.0);
+        assert!(r.latency.p50_ns <= r.latency.p99_ns);
+        assert!(r.makespan_ns > 0.0 && r.goodput_rps() > 0.0);
+        // 2 tenants -> 2 misses; every other lookup hits.
+        assert_eq!(r.cache.misses, 2);
+        assert!(r.cache.hit_rate() > 0.9, "hit rate {}", r.cache.hit_rate());
+    }
+
+    #[test]
+    fn zero_capacity_queue_only_serves_idle_modules() {
+        let mut c = cfg();
+        c.modules = 1;
+        c.queue_cap = 0;
+        let h = LoadHarness::new(tenants(), c).unwrap();
+        // A dense burst: arrival gaps far below service time, so only
+        // requests landing on the idle module run; the rest shed.
+        let trace = Trace::poisson(100, 10.0, 2, None, 5);
+        let r = h.run(&trace).unwrap();
+        assert!(r.completed >= 1, "idle module must still serve");
+        assert!(r.shed_queue_full > 0, "overload must shed");
+        assert_eq!(r.completed + r.shed_queue_full, 100);
+        // Nothing ever queued => every batch is size 1.
+        assert_eq!(r.batches, r.completed);
+    }
+
+    #[test]
+    fn burst_beyond_queue_bound_backpressures() {
+        let mut c = cfg();
+        c.modules = 1;
+        c.max_batch = 1;
+        c.queue_cap = 4;
+        let h = LoadHarness::new(tenants(), c).unwrap();
+        // 12 simultaneous arrivals (t=0 burst), single module, no
+        // batching: 1 dispatches, 4 queue, 7 shed as QueueFull.
+        let trace = Trace {
+            requests: (0..12)
+                .map(|_| super::super::trace::TraceRequest {
+                    arrival_ns: 0.0,
+                    tenant: 0,
+                    deadline_ns: None,
+                })
+                .collect(),
+        };
+        let r = h.run(&trace).unwrap();
+        assert_eq!(r.completed, 5);
+        assert_eq!(r.shed_queue_full, 7);
+    }
+
+    #[test]
+    fn deadlines_shed_and_goodput_counts_only_met() {
+        let mut c = cfg();
+        c.modules = 1;
+        c.max_batch = 2;
+        let h = LoadHarness::new(tenants(), c).unwrap();
+        // Impossibly tight slack: everything deadline-sheds (either
+        // expired or predicted-miss), nothing runs.
+        let tight = Trace::poisson(50, 1000.0, 2, Some(1.0), 3);
+        let r = h.run(&tight).unwrap();
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.shed(), 50);
+        assert_eq!(r.good, 0);
+        assert_eq!(r.goodput_rps(), 0.0);
+        // Generous slack: everything admitted and good.
+        let loose = Trace::poisson(50, 1_000_000.0, 2, Some(1e12), 3);
+        let r2 = h.run(&loose).unwrap();
+        assert_eq!(r2.completed, 50);
+        assert_eq!(r2.good, 50);
+    }
+
+    #[test]
+    fn multi_tenant_maps_model_spans() {
+        let fused = Workload::multi_model(&[
+            scaled_down(&alexnet(1), 16, 16),
+            scaled_down(&alexnet(2), 16, 16),
+        ]);
+        let base = Scenario::headline(fused);
+        let h = LoadHarness::multi_tenant(&base, cfg()).unwrap();
+        assert_eq!(h.tenant_count(), 2);
+        let trace = Trace::poisson(60, 100_000.0, 2, None, 1);
+        let r = h.run(&trace).unwrap();
+        assert_eq!(r.completed + r.shed(), 60);
+        assert_eq!(r.cache.misses, 2);
+    }
+
+    #[test]
+    fn run_is_deterministic() {
+        let trace = Trace::poisson(400, 20_000.0, 2, Some(5e8), 77);
+        let r1 = LoadHarness::new(tenants(), cfg())
+            .unwrap()
+            .run(&trace)
+            .unwrap();
+        let r2 = LoadHarness::new(tenants(), cfg())
+            .unwrap()
+            .run(&trace)
+            .unwrap();
+        assert_eq!(r1, r2);
+        assert_eq!(r1.to_json().encode(), r2.to_json().encode());
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(LoadHarness::new(vec![], cfg()).is_err());
+        let mut c = cfg();
+        c.scheduler = "bogus".to_string();
+        assert!(LoadHarness::new(tenants(), c).is_err());
+        let h = LoadHarness::new(tenants(), cfg()).unwrap();
+        // Trace referencing a tenant beyond the table is rejected.
+        let bad = Trace::poisson(10, 1000.0, 5, None, 2);
+        assert!(h.run(&bad).is_err());
+    }
+}

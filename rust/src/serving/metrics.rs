@@ -1,0 +1,104 @@
+//! Serving metrics: tail-latency quantiles, goodput, shed accounting.
+//!
+//! Quantiles use the nearest-rank definition (`ceil(q·n)`-th smallest)
+//! — exact on the recorded sample set, no interpolation — because the
+//! whole latency vector is retained (virtual-time runs are cheap), not
+//! sketched. Goodput counts only completions that met their deadline;
+//! best-effort requests (no deadline) always count.
+
+use crate::util::json::{obj, Json};
+
+/// Nearest-rank quantile of an ascending-sorted slice. `q` in [0, 1];
+/// returns 0.0 for an empty slice.
+pub fn quantile(sorted_ns: &[f64], q: f64) -> f64 {
+    if sorted_ns.is_empty() {
+        return 0.0;
+    }
+    let n = sorted_ns.len();
+    let rank = (q * n as f64).ceil() as usize;
+    sorted_ns[rank.clamp(1, n) - 1]
+}
+
+/// Latency distribution summary (all values in ns).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub p999_ns: f64,
+    pub max_ns: f64,
+}
+
+impl LatencyStats {
+    /// Summarize a sample set (need not be sorted; consumed to sort
+    /// in place).
+    pub fn from_samples(mut samples_ns: Vec<f64>) -> LatencyStats {
+        if samples_ns.is_empty() {
+            return LatencyStats::default();
+        }
+        samples_ns
+            .sort_by(|a, b| a.partial_cmp(b).expect("NaN latency sample"));
+        let n = samples_ns.len();
+        LatencyStats {
+            count: n,
+            mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+            p50_ns: quantile(&samples_ns, 0.50),
+            p99_ns: quantile(&samples_ns, 0.99),
+            p999_ns: quantile(&samples_ns, 0.999),
+            max_ns: samples_ns[n - 1],
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("p50_ns", Json::Num(self.p50_ns)),
+            ("p99_ns", Json::Num(self.p99_ns)),
+            ("p999_ns", Json::Num(self.p999_ns)),
+            ("max_ns", Json::Num(self.max_ns)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_quantiles() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(quantile(&v, 0.50), 50.0);
+        assert_eq!(quantile(&v, 0.99), 99.0);
+        assert_eq!(quantile(&v, 0.999), 100.0);
+        assert_eq!(quantile(&v, 0.0), 1.0); // clamped to first sample
+        assert_eq!(quantile(&v, 1.0), 100.0);
+        assert_eq!(quantile(&[], 0.5), 0.0);
+        // Single sample: every quantile is it.
+        assert_eq!(quantile(&[7.0], 0.001), 7.0);
+        assert_eq!(quantile(&[7.0], 0.999), 7.0);
+    }
+
+    #[test]
+    fn stats_from_unsorted_samples() {
+        let s = LatencyStats::from_samples(vec![30.0, 10.0, 20.0, 40.0]);
+        assert_eq!(s.count, 4);
+        assert_eq!(s.mean_ns, 25.0);
+        assert_eq!(s.p50_ns, 20.0);
+        assert_eq!(s.max_ns, 40.0);
+        assert_eq!(LatencyStats::from_samples(vec![]), LatencyStats::default());
+    }
+
+    #[test]
+    fn tail_orders_correctly() {
+        // Heavy tail: p999 >= p99 >= p50 always.
+        let mut v: Vec<f64> = (0..5000).map(|i| (i % 97) as f64).collect();
+        v.push(1e9);
+        let s = LatencyStats::from_samples(v);
+        assert!(s.p50_ns <= s.p99_ns);
+        assert!(s.p99_ns <= s.p999_ns);
+        assert!(s.p999_ns <= s.max_ns);
+        assert_eq!(s.max_ns, 1e9);
+    }
+}

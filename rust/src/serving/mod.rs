@@ -1,0 +1,43 @@
+//! The serving subsystem: end-to-end request serving on top of the
+//! engine and the DES oracle.
+//!
+//! The paper evaluates MCMComm on single-shot workloads; real
+//! deployments see *streams* of requests with deadlines, where
+//! communication-optimal plans only matter if (a) they can be reused
+//! across requests without re-running the optimizer and (b) queueing
+//! and batching on top of them still meet SLOs. This subsystem
+//! supplies that layer:
+//!
+//! * [`cache`] — a sharded concurrent [`PlanCache`] keyed by the full
+//!   problem fingerprint (platform, workload, scheduler, flags,
+//!   objective); hits are bit-identical to recomputation, actively
+//!   verified on first hit.
+//! * [`admission`] — SLO-aware [`AdmissionPolicy`]: bounded queues,
+//!   immediate shedding of infeasible deadlines, optional expedited
+//!   solo batches for salvageable tight ones.
+//! * [`trace`] — open-loop load: seeded Poisson generation and a
+//!   replayable JSON trace format.
+//! * [`metrics`] — tail quantiles (p50/p99/p99.9), goodput, shed and
+//!   cache-hit accounting.
+//! * [`harness`] — the virtual-time [`LoadHarness`]: continuous
+//!   batching over a pool of simulated MCM replicas
+//!   ([`crate::netsim::vtime`]), DES-backed service times,
+//!   deterministic end to end.
+//! * [`server`] — the wall-clock threaded [`Server`] (the executable
+//!   counterpart; PJRT-backed runners plug in here).
+
+pub mod admission;
+pub mod cache;
+pub mod harness;
+pub mod metrics;
+pub mod server;
+pub mod trace;
+
+pub use admission::{
+    AdmissionDecision, AdmissionInputs, AdmissionPolicy, ShedReason,
+};
+pub use cache::{plans_identical, PlanCache, PlanCacheStats, PlanKey};
+pub use harness::{HarnessConfig, HarnessReport, LoadHarness};
+pub use metrics::{quantile, LatencyStats};
+pub use server::{Client, Response, ServeReply, Server, ServerStats};
+pub use trace::{Trace, TraceRequest};

@@ -1,0 +1,400 @@
+//! Threaded real-time serving loop: the wall-clock counterpart of the
+//! virtual-time harness — the "real-time applications" framing of
+//! Figure 1 (autonomous-system inference on an edge MCM).
+//!
+//! tokio is unavailable offline; std threads + mpsc channels implement
+//! the same leader/worker shape: one batcher thread owns the (single)
+//! simulated MCM, request producers are arbitrary threads. Requests
+//! carry optional wall-clock deadlines; a request whose deadline has
+//! already passed when its batch forms is shed (reply
+//! [`ServeReply::Shed`]) instead of wasting MCM time.
+//!
+//! Relationship to [`super::harness`]: same concepts (batching,
+//! deadlines, shedding, [`ShedReason`]) on the host clock instead of
+//! the virtual one. Capacity planning and tail-latency studies belong
+//! in the harness where time is free and runs are deterministic; this
+//! server exists to *execute* — its runner callback is where PJRT-
+//! backed execution plugs in (built on the batcher thread via
+//! [`RunnerFactory`]; the PJRT client holds `Rc`s and must not cross
+//! threads).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::util::error::Result;
+
+use super::admission::ShedReason;
+
+/// One inference request.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub submitted: Instant,
+    /// Absolute wall-clock deadline, if any.
+    pub deadline: Option<Instant>,
+    reply: mpsc::Sender<ServeReply>,
+}
+
+/// Completion record returned to the client.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Modeled MCM latency for the batch this request rode in (ns).
+    pub modeled_batch_ns: f64,
+    /// Modeled per-sample latency with pipelining (ns).
+    pub modeled_per_sample_ns: f64,
+    /// Host-side queueing + execution time.
+    pub host_latency: Duration,
+    pub batch_size: usize,
+}
+
+/// What a waiter receives: a completion or a shed notice.
+#[derive(Debug, Clone)]
+pub enum ServeReply {
+    Done(Response),
+    Shed { id: u64, reason: ShedReason },
+}
+
+impl ServeReply {
+    pub fn id(&self) -> u64 {
+        match self {
+            ServeReply::Done(r) => r.id,
+            ServeReply::Shed { id, .. } => *id,
+        }
+    }
+
+    /// The completion, or `None` if the request was shed.
+    pub fn done(self) -> Option<Response> {
+        match self {
+            ServeReply::Done(r) => Some(r),
+            ServeReply::Shed { .. } => None,
+        }
+    }
+}
+
+/// Server statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub served: u64,
+    pub shed: u64,
+    pub batches: u64,
+    pub max_batch: usize,
+}
+
+/// Batch executor callback: given a batch size, return (modeled batch
+/// ns, modeled per-sample ns). Kept as a callback so the server logic
+/// is testable without PJRT. The non-`Send` variant is produced
+/// *inside* the batcher thread by a [`RunnerFactory`].
+pub type BatchRunner = Box<dyn FnMut(usize) -> (f64, f64) + Send>;
+pub type LocalBatchRunner = Box<dyn FnMut(usize) -> (f64, f64)>;
+pub type RunnerFactory = Box<dyn FnOnce() -> LocalBatchRunner + Send>;
+
+/// Intake protocol: requests, or the shutdown sentinel. An explicit
+/// sentinel (rather than relying on every `Sender` clone being
+/// dropped) lets [`Server::shutdown`] return even while `Client`
+/// handles are still alive — channel FIFO guarantees everything
+/// submitted before shutdown is still served first.
+enum Msg {
+    Req(Request),
+    Stop,
+}
+
+/// Client handle. Cloneable; ids are process-unique.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::Sender<Msg>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Client {
+    /// Submit a best-effort request; returns the receiver for its
+    /// reply, or an error if the server has shut down.
+    pub fn submit(&self) -> Result<mpsc::Receiver<ServeReply>> {
+        self.submit_with_deadline(None)
+    }
+
+    /// Submit with a relative deadline: if the batch forms after
+    /// `deadline` has elapsed, the request is shed rather than run.
+    pub fn submit_with_deadline(
+        &self,
+        deadline: Option<Duration>,
+    ) -> Result<mpsc::Receiver<ServeReply>> {
+        let (rtx, rrx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let now = Instant::now();
+        self.tx
+            .send(Msg::Req(Request {
+                id,
+                submitted: now,
+                deadline: deadline.map(|d| now + d),
+                reply: rtx,
+            }))
+            .map_err(|_| crate::err!("server stopped"))?;
+        Ok(rrx)
+    }
+}
+
+/// The batching server. Collects up to `max_batch` requests or waits
+/// at most `max_wait` for stragglers, sheds dead-on-arrival requests,
+/// then runs the batch.
+pub struct Server {
+    handle: Option<JoinHandle<ServerStats>>,
+    tx: Option<mpsc::Sender<Msg>>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Server {
+    pub fn start(
+        max_batch: usize,
+        max_wait: Duration,
+        mut runner: BatchRunner,
+    ) -> Server {
+        Self::start_factory(
+            max_batch,
+            max_wait,
+            Box::new(move || {
+                Box::new(move |bsz| runner(bsz)) as LocalBatchRunner
+            }),
+        )
+    }
+
+    /// Start with a factory that builds the runner *on the batcher
+    /// thread* (required for PJRT-backed runners, which are not
+    /// `Send`).
+    pub fn start_factory(
+        max_batch: usize,
+        max_wait: Duration,
+        factory: RunnerFactory,
+    ) -> Server {
+        assert!(max_batch >= 1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let handle = std::thread::spawn(move || {
+            let mut runner = factory();
+            let mut stats = ServerStats::default();
+            let mut stopping = false;
+            while !stopping {
+                // Block for the first request of a batch. Requests
+                // buffered ahead of the Stop sentinel (or ahead of the
+                // last sender dropping) are still served — shutdown
+                // never drops in-flight work.
+                let first = match rx.recv() {
+                    Ok(Msg::Req(r)) => r,
+                    Ok(Msg::Stop) | Err(_) => break,
+                };
+                let mut batch = vec![first];
+                let linger_until = Instant::now() + max_wait;
+                while batch.len() < max_batch {
+                    let now = Instant::now();
+                    if now >= linger_until {
+                        break;
+                    }
+                    match rx.recv_timeout(linger_until - now) {
+                        Ok(Msg::Req(r)) => batch.push(r),
+                        Ok(Msg::Stop) => {
+                            stopping = true;
+                            break;
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                // Shed requests already past their deadline; don't let
+                // dead work occupy the MCM.
+                let now = Instant::now();
+                let mut live = Vec::with_capacity(batch.len());
+                for req in batch {
+                    if req.deadline.is_some_and(|d| now > d) {
+                        stats.shed += 1;
+                        let _ = req.reply.send(ServeReply::Shed {
+                            id: req.id,
+                            reason: ShedReason::DeadlineExpired,
+                        });
+                    } else {
+                        live.push(req);
+                    }
+                }
+                if live.is_empty() {
+                    continue;
+                }
+                let bsz = live.len();
+                let (batch_ns, per_sample_ns) = runner(bsz);
+                stats.batches += 1;
+                stats.served += bsz as u64;
+                stats.max_batch = stats.max_batch.max(bsz);
+                for req in live {
+                    let _ = req.reply.send(ServeReply::Done(Response {
+                        id: req.id,
+                        modeled_batch_ns: batch_ns,
+                        modeled_per_sample_ns: per_sample_ns,
+                        host_latency: req.submitted.elapsed(),
+                        batch_size: bsz,
+                    }));
+                }
+            }
+            stats
+        });
+        Server {
+            handle: Some(handle),
+            tx: Some(tx),
+            next_id: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    pub fn client(&self) -> Client {
+        Client {
+            tx: self.tx.as_ref().expect("server running").clone(),
+            next_id: self.next_id.clone(),
+        }
+    }
+
+    /// Stop the batcher and join it. Requests already submitted are
+    /// still served (or deadline-shed) before the stats come back;
+    /// `Client` handles outliving the server get errors from `submit`.
+    pub fn shutdown(mut self) -> ServerStats {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Msg::Stop);
+        }
+        self.handle.take().unwrap().join().expect("batcher panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_runner() -> BatchRunner {
+        Box::new(|bsz| {
+            let batch_ns = 100.0 + 10.0 * bsz as f64;
+            (batch_ns, batch_ns / bsz as f64)
+        })
+    }
+
+    #[test]
+    fn serves_all_requests() {
+        let server =
+            Server::start(4, Duration::from_millis(5), fake_runner());
+        let client = server.client();
+        let waiters: Vec<_> =
+            (0..10).map(|_| client.submit().unwrap()).collect();
+        let mut ids = Vec::new();
+        for w in waiters {
+            let resp = w.recv().unwrap().done().expect("not shed");
+            assert!(resp.batch_size >= 1 && resp.batch_size <= 4);
+            ids.push(resp.id);
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 10);
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 10);
+        assert_eq!(stats.shed, 0);
+        assert!(stats.batches >= 3); // 10 requests, batch cap 4
+    }
+
+    #[test]
+    fn batching_amortizes_per_sample_latency() {
+        let server =
+            Server::start(8, Duration::from_millis(30), fake_runner());
+        let client = server.client();
+        // Submit a burst so they batch together.
+        let waiters: Vec<_> =
+            (0..8).map(|_| client.submit().unwrap()).collect();
+        let resps: Vec<Response> = waiters
+            .into_iter()
+            .map(|w| w.recv().unwrap().done().expect("not shed"))
+            .collect();
+        let batched = resps.iter().map(|r| r.batch_size).max().unwrap();
+        assert!(batched >= 2, "burst should have batched, got {batched}");
+        for r in &resps {
+            if r.batch_size > 1 {
+                assert!(r.modeled_per_sample_ns < r.modeled_batch_ns);
+            }
+        }
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_requests() {
+        // Satellite pin: requests buffered at shutdown are served, not
+        // dropped — mpsc delivers buffered sends before reporting
+        // disconnect.
+        let server =
+            Server::start(4, Duration::from_millis(1), fake_runner());
+        let client = server.client();
+        let waiters: Vec<_> =
+            (0..20).map(|_| client.submit().unwrap()).collect();
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.served + stats.shed, 20);
+        assert_eq!(stats.shed, 0); // no deadlines -> nothing shed
+        for w in waiters {
+            // Every waiter got a reply before shutdown returned.
+            let reply = w.try_recv().expect("reply missing after shutdown");
+            assert!(reply.done().is_some());
+        }
+    }
+
+    #[test]
+    fn zero_wait_serves_solo_batches() {
+        // max_wait = 0: no lingering — each request runs the moment the
+        // batcher sees it (batch of whatever is already buffered, which
+        // for sequential submit/recv pairs is always 1).
+        let server = Server::start(8, Duration::ZERO, fake_runner());
+        let client = server.client();
+        for _ in 0..5 {
+            let r = client
+                .submit()
+                .unwrap()
+                .recv()
+                .unwrap()
+                .done()
+                .expect("not shed");
+            assert_eq!(r.batch_size, 1);
+        }
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 5);
+        assert_eq!(stats.batches, 5);
+    }
+
+    #[test]
+    fn expired_deadline_is_shed() {
+        let server =
+            Server::start(4, Duration::from_millis(1), fake_runner());
+        let client = server.client();
+        // A zero deadline is already expired when the batch forms.
+        let dead = client.submit_with_deadline(Some(Duration::ZERO)).unwrap();
+        match dead.recv().unwrap() {
+            ServeReply::Shed { reason, .. } => {
+                assert_eq!(reason, ShedReason::DeadlineExpired)
+            }
+            ServeReply::Done(r) => panic!("dead request ran: {r:?}"),
+        }
+        // A generous deadline still completes.
+        let live = client
+            .submit_with_deadline(Some(Duration::from_secs(60)))
+            .unwrap();
+        assert!(live.recv().unwrap().done().is_some());
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.shed, 1);
+        assert_eq!(stats.served, 1);
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors() {
+        let server =
+            Server::start(2, Duration::from_millis(1), fake_runner());
+        let client = server.client();
+        client.submit().unwrap().recv().unwrap();
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 1);
+        // The old API panicked here; now it reports the error.
+        assert!(client.submit().is_err());
+    }
+}

@@ -1,0 +1,234 @@
+//! Open-loop request traces: seeded Poisson generation plus a
+//! replayable JSON format.
+//!
+//! Open-loop means arrivals are fixed in advance and do *not* react to
+//! server backpressure — the standard methodology for tail-latency
+//! measurement (a closed loop self-throttles and hides queueing
+//! collapse). Generation is pure PCG32 arithmetic from a seed, so a
+//! trace is reproducible from `(seed, rate, n, tenants, slack)` alone;
+//! the JSON form exists to pin a trace across machines or feed
+//! externally captured arrival logs to the harness.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Context, Result};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Pcg;
+
+/// One request: when it arrives, which tenant (model) it is for, and
+/// its absolute deadline, if any.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRequest {
+    pub arrival_ns: f64,
+    /// Index into the harness's tenant table.
+    pub tenant: usize,
+    /// Absolute virtual-time deadline; `None` = best-effort.
+    pub deadline_ns: Option<f64>,
+}
+
+/// An arrival-ordered request stream.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Trace {
+    pub requests: Vec<TraceRequest>,
+}
+
+impl Trace {
+    /// Seeded Poisson process: `n` requests, exponential inter-arrival
+    /// gaps with mean `mean_gap_ns` (rate = 1/mean), tenants drawn
+    /// uniformly from `0..tenants`, and (optionally) a per-request
+    /// deadline of `arrival + slack_ns`. Deterministic in all inputs.
+    pub fn poisson(
+        n: usize,
+        mean_gap_ns: f64,
+        tenants: usize,
+        slack_ns: Option<f64>,
+        seed: u64,
+    ) -> Trace {
+        assert!(tenants >= 1, "need at least one tenant");
+        assert!(mean_gap_ns > 0.0, "mean inter-arrival gap must be > 0");
+        let mut rng = Pcg::seeded(seed);
+        let mut t = 0.0f64;
+        let mut requests = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Inverse-CDF exponential; 1-u is in (0,1] so ln is finite.
+            let u = rng.f64();
+            t += -mean_gap_ns * (1.0 - u).ln();
+            requests.push(TraceRequest {
+                arrival_ns: t,
+                tenant: rng.below(tenants as u64) as usize,
+                deadline_ns: slack_ns.map(|s| t + s),
+            });
+        }
+        Trace { requests }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Largest tenant index + 1 (0 for an empty trace) — the number of
+    /// tenant models the harness must be configured with.
+    pub fn tenant_count(&self) -> usize {
+        self.requests
+            .iter()
+            .map(|r| r.tenant + 1)
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(BTreeMap::from([
+            ("schema".to_string(), Json::Num(1.0)),
+            (
+                "requests".to_string(),
+                Json::Arr(
+                    self.requests
+                        .iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("arrival_ns", Json::Num(r.arrival_ns)),
+                                ("tenant", Json::Num(r.tenant as f64)),
+                                (
+                                    "deadline_ns",
+                                    r.deadline_ns
+                                        .map(Json::Num)
+                                        .unwrap_or(Json::Null),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]))
+    }
+
+    pub fn from_json(j: &Json) -> Result<Trace> {
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| crate::err!("trace missing schema field"))?;
+        crate::ensure!(schema == 1, "unsupported trace schema {schema}");
+        let reqs = j
+            .get("requests")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| crate::err!("trace missing requests array"))?;
+        let mut requests = Vec::with_capacity(reqs.len());
+        let mut last = f64::NEG_INFINITY;
+        for (i, r) in reqs.iter().enumerate() {
+            let arrival_ns = r
+                .get("arrival_ns")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| crate::err!("request {i}: bad arrival_ns"))?;
+            let tenant = r
+                .get("tenant")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| crate::err!("request {i}: bad tenant"))?;
+            let deadline_ns = match r.get("deadline_ns") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_f64().ok_or_else(|| {
+                    crate::err!("request {i}: bad deadline_ns")
+                })?),
+            };
+            crate::ensure!(
+                arrival_ns.is_finite() && arrival_ns >= last,
+                "request {i}: arrivals must be finite and non-decreasing"
+            );
+            last = arrival_ns;
+            requests.push(TraceRequest { arrival_ns, tenant, deadline_ns });
+        }
+        Ok(Trace { requests })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().encode())
+            .with_context(|| format!("writing trace to {}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Trace> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        let j = Json::parse(&src)
+            .with_context(|| format!("parsing trace {}", path.display()))?;
+        Trace::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_is_seed_deterministic() {
+        let a = Trace::poisson(500, 1000.0, 3, Some(5e4), 42);
+        let b = Trace::poisson(500, 1000.0, 3, Some(5e4), 42);
+        assert_eq!(a, b);
+        let c = Trace::poisson(500, 1000.0, 3, Some(5e4), 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn poisson_statistics_are_sane() {
+        let n = 20_000;
+        let mean = 1000.0;
+        let t = Trace::poisson(n, mean, 4, None, 7);
+        assert_eq!(t.len(), n);
+        assert_eq!(t.tenant_count(), 4);
+        // Arrivals strictly ordered; empirical mean gap within 5%.
+        let mut last = 0.0;
+        for r in &t.requests {
+            assert!(r.arrival_ns > last);
+            last = r.arrival_ns;
+        }
+        let emp = last / n as f64;
+        assert!(
+            (emp - mean).abs() / mean < 0.05,
+            "empirical mean gap {emp} vs {mean}"
+        );
+        // Every tenant appears (uniform over 4, 20k draws).
+        for tn in 0..4 {
+            assert!(t.requests.iter().any(|r| r.tenant == tn));
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let t = Trace::poisson(64, 777.0, 2, Some(1.25e5), 11);
+        let back = Trace::from_json(&t.to_json()).unwrap();
+        // Bit-exact: Rust's f64 Display is shortest-round-trip and the
+        // parser reads it back to the same bits.
+        assert_eq!(t, back);
+        // Mixed deadlines survive too.
+        let mut t2 = t.clone();
+        t2.requests[3].deadline_ns = None;
+        let back2 = Trace::from_json(&t2.to_json()).unwrap();
+        assert_eq!(t2, back2);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        let bad = Json::parse(r#"{"schema":2,"requests":[]}"#).unwrap();
+        assert!(Trace::from_json(&bad).is_err());
+        let unsorted = Json::parse(
+            r#"{"schema":1,"requests":[
+                {"arrival_ns":10,"tenant":0,"deadline_ns":null},
+                {"arrival_ns":5,"tenant":0,"deadline_ns":null}]}"#,
+        )
+        .unwrap();
+        assert!(Trace::from_json(&unsorted).is_err());
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let t = Trace::poisson(32, 500.0, 2, None, 3);
+        let dir = std::env::temp_dir();
+        let path = dir.join("mcmcomm_trace_test.json");
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(t, back);
+    }
+}

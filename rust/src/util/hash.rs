@@ -1,0 +1,129 @@
+//! Stable content hashing (FNV-1a 64) for fingerprints.
+//!
+//! The serving layer keys its concurrent plan cache by *content*
+//! fingerprints of the platform description and the workload graph, so
+//! the hash must be deterministic across runs, processes and machines —
+//! which rules out `std`'s randomly-seeded SipHash. FNV-1a over an
+//! explicit byte stream is the zero-dependency standard here (the
+//! cached evaluator already uses the same function for its in-process
+//! gene keys, where stability across runs does not matter).
+//!
+//! Every multi-byte integer is folded in little-endian order, and
+//! variable-length sequences must be preceded by their length (see
+//! [`Fnv1a::write_len`]) so that `["ab","c"]` and `["a","bc"]` hash
+//! differently.
+
+/// Streaming FNV-1a 64-bit hasher.
+#[derive(Debug, Clone)]
+pub struct Fnv1a {
+    state: u64,
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a { state: 0xcbf29ce484222325 }
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a::default()
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        let mut h = self.state;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        self.state = h;
+    }
+
+    pub fn write_u8(&mut self, v: u8) {
+        self.write(&[v]);
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    pub fn write_bool(&mut self, v: bool) {
+        self.write_u8(u8::from(v));
+    }
+
+    /// IEEE-754 bit pattern of an `f64` (bit-identical inputs hash
+    /// identically; `-0.0` and `0.0` intentionally differ).
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    /// Length prefix for a variable-length sequence (call before
+    /// folding the elements).
+    pub fn write_len(&mut self, n: usize) {
+        self.write_usize(n);
+    }
+
+    /// Length-prefixed string content.
+    pub fn write_str(&mut self, s: &str) {
+        self.write_len(s.len());
+        self.write(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// One-shot convenience over a byte slice.
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // FNV-1a 64 reference values.
+        assert_eq!(fnv1a_64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a_64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn streaming_equals_oneshot() {
+        let mut h = Fnv1a::new();
+        h.write(b"foo");
+        h.write(b"bar");
+        assert_eq!(h.finish(), fnv1a_64(b"foobar"));
+    }
+
+    #[test]
+    fn length_prefix_disambiguates() {
+        let mut a = Fnv1a::new();
+        a.write_str("ab");
+        a.write_str("c");
+        let mut b = Fnv1a::new();
+        b.write_str("a");
+        b.write_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn integer_folding_is_order_sensitive() {
+        let mut a = Fnv1a::new();
+        a.write_u64(1);
+        a.write_u64(2);
+        let mut b = Fnv1a::new();
+        b.write_u64(2);
+        b.write_u64(1);
+        assert_ne!(a.finish(), b.finish());
+    }
+}

@@ -3,6 +3,7 @@
 pub mod bench;
 pub mod cli;
 pub mod error;
+pub mod hash;
 pub mod json;
 pub mod math;
 pub mod par;

@@ -393,6 +393,76 @@ impl Workload {
         self.edges.len()
     }
 
+    /// Stable content fingerprint of the *schedulable* graph (the
+    /// serving layer's plan-cache key component). Hashes every field a
+    /// scheduler or the evaluator can observe — op dims and attributes,
+    /// edge endpoints and tensor shapes — but **not** `name` or the
+    /// `models` provenance spans, so a renamed-but-identical workload
+    /// (the same tenant resubmitting its model) shares the cache entry.
+    /// Plans for colliding workloads are interchangeable by
+    /// construction: nothing in scheduling reads the excluded fields.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::hash::Fnv1a::new();
+        h.write_len(self.ops.len());
+        for op in &self.ops {
+            h.write_usize(op.m);
+            h.write_usize(op.k);
+            h.write_usize(op.n);
+            h.write_usize(op.groups);
+            h.write_bool(op.sync);
+            h.write_bool(op.shared_row);
+            h.write_bool(op.shared_col);
+            h.write_bool(op.relu);
+            h.write_bool(op.chained);
+        }
+        h.write_len(self.edges.len());
+        for e in &self.edges {
+            h.write_usize(e.src);
+            h.write_usize(e.dst);
+            h.write_usize(e.rows);
+            h.write_usize(e.cols);
+        }
+        h.finish()
+    }
+
+    /// Inverse of [`Workload::multi_model`] for the serving layer: one
+    /// standalone workload per [`ModelSpan`], keeping only intra-span
+    /// edges (fused multi-tenant workloads have none crossing spans)
+    /// and re-deriving each op's `chained` flag from the kept edges so
+    /// every part validates on its own.
+    pub fn split_models(&self) -> Vec<Workload> {
+        self.model_spans()
+            .into_iter()
+            .map(|span| {
+                let off = span.ops.start;
+                let mut ops: Vec<GemmOp> =
+                    self.ops[span.ops.clone()].to_vec();
+                let edges: Vec<Edge> = self
+                    .edges
+                    .iter()
+                    .filter(|e| {
+                        span.ops.contains(&e.src) && span.ops.contains(&e.dst)
+                    })
+                    .map(|e| Edge {
+                        src: e.src - off,
+                        dst: e.dst - off,
+                        rows: e.rows,
+                        cols: e.cols,
+                    })
+                    .collect();
+                for (i, op) in ops.iter_mut().enumerate() {
+                    op.chained = edges.iter().any(|e| e.dst == i);
+                }
+                Workload {
+                    name: span.name.clone(),
+                    ops,
+                    edges,
+                    models: Vec::new(),
+                }
+            })
+            .collect()
+    }
+
     /// In-degree of op `i` (number of dataflow producers).
     pub fn in_degree(&self, i: usize) -> usize {
         self.edges.iter().filter(|e| e.dst == i).count()
