@@ -146,11 +146,15 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub entries: usize,
+    /// Per-map clears triggered by the capacity bound. Eviction never
+    /// changes answers: every cached value is a pure function of its
+    /// key, so a post-eviction miss recomputes the identical bits.
+    pub evictions: u64,
 }
 
-/// Entry cap: beyond this the caches are dropped wholesale. Each entry
-/// is ~100 bytes for paper-scale grids, so the cap bounds a worker at
-/// tens of MB while never firing inside one GA generation.
+/// Global entry cap: beyond this the caches are dropped wholesale. Each
+/// entry is ~100 bytes for paper-scale grids, so the cap bounds a
+/// worker at tens of MB while never firing inside one GA generation.
 const CACHE_CAP_ENTRIES: usize = 1 << 18;
 
 /// A memoizing evaluator bound to one `(platform, wl, flags)` problem.
@@ -187,6 +191,29 @@ pub struct CachedEval<'a> {
     hits: u64,
     misses: u64,
     entries: usize,
+    /// Per-map entry bound (see [`CachedEval::set_map_cap`]): any single
+    /// key-indexed map growing past this is cleared, keeping worst-case
+    /// memory proportional to workload size instead of GA run length
+    /// even when one hot op sees an adversarial gene stream.
+    map_cap: usize,
+    evictions: u64,
+}
+
+/// Clear `map` when it outgrew `cap`, keeping the global entry count
+/// and eviction telemetry in sync. Values are pure functions of their
+/// keys, so dropping them trades recompute time for memory without
+/// perturbing a single bit of any future score.
+fn evict_if_over<K, V>(
+    map: &mut FnvMap<K, V>,
+    cap: usize,
+    entries: &mut usize,
+    evictions: &mut u64,
+) {
+    if map.len() > cap {
+        *entries = entries.saturating_sub(map.len());
+        map.clear();
+        *evictions += 1;
+    }
 }
 
 impl<'a> CachedEval<'a> {
@@ -225,6 +252,11 @@ impl<'a> CachedEval<'a> {
             hits: 0,
             misses: 0,
             entries: 0,
+            // Split the global budget across the per-op / per-edge maps
+            // so no single map can hog it (two per-op maps + one per
+            // edge), with a floor that keeps tiny workloads useful.
+            map_cap: (CACHE_CAP_ENTRIES / (2 * n + ne).max(1)).max(8),
+            evictions: 0,
         }
     }
 
@@ -232,11 +264,19 @@ impl<'a> CachedEval<'a> {
         self.flags
     }
 
+    /// Override the per-map entry bound (tests and memory-pressure
+    /// tuning). Shrinking it only causes extra recomputation — scores
+    /// stay bit-identical at any cap.
+    pub fn set_map_cap(&mut self, cap: usize) {
+        self.map_cap = cap.max(1);
+    }
+
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits,
             misses: self.misses,
             entries: self.entries,
+            evictions: self.evictions,
         }
     }
 
@@ -290,8 +330,11 @@ impl<'a> CachedEval<'a> {
             hits,
             misses,
             entries,
+            map_cap,
+            evictions,
         } = self;
         let (plat, wl, flags) = (*plat, *wl, *flags);
+        let cap = *map_cap;
         let n = wl.ops.len();
         let ne = wl.edges.len();
         debug_assert_eq!(alloc.parts.len(), n);
@@ -358,6 +401,8 @@ impl<'a> CachedEval<'a> {
                     redist_edge[e] = true;
                     redist_cost[e] = Some(r);
                 }
+                evict_if_over(&mut edge_cache[e], cap, entries, evictions);
+                evict_if_over(&mut act_cache[dst], cap, entries, evictions);
             }
         }
 
@@ -400,6 +445,7 @@ impl<'a> CachedEval<'a> {
                     ))
                 }
             };
+            evict_if_over(&mut core_cache[i], cap, entries, evictions);
             let incoming = if acts_from_redist {
                 redist_cost[in_edge[i].expect("redistributed op has an edge")]
             } else {
@@ -524,6 +570,40 @@ mod tests {
         assert_eq!(cache.stats().entries, 0);
         let b = cache.objective(&alloc, Objective::Latency);
         assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn eviction_is_bit_identical_to_full_eval() {
+        let plat = setup();
+        let wl = alexnet(1);
+        let base = uniform_allocation(&plat, &wl);
+        // Distinct gene patterns so every per-edge / per-op map sees
+        // more keys than the (tiny) cap allows.
+        let mut variants = Vec::new();
+        for k in 0..3usize {
+            let mut a = base.clone();
+            a.parts[3].px[0] += 8 * k;
+            a.parts[3].px[1] -= 8 * k;
+            for (e, c) in a.collect_cols.iter_mut().enumerate() {
+                *c = (e + k) % plat.spec().ydim;
+            }
+            variants.push(a);
+        }
+        let mut cache = CachedEval::new(&plat, &wl, OptFlags::ALL);
+        cache.set_map_cap(1);
+        for round in 0..3 {
+            for a in &variants {
+                let v = cache.objective(a, Objective::Edp);
+                let full = evaluate(&plat, &wl, a, OptFlags::ALL)
+                    .objective(Objective::Edp);
+                assert_eq!(v.to_bits(), full.to_bits(), "round {round}");
+            }
+        }
+        let st = cache.stats();
+        assert!(st.evictions > 0, "cap=1 must evict across distinct keys");
+        // Memory stays bounded by workload size, not scoring history.
+        let maps = 2 * wl.ops.len() + wl.edges.len();
+        assert!(st.entries <= 2 * maps, "entries {} maps {maps}", st.entries);
     }
 
     #[test]

@@ -22,6 +22,7 @@ use mcmcomm::cost::evaluator::Objective;
 use mcmcomm::engine::{Engine, Scenario, Scheduler, SchedulerRegistry};
 use mcmcomm::ensure;
 use mcmcomm::eval::{figures, EvalConfig};
+use mcmcomm::opt::ga::{self, GaParams};
 use mcmcomm::platform::Platform;
 use mcmcomm::runtime::{GemmRuntime, Manifest};
 use mcmcomm::topology::Pos;
@@ -36,11 +37,17 @@ mcmcomm — MCMComm reproduction (see README.md)
 USAGE: mcmcomm <subcommand> [--options]
 
   figures   --fig <3|8|9|10|11|12|13|solver> | --all   [--full] [--seed N]
-  optimize  --model <alexnet|vit|vit_residual|vision_mamba|hydranet|hydranet_branched|multi>
+  optimize  --model <alexnet|vit|vit_residual|vision_mamba|hydranet|hydranet_branched|gpt2_small|gpt2_large|multi>
             [--scheme <baseline|simba|greedy|ga|miqp>]
             [--type <A|B|C|D>] [--mem <hbm|dram>] [--grid N] [--objective <latency|edp>]
             [--platform FILE.json] [--list-platforms]
             [--batch N] [--seed N]
+            [--islands K] [--migration-interval M] [--profile]
+            island-model GA (scheme ga): K demes evolve in parallel and
+            exchange elites on a ring every M generations; results are
+            bit-identical at any thread count. --profile prints the
+            per-phase wall-clock split (eval | breeding | migration |
+            DES sim) of one GA run
   platforms --validate FILE.json | --validate-dir DIR | --list
   simulate  --model NAME [--scheme NAME] [--type T] [--mem M] [--grid N]
             [--platform FILE.json] [--batch N] [--seed N] [--overlap]
@@ -67,6 +74,9 @@ fn parse_model(name: &str, batch: usize) -> Result<Workload> {
         "vision_mamba" | "vim" => models::vision_mamba(batch),
         "hydranet" => models::hydranet(batch),
         "hydranet_branched" => models::hydranet_branched(batch),
+        // Transformer-scale blocks (ISSUE 7): decode-shaped GPT-2.
+        "gpt2" | "gpt2_small" => models::gpt2_small(batch),
+        "gpt2_large" => models::gpt2_large(batch),
         // Two-tenant fused scenario (graph IR multi-model composition).
         "multi" => Workload::multi_model(&[
             models::alexnet(batch),
@@ -177,13 +187,30 @@ fn cmd_optimize(mut args: Args) -> Result<()> {
         o => return Err(Error::msg(format!("unknown objective '{o}'"))),
     };
     let seed = args.get_usize("seed", 42).map_err(Error::msg)? as u64;
+    let islands = args.get_usize("islands", 1).map_err(Error::msg)?;
+    let migration_interval =
+        args.get_usize("migration-interval", 4).map_err(Error::msg)?;
+    let profile = args.flag("profile");
     args.finish().map_err(Error::msg)?;
     if list {
         list_platforms();
         return Ok(());
     }
+    ensure!(islands >= 1, "--islands must be >= 1");
+    ensure!(migration_interval >= 1, "--migration-interval must be >= 1");
+    if (islands > 1 || profile) && scheme != "ga" {
+        return Err(Error::msg(
+            "--islands/--migration-interval/--profile apply to --scheme ga",
+        ));
+    }
 
-    let registry = SchedulerRegistry::standard(seed);
+    let ga_params =
+        GaParams { islands, migration_interval, ..GaParams::default() };
+    let registry = SchedulerRegistry::with_params(
+        ga_params.clone(),
+        Duration::from_secs(20),
+        seed,
+    );
     let scheduler = registry.require(&scheme)?;
     // The headline 4x4 type-A HBM preset stays the default; a JSON
     // description overrides the preset knobs.
@@ -208,6 +235,9 @@ fn cmd_optimize(mut args: Args) -> Result<()> {
         plat.globals().len(),
         scheduler.name()
     );
+    if profile {
+        return profile_ga(engine.scenario(), &ga_params, seed);
+    }
     let t0 = std::time::Instant::now();
     let base = engine.schedule(&registry, "baseline")?;
     let planned = engine.schedule_with(scheduler)?;
@@ -233,6 +263,53 @@ fn cmd_optimize(mut args: Args) -> Result<()> {
     if plan.alloc.parts.len() > 8 {
         println!("  ... ({} ops total)", plan.alloc.parts.len());
     }
+    Ok(())
+}
+
+/// `optimize --profile`: one GA run with the per-phase wall-clock split
+/// (fitness eval | breeding | ring migration), then a timed DES
+/// simulation of the winning plan.
+fn profile_ga(
+    scenario: &Scenario,
+    ga_params: &GaParams,
+    seed: u64,
+) -> Result<()> {
+    use mcmcomm::netsim::sim::SimConfig;
+
+    let mut params = ga_params.clone();
+    params.seed = seed;
+    let t0 = std::time::Instant::now();
+    let r = ga::optimize(
+        scenario.platform(),
+        scenario.workload(),
+        scenario.flags(),
+        scenario.objective(),
+        &params,
+    );
+    let ga_wall = t0.elapsed();
+    let plan = scenario.plan("ga", r.alloc, scenario.flags(), seed);
+    let ts = std::time::Instant::now();
+    let sim = scenario.simulate_with(&plan, &SimConfig::default())?;
+    let sim_wall = ts.elapsed();
+
+    let s = |ns: u64| ns as f64 / 1e9;
+    println!(
+        "ga profile ({} island(s), {} generation(s)):",
+        params.islands.max(1),
+        r.generations_run
+    );
+    println!("  eval      : {:>9.3}s (summed across workers)",
+             s(r.profile.eval_ns));
+    println!("  breeding  : {:>9.3}s", s(r.profile.breed_ns));
+    println!("  migration : {:>9.3}s", s(r.profile.migration_ns));
+    println!("  ga wall   : {:>9.3}s", ga_wall.as_secs_f64());
+    println!("  sim       : {:>9.3}s (DES of the winning plan)",
+             sim_wall.as_secs_f64());
+    println!(
+        "best objective {:.3e} | simulated makespan {:.4} ms",
+        r.objective_value,
+        sim.makespan_ns / 1e6
+    );
     Ok(())
 }
 

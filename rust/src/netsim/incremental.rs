@@ -1,0 +1,515 @@
+//! Incremental DES re-simulation: delta-eval sibling of
+//! [`super::sim::simulate_plan`] for optimizer loops that perturb a few
+//! genes between simulations.
+//!
+//! A GA mutation changes one or two ops' partitions (or one edge's
+//! collection column); re-simulating the whole plan re-lowers and
+//! re-runs every op even though the event history is bit-identical up
+//! to the first affected op. [`IncrementalSim`] exploits the
+//! Conformance lowering's layer-sequential barrier, which makes each op
+//! boundary a quiescent cut of the event loop:
+//!
+//! 1. **Diff** the new allocation against the cached one: an op is
+//!    *affected* if its partition changed, if an incident
+//!    redistribution decision flipped, or if it consumes a still-adopted
+//!    exchange whose producer genes / collection column changed. The
+//!    dirty frontier is the minimum affected op.
+//! 2. **Re-lower the suffix**: the cached task prefix below the
+//!    frontier is kept (routes are shared `Arc` slices, so this is a
+//!    cheap structural clone); ops at or after the frontier are lowered
+//!    again via the same [`super::sim::lower_op`] the full path uses.
+//! 3. **Resume the event loop** from the latest [`Checkpoint`] at or
+//!    before the frontier (sparse snapshots of `(clock, link_bytes)` at
+//!    op boundaries), copying the cached outcome's start/finish for the
+//!    unchanged prefix.
+//!
+//! Resuming is exact: the event loop iterates tasks in index order for
+//! every per-step decision, so the suffix replays the same
+//! floating-point arithmetic a from-scratch run would. Debug builds
+//! re-simulate from scratch on every incremental call and assert the
+//! lowered tasks, makespan, per-task finish times and per-link byte
+//! counters are bit-identical.
+
+use std::sync::Arc;
+
+use crate::cost::evaluator::OptFlags;
+use crate::cost::scratch::TermBufs;
+use crate::err;
+use crate::partition::Allocation;
+use crate::platform::Platform;
+use crate::topology::links::{LinkGraph, RouteCache};
+use crate::util::error::Result;
+use crate::workload::Workload;
+
+use super::sim::{
+    edge_redist_decision, lower_op, lower_plan, run_tasks_resumable,
+    Checkpoint, LowerCtx, LoweredPlan, RunOutcome, SimConfig, SimMode,
+};
+
+/// Telemetry for the incremental path (tests + the hotpath bench).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IncSimStats {
+    /// From-scratch simulations (first call, or no usable checkpoint).
+    pub full_runs: u64,
+    /// Calls that reused a prefix of the cached run.
+    pub incremental_runs: u64,
+    /// Calls whose allocation produced an identical plan (no re-run).
+    pub noop_runs: u64,
+    /// Ops whose lowered tasks were reused across incremental calls.
+    pub ops_reused: u64,
+    /// Ops re-lowered across incremental calls.
+    pub ops_relowered: u64,
+    /// Tasks skipped by checkpoint resume across incremental calls.
+    pub tasks_resumed: u64,
+}
+
+struct CachedRun {
+    alloc: Allocation,
+    lowered: LoweredPlan,
+    outcome: RunOutcome,
+    checkpoints: Vec<Checkpoint>,
+}
+
+/// A re-simulation session bound to one `(platform, workload, flags)`
+/// problem. Call [`IncrementalSim::simulate`] with successive
+/// allocations; each call returns the same makespan
+/// [`super::sim::simulate_plan`] would (bit-identical, asserted in
+/// debug builds) while re-running only the affected suffix.
+pub struct IncrementalSim {
+    plat: Platform,
+    wl: Workload,
+    flags: OptFlags,
+    hop_latency_ns: f64,
+    graph: Arc<LinkGraph>,
+    ctx: LowerCtx,
+    routes: RouteCache,
+    bufs: TermBufs,
+    cached: Option<CachedRun>,
+    stats: IncSimStats,
+}
+
+impl IncrementalSim {
+    /// Requires [`SimMode::Conformance`]: the layer-sequential barrier
+    /// is what makes op boundaries quiescent cuts the resume can
+    /// restart from. Overlap-mode plans have no such cuts.
+    pub fn new(
+        plat: &Platform,
+        wl: &Workload,
+        flags: OptFlags,
+        cfg: &SimConfig,
+    ) -> Result<IncrementalSim> {
+        if cfg.mode != SimMode::Conformance {
+            return Err(err!(
+                "incremental re-simulation requires SimMode::Conformance \
+                 (op boundaries are only quiescent under the \
+                 layer-sequential barrier)"
+            ));
+        }
+        Ok(IncrementalSim {
+            plat: plat.clone(),
+            wl: wl.clone(),
+            flags,
+            hop_latency_ns: cfg.hop_latency_ns,
+            graph: plat.link_graph_shared(flags.diagonal),
+            ctx: LowerCtx::new(plat, wl),
+            routes: RouteCache::new(),
+            bufs: TermBufs::default(),
+            cached: None,
+            stats: IncSimStats::default(),
+        })
+    }
+
+    pub fn stats(&self) -> IncSimStats {
+        self.stats
+    }
+
+    /// `(hits, misses)` of the persistent route memo.
+    pub fn route_cache_stats(&self) -> (usize, usize) {
+        self.routes.stats()
+    }
+
+    /// Sparse checkpoint schedule: roughly 64 op boundaries, at least
+    /// every op for small workloads.
+    fn boundaries(op_task_start: &[usize]) -> Vec<usize> {
+        let n_ops = op_task_start.len() - 1;
+        let step = (n_ops / 64).max(1);
+        (1..n_ops).step_by(step).map(|i| op_task_start[i]).collect()
+    }
+
+    /// Simulated end-to-end makespan of `alloc` — bit-identical to
+    /// `simulate_plan(..).makespan_ns`.
+    pub fn simulate(&mut self, alloc: &Allocation) -> Result<f64> {
+        if alloc.parts.len() != self.wl.ops.len()
+            || alloc.collect_cols.len() != self.wl.edges.len()
+        {
+            return Err(err!(
+                "allocation arity mismatch: {} partitions / {} collect \
+                 cols for {} ops / {} edges",
+                alloc.parts.len(),
+                alloc.collect_cols.len(),
+                self.wl.ops.len(),
+                self.wl.edges.len()
+            ));
+        }
+        match self.cached.take() {
+            None => self.full_run(alloc),
+            Some(prev) => self.delta_run(alloc, prev),
+        }
+    }
+
+    fn full_run(&mut self, alloc: &Allocation) -> Result<f64> {
+        self.stats.full_runs += 1;
+        let lowered = lower_plan(
+            &self.plat,
+            &self.wl,
+            alloc,
+            self.flags,
+            SimMode::Conformance,
+            &self.ctx,
+            &self.graph,
+            &mut self.routes,
+        )?;
+        let bounds = Self::boundaries(&lowered.op_task_start);
+        let (outcome, checkpoints) = run_tasks_resumable(
+            &self.graph,
+            &lowered.tasks,
+            self.hop_latency_ns,
+            &bounds,
+            None,
+        )?;
+        let makespan = outcome.makespan_ns;
+        self.cached = Some(CachedRun {
+            alloc: alloc.clone(),
+            lowered,
+            outcome,
+            checkpoints,
+        });
+        Ok(makespan)
+    }
+
+    fn delta_run(
+        &mut self,
+        alloc: &Allocation,
+        prev: CachedRun,
+    ) -> Result<f64> {
+        let n_ops = self.wl.ops.len();
+
+        // ---- diff: which ops lower differently under the new genes?
+        let part_changed: Vec<bool> = (0..n_ops)
+            .map(|i| {
+                let (a, b) = (&alloc.parts[i], &prev.alloc.parts[i]);
+                a.px != b.px || a.py != b.py
+            })
+            .collect();
+        let mut affected = part_changed.clone();
+        let mut redist_edge = prev.lowered.redist_edge.clone();
+        for (e, edge) in self.wl.edges.iter().enumerate() {
+            let touched = part_changed[edge.src]
+                || part_changed[edge.dst]
+                || alloc.collect_cols[e] != prev.alloc.collect_cols[e];
+            if !touched {
+                continue;
+            }
+            let adopt = edge_redist_decision(
+                &self.plat,
+                &self.wl,
+                alloc,
+                self.flags,
+                &self.ctx,
+                e,
+                &mut self.bufs,
+            );
+            if adopt != redist_edge[e] {
+                // A decision flip swaps the producer's writeback for an
+                // exchange and rewrites the consumer's input stage.
+                affected[edge.src] = true;
+                affected[edge.dst] = true;
+            } else if adopt {
+                // Still redistributing, but the producer genes / the
+                // collection column shape the consumer's exchange flows.
+                affected[edge.dst] = true;
+            }
+            redist_edge[e] = adopt;
+        }
+        let frontier = match affected.iter().position(|&a| a) {
+            Some(f) => f,
+            None => {
+                // Plan-identical allocation: nothing to re-run.
+                self.stats.noop_runs += 1;
+                let makespan = prev.outcome.makespan_ns;
+                self.cached = Some(prev);
+                return Ok(makespan);
+            }
+        };
+        self.stats.incremental_runs += 1;
+        self.stats.ops_reused += frontier as u64;
+        self.stats.ops_relowered += (n_ops - frontier) as u64;
+
+        // ---- re-lower the suffix onto the unchanged prefix.
+        let mut lowered = prev.lowered.clone();
+        lowered.truncate_to_op(frontier);
+        lowered.redist_edge = redist_edge;
+        for i in frontier..n_ops {
+            lower_op(
+                &self.plat,
+                &self.wl,
+                alloc,
+                self.flags,
+                SimMode::Conformance,
+                &self.ctx,
+                &self.graph,
+                &mut self.routes,
+                i,
+                &mut lowered,
+            )?;
+        }
+
+        // ---- resume from the latest checkpoint at or before the
+        // frontier (the prefix below it is bit-identical by
+        // construction).
+        let cut = lowered.op_task_start[frontier];
+        let resume =
+            prev.checkpoints.iter().rev().find(|c| c.boundary <= cut);
+        self.stats.tasks_resumed += resume.map_or(0, |c| c.boundary as u64);
+        let bounds = Self::boundaries(&lowered.op_task_start);
+        let (outcome, mut fresh_ckpts) = run_tasks_resumable(
+            &self.graph,
+            &lowered.tasks,
+            self.hop_latency_ns,
+            &bounds,
+            resume.map(|c| (c, &prev.outcome)),
+        )?;
+        let mut checkpoints: Vec<Checkpoint> = match resume {
+            Some(c) => prev
+                .checkpoints
+                .iter()
+                .filter(|k| k.boundary <= c.boundary)
+                .cloned()
+                .collect(),
+            None => Vec::new(),
+        };
+        checkpoints.append(&mut fresh_ckpts);
+
+        // Debug builds re-lower and re-run from scratch and insist the
+        // incremental path is bit-identical (the ISSUE-7 invariant,
+        // mirroring CachedEval's delta-vs-full assert).
+        #[cfg(debug_assertions)]
+        {
+            use super::sim::Work;
+            let full = lower_plan(
+                &self.plat,
+                &self.wl,
+                alloc,
+                self.flags,
+                SimMode::Conformance,
+                &self.ctx,
+                &self.graph,
+                &mut self.routes,
+            )?;
+            assert_eq!(
+                full.tasks.len(),
+                lowered.tasks.len(),
+                "incremental lowering diverged in task count"
+            );
+            assert_eq!(full.op_task_start, lowered.op_task_start);
+            assert_eq!(full.redist_edge, lowered.redist_edge);
+            for (t, (a, b)) in
+                full.tasks.iter().zip(&lowered.tasks).enumerate()
+            {
+                assert_eq!(a.deps, b.deps, "task {t} deps diverged");
+                match (&a.work, &b.work) {
+                    (
+                        Work::Compute { dur_ns: x },
+                        Work::Compute { dur_ns: y },
+                    ) => assert_eq!(x.to_bits(), y.to_bits()),
+                    (
+                        Work::Transfer { route: ra, bytes: ba },
+                        Work::Transfer { route: rb, bytes: bb },
+                    ) => {
+                        assert_eq!(ba.to_bits(), bb.to_bits());
+                        assert_eq!(&ra[..], &rb[..]);
+                    }
+                    _ => panic!("task {t} work kind diverged"),
+                }
+            }
+            let (fo, _) = run_tasks_resumable(
+                &self.graph,
+                &full.tasks,
+                self.hop_latency_ns,
+                &[],
+                None,
+            )?;
+            assert_eq!(
+                fo.makespan_ns.to_bits(),
+                outcome.makespan_ns.to_bits(),
+                "incremental makespan diverged from full re-simulation"
+            );
+            for (t, (a, b)) in
+                fo.finish.iter().zip(&outcome.finish).enumerate()
+            {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "incremental finish time diverged at task {t}"
+                );
+            }
+            for (l, (a, b)) in
+                fo.link_bytes.iter().zip(&outcome.link_bytes).enumerate()
+            {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "incremental link bytes diverged at link {l}"
+                );
+            }
+        }
+
+        let makespan = outcome.makespan_ns;
+        self.cached = Some(CachedRun {
+            alloc: alloc.clone(),
+            lowered,
+            outcome,
+            checkpoints,
+        });
+        Ok(makespan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::sim::simulate_plan;
+    use crate::partition::{uniform_allocation, Partition};
+    use crate::workload::models::{alexnet, gpt2, Gpt2Config};
+
+    /// Move one row unit from the fullest to the emptiest X stripe —
+    /// always a valid perturbation (sum preserved, no underflow).
+    fn nudge(p: &mut Partition) {
+        let (mut hi, mut lo) = (0usize, 0usize);
+        for (j, &v) in p.px.iter().enumerate() {
+            if v > p.px[hi] {
+                hi = j;
+            }
+            if v < p.px[lo] {
+                lo = j;
+            }
+        }
+        if hi == lo {
+            lo = (hi + 1) % p.px.len();
+        }
+        p.px[hi] -= 1;
+        p.px[lo] += 1;
+    }
+
+    #[test]
+    fn matches_full_simulation_across_perturbations() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let flags = OptFlags::ALL;
+        let cfg = SimConfig::default();
+        let mut inc = IncrementalSim::new(&plat, &wl, flags, &cfg).unwrap();
+        let mut alloc = uniform_allocation(&plat, &wl);
+
+        let full = simulate_plan(&plat, &wl, &alloc, flags, &cfg).unwrap();
+        let first = inc.simulate(&alloc).unwrap();
+        assert_eq!(first.to_bits(), full.makespan_ns.to_bits());
+
+        // Late-op perturbation: most of the plan is reused.
+        let late = wl.ops.len() - 1;
+        nudge(&mut alloc.parts[late]);
+        let full2 = simulate_plan(&plat, &wl, &alloc, flags, &cfg).unwrap();
+        let second = inc.simulate(&alloc).unwrap();
+        assert_eq!(second.to_bits(), full2.makespan_ns.to_bits());
+
+        // Mid-op perturbation on top of the previous state.
+        nudge(&mut alloc.parts[wl.ops.len() / 2]);
+        let full3 = simulate_plan(&plat, &wl, &alloc, flags, &cfg).unwrap();
+        let third = inc.simulate(&alloc).unwrap();
+        assert_eq!(third.to_bits(), full3.makespan_ns.to_bits());
+
+        let st = inc.stats();
+        assert_eq!(st.full_runs, 1);
+        assert_eq!(st.incremental_runs, 2);
+        assert!(st.ops_reused > 0, "late perturbation must reuse a prefix");
+        let (hits, misses) = inc.route_cache_stats();
+        assert!(hits > misses, "route memo should dominate after warmup");
+    }
+
+    #[test]
+    fn collect_col_change_is_tracked() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let flags = OptFlags::ALL;
+        let cfg = SimConfig::default();
+        let mut inc = IncrementalSim::new(&plat, &wl, flags, &cfg).unwrap();
+        let mut alloc = uniform_allocation(&plat, &wl);
+        inc.simulate(&alloc).unwrap();
+        // Sweep one edge's collection column through every value; the
+        // adaptive decision may flip either way and the incremental
+        // result must track the full simulation bit for bit.
+        let e = *wl.redistributable_edges().last().unwrap();
+        for c in 0..plat.spec().ydim {
+            alloc.collect_cols[e] = c;
+            let full =
+                simulate_plan(&plat, &wl, &alloc, flags, &cfg).unwrap();
+            let got = inc.simulate(&alloc).unwrap();
+            assert_eq!(got.to_bits(), full.makespan_ns.to_bits(), "col {c}");
+        }
+    }
+
+    #[test]
+    fn identical_allocation_is_a_noop() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let cfg = SimConfig::default();
+        let mut inc =
+            IncrementalSim::new(&plat, &wl, OptFlags::ALL, &cfg).unwrap();
+        let alloc = uniform_allocation(&plat, &wl);
+        let a = inc.simulate(&alloc).unwrap();
+        let b = inc.simulate(&alloc).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert_eq!(inc.stats().noop_runs, 1);
+        assert_eq!(inc.stats().incremental_runs, 0);
+    }
+
+    #[test]
+    fn gpt2_block_perturbation_matches_full() {
+        // A transformer-shaped workload: attention sync ops + the
+        // redistributable MLP seam.
+        let cfg_model = Gpt2Config {
+            layers: 2,
+            heads: 2,
+            d_model: 64,
+            d_ff: 128,
+            seq: 8,
+            kv_len: 8,
+            vocab: 96,
+        };
+        let wl = gpt2(&cfg_model, 1);
+        let plat = Platform::headline();
+        let flags = OptFlags::ALL;
+        let cfg = SimConfig::default();
+        let mut inc = IncrementalSim::new(&plat, &wl, flags, &cfg).unwrap();
+        let mut alloc = uniform_allocation(&plat, &wl);
+        inc.simulate(&alloc).unwrap();
+        // Perturb an op ~90% of the way in (the bench's access
+        // pattern): deep prefix reuse.
+        let deep = wl.ops.len() * 9 / 10;
+        nudge(&mut alloc.parts[deep]);
+        let full = simulate_plan(&plat, &wl, &alloc, flags, &cfg).unwrap();
+        let got = inc.simulate(&alloc).unwrap();
+        assert_eq!(got.to_bits(), full.makespan_ns.to_bits());
+        assert!(inc.stats().ops_reused as usize >= wl.ops.len() / 2);
+    }
+
+    #[test]
+    fn overlap_mode_is_rejected() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let cfg =
+            SimConfig { mode: SimMode::Overlap, hop_latency_ns: 0.0 };
+        let err = IncrementalSim::new(&plat, &wl, OptFlags::ALL, &cfg)
+            .unwrap_err();
+        assert!(err.to_string().contains("Conformance"), "{err}");
+    }
+}

@@ -14,10 +14,12 @@
 //! each flow becomes one dependency-free transfer task.
 
 pub mod conformance;
+pub mod incremental;
 pub mod sim;
 pub mod vtime;
 
 pub use conformance::{check_plan, scheme_tolerance, Conformance};
+pub use incremental::{IncSimStats, IncrementalSim};
 pub use sim::{simulate_plan, SimConfig, SimMode, SimReport};
 pub use vtime::ModulePool;
 

@@ -52,6 +52,8 @@
 //! strategy code as the evaluator ([`edge_decision`]), so the simulator
 //! executes exactly the plan the cost model priced.
 
+use std::sync::Arc;
+
 use crate::cost::compute::comp_ns;
 use crate::cost::energy::comp_energy_pj;
 use crate::cost::evaluator::edge_decision;
@@ -59,7 +61,7 @@ use crate::cost::scratch::TermBufs;
 use crate::err;
 use crate::partition::Allocation;
 use crate::platform::Platform;
-use crate::topology::links::{LinkGraph, LinkId, NodeId};
+use crate::topology::links::{LinkGraph, LinkId, NodeId, RouteCache};
 use crate::topology::Pos;
 use crate::util::error::Result;
 use crate::workload::{EdgeId, Workload};
@@ -68,11 +70,13 @@ use super::maxmin_rates;
 use crate::cost::evaluator::OptFlags;
 
 /// What the event loop schedules: a fixed-duration compute event or a
-/// fluid byte transfer along a fixed route.
+/// fluid byte transfer along a fixed route. Routes are shared `Arc`
+/// slices so cloning a lowered plan (incremental re-simulation) and
+/// memoized routing ([`RouteCache`]) never copy path data.
 #[derive(Debug, Clone)]
 pub(crate) enum Work {
     Compute { dur_ns: f64 },
-    Transfer { route: Vec<LinkId>, bytes: f64 },
+    Transfer { route: Arc<[LinkId]>, bytes: f64 },
 }
 
 /// One node of the lowered dependency graph.
@@ -84,8 +88,14 @@ pub(crate) struct Task {
 }
 
 impl Task {
-    pub(crate) fn transfer(route: Vec<LinkId>, bytes: f64) -> Task {
-        Task { work: Work::Transfer { route, bytes }, deps: Vec::new() }
+    pub(crate) fn transfer(
+        route: impl Into<Arc<[LinkId]>>,
+        bytes: f64,
+    ) -> Task {
+        Task {
+            work: Work::Transfer { route: route.into(), bytes },
+            deps: Vec::new(),
+        }
     }
 }
 
@@ -108,6 +118,25 @@ enum State {
     Done,
 }
 
+/// A clean cut of the event loop: every task with id below `boundary`
+/// is done, none at or above it has started, and the clock plus the
+/// per-link byte counters are snapshotted. Only the Conformance
+/// lowering produces such moments (the layer-sequential barrier makes
+/// each op boundary a quiescent point); recording is best-effort — a
+/// boundary crossed inside an instant-completion cascade is skipped
+/// and a resume simply falls back to an earlier checkpoint.
+///
+/// `link_bytes` must be snapshotted rather than recomputed: completed
+/// transfers leave a sub-tolerance residual undelivered (the `1e-9`
+/// completion rule), so the counters are not a function of which tasks
+/// finished.
+#[derive(Debug, Clone)]
+pub(crate) struct Checkpoint {
+    pub(crate) boundary: usize,
+    pub(crate) now: f64,
+    pub(crate) link_bytes: Vec<f64>,
+}
+
 /// Advance the task graph to completion. Degenerate tasks (zero bytes,
 /// empty route, zero duration) complete the instant their dependencies
 /// do. Transfers pay `(hops - 1) * hop_latency_ns` serially before
@@ -118,6 +147,29 @@ pub(crate) fn run_tasks(
     tasks: &[Task],
     hop_latency_ns: f64,
 ) -> Result<RunOutcome> {
+    run_tasks_resumable(graph, tasks, hop_latency_ns, &[], None)
+        .map(|(out, _)| out)
+}
+
+/// [`run_tasks`] with checkpoint recording and prefix resume.
+///
+/// `boundaries` (strictly increasing task indices) mark the moments to
+/// snapshot. `resume` restarts from a prior run's [`Checkpoint`],
+/// copying the cached outcome's start/finish times for the task prefix
+/// — valid only when `tasks[..boundary]` is bit-identical to the run
+/// that produced the checkpoint. Resuming is exact rather than
+/// approximate: every per-step decision (max-min rates, `dt`, byte
+/// advancement, completion detection) iterates tasks in index order,
+/// so the suffix replays the same floating-point arithmetic the full
+/// run would and the result is bit-identical (asserted in debug builds
+/// by [`super::incremental::IncrementalSim`]).
+pub(crate) fn run_tasks_resumable(
+    graph: &LinkGraph,
+    tasks: &[Task],
+    hop_latency_ns: f64,
+    boundaries: &[usize],
+    resume: Option<(&Checkpoint, &RunOutcome)>,
+) -> Result<(RunOutcome, Vec<Checkpoint>)> {
     let n = tasks.len();
     let mut unmet: Vec<usize> = tasks.iter().map(|t| t.deps.len()).collect();
     let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
@@ -135,7 +187,7 @@ pub(crate) fn run_tasks(
     let routes: Vec<&[LinkId]> = tasks
         .iter()
         .map(|t| match &t.work {
-            Work::Transfer { route, .. } => route.as_slice(),
+            Work::Transfer { route, .. } => &route[..],
             Work::Compute { .. } => &[],
         })
         .collect();
@@ -148,9 +200,50 @@ pub(crate) fn run_tasks(
     let mut link_bytes = vec![0.0f64; graph.links.len()];
     let mut done = 0usize;
     let mut now = 0.0f64;
+    let mut checkpoints: Vec<Checkpoint> = Vec::new();
+    let mut next_ckpt = 0usize;
+
+    let base = match resume {
+        Some((ck, prev)) => {
+            if ck.boundary > n
+                || prev.start.len() < ck.boundary
+                || prev.finish.len() < ck.boundary
+                || ck.link_bytes.len() != link_bytes.len()
+            {
+                return Err(err!(
+                    "resume checkpoint (boundary {}) does not fit the \
+                     task graph ({} tasks, {} links)",
+                    ck.boundary,
+                    n,
+                    link_bytes.len()
+                ));
+            }
+            for i in 0..ck.boundary {
+                state[i] = State::Done;
+                start[i] = prev.start[i];
+                finish[i] = prev.finish[i];
+            }
+            done = ck.boundary;
+            now = ck.now;
+            link_bytes.copy_from_slice(&ck.link_bytes);
+            // Dependencies inside the resumed prefix are already met.
+            for i in ck.boundary..n {
+                unmet[i] = tasks[i]
+                    .deps
+                    .iter()
+                    .filter(|&&d| d >= ck.boundary)
+                    .count();
+            }
+            ck.boundary
+        }
+        None => 0,
+    };
+    while next_ckpt < boundaries.len() && boundaries[next_ckpt] <= base {
+        next_ckpt += 1;
+    }
 
     let mut ready: Vec<usize> =
-        (0..n).filter(|&i| unmet[i] == 0).collect();
+        (base..n).filter(|&i| unmet[i] == 0).collect();
     let mut completions: Vec<usize> = Vec::new();
     // Reused across iterations (the maxmin internals still allocate
     // per call — acceptable for an oracle path that is not the GA hot
@@ -262,7 +355,7 @@ pub(crate) fn run_tasks(
                         if rate[i] > 0.0 {
                             let moved = rate[i] * dt;
                             remaining[i] -= moved;
-                            for &l in route {
+                            for &l in route.iter() {
                                 link_bytes[l] += moved;
                             }
                             if remaining[i] <= 1e-9 * bytes.max(1.0) {
@@ -287,8 +380,28 @@ pub(crate) fn run_tasks(
             }
         }
         completions.clear();
+        // Snapshot right after completions: the newly readied tasks
+        // have not been activated yet, so a boundary hit here is a
+        // quiescent cut. Boundaries crossed mid-cascade are skipped.
+        while next_ckpt < boundaries.len() && done > boundaries[next_ckpt] {
+            next_ckpt += 1;
+        }
+        if next_ckpt < boundaries.len() && done == boundaries[next_ckpt] {
+            let b = boundaries[next_ckpt];
+            debug_assert!(
+                state[..b].iter().all(|s| *s == State::Done)
+                    && state[b..].iter().all(|s| *s == State::Pending),
+                "checkpoint boundary {b} is not a quiescent cut"
+            );
+            checkpoints.push(Checkpoint {
+                boundary: b,
+                now,
+                link_bytes: link_bytes.clone(),
+            });
+            next_ckpt += 1;
+        }
     }
-    Ok(RunOutcome { start, finish, link_bytes, makespan_ns: now })
+    Ok((RunOutcome { start, finish, link_bytes, makespan_ns: now }, checkpoints))
 }
 
 // ---------------------------------------------------------------------
@@ -335,7 +448,7 @@ pub enum SimPhase {
 }
 
 #[derive(Debug, Clone, Copy)]
-struct TaskMeta {
+pub(crate) struct TaskMeta {
     op: usize,
     phase: SimPhase,
     edge: Option<EdgeId>,
@@ -496,6 +609,423 @@ fn push(
     id
 }
 
+/// Gene-independent lowering context: the sole-edge maps (drive the
+/// redistribution flag derivation) and the serving attachment per
+/// chiplet. Built once per `(platform, workload)` binding and reused
+/// across incremental re-lowerings.
+pub(crate) struct LowerCtx {
+    pub(crate) in_edge: Vec<Option<usize>>,
+    pub(crate) out_edge: Vec<Option<usize>>,
+    /// Serving attachment index per chiplet (row-major, matching
+    /// chiplet node ids); memory nodes follow the chiplets in
+    /// attachment declaration order.
+    serving: Vec<usize>,
+}
+
+impl LowerCtx {
+    pub(crate) fn new(plat: &Platform, wl: &Workload) -> LowerCtx {
+        let (mut in_edge, mut out_edge) = (Vec::new(), Vec::new());
+        wl.sole_edges_into(&mut in_edge, &mut out_edge);
+        let atts = &plat.spec().attachments;
+        let serving = plat
+            .positions()
+            .map(|p| {
+                let g = plat.nearest_global(p);
+                atts.iter()
+                    .position(|a| a.pos == g)
+                    .expect("nearest_global returns an attachment position")
+            })
+            .collect();
+        LowerCtx { in_edge, out_edge, serving }
+    }
+}
+
+/// The §6.1 adaptive decision for one dataflow edge, exactly as the
+/// evaluator takes it (legality gate + adaptive strategy). Exposed per
+/// edge so the incremental simulator can re-decide just the edges whose
+/// genes changed.
+pub(crate) fn edge_redist_decision(
+    plat: &Platform,
+    wl: &Workload,
+    alloc: &Allocation,
+    flags: OptFlags,
+    ctx: &LowerCtx,
+    e: usize,
+    bufs: &mut TermBufs,
+) -> bool {
+    if !flags.redistribution
+        || !wl.edge_redistributable_with(e, &ctx.in_edge, &ctx.out_edge)
+    {
+        return false;
+    }
+    let edge = wl.edges[e];
+    edge_decision(
+        plat,
+        &wl.ops[edge.src],
+        &wl.ops[edge.dst],
+        &alloc.parts[edge.src],
+        &alloc.parts[edge.dst],
+        alloc.collect_cols[e],
+        flags.diagonal,
+        bufs,
+    )
+    .is_some()
+}
+
+/// One plan lowered to the event graph, with enough per-op structure to
+/// re-lower a suffix in place (incremental re-simulation).
+#[derive(Debug, Clone)]
+pub(crate) struct LoweredPlan {
+    pub(crate) tasks: Vec<Task>,
+    pub(crate) meta: Vec<TaskMeta>,
+    /// `tasks[op_task_start[i]..op_task_start[i + 1]]` belong to op `i`
+    /// (length `n_ops + 1`).
+    pub(crate) op_task_start: Vec<usize>,
+    pub(crate) compute_ids: Vec<Vec<usize>>,
+    pub(crate) op_done_ids: Vec<Vec<usize>>,
+    pub(crate) redist_edge: Vec<bool>,
+}
+
+impl LoweredPlan {
+    fn empty(wl: &Workload, redist_edge: Vec<bool>) -> LoweredPlan {
+        LoweredPlan {
+            tasks: Vec::new(),
+            meta: Vec::new(),
+            op_task_start: vec![0],
+            compute_ids: Vec::with_capacity(wl.ops.len()),
+            op_done_ids: Vec::with_capacity(wl.ops.len()),
+            redist_edge,
+        }
+    }
+
+    /// Drop every op at or after `frontier`, keeping the (unchanged)
+    /// prefix; the incremental simulator then re-lowers the suffix.
+    pub(crate) fn truncate_to_op(&mut self, frontier: usize) {
+        let cut = self.op_task_start[frontier];
+        self.tasks.truncate(cut);
+        self.meta.truncate(cut);
+        self.op_task_start.truncate(frontier + 1);
+        self.compute_ids.truncate(frontier);
+        self.op_done_ids.truncate(frontier);
+    }
+}
+
+/// Lower every op of a plan (see the module docs for the lowering).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lower_plan(
+    plat: &Platform,
+    wl: &Workload,
+    alloc: &Allocation,
+    flags: OptFlags,
+    mode: SimMode,
+    ctx: &LowerCtx,
+    graph: &LinkGraph,
+    routes: &mut RouteCache,
+) -> Result<LoweredPlan> {
+    let mut bufs = TermBufs::default();
+    let redist_edge: Vec<bool> = (0..wl.edges.len())
+        .map(|e| {
+            edge_redist_decision(plat, wl, alloc, flags, ctx, e, &mut bufs)
+        })
+        .collect();
+    let mut lp = LoweredPlan::empty(wl, redist_edge);
+    for i in 0..wl.ops.len() {
+        lower_op(plat, wl, alloc, flags, mode, ctx, graph, routes, i, &mut lp)?;
+    }
+    Ok(lp)
+}
+
+/// Append op `i`'s tasks to `lp` (redistribution, load, compute,
+/// writeback — the module-docs lowering). Requires ops `0..i` already
+/// lowered; `lp.redist_edge` must hold the adopted decisions for every
+/// edge incident to ops `<= i`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lower_op(
+    plat: &Platform,
+    wl: &Workload,
+    alloc: &Allocation,
+    flags: OptFlags,
+    mode: SimMode,
+    ctx: &LowerCtx,
+    graph: &LinkGraph,
+    rc: &mut RouteCache,
+    i: usize,
+    lp: &mut LoweredPlan,
+) -> Result<()> {
+    let n_chiplets = plat.num_chiplets();
+    let atts = &plat.spec().attachments;
+    let att_node = |a: usize| -> NodeId { n_chiplets + a };
+    {
+        let op = &wl.ops[i];
+        let part = &alloc.parts[i];
+        let acts_from_redist =
+            ctx.in_edge[i].is_some_and(|e| lp.redist_edge[e]);
+        let skip_store =
+            ctx.out_edge[i].is_some_and(|e| lp.redist_edge[e]);
+        let load_acts = !acts_from_redist;
+        let barrier: Vec<usize> = match mode {
+            SimMode::Conformance => {
+                if i == 0 {
+                    Vec::new()
+                } else {
+                    lp.op_done_ids[i - 1].clone()
+                }
+            }
+            SimMode::Overlap => Vec::new(),
+        };
+
+        // ---- incoming redistribution: §5.2 steps 1-3 as real flows.
+        let mut redist_last: Vec<usize> = Vec::new();
+        if acts_from_redist {
+            let e = ctx.in_edge[i].expect("redistributed op has an edge");
+            let edge = wl.edges[e];
+            let p_op = &wl.ops[edge.src];
+            let p_part = &alloc.parts[edge.src];
+            let c_star = alloc.collect_cols[e];
+            let mut deps0: Vec<usize> = barrier.clone();
+            deps0.extend(lp.compute_ids[edge.src].iter().copied());
+            let rmeta =
+                TaskMeta { op: i, phase: SimPhase::Redistribute, edge: Some(e) };
+
+            // Step 1: row reduction toward the collection column.
+            let mut step1: Vec<usize> = Vec::new();
+            for x in 0..plat.xdim {
+                for y in 0..plat.ydim {
+                    if y == c_star {
+                        continue;
+                    }
+                    let bytes = plat.bytes(p_part.px[x] * p_part.py[y]);
+                    if bytes <= 0.0 {
+                        continue;
+                    }
+                    let route = rc.route(
+                        graph,
+                        graph.chiplet_id(Pos::new(x, y)),
+                        graph.chiplet_id(Pos::new(x, c_star)),
+                    )?;
+                    step1.push(push(
+                        &mut lp.tasks,
+                        &mut lp.meta,
+                        Work::Transfer { route, bytes },
+                        deps0.clone(),
+                        rmeta,
+                    ));
+                }
+            }
+            // Step 2: wormhole row broadcast — one wavefront per
+            // direction, one block transfer of Px[x] x N bytes.
+            let s2_deps =
+                if step1.is_empty() { deps0.clone() } else { step1.clone() };
+            let mut step2: Vec<usize> = Vec::new();
+            for x in 0..plat.xdim {
+                let row_bytes = plat.bytes(p_part.px[x] * p_op.n);
+                if row_bytes <= 0.0 {
+                    continue;
+                }
+                let src = graph.chiplet_id(Pos::new(x, c_star));
+                for far in [0usize, plat.ydim - 1] {
+                    if far == c_star {
+                        continue;
+                    }
+                    let route = rc
+                        .route(graph, src, graph.chiplet_id(Pos::new(x, far)))?;
+                    step2.push(push(
+                        &mut lp.tasks,
+                        &mut lp.meta,
+                        Work::Transfer { route, bytes: row_bytes },
+                        s2_deps.clone(),
+                        rmeta,
+                    ));
+                }
+            }
+            // Step 3: per-boundary cross-row moves, bytes from the
+            // shared `redistribution::step3_boundary_bytes` helper (one
+            // source of truth with the closed form). Direction does not
+            // affect fluid timing — each boundary's duplex vertical
+            // link pair is dedicated — so flows go row b -> b+1.
+            let s3_deps =
+                if step2.is_empty() { s2_deps } else { step2.clone() };
+            let boundary_bytes = crate::redistribution::step3_boundary_bytes(
+                plat, p_op, p_part, part,
+            );
+            let mut step3: Vec<usize> = Vec::new();
+            for (b, &bytes) in boundary_bytes.iter().enumerate() {
+                if bytes <= 0.0 {
+                    continue;
+                }
+                let route = rc.route(
+                    graph,
+                    graph.chiplet_id(Pos::new(b, c_star)),
+                    graph.chiplet_id(Pos::new(b + 1, c_star)),
+                )?;
+                step3.push(push(
+                    &mut lp.tasks,
+                    &mut lp.meta,
+                    Work::Transfer { route, bytes },
+                    s3_deps.clone(),
+                    rmeta,
+                ));
+            }
+            redist_last = if step3.is_empty() { s3_deps } else { step3 };
+        }
+
+        // ---- load: demand-apportioned off-chip pull, then unicast
+        // on-chip distribution.
+        let load_deps: Vec<usize> = if acts_from_redist {
+            redist_last
+        } else {
+            match mode {
+                SimMode::Conformance => barrier.clone(),
+                SimMode::Overlap => {
+                    // Activations come out of memory: wait for every
+                    // producer's writeback (its compute, if the
+                    // producer skipped its store).
+                    let mut d = Vec::new();
+                    for edge in wl.edges.iter().filter(|e| e.dst == i) {
+                        d.extend(lp.op_done_ids[edge.src].iter().copied());
+                    }
+                    d
+                }
+            }
+        };
+        let mut off_unique = plat.bytes(op.k * op.n);
+        if load_acts {
+            off_unique += plat.bytes(op.m * op.k);
+        }
+        let mut demand = vec![0.0f64; n_chiplets];
+        for (idx, p) in plat.positions().enumerate() {
+            let Pos { row: x, col: y } = p;
+            let mut d = plat.bytes(op.k * part.py[y]);
+            if load_acts {
+                d += plat.bytes(part.px[x] * op.k);
+            }
+            demand[idx] = d;
+        }
+        let total_demand: f64 = demand.iter().sum();
+        let mut att_demand = vec![0.0f64; atts.len()];
+        for idx in 0..n_chiplets {
+            att_demand[ctx.serving[idx]] += demand[idx];
+        }
+        let mut off_tasks: Vec<usize> = Vec::new();
+        for (a, att) in atts.iter().enumerate() {
+            let share = if total_demand > 0.0 {
+                att_demand[a] / total_demand
+            } else {
+                0.0
+            };
+            let bytes = off_unique * share;
+            if bytes <= 0.0 {
+                continue;
+            }
+            let route =
+                rc.route(graph, att_node(a), graph.chiplet_id(att.pos))?;
+            off_tasks.push(push(
+                &mut lp.tasks,
+                &mut lp.meta,
+                Work::Transfer { route, bytes },
+                load_deps.clone(),
+                TaskMeta { op: i, phase: SimPhase::LoadOffchip, edge: None },
+            ));
+        }
+        let dist_deps =
+            if off_tasks.is_empty() { load_deps } else { off_tasks };
+        let mut dist_tasks: Vec<usize> = Vec::with_capacity(n_chiplets);
+        for (idx, p) in plat.positions().enumerate() {
+            let route = rc.route(
+                graph,
+                graph.chiplet_id(plat.nearest_global(p)),
+                graph.chiplet_id(p),
+            )?;
+            dist_tasks.push(push(
+                &mut lp.tasks,
+                &mut lp.meta,
+                Work::Transfer { route, bytes: demand[idx] },
+                dist_deps.clone(),
+                TaskMeta { op: i, phase: SimPhase::LoadOnchip, edge: None },
+            ));
+        }
+
+        // ---- compute.
+        let mut comp_tasks: Vec<usize> = Vec::with_capacity(n_chiplets);
+        for (idx, p) in plat.positions().enumerate() {
+            let Pos { row: x, col: y } = p;
+            let dur = comp_ns(plat, op, part.px[x], part.py[y]);
+            let deps = if flags.async_fusion {
+                vec![dist_tasks[idx]]
+            } else {
+                dist_tasks.clone()
+            };
+            comp_tasks.push(push(
+                &mut lp.tasks,
+                &mut lp.meta,
+                Work::Compute { dur_ns: dur },
+                deps,
+                TaskMeta { op: i, phase: SimPhase::Compute, edge: None },
+            ));
+        }
+
+        // ---- writeback (skipped when a redistributed out-edge
+        // replaces the store).
+        let op_done: Vec<usize> = if skip_store {
+            comp_tasks.clone()
+        } else {
+            let out_total = plat.bytes(op.m * op.n);
+            let mut att_out = vec![0.0f64; atts.len()];
+            let mut collect_tasks: Vec<usize> =
+                Vec::with_capacity(n_chiplets);
+            for (idx, p) in plat.positions().enumerate() {
+                let Pos { row: x, col: y } = p;
+                let bytes = plat.bytes(part.px[x] * part.py[y]);
+                att_out[ctx.serving[idx]] += bytes;
+                let route = rc.route(
+                    graph,
+                    graph.chiplet_id(p),
+                    graph.chiplet_id(plat.nearest_global(p)),
+                )?;
+                collect_tasks.push(push(
+                    &mut lp.tasks,
+                    &mut lp.meta,
+                    Work::Transfer { route, bytes },
+                    comp_tasks.clone(),
+                    TaskMeta {
+                        op: i,
+                        phase: SimPhase::StoreOnchip,
+                        edge: None,
+                    },
+                ));
+            }
+            let total_out: f64 = att_out.iter().sum();
+            let mut store_off: Vec<usize> = Vec::new();
+            for (a, att) in atts.iter().enumerate() {
+                let share =
+                    if total_out > 0.0 { att_out[a] / total_out } else { 0.0 };
+                let bytes = out_total * share;
+                if bytes <= 0.0 {
+                    continue;
+                }
+                let route =
+                    rc.route(graph, graph.chiplet_id(att.pos), att_node(a))?;
+                store_off.push(push(
+                    &mut lp.tasks,
+                    &mut lp.meta,
+                    Work::Transfer { route, bytes },
+                    collect_tasks.clone(),
+                    TaskMeta {
+                        op: i,
+                        phase: SimPhase::StoreOffchip,
+                        edge: None,
+                    },
+                ));
+            }
+            if store_off.is_empty() { collect_tasks } else { store_off }
+        };
+        lp.op_done_ids.push(op_done);
+        lp.compute_ids.push(comp_tasks);
+    }
+    lp.op_task_start.push(lp.tasks.len());
+    Ok(())
+}
+
 /// Lower a plan to the event graph and run it to completion (see the
 /// module docs for the lowering). `flags` must be the *effective* flags
 /// the plan was scored under (`Plan::flags`), so the simulator adopts
@@ -519,322 +1049,36 @@ pub fn simulate_plan(
             wl.edges.len()
         ));
     }
-    let graph = plat.link_graph(flags.diagonal);
+    let graph = plat.link_graph_shared(flags.diagonal);
+    let ctx = LowerCtx::new(plat, wl);
+    let mut rc = RouteCache::new();
+    let lp =
+        lower_plan(plat, wl, alloc, flags, cfg.mode, &ctx, &graph, &mut rc)?;
+    let run = run_tasks(&graph, &lp.tasks, cfg.hop_latency_ns)?;
+    Ok(assemble_report(plat, wl, alloc, &graph, &lp, &run))
+}
+
+/// Fold a raw event-loop outcome into the public [`SimReport`] (stage
+/// spans, per-edge exchange windows, Table-2 energy from the simulated
+/// traffic).
+pub(crate) fn assemble_report(
+    plat: &Platform,
+    wl: &Workload,
+    alloc: &Allocation,
+    graph: &LinkGraph,
+    lp: &LoweredPlan,
+    run: &RunOutcome,
+) -> SimReport {
     let n_ops = wl.ops.len();
     let ne = wl.edges.len();
     let n_chiplets = plat.num_chiplets();
-    let atts = &plat.spec().attachments;
-
-    // The same §6.1 adaptive strategy the evaluator commits to, edge by
-    // edge.
-    let (mut in_edge, mut out_edge) = (Vec::new(), Vec::new());
-    wl.sole_edges_into(&mut in_edge, &mut out_edge);
-    let mut bufs = TermBufs::default();
-    let mut redist_edge = vec![false; ne];
-    if flags.redistribution {
-        for (e, edge) in wl.edges.iter().enumerate() {
-            if !wl.edge_redistributable_with(e, &in_edge, &out_edge) {
-                continue;
-            }
-            let adopted = edge_decision(
-                plat,
-                &wl.ops[edge.src],
-                &wl.ops[edge.dst],
-                &alloc.parts[edge.src],
-                &alloc.parts[edge.dst],
-                alloc.collect_cols[e],
-                flags.diagonal,
-                &mut bufs,
-            );
-            redist_edge[e] = adopted.is_some();
-        }
-    }
-
-    // Serving attachment index per chiplet (row-major, matching
-    // chiplet node ids); memory nodes follow the chiplets in
-    // attachment declaration order.
-    let serving: Vec<usize> = plat
-        .positions()
-        .map(|p| {
-            let g = plat.nearest_global(p);
-            atts.iter()
-                .position(|a| a.pos == g)
-                .expect("nearest_global returns an attachment position")
-        })
-        .collect();
-    let att_node = |a: usize| -> NodeId { n_chiplets + a };
-
-    let mut tasks: Vec<Task> = Vec::new();
-    let mut meta: Vec<TaskMeta> = Vec::new();
-    let mut prev_done: Vec<usize> = Vec::new();
-    let mut compute_ids: Vec<Vec<usize>> = Vec::with_capacity(n_ops);
-    let mut op_done_ids: Vec<Vec<usize>> = Vec::with_capacity(n_ops);
-
-    for (i, op) in wl.ops.iter().enumerate() {
-        let part = &alloc.parts[i];
-        let acts_from_redist =
-            in_edge[i].is_some_and(|e| redist_edge[e]);
-        let skip_store = out_edge[i].is_some_and(|e| redist_edge[e]);
-        let load_acts = !acts_from_redist;
-        let barrier: Vec<usize> = match cfg.mode {
-            SimMode::Conformance => prev_done.clone(),
-            SimMode::Overlap => Vec::new(),
-        };
-
-        // ---- incoming redistribution: §5.2 steps 1-3 as real flows.
-        let mut redist_last: Vec<usize> = Vec::new();
-        if acts_from_redist {
-            let e = in_edge[i].expect("redistributed op has an edge");
-            let edge = wl.edges[e];
-            let p_op = &wl.ops[edge.src];
-            let p_part = &alloc.parts[edge.src];
-            let c_star = alloc.collect_cols[e];
-            let mut deps0: Vec<usize> = barrier.clone();
-            deps0.extend(compute_ids[edge.src].iter().copied());
-            let rmeta =
-                TaskMeta { op: i, phase: SimPhase::Redistribute, edge: Some(e) };
-
-            // Step 1: row reduction toward the collection column.
-            let mut step1: Vec<usize> = Vec::new();
-            for x in 0..plat.xdim {
-                for y in 0..plat.ydim {
-                    if y == c_star {
-                        continue;
-                    }
-                    let bytes = plat.bytes(p_part.px[x] * p_part.py[y]);
-                    if bytes <= 0.0 {
-                        continue;
-                    }
-                    let route = graph.route(
-                        graph.chiplet_id(Pos::new(x, y)),
-                        graph.chiplet_id(Pos::new(x, c_star)),
-                    )?;
-                    step1.push(push(
-                        &mut tasks,
-                        &mut meta,
-                        Work::Transfer { route, bytes },
-                        deps0.clone(),
-                        rmeta,
-                    ));
-                }
-            }
-            // Step 2: wormhole row broadcast — one wavefront per
-            // direction, one block transfer of Px[x] x N bytes.
-            let s2_deps =
-                if step1.is_empty() { deps0.clone() } else { step1.clone() };
-            let mut step2: Vec<usize> = Vec::new();
-            for x in 0..plat.xdim {
-                let row_bytes = plat.bytes(p_part.px[x] * p_op.n);
-                if row_bytes <= 0.0 {
-                    continue;
-                }
-                let src = graph.chiplet_id(Pos::new(x, c_star));
-                for far in [0usize, plat.ydim - 1] {
-                    if far == c_star {
-                        continue;
-                    }
-                    let route =
-                        graph.route(src, graph.chiplet_id(Pos::new(x, far)))?;
-                    step2.push(push(
-                        &mut tasks,
-                        &mut meta,
-                        Work::Transfer { route, bytes: row_bytes },
-                        s2_deps.clone(),
-                        rmeta,
-                    ));
-                }
-            }
-            // Step 3: per-boundary cross-row moves, bytes from the
-            // shared `redistribution::step3_boundary_bytes` helper (one
-            // source of truth with the closed form). Direction does not
-            // affect fluid timing — each boundary's duplex vertical
-            // link pair is dedicated — so flows go row b -> b+1.
-            let s3_deps =
-                if step2.is_empty() { s2_deps } else { step2.clone() };
-            let boundary_bytes = crate::redistribution::step3_boundary_bytes(
-                plat, p_op, p_part, part,
-            );
-            let mut step3: Vec<usize> = Vec::new();
-            for (b, &bytes) in boundary_bytes.iter().enumerate() {
-                if bytes <= 0.0 {
-                    continue;
-                }
-                let route = graph.route(
-                    graph.chiplet_id(Pos::new(b, c_star)),
-                    graph.chiplet_id(Pos::new(b + 1, c_star)),
-                )?;
-                step3.push(push(
-                    &mut tasks,
-                    &mut meta,
-                    Work::Transfer { route, bytes },
-                    s3_deps.clone(),
-                    rmeta,
-                ));
-            }
-            redist_last = if step3.is_empty() { s3_deps } else { step3 };
-        }
-
-        // ---- load: demand-apportioned off-chip pull, then unicast
-        // on-chip distribution.
-        let load_deps: Vec<usize> = if acts_from_redist {
-            redist_last
-        } else {
-            match cfg.mode {
-                SimMode::Conformance => barrier.clone(),
-                SimMode::Overlap => {
-                    // Activations come out of memory: wait for every
-                    // producer's writeback (its compute, if the
-                    // producer skipped its store).
-                    let mut d = Vec::new();
-                    for edge in wl.edges.iter().filter(|e| e.dst == i) {
-                        d.extend(op_done_ids[edge.src].iter().copied());
-                    }
-                    d
-                }
-            }
-        };
-        let mut off_unique = plat.bytes(op.k * op.n);
-        if load_acts {
-            off_unique += plat.bytes(op.m * op.k);
-        }
-        let mut demand = vec![0.0f64; n_chiplets];
-        for (idx, p) in plat.positions().enumerate() {
-            let Pos { row: x, col: y } = p;
-            let mut d = plat.bytes(op.k * part.py[y]);
-            if load_acts {
-                d += plat.bytes(part.px[x] * op.k);
-            }
-            demand[idx] = d;
-        }
-        let total_demand: f64 = demand.iter().sum();
-        let mut att_demand = vec![0.0f64; atts.len()];
-        for idx in 0..n_chiplets {
-            att_demand[serving[idx]] += demand[idx];
-        }
-        let mut off_tasks: Vec<usize> = Vec::new();
-        for (a, att) in atts.iter().enumerate() {
-            let share = if total_demand > 0.0 {
-                att_demand[a] / total_demand
-            } else {
-                0.0
-            };
-            let bytes = off_unique * share;
-            if bytes <= 0.0 {
-                continue;
-            }
-            let route =
-                graph.route(att_node(a), graph.chiplet_id(att.pos))?;
-            off_tasks.push(push(
-                &mut tasks,
-                &mut meta,
-                Work::Transfer { route, bytes },
-                load_deps.clone(),
-                TaskMeta { op: i, phase: SimPhase::LoadOffchip, edge: None },
-            ));
-        }
-        let dist_deps =
-            if off_tasks.is_empty() { load_deps } else { off_tasks };
-        let mut dist_tasks: Vec<usize> = Vec::with_capacity(n_chiplets);
-        for (idx, p) in plat.positions().enumerate() {
-            let route = graph.route(
-                graph.chiplet_id(plat.nearest_global(p)),
-                graph.chiplet_id(p),
-            )?;
-            dist_tasks.push(push(
-                &mut tasks,
-                &mut meta,
-                Work::Transfer { route, bytes: demand[idx] },
-                dist_deps.clone(),
-                TaskMeta { op: i, phase: SimPhase::LoadOnchip, edge: None },
-            ));
-        }
-
-        // ---- compute.
-        let mut comp_tasks: Vec<usize> = Vec::with_capacity(n_chiplets);
-        for (idx, p) in plat.positions().enumerate() {
-            let Pos { row: x, col: y } = p;
-            let dur = comp_ns(plat, op, part.px[x], part.py[y]);
-            let deps = if flags.async_fusion {
-                vec![dist_tasks[idx]]
-            } else {
-                dist_tasks.clone()
-            };
-            comp_tasks.push(push(
-                &mut tasks,
-                &mut meta,
-                Work::Compute { dur_ns: dur },
-                deps,
-                TaskMeta { op: i, phase: SimPhase::Compute, edge: None },
-            ));
-        }
-
-        // ---- writeback (skipped when a redistributed out-edge
-        // replaces the store).
-        let op_done: Vec<usize> = if skip_store {
-            comp_tasks.clone()
-        } else {
-            let out_total = plat.bytes(op.m * op.n);
-            let mut att_out = vec![0.0f64; atts.len()];
-            let mut collect_tasks: Vec<usize> =
-                Vec::with_capacity(n_chiplets);
-            for (idx, p) in plat.positions().enumerate() {
-                let Pos { row: x, col: y } = p;
-                let bytes = plat.bytes(part.px[x] * part.py[y]);
-                att_out[serving[idx]] += bytes;
-                let route = graph.route(
-                    graph.chiplet_id(p),
-                    graph.chiplet_id(plat.nearest_global(p)),
-                )?;
-                collect_tasks.push(push(
-                    &mut tasks,
-                    &mut meta,
-                    Work::Transfer { route, bytes },
-                    comp_tasks.clone(),
-                    TaskMeta {
-                        op: i,
-                        phase: SimPhase::StoreOnchip,
-                        edge: None,
-                    },
-                ));
-            }
-            let total_out: f64 = att_out.iter().sum();
-            let mut store_off: Vec<usize> = Vec::new();
-            for (a, att) in atts.iter().enumerate() {
-                let share =
-                    if total_out > 0.0 { att_out[a] / total_out } else { 0.0 };
-                let bytes = out_total * share;
-                if bytes <= 0.0 {
-                    continue;
-                }
-                let route =
-                    graph.route(graph.chiplet_id(att.pos), att_node(a))?;
-                store_off.push(push(
-                    &mut tasks,
-                    &mut meta,
-                    Work::Transfer { route, bytes },
-                    collect_tasks.clone(),
-                    TaskMeta {
-                        op: i,
-                        phase: SimPhase::StoreOffchip,
-                        edge: None,
-                    },
-                ));
-            }
-            if store_off.is_empty() { collect_tasks } else { store_off }
-        };
-        prev_done = op_done.clone();
-        op_done_ids.push(op_done);
-        compute_ids.push(comp_tasks);
-    }
-
-    let run = run_tasks(&graph, &tasks, cfg.hop_latency_ns)?;
 
     // ---- spans, per op and per redistributed edge.
     let mut input: Vec<Option<Span>> = vec![None; n_ops];
     let mut compute: Vec<Option<Span>> = vec![None; n_ops];
     let mut output: Vec<Option<Span>> = vec![None; n_ops];
     let mut edge_spans: Vec<Option<Span>> = vec![None; ne];
-    for (t, m) in meta.iter().enumerate() {
+    for (t, m) in lp.meta.iter().enumerate() {
         let (s, f) = (run.start[t], run.finish[t]);
         match m.phase {
             SimPhase::LoadOffchip
@@ -875,14 +1119,14 @@ pub fn simulate_plan(
         .map(|(op, part)| comp_energy_pj(plat, op, part))
         .sum();
 
-    Ok(SimReport {
+    SimReport {
         makespan_ns: run.makespan_ns,
         op_spans,
         edge_spans,
-        link_bytes: run.link_bytes,
-        graph,
+        link_bytes: run.link_bytes.clone(),
+        graph: graph.clone(),
         energy,
-    })
+    }
 }
 
 #[cfg(test)]

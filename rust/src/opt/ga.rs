@@ -29,7 +29,7 @@ use crate::partition::{
     Allocation,
 };
 use crate::platform::Platform;
-use crate::util::par::{par_map_state, resolve_threads};
+use crate::util::par::{par_for_each_state, par_map_state, resolve_threads};
 use crate::util::rng::Pcg;
 use crate::workload::Workload;
 
@@ -50,6 +50,18 @@ pub struct GaParams {
     /// machine's parallelism), `1` = fully sequential. Results are
     /// bit-identical across all settings.
     pub threads: usize,
+    /// Island count (`<= 1` = the classic single-population GA). With
+    /// K islands the population is split into K independent demes, each
+    /// with its own seeded RNG stream and its worker's warm
+    /// [`CachedEval`]; demes evolve in parallel and exchange elites on
+    /// a ring every [`GaParams::migration_interval`] generations.
+    /// Results are bit-identical across `threads` settings for any K
+    /// (DESIGN.md §Optimizer scale-out).
+    pub islands: usize,
+    /// Generations between ring migrations in island mode.
+    pub migration_interval: usize,
+    /// Elites each island sends to its ring successor per migration.
+    pub migrants: usize,
 }
 
 impl Default for GaParams {
@@ -64,8 +76,24 @@ impl Default for GaParams {
             seed: 0xc0ffee,
             budget: None,
             threads: 0,
+            islands: 1,
+            migration_interval: 4,
+            migrants: 2,
         }
     }
+}
+
+/// Wall-clock split of one [`optimize`] run (`optimize --profile`).
+/// Timings are informational only — they never feed back into any
+/// decision, so determinism is unaffected.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GaProfile {
+    /// Fitness evaluation (summed across islands/workers).
+    pub eval_ns: u64,
+    /// Selection, crossover and mutation.
+    pub breed_ns: u64,
+    /// Ring migration (island mode only).
+    pub migration_ns: u64,
 }
 
 #[derive(Debug, Clone)]
@@ -73,8 +101,11 @@ pub struct GaResult {
     pub alloc: Allocation,
     pub objective_value: f64,
     pub generations_run: usize,
-    /// Best objective per generation (convergence diagnostics).
+    /// Best objective per generation (convergence diagnostics). In
+    /// island mode: the best across all islands at each generation.
     pub history: Vec<f64>,
+    /// Per-phase wall-clock timings of this run.
+    pub profile: GaProfile,
 }
 
 struct Ctx<'a> {
@@ -211,7 +242,9 @@ fn elite_indices(pop: &[(Allocation, f64)], k: usize) -> Vec<usize> {
     idx
 }
 
-/// Run the GA.
+/// Run the GA. Dispatches on [`GaParams::islands`]: `<= 1` is the
+/// classic single-population path (bit-identical to the pre-island
+/// code), `> 1` the island model.
 pub fn optimize(
     plat: &Platform,
     wl: &Workload,
@@ -219,9 +252,13 @@ pub fn optimize(
     obj: Objective,
     params: &GaParams,
 ) -> GaResult {
+    if params.islands > 1 {
+        return optimize_islands(plat, wl, flags, obj, params);
+    }
     let ctx = Ctx::new(plat, wl);
     let mut rng = Pcg::seeded(params.seed);
     let t0 = Instant::now();
+    let mut profile = GaProfile::default();
 
     let workers = resolve_threads(params.threads)
         .min(params.population.max(1));
@@ -237,7 +274,9 @@ pub fn optimize(
     while genomes.len() < params.population {
         genomes.push(random_individual(&ctx, &mut rng));
     }
+    let te = Instant::now();
     let fits = eval_batch(&genomes, &mut caches, obj);
+    profile.eval_ns += te.elapsed().as_nanos() as u64;
     let mut pop: Vec<(Allocation, f64)> =
         genomes.into_iter().zip(fits).collect();
 
@@ -272,6 +311,7 @@ pub fn optimize(
             }
             best
         };
+        let tb = Instant::now();
         for _ in 0..n_children {
             let pa = pick(&mut rng, pop.as_slice());
             let pb = pick(&mut rng, pop.as_slice());
@@ -281,7 +321,10 @@ pub fn optimize(
             mutate(&ctx, &mut rng, &mut child, params.mutations);
             children.push(child);
         }
+        profile.breed_ns += tb.elapsed().as_nanos() as u64;
+        let te = Instant::now();
         let fits = eval_batch(&children, &mut caches, obj);
+        profile.eval_ns += te.elapsed().as_nanos() as u64;
 
         // Next generation: elites move over (no clones), children follow.
         let mut next: Vec<(Allocation, f64)> =
@@ -310,6 +353,233 @@ pub fn optimize(
         objective_value: best_f,
         generations_run: gens,
         history,
+        profile,
+    }
+}
+
+/// One deme of the island model: its own population, its own RNG
+/// stream, and its accumulated phase timings.
+struct Island {
+    pop: Vec<(Allocation, f64)>,
+    rng: Pcg,
+    /// Best objective per generation evolved so far (local history; the
+    /// global history is the elementwise min across islands).
+    history: Vec<f64>,
+    eval_ns: u64,
+    breed_ns: u64,
+}
+
+/// Evolve one island for `gens` generations — the plain GA loop with
+/// sequential fitness through this worker's cache. All stochastic
+/// decisions use the island's own RNG in a fixed order, so the result
+/// is a pure function of the island's state, never of which worker ran
+/// it or what the cache held.
+fn evolve_island(
+    ctx: &Ctx,
+    params: &GaParams,
+    obj: Objective,
+    cache: &mut CachedEval<'_>,
+    isl: &mut Island,
+    gens: usize,
+) {
+    for _ in 0..gens {
+        let elites = elite_indices(&isl.pop, params.elite);
+        let best = isl
+            .pop
+            .iter()
+            .map(|(_, f)| *f)
+            .min_by(f64::total_cmp)
+            .expect("non-empty island");
+        isl.history.push(best);
+
+        let n_children = isl.pop.len().saturating_sub(elites.len());
+        let tb = Instant::now();
+        let mut children: Vec<Allocation> = Vec::with_capacity(n_children);
+        for _ in 0..n_children {
+            let pick = |rng: &mut Pcg, pop: &[(Allocation, f64)]| {
+                let mut best = rng.range_usize(0, pop.len() - 1);
+                for _ in 1..params.tournament {
+                    let c = rng.range_usize(0, pop.len() - 1);
+                    if pop[c].1 < pop[best].1 {
+                        best = c;
+                    }
+                }
+                best
+            };
+            let pa = pick(&mut isl.rng, isl.pop.as_slice());
+            let pb = pick(&mut isl.rng, isl.pop.as_slice());
+            let mut child = crossover(
+                ctx,
+                &mut isl.rng,
+                &isl.pop[pa].0,
+                &isl.pop[pb].0,
+                params.p_cross,
+            );
+            mutate(ctx, &mut isl.rng, &mut child, params.mutations);
+            children.push(child);
+        }
+        isl.breed_ns += tb.elapsed().as_nanos() as u64;
+
+        let te = Instant::now();
+        let fits: Vec<f64> = children
+            .iter()
+            .map(|g| cache.objective(g, obj))
+            .collect();
+        isl.eval_ns += te.elapsed().as_nanos() as u64;
+
+        let mut next: Vec<(Allocation, f64)> =
+            Vec::with_capacity(elites.len() + n_children);
+        {
+            let mut take = elites;
+            take.sort_unstable_by(|a, b| b.cmp(a)); // descending index
+            let mut moved: Vec<(Allocation, f64)> =
+                take.into_iter().map(|i| isl.pop.swap_remove(i)).collect();
+            moved.sort_by(|a, b| a.1.total_cmp(&b.1));
+            next.extend(moved);
+        }
+        next.extend(children.into_iter().zip(fits));
+        isl.pop = next;
+    }
+}
+
+/// The island model (DESIGN.md §Optimizer scale-out): K demes evolve
+/// independently in epochs of [`GaParams::migration_interval`]
+/// generations — in parallel *across islands*, each pinned to one
+/// worker's warm cache — then the top [`GaParams::migrants`] of every
+/// island replace the worst of its ring successor, on the calling
+/// thread, in island order. Fitness values travel with the migrants
+/// (they are exact, so no re-evaluation), and every stochastic decision
+/// is drawn from the owning island's seeded stream, so the result is
+/// bit-identical at any thread count.
+fn optimize_islands(
+    plat: &Platform,
+    wl: &Workload,
+    flags: OptFlags,
+    obj: Objective,
+    params: &GaParams,
+) -> GaResult {
+    let ctx = Ctx::new(plat, wl);
+    let t0 = Instant::now();
+    let k = params.islands;
+    let per = (params.population / k).max(params.elite + 1).max(2);
+    let migrants = params.migrants.min(per.saturating_sub(1)).max(1);
+    let interval = params.migration_interval.max(1);
+
+    let workers = resolve_threads(params.threads).min(k);
+    let mut caches: Vec<CachedEval<'_>> = (0..workers)
+        .map(|_| CachedEval::new(plat, wl, flags))
+        .collect();
+
+    // Seed every island from its own PCG stream (stream = island index,
+    // same base seed): island 0 carries the two reference schemes, the
+    // rest are fully random — K independent starting points.
+    let mut islands: Vec<Island> = (0..k)
+        .map(|i| {
+            let mut rng = Pcg::new(params.seed, i as u64);
+            let mut genomes: Vec<Allocation> = Vec::with_capacity(per);
+            if i == 0 {
+                genomes.push(uniform_allocation(plat, wl));
+                genomes.push(simba_allocation(plat, wl));
+                genomes.truncate(per);
+            }
+            while genomes.len() < per {
+                genomes.push(random_individual(&ctx, &mut rng));
+            }
+            Island {
+                pop: genomes.into_iter().map(|g| (g, f64::NAN)).collect(),
+                rng,
+                history: Vec::with_capacity(params.generations),
+                eval_ns: 0,
+                breed_ns: 0,
+            }
+        })
+        .collect();
+
+    // Initial fitness, per island on its own worker.
+    par_for_each_state(&mut islands, &mut caches, |cache, _i, isl| {
+        let te = Instant::now();
+        for (g, f) in isl.pop.iter_mut() {
+            *f = cache.objective(g, obj);
+        }
+        isl.eval_ns += te.elapsed().as_nanos() as u64;
+    });
+
+    let mut gens = 0usize;
+    let mut migration_ns = 0u64;
+    while gens < params.generations {
+        if let Some(b) = params.budget {
+            if t0.elapsed() > b {
+                break;
+            }
+        }
+        let epoch = interval.min(params.generations - gens);
+        par_for_each_state(&mut islands, &mut caches, |cache, _i, isl| {
+            evolve_island(&ctx, params, obj, cache, isl, epoch);
+        });
+        gens += epoch;
+
+        // Ring migration (skip after the final epoch — nothing would
+        // re-evaluate the exchanged genomes).
+        if gens < params.generations {
+            let tm = Instant::now();
+            let outbound: Vec<Vec<(Allocation, f64)>> = islands
+                .iter()
+                .map(|isl| {
+                    elite_indices(&isl.pop, migrants)
+                        .into_iter()
+                        .map(|i| isl.pop[i].clone())
+                        .collect()
+                })
+                .collect();
+            for (i, pack) in outbound.into_iter().enumerate() {
+                let dst = &mut islands[(i + 1) % k].pop;
+                // Replace the worst `migrants` individuals (descending
+                // fitness = ascending quality from the back).
+                let mut worst: Vec<usize> = (0..dst.len()).collect();
+                worst.sort_unstable_by(|&a, &b| {
+                    dst[b].1.total_cmp(&dst[a].1).then(b.cmp(&a))
+                });
+                for (w, m) in worst.into_iter().zip(pack) {
+                    dst[w] = m;
+                }
+            }
+            migration_ns += tm.elapsed().as_nanos() as u64;
+        }
+    }
+
+    // Global history: elementwise min across the islands' local
+    // histories (all the same length — every island ran every epoch).
+    let mut history = vec![f64::INFINITY; gens];
+    for isl in &islands {
+        for (h, &v) in history.iter_mut().zip(&isl.history) {
+            if v.total_cmp(h).is_lt() {
+                *h = v;
+            }
+        }
+    }
+
+    // Global best: islands in order, genomes in order, strict total_cmp
+    // improvement — deterministic on the calling thread.
+    let (mut bi, mut bj) = (0usize, 0usize);
+    for (i, isl) in islands.iter().enumerate() {
+        for (j, (_, f)) in isl.pop.iter().enumerate() {
+            if f.total_cmp(&islands[bi].pop[bj].1).is_lt() {
+                (bi, bj) = (i, j);
+            }
+        }
+    }
+    let profile = GaProfile {
+        eval_ns: islands.iter().map(|i| i.eval_ns).sum(),
+        breed_ns: islands.iter().map(|i| i.breed_ns).sum(),
+        migration_ns,
+    };
+    let (best, best_f) = islands[bi].pop.swap_remove(bj);
+    GaResult {
+        alloc: best,
+        objective_value: best_f,
+        generations_run: gens,
+        history,
+        profile,
     }
 }
 
@@ -393,6 +663,90 @@ mod tests {
         ];
         let e = elite_indices(&pop, 2);
         assert_eq!(e, vec![2, 1]);
+    }
+
+    #[test]
+    fn island_ga_bit_identical_across_thread_counts() {
+        // The PR-2 guarantee extended to islands: fixed seed, any
+        // worker count, same bits — for several island counts.
+        let (plat, wl) = setup();
+        for islands in [2, 3, 5] {
+            let params = |threads: usize| GaParams {
+                population: 18,
+                generations: 9,
+                islands,
+                migration_interval: 3,
+                seed: 0x15fa,
+                threads,
+                ..Default::default()
+            };
+            let seq = optimize(&plat, &wl, OptFlags::ALL,
+                               Objective::Latency, &params(1));
+            for threads in [2, 4] {
+                let par = optimize(&plat, &wl, OptFlags::ALL,
+                                   Objective::Latency, &params(threads));
+                assert_eq!(
+                    seq.objective_value.to_bits(),
+                    par.objective_value.to_bits(),
+                    "islands={islands} threads={threads}"
+                );
+                assert_eq!(seq.alloc, par.alloc);
+                assert_eq!(seq.history.len(), par.history.len());
+                for (a, b) in seq.history.iter().zip(&par.history) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn island_ga_never_worse_than_uniform_and_scores_exactly() {
+        let (plat, wl) = setup();
+        let uni = uniform_allocation(&plat, &wl);
+        let base = evaluate(&plat, &wl, &uni, OptFlags::ALL)
+            .objective(Objective::Latency);
+        let r = optimize(
+            &plat,
+            &wl,
+            OptFlags::ALL,
+            Objective::Latency,
+            &GaParams {
+                population: 16,
+                generations: 10,
+                islands: 4,
+                seed: 3,
+                ..Default::default()
+            },
+        );
+        // Island 0 seeds uniform, elitism keeps it: never worse.
+        assert!(r.objective_value <= base * 1.0001);
+        assert!(r.alloc.validate(&wl, &plat).is_ok());
+        // The reported score is the true evaluator's, bit-for-bit.
+        let full = evaluate(&plat, &wl, &r.alloc, OptFlags::ALL)
+            .objective(Objective::Latency);
+        assert_eq!(r.objective_value.to_bits(), full.to_bits());
+        // Global history is monotone (elitism + min across islands).
+        for w in r.history.windows(2) {
+            assert!(w[1] <= w[0] * 1.0001);
+        }
+    }
+
+    #[test]
+    fn islands_one_is_the_plain_path() {
+        // `islands: 1` must take the classic single-population path
+        // bit-for-bit (it is the same code).
+        let (plat, wl) = setup();
+        let a = optimize(&plat, &wl, OptFlags::ALL, Objective::Latency,
+                         &small_params(9));
+        let b = optimize(
+            &plat,
+            &wl,
+            OptFlags::ALL,
+            Objective::Latency,
+            &GaParams { islands: 1, ..small_params(9) },
+        );
+        assert_eq!(a.objective_value.to_bits(), b.objective_value.to_bits());
+        assert_eq!(a.alloc, b.alloc);
     }
 
     #[test]

@@ -34,6 +34,7 @@ pub mod hops;
 pub mod json;
 
 use std::ops::Deref;
+use std::sync::{Arc, OnceLock};
 
 use crate::config::{EnergyParams, HwConfig, MemKind, SystemType};
 use crate::topology::links::LinkGraph;
@@ -233,6 +234,12 @@ pub struct Platform {
     /// Per position: serving region extent (X, Y).
     extents: Vec<(usize, usize)>,
     hops: HopTables,
+    /// Lazily-built shared link graphs, one per diagonal setting
+    /// ([`Platform::link_graph_shared`]). A spec is immutable once the
+    /// platform is constructed, so these can never go stale; cloning the
+    /// platform clones the (cheap) `Arc` handles.
+    graph_plain: OnceLock<Arc<LinkGraph>>,
+    graph_diag: OnceLock<Arc<LinkGraph>>,
 }
 
 impl Deref for Platform {
@@ -301,6 +308,8 @@ impl Platform {
             locals,
             extents,
             hops,
+            graph_plain: OnceLock::new(),
+            graph_diag: OnceLock::new(),
         })
     }
 
@@ -538,6 +547,19 @@ impl Platform {
             g.attach_memory(a.pos, a.bw);
         }
         g
+    }
+
+    /// Shared, lazily-built form of [`Platform::link_graph`]: the graph
+    /// is constructed at most once per diagonal setting for this
+    /// platform's lifetime and handed out as an `Arc`. Plan-lowering
+    /// hot paths (the DES, `netsim::IncrementalSim`) use this so a
+    /// 20×20 mesh is not rebuilt per candidate; the spec is immutable,
+    /// so the cached graph can never go stale (DESIGN.md §Optimizer
+    /// scale-out).
+    pub fn link_graph_shared(&self, diagonal: bool) -> Arc<LinkGraph> {
+        let slot =
+            if diagonal { &self.graph_diag } else { &self.graph_plain };
+        slot.get_or_init(|| Arc::new(self.link_graph(diagonal))).clone()
     }
 }
 
@@ -787,6 +809,29 @@ mod tests {
         assert!(mem_links.iter().all(|&c| c == 1000.0 / 6.0));
         let sum: f64 = mem_links.iter().sum();
         assert!((sum - plat.bw_mem).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_link_graph_is_built_once_and_matches() {
+        let plat = Platform::type_b(MemKind::Hbm, 4);
+        for diagonal in [false, true] {
+            let a = plat.link_graph_shared(diagonal);
+            let b = plat.link_graph_shared(diagonal);
+            assert!(std::sync::Arc::ptr_eq(&a, &b), "built once");
+            let fresh = plat.link_graph(diagonal);
+            assert_eq!(a.nodes.len(), fresh.nodes.len());
+            assert_eq!(a.links.len(), fresh.links.len());
+            assert_eq!(a.diagonal, fresh.diagonal);
+            for (x, y) in a.links.iter().zip(&fresh.links) {
+                assert_eq!((x.from, x.to), (y.from, y.to));
+                assert_eq!(x.capacity, y.capacity);
+            }
+        }
+        // The two diagonal settings are distinct graphs.
+        assert_ne!(
+            plat.link_graph_shared(false).links.len(),
+            plat.link_graph_shared(true).links.len()
+        );
     }
 
     #[test]

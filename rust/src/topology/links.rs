@@ -8,6 +8,9 @@
 //! malformed graph makes [`LinkGraph::route`] return a structured
 //! [`crate::util::error::Error`] instead of panicking.
 
+use std::collections::HashMap;
+use std::sync::Arc;
+
 use super::Pos;
 use crate::err;
 use crate::util::error::Result;
@@ -212,6 +215,63 @@ impl LinkGraph {
     }
 }
 
+/// Memoized [`LinkGraph::route`] lookups: routes are returned as cheap
+/// [`Arc<[LinkId]>`] handles, computed once per `(src, dst)` pair. On a
+/// 20×20 mesh a single plan lowering asks for the same few hundred
+/// routes tens of thousands of times — this turns every repeat into one
+/// hash probe plus an `Arc` clone.
+///
+/// **Invalidation**: a cache is only meaningful against the *one* graph
+/// it was filled from. Routes depend on the node set, the diagonal
+/// flag, and link existence; none of those can change on a built
+/// [`LinkGraph`], so entries never go stale — but a different graph
+/// (another platform, the other diagonal setting) needs a fresh cache.
+/// Callers that outlive a graph (e.g. `netsim::IncrementalSim`) must
+/// drop the cache together with it (DESIGN.md §Optimizer scale-out).
+#[derive(Debug, Clone, Default)]
+pub struct RouteCache {
+    routes: HashMap<(NodeId, NodeId), Arc<[LinkId]>>,
+    hits: usize,
+    misses: usize,
+}
+
+impl RouteCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The route `src -> dst` on `g`, memoized.
+    pub fn route(
+        &mut self,
+        g: &LinkGraph,
+        src: NodeId,
+        dst: NodeId,
+    ) -> Result<Arc<[LinkId]>> {
+        if let Some(r) = self.routes.get(&(src, dst)) {
+            self.hits += 1;
+            return Ok(r.clone());
+        }
+        self.misses += 1;
+        let r: Arc<[LinkId]> = g.route(src, dst)?.into();
+        self.routes.insert((src, dst), r.clone());
+        Ok(r)
+    }
+
+    /// Distinct `(src, dst)` pairs cached so far.
+    pub fn len(&self) -> usize {
+        self.routes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.routes.is_empty()
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.hits, self.misses)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,6 +359,26 @@ mod tests {
             assert_eq!(g.links[fwd].from, a);
             assert_eq!(g.links[bwd].to, a);
         }
+    }
+
+    #[test]
+    fn route_cache_memoizes_and_matches_uncached() {
+        let mut g = LinkGraph::mesh(4, 4, true, 60.0);
+        let mem = g.attach_memory(Pos::new(0, 0), 1000.0);
+        let mut cache = RouteCache::new();
+        for dst in 0..g.nodes.len() {
+            let cached = cache.route(&g, mem, dst).unwrap();
+            assert_eq!(&cached[..], g.route(mem, dst).unwrap().as_slice());
+            // Second lookup is a hit returning the same allocation.
+            let again = cache.route(&g, mem, dst).unwrap();
+            assert!(Arc::ptr_eq(&cached, &again));
+        }
+        let (hits, misses) = cache.stats();
+        assert_eq!(misses, g.nodes.len());
+        assert_eq!(hits, g.nodes.len());
+        assert_eq!(cache.len(), g.nodes.len());
+        // Errors are not cached as routes.
+        assert!(cache.route(&g, 0, 999).is_err());
     }
 
     #[test]

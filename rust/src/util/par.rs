@@ -146,6 +146,53 @@ where
     out
 }
 
+/// In-place sibling of [`par_map_state`]: items are split into
+/// `states.len()` contiguous chunks and worker `w` mutates its chunk
+/// through `&mut states[w]` — `f(&mut states[w], index, &mut items[index])`.
+/// The island GA evolves one island per item with this, so each island
+/// keeps hitting the same worker's warm [`crate::cost::CachedEval`]
+/// across epochs (the chunk layout is a pure function of `items.len()`
+/// and `states.len()`). Same determinism contract as the other shapes:
+/// the closure must not read anything that depends on scheduling order.
+pub fn par_for_each_state<T, S, F>(items: &mut [T], states: &mut [S], f: F)
+where
+    T: Send,
+    S: Send,
+    F: Fn(&mut S, usize, &mut T) + Sync,
+{
+    assert!(!states.is_empty(), "par_for_each_state needs at least one state");
+    let n = items.len();
+    let workers = states.len().min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        let s0 = &mut states[0];
+        for (i, t) in items.iter_mut().enumerate() {
+            f(s0, i, t);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    let fref = &f;
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(workers);
+        for ((w, state), slice) in states
+            .iter_mut()
+            .take(workers)
+            .enumerate()
+            .zip(items.chunks_mut(chunk))
+        {
+            let start = w * chunk;
+            handles.push(s.spawn(move || {
+                for (j, t) in slice.iter_mut().enumerate() {
+                    fref(state, start + j, t);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("par_for_each_state worker panicked");
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -208,6 +255,43 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn par_for_each_state_mutates_every_item_once() {
+        for workers in [1, 2, 3, 5] {
+            let mut items: Vec<u64> = (0..37).collect();
+            let mut states = vec![0u64; workers];
+            par_for_each_state(&mut items, &mut states, |acc, i, x| {
+                assert_eq!(*x, i as u64);
+                *x += 100;
+                *acc += 1;
+            });
+            assert_eq!(
+                items,
+                (0..37).map(|x| x + 100).collect::<Vec<u64>>()
+            );
+            assert_eq!(states.iter().sum::<u64>(), 37);
+        }
+    }
+
+    #[test]
+    fn par_for_each_state_chunk_layout_is_stable() {
+        // Same (n, workers) -> same item-to-worker assignment on every
+        // call (the island GA's warm-cache affinity relies on this).
+        let assign = |n: usize, workers: usize| {
+            let mut items = vec![usize::MAX; n];
+            let mut states: Vec<usize> = (0..workers).collect();
+            par_for_each_state(&mut items, &mut states, |w, _i, slot| {
+                *slot = *w;
+            });
+            items
+        };
+        let a = assign(11, 3);
+        let b = assign(11, 3);
+        assert_eq!(a, b);
+        // Contiguous chunks in worker order.
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
     }
 
     #[test]

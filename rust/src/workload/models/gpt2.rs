@@ -1,0 +1,268 @@
+//! Parameterized GPT-2 / LLM transformer blocks as a dataflow graph.
+//!
+//! Unlike the ViT zoo entry (which folds the heads into grouped GEMMs),
+//! this generator expresses the attention structure the optimizer has
+//! to survive at transformer scale as *explicit* graph structure:
+//!
+//! * **QKV fan-out** — the block input feeds three projection GEMMs;
+//! * **per-head attention** — every head is its own `scores` (sync:
+//!   softmax follows) and `attn_v` GEMM pair, so a 12-head block has 24
+//!   attention ops and the score ops have fan-in 2 (Q and K);
+//! * **KV-cache traffic as first-class edges** — `k → scores_h` and
+//!   `v → attn_v_h` are ordinary dataflow edges whose tensor is the
+//!   full K/V projection (`kv_len × d_model`, the cached tensor; each
+//!   head reads its slice), so cache movement is visible to cost,
+//!   simulation, and redistribution legality like any other edge;
+//! * **residual fan-in** — the post-attention and post-MLP residual
+//!   adds are thin `k = 1` GEMMs with fan-in 2 (skip path + branch);
+//! * **MLP** — `mlp_up (relu) → mlp_dn` is the one §5.2-legal
+//!   redistribution site per block (everything else is blocked by
+//!   fan-in/fan-out or the softmax sync), exactly one per layer.
+//!
+//! [`gpt2_small`] (12 layers × 12 heads, d=768 → 386 ops) and
+//! [`gpt2_large`] (36 layers × 20 heads, d=1280 → 1730 ops) match the
+//! exemplar 399/1338-task GPT-2 trace shapes at the op-count order of
+//! magnitude; `gpt2_large` is the repo's 1000+-op / 3900+-edge stress
+//! workload for big-mesh optimizer scale-out (ROADMAP item 4).
+
+use crate::workload::{GemmOp, Workload};
+
+/// Transformer-block hyperparameters. `workload(batch)` multiplies the
+/// token dimension (M) by the batch, matching the rest of the zoo.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Gpt2Config {
+    /// Number of transformer blocks.
+    pub layers: usize,
+    /// Attention heads per block; must divide `d_model`.
+    pub heads: usize,
+    /// Model (embedding) width.
+    pub d_model: usize,
+    /// MLP hidden width (GPT-2: `4 * d_model`).
+    pub d_ff: usize,
+    /// Query-side sequence length (tokens being processed).
+    pub seq: usize,
+    /// Key/value-side sequence length (the KV cache depth; equal to
+    /// `seq` for prefill, larger for decode-shaped graphs).
+    pub kv_len: usize,
+    /// Output vocabulary (the `lm_head` N dimension).
+    pub vocab: usize,
+}
+
+impl Gpt2Config {
+    /// GPT-2 small (124M): 12 × 12 heads, d=768, prefill at 128 tokens.
+    pub fn small() -> Self {
+        Gpt2Config {
+            layers: 12,
+            heads: 12,
+            d_model: 768,
+            d_ff: 3072,
+            seq: 128,
+            kv_len: 128,
+            vocab: 50257,
+        }
+    }
+
+    /// GPT-2 large (774M): 36 × 20 heads, d=1280, prefill at 128 tokens.
+    pub fn large() -> Self {
+        Gpt2Config {
+            layers: 36,
+            heads: 20,
+            d_model: 1280,
+            d_ff: 5120,
+            seq: 128,
+            kv_len: 128,
+            vocab: 50257,
+        }
+    }
+
+    /// Ops per block: q/k/v + 2 per head + proj + 2 residual adds +
+    /// mlp_up/mlp_dn.
+    pub fn ops_per_block(&self) -> usize {
+        8 + 2 * self.heads
+    }
+
+    /// Total op count of the generated graph (embed + blocks + lm_head).
+    pub fn op_count(&self) -> usize {
+        2 + self.layers * self.ops_per_block()
+    }
+
+    /// Build the workload at a batch size.
+    pub fn workload(&self, batch: usize) -> Workload {
+        gpt2_named(
+            &format!(
+                "gpt2-L{}H{}d{}", self.layers, self.heads, self.d_model
+            ),
+            self,
+            batch,
+        )
+    }
+}
+
+/// Stage offsets within one block (relative to the block's first op).
+fn stage(cfg: &Gpt2Config) -> (usize, usize, usize, usize, usize) {
+    let h2 = 2 * cfg.heads;
+    // (proj, attn_res, mlp_up, mlp_dn, mlp_res); q/k/v are 0/1/2 and
+    // head h's scores/attn_v are 3 + 2h / 4 + 2h.
+    (3 + h2, 4 + h2, 5 + h2, 6 + h2, 7 + h2)
+}
+
+fn gpt2_named(name: &str, cfg: &Gpt2Config, batch: usize) -> Workload {
+    assert!(batch >= 1);
+    assert!(cfg.layers >= 1 && cfg.heads >= 1);
+    assert!(
+        cfg.d_model % cfg.heads == 0,
+        "d_model {} not divisible by {} heads",
+        cfg.d_model,
+        cfg.heads
+    );
+    let d = cfg.d_model;
+    let hd = d / cfg.heads;
+    let s = batch * cfg.seq; // query tokens
+    let t = batch * cfg.kv_len; // key/value tokens (KV cache depth)
+    let (proj, attn_res, mlp_up, mlp_dn, mlp_res) = stage(cfg);
+
+    let mut ops = Vec::with_capacity(cfg.op_count());
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    // Token embedding fetch: a thin k=1 GEMM whose output is the s x d
+    // activation tensor (the traffic; the lookup itself is free).
+    ops.push(GemmOp::dense("embed", s, 1, d));
+    for blk in 0..cfg.layers {
+        let base = ops.len();
+        let block_in = if blk == 0 { 0 } else { base - 1 };
+        let p = |st: &str| format!("blk{blk}.{st}");
+        // QKV fan-out from the block input.
+        ops.push(GemmOp::dense(&p("q"), s, d, d));
+        ops.push(GemmOp::dense(&p("k"), t, d, d));
+        ops.push(GemmOp::dense(&p("v"), t, d, d));
+        edges.push((block_in, base)); // -> q
+        edges.push((block_in, base + 1)); // -> k
+        edges.push((block_in, base + 2)); // -> v
+        // Per-head attention: scores_h = Q_h K_h^T (softmax follows ->
+        // sync), attn_v_h = softmax(scores_h) V_h. The K/V edges are the
+        // KV-cache traffic, first-class in the graph.
+        for h in 0..cfg.heads {
+            let sc = base + 3 + 2 * h;
+            ops.push(GemmOp::dense(&p(&format!("scores{h}")), s, hd, t).sync());
+            ops.push(GemmOp::dense(&p(&format!("attn_v{h}")), s, t, hd));
+            edges.push((base, sc)); // q -> scores_h
+            edges.push((base + 1, sc)); // k -> scores_h (KV cache: K)
+            edges.push((sc, sc + 1)); // scores_h -> attn_v_h
+            edges.push((base + 2, sc + 1)); // v -> attn_v_h (KV cache: V)
+            edges.push((sc + 1, base + proj)); // attn_v_h -> proj
+        }
+        // Output projection (head fan-in) and the attention residual.
+        ops.push(GemmOp::dense(&p("proj"), s, d, d));
+        ops.push(GemmOp::dense(&p("attn_res"), s, 1, d));
+        edges.push((block_in, base + attn_res)); // skip path
+        edges.push((base + proj, base + attn_res));
+        // MLP; up -> dn is the block's one redistribution-legal edge.
+        ops.push(GemmOp::dense(&p("mlp_up"), s, d, cfg.d_ff).relu());
+        ops.push(GemmOp::dense(&p("mlp_dn"), s, cfg.d_ff, d));
+        ops.push(GemmOp::dense(&p("mlp_res"), s, 1, d));
+        edges.push((base + attn_res, base + mlp_up));
+        edges.push((base + mlp_up, base + mlp_dn));
+        edges.push((base + attn_res, base + mlp_res)); // skip path
+        edges.push((base + mlp_dn, base + mlp_res));
+    }
+    let last = ops.len() - 1;
+    ops.push(GemmOp::dense("lm_head", s, d, cfg.vocab));
+    edges.push((last, last + 1));
+    Workload::from_graph(name, ops, &edges)
+}
+
+/// The parameterized generator.
+pub fn gpt2(cfg: &Gpt2Config, batch: usize) -> Workload {
+    cfg.workload(batch)
+}
+
+/// GPT-2 small preset: 386 ops / ~830 edges at batch 1.
+pub fn gpt2_small(batch: usize) -> Workload {
+    gpt2_named("gpt2-small", &Gpt2Config::small(), batch)
+}
+
+/// GPT-2 large preset: 1730 ops / ~3900 edges at batch 1 — the big-mesh
+/// stress workload.
+pub fn gpt2_large(batch: usize) -> Workload {
+    gpt2_named("gpt2-large", &Gpt2Config::large(), batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_shapes_validate_and_hit_op_counts() {
+        let small = gpt2_small(1);
+        assert!(small.validate().is_ok());
+        assert_eq!(small.ops.len(), 386);
+        assert_eq!(small.ops.len(), Gpt2Config::small().op_count());
+        let large = gpt2_large(1);
+        assert!(large.validate().is_ok());
+        assert_eq!(large.ops.len(), 1730);
+        assert!(large.ops.len() >= 1000, "stress preset must be 1000+ ops");
+        assert!(large.edge_count() > 3000);
+    }
+
+    #[test]
+    fn redistribution_is_exactly_the_mlp_sites() {
+        // Fan-out (qkv, residual skips), fan-in (proj, residual adds)
+        // and the softmax sync block everything except mlp_up -> mlp_dn:
+        // exactly one legal edge per layer.
+        for (w, cfg) in [
+            (gpt2_small(1), Gpt2Config::small()),
+            (gpt2_large(1), Gpt2Config::large()),
+        ] {
+            let legal = w.redistributable_edges();
+            assert_eq!(legal.len(), cfg.layers, "{}", w.name);
+            for e in legal {
+                let edge = w.edges[e];
+                assert!(w.ops[edge.src].name.ends_with("mlp_up"));
+                assert!(w.ops[edge.dst].name.ends_with("mlp_dn"));
+            }
+        }
+    }
+
+    #[test]
+    fn kv_cache_edges_are_first_class() {
+        let cfg = Gpt2Config::small();
+        let w = gpt2_small(1);
+        // Block 0: k is op 2, v is op 3; each feeds every head.
+        let k_out = w.out_degree(2);
+        let v_out = w.out_degree(3);
+        assert_eq!(k_out, cfg.heads);
+        assert_eq!(v_out, cfg.heads);
+        // The KV edges carry the full cached tensor (kv_len x d_model).
+        for e in w.edges.iter().filter(|e| e.src == 2) {
+            assert_eq!((e.rows, e.cols), (cfg.kv_len, cfg.d_model));
+        }
+        // Scores have fan-in 2 (Q and K) and a softmax sync.
+        let sc = 4; // blk0 head 0 scores
+        assert!(w.ops[sc].name.ends_with("scores0"));
+        assert!(w.ops[sc].sync);
+        assert_eq!(w.in_degree(sc), 2);
+    }
+
+    #[test]
+    fn macs_match_published_order() {
+        // GPT-2 small prefill at 128 tokens: ~params(124M) x tokens(128)
+        // ~= 16G MACs including the lm_head.
+        let macs = gpt2_small(1).total_macs() as f64;
+        assert!(macs > 12e9 && macs < 20e9, "macs={macs:.3e}");
+        // Batch multiplies the token dimension.
+        let b2 = gpt2_small(2);
+        assert_eq!(b2.ops[0].m, 2 * 128);
+    }
+
+    #[test]
+    fn decode_shape_deepens_kv_edges() {
+        // A decode-shaped config: 1 query token against a 512-deep KV
+        // cache; the KV edges grow with kv_len while Q stays thin.
+        let cfg = Gpt2Config { seq: 1, kv_len: 512, ..Gpt2Config::small() };
+        let w = cfg.workload(1);
+        assert!(w.validate().is_ok());
+        assert_eq!(w.ops[1].m, 1); // q
+        assert_eq!(w.ops[2].m, 512); // k (cache depth)
+        let kv_edge = w.edges.iter().find(|e| e.src == 2).unwrap();
+        assert_eq!(kv_edge.rows, 512);
+    }
+}

@@ -6,11 +6,13 @@
 //! "different batch sizes" experiments (Figure 11).
 
 mod alexnet;
+mod gpt2;
 mod hydranet;
 mod vision_mamba;
 mod vit;
 
 pub use alexnet::alexnet;
+pub use gpt2::{gpt2, gpt2_large, gpt2_small, Gpt2Config};
 pub use hydranet::{hydranet, hydranet_branched};
 pub use vision_mamba::vision_mamba;
 pub use vit::{vit, vit_residual};

@@ -24,7 +24,7 @@ use mcmcomm::netsim::conformance::{
 };
 use mcmcomm::opt::ga::GaParams;
 use mcmcomm::platform::Platform;
-use mcmcomm::workload::models::evaluation_suite;
+use mcmcomm::workload::models::{evaluation_suite, gpt2_small};
 use mcmcomm::workload::Workload;
 
 /// Tiny solver budgets: the suite validates sim-vs-model agreement on
@@ -96,6 +96,20 @@ fn conformance_suite() {
             );
         }
     }
+    // Transformer coverage: gpt2_small (a full LLM block stack, ~25x
+    // more ops than the CNN zoo) on the headline preset. One platform
+    // keeps the release sweep's wall-clock in check while still grading
+    // every scheduler's sim-vs-model agreement on an attention/MLP
+    // graph; the bands are the same ones the CNN cells use.
+    scenarios.push(
+        Scenario::builder()
+            .platform(Platform::headline())
+            .workload(gpt2_small(1))
+            .flags(OptFlags::ALL)
+            .objective(Objective::Latency)
+            .build()
+            .expect("valid gpt2_small conformance scenario"),
+    );
     let n_scenarios = scenarios.len();
     let rows = Engine::sweep(scenarios, &scheds).expect("sweep schedules");
     assert_eq!(rows.len(), n_scenarios);
