@@ -51,7 +51,10 @@ USAGE: mcmcomm <subcommand> [--options]
   platforms --validate FILE.json | --validate-dir DIR | --list
   simulate  --model NAME [--scheme NAME] [--type T] [--mem M] [--grid N]
             [--platform FILE.json] [--batch N] [--seed N] [--overlap]
-            [--hop-latency NS]
+            [--hop-latency NS] [--profile]
+            --profile prints the DES wall-clock split (lowering |
+            event loop | rate recomputes | component rebuilds) of the
+            simulated plan
   netsim    [--grid N] [--bw-nop G] [--bw-mem G] [--central] [--diagonal] [--gb BYTES]
   run-e2e   [--model NAME] [--scheme NAME] [--scale S] [--artifacts DIR] [--seed N]
   serve     [--requests N] [--rate RPS] [--slack-ms MS] [--model NAME]
@@ -366,6 +369,7 @@ fn cmd_simulate(mut args: Args) -> Result<()> {
     let platform_file = args.get("platform");
     let seed = args.get_usize("seed", 42).map_err(Error::msg)? as u64;
     let overlap = args.flag("overlap");
+    let profile = args.flag("profile");
     let hop_latency =
         args.get_f64("hop-latency", 0.0).map_err(Error::msg)?;
     args.finish().map_err(Error::msg)?;
@@ -386,6 +390,9 @@ fn cmd_simulate(mut args: Args) -> Result<()> {
         mode: if overlap { SimMode::Overlap } else { SimMode::Conformance },
         hop_latency_ns: hop_latency,
     };
+    if profile {
+        return profile_sim(engine.scenario(), plan, &cfg);
+    }
     let sim = engine.scenario().simulate_with(plan, &cfg)?;
 
     println!(
@@ -458,6 +465,49 @@ fn cmd_simulate(mut args: Args) -> Result<()> {
             "simulated/analytical ratio {ratio:.3} outside tolerance"
         );
     }
+    Ok(())
+}
+
+/// `simulate --profile`: one DES run with the per-phase wall-clock
+/// split (lowering | event loop | incremental rate recomputes |
+/// component rebuilds), mirroring `optimize --profile`.
+fn profile_sim(
+    scenario: &Scenario,
+    plan: &mcmcomm::engine::Plan,
+    cfg: &mcmcomm::netsim::sim::SimConfig,
+) -> Result<()> {
+    let (sim, p) = mcmcomm::netsim::simulate_plan_profiled(
+        scenario.platform(),
+        scenario.workload(),
+        &plan.alloc,
+        plan.flags,
+        cfg,
+    )?;
+    let s = |ns: u64| ns as f64 / 1e9;
+    println!(
+        "sim profile ({} task(s), {} event(s), mode {:?}):",
+        p.tasks, p.events, cfg.mode
+    );
+    println!("  lowering  : {:>9.3}s", s(p.lower_ns));
+    println!(
+        "  event loop: {:>9.3}s (wall, includes rate work)",
+        s(p.event_loop_ns)
+    );
+    println!(
+        "  rates     : {:>9.3}s ({} incremental recompute(s))",
+        s(p.rate_recompute_ns),
+        p.rate_recomputes
+    );
+    println!(
+        "  components: {:>9.3}s ({} component(s) recomputed)",
+        s(p.components_ns),
+        p.components_recomputed
+    );
+    println!(
+        "simulated makespan {:.4} ms ({} redistributed edge(s))",
+        sim.makespan_ns / 1e6,
+        sim.redistributed_edges(),
+    );
     Ok(())
 }
 

@@ -33,7 +33,6 @@
 use std::sync::Arc;
 
 use crate::cost::evaluator::OptFlags;
-use crate::cost::scratch::TermBufs;
 use crate::err;
 use crate::partition::Allocation;
 use crate::platform::Platform;
@@ -42,8 +41,8 @@ use crate::util::error::Result;
 use crate::workload::Workload;
 
 use super::sim::{
-    edge_redist_decision, lower_op, lower_plan, run_tasks_resumable,
-    Checkpoint, LowerCtx, LoweredPlan, RunOutcome, SimConfig, SimMode,
+    edge_redist_decision, lower_op, lower_plan, run_tasks_into, Checkpoint,
+    LowerCtx, LoweredPlan, RunOutcome, SimConfig, SimMode, SimScratch,
 };
 
 /// Telemetry for the incremental path (tests + the hotpath bench).
@@ -83,7 +82,11 @@ pub struct IncrementalSim {
     graph: Arc<LinkGraph>,
     ctx: LowerCtx,
     routes: RouteCache,
-    bufs: TermBufs,
+    /// Event-loop + lowering scratch, warm across calls (PR 8: the
+    /// steady state allocates nothing).
+    scratch: SimScratch,
+    /// Recycled outcome buffers from the run before last.
+    spare: RunOutcome,
     cached: Option<CachedRun>,
     stats: IncSimStats,
 }
@@ -113,7 +116,8 @@ impl IncrementalSim {
             graph: plat.link_graph_shared(flags.diagonal),
             ctx: LowerCtx::new(plat, wl),
             routes: RouteCache::new(),
-            bufs: TermBufs::default(),
+            scratch: SimScratch::default(),
+            spare: RunOutcome::default(),
             cached: None,
             stats: IncSimStats::default(),
         })
@@ -168,13 +172,21 @@ impl IncrementalSim {
             &self.ctx,
             &self.graph,
             &mut self.routes,
+            &mut self.scratch.lower,
         )?;
         let bounds = Self::boundaries(&lowered.op_task_start);
-        let (outcome, checkpoints) = run_tasks_resumable(
+        let mut outcome = std::mem::take(&mut self.spare);
+        let mut checkpoints = Vec::new();
+        run_tasks_into(
             &self.graph,
             &lowered.tasks,
+            Some(&lowered.meta),
             self.hop_latency_ns,
             &bounds,
+            None,
+            &mut self.scratch,
+            &mut outcome,
+            &mut checkpoints,
             None,
         )?;
         let makespan = outcome.makespan_ns;
@@ -217,7 +229,7 @@ impl IncrementalSim {
                 self.flags,
                 &self.ctx,
                 e,
-                &mut self.bufs,
+                &mut self.scratch.lower.bufs,
             );
             if adopt != redist_edge[e] {
                 // A decision flip swaps the producer's writeback for an
@@ -259,6 +271,7 @@ impl IncrementalSim {
                 &self.ctx,
                 &self.graph,
                 &mut self.routes,
+                &mut self.scratch.lower,
                 i,
                 &mut lowered,
             )?;
@@ -272,12 +285,19 @@ impl IncrementalSim {
             prev.checkpoints.iter().rev().find(|c| c.boundary <= cut);
         self.stats.tasks_resumed += resume.map_or(0, |c| c.boundary as u64);
         let bounds = Self::boundaries(&lowered.op_task_start);
-        let (outcome, mut fresh_ckpts) = run_tasks_resumable(
+        let mut outcome = std::mem::take(&mut self.spare);
+        let mut fresh_ckpts = Vec::new();
+        run_tasks_into(
             &self.graph,
             &lowered.tasks,
+            Some(&lowered.meta),
             self.hop_latency_ns,
             &bounds,
             resume.map(|c| (c, &prev.outcome)),
+            &mut self.scratch,
+            &mut outcome,
+            &mut fresh_ckpts,
+            None,
         )?;
         let mut checkpoints: Vec<Checkpoint> = match resume {
             Some(c) => prev
@@ -296,6 +316,7 @@ impl IncrementalSim {
         #[cfg(debug_assertions)]
         {
             use super::sim::Work;
+            let mut dbg_ls = super::sim::LowerScratch::default();
             let full = lower_plan(
                 &self.plat,
                 &self.wl,
@@ -305,6 +326,7 @@ impl IncrementalSim {
                 &self.ctx,
                 &self.graph,
                 &mut self.routes,
+                &mut dbg_ls,
             )?;
             assert_eq!(
                 full.tasks.len(),
@@ -332,7 +354,7 @@ impl IncrementalSim {
                     _ => panic!("task {t} work kind diverged"),
                 }
             }
-            let (fo, _) = run_tasks_resumable(
+            let (fo, _) = super::sim::run_tasks_resumable(
                 &self.graph,
                 &full.tasks,
                 self.hop_latency_ns,
@@ -371,6 +393,8 @@ impl IncrementalSim {
             outcome,
             checkpoints,
         });
+        // Recycle the superseded outcome's buffers for the next run.
+        self.spare = prev.outcome;
         Ok(makespan)
     }
 }

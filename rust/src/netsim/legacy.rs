@@ -1,0 +1,263 @@
+//! The pre-PR-8 DES event loop, frozen verbatim.
+//!
+//! [`run_tasks_legacy`] is a byte-for-byte copy of the original
+//! `run_tasks_resumable` inner loop: five O(n) scans per event and a
+//! from-scratch, allocating global [`maxmin_rates`] call on every
+//! completion. It is kept for two reasons only:
+//!
+//! * **Oracle** — the active-set engine in [`super::sim`] must produce
+//!   bit-identical `start`/`finish`/`link_bytes`; unit and property
+//!   tests diff the two loops on lowered plans and random task graphs.
+//! * **Bench emulation** — `benches/sim_conformance.rs` measures
+//!   `des_event_loop_speedup` as legacy-time / new-time on the same
+//!   lowered task graph (the CI ratchet blocks below 3x on the
+//!   gpt2_large x 20x20 line).
+//!
+//! Do not "fix" or optimize this file: its value is that it does not
+//! change.
+
+use super::maxmin::maxmin_rates;
+use super::sim::{Checkpoint, RunOutcome, Task, Work};
+use crate::err;
+use crate::topology::links::{LinkGraph, LinkId};
+use crate::util::error::Result;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Pending,
+    Latency,
+    Active,
+    Done,
+}
+
+/// The original full-scan event loop (see the module docs). Semantics,
+/// iteration order and floating-point arithmetic are exactly the
+/// pre-PR-8 `run_tasks_resumable`.
+pub(crate) fn run_tasks_legacy(
+    graph: &LinkGraph,
+    tasks: &[Task],
+    hop_latency_ns: f64,
+    boundaries: &[usize],
+    resume: Option<(&Checkpoint, &RunOutcome)>,
+) -> Result<(RunOutcome, Vec<Checkpoint>)> {
+    let n = tasks.len();
+    let mut unmet: Vec<usize> = tasks.iter().map(|t| t.deps.len()).collect();
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, t) in tasks.iter().enumerate() {
+        for &d in &t.deps {
+            if d >= n {
+                return Err(err!(
+                    "task {i} depends on nonexistent task {d} (graph has \
+                     {n} tasks)"
+                ));
+            }
+            dependents[d].push(i);
+        }
+    }
+    let routes: Vec<&[LinkId]> = tasks
+        .iter()
+        .map(|t| match &t.work {
+            Work::Transfer { route, .. } => &route[..],
+            Work::Compute { .. } => &[],
+        })
+        .collect();
+
+    let mut state = vec![State::Pending; n];
+    let mut remaining = vec![0.0f64; n];
+    let mut lat_left = vec![0.0f64; n];
+    let mut start = vec![0.0f64; n];
+    let mut finish = vec![0.0f64; n];
+    let mut link_bytes = vec![0.0f64; graph.links.len()];
+    let mut done = 0usize;
+    let mut now = 0.0f64;
+    let mut checkpoints: Vec<Checkpoint> = Vec::new();
+    let mut next_ckpt = 0usize;
+
+    let base = match resume {
+        Some((ck, prev)) => {
+            if ck.boundary > n
+                || prev.start.len() < ck.boundary
+                || prev.finish.len() < ck.boundary
+                || ck.link_bytes.len() != link_bytes.len()
+            {
+                return Err(err!(
+                    "resume checkpoint (boundary {}) does not fit the \
+                     task graph ({} tasks, {} links)",
+                    ck.boundary,
+                    n,
+                    link_bytes.len()
+                ));
+            }
+            for i in 0..ck.boundary {
+                state[i] = State::Done;
+                start[i] = prev.start[i];
+                finish[i] = prev.finish[i];
+            }
+            done = ck.boundary;
+            now = ck.now;
+            link_bytes.copy_from_slice(&ck.link_bytes);
+            for i in ck.boundary..n {
+                unmet[i] = tasks[i]
+                    .deps
+                    .iter()
+                    .filter(|&&d| d >= ck.boundary)
+                    .count();
+            }
+            ck.boundary
+        }
+        None => 0,
+    };
+    while next_ckpt < boundaries.len() && boundaries[next_ckpt] <= base {
+        next_ckpt += 1;
+    }
+
+    let mut ready: Vec<usize> =
+        (base..n).filter(|&i| unmet[i] == 0).collect();
+    let mut completions: Vec<usize> = Vec::new();
+    let mut draining = vec![false; n];
+
+    loop {
+        while let Some(i) = ready.pop() {
+            start[i] = now;
+            let instant = match &tasks[i].work {
+                Work::Compute { dur_ns } => *dur_ns <= 0.0,
+                Work::Transfer { route, bytes } => {
+                    route.is_empty() || *bytes <= 0.0
+                }
+            };
+            if instant {
+                state[i] = State::Done;
+                finish[i] = now;
+                done += 1;
+                for &d in &dependents[i] {
+                    unmet[d] -= 1;
+                    if unmet[d] == 0 {
+                        ready.push(d);
+                    }
+                }
+            } else {
+                match &tasks[i].work {
+                    Work::Compute { dur_ns } => {
+                        remaining[i] = *dur_ns;
+                        state[i] = State::Active;
+                    }
+                    Work::Transfer { route, bytes } => {
+                        remaining[i] = *bytes;
+                        lat_left[i] = (route.len() - 1) as f64
+                            * hop_latency_ns;
+                        state[i] = if lat_left[i] > 0.0 {
+                            State::Latency
+                        } else {
+                            State::Active
+                        };
+                    }
+                }
+            }
+        }
+        if done == n {
+            break;
+        }
+        if !state
+            .iter()
+            .any(|s| matches!(s, State::Active | State::Latency))
+        {
+            return Err(err!(
+                "simulation stalled with {} tasks blocked on unmet \
+                 dependencies (cycle in the lowered task graph)",
+                n - done
+            ));
+        }
+
+        for i in 0..n {
+            draining[i] = state[i] == State::Active
+                && matches!(tasks[i].work, Work::Transfer { .. });
+        }
+        let rate = maxmin_rates(graph, &routes, &draining);
+
+        let mut dt = f64::INFINITY;
+        for i in 0..n {
+            match state[i] {
+                State::Latency => dt = dt.min(lat_left[i]),
+                State::Active => match tasks[i].work {
+                    Work::Compute { .. } => dt = dt.min(remaining[i]),
+                    Work::Transfer { .. } => {
+                        if rate[i] > 0.0 {
+                            dt = dt.min(remaining[i] / rate[i]);
+                        }
+                    }
+                },
+                _ => {}
+            }
+        }
+        if !dt.is_finite() {
+            return Err(err!(
+                "simulation deadlock: active transfer with zero rate \
+                 (zero-capacity link on a route?)"
+            ));
+        }
+        now += dt;
+        for i in 0..n {
+            match state[i] {
+                State::Latency => {
+                    lat_left[i] -= dt;
+                    if lat_left[i] <= 1e-12 {
+                        lat_left[i] = 0.0;
+                        state[i] = State::Active;
+                    }
+                }
+                State::Active => match &tasks[i].work {
+                    Work::Compute { dur_ns } => {
+                        remaining[i] -= dt;
+                        if remaining[i] <= 1e-9 * dur_ns.max(1.0) {
+                            completions.push(i);
+                        }
+                    }
+                    Work::Transfer { route, bytes } => {
+                        if rate[i] > 0.0 {
+                            let moved = rate[i] * dt;
+                            remaining[i] -= moved;
+                            for &l in route.iter() {
+                                link_bytes[l] += moved;
+                            }
+                            if remaining[i] <= 1e-9 * bytes.max(1.0) {
+                                completions.push(i);
+                            }
+                        }
+                    }
+                },
+                _ => {}
+            }
+        }
+        for &i in &completions {
+            state[i] = State::Done;
+            remaining[i] = 0.0;
+            finish[i] = now;
+            done += 1;
+            for &d in &dependents[i] {
+                unmet[d] -= 1;
+                if unmet[d] == 0 {
+                    ready.push(d);
+                }
+            }
+        }
+        completions.clear();
+        while next_ckpt < boundaries.len() && done > boundaries[next_ckpt] {
+            next_ckpt += 1;
+        }
+        if next_ckpt < boundaries.len() && done == boundaries[next_ckpt] {
+            let b = boundaries[next_ckpt];
+            debug_assert!(
+                state[..b].iter().all(|s| *s == State::Done)
+                    && state[b..].iter().all(|s| *s == State::Pending),
+                "checkpoint boundary {b} is not a quiescent cut"
+            );
+            checkpoints.push(Checkpoint {
+                boundary: b,
+                now,
+                link_bytes: link_bytes.clone(),
+            });
+            next_ckpt += 1;
+        }
+    }
+    Ok((RunOutcome { start, finish, link_bytes, makespan_ns: now }, checkpoints))
+}

@@ -1,0 +1,494 @@
+//! Max-min fair rate allocation: the global progressive-filling
+//! reference ([`maxmin_rates`]) and its component-wise incremental
+//! twin ([`MaxMinScratch`]), the PR-8 fast path behind the DES event
+//! loop.
+//!
+//! # Why components
+//!
+//! Progressive filling is a fixpoint over *link* state: freeze the
+//! most-contended link's flows at its fair share `cap/n`, subtract,
+//! repeat. Two flows influence each other's rates only if they are
+//! connected through a chain of shared links — i.e. they sit in the
+//! same connected component of the flow/link sharing graph. Links are
+//! never shared across components (sharing *is* the component
+//! relation), so the global algorithm's `cap` and `nflows` updates
+//! decompose exactly: running progressive filling per component, links
+//! scanned in ascending id and flows frozen in ascending id, performs
+//! the *same* floating-point operations on the *same* values as the
+//! global pass, merely reordering independent components. The rates
+//! are therefore **bit-identical**, not merely close — the event loop
+//! debug-asserts this against [`maxmin_rates`] on every event.
+//!
+//! # Why incremental
+//!
+//! Between two DES events the draining set changes only by the flows
+//! that completed or started. A component whose flow set is unchanged
+//! keeps its rates (same flows, same links, same arithmetic). The
+//! invalidation rule is link-based: an event marks the route links of
+//! every started/finished flow *dirty*; a component must be recomputed
+//! iff it touches a dirty link. This is sound because any surviving
+//! component whose rates could have changed must previously have
+//! competed with an added/removed flow through some shared link — and
+//! a component that shares *no* link with the changed flows was
+//! already a maximal component before the event, with an unchanged
+//! flow set (see DESIGN.md §DES performance architecture).
+//!
+//! All working state (union-find parents, per-link caps/counts/stamps,
+//! member lists) lives in the reusable [`MaxMinScratch`]; steady-state
+//! recomputation allocates nothing once buffers are warm.
+
+use crate::topology::links::{LinkGraph, LinkId};
+
+/// Max-min fair rates for the active flows (progressive filling).
+/// `routes[i]` lists the links flow `i` traverses; `active[i]` gates
+/// whether flow `i` competes for capacity. Inactive (and zero-route)
+/// flows get rate 0. Public so invariant tests and external tooling can
+/// probe the allocation directly. This is the allocating *reference*
+/// implementation; the event loop runs the bit-identical component-wise
+/// [`MaxMinScratch`] and debug-asserts against this one.
+pub fn maxmin_rates(
+    graph: &LinkGraph,
+    routes: &[&[LinkId]],
+    active: &[bool],
+) -> Vec<f64> {
+    let nf = routes.len();
+    let mut rate = vec![0.0f64; nf];
+    let mut frozen: Vec<bool> = active
+        .iter()
+        .zip(routes)
+        .map(|(a, r)| !a || r.is_empty())
+        .collect();
+    let mut cap: Vec<f64> = graph.links.iter().map(|l| l.capacity).collect();
+
+    loop {
+        // Count unfrozen flows per link.
+        let mut nflows = vec![0usize; graph.links.len()];
+        for (i, r) in routes.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            for &l in r.iter() {
+                nflows[l] += 1;
+            }
+        }
+        // Bottleneck link: minimal fair share.
+        let mut best: Option<(f64, LinkId)> = None;
+        for (l, &n) in nflows.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let share = cap[l] / n as f64;
+            if best.is_none_or(|(s, _)| share < s) {
+                best = Some((share, l));
+            }
+        }
+        let Some((share, bott)) = best else { break };
+        // Freeze every unfrozen flow crossing the bottleneck.
+        for (i, r) in routes.iter().enumerate() {
+            if frozen[i] || !r.contains(&bott) {
+                continue;
+            }
+            rate[i] = share;
+            frozen[i] = true;
+            for &l in r.iter() {
+                cap[l] = (cap[l] - share).max(0.0);
+            }
+        }
+    }
+    rate
+}
+
+/// Telemetry of one [`MaxMinScratch::recompute`] call (profile
+/// counters for `simulate --profile` and the bench).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CompStats {
+    /// Connected components found in the active set this event.
+    pub components: u64,
+    /// Components whose rates were actually recomputed (dirty).
+    pub recomputed: u64,
+    /// Wall time of the union-find rebuild, ns (0 unless timed).
+    pub rebuild_ns: u64,
+}
+
+/// Reusable state for component-wise incremental max-min (see the
+/// module docs). One instance serves one event loop; buffers grow to
+/// the task-graph/link-graph sizes once and are reused allocation-free
+/// afterwards. Stamps are `u64` epochs, so buffers never need clearing
+/// between events or runs.
+#[derive(Debug, Clone, Default)]
+pub struct MaxMinScratch {
+    // ---- per-link (sized to graph.links.len()).
+    cap: Vec<f64>,
+    nflows: Vec<usize>,
+    /// Link is rate-dirty when `dirty[l] == dirty_stamp`.
+    dirty: Vec<u64>,
+    /// Link already claimed this rebuild when `owner[l] == build_stamp`.
+    owner: Vec<u64>,
+    /// Flow that claimed the link (valid under `owner` stamp).
+    owner_flow: Vec<usize>,
+    /// Link already collected into `comp_links` this group.
+    seen: Vec<u64>,
+    // ---- per-flow (sized to the task count).
+    parent: Vec<usize>,
+    frozen: Vec<bool>,
+    /// Root is dirty this rebuild when `rstamp[root] == build_stamp`.
+    rstamp: Vec<u64>,
+    // ---- transient lists (reused).
+    members: Vec<(usize, usize)>,
+    comp_links: Vec<LinkId>,
+    // ---- epochs.
+    dirty_stamp: u64,
+    build_stamp: u64,
+    seen_stamp: u64,
+    any_dirty: bool,
+}
+
+fn find(parent: &mut [usize], mut x: usize) -> usize {
+    while parent[x] != x {
+        parent[x] = parent[parent[x]]; // path halving
+        x = parent[x];
+    }
+    x
+}
+
+impl MaxMinScratch {
+    pub fn new() -> MaxMinScratch {
+        MaxMinScratch { dirty_stamp: 1, build_stamp: 1, seen_stamp: 1, ..MaxMinScratch::default() }
+    }
+
+    /// Grow buffers to `n_links` links and `n_flows` flows (no-op once
+    /// warm) and reset the event-level dirty flag. Call once per run.
+    pub(crate) fn begin_run(&mut self, n_links: usize, n_flows: usize) {
+        if self.dirty_stamp == 0 {
+            // Default-constructed instance: stamp 0 would alias the
+            // zero-filled stamp buffers.
+            self.dirty_stamp = 1;
+            self.build_stamp = 1;
+            self.seen_stamp = 1;
+        }
+        if self.cap.len() < n_links {
+            self.cap.resize(n_links, 0.0);
+            self.nflows.resize(n_links, 0);
+            self.dirty.resize(n_links, 0);
+            self.owner.resize(n_links, 0);
+            self.owner_flow.resize(n_links, 0);
+            self.seen.resize(n_links, 0);
+        }
+        if self.parent.len() < n_flows {
+            self.parent.resize(n_flows, 0);
+            self.frozen.resize(n_flows, false);
+            self.rstamp.resize(n_flows, 0);
+        }
+        self.any_dirty = false;
+    }
+
+    /// Mark every link of `route` rate-dirty: a draining flow started
+    /// or stopped crossing them, so every component touching one of
+    /// these links must recompute at the next [`Self::recompute`].
+    #[inline]
+    pub(crate) fn mark_route_dirty(&mut self, route: &[LinkId]) {
+        for &l in route {
+            self.dirty[l] = self.dirty_stamp;
+        }
+        self.any_dirty = true;
+    }
+
+    /// Recompute fair-share rates for every dirty component of the
+    /// active flow set. `active` lists draining flow ids in ascending
+    /// order (all with non-empty routes); `route_of` resolves a flow's
+    /// links; `rate` is the full-length rate table — entries of clean
+    /// components are left untouched (they are still bit-exact), dirty
+    /// components are overwritten. Consumes the dirty marks.
+    ///
+    /// Bit-identity with the global [`maxmin_rates`] over the same
+    /// active set is asserted by the event loop in debug builds.
+    pub(crate) fn recompute<'a>(
+        &mut self,
+        graph: &LinkGraph,
+        active: &[usize],
+        route_of: impl Fn(usize) -> &'a [LinkId],
+        rate: &mut [f64],
+        timed: bool,
+    ) -> CompStats {
+        let mut stats = CompStats::default();
+        if !self.any_dirty || active.is_empty() {
+            // No flow started or finished since the last allocation:
+            // every component is unchanged, rates are already exact.
+            return stats;
+        }
+        let t0 = if timed { Some(std::time::Instant::now()) } else { None };
+
+        // ---- union-find rebuild over the active set, keyed by link
+        // ownership: flows sharing any link land in one component. The
+        // root of a component is its minimum flow id (deterministic).
+        self.build_stamp += 1;
+        let bs = self.build_stamp;
+        for &f in active {
+            self.parent[f] = f;
+        }
+        for &f in active {
+            for &l in route_of(f) {
+                if self.owner[l] == bs {
+                    let a = find(&mut self.parent, f);
+                    let b = find(&mut self.parent, self.owner_flow[l]);
+                    if a < b {
+                        self.parent[b] = a;
+                    } else if b < a {
+                        self.parent[a] = b;
+                    }
+                } else {
+                    self.owner[l] = bs;
+                    self.owner_flow[l] = f;
+                }
+            }
+        }
+        // ---- dirty roots: a component recomputes iff it touches a
+        // dirty link (the invalidation rule; see module docs).
+        let ds = self.dirty_stamp;
+        for &f in active {
+            if route_of(f).iter().any(|&l| self.dirty[l] == ds) {
+                let r = find(&mut self.parent, f);
+                self.rstamp[r] = bs;
+            }
+        }
+        // ---- collect dirty members, grouped by root, flows ascending
+        // within each group (unique (root, flow) keys, so the unstable
+        // sort is deterministic).
+        self.members.clear();
+        let mut n_components = 0u64;
+        for &f in active {
+            let r = find(&mut self.parent, f);
+            if r == f {
+                n_components += 1;
+            }
+            if self.rstamp[r] == bs {
+                self.members.push((r, f));
+            }
+        }
+        self.members.sort_unstable();
+        if let Some(t0) = t0 {
+            stats.rebuild_ns = t0.elapsed().as_nanos() as u64;
+        }
+        stats.components = n_components;
+
+        // ---- per-component progressive filling, replaying the global
+        // algorithm's arithmetic restricted to the component: links
+        // scanned ascending (same tie-break), flows frozen ascending,
+        // caps decremented per frozen flow exactly as the global pass
+        // does.
+        let mut g = 0usize;
+        while g < self.members.len() {
+            let root = self.members[g].0;
+            let mut end = g + 1;
+            while end < self.members.len() && self.members[end].0 == root {
+                end += 1;
+            }
+            stats.recomputed += 1;
+
+            self.seen_stamp += 1;
+            let ss = self.seen_stamp;
+            self.comp_links.clear();
+            for k in g..end {
+                let f = self.members[k].1;
+                self.frozen[f] = false;
+                for &l in route_of(f) {
+                    if self.seen[l] != ss {
+                        self.seen[l] = ss;
+                        self.comp_links.push(l);
+                    }
+                }
+            }
+            self.comp_links.sort_unstable();
+            for &l in &self.comp_links {
+                self.cap[l] = graph.links[l].capacity;
+            }
+            loop {
+                for &l in &self.comp_links {
+                    self.nflows[l] = 0;
+                }
+                for k in g..end {
+                    let f = self.members[k].1;
+                    if self.frozen[f] {
+                        continue;
+                    }
+                    for &l in route_of(f) {
+                        self.nflows[l] += 1;
+                    }
+                }
+                let mut best: Option<(f64, LinkId)> = None;
+                for &l in &self.comp_links {
+                    let n = self.nflows[l];
+                    if n == 0 {
+                        continue;
+                    }
+                    let share = self.cap[l] / n as f64;
+                    if best.is_none_or(|(s, _)| share < s) {
+                        best = Some((share, l));
+                    }
+                }
+                let Some((share, bott)) = best else { break };
+                for k in g..end {
+                    let f = self.members[k].1;
+                    if self.frozen[f] {
+                        continue;
+                    }
+                    let r = route_of(f);
+                    if !r.contains(&bott) {
+                        continue;
+                    }
+                    rate[f] = share;
+                    self.frozen[f] = true;
+                    for &l in r {
+                        self.cap[l] = (self.cap[l] - share).max(0.0);
+                    }
+                }
+            }
+            g = end;
+        }
+
+        // Consume the dirty marks: bumping the stamp invalidates every
+        // mark without touching the buffer.
+        self.dirty_stamp += 1;
+        self.any_dirty = false;
+        stats
+    }
+
+    /// From-scratch component-wise allocation over an explicit flow
+    /// list — same contract as [`maxmin_rates`] (inactive and
+    /// empty-route flows get rate 0), same bits, different algorithm.
+    /// Public so the property suite can pin the component
+    /// decomposition against the global reference directly.
+    pub fn rates(
+        &mut self,
+        graph: &LinkGraph,
+        routes: &[&[LinkId]],
+        active: &[bool],
+    ) -> Vec<f64> {
+        let nf = routes.len();
+        let mut rate = vec![0.0f64; nf];
+        self.begin_run(graph.links.len(), nf);
+        let mut ids: Vec<usize> = Vec::with_capacity(nf);
+        for (i, r) in routes.iter().enumerate() {
+            if active[i] && !r.is_empty() {
+                ids.push(i);
+            }
+        }
+        for &i in &ids {
+            self.mark_route_dirty(routes[i]);
+        }
+        self.recompute(graph, &ids, |i| routes[i], &mut rate, false);
+        rate
+    }
+
+    /// Capacity fingerprint (perf-pin test: capacities must stop
+    /// changing once the scratch is warm).
+    pub fn capacities(&self) -> Vec<usize> {
+        vec![
+            self.cap.capacity(),
+            self.nflows.capacity(),
+            self.dirty.capacity(),
+            self.owner.capacity(),
+            self.owner_flow.capacity(),
+            self.seen.capacity(),
+            self.parent.capacity(),
+            self.frozen.capacity(),
+            self.rstamp.capacity(),
+            self.members.capacity(),
+            self.comp_links.capacity(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Pos;
+
+    fn owned(routes: &[Vec<LinkId>]) -> Vec<&[LinkId]> {
+        routes.iter().map(|r| r.as_slice()).collect()
+    }
+
+    #[test]
+    fn componentwise_matches_global_on_disjoint_components() {
+        // Two independent chains: forward flows on a 1x4 chain plus an
+        // uncontended reverse flow — three components in total.
+        let g = LinkGraph::mesh(1, 4, false, 60.0);
+        let routes_owned = vec![
+            g.route(0, 3).unwrap(),
+            g.route(0, 1).unwrap(),
+            g.route(2, 3).unwrap(),
+            g.route(3, 0).unwrap(),
+        ];
+        let routes = owned(&routes_owned);
+        let active = vec![true; routes.len()];
+        let global = maxmin_rates(&g, &routes, &active);
+        let mut sc = MaxMinScratch::new();
+        let comp = sc.rates(&g, &routes, &active);
+        for i in 0..routes.len() {
+            assert_eq!(
+                global[i].to_bits(),
+                comp[i].to_bits(),
+                "flow {i}: {} vs {}",
+                global[i],
+                comp[i]
+            );
+        }
+    }
+
+    #[test]
+    fn componentwise_matches_global_with_saturated_bottleneck() {
+        // All-pull through one memory attachment: the attachment link
+        // saturates and every flow lands in one big component.
+        let mut g = LinkGraph::mesh(3, 3, false, 60.0);
+        let mem = g.attach_memory(Pos::new(0, 0), 150.0);
+        let routes_owned: Vec<Vec<LinkId>> =
+            (0..9).map(|c| g.route(mem, c).unwrap()).collect();
+        let routes = owned(&routes_owned);
+        let active = vec![true; routes.len()];
+        let global = maxmin_rates(&g, &routes, &active);
+        let mut sc = MaxMinScratch::new();
+        let comp = sc.rates(&g, &routes, &active);
+        for i in 0..routes.len() {
+            assert_eq!(global[i].to_bits(), comp[i].to_bits(), "flow {i}");
+        }
+    }
+
+    #[test]
+    fn componentwise_handles_inactive_and_empty_routes() {
+        let g = LinkGraph::mesh(1, 3, false, 60.0);
+        let r01 = g.route(0, 1).unwrap();
+        let empty: Vec<LinkId> = Vec::new();
+        let routes: Vec<&[LinkId]> =
+            vec![r01.as_slice(), empty.as_slice(), r01.as_slice()];
+        let active = [true, true, false];
+        let global = maxmin_rates(&g, &routes, &active);
+        let mut sc = MaxMinScratch::new();
+        let comp = sc.rates(&g, &routes, &active);
+        assert_eq!(global, comp);
+        assert_eq!(comp[1], 0.0);
+        assert_eq!(comp[2], 0.0);
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_stable_across_calls() {
+        // Same query through a reused scratch (stale stamps, warm
+        // buffers) must reproduce the first answer bit for bit.
+        let mut g = LinkGraph::mesh(2, 2, false, 60.0);
+        let mem = g.attach_memory(Pos::new(0, 0), 100.0);
+        let routes_owned: Vec<Vec<LinkId>> =
+            (0..4).map(|c| g.route(mem, c).unwrap()).collect();
+        let routes = owned(&routes_owned);
+        let active = vec![true; routes.len()];
+        let mut sc = MaxMinScratch::new();
+        let first = sc.rates(&g, &routes, &active);
+        for _ in 0..5 {
+            let again = sc.rates(&g, &routes, &active);
+            for i in 0..routes.len() {
+                assert_eq!(first[i].to_bits(), again[i].to_bits());
+            }
+        }
+        let caps = sc.capacities();
+        let _ = sc.rates(&g, &routes, &active);
+        assert_eq!(caps, sc.capacities(), "warm scratch must not regrow");
+    }
+}

@@ -15,16 +15,24 @@
 
 pub mod conformance;
 pub mod incremental;
+pub(crate) mod legacy;
+pub mod maxmin;
 pub mod sim;
 pub mod vtime;
 
 pub use conformance::{check_plan, scheme_tolerance, Conformance};
 pub use incremental::{IncSimStats, IncrementalSim};
-pub use sim::{simulate_plan, SimConfig, SimMode, SimReport};
+pub use maxmin::{maxmin_rates, MaxMinScratch};
+pub use sim::{
+    simulate_plan, simulate_plan_profiled, SimConfig, SimMode, SimProfile,
+    SimReport,
+};
+#[doc(hidden)]
+pub use sim::SimBench;
 pub use vtime::ModulePool;
 
 use crate::platform::Platform;
-use crate::topology::links::{LinkGraph, LinkId, NodeId};
+use crate::topology::links::{LinkGraph, NodeId};
 use crate::util::error::Result;
 
 /// One transfer: `bytes` from `src` to `dst` along the graph's
@@ -65,63 +73,6 @@ impl SimResult {
     }
 }
 
-/// Max-min fair rates for the active flows (progressive filling).
-/// `routes[i]` lists the links flow `i` traverses; `active[i]` gates
-/// whether flow `i` competes for capacity. Inactive (and zero-route)
-/// flows get rate 0. Public so invariant tests and external tooling can
-/// probe the allocation directly.
-pub fn maxmin_rates(
-    graph: &LinkGraph,
-    routes: &[&[LinkId]],
-    active: &[bool],
-) -> Vec<f64> {
-    let nf = routes.len();
-    let mut rate = vec![0.0f64; nf];
-    let mut frozen: Vec<bool> = active
-        .iter()
-        .zip(routes)
-        .map(|(a, r)| !a || r.is_empty())
-        .collect();
-    let mut cap: Vec<f64> = graph.links.iter().map(|l| l.capacity).collect();
-
-    loop {
-        // Count unfrozen flows per link.
-        let mut nflows = vec![0usize; graph.links.len()];
-        for (i, r) in routes.iter().enumerate() {
-            if frozen[i] {
-                continue;
-            }
-            for &l in r.iter() {
-                nflows[l] += 1;
-            }
-        }
-        // Bottleneck link: minimal fair share.
-        let mut best: Option<(f64, LinkId)> = None;
-        for (l, &n) in nflows.iter().enumerate() {
-            if n == 0 {
-                continue;
-            }
-            let share = cap[l] / n as f64;
-            if best.is_none_or(|(s, _)| share < s) {
-                best = Some((share, l));
-            }
-        }
-        let Some((share, bott)) = best else { break };
-        // Freeze every unfrozen flow crossing the bottleneck.
-        for (i, r) in routes.iter().enumerate() {
-            if frozen[i] || !r.contains(&bott) {
-                continue;
-            }
-            rate[i] = share;
-            frozen[i] = true;
-            for &l in r.iter() {
-                cap[l] = (cap[l] - share).max(0.0);
-            }
-        }
-    }
-    rate
-}
-
 /// Run all flows to completion; returns per-flow finish times and
 /// per-link carried bytes. Degenerate flows — zero bytes, or
 /// `src == dst` (an empty route) — complete at t = 0 and never enter
@@ -154,6 +105,28 @@ pub fn simulate_with_latency(
         })
         .collect::<Result<_>>()?;
     let run = sim::run_tasks(graph, &tasks, hop_latency_ns)?;
+    Ok(SimResult {
+        flow_finish_ns: run.finish,
+        link_bytes: run.link_bytes,
+        makespan_ns: run.makespan_ns,
+    })
+}
+
+/// [`simulate`] on the frozen pre-PR-8 event loop ([`legacy`]) — the
+/// bit-identity oracle for the active-set engine. Test-only surface;
+/// not a stable API.
+#[doc(hidden)]
+pub fn simulate_legacy(graph: &LinkGraph, flows: &[Flow]) -> Result<SimResult> {
+    let tasks: Vec<sim::Task> = flows
+        .iter()
+        .map(|f| -> Result<sim::Task> {
+            Ok(sim::Task::transfer(
+                graph.route(f.src, f.dst)?,
+                f.bytes,
+            ))
+        })
+        .collect::<Result<_>>()?;
+    let (run, _) = legacy::run_tasks_legacy(graph, &tasks, 0.0, &[], None)?;
     Ok(SimResult {
         flow_finish_ns: run.finish,
         link_bytes: run.link_bytes,
@@ -223,6 +196,7 @@ pub fn platform_pull_from_memory(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::topology::links::LinkId;
     use crate::topology::Pos;
 
     #[test]

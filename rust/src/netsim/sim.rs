@@ -58,15 +58,15 @@ use crate::cost::compute::comp_ns;
 use crate::cost::energy::comp_energy_pj;
 use crate::cost::evaluator::edge_decision;
 use crate::cost::scratch::TermBufs;
-use crate::err;
 use crate::partition::Allocation;
 use crate::platform::Platform;
 use crate::topology::links::{LinkGraph, LinkId, NodeId, RouteCache};
 use crate::topology::Pos;
-use crate::util::error::Result;
+use crate::util::error::{Error, Result};
 use crate::workload::{EdgeId, Workload};
+use crate::{ensure, err};
 
-use super::maxmin_rates;
+use super::maxmin::MaxMinScratch;
 use crate::cost::evaluator::OptFlags;
 
 /// What the event loop schedules: a fixed-duration compute event or a
@@ -100,7 +100,7 @@ impl Task {
 }
 
 /// Raw event-loop output: per-task start/finish plus per-link bytes.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub(crate) struct RunOutcome {
     pub(crate) start: Vec<f64>,
     pub(crate) finish: Vec<f64>,
@@ -137,6 +137,171 @@ pub(crate) struct Checkpoint {
     pub(crate) link_bytes: Vec<f64>,
 }
 
+/// Profile of one simulated run (`simulate --profile`): where the
+/// wall-clock went (lowering vs event loop vs rate recomputation vs
+/// component rebuild) and how much work the incremental rate engine
+/// actually did. Mirrors the `GaProfile` shape on the optimizer side.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimProfile {
+    /// Plan -> task-graph lowering, ns.
+    pub lower_ns: u64,
+    /// Whole event loop, ns (includes the rate-recompute time).
+    pub event_loop_ns: u64,
+    /// Component-wise max-min recomputation, ns (subset of the event
+    /// loop).
+    pub rate_recompute_ns: u64,
+    /// Of which: union-find component rebuild, ns.
+    pub components_ns: u64,
+    /// Discrete events processed.
+    pub events: u64,
+    /// Events that recomputed at least one component (the rest reused
+    /// every rate unchanged).
+    pub rate_recomputes: u64,
+    /// Components recomputed across the run.
+    pub components_recomputed: u64,
+    /// Tasks in the lowered graph.
+    pub tasks: u64,
+}
+
+/// Reusable lowering buffers: the per-op demand apportioning vectors
+/// and the evaluator scratch the redistribution decisions run on.
+/// Hoisted out of `lower_op` so incremental re-lowering and repeated
+/// simulation allocate nothing per op once warm.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct LowerScratch {
+    demand: Vec<f64>,
+    att_demand: Vec<f64>,
+    att_out: Vec<f64>,
+    pub(crate) bufs: TermBufs,
+}
+
+/// Reusable event-loop state (PR 8): every per-task array, the CSR
+/// dependents adjacency, the active/latency index sets and the
+/// component-wise max-min scratch. One instance serves any number of
+/// [`run_tasks_into`] calls; buffers grow to the largest graph seen
+/// and are then reused allocation-free (pinned by
+/// `tests/sim_scratch_alloc.rs`).
+#[derive(Debug, Clone, Default)]
+pub(crate) struct SimScratch {
+    unmet: Vec<usize>,
+    state: Vec<State>,
+    remaining: Vec<f64>,
+    lat_left: Vec<f64>,
+    rate: Vec<f64>,
+    /// CSR dependents: tasks depending on `d` are
+    /// `dep_list[dep_head[d]..dep_head[d + 1]]`, ascending.
+    dep_head: Vec<usize>,
+    dep_list: Vec<usize>,
+    dep_cursor: Vec<usize>,
+    ready: Vec<usize>,
+    completions: Vec<usize>,
+    /// Draining transfers, ascending task id (the byte-accounting
+    /// iteration order — the floating-point contract with the legacy
+    /// loop).
+    act_transfers: Vec<usize>,
+    act_computes: Vec<usize>,
+    lat_transfers: Vec<usize>,
+    promoted: Vec<usize>,
+    pub(crate) maxmin: MaxMinScratch,
+    pub(crate) lower: LowerScratch,
+}
+
+impl SimScratch {
+    /// Capacity fingerprint of every reusable buffer (perf-pin test:
+    /// capacities must stop changing once the scratch is warm).
+    pub(crate) fn capacities(&self) -> Vec<usize> {
+        let mut caps = vec![
+            self.unmet.capacity(),
+            self.state.capacity(),
+            self.remaining.capacity(),
+            self.lat_left.capacity(),
+            self.rate.capacity(),
+            self.dep_head.capacity(),
+            self.dep_list.capacity(),
+            self.dep_cursor.capacity(),
+            self.ready.capacity(),
+            self.completions.capacity(),
+            self.act_transfers.capacity(),
+            self.act_computes.capacity(),
+            self.lat_transfers.capacity(),
+            self.promoted.capacity(),
+        ];
+        caps.extend(self.maxmin.capacities());
+        caps
+    }
+}
+
+#[inline]
+fn task_route(t: &Task) -> &[LinkId] {
+    match &t.work {
+        Work::Transfer { route, .. } => &route[..],
+        Work::Compute { .. } => &[],
+    }
+}
+
+fn meta_tag(meta: Option<&[TaskMeta]>, i: usize) -> String {
+    match meta.map(|ms| &ms[i]) {
+        Some(m) => match m.edge {
+            Some(e) => format!(" (op {}, {:?}, edge {e})", m.op, m.phase),
+            None => format!(" (op {}, {:?})", m.op, m.phase),
+        },
+        None => String::new(),
+    }
+}
+
+/// Format up to eight offenders; diagnosable stalls at transformer
+/// scale need op/phase/edge attribution, not just a count.
+fn blocked_detail(
+    ids: impl Iterator<Item = usize>,
+    meta: Option<&[TaskMeta]>,
+    per_id: impl Fn(usize) -> String,
+) -> String {
+    let mut detail = String::new();
+    for (k, i) in ids.enumerate() {
+        if k == 8 {
+            detail.push_str(", ...");
+            break;
+        }
+        if k > 0 {
+            detail.push_str(", ");
+        }
+        detail.push_str(&format!("task {i}{}{}", meta_tag(meta, i), per_id(i)));
+    }
+    detail
+}
+
+#[cold]
+fn stall_error(
+    meta: Option<&[TaskMeta]>,
+    unmet: &[usize],
+    state: &[State],
+    done: usize,
+) -> Error {
+    let n = state.len();
+    let ids = (0..n).filter(|&i| state[i] == State::Pending);
+    let detail =
+        blocked_detail(ids, meta, |i| format!(" waiting on {} deps", unmet[i]));
+    err!(
+        "simulation stalled with {} tasks blocked on unmet dependencies \
+         (cycle in the lowered task graph): {detail}",
+        n - done
+    )
+}
+
+#[cold]
+fn deadlock_error(
+    meta: Option<&[TaskMeta]>,
+    act_transfers: &[usize],
+    rate: &[f64],
+) -> Error {
+    let ids = act_transfers.iter().copied().filter(|&i| rate[i] <= 0.0);
+    let detail = blocked_detail(ids, meta, |_| String::new());
+    err!(
+        "simulation deadlock: active transfer with zero rate \
+         (zero-capacity link on a route?): {detail}"
+    )
+}
+
 /// Advance the task graph to completion. Degenerate tasks (zero bytes,
 /// empty route, zero duration) complete the instant their dependencies
 /// do. Transfers pay `(hops - 1) * hop_latency_ns` serially before
@@ -151,18 +316,10 @@ pub(crate) fn run_tasks(
         .map(|(out, _)| out)
 }
 
-/// [`run_tasks`] with checkpoint recording and prefix resume.
-///
-/// `boundaries` (strictly increasing task indices) mark the moments to
-/// snapshot. `resume` restarts from a prior run's [`Checkpoint`],
-/// copying the cached outcome's start/finish times for the task prefix
-/// — valid only when `tasks[..boundary]` is bit-identical to the run
-/// that produced the checkpoint. Resuming is exact rather than
-/// approximate: every per-step decision (max-min rates, `dt`, byte
-/// advancement, completion detection) iterates tasks in index order,
-/// so the suffix replays the same floating-point arithmetic the full
-/// run would and the result is bit-identical (asserted in debug builds
-/// by [`super::incremental::IncrementalSim`]).
+/// [`run_tasks`] with checkpoint recording and prefix resume, on a
+/// fresh scratch. Allocating convenience wrapper over
+/// [`run_tasks_into`] — hot callers (the incremental simulator, the
+/// benches) thread their own [`SimScratch`] instead.
 pub(crate) fn run_tasks_resumable(
     graph: &LinkGraph,
     tasks: &[Task],
@@ -170,9 +327,98 @@ pub(crate) fn run_tasks_resumable(
     boundaries: &[usize],
     resume: Option<(&Checkpoint, &RunOutcome)>,
 ) -> Result<(RunOutcome, Vec<Checkpoint>)> {
+    let mut scratch = SimScratch::default();
+    let mut out = RunOutcome::default();
+    let mut checkpoints = Vec::new();
+    run_tasks_into(
+        graph,
+        tasks,
+        None,
+        hop_latency_ns,
+        boundaries,
+        resume,
+        &mut scratch,
+        &mut out,
+        &mut checkpoints,
+        None,
+    )?;
+    Ok((out, checkpoints))
+}
+
+/// The active-set DES event loop (PR 8) — bit-identical to the frozen
+/// [`super::legacy::run_tasks_legacy`], asymptotically faster.
+///
+/// `boundaries` (strictly increasing task indices) mark the moments to
+/// snapshot into `checkpoints`. `resume` restarts from a prior run's
+/// [`Checkpoint`], copying the cached outcome's start/finish times for
+/// the task prefix — valid only when `tasks[..boundary]` is
+/// bit-identical to the run that produced the checkpoint. `meta`, when
+/// present, enriches stall/deadlock errors with op/phase/edge ids.
+///
+/// # Bit-identity contract
+///
+/// The legacy loop scans all `n` tasks per event; this loop tracks
+/// three index sets (draining transfers, running computes, transfers
+/// paying fill latency) and touches only those, so steady-state cost is
+/// O(active) per event. The floating-point stream is unchanged because
+/// every arithmetic site preserves the legacy iteration order:
+///
+/// * `act_transfers` is kept sorted ascending, so per-link
+///   `link_bytes` accumulation visits transfers in the same order as
+///   the legacy `0..n` scan;
+/// * completions are sorted ascending before processing, matching the
+///   legacy completion order;
+/// * `dt` is a fold of `f64::min` (order-independent) and per-task
+///   decrements are independent, so set iteration order is immaterial
+///   there;
+/// * rates come from the component-wise incremental engine
+///   ([`MaxMinScratch`]), bit-identical to the global
+///   [`super::maxmin::maxmin_rates`] by the component decomposition
+///   argument (asserted per event in debug builds).
+///
+/// Resuming replays the same arithmetic the full run would, so the
+/// result is bit-identical (asserted in debug builds by
+/// [`super::incremental::IncrementalSim`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_tasks_into(
+    graph: &LinkGraph,
+    tasks: &[Task],
+    meta: Option<&[TaskMeta]>,
+    hop_latency_ns: f64,
+    boundaries: &[usize],
+    resume: Option<(&Checkpoint, &RunOutcome)>,
+    scratch: &mut SimScratch,
+    out: &mut RunOutcome,
+    checkpoints: &mut Vec<Checkpoint>,
+    mut profile: Option<&mut SimProfile>,
+) -> Result<()> {
     let n = tasks.len();
-    let mut unmet: Vec<usize> = tasks.iter().map(|t| t.deps.len()).collect();
-    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let timed = profile.is_some();
+    let SimScratch {
+        unmet,
+        state,
+        remaining,
+        lat_left,
+        rate,
+        dep_head,
+        dep_list,
+        dep_cursor,
+        ready,
+        completions,
+        act_transfers,
+        act_computes,
+        lat_transfers,
+        promoted,
+        maxmin,
+        ..
+    } = scratch;
+    let RunOutcome { start, finish, link_bytes, makespan_ns } = out;
+
+    // ---- O(n + deps) per-run init, all on reused buffers.
+    unmet.clear();
+    unmet.extend(tasks.iter().map(|t| t.deps.len()));
+    dep_head.clear();
+    dep_head.resize(n + 1, 0);
     for (i, t) in tasks.iter().enumerate() {
         for &d in &t.deps {
             if d >= n {
@@ -181,26 +427,41 @@ pub(crate) fn run_tasks_resumable(
                      {n} tasks)"
                 ));
             }
-            dependents[d].push(i);
+            dep_head[d + 1] += 1;
         }
     }
-    let routes: Vec<&[LinkId]> = tasks
-        .iter()
-        .map(|t| match &t.work {
-            Work::Transfer { route, .. } => &route[..],
-            Work::Compute { .. } => &[],
-        })
-        .collect();
+    for d in 0..n {
+        dep_head[d + 1] += dep_head[d];
+    }
+    dep_list.clear();
+    dep_list.resize(dep_head[n], 0);
+    dep_cursor.clear();
+    dep_cursor.extend_from_slice(&dep_head[..n]);
+    for (i, t) in tasks.iter().enumerate() {
+        for &d in &t.deps {
+            dep_list[dep_cursor[d]] = i;
+            dep_cursor[d] += 1;
+        }
+    }
+    state.clear();
+    state.resize(n, State::Pending);
+    remaining.clear();
+    remaining.resize(n, 0.0);
+    lat_left.clear();
+    lat_left.resize(n, 0.0);
+    rate.clear();
+    rate.resize(n, 0.0);
+    start.clear();
+    start.resize(n, 0.0);
+    finish.clear();
+    finish.resize(n, 0.0);
+    link_bytes.clear();
+    link_bytes.resize(graph.links.len(), 0.0);
+    checkpoints.clear();
+    maxmin.begin_run(graph.links.len(), n);
 
-    let mut state = vec![State::Pending; n];
-    let mut remaining = vec![0.0f64; n];
-    let mut lat_left = vec![0.0f64; n];
-    let mut start = vec![0.0f64; n];
-    let mut finish = vec![0.0f64; n];
-    let mut link_bytes = vec![0.0f64; graph.links.len()];
     let mut done = 0usize;
     let mut now = 0.0f64;
-    let mut checkpoints: Vec<Checkpoint> = Vec::new();
     let mut next_ckpt = 0usize;
 
     let base = match resume {
@@ -242,17 +503,25 @@ pub(crate) fn run_tasks_resumable(
         next_ckpt += 1;
     }
 
-    let mut ready: Vec<usize> =
-        (base..n).filter(|&i| unmet[i] == 0).collect();
-    let mut completions: Vec<usize> = Vec::new();
-    // Reused across iterations (the maxmin internals still allocate
-    // per call — acceptable for an oracle path that is not the GA hot
-    // loop; see DESIGN.md §Performance architecture for the pattern).
-    let mut draining = vec![false; n];
+    ready.clear();
+    ready.extend((base..n).filter(|&i| unmet[i] == 0));
+    completions.clear();
+    act_transfers.clear();
+    act_computes.clear();
+    lat_transfers.clear();
+    promoted.clear();
+
+    let mut events = 0u64;
+    let mut rate_ns = 0u64;
+    let mut rebuild_ns = 0u64;
+    let mut recomputes = 0u64;
+    let mut comps_recomputed = 0u64;
 
     loop {
         // Activate ready tasks; degenerate ones complete instantly and
         // may cascade further activations at the same timestamp.
+        // Transfers entering the draining set dirty their routes.
+        let act_before = act_transfers.len();
         while let Some(i) = ready.pop() {
             start[i] = now;
             let instant = match &tasks[i].work {
@@ -265,7 +534,8 @@ pub(crate) fn run_tasks_resumable(
                 state[i] = State::Done;
                 finish[i] = now;
                 done += 1;
-                for &d in &dependents[i] {
+                for k in dep_head[i]..dep_head[i + 1] {
+                    let d = dep_list[k];
                     unmet[d] -= 1;
                     if unmet[d] == 0 {
                         ready.push(d);
@@ -276,16 +546,20 @@ pub(crate) fn run_tasks_resumable(
                     Work::Compute { dur_ns } => {
                         remaining[i] = *dur_ns;
                         state[i] = State::Active;
+                        act_computes.push(i);
                     }
                     Work::Transfer { route, bytes } => {
                         remaining[i] = *bytes;
-                        lat_left[i] = (route.len() - 1) as f64
-                            * hop_latency_ns;
-                        state[i] = if lat_left[i] > 0.0 {
-                            State::Latency
+                        lat_left[i] =
+                            (route.len() - 1) as f64 * hop_latency_ns;
+                        if lat_left[i] > 0.0 {
+                            state[i] = State::Latency;
+                            lat_transfers.push(i);
                         } else {
-                            State::Active
-                        };
+                            state[i] = State::Active;
+                            act_transfers.push(i);
+                            maxmin.mark_route_dirty(route);
+                        }
                     }
                 }
             }
@@ -293,93 +567,154 @@ pub(crate) fn run_tasks_resumable(
         if done == n {
             break;
         }
-        if !state
-            .iter()
-            .any(|s| matches!(s, State::Active | State::Latency))
+        if act_transfers.is_empty()
+            && act_computes.is_empty()
+            && lat_transfers.is_empty()
         {
-            return Err(err!(
-                "simulation stalled with {} tasks blocked on unmet \
-                 dependencies (cycle in the lowered task graph)",
-                n - done
-            ));
+            return Err(stall_error(meta, unmet, state, done));
         }
+        // Restore ascending order after new arrivals (the link-byte
+        // accumulation order contract).
+        if act_transfers.len() > act_before {
+            act_transfers.sort_unstable();
+        }
+        events += 1;
 
-        // Max-min fair rates over the transfers currently draining.
-        for i in 0..n {
-            draining[i] = state[i] == State::Active
-                && matches!(tasks[i].work, Work::Transfer { .. });
+        // Max-min fair rates over the transfers currently draining:
+        // only components touching a dirty link recompute; a
+        // transfer-free event skips the call outright.
+        let t_rate = if timed { Some(std::time::Instant::now()) } else { None };
+        let cs = maxmin.recompute(
+            graph,
+            act_transfers,
+            |i| task_route(&tasks[i]),
+            rate,
+            timed,
+        );
+        if let Some(t0) = t_rate {
+            rate_ns += t0.elapsed().as_nanos() as u64;
         }
-        let rate = maxmin_rates(graph, &routes, &draining);
+        rebuild_ns += cs.rebuild_ns;
+        if cs.recomputed > 0 {
+            recomputes += 1;
+            comps_recomputed += cs.recomputed;
+        }
+        #[cfg(debug_assertions)]
+        {
+            // The PR-8 correctness anchor: the incremental
+            // component-wise rates must be bit-identical to the global
+            // progressive-filling reference, every event.
+            let routes_dbg: Vec<&[LinkId]> =
+                tasks.iter().map(task_route).collect();
+            let mut draining_dbg = vec![false; n];
+            for &i in act_transfers.iter() {
+                draining_dbg[i] = true;
+            }
+            let global =
+                super::maxmin::maxmin_rates(graph, &routes_dbg, &draining_dbg);
+            for &i in act_transfers.iter() {
+                debug_assert!(
+                    rate[i].to_bits() == global[i].to_bits(),
+                    "component-wise max-min diverged from global for task \
+                     {i}: {} vs {}",
+                    rate[i],
+                    global[i]
+                );
+            }
+        }
 
         // Next event: a compute finishing, a fill latency elapsing, or
         // a transfer draining its last byte.
         let mut dt = f64::INFINITY;
-        for i in 0..n {
-            match state[i] {
-                State::Latency => dt = dt.min(lat_left[i]),
-                State::Active => match tasks[i].work {
-                    Work::Compute { .. } => dt = dt.min(remaining[i]),
-                    Work::Transfer { .. } => {
-                        if rate[i] > 0.0 {
-                            dt = dt.min(remaining[i] / rate[i]);
-                        }
-                    }
-                },
-                _ => {}
+        for &i in lat_transfers.iter() {
+            dt = dt.min(lat_left[i]);
+        }
+        for &i in act_computes.iter() {
+            dt = dt.min(remaining[i]);
+        }
+        for &i in act_transfers.iter() {
+            if rate[i] > 0.0 {
+                dt = dt.min(remaining[i] / rate[i]);
             }
         }
         if !dt.is_finite() {
-            return Err(err!(
-                "simulation deadlock: active transfer with zero rate \
-                 (zero-capacity link on a route?)"
-            ));
+            return Err(deadlock_error(meta, act_transfers, rate));
         }
         now += dt;
-        for i in 0..n {
-            match state[i] {
-                State::Latency => {
-                    lat_left[i] -= dt;
-                    if lat_left[i] <= 1e-12 {
-                        lat_left[i] = 0.0;
-                        state[i] = State::Active;
-                    }
-                }
-                State::Active => match &tasks[i].work {
-                    Work::Compute { dur_ns } => {
-                        remaining[i] -= dt;
-                        if remaining[i] <= 1e-9 * dur_ns.max(1.0) {
-                            completions.push(i);
-                        }
-                    }
-                    Work::Transfer { route, bytes } => {
-                        if rate[i] > 0.0 {
-                            let moved = rate[i] * dt;
-                            remaining[i] -= moved;
-                            for &l in route.iter() {
-                                link_bytes[l] += moved;
-                            }
-                            if remaining[i] <= 1e-9 * bytes.max(1.0) {
-                                completions.push(i);
-                            }
-                        }
-                    }
-                },
-                _ => {}
+
+        // Advance each class. Latency promotions collect aside and
+        // join the draining set after the byte accounting (they moved
+        // no bytes this event).
+        for &i in lat_transfers.iter() {
+            lat_left[i] -= dt;
+            if lat_left[i] <= 1e-12 {
+                lat_left[i] = 0.0;
+                state[i] = State::Active;
+                promoted.push(i);
             }
         }
-        for &i in &completions {
-            state[i] = State::Done;
-            remaining[i] = 0.0;
-            finish[i] = now;
-            done += 1;
-            for &d in &dependents[i] {
-                unmet[d] -= 1;
-                if unmet[d] == 0 {
-                    ready.push(d);
+        let mut comp_done = false;
+        for &i in act_computes.iter() {
+            if let Work::Compute { dur_ns } = &tasks[i].work {
+                remaining[i] -= dt;
+                if remaining[i] <= 1e-9 * dur_ns.max(1.0) {
+                    completions.push(i);
+                    comp_done = true;
                 }
             }
         }
-        completions.clear();
+        let mut xfer_done = false;
+        for &i in act_transfers.iter() {
+            if let Work::Transfer { route, bytes } = &tasks[i].work {
+                if rate[i] > 0.0 {
+                    let moved = rate[i] * dt;
+                    remaining[i] -= moved;
+                    for &l in route.iter() {
+                        link_bytes[l] += moved;
+                    }
+                    if remaining[i] <= 1e-9 * bytes.max(1.0) {
+                        completions.push(i);
+                        xfer_done = true;
+                    }
+                }
+            }
+        }
+        if !completions.is_empty() {
+            // Legacy processed completions in ascending task id.
+            completions.sort_unstable();
+            for &i in completions.iter() {
+                state[i] = State::Done;
+                remaining[i] = 0.0;
+                finish[i] = now;
+                done += 1;
+                for k in dep_head[i]..dep_head[i + 1] {
+                    let d = dep_list[k];
+                    unmet[d] -= 1;
+                    if unmet[d] == 0 {
+                        ready.push(d);
+                    }
+                }
+                if let Work::Transfer { route, .. } = &tasks[i].work {
+                    maxmin.mark_route_dirty(route);
+                }
+            }
+            completions.clear();
+            if comp_done {
+                act_computes.retain(|&i| state[i] != State::Done);
+            }
+            if xfer_done {
+                act_transfers.retain(|&i| state[i] != State::Done);
+            }
+        }
+        if !promoted.is_empty() {
+            lat_transfers.retain(|&i| state[i] == State::Latency);
+            for &i in promoted.iter() {
+                act_transfers.push(i);
+                maxmin.mark_route_dirty(task_route(&tasks[i]));
+            }
+            promoted.clear();
+            act_transfers.sort_unstable();
+        }
         // Snapshot right after completions: the newly readied tasks
         // have not been activated yet, so a boundary hit here is a
         // quiescent cut. Boundaries crossed mid-cascade are skipped.
@@ -401,7 +736,16 @@ pub(crate) fn run_tasks_resumable(
             next_ckpt += 1;
         }
     }
-    Ok((RunOutcome { start, finish, link_bytes, makespan_ns: now }, checkpoints))
+    *makespan_ns = now;
+    if let Some(p) = profile.as_deref_mut() {
+        p.events += events;
+        p.rate_recompute_ns += rate_ns;
+        p.components_ns += rebuild_ns;
+        p.rate_recomputes += recomputes;
+        p.components_recomputed += comps_recomputed;
+        p.tasks += n as u64;
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------
@@ -711,6 +1055,8 @@ impl LoweredPlan {
 }
 
 /// Lower every op of a plan (see the module docs for the lowering).
+/// `ls` supplies the reusable per-op apportioning buffers and the
+/// evaluator scratch the redistribution decisions run on.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn lower_plan(
     plat: &Platform,
@@ -721,16 +1067,18 @@ pub(crate) fn lower_plan(
     ctx: &LowerCtx,
     graph: &LinkGraph,
     routes: &mut RouteCache,
+    ls: &mut LowerScratch,
 ) -> Result<LoweredPlan> {
-    let mut bufs = TermBufs::default();
     let redist_edge: Vec<bool> = (0..wl.edges.len())
         .map(|e| {
-            edge_redist_decision(plat, wl, alloc, flags, ctx, e, &mut bufs)
+            edge_redist_decision(plat, wl, alloc, flags, ctx, e, &mut ls.bufs)
         })
         .collect();
     let mut lp = LoweredPlan::empty(wl, redist_edge);
     for i in 0..wl.ops.len() {
-        lower_op(plat, wl, alloc, flags, mode, ctx, graph, routes, i, &mut lp)?;
+        lower_op(
+            plat, wl, alloc, flags, mode, ctx, graph, routes, ls, i, &mut lp,
+        )?;
     }
     Ok(lp)
 }
@@ -749,9 +1097,11 @@ pub(crate) fn lower_op(
     ctx: &LowerCtx,
     graph: &LinkGraph,
     rc: &mut RouteCache,
+    ls: &mut LowerScratch,
     i: usize,
     lp: &mut LoweredPlan,
 ) -> Result<()> {
+    let LowerScratch { demand, att_demand, att_out, .. } = ls;
     let n_chiplets = plat.num_chiplets();
     let atts = &plat.spec().attachments;
     let att_node = |a: usize| -> NodeId { n_chiplets + a };
@@ -892,7 +1242,8 @@ pub(crate) fn lower_op(
         if load_acts {
             off_unique += plat.bytes(op.m * op.k);
         }
-        let mut demand = vec![0.0f64; n_chiplets];
+        demand.clear();
+        demand.resize(n_chiplets, 0.0);
         for (idx, p) in plat.positions().enumerate() {
             let Pos { row: x, col: y } = p;
             let mut d = plat.bytes(op.k * part.py[y]);
@@ -902,7 +1253,8 @@ pub(crate) fn lower_op(
             demand[idx] = d;
         }
         let total_demand: f64 = demand.iter().sum();
-        let mut att_demand = vec![0.0f64; atts.len()];
+        att_demand.clear();
+        att_demand.resize(atts.len(), 0.0);
         for idx in 0..n_chiplets {
             att_demand[ctx.serving[idx]] += demand[idx];
         }
@@ -970,7 +1322,8 @@ pub(crate) fn lower_op(
             comp_tasks.clone()
         } else {
             let out_total = plat.bytes(op.m * op.n);
-            let mut att_out = vec![0.0f64; atts.len()];
+            att_out.clear();
+            att_out.resize(atts.len(), 0.0);
             let mut collect_tasks: Vec<usize> =
                 Vec::with_capacity(n_chiplets);
             for (idx, p) in plat.positions().enumerate() {
@@ -1037,6 +1390,34 @@ pub fn simulate_plan(
     flags: OptFlags,
     cfg: &SimConfig,
 ) -> Result<SimReport> {
+    simulate_plan_inner(plat, wl, alloc, flags, cfg, None)
+}
+
+/// [`simulate_plan`] with a wall-clock/work profile of the run
+/// (`simulate --profile`): lowering vs event loop vs rate recompute vs
+/// component rebuild, plus event/recompute counters. The report is
+/// bit-identical to the unprofiled run.
+pub fn simulate_plan_profiled(
+    plat: &Platform,
+    wl: &Workload,
+    alloc: &Allocation,
+    flags: OptFlags,
+    cfg: &SimConfig,
+) -> Result<(SimReport, SimProfile)> {
+    let mut profile = SimProfile::default();
+    let report =
+        simulate_plan_inner(plat, wl, alloc, flags, cfg, Some(&mut profile))?;
+    Ok((report, profile))
+}
+
+fn simulate_plan_inner(
+    plat: &Platform,
+    wl: &Workload,
+    alloc: &Allocation,
+    flags: OptFlags,
+    cfg: &SimConfig,
+    mut profile: Option<&mut SimProfile>,
+) -> Result<SimReport> {
     if alloc.parts.len() != wl.ops.len()
         || alloc.collect_cols.len() != wl.edges.len()
     {
@@ -1052,10 +1433,167 @@ pub fn simulate_plan(
     let graph = plat.link_graph_shared(flags.diagonal);
     let ctx = LowerCtx::new(plat, wl);
     let mut rc = RouteCache::new();
-    let lp =
-        lower_plan(plat, wl, alloc, flags, cfg.mode, &ctx, &graph, &mut rc)?;
-    let run = run_tasks(&graph, &lp.tasks, cfg.hop_latency_ns)?;
+    let mut scratch = SimScratch::default();
+    let t_lower = std::time::Instant::now();
+    let lp = lower_plan(
+        plat,
+        wl,
+        alloc,
+        flags,
+        cfg.mode,
+        &ctx,
+        &graph,
+        &mut rc,
+        &mut scratch.lower,
+    )?;
+    let lower_ns = t_lower.elapsed().as_nanos() as u64;
+    let mut run = RunOutcome::default();
+    let mut checkpoints = Vec::new();
+    let t_loop = std::time::Instant::now();
+    run_tasks_into(
+        &graph,
+        &lp.tasks,
+        Some(&lp.meta),
+        cfg.hop_latency_ns,
+        &[],
+        None,
+        &mut scratch,
+        &mut run,
+        &mut checkpoints,
+        profile.as_deref_mut(),
+    )?;
+    if let Some(p) = profile.as_deref_mut() {
+        p.lower_ns += lower_ns;
+        p.event_loop_ns += t_loop.elapsed().as_nanos() as u64;
+    }
     Ok(assemble_report(plat, wl, alloc, &graph, &lp, &run))
+}
+
+/// Pre-lowered task graph plus warm engine state, for the DES benches
+/// (`benches/sim_conformance.rs`) and the scratch-reuse perf-pin test.
+/// Hidden from docs: not a stable API.
+#[doc(hidden)]
+pub struct SimBench {
+    graph: Arc<LinkGraph>,
+    tasks: Vec<Task>,
+    meta: Vec<TaskMeta>,
+    scratch: SimScratch,
+    out: RunOutcome,
+    checkpoints: Vec<Checkpoint>,
+}
+
+impl SimBench {
+    /// Lower `(platform, workload, allocation)` in Conformance mode,
+    /// optionally truncating to the first `prefix_ops` ops (the
+    /// layer-sequential lowering makes dependencies prefix-closed, so
+    /// a truncated graph is a valid run).
+    pub fn lower(
+        plat: &Platform,
+        wl: &Workload,
+        alloc: &Allocation,
+        flags: OptFlags,
+        prefix_ops: Option<usize>,
+    ) -> Result<SimBench> {
+        let graph = plat.link_graph_shared(flags.diagonal);
+        let ctx = LowerCtx::new(plat, wl);
+        let mut rc = RouteCache::new();
+        let mut scratch = SimScratch::default();
+        let mut lp = lower_plan(
+            plat,
+            wl,
+            alloc,
+            flags,
+            SimMode::Conformance,
+            &ctx,
+            &graph,
+            &mut rc,
+            &mut scratch.lower,
+        )?;
+        if let Some(k) = prefix_ops {
+            if k < wl.ops.len() {
+                lp.truncate_to_op(k);
+            }
+        }
+        Ok(SimBench {
+            graph,
+            tasks: lp.tasks,
+            meta: lp.meta,
+            scratch,
+            out: RunOutcome::default(),
+            checkpoints: Vec::new(),
+        })
+    }
+
+    pub fn task_count(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// One full run on the active-set engine, reusing the warm
+    /// scratch. Returns the makespan.
+    pub fn run_new(&mut self) -> Result<f64> {
+        run_tasks_into(
+            &self.graph,
+            &self.tasks,
+            Some(&self.meta),
+            0.0,
+            &[],
+            None,
+            &mut self.scratch,
+            &mut self.out,
+            &mut self.checkpoints,
+            None,
+        )?;
+        Ok(self.out.makespan_ns)
+    }
+
+    /// One run on the frozen pre-PR-8 loop ([`super::legacy`]).
+    pub fn run_legacy(&self) -> Result<f64> {
+        super::legacy::run_tasks_legacy(&self.graph, &self.tasks, 0.0, &[], None)
+            .map(|(o, _)| o.makespan_ns)
+    }
+
+    /// Run both engines and require bit-identical outcomes
+    /// (start/finish per task, bytes per link, makespan).
+    pub fn assert_parity(&mut self) -> Result<()> {
+        self.run_new()?;
+        let (old, _) = super::legacy::run_tasks_legacy(
+            &self.graph,
+            &self.tasks,
+            0.0,
+            &[],
+            None,
+        )?;
+        ensure!(
+            self.out.makespan_ns.to_bits() == old.makespan_ns.to_bits(),
+            "engine parity: makespan {} vs legacy {}",
+            self.out.makespan_ns,
+            old.makespan_ns
+        );
+        for i in 0..self.tasks.len() {
+            ensure!(
+                self.out.start[i].to_bits() == old.start[i].to_bits()
+                    && self.out.finish[i].to_bits() == old.finish[i].to_bits(),
+                "engine parity: task {i} window ({}, {}) vs legacy ({}, {})",
+                self.out.start[i],
+                self.out.finish[i],
+                old.start[i],
+                old.finish[i]
+            );
+        }
+        for (l, b) in old.link_bytes.iter().enumerate() {
+            ensure!(
+                self.out.link_bytes[l].to_bits() == b.to_bits(),
+                "engine parity: link {l} bytes {} vs legacy {b}",
+                self.out.link_bytes[l]
+            );
+        }
+        Ok(())
+    }
+
+    /// Capacity fingerprint of every reusable buffer (perf-pin test).
+    pub fn scratch_capacities(&self) -> Vec<usize> {
+        self.scratch.capacities()
+    }
 }
 
 /// Fold a raw event-loop outcome into the public [`SimReport`] (stage
@@ -1377,5 +1915,213 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("arity"), "{err}");
+    }
+
+    /// Lower a plan, run it on both engines (with checkpoints) and
+    /// require bit-identical outcomes end to end.
+    fn parity_case(
+        plat: &Platform,
+        wl: &Workload,
+        alloc: &crate::partition::Allocation,
+        flags: OptFlags,
+        hop: f64,
+    ) {
+        let graph = plat.link_graph_shared(flags.diagonal);
+        let ctx = LowerCtx::new(plat, wl);
+        let mut rc = RouteCache::new();
+        let mut scratch = SimScratch::default();
+        let lp = lower_plan(
+            plat,
+            wl,
+            alloc,
+            flags,
+            SimMode::Conformance,
+            &ctx,
+            &graph,
+            &mut rc,
+            &mut scratch.lower,
+        )
+        .expect("plan lowers");
+        let bounds: Vec<usize> =
+            lp.op_task_start[1..lp.op_task_start.len() - 1].to_vec();
+        let mut out = RunOutcome::default();
+        let mut cks = Vec::new();
+        run_tasks_into(
+            &graph,
+            &lp.tasks,
+            Some(&lp.meta),
+            hop,
+            &bounds,
+            None,
+            &mut scratch,
+            &mut out,
+            &mut cks,
+            None,
+        )
+        .expect("new engine runs");
+        let (old, old_cks) = crate::netsim::legacy::run_tasks_legacy(
+            &graph, &lp.tasks, hop, &bounds, None,
+        )
+        .expect("legacy engine runs");
+        assert_eq!(
+            out.makespan_ns.to_bits(),
+            old.makespan_ns.to_bits(),
+            "{}: makespan {} vs legacy {}",
+            wl.name,
+            out.makespan_ns,
+            old.makespan_ns
+        );
+        for i in 0..lp.tasks.len() {
+            assert_eq!(out.start[i].to_bits(), old.start[i].to_bits());
+            assert_eq!(out.finish[i].to_bits(), old.finish[i].to_bits());
+        }
+        for l in 0..old.link_bytes.len() {
+            assert_eq!(
+                out.link_bytes[l].to_bits(),
+                old.link_bytes[l].to_bits(),
+                "link {l}"
+            );
+        }
+        assert_eq!(cks.len(), old_cks.len(), "checkpoint schedules differ");
+        for (a, b) in cks.iter().zip(&old_cks) {
+            assert_eq!(a.boundary, b.boundary);
+            assert_eq!(a.now.to_bits(), b.now.to_bits());
+            for (x, y) in a.link_bytes.iter().zip(&b.link_bytes) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn active_set_engine_matches_legacy_bit_for_bit() {
+        // The PR-8 acceptance anchor, on lowered plans that exercise
+        // every task class: contended loads, redistribution steps
+        // (incl. nonzero step 3 under a skewed consumer), async
+        // fusion, writebacks, and nonzero fill latency.
+        let headline = Platform::headline();
+        let wl = alexnet(1);
+        let alloc = uniform_allocation(&headline, &wl);
+        parity_case(&headline, &wl, &alloc, OptFlags::ALL, 0.0);
+        parity_case(&headline, &wl, &alloc, OptFlags::NONE, 50.0);
+
+        let plat_c = Platform::preset(SystemType::C, MemKind::Hbm, 4);
+        let wl1 =
+            Workload::new("w", vec![GemmOp::dense("a", 512, 256, 512)]);
+        let alloc1 = uniform_allocation(&plat_c, &wl1);
+        parity_case(&plat_c, &wl1, &alloc1, OptFlags::NONE, 0.0);
+
+        let plat_a = Platform::preset(SystemType::A, MemKind::Hbm, 4);
+        let wl2 = Workload::new(
+            "w2",
+            vec![
+                GemmOp::dense("a", 512, 128, 512),
+                GemmOp::dense("b", 512, 512, 256).chained(),
+            ],
+        );
+        let mut alloc2 = uniform_allocation(&plat_a, &wl2);
+        alloc2.parts[1] = crate::partition::Partition {
+            px: vec![200, 120, 120, 72],
+            py: vec![64; 4],
+        };
+        let flags = OptFlags {
+            redistribution: true,
+            diagonal: false,
+            async_fusion: false,
+        };
+        parity_case(&plat_a, &wl2, &alloc2, flags, 0.0);
+    }
+
+    #[test]
+    fn stall_error_names_blocked_tasks() {
+        let graph = LinkGraph::mesh(1, 2, false, 60.0);
+        let tasks = [
+            Task { work: Work::Compute { dur_ns: 5.0 }, deps: vec![1] },
+            Task { work: Work::Compute { dur_ns: 5.0 }, deps: vec![0] },
+        ];
+        let err = run_tasks(&graph, &tasks, 0.0).unwrap_err().to_string();
+        assert!(err.contains("cycle in the lowered task graph"), "{err}");
+        assert!(err.contains("task 0") && err.contains("task 1"), "{err}");
+        assert!(err.contains("waiting on 1 deps"), "{err}");
+    }
+
+    #[test]
+    fn stall_error_includes_op_phase_and_edge_with_meta() {
+        let graph = LinkGraph::mesh(1, 2, false, 60.0);
+        let tasks = [
+            Task { work: Work::Compute { dur_ns: 1.0 }, deps: vec![1] },
+            Task { work: Work::Compute { dur_ns: 1.0 }, deps: vec![0] },
+        ];
+        let meta = [
+            TaskMeta { op: 3, phase: SimPhase::Redistribute, edge: Some(7) },
+            TaskMeta { op: 4, phase: SimPhase::Compute, edge: None },
+        ];
+        let mut scratch = SimScratch::default();
+        let mut out = RunOutcome::default();
+        let mut cks = Vec::new();
+        let err = run_tasks_into(
+            &graph,
+            &tasks,
+            Some(&meta),
+            0.0,
+            &[],
+            None,
+            &mut scratch,
+            &mut out,
+            &mut cks,
+            None,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(
+            err.contains("op 3")
+                && err.contains("Redistribute")
+                && err.contains("edge 7"),
+            "{err}"
+        );
+        assert!(err.contains("op 4") && err.contains("Compute"), "{err}");
+    }
+
+    #[test]
+    fn profiled_simulation_is_bit_identical_and_counts_work() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let alloc = uniform_allocation(&plat, &wl);
+        let cfg = SimConfig::default();
+        let base =
+            simulate_plan(&plat, &wl, &alloc, OptFlags::ALL, &cfg).unwrap();
+        let (report, p) =
+            simulate_plan_profiled(&plat, &wl, &alloc, OptFlags::ALL, &cfg)
+                .unwrap();
+        assert_eq!(base.makespan_ns.to_bits(), report.makespan_ns.to_bits());
+        assert!(p.events > 0 && p.tasks > 0);
+        assert!(p.rate_recomputes > 0 && p.components_recomputed > 0);
+        assert!(p.event_loop_ns >= p.rate_recompute_ns);
+        assert!(p.rate_recompute_ns >= p.components_ns);
+        // Each counted recompute touched at least one component, and
+        // no event recomputes more than once.
+        assert!(p.components_recomputed >= p.rate_recomputes);
+        assert!(p.rate_recomputes <= p.events);
+    }
+
+    #[test]
+    fn sim_scratch_capacities_stabilize_across_runs() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let alloc = uniform_allocation(&plat, &wl);
+        let mut bench =
+            SimBench::lower(&plat, &wl, &alloc, OptFlags::ALL, None)
+                .expect("plan lowers");
+        let first = bench.run_new().unwrap();
+        let caps = bench.scratch_capacities();
+        for _ in 0..3 {
+            let again = bench.run_new().unwrap();
+            assert_eq!(first.to_bits(), again.to_bits());
+        }
+        assert_eq!(
+            caps,
+            bench.scratch_capacities(),
+            "warm scratch must not regrow"
+        );
+        bench.assert_parity().expect("engines agree");
     }
 }

@@ -9,7 +9,10 @@
 //! `sim::run_tasks`), so the queueing model sits on top of the same
 //! oracle the conformance suite validates; this module provides the
 //! queueing half: a deterministic pool of parallel service modules (N
-//! simulated MCMs behind one router) tracked in virtual time.
+//! simulated MCMs behind one router) tracked in virtual time. The DES
+//! active-set rework (DESIGN.md §DES performance architecture) is
+//! bit-identical to the original loop, so service times — and thus
+//! every virtual-time trace — are unchanged by it.
 //!
 //! Determinism rules: module selection is lowest-index-first, time
 //! comparisons are exact `f64` comparisons (all quantities derive from

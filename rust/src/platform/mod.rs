@@ -555,7 +555,10 @@ impl Platform {
     /// hot paths (the DES, `netsim::IncrementalSim`) use this so a
     /// 20×20 mesh is not rebuilt per candidate; the spec is immutable,
     /// so the cached graph can never go stale (DESIGN.md §Optimizer
-    /// scale-out).
+    /// scale-out). Immutability also lets the DES scratch state
+    /// (`SimScratch`/`MaxMinScratch`) size its per-link buffers once
+    /// per run and reuse them allocation-free across runs on the same
+    /// graph (DESIGN.md §DES performance architecture).
     pub fn link_graph_shared(&self, diagonal: bool) -> Arc<LinkGraph> {
         let slot =
             if diagonal { &self.graph_diag } else { &self.graph_plain };

@@ -29,6 +29,37 @@ fn golden_path() -> PathBuf {
         .join("tests/golden/alexnet_typeA_sim.golden")
 }
 
+fn gpt2_golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/gpt2_small_typeA_sim.golden")
+}
+
+/// Shared blessing protocol (see the module docs): compare against the
+/// committed snapshot, or bless it on first run / `MCMCOMM_BLESS=1`.
+fn check_golden(summary: &str, path: &PathBuf) {
+    let bless = std::env::var("MCMCOMM_BLESS").is_ok_and(|v| v == "1");
+    match std::fs::read_to_string(path) {
+        Ok(golden) if !bless => {
+            assert_eq!(
+                summary, golden,
+                "simulated summary drifted from the golden snapshot at \
+                 {} — if the simulator model changed intentionally, \
+                 re-bless with MCMCOMM_BLESS=1 and say so in CHANGES.md",
+                path.display()
+            );
+        }
+        _ => {
+            std::fs::create_dir_all(path.parent().unwrap())
+                .expect("create tests/golden");
+            std::fs::write(path, summary).expect("write golden");
+            eprintln!(
+                "blessed golden snapshot at {} — commit it:\n{summary}",
+                path.display()
+            );
+        }
+    }
+}
+
 #[test]
 fn headline_sim_summary_matches_golden() {
     let plat = Platform::headline(); // type-A HBM 4x4
@@ -71,27 +102,33 @@ fn headline_sim_summary_matches_golden() {
     );
 
     // ---- byte-exact snapshot.
-    let summary = report.summary();
-    let path = golden_path();
-    let bless = std::env::var("MCMCOMM_BLESS").is_ok_and(|v| v == "1");
-    match std::fs::read_to_string(&path) {
-        Ok(golden) if !bless => {
-            assert_eq!(
-                summary, golden,
-                "simulated summary drifted from the golden snapshot at \
-                 {} — if the simulator model changed intentionally, \
-                 re-bless with MCMCOMM_BLESS=1 and say so in CHANGES.md",
-                path.display()
-            );
-        }
-        _ => {
-            std::fs::create_dir_all(path.parent().unwrap())
-                .expect("create tests/golden");
-            std::fs::write(&path, &summary).expect("write golden");
-            eprintln!(
-                "blessed golden snapshot at {} — commit it:\n{summary}",
-                path.display()
-            );
-        }
-    }
+    check_golden(&report.summary(), &golden_path());
+}
+
+/// Transformer-scale pin for the PR-8 active-set engine: a *full*
+/// gpt2_small DES run must keep reproducing the frozen snapshot —
+/// re-architecting the event loop is only legal bit-identically, so
+/// this golden must never need re-blessing for an engine change.
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "release-only: full gpt2_small DES run (the debug build also \
+              cross-checks every event against the global max-min oracle)"
+)]
+fn gpt2_small_sim_summary_matches_golden() {
+    use mcmcomm::workload::models::gpt2_small;
+    let plat = Platform::headline();
+    let wl = gpt2_small(1);
+    let alloc = uniform_allocation(&plat, &wl);
+    let report = simulate_plan(
+        &plat,
+        &wl,
+        &alloc,
+        OptFlags::ALL,
+        &SimConfig::default(),
+    )
+    .expect("gpt2_small simulates");
+    assert!(report.makespan_ns.is_finite() && report.makespan_ns > 0.0);
+    assert!(report.energy.total_pj() > 0.0);
+    check_golden(&report.summary(), &gpt2_golden_path());
 }

@@ -732,6 +732,161 @@ fn prop_makespan_monotone_when_bytes_grow() {
 }
 
 #[test]
+fn prop_componentwise_maxmin_bit_identical_to_global() {
+    // PR-8 tentpole invariant: component-wise progressive filling is
+    // bit-identical to the global reference on randomized flow sets —
+    // including inactive flows, empty routes, saturated bottleneck
+    // links, and under random permutations of flow indices (each
+    // permuted instance is a fresh problem; global and component-wise
+    // must agree on every one).
+    use mcmcomm::netsim::{maxmin_rates, MaxMinScratch};
+    use mcmcomm::topology::links::LinkId;
+    forall(
+        80,
+        0xAE,
+        |rng| {
+            let x = rng.range_usize(1, 5);
+            let y = rng.range_usize(2, 5);
+            let nf = rng.range_usize(1, 12);
+            (x, y, nf, rng.next_u64())
+        },
+        |&(x, y, nf, seed)| {
+            let mut rng = Pcg::seeded(seed);
+            let mut g = LinkGraph::mesh(x, y, rng.chance(0.3), 60.0);
+            // Sometimes a saturating memory attachment: a low-capacity
+            // entry link every flow from `mem` bottlenecks on.
+            let mem = if rng.chance(0.5) {
+                Some(g.attach_memory(
+                    Pos::new(
+                        rng.range_usize(0, x - 1),
+                        rng.range_usize(0, y - 1),
+                    ),
+                    20.0 + rng.f64() * 100.0,
+                ))
+            } else {
+                None
+            };
+            let n_nodes = x * y;
+            let mut routes_owned: Vec<Vec<LinkId>> = Vec::new();
+            let mut active: Vec<bool> = Vec::new();
+            for _ in 0..nf {
+                let src = match mem {
+                    Some(m) if rng.chance(0.5) => m,
+                    _ => rng.range_usize(0, n_nodes - 1),
+                };
+                // src == dst yields an empty route (must get rate 0).
+                let dst = rng.range_usize(0, n_nodes - 1);
+                routes_owned
+                    .push(g.route(src, dst).map_err(|e| format!("{e:#}"))?);
+                active.push(rng.chance(0.85));
+            }
+            let mut scratch = MaxMinScratch::new();
+            // A random permutation exercises flow-index-dependent
+            // iteration order; identity first.
+            let mut perm: Vec<usize> = (0..nf).collect();
+            for trial in 0..3 {
+                if trial > 0 {
+                    for i in (1..nf).rev() {
+                        let j = rng.range_usize(0, i);
+                        perm.swap(i, j);
+                    }
+                }
+                let routes: Vec<&[LinkId]> =
+                    perm.iter().map(|&i| routes_owned[i].as_slice()).collect();
+                let act: Vec<bool> =
+                    perm.iter().map(|&i| active[i]).collect();
+                let global = maxmin_rates(&g, &routes, &act);
+                let comp = scratch.rates(&g, &routes, &act);
+                for i in 0..nf {
+                    prop_assert!(
+                        global[i].to_bits() == comp[i].to_bits(),
+                        "trial {trial} flow {i}: global {} != \
+                         component-wise {}",
+                        global[i],
+                        comp[i]
+                    );
+                    if !act[i] || routes[i].is_empty() {
+                        prop_assert!(
+                            comp[i] == 0.0,
+                            "inactive/empty flow {i} got rate {}",
+                            comp[i]
+                        );
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_active_set_engine_bit_identical_to_legacy() {
+    // PR-8 tentpole invariant, end to end: the active-set DES engine
+    // reproduces the frozen pre-PR-8 full-scan loop bit for bit on
+    // random flow sets (finish times, per-link bytes, makespan).
+    use mcmcomm::netsim::{simulate, simulate_legacy, Flow};
+    forall(
+        60,
+        0xAF,
+        |rng| {
+            let n = rng.range_usize(2, 5);
+            let nf = rng.range_usize(1, 10);
+            (n, nf, rng.next_u64())
+        },
+        |&(n, nf, seed)| {
+            let mut rng = Pcg::seeded(seed);
+            let mut g = LinkGraph::mesh(n, n, rng.chance(0.3), 60.0);
+            let mem = g.attach_memory(
+                Pos::new(
+                    rng.range_usize(0, n - 1),
+                    rng.range_usize(0, n - 1),
+                ),
+                50.0 + rng.f64() * 300.0,
+            );
+            let flows: Vec<Flow> = (0..nf)
+                .map(|_| Flow {
+                    src: if rng.chance(0.6) {
+                        mem
+                    } else {
+                        rng.range_usize(0, n * n - 1)
+                    },
+                    dst: rng.range_usize(0, n * n - 1),
+                    bytes: rng.range_usize(0, 300_000) as f64,
+                })
+                .collect();
+            let new = simulate(&g, &flows).map_err(|e| format!("{e:#}"))?;
+            let old =
+                simulate_legacy(&g, &flows).map_err(|e| format!("{e:#}"))?;
+            prop_assert!(
+                new.makespan_ns.to_bits() == old.makespan_ns.to_bits(),
+                "makespan {} != legacy {}",
+                new.makespan_ns,
+                old.makespan_ns
+            );
+            for i in 0..nf {
+                prop_assert!(
+                    new.flow_finish_ns[i].to_bits()
+                        == old.flow_finish_ns[i].to_bits(),
+                    "flow {i} finish {} != legacy {}",
+                    new.flow_finish_ns[i],
+                    old.flow_finish_ns[i]
+                );
+            }
+            for l in 0..old.link_bytes.len() {
+                prop_assert!(
+                    new.link_bytes[l].to_bits()
+                        == old.link_bytes[l].to_bits(),
+                    "link {l} bytes {} != legacy {}",
+                    new.link_bytes[l],
+                    old.link_bytes[l]
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_evaluator_latency_monotone_in_bandwidth() {
     // More NoP bandwidth can never make the modeled latency worse.
     forall(

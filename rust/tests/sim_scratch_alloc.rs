@@ -1,0 +1,92 @@
+//! Perf pin: the DES steady state is allocation-free (ISSUE 8).
+//!
+//! A counting global allocator wraps the system allocator; after two
+//! warm-up runs every further `SimBench::run_new` on the same task
+//! graph must perform zero heap allocations in release builds (debug
+//! builds run the per-event bit-identity assert against the global
+//! max-min oracle, which allocates by design — there the pin falls
+//! back to the capacity-fingerprint check, which must hold in both
+//! modes).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use mcmcomm::cost::evaluator::OptFlags;
+use mcmcomm::netsim::SimBench;
+use mcmcomm::partition::uniform_allocation;
+use mcmcomm::platform::Platform;
+use mcmcomm::workload::models::alexnet;
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        // `try_with`: thread-local storage itself may allocate during
+        // thread teardown; never recurse through the counter there.
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+#[test]
+fn warm_sim_scratch_performs_zero_allocations() {
+    let plat = Platform::headline();
+    let wl = alexnet(1);
+    let alloc = uniform_allocation(&plat, &wl);
+    let mut bench = SimBench::lower(&plat, &wl, &alloc, OptFlags::ALL, None)
+        .expect("plan lowers");
+
+    // Warm up: first run sizes every scratch buffer, second proves the
+    // sizing is stable.
+    let first = bench.run_new().expect("run 1");
+    let second = bench.run_new().expect("run 2");
+    assert_eq!(first.to_bits(), second.to_bits(), "runs must be identical");
+    let caps = bench.scratch_capacities();
+
+    let before = allocs();
+    for _ in 0..5 {
+        let again = bench.run_new().expect("warm run");
+        assert_eq!(first.to_bits(), again.to_bits());
+    }
+    let grew = allocs() - before;
+
+    // Debug builds cross-check every event against the allocating
+    // global max-min oracle, so only release builds see zero.
+    if cfg!(not(debug_assertions)) {
+        assert_eq!(
+            grew, 0,
+            "warm DES runs allocated {grew} time(s); SimScratch or \
+             MaxMinScratch is not being reused"
+        );
+    }
+    assert_eq!(
+        caps,
+        bench.scratch_capacities(),
+        "scratch buffer capacities changed across warm runs"
+    );
+}
