@@ -1,11 +1,34 @@
-//! Bench: regenerate Figure 11 (pipelining speedup vs batch) and time
-//! the RCPSP list scheduler.
+//! Bench: regenerate Figure 11 (pipelining speedup vs batch), time the
+//! RCPSP list scheduler, and cross-check the steady-state pipelined DES
+//! ([`mcmcomm::steady`]) against the legacy §5.4 RCPSP on a small
+//! instance.
+//!
+//! The §5.4 figure and timing lines are untouched — their numbers stay
+//! bit-identical to the pre-steady bench. The cross-check that follows
+//! asserts only inequalities each model *guarantees*:
+//!
+//! * the branch-and-bound optimum is a legal schedule, no worse than
+//!   the list heuristic, and no better than the per-resource capacity
+//!   throughput bound (total work on the busiest unit-capacity resource
+//!   divides the makespan);
+//! * the steady DES's throughput gain from `depth` batches in flight
+//!   never exceeds `depth` (Little's law: at most `depth` batches are
+//!   in flight and each spans at least its solo makespan), and deeper
+//!   buffering never slows the stream.
+//!
+//! The two models price communication differently (one aggregated Comm
+//! resource vs per-link fluid sharing), so the cross-model throughput
+//! ratio is reported rather than gated.
 use std::time::Duration;
+
 use mcmcomm::engine::Scenario;
 use mcmcomm::eval::figures;
-use mcmcomm::pipeline::{batch_tasks, list_schedule};
+use mcmcomm::pipeline::{
+    batch_tasks, exact_schedule, list_schedule, validate_schedule, Resource,
+};
+use mcmcomm::steady::{simulate_steady, StagePlan, SteadyConfig};
 use mcmcomm::util::bench::{bench, black_box};
-use mcmcomm::workload::models::alexnet;
+use mcmcomm::workload::models::{alexnet, scaled_down};
 
 fn main() {
     figures::fig11(&[2, 4, 8, 16]);
@@ -16,4 +39,82 @@ fn main() {
               Duration::from_secs(2),
               || { black_box(list_schedule(&tasks).makespan); });
     }
+    steady_cross_check();
+}
+
+/// Small-instance agreement check between the §5.4 RCPSP and the
+/// steady-state multi-batch DES (see the module docs for what is sound
+/// to assert).
+fn steady_cross_check() {
+    let batch = 3usize;
+    let scen = Scenario::headline(scaled_down(&alexnet(1), 16, 16));
+    let cost = scen.baseline_report().breakdown;
+
+    // ---- RCPSP side: B&B optimum on a bounded instance.
+    let tasks = batch_tasks(&cost, batch);
+    let list = list_schedule(&tasks);
+    let opt = exact_schedule(&tasks, 128);
+    validate_schedule(&tasks, &opt).expect("B&B schedule must be legal");
+    assert!(
+        opt.makespan <= list.makespan * (1.0 + 1e-9),
+        "B&B optimum ({:.3e}) worse than the list heuristic ({:.3e})",
+        opt.makespan,
+        list.makespan
+    );
+    let mut busy = [0.0f64; 2];
+    for t in &tasks {
+        let r = match t.resource {
+            Resource::Compute => 0,
+            Resource::Comm => 1,
+        };
+        busy[r] += t.dur;
+    }
+    let capacity_bound = busy[0].max(busy[1]);
+    assert!(
+        opt.makespan >= capacity_bound * (1.0 - 1e-9),
+        "B&B optimum ({:.3e}) beats the resource-capacity throughput \
+         bound ({capacity_bound:.3e}) — the relaxation is broken",
+        opt.makespan
+    );
+    let bb_per_s = batch as f64 / opt.makespan * 1e9;
+
+    // ---- steady DES side: same workload, single stage, depth 1 vs 3.
+    let plat = scen.platform();
+    let wl = scen.workload();
+    let cfg = SteadyConfig::default();
+    let p1 = simulate_steady(
+        plat,
+        wl,
+        &StagePlan::single_stage(plat, wl, 1),
+        scen.flags(),
+        &cfg,
+    )
+    .expect("depth-1 steady sim");
+    let p3 = simulate_steady(
+        plat,
+        wl,
+        &StagePlan::single_stage(plat, wl, batch),
+        scen.flags(),
+        &cfg,
+    )
+    .expect("depth-3 steady sim");
+    assert!(
+        p3.period_ns <= p1.period_ns * 1.02,
+        "deeper buffering slowed the stream ({:.3e} -> {:.3e})",
+        p1.period_ns,
+        p3.period_ns
+    );
+    assert!(
+        p3.period_ns >= p1.period_ns / batch as f64 * (1.0 - 1e-9),
+        "steady throughput gain {:.3} exceeds the depth bound {batch}",
+        p1.period_ns / p3.period_ns
+    );
+    println!(
+        "steady cross-check: rcpsp B&B {bb_per_s:.1} samples/s \
+         (batch {batch}) | steady depth-{batch} {:.1} samples/s \
+         (gain {:.3}x over depth 1, cross-model ratio {:.3})",
+        p3.throughput_per_s(),
+        p1.period_ns / p3.period_ns,
+        p3.throughput_per_s() / bb_per_s
+    );
 }

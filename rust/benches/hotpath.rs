@@ -184,12 +184,15 @@ fn median_ns(stats: &[BenchStats], name: &str) -> f64 {
 /// Blocking floors for the derived ratios (`--ratchet`). These are
 /// hard acceptance lines for the optimizer-scale-out work: the pre-PR
 /// full-eval GA loop vs the cached GA (ISSUE 2), the island GA
-/// (ISSUE 7) and the incremental DES re-simulation (ISSUE 7). Loosening
-/// any entry requires a CHANGES.md entry explaining why.
+/// (ISSUE 7), the incremental DES re-simulation (ISSUE 7), and the
+/// steady pipelined throughput optimizer vs the best single-batch
+/// plan's 1/makespan on gpt2_small x headline (ISSUE 9). Loosening any
+/// entry requires a CHANGES.md entry explaining why.
 const RATCHET_FLOORS: &[(&str, f64)] = &[
     ("ga_evolve_speedup_vs_prepr_seq", 2.0),
     ("island_ga_speedup", 3.0),
     ("incremental_des_speedup", 5.0),
+    ("steady_throughput_gain", 1.2),
 ];
 
 /// Ceiling for `island_ga_objective_ratio` (island best / pre-PR-loop
@@ -469,6 +472,41 @@ fn main() {
         black_box(inc.simulate(a).expect("incremental re-sim"));
     }));
 
+    // ---- Steady-state pipelined throughput (ISSUE 9 acceptance: on
+    // gpt2_small x the headline 4x4, the throughput optimizer must find
+    // a pipelined plan whose steady throughput beats the best
+    // single-batch plan's 1/makespan by >= 1.2x). The single-batch
+    // reference is the greedy plan's conformance-DES makespan — the
+    // strongest default single-batch baseline the engine ships — and
+    // the steady side is one seeded `steady::optimize` run, so the
+    // ratio is deterministic up to DES arithmetic.
+    let steady_engine = Engine::new(Scenario::headline(gpt2_small(1)));
+    let greedy_planned = steady_engine
+        .schedule_with(&schedulers::Greedy)
+        .expect("greedy plan for the single-batch baseline");
+    let single_batch_ns = steady_engine
+        .scenario()
+        .simulate_with(greedy_planned.plan(), &simcfg)
+        .expect("greedy single-batch DES")
+        .makespan_ns;
+    let steady_params = mcmcomm::steady::SteadyParams {
+        iters: 16,
+        max_depth: 4,
+        seed: 42,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let steady_out = mcmcomm::steady::optimize(
+        steady_engine.scenario().platform(),
+        steady_engine.scenario().workload(),
+        steady_engine.scenario().flags(),
+        Objective::Throughput,
+        &steady_params,
+    )
+    .expect("steady throughput optimize");
+    let steady_opt_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let steady_gain = single_batch_ns / steady_out.report.period_ns;
+
     // ---- Derived headline ratios.
     let ga_prepr = median_ns(&stats, "ga/evolve_pop48_gen6_prepr_seq");
     let ga_seq = median_ns(&stats, "ga/evolve_pop48_gen6_cached_seq");
@@ -500,6 +538,13 @@ fn main() {
          {inc_speedup:.2}x vs full re-sim"
     );
     println!("sweep parallel speedup: {sweep_speedup:.2}x");
+    println!(
+        "steady pipelined throughput (gpt2_small, {}): {steady_gain:.2}x \
+         vs greedy single-batch 1/makespan ({:.1} samples/s, optimize \
+         took {steady_opt_ms:.0} ms)",
+        steady_out.plan.describe(),
+        steady_out.report.throughput_per_s()
+    );
 
     if let Some(path) = json_path {
         let mut benches = BTreeMap::new();
@@ -526,7 +571,10 @@ fn main() {
                      sequential full-eval GA loop vs cached+parallel); \
                      ISSUE-7 adds island_ga_speedup, \
                      island_ga_objective_ratio and \
-                     incremental_des_speedup. --ratchet enforces the \
+                     incremental_des_speedup; ISSUE-9 adds \
+                     steady_throughput_gain (pipelined steady throughput \
+                     vs greedy single-batch 1/makespan on gpt2_small). \
+                     --ratchet enforces the \
                      RATCHET_FLOORS table on the freshly measured \
                      derived ratios (blocking in CI)."
                         .to_string(),
@@ -548,6 +596,11 @@ fn main() {
                     ("island_ga_migration_interval",
                      Json::Num(island_interval as f64)),
                     ("incremental_des_speedup", Json::Num(inc_speedup)),
+                    ("steady_throughput_gain", Json::Num(steady_gain)),
+                    ("steady_period_ns",
+                     Json::Num(steady_out.report.period_ns)),
+                    ("steady_single_batch_makespan_ns",
+                     Json::Num(single_batch_ns)),
                 ]),
             ),
         ]);
@@ -561,6 +614,7 @@ fn main() {
             ("ga_evolve_speedup_vs_prepr_seq", ga_speedup_seq),
             ("island_ga_speedup", island_speedup),
             ("incremental_des_speedup", inc_speedup),
+            ("steady_throughput_gain", steady_gain),
         ];
         let mut violations: Vec<String> = Vec::new();
         for &(name, floor) in RATCHET_FLOORS {

@@ -5,10 +5,16 @@
 //!
 //! `--json [path]` additionally writes every stat plus the derived
 //! ratios to a machine-readable file (default `BENCH_serving.json`);
-//! CI runs this as a non-blocking step and, on pushes to main, commits
-//! the measured baseline back so the repo carries real numbers.
-//! Unknown arguments are ignored (`cargo bench` may inject harness
-//! flags).
+//! CI commits the measured baseline back on pushes to main so the repo
+//! carries real numbers. `--ratchet` turns the derived ratios into a
+//! blocking gate: the freshly measured values must clear the
+//! `RATCHET_FLOORS` table or the process exits non-zero (CI runs the
+//! benches job with both flags). As in the hotpath bench, the floors
+//! are absolute on-this-machine ratios — ratios of two timings from the
+//! same process are robust to shared-runner noise, unlike raw
+//! wall-clock numbers — and loosening any floor requires a CHANGES.md
+//! entry explaining why. Unknown arguments are ignored (`cargo bench`
+//! may inject harness flags).
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -23,6 +29,18 @@ use mcmcomm::util::json::{obj, Json};
 use mcmcomm::workload::models::{alexnet, scaled_down, vit};
 use mcmcomm::workload::Workload;
 
+/// Blocking floors for the derived serving ratios (`--ratchet`).
+/// `cache_hit_speedup`: a warm plan-cache lookup (read-lock + Arc
+/// clone) must save at least 10x over re-running greedy optimization —
+/// the entire point of the cache. `virtual_time_compression`: the
+/// virtual-time harness must burn no more than 2 host seconds per
+/// simulated second — below 0.5 the "load test for free" premise is
+/// gone. Loosening either requires a CHANGES.md entry explaining why.
+const RATCHET_FLOORS: &[(&str, f64)] = &[
+    ("cache_hit_speedup", 10.0),
+    ("virtual_time_compression", 0.5),
+];
+
 fn median_ns(stats: &[BenchStats], name: &str) -> f64 {
     stats
         .iter()
@@ -32,9 +50,11 @@ fn median_ns(stats: &[BenchStats], name: &str) -> f64 {
 }
 
 fn main() {
-    // Lenient arg parse: only `--json [path]` is recognized.
+    // Lenient arg parse: only `--json [path]` and `--ratchet` are
+    // recognized.
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut json_path: Option<String> = None;
+    let mut ratchet = false;
     let mut i = 0;
     while i < argv.len() {
         if argv[i] == "--json" {
@@ -44,6 +64,8 @@ fn main() {
             } else {
                 json_path = Some("BENCH_serving.json".to_string());
             }
+        } else if argv[i] == "--ratchet" {
+            ratchet = true;
         }
         i += 1;
     }
@@ -141,6 +163,39 @@ fn main() {
          ({time_compression:.1}x faster than real time)"
     );
 
+    if ratchet {
+        let measured: &[(&str, f64)] = &[
+            ("cache_hit_speedup", cache_speedup),
+            ("virtual_time_compression", time_compression),
+        ];
+        let mut violations: Vec<String> = Vec::new();
+        for &(name, floor) in RATCHET_FLOORS {
+            let v = measured
+                .iter()
+                .find(|(n, _)| *n == name)
+                .map(|&(_, v)| v)
+                .unwrap_or(f64::NAN);
+            // NaN measurements (missing bench line) fail the gate too.
+            if v.is_nan() || v < floor {
+                violations.push(format!(
+                    "  {name}: measured {v:.3}, floor {floor:.3}"
+                ));
+            }
+        }
+        if violations.is_empty() {
+            println!(
+                "ratchet OK: {} serving floor(s) hold",
+                RATCHET_FLOORS.len()
+            );
+        } else {
+            eprintln!("ratchet FAILED:");
+            for v in &violations {
+                eprintln!("{v}");
+            }
+            std::process::exit(1);
+        }
+    }
+
     if let Some(path) = json_path {
         let mut benches = BTreeMap::new();
         for s in &stats {
@@ -164,7 +219,9 @@ fn main() {
                      derived.cache_hit_speedup is what the plan cache \
                      saves per repeated-tenant request; \
                      derived.virtual_req_per_host_sec is the load \
-                     harness's sustained rate."
+                     harness's sustained rate. --ratchet enforces the \
+                     RATCHET_FLOORS table on the freshly measured \
+                     derived ratios (blocking in CI)."
                         .to_string(),
                 ),
             ),

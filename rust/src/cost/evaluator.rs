@@ -43,10 +43,26 @@ impl OptFlags {
 }
 
 /// Optimization objective (eq. 6 "various metrics").
+///
+/// The first two are the paper's single-batch objectives. The last two
+/// belong to the steady-state pipelined engine ([`crate::steady`]):
+/// their *true* scores come from the multi-batch DES (period /
+/// period × energy-per-sample), but the analytical evaluator still
+/// needs a value for them — it answers with the single-batch proxy
+/// (latency / EDP), which is a monotone stand-in whenever the steady
+/// optimizer falls back to analytical scoring (MIQP surrogate, plan
+/// provenance).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Objective {
     Latency,
     Edp,
+    /// Steady-state throughput: minimize the pipeline period (ns per
+    /// sample). Analytical proxy: single-batch latency.
+    Throughput,
+    /// Steady-state energy-delay per sample: minimize
+    /// `period × energy-per-sample`. Analytical proxy: single-batch
+    /// EDP.
+    EdpPerSample,
 }
 
 /// Per-op cost decomposition (diagnostics + pipeline task durations +
@@ -86,8 +102,8 @@ impl CostBreakdown {
 
     pub fn objective(&self, obj: Objective) -> f64 {
         match obj {
-            Objective::Latency => self.latency_ns,
-            Objective::Edp => self.edp(),
+            Objective::Latency | Objective::Throughput => self.latency_ns,
+            Objective::Edp | Objective::EdpPerSample => self.edp(),
         }
     }
 

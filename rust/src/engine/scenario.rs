@@ -45,6 +45,18 @@ impl Scenario {
             .expect("headline scenario is always valid")
     }
 
+    /// The steady-state serving point: the headline platform with all
+    /// §5 co-optimizations, but optimizing sustained samples/s through
+    /// the pipelined engine ([`crate::steady`]) instead of single-batch
+    /// makespan.
+    pub fn throughput(wl: Workload) -> Scenario {
+        Scenario::builder()
+            .workload(wl)
+            .objective(Objective::Throughput)
+            .build()
+            .expect("throughput scenario is always valid")
+    }
+
     /// The hardware platform (packaging description + precomputed hop
     /// tables).
     pub fn platform(&self) -> &Platform {
@@ -88,6 +100,8 @@ impl Scenario {
         h.write_u8(match self.objective {
             Objective::Latency => 0,
             Objective::Edp => 1,
+            Objective::Throughput => 2,
+            Objective::EdpPerSample => 3,
         });
         h.finish()
     }

@@ -52,6 +52,10 @@
 //! * [`opt`] — GA, greedy and MIQP solver backends (§6) behind the
 //!   [`Scheduler`] implementations in [`engine::schedulers`]
 //! * [`pipeline`] — RCPSP batch pipelining (§5.4)
+//! * [`steady`] — steady-state pipelined execution engine: stage plans
+//!   over the chiplet grid, the multi-batch DES (period, throughput,
+//!   energy-per-sample, bottleneck stage/link) and the throughput
+//!   optimizer behind `Objective::Throughput` / `EdpPerSample`
 //! * [`runtime`] — execution of AOT HLO artifacts (PJRT when the
 //!   `pjrt-xla` feature is enabled, CPU interpreter otherwise)
 //! * [`coordinator`] — end-to-end orchestration (plan builder +
@@ -77,6 +81,7 @@ pub mod platform;
 pub mod redistribution;
 pub mod runtime;
 pub mod serving;
+pub mod steady;
 pub mod topology;
 pub mod util;
 pub mod workload;

@@ -39,7 +39,8 @@ USAGE: mcmcomm <subcommand> [--options]
   figures   --fig <3|8|9|10|11|12|13|solver> | --all   [--full] [--seed N]
   optimize  --model <alexnet|vit|vit_residual|vision_mamba|hydranet|hydranet_branched|gpt2_small|gpt2_large|multi>
             [--scheme <baseline|simba|greedy|ga|miqp>]
-            [--type <A|B|C|D>] [--mem <hbm|dram>] [--grid N] [--objective <latency|edp>]
+            [--type <A|B|C|D>] [--mem <hbm|dram>] [--grid N]
+            [--objective <latency|edp|throughput|edp-per-sample>]
             [--platform FILE.json] [--list-platforms]
             [--batch N] [--seed N]
             [--islands K] [--migration-interval M] [--profile]
@@ -48,23 +49,35 @@ USAGE: mcmcomm <subcommand> [--options]
             bit-identical at any thread count. --profile prints the
             per-phase wall-clock split (eval | breeding | migration |
             DES sim) of one GA run
+            steady objectives (throughput, edp-per-sample) search stage
+            plans with the pipelined multi-batch DES instead of a
+            single-batch scheduler; extra knobs: [--batches N]
+            [--depth D] [--stages K] [--iters N]; reports samples/s and
+            energy-per-sample
   platforms --validate FILE.json | --validate-dir DIR | --list
   simulate  --model NAME [--scheme NAME] [--type T] [--mem M] [--grid N]
             [--platform FILE.json] [--batch N] [--seed N] [--overlap]
             [--hop-latency NS] [--profile]
+            [--pipelined [--stages K] [--depth D] [--batches N]]
             --profile prints the DES wall-clock split (lowering |
             event loop | rate recomputes | component rebuilds) of the
-            simulated plan
+            simulated plan; --pipelined streams batches through a
+            K-stage plan to steady state and reports the period,
+            samples/s, energy-per-sample and the bottleneck stage/link
   netsim    [--grid N] [--bw-nop G] [--bw-mem G] [--central] [--diagonal] [--gb BYTES]
   run-e2e   [--model NAME] [--scheme NAME] [--scale S] [--artifacts DIR] [--seed N]
   serve     [--requests N] [--rate RPS] [--slack-ms MS] [--model NAME]
             [--scheme NAME] [--modules N] [--max-batch N] [--queue-cap N]
             [--seed N] [--trace FILE.json] [--save-trace FILE.json]
-            [--json FILE]
+            [--json FILE] [--routing <lowest-index|least-work>]
+            [--pipeline-depth D]
             virtual-time load study: seeded Poisson arrivals (or a replayed
             --trace) against N simulated MCM replicas; continuous batching,
             plan-cache reuse, SLO-aware shedding; reports p50/p99/p99.9,
-            goodput, shed and cache-hit rates
+            goodput, shed and cache-hit rates. --routing picks the idle
+            replica (least-work = least cumulative assigned service);
+            --pipeline-depth D serves each batch through a steady
+            pipelined plan with D in flight
   serve --live  [--requests N] [--max-batch N] [--model NAME] [--artifacts DIR]
             wall-clock threaded batching server over the GEMM runtime
 ";
@@ -187,13 +200,25 @@ fn cmd_optimize(mut args: Args) -> Result<()> {
     let objective = match args.get_or("objective", "latency").as_str() {
         "latency" => Objective::Latency,
         "edp" => Objective::Edp,
+        "throughput" => Objective::Throughput,
+        "edp-per-sample" | "edp_per_sample" => Objective::EdpPerSample,
         o => return Err(Error::msg(format!("unknown objective '{o}'"))),
     };
+    let steady = matches!(
+        objective,
+        Objective::Throughput | Objective::EdpPerSample
+    );
     let seed = args.get_usize("seed", 42).map_err(Error::msg)? as u64;
     let islands = args.get_usize("islands", 1).map_err(Error::msg)?;
     let migration_interval =
         args.get_usize("migration-interval", 4).map_err(Error::msg)?;
     let profile = args.flag("profile");
+    // Steady-objective knobs (parsed unconditionally so `finish` stays
+    // clean; only the steady path reads them).
+    let batches = get_opt_usize(&mut args, "batches")?;
+    let max_depth = args.get_usize("depth", 4).map_err(Error::msg)?;
+    let max_stages = args.get_usize("stages", 0).map_err(Error::msg)?;
+    let iters = args.get_usize("iters", 24).map_err(Error::msg)?;
     args.finish().map_err(Error::msg)?;
     if list {
         list_platforms();
@@ -226,6 +251,20 @@ fn cmd_optimize(mut args: Args) -> Result<()> {
         .objective(objective)
         .build()?;
     let engine = Engine::new(scenario);
+
+    if steady {
+        let params = mcmcomm::steady::SteadyParams {
+            iters,
+            max_depth: max_depth.max(1),
+            max_stages,
+            seed,
+            sim: mcmcomm::steady::SteadyConfig {
+                batches,
+                ..Default::default()
+            },
+        };
+        return optimize_steady(engine.scenario(), objective, &params);
+    }
 
     let plat = engine.scenario().platform();
     println!(
@@ -316,6 +355,101 @@ fn profile_ga(
     Ok(())
 }
 
+/// Parse an optional `--key N` integer (None when absent).
+fn get_opt_usize(args: &mut Args, key: &str) -> Result<Option<usize>> {
+    match args.get(key) {
+        Some(s) => s
+            .parse()
+            .map(Some)
+            .map_err(|_| {
+                Error::msg(format!("--{key} expects an integer, got '{s}'"))
+            }),
+        None => Ok(None),
+    }
+}
+
+/// Shared pretty-printer for a steady-state report (`optimize` with a
+/// steady objective and `simulate --pipelined`).
+fn print_steady_report(report: &mcmcomm::steady::SteadyReport) {
+    println!(
+        "steady period      : {:.4} ms  ({:.1} samples/s)",
+        report.period_ns / 1e6,
+        report.throughput_per_s()
+    );
+    println!(
+        "first batch latency: {:.4} ms  ({} batches simulated, depth {})",
+        report.first_batch_ns / 1e6,
+        report.batches,
+        report.depth
+    );
+    let e = &report.energy_per_sample;
+    println!(
+        "energy per sample  : {:.3} mJ  (offchip {:.3} | nop {:.3} | \
+         compute {:.3})",
+        e.total_pj() / 1e9,
+        e.offchip_pj / 1e9,
+        e.nop_pj / 1e9,
+        e.compute_pj / 1e9
+    );
+    for (s, stat) in report.stages.iter().enumerate() {
+        println!(
+            "  stage {s}: ops {:>3}..{:<3} rows {}..{} occupancy {:.1}%{}",
+            stat.ops.0,
+            stat.ops.1,
+            stat.rows.0,
+            stat.rows.1,
+            stat.occupancy * 100.0,
+            if s == report.bottleneck_stage { "  <- bottleneck" } else { "" }
+        );
+    }
+    if let Some((from, to, util)) = report.bottleneck_link {
+        println!(
+            "bottleneck link    : {from} -> {to} ({:.1}% utilized)",
+            util * 100.0
+        );
+    }
+}
+
+/// `optimize --objective throughput|edp-per-sample`: stage-plan search
+/// scored by the steady-state multi-batch DES.
+fn optimize_steady(
+    scenario: &Scenario,
+    objective: Objective,
+    params: &mcmcomm::steady::SteadyParams,
+) -> Result<()> {
+    use mcmcomm::steady::{optimize, simulate_steady, StagePlan};
+
+    let plat = scenario.platform();
+    let wl = scenario.workload();
+    println!(
+        "steady optimize: {} on platform {} ({}x{} grid, objective: \
+         {objective:?})",
+        wl.name, plat.name, plat.xdim, plat.ydim
+    );
+    let t0 = std::time::Instant::now();
+    let out = optimize(plat, wl, scenario.flags(), objective, params)?;
+    let solve = t0.elapsed();
+    // Serial reference: single stage, one batch in flight — the
+    // pipelined analogue of "best single-batch 1/makespan".
+    let serial = simulate_steady(
+        plat,
+        wl,
+        &StagePlan::single_stage(plat, wl, 1),
+        scenario.flags(),
+        &params.sim,
+    )?;
+    println!("solve time         : {:.2}s", solve.as_secs_f64());
+    println!("best plan          : {}", out.plan.describe());
+    print_steady_report(&out.report);
+    println!(
+        "vs serial depth-1  : {:.2}x throughput ({:.1} -> {:.1} samples/s)",
+        serial.period_ns / out.report.period_ns,
+        serial.throughput_per_s(),
+        out.report.throughput_per_s()
+    );
+    Ok(())
+}
+
 fn cmd_platforms(mut args: Args) -> Result<()> {
     let file = args.get("validate");
     let dir = args.get("validate-dir");
@@ -372,6 +506,10 @@ fn cmd_simulate(mut args: Args) -> Result<()> {
     let profile = args.flag("profile");
     let hop_latency =
         args.get_f64("hop-latency", 0.0).map_err(Error::msg)?;
+    let pipelined = args.flag("pipelined");
+    let stages = args.get_usize("stages", 1).map_err(Error::msg)?;
+    let depth = args.get_usize("depth", 2).map_err(Error::msg)?;
+    let batches = get_opt_usize(&mut args, "batches")?;
     args.finish().map_err(Error::msg)?;
 
     let mut builder = Scenario::builder().system(ty).mem(mem).grid(grid);
@@ -381,6 +519,23 @@ fn cmd_simulate(mut args: Args) -> Result<()> {
     let scenario =
         builder.workload(parse_model(&model, batch)?).build()?;
     let engine = Engine::new(scenario);
+
+    if pipelined {
+        ensure!(
+            !overlap && !profile,
+            "--pipelined is incompatible with --overlap/--profile"
+        );
+        return simulate_pipelined(
+            engine.scenario(),
+            stages,
+            depth,
+            mcmcomm::steady::SteadyConfig {
+                batches,
+                hop_latency_ns: hop_latency,
+                ..Default::default()
+            },
+        );
+    }
     let registry = SchedulerRegistry::standard(seed);
     let planned = engine.schedule(&registry, &scheme)?;
     let report = planned.report();
@@ -465,6 +620,31 @@ fn cmd_simulate(mut args: Args) -> Result<()> {
             "simulated/analytical ratio {ratio:.3} outside tolerance"
         );
     }
+    Ok(())
+}
+
+/// `simulate --pipelined`: stream batches through a K-stage plan to
+/// steady state and report throughput instead of makespan.
+fn simulate_pipelined(
+    scenario: &Scenario,
+    stages: usize,
+    depth: usize,
+    cfg: mcmcomm::steady::SteadyConfig,
+) -> Result<()> {
+    use mcmcomm::steady::plan::stage_plan_from_count;
+    use mcmcomm::steady::simulate_steady;
+
+    let plat = scenario.platform();
+    let wl = scenario.workload();
+    let plan = stage_plan_from_count(plat, wl, stages, depth)?;
+    println!(
+        "pipelined simulation: {} on {} — plan {}",
+        wl.name,
+        scenario.label(),
+        plan.describe()
+    );
+    let report = simulate_steady(plat, wl, &plan, scenario.flags(), &cfg)?;
+    print_steady_report(&report);
     Ok(())
 }
 
@@ -598,6 +778,16 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     let trace_in = args.get("trace");
     let trace_out = args.get("save-trace");
     let json_out = args.get("json");
+    let routing = match args.get_or("routing", "lowest-index").as_str() {
+        "lowest-index" => mcmcomm::serving::RoutingPolicy::LowestIndex,
+        "least-work" | "least-outstanding-work" => {
+            mcmcomm::serving::RoutingPolicy::LeastOutstandingWork
+        }
+        o => {
+            return Err(Error::msg(format!("unknown routing policy '{o}'")))
+        }
+    };
+    let pipeline_depth = get_opt_usize(&mut args, "pipeline-depth")?;
     args.finish().map_err(Error::msg)?;
     ensure!(rate > 0.0, "--rate must be > 0");
 
@@ -613,6 +803,8 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         // miqp's anytime budget is nondeterministic: recomputation may
         // legitimately differ, so skip hit re-verification for it.
         verify_cache: scheme != "miqp",
+        routing,
+        pipeline_depth,
         ..mcmcomm::serving::HarnessConfig::default()
     };
     let harness = mcmcomm::serving::LoadHarness::multi_tenant(&base, cfg)?;

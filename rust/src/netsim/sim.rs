@@ -767,6 +767,18 @@ pub enum SimMode {
     /// prefetch), so the exposed cross-layer pipelining headroom is a
     /// conservative bound. Not comparable to `cost::evaluate`.
     Overlap,
+    /// The steady-state pipeline lowering ([`crate::steady`]): keeps
+    /// the Conformance layer-sequential barrier *within* a batch (so a
+    /// depth-1 pipeline degenerates to the single-batch conformance
+    /// run), but gates load demand on stage-region membership — a
+    /// chiplet whose partition share of an op is empty
+    /// (`px[x] * py[y] == 0`) places zero load demand instead of the
+    /// analytical model's per-row weight replication. On allocations
+    /// where every chiplet holds work (e.g. the uniform allocation on
+    /// ops with `m >= xdim`, `n >= ydim`) this lowering is
+    /// bit-identical to Conformance; on stage-band allocations it stops
+    /// idle stages from pulling weights they never consume.
+    Pipelined,
 }
 
 /// Simulation knobs.
@@ -1114,7 +1126,7 @@ pub(crate) fn lower_op(
             ctx.out_edge[i].is_some_and(|e| lp.redist_edge[e]);
         let load_acts = !acts_from_redist;
         let barrier: Vec<usize> = match mode {
-            SimMode::Conformance => {
+            SimMode::Conformance | SimMode::Pipelined => {
                 if i == 0 {
                     Vec::new()
                 } else {
@@ -1225,7 +1237,7 @@ pub(crate) fn lower_op(
             redist_last
         } else {
             match mode {
-                SimMode::Conformance => barrier.clone(),
+                SimMode::Conformance | SimMode::Pipelined => barrier.clone(),
                 SimMode::Overlap => {
                     // Activations come out of memory: wait for every
                     // producer's writeback (its compute, if the
@@ -1249,6 +1261,14 @@ pub(crate) fn lower_op(
             let mut d = plat.bytes(op.k * part.py[y]);
             if load_acts {
                 d += plat.bytes(part.px[x] * op.k);
+            }
+            // Pipelined region gating: a chiplet with no share of this
+            // op computes nothing, so it loads nothing — otherwise a
+            // stage-band allocation would broadcast every stage's
+            // weights to every row (the analytical per-row replication
+            // the Conformance mode deliberately preserves).
+            if mode == SimMode::Pipelined && part.px[x] * part.py[y] == 0 {
+                d = 0.0;
             }
             demand[idx] = d;
         }

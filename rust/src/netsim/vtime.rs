@@ -14,10 +14,13 @@
 //! bit-identical to the original loop, so service times — and thus
 //! every virtual-time trace — are unchanged by it.
 //!
-//! Determinism rules: module selection is lowest-index-first, time
-//! comparisons are exact `f64` comparisons (all quantities derive from
-//! deterministic arithmetic on trace and simulator outputs — no wall
-//! clock anywhere), so a run is bit-reproducible from its inputs.
+//! Determinism rules: module selection is lowest-index-first by default
+//! (the serving layer can opt into least-assigned-work routing via
+//! [`ModulePool::idle_least_assigned_at`] — equally deterministic, ties
+//! broken toward the lower index), time comparisons are exact `f64`
+//! comparisons (all quantities derive from deterministic arithmetic on
+//! trace and simulator outputs — no wall clock anywhere), so a run is
+//! bit-reproducible from its inputs.
 
 /// A pool of `n` identical service modules advancing in virtual time.
 /// Each module serves one batch at a time; the pool answers "who is
@@ -28,13 +31,16 @@
 pub struct ModulePool {
     /// Virtual completion time per module; `<= now` means idle.
     busy_until: Vec<f64>,
+    /// Cumulative service time ever assigned per module — the
+    /// "outstanding work" ledger least-loaded routing balances on.
+    assigned_ns: Vec<f64>,
 }
 
 impl ModulePool {
     /// `n` must be at least 1 (a pool with no modules can never serve).
     pub fn new(n: usize) -> ModulePool {
         assert!(n >= 1, "ModulePool needs at least one module");
-        ModulePool { busy_until: vec![0.0; n] }
+        ModulePool { busy_until: vec![0.0; n], assigned_ns: vec![0.0; n] }
     }
 
     pub fn len(&self) -> usize {
@@ -55,6 +61,25 @@ impl ModulePool {
         self.busy_until.iter().filter(|&&t| t <= now_ns).count()
     }
 
+    /// Idle module with the least cumulative assigned work (ties break
+    /// toward the lower index) — the least-outstanding-work router.
+    pub fn idle_least_assigned_at(&self, now_ns: f64) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (m, (&t, &w)) in
+            self.busy_until.iter().zip(&self.assigned_ns).enumerate()
+        {
+            if t <= now_ns && best.is_none_or(|(_, bw)| w < bw) {
+                best = Some((m, w));
+            }
+        }
+        best.map(|(m, _)| m)
+    }
+
+    /// Cumulative service time ever assigned to module `m`.
+    pub fn assigned_ns(&self, m: usize) -> f64 {
+        self.assigned_ns[m]
+    }
+
     /// Occupy module `m` until `until_ns`. Panics if the module is
     /// still busy at `now_ns` or the interval runs backwards — both
     /// are driver bugs, not load conditions.
@@ -70,6 +95,7 @@ impl ModulePool {
              ({now_ns} -> {until_ns})"
         );
         self.busy_until[m] = until_ns;
+        self.assigned_ns[m] += until_ns - now_ns;
     }
 
     /// The next completion strictly after `now`: `(module, time)` of
@@ -135,6 +161,25 @@ mod tests {
         assert_eq!(pool.next_completion(0.0), Some((0, 70.0)));
         // Module 2 idle: reuse fills lowest index first.
         assert_eq!(pool.idle_at(0.0), Some(2));
+    }
+
+    #[test]
+    fn least_assigned_routing_balances_work() {
+        let mut pool = ModulePool::new(3);
+        // All idle, nothing assigned yet: ties break to module 0.
+        assert_eq!(pool.idle_least_assigned_at(0.0), Some(0));
+        pool.occupy(0, 0.0, 100.0);
+        pool.occupy(1, 0.0, 10.0);
+        // At t=200 everything is idle again; module 2 never worked.
+        assert_eq!(pool.idle_least_assigned_at(200.0), Some(2));
+        pool.occupy(2, 200.0, 250.0);
+        // Now module 1 (10 ns) trails modules 0 (100) and 2 (50).
+        assert_eq!(pool.idle_least_assigned_at(300.0), Some(1));
+        assert_eq!(pool.assigned_ns(0), 100.0);
+        assert_eq!(pool.assigned_ns(1), 10.0);
+        assert_eq!(pool.assigned_ns(2), 50.0);
+        // Lowest-index routing is unaffected by the ledger.
+        assert_eq!(pool.idle_at(300.0), Some(0));
     }
 
     #[test]

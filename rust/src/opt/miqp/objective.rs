@@ -135,10 +135,12 @@ pub fn build(
     let (e0, l0) = (uni_cost.energy_pj, uni_cost.latency_ns);
     // Weight of one latency-ns (resp. energy-pJ) unit in the objective.
     let (w_lat, w_en) = match obj {
-        Objective::Latency => (1.0, 0.0),
+        // The steady objectives surrogate onto their single-batch
+        // proxies here (the MIQP has no pipeline model).
+        Objective::Latency | Objective::Throughput => (1.0, 0.0),
         // d(EDP) = E0 * dL + L0 * dE; normalize by E0*L0 so the scale
         // stays comparable to the latency objective.
-        Objective::Edp => (1.0, l0 / e0),
+        Objective::Edp | Objective::EdpPerSample => (1.0, l0 / e0),
     };
 
     let bw = plat.bw_nop;

@@ -37,7 +37,7 @@ pub struct PlanKey {
     pub workload_fp: u64,
     /// Scheduler registry key (`"greedy"`, `"ga"`, …).
     pub scheduler: String,
-    /// Requested [`OptFlags`] (bits 0–2) and [`Objective`] (bit 3).
+    /// Requested [`OptFlags`] (bits 0–2) and [`Objective`] (bits 3–4).
     pub opt_bits: u8,
 }
 
@@ -72,6 +72,8 @@ fn pack_bits(flags: OptFlags, objective: Objective) -> u8 {
         | match objective {
             Objective::Latency => 0,
             Objective::Edp => 1 << 3,
+            Objective::Throughput => 2 << 3,
+            Objective::EdpPerSample => 3 << 3,
         }
 }
 

@@ -22,7 +22,10 @@
 //! * [`harness`] — the virtual-time [`LoadHarness`]: continuous
 //!   batching over a pool of simulated MCM replicas
 //!   ([`crate::netsim::vtime`]), DES-backed service times,
-//!   deterministic end to end.
+//!   deterministic end to end. Module routing is pluggable
+//!   ([`RoutingPolicy`]); with `pipeline_depth` set, each replica
+//!   serves its batch through a steady pipelined plan
+//!   ([`crate::steady`]) instead of the single-batch speedup law.
 //! * [`server`] — the wall-clock threaded [`Server`] (the executable
 //!   counterpart; PJRT-backed runners plug in here).
 
@@ -37,7 +40,9 @@ pub use admission::{
     AdmissionDecision, AdmissionInputs, AdmissionPolicy, ShedReason,
 };
 pub use cache::{plans_identical, PlanCache, PlanCacheStats, PlanKey};
-pub use harness::{HarnessConfig, HarnessReport, LoadHarness};
+pub use harness::{
+    HarnessConfig, HarnessReport, LoadHarness, RoutingPolicy,
+};
 pub use metrics::{quantile, LatencyStats};
 pub use server::{Client, Response, ServeReply, Server, ServerStats};
 pub use trace::{Trace, TraceRequest};

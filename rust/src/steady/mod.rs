@@ -1,0 +1,41 @@
+//! Steady-state pipelined execution: multi-batch throughput as a
+//! first-class objective (ROADMAP item 2, the Scope-style merged
+//! pipeline).
+//!
+//! Everything else in the repo scores one batch's makespan. This
+//! subsystem turns a workload × platform into a *sustained stream*:
+//!
+//! * [`plan`] — the pipelined plan form: a [`StagePlan`] assigns
+//!   contiguous op ranges to contiguous chiplet-row bands and carries a
+//!   double-buffering depth (how many batches may be in flight). A
+//!   stage plan lowers onto the existing [`crate::partition::Allocation`]
+//!   (band rows hold the op's partition, other rows idle), so every
+//!   downstream consumer — evaluator, DES, validators — works
+//!   unchanged.
+//! * [`sim`] — the steady-state multi-batch DES: the single-batch plan
+//!   is lowered once in [`crate::netsim::SimMode::Pipelined`], the task
+//!   graph is replicated per batch with (a) per-(op, chiplet) compute
+//!   serialization across batches and (b) an in-flight cap of `depth`
+//!   batches, then run on the active-set engine with a reused
+//!   `SimScratch`. Steady state is detected as identical inter-batch
+//!   completion deltas; the report carries the period, throughput
+//!   (samples/s), per-stage occupancy, bottleneck stage/link and
+//!   energy-per-sample instead of a makespan.
+//! * [`opt`] — the throughput optimizer: greedy stage-balancing seeds
+//!   (cuts that equalize per-stage compute load, rows proportional to
+//!   stage load) refined by a seeded mutation search over stage
+//!   boundaries, row bands and depth, scored by the steady DES under
+//!   [`crate::cost::evaluator::Objective::Throughput`] or
+//!   [`crate::cost::evaluator::Objective::EdpPerSample`].
+//!
+//! A depth-1 pipeline is strictly serialized, so its period equals the
+//! single-batch Pipelined-mode makespan — the bit-consistency bridge to
+//! the conformance suite (pinned by `tests/steady.rs`).
+
+pub mod opt;
+pub mod plan;
+pub mod sim;
+
+pub use opt::{optimize, SteadyOutcome, SteadyParams};
+pub use plan::StagePlan;
+pub use sim::{simulate_steady, StageStat, SteadyConfig, SteadyReport};

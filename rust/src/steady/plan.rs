@@ -1,0 +1,322 @@
+//! The pipelined plan form: contiguous stage assignment over the graph
+//! IR with per-stage chiplet-row bands and a double-buffering depth.
+//!
+//! # Stage legality (DESIGN.md §Steady-state pipeline engine)
+//!
+//! * Stages partition the op list into **contiguous, non-empty ranges**
+//!   in graph order. Ops are topologically ordered by construction
+//!   ([`crate::workload::Workload`] validation), so a contiguous cut
+//!   never places a consumer before its producer.
+//! * Stages own **contiguous, non-empty row bands** of the chiplet
+//!   grid, in row order; the bands partition the `xdim` rows. Columns
+//!   are never split: every stage spans the full `ydim`, so the §5.2
+//!   redistribution and collection-column machinery apply unchanged
+//!   inside a stage.
+//! * `depth >= 1` batches may be in flight at once (double buffering
+//!   generalized to a ring of `depth` buffers).
+//!
+//! A stage plan lowers to an ordinary [`Allocation`]: ops of stage `s`
+//! put their `px` mass on the band rows (uniform split inside the
+//! band), zero elsewhere; `py` is the uniform column split. The
+//! [`crate::netsim::SimMode::Pipelined`] lowering gates load demand on
+//! region membership, so idle rows neither pull weights nor compute.
+
+use crate::partition::{uniform_split, Allocation, Partition};
+use crate::platform::Platform;
+use crate::util::error::Result;
+use crate::workload::Workload;
+use crate::{ensure, err};
+
+/// A pipelined execution plan: which ops run where, and how many
+/// batches may be in flight.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StagePlan {
+    /// Ops per stage, in graph order; sums to the op count, entries
+    /// >= 1.
+    pub ops_per_stage: Vec<usize>,
+    /// Chiplet rows per stage, top band first; sums to `xdim`, entries
+    /// >= 1.
+    pub rows_per_stage: Vec<usize>,
+    /// Max batches in flight (>= 1). Depth 1 degenerates to the
+    /// single-batch layer-sequential run.
+    pub depth: usize,
+}
+
+impl StagePlan {
+    /// The trivial plan: one stage over the whole grid. With
+    /// `depth == 1` this is exactly the single-batch conformance
+    /// execution; with `depth > 1` successive batches overlap on the
+    /// full grid.
+    pub fn single_stage(plat: &Platform, wl: &Workload, depth: usize) -> StagePlan {
+        StagePlan {
+            ops_per_stage: vec![wl.ops.len()],
+            rows_per_stage: vec![plat.xdim],
+            depth,
+        }
+    }
+
+    /// Greedy stage-balancing seed: cut the op list into `stages`
+    /// ranges with near-equal cumulative compute volume (MACs), then
+    /// hand out rows proportionally to each stage's share of the load
+    /// (largest-remainder, every stage >= 1 row).
+    pub fn balanced(
+        plat: &Platform,
+        wl: &Workload,
+        stages: usize,
+        depth: usize,
+    ) -> Result<StagePlan> {
+        let n_ops = wl.ops.len();
+        ensure!(stages >= 1, "stage count must be >= 1");
+        ensure!(
+            stages <= n_ops && stages <= plat.xdim,
+            "{stages} stages need {stages} ops and rows (have {n_ops} ops, \
+             {} rows)",
+            plat.xdim
+        );
+        let macs: Vec<f64> = wl
+            .ops
+            .iter()
+            .map(|op| op.m as f64 * op.k.max(1) as f64 * op.n as f64)
+            .collect();
+        let total: f64 = macs.iter().sum();
+        // Cut after the op whose cumulative load first reaches the
+        // stage's fair share, always leaving enough ops for the
+        // remaining stages.
+        let mut ops_per_stage = Vec::with_capacity(stages);
+        let mut i = 0usize;
+        let mut acc = 0.0;
+        for s in 0..stages {
+            let remaining_stages = stages - s;
+            let hi = n_ops - (remaining_stages - 1); // leave 1 op each
+            let lo = i + 1;
+            let target = total * (s + 1) as f64 / stages as f64;
+            let mut j = i;
+            while j < hi && (j < lo || acc < target) {
+                acc += macs[j];
+                j += 1;
+            }
+            ops_per_stage.push(j - i);
+            i = j;
+        }
+        debug_assert_eq!(ops_per_stage.iter().sum::<usize>(), n_ops);
+        // Rows proportional to stage load, >= 1 each.
+        let mut loads = Vec::with_capacity(stages);
+        let mut k = 0usize;
+        for &c in &ops_per_stage {
+            loads.push(macs[k..k + c].iter().sum::<f64>().max(1.0));
+            k += c;
+        }
+        let spare = plat.xdim - stages;
+        let extra = crate::partition::proportional_split(spare, &loads);
+        let rows_per_stage: Vec<usize> =
+            extra.into_iter().map(|e| e + 1).collect();
+        let plan = StagePlan { ops_per_stage, rows_per_stage, depth };
+        plan.validate(plat, wl)?;
+        Ok(plan)
+    }
+
+    pub fn stages(&self) -> usize {
+        self.ops_per_stage.len()
+    }
+
+    /// Check the legality rules (module docs) against a binding.
+    pub fn validate(&self, plat: &Platform, wl: &Workload) -> Result<()> {
+        ensure!(
+            !self.ops_per_stage.is_empty()
+                && self.ops_per_stage.len() == self.rows_per_stage.len(),
+            "stage plan has {} op ranges but {} row bands",
+            self.ops_per_stage.len(),
+            self.rows_per_stage.len()
+        );
+        ensure!(self.depth >= 1, "pipeline depth must be >= 1");
+        ensure!(
+            self.ops_per_stage.iter().all(|&c| c >= 1),
+            "every stage needs at least one op"
+        );
+        ensure!(
+            self.rows_per_stage.iter().all(|&r| r >= 1),
+            "every stage needs at least one chiplet row"
+        );
+        let ops: usize = self.ops_per_stage.iter().sum();
+        ensure!(
+            ops == wl.ops.len(),
+            "stage op ranges cover {ops} ops, workload has {}",
+            wl.ops.len()
+        );
+        let rows: usize = self.rows_per_stage.iter().sum();
+        ensure!(
+            rows == plat.xdim,
+            "stage row bands cover {rows} rows, grid has {}",
+            plat.xdim
+        );
+        Ok(())
+    }
+
+    /// Half-open op range of stage `s`.
+    pub fn op_range(&self, s: usize) -> std::ops::Range<usize> {
+        let start: usize = self.ops_per_stage[..s].iter().sum();
+        start..start + self.ops_per_stage[s]
+    }
+
+    /// Half-open row range of stage `s`.
+    pub fn row_range(&self, s: usize) -> std::ops::Range<usize> {
+        let start: usize = self.rows_per_stage[..s].iter().sum();
+        start..start + self.rows_per_stage[s]
+    }
+
+    /// Stage owning op `i`.
+    pub fn stage_of_op(&self, i: usize) -> usize {
+        let mut acc = 0usize;
+        for (s, &c) in self.ops_per_stage.iter().enumerate() {
+            acc += c;
+            if i < acc {
+                return s;
+            }
+        }
+        self.ops_per_stage.len() - 1
+    }
+
+    /// Lower the stage plan onto an ordinary [`Allocation`]: each op's
+    /// `px` mass sits uniformly on its stage's row band (zero outside),
+    /// `py` is the uniform column split, collection columns default to
+    /// the grid middle (the [`crate::partition::uniform_allocation`]
+    /// convention).
+    pub fn allocation(&self, plat: &Platform, wl: &Workload) -> Result<Allocation> {
+        self.validate(plat, wl)?;
+        let mut parts = Vec::with_capacity(wl.ops.len());
+        for (s, _) in self.ops_per_stage.iter().enumerate() {
+            let rows = self.row_range(s);
+            for i in self.op_range(s) {
+                let op = &wl.ops[i];
+                ensure!(
+                    op.m >= 1 && op.n >= 1,
+                    "op '{}' has an empty output",
+                    op.name
+                );
+                let band = uniform_split(op.m, rows.len());
+                let mut px = vec![0usize; plat.xdim];
+                px[rows.clone()].copy_from_slice(&band);
+                parts.push(Partition {
+                    px,
+                    py: uniform_split(op.n, plat.ydim),
+                });
+            }
+        }
+        Ok(Allocation {
+            parts,
+            collect_cols: vec![plat.ydim / 2; wl.edge_count()],
+        })
+    }
+
+    /// One-line human description, e.g. `3 stages [5|2, 2|1, 1|1] depth 2`
+    /// (ops|rows per stage).
+    pub fn describe(&self) -> String {
+        let stages: Vec<String> = self
+            .ops_per_stage
+            .iter()
+            .zip(&self.rows_per_stage)
+            .map(|(o, r)| format!("{o}|{r}"))
+            .collect();
+        format!(
+            "{} stage{} [{}] depth {}",
+            self.stages(),
+            if self.stages() == 1 { "" } else { "s" },
+            stages.join(", "),
+            self.depth
+        )
+    }
+}
+
+/// Parse a `--stages` CLI spec: either a stage count (`"3"`, balanced
+/// seed) or explicit op cuts are not accepted — the optimizer owns
+/// boundary placement. Returns the balanced plan.
+pub fn stage_plan_from_count(
+    plat: &Platform,
+    wl: &Workload,
+    stages: usize,
+    depth: usize,
+) -> Result<StagePlan> {
+    if stages <= 1 {
+        let p = StagePlan::single_stage(plat, wl, depth);
+        p.validate(plat, wl)?;
+        Ok(p)
+    } else {
+        StagePlan::balanced(plat, wl, stages, depth)
+            .map_err(|e| err!("building a {stages}-stage plan: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::alexnet;
+
+    #[test]
+    fn single_stage_is_legal_and_covers_everything() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let p = StagePlan::single_stage(&plat, &wl, 1);
+        p.validate(&plat, &wl).unwrap();
+        assert_eq!(p.op_range(0), 0..wl.ops.len());
+        assert_eq!(p.row_range(0), 0..plat.xdim);
+        let alloc = p.allocation(&plat, &wl).unwrap();
+        alloc.validate(&wl, &plat).unwrap();
+        // Full-grid single stage == the uniform allocation's partitions.
+        let uni = crate::partition::uniform_allocation(&plat, &wl);
+        assert_eq!(alloc.parts, uni.parts);
+    }
+
+    #[test]
+    fn balanced_cuts_are_contiguous_and_banded() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        for stages in 1..=4usize.min(wl.ops.len()) {
+            let p = StagePlan::balanced(&plat, &wl, stages, 2).unwrap();
+            assert_eq!(p.stages(), stages);
+            p.validate(&plat, &wl).unwrap();
+            let alloc = p.allocation(&plat, &wl).unwrap();
+            alloc.validate(&wl, &plat).unwrap();
+            // px mass sits exactly on the stage band.
+            for i in 0..wl.ops.len() {
+                let s = p.stage_of_op(i);
+                let rows = p.row_range(s);
+                for (x, &v) in alloc.parts[i].px.iter().enumerate() {
+                    if !rows.contains(&x) {
+                        assert_eq!(v, 0, "op {i} leaks outside its band");
+                    }
+                }
+                let band: usize =
+                    alloc.parts[i].px[rows.clone()].iter().sum();
+                assert_eq!(band, wl.ops[i].m);
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_rejects_too_many_stages() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        assert!(StagePlan::balanced(&plat, &wl, plat.xdim + 1, 1).is_err());
+    }
+
+    #[test]
+    fn stage_of_op_matches_ranges() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let p = StagePlan::balanced(&plat, &wl, 3, 1).unwrap();
+        for s in 0..p.stages() {
+            for i in p.op_range(s) {
+                assert_eq!(p.stage_of_op(i), s);
+            }
+        }
+    }
+
+    #[test]
+    fn describe_is_stable() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let p = StagePlan::single_stage(&plat, &wl, 2);
+        let d = p.describe();
+        assert!(d.contains("1 stage") && d.contains("depth 2"), "{d}");
+    }
+}

@@ -1,0 +1,510 @@
+//! Steady-state multi-batch DES: replicate one batch's lowered task
+//! graph, chain batches through per-(op, chiplet) compute
+//! serialization and a `depth`-bounded in-flight window, run the
+//! active-set engine, and detect the steady-state period.
+//!
+//! # Period detection (DESIGN.md §Steady-state pipeline engine)
+//!
+//! Every batch executes an identical task graph, so once the pipeline
+//! is warm (after at most `depth` batches fill the window) the
+//! inter-batch completion deltas settle to a single value — the
+//! **period**. The simulation injects a window of batches, measures the
+//! completion time of each, and accepts steady state when the last
+//! three deltas agree to a relative tolerance; if they do not, the
+//! batch count is doubled (up to a cap) and the run repeats on the same
+//! warm [`SimScratch`]. Throughput is `1 / period`; a depth-1 pipeline
+//! is strictly serialized, so its period equals the single-batch
+//! makespan (the conformance bridge pinned by `tests/steady.rs`).
+
+use crate::cost::energy::comp_energy_pj;
+use crate::cost::evaluator::OptFlags;
+use crate::netsim::sim::{
+    lower_plan, run_tasks_into, Checkpoint, LowerCtx, LoweredPlan,
+    RunOutcome, SimEnergy, SimMode, SimScratch, Task, TaskMeta, Work,
+};
+use crate::partition::Allocation;
+use crate::platform::Platform;
+use crate::topology::links::RouteCache;
+use crate::util::error::Result;
+use crate::workload::Workload;
+use crate::{ensure, err};
+
+use super::plan::StagePlan;
+
+/// Steady-simulation knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SteadyConfig {
+    /// Explicit batch count (`simulate --batches N`). `None` lets the
+    /// simulator pick `max(depth + 6, 8)` and escalate on
+    /// non-convergence.
+    pub batches: Option<usize>,
+    /// Forwarded to the event engine (wormhole fill; 0 everywhere the
+    /// analytical model is the reference).
+    pub hop_latency_ns: f64,
+    /// Relative agreement required of the trailing completion deltas.
+    pub rtol: f64,
+}
+
+impl Default for SteadyConfig {
+    fn default() -> Self {
+        SteadyConfig { batches: None, hop_latency_ns: 0.0, rtol: 1e-6 }
+    }
+}
+
+/// Batch-count ceiling for the auto-escalation loop.
+const MAX_BATCHES: usize = 64;
+
+/// Per-stage steady-state diagnostics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageStat {
+    /// Half-open op range `[start, end)`.
+    pub ops: (usize, usize),
+    /// Half-open chiplet-row range `[start, end)`.
+    pub rows: (usize, usize),
+    /// Compute-busy fraction of the stage's chiplet region over one
+    /// steady period (1.0 = the region computes wall to wall).
+    pub occupancy: f64,
+}
+
+/// What the steady-state run produced: a period instead of a makespan.
+#[derive(Debug, Clone)]
+pub struct SteadyReport {
+    /// Steady inter-batch completion delta (ns per sample).
+    pub period_ns: f64,
+    /// Completion time of the first batch (pipeline fill latency).
+    pub first_batch_ns: f64,
+    /// Batches actually simulated to reach steady state.
+    pub batches: usize,
+    /// In-flight window of the simulated plan.
+    pub depth: usize,
+    /// Per-stage occupancy, stage order.
+    pub stages: Vec<StageStat>,
+    /// Highest-occupancy stage (the pipeline's rate limiter).
+    pub bottleneck_stage: usize,
+    /// Busiest link over one period: `(from, to, utilization)`.
+    pub bottleneck_link: Option<(usize, usize, f64)>,
+    /// Energy charged to one sample (per-batch traffic is exactly
+    /// total / batches — every batch moves identical bytes).
+    pub energy_per_sample: SimEnergy,
+}
+
+impl SteadyReport {
+    /// Sustained throughput in samples per second.
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.period_ns > 0.0 { 1e9 / self.period_ns } else { 0.0 }
+    }
+
+    /// Deterministic text summary (the golden-snapshot payload):
+    /// period, throughput, fill latency, energy split per sample,
+    /// per-stage occupancy and the bottlenecks.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("period_ns {:.9e}\n", self.period_ns));
+        s.push_str(&format!(
+            "throughput_per_s {:.9e}\n",
+            self.throughput_per_s()
+        ));
+        s.push_str(&format!("first_batch_ns {:.9e}\n", self.first_batch_ns));
+        s.push_str(&format!(
+            "batches {} depth {}\n",
+            self.batches, self.depth
+        ));
+        s.push_str(&format!(
+            "energy_per_sample_pj total {:.9e} offchip {:.9e} nop {:.9e} \
+             compute {:.9e}\n",
+            self.energy_per_sample.total_pj(),
+            self.energy_per_sample.offchip_pj,
+            self.energy_per_sample.nop_pj,
+            self.energy_per_sample.compute_pj
+        ));
+        for (i, st) in self.stages.iter().enumerate() {
+            s.push_str(&format!(
+                "stage {} ops {}..{} rows {}..{} occupancy {:.6}\n",
+                i, st.ops.0, st.ops.1, st.rows.0, st.rows.1, st.occupancy
+            ));
+        }
+        s.push_str(&format!("bottleneck_stage {}\n", self.bottleneck_stage));
+        if let Some((from, to, util)) = self.bottleneck_link {
+            s.push_str(&format!(
+                "bottleneck_link {from} -> {to} util {util:.9}\n"
+            ));
+        }
+        s
+    }
+}
+
+/// Replicate the single-batch template `batches` times: deps shift by
+/// the batch offset, computes chain to the previous batch's same
+/// (op, chiplet) compute (the event engine treats computes as pure
+/// durations, so cross-batch occupancy of a chiplet must be an explicit
+/// edge), and each batch's root tasks wait for batch `b - depth` to
+/// finish (the in-flight window).
+fn replicate(
+    template: &LoweredPlan,
+    batches: usize,
+    depth: usize,
+) -> (Vec<Task>, Vec<TaskMeta>) {
+    let t_n = template.tasks.len();
+    let last_done = template
+        .op_done_ids
+        .last()
+        .map(|v| v.as_slice())
+        .unwrap_or(&[]);
+    let is_compute: Vec<bool> = template
+        .tasks
+        .iter()
+        .map(|t| matches!(t.work, Work::Compute { .. }))
+        .collect();
+    let mut tasks = Vec::with_capacity(t_n * batches);
+    let mut meta = Vec::with_capacity(t_n * batches);
+    for b in 0..batches {
+        let off = b * t_n;
+        for (t, task) in template.tasks.iter().enumerate() {
+            let mut deps: Vec<usize> =
+                task.deps.iter().map(|&d| d + off).collect();
+            if b > 0 && is_compute[t] {
+                deps.push(off - t_n + t);
+            }
+            if b >= depth && task.deps.is_empty() {
+                let prev = (b - depth) * t_n;
+                deps.extend(last_done.iter().map(|&d| d + prev));
+            }
+            tasks.push(Task { work: task.work.clone(), deps });
+        }
+        meta.extend_from_slice(&template.meta);
+    }
+    (tasks, meta)
+}
+
+/// Completion time of each batch: max finish over its task slice.
+fn batch_completions(finish: &[f64], t_n: usize, batches: usize) -> Vec<f64> {
+    (0..batches)
+        .map(|b| {
+            finish[b * t_n..(b + 1) * t_n]
+                .iter()
+                .fold(0.0f64, |a, &v| a.max(v))
+        })
+        .collect()
+}
+
+/// Steady-state test: the trailing three inter-batch deltas agree to
+/// `rtol`. Returns the period (the last delta).
+fn detect_period(completions: &[f64], depth: usize, rtol: f64) -> Option<f64> {
+    let n = completions.len();
+    // Need the window full (warmup) plus three deltas.
+    if n < depth.max(1) + 3 || n < 4 {
+        return None;
+    }
+    let deltas: Vec<f64> =
+        (n - 3..n).map(|b| completions[b] - completions[b - 1]).collect();
+    let dmax = deltas.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let dmin = deltas.iter().copied().fold(f64::INFINITY, f64::min);
+    if !dmax.is_finite() || dmin < 0.0 {
+        return None;
+    }
+    if dmax - dmin <= rtol * dmax.max(1e-9) {
+        Some(deltas[2])
+    } else {
+        None
+    }
+}
+
+/// Per-stage compute-busy time of one batch (from the template's
+/// compute durations) and the derived occupancy table.
+fn stage_stats(
+    plat: &Platform,
+    plan: &StagePlan,
+    template: &LoweredPlan,
+    period_ns: f64,
+) -> Vec<StageStat> {
+    (0..plan.stages())
+        .map(|s| {
+            let ops = plan.op_range(s);
+            let rows = plan.row_range(s);
+            let busy: f64 = ops
+                .clone()
+                .flat_map(|i| template.compute_ids[i].iter())
+                .map(|&t| match template.tasks[t].work {
+                    Work::Compute { dur_ns } => dur_ns,
+                    _ => 0.0,
+                })
+                .sum();
+            let chiplets = (rows.len() * plat.ydim) as f64;
+            let occupancy = if period_ns > 0.0 {
+                busy / (period_ns * chiplets)
+            } else {
+                0.0
+            };
+            StageStat {
+                ops: (ops.start, ops.end),
+                rows: (rows.start, rows.end),
+                occupancy,
+            }
+        })
+        .collect()
+}
+
+/// Simulate a stage plan to steady state. Lowers the plan's derived
+/// allocation once in [`SimMode::Pipelined`], replicates per batch,
+/// and escalates the batch window until the period detector converges
+/// (unless `cfg.batches` pins the window). Errors on non-convergence
+/// name the **starved** (lowest-occupancy) stage — the usual culprit
+/// when a boundary strands a stage without work.
+pub fn simulate_steady(
+    plat: &Platform,
+    wl: &Workload,
+    plan: &StagePlan,
+    flags: OptFlags,
+    cfg: &SteadyConfig,
+) -> Result<SteadyReport> {
+    plan.validate(plat, wl)?;
+    let alloc = plan.allocation(plat, wl)?;
+    simulate_steady_alloc(plat, wl, plan, &alloc, flags, cfg)
+}
+
+/// [`simulate_steady`] on a caller-supplied allocation (must be the
+/// plan's own lowering or a refinement with the same stage regions —
+/// the occupancy attribution assumes ops live on their stage bands).
+pub fn simulate_steady_alloc(
+    plat: &Platform,
+    wl: &Workload,
+    plan: &StagePlan,
+    alloc: &Allocation,
+    flags: OptFlags,
+    cfg: &SteadyConfig,
+) -> Result<SteadyReport> {
+    ensure!(!wl.ops.is_empty(), "cannot pipeline an empty workload");
+    let depth = plan.depth;
+    let graph = plat.link_graph_shared(flags.diagonal);
+    let ctx = LowerCtx::new(plat, wl);
+    let mut rc = RouteCache::new();
+    let mut scratch = SimScratch::default();
+    let template = lower_plan(
+        plat,
+        wl,
+        alloc,
+        flags,
+        SimMode::Pipelined,
+        &ctx,
+        &graph,
+        &mut rc,
+        &mut scratch.lower,
+    )?;
+    let t_n = template.tasks.len();
+    ensure!(t_n > 0, "plan lowered to an empty task graph");
+
+    let fixed = cfg.batches.is_some();
+    let mut batches = cfg
+        .batches
+        .unwrap_or_else(|| (depth + 6).max(8))
+        .max(2);
+    let mut run = RunOutcome::default();
+    let mut checkpoints: Vec<Checkpoint> = Vec::new();
+    loop {
+        let (tasks, meta) = replicate(&template, batches, depth);
+        run_tasks_into(
+            &graph,
+            &tasks,
+            Some(&meta),
+            cfg.hop_latency_ns,
+            &[],
+            None,
+            &mut scratch,
+            &mut run,
+            &mut checkpoints,
+            None,
+        )?;
+        let completions = batch_completions(&run.finish, t_n, batches);
+        if let Some(period) = detect_period(&completions, depth, cfg.rtol) {
+            let stages = stage_stats(plat, plan, &template, period);
+            let bottleneck_stage = stages
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.occupancy.total_cmp(&b.1.occupancy))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            // Energy and link utilization per batch: every batch moves
+            // identical traffic, so total / batches is exact.
+            let n_chiplets = plat.num_chiplets();
+            let inv_b = 1.0 / batches as f64;
+            let mut energy = SimEnergy::default();
+            let mut bottleneck_link: Option<(usize, usize, f64)> = None;
+            for (l, link) in graph.links.iter().enumerate() {
+                let bytes = run.link_bytes[l] * inv_b;
+                let bits = bytes * 8.0;
+                if link.from >= n_chiplets || link.to >= n_chiplets {
+                    energy.offchip_pj += bits * plat.mem_pj_bit;
+                } else {
+                    energy.nop_pj += bits * plat.energy.nop_pj_bit_hop;
+                }
+                let util = if period > 0.0 && link.capacity > 0.0 {
+                    bytes / (link.capacity * period)
+                } else {
+                    0.0
+                };
+                let better = match bottleneck_link {
+                    Some((_, _, best)) => util > best,
+                    None => util > 0.0,
+                };
+                if better {
+                    bottleneck_link = Some((link.from, link.to, util));
+                }
+            }
+            energy.compute_pj = wl
+                .ops
+                .iter()
+                .zip(&alloc.parts)
+                .map(|(op, part)| comp_energy_pj(plat, op, part))
+                .sum();
+            return Ok(SteadyReport {
+                period_ns: period,
+                first_batch_ns: completions[0],
+                batches,
+                depth,
+                stages,
+                bottleneck_stage,
+                bottleneck_link,
+                energy_per_sample: energy,
+            });
+        }
+        if fixed || batches >= MAX_BATCHES {
+            // Name the starved stage: the least-occupied region under
+            // the best current period estimate.
+            let est = completions
+                .last()
+                .zip(completions.get(completions.len().wrapping_sub(2)))
+                .map(|(a, b)| a - b)
+                .unwrap_or(0.0);
+            let stages = stage_stats(plat, plan, &template, est.max(1e-9));
+            let (starved, stat) = stages
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.occupancy.total_cmp(&b.1.occupancy))
+                .expect("validated plan has at least one stage");
+            return Err(err!(
+                "steady state did not converge after {batches} batches \
+                 (depth {depth}): starved stage {starved} (ops \
+                 {}..{}, rows {}..{}, occupancy {:.4}) never settles — \
+                 raise --batches or rebalance the stage boundaries",
+                stat.ops.0,
+                stat.ops.1,
+                stat.rows.0,
+                stat.rows.1,
+                stat.occupancy
+            ));
+        }
+        batches = (batches * 2).min(MAX_BATCHES);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::sim::{simulate_plan, SimConfig};
+    use crate::workload::models::alexnet;
+
+    #[test]
+    fn depth1_period_equals_single_batch_makespan() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let plan = StagePlan::single_stage(&plat, &wl, 1);
+        let steady = simulate_steady(
+            &plat,
+            &wl,
+            &plan,
+            OptFlags::ALL,
+            &SteadyConfig::default(),
+        )
+        .unwrap();
+        let alloc = plan.allocation(&plat, &wl).unwrap();
+        let single = simulate_plan(
+            &plat,
+            &wl,
+            &alloc,
+            OptFlags::ALL,
+            &SimConfig { mode: SimMode::Pipelined, hop_latency_ns: 0.0 },
+        )
+        .unwrap();
+        let rel = (steady.period_ns - single.makespan_ns).abs()
+            / single.makespan_ns;
+        assert!(
+            rel < 1e-6,
+            "depth-1 period {} vs single-batch makespan {} (rel {rel})",
+            steady.period_ns,
+            single.makespan_ns
+        );
+        assert!(steady.first_batch_ns > 0.0);
+        assert!(steady.throughput_per_s() > 0.0);
+    }
+
+    #[test]
+    fn deeper_pipelines_do_not_slow_down() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let mut prev = f64::INFINITY;
+        for depth in [1usize, 2, 4] {
+            let plan = StagePlan::single_stage(&plat, &wl, depth);
+            let r = simulate_steady(
+                &plat,
+                &wl,
+                &plan,
+                OptFlags::ALL,
+                &SteadyConfig::default(),
+            )
+            .unwrap();
+            assert!(
+                r.period_ns <= prev * 1.02,
+                "depth {depth} period {} regressed from {prev}",
+                r.period_ns
+            );
+            prev = r.period_ns;
+        }
+    }
+
+    #[test]
+    fn summary_names_stages_and_bottlenecks() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let plan = StagePlan::balanced(&plat, &wl, 2, 2).unwrap();
+        let r = simulate_steady(
+            &plat,
+            &wl,
+            &plan,
+            OptFlags::ALL,
+            &SteadyConfig::default(),
+        )
+        .unwrap();
+        let s = r.summary();
+        assert!(s.contains("period_ns"), "{s}");
+        assert!(s.contains("stage 0") && s.contains("stage 1"), "{s}");
+        assert!(s.contains("bottleneck_stage"), "{s}");
+        assert_eq!(r.stages.len(), 2);
+        for st in &r.stages {
+            assert!(
+                st.occupancy >= 0.0 && st.occupancy <= 1.0 + 1e-6,
+                "occupancy {}",
+                st.occupancy
+            );
+        }
+        assert!(r.energy_per_sample.total_pj() > 0.0);
+    }
+
+    #[test]
+    fn fixed_tiny_window_errors_name_a_starved_stage() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let plan = StagePlan::single_stage(&plat, &wl, 2);
+        // Two batches can never produce three agreeing deltas.
+        let err = simulate_steady(
+            &plat,
+            &wl,
+            &plan,
+            OptFlags::ALL,
+            &SteadyConfig { batches: Some(2), ..Default::default() },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("starved stage"), "{err}");
+        assert!(err.contains("--batches"), "{err}");
+    }
+}

@@ -1,0 +1,271 @@
+//! Property suite for the steady-state pipelined engine
+//! ([`mcmcomm::steady`]), plus the gpt2_small pipelined golden
+//! snapshot.
+//!
+//! Pinned properties (ISSUE 9):
+//!
+//! * **Depth-1 bridge** — a depth-1 single-stage pipeline is strictly
+//!   serialized, so its steady period equals the single-batch DES
+//!   makespan on the same allocation (1e-6 relative), and its
+//!   throughput is at least `1/makespan · (1 - eps)`. On a full-grid
+//!   allocation `SimMode::Pipelined` is bit-identical to the default
+//!   conformance mode, so the bridge also ties the new engine to the
+//!   frozen single-batch numbers.
+//! * **Depth monotonicity** — deeper buffering never slows the stream
+//!   (1.02 slack for DES arithmetic), and the throughput gain from
+//!   `depth` batches in flight never exceeds `depth` (Little's law).
+//! * **Convergence** — period detection converges on the whole
+//!   evaluation zoo, for single-stage and multi-stage balanced plans.
+//!
+//! The golden snapshot shares the blessing protocol of
+//! `tests/golden_sim.rs`: absent → bless and pass (commit the file),
+//! present → byte-exact, `MCMCOMM_BLESS=1` → rewrite (intentional model
+//! changes only, called out in CHANGES.md).
+
+use std::path::PathBuf;
+
+use mcmcomm::cost::evaluator::OptFlags;
+use mcmcomm::netsim::{simulate_plan, SimConfig, SimMode};
+use mcmcomm::platform::Platform;
+use mcmcomm::steady::{simulate_steady, StagePlan, SteadyConfig};
+use mcmcomm::workload::models::{alexnet, evaluation_suite, scaled_down};
+use mcmcomm::workload::Workload;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/gpt2_small_typeA_steady.golden")
+}
+
+/// Shared blessing protocol (see `tests/golden_sim.rs`).
+fn check_golden(summary: &str, path: &PathBuf) {
+    let bless = std::env::var("MCMCOMM_BLESS").is_ok_and(|v| v == "1");
+    match std::fs::read_to_string(path) {
+        Ok(golden) if !bless => {
+            assert_eq!(
+                summary, golden,
+                "steady summary drifted from the golden snapshot at {} — \
+                 if the pipelined model changed intentionally, re-bless \
+                 with MCMCOMM_BLESS=1 and say so in CHANGES.md",
+                path.display()
+            );
+        }
+        _ => {
+            std::fs::create_dir_all(path.parent().unwrap())
+                .expect("create tests/golden");
+            std::fs::write(path, summary).expect("write golden");
+            eprintln!(
+                "blessed golden snapshot at {} — commit it:\n{summary}",
+                path.display()
+            );
+        }
+    }
+}
+
+/// Depth-1 bridge on one workload: steady period == single-batch
+/// makespan on the plan's own allocation, in both `Pipelined` and the
+/// default conformance mode (full-grid allocations make them
+/// bit-identical).
+fn assert_depth1_bridge(plat: &Platform, wl: &Workload) {
+    let plan = StagePlan::single_stage(plat, wl, 1);
+    let steady = simulate_steady(
+        plat,
+        wl,
+        &plan,
+        OptFlags::ALL,
+        &SteadyConfig::default(),
+    )
+    .unwrap_or_else(|e| panic!("{}: depth-1 steady sim: {e}", wl.name));
+    let alloc = plan.allocation(plat, wl).expect("plan allocation");
+    for mode in [SimMode::Pipelined, SimMode::Conformance] {
+        let single = simulate_plan(
+            plat,
+            wl,
+            &alloc,
+            OptFlags::ALL,
+            &SimConfig { mode, hop_latency_ns: 0.0 },
+        )
+        .unwrap_or_else(|e| panic!("{}: single-batch sim: {e}", wl.name));
+        let rel = (steady.period_ns - single.makespan_ns).abs()
+            / single.makespan_ns;
+        assert!(
+            rel < 1e-6,
+            "{}: depth-1 period {:.6e} vs single-batch ({mode:?}) \
+             makespan {:.6e} (rel {rel:.3e})",
+            wl.name,
+            steady.period_ns,
+            single.makespan_ns
+        );
+        assert!(
+            steady.throughput_per_s()
+                >= 1e9 / single.makespan_ns * (1.0 - 1e-6),
+            "{}: throughput {:.3} below 1/makespan {:.3}",
+            wl.name,
+            steady.throughput_per_s(),
+            1e9 / single.makespan_ns
+        );
+    }
+}
+
+/// Monotonicity + Little's-law bound on one workload.
+fn assert_depth_monotone(plat: &Platform, wl: &Workload) {
+    let mut prev = f64::INFINITY;
+    let mut base = f64::NAN;
+    for depth in [1usize, 2, 4] {
+        let plan = StagePlan::single_stage(plat, wl, depth);
+        let r = simulate_steady(
+            plat,
+            wl,
+            &plan,
+            OptFlags::ALL,
+            &SteadyConfig::default(),
+        )
+        .unwrap_or_else(|e| panic!("{}: depth-{depth}: {e}", wl.name));
+        assert!(
+            r.period_ns <= prev * 1.02,
+            "{}: depth {depth} period {:.6e} regressed from {prev:.6e}",
+            wl.name,
+            r.period_ns
+        );
+        if depth == 1 {
+            base = r.period_ns;
+        } else {
+            assert!(
+                r.period_ns >= base / depth as f64 * (1.0 - 1e-9),
+                "{}: depth-{depth} gain {:.3} exceeds the depth bound",
+                wl.name,
+                base / r.period_ns
+            );
+        }
+        prev = r.period_ns;
+    }
+}
+
+/// Debug-friendly smoke: the depth-1 bridge and monotonicity on a
+/// scaled-down AlexNet, so `cargo test -q` exercises the properties
+/// without a release build.
+#[test]
+fn steady_properties_mini_alexnet() {
+    let plat = Platform::headline();
+    let wl = scaled_down(&alexnet(1), 16, 16);
+    assert_depth1_bridge(&plat, &wl);
+    assert_depth_monotone(&plat, &wl);
+}
+
+/// Depth-1 bridge across the full evaluation zoo.
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "release-only sweep: full-size DES runs over the zoo \
+              (CI job `conformance` runs `cargo test --release -q \
+              --test steady`)"
+)]
+fn steady_depth1_bridges_single_batch_des_on_zoo() {
+    let plat = Platform::headline();
+    for wl in evaluation_suite(1) {
+        assert_depth1_bridge(&plat, &wl);
+    }
+}
+
+/// Throughput is monotone non-decreasing in buffering depth across the
+/// zoo, and never exceeds the depth bound.
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "release-only sweep: full-size DES runs over the zoo \
+              (CI job `conformance` runs `cargo test --release -q \
+              --test steady`)"
+)]
+fn steady_throughput_monotone_in_depth_on_zoo() {
+    let plat = Platform::headline();
+    for wl in evaluation_suite(1) {
+        assert_depth_monotone(&plat, &wl);
+    }
+}
+
+/// Period detection converges on every zoo model for single-stage and
+/// genuinely pipelined (multi-stage banded) plans, with sane stage
+/// diagnostics.
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "release-only sweep: full-size DES runs over the zoo \
+              (CI job `conformance` runs `cargo test --release -q \
+              --test steady`)"
+)]
+fn steady_detection_converges_on_zoo() {
+    let plat = Platform::headline();
+    for wl in evaluation_suite(1) {
+        for stages in [1usize, 2, 4] {
+            if stages > wl.ops.len() || stages > plat.xdim {
+                continue;
+            }
+            let plan = if stages == 1 {
+                StagePlan::single_stage(&plat, &wl, 2)
+            } else {
+                StagePlan::balanced(&plat, &wl, stages, 2)
+                    .unwrap_or_else(|e| {
+                        panic!("{}: balanced({stages}): {e}", wl.name)
+                    })
+            };
+            let r = simulate_steady(
+                &plat,
+                &wl,
+                &plan,
+                OptFlags::ALL,
+                &SteadyConfig::default(),
+            )
+            .unwrap_or_else(|e| {
+                panic!("{}: {stages}-stage steady sim: {e}", wl.name)
+            });
+            assert_eq!(r.stages.len(), stages);
+            assert!(r.period_ns.is_finite() && r.period_ns > 0.0);
+            assert!(r.first_batch_ns > 0.0);
+            assert!(r.bottleneck_stage < stages);
+            for st in &r.stages {
+                assert!(
+                    st.occupancy >= 0.0 && st.occupancy <= 1.0 + 1e-6,
+                    "{}: occupancy {} out of range",
+                    wl.name,
+                    st.occupancy
+                );
+            }
+            assert!(r.energy_per_sample.total_pj() > 0.0);
+        }
+    }
+}
+
+/// Golden snapshot of a genuinely pipelined gpt2_small run: 2 balanced
+/// stages, depth 2, on the headline type-A 4x4 HBM preset. Pins the
+/// steady engine's period, energy split and bottleneck attribution
+/// against silent drift.
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "release-only: full gpt2_small steady DES run (the debug \
+              build cross-checks every event against the max-min oracle)"
+)]
+fn gpt2_small_steady_summary_matches_golden() {
+    use mcmcomm::workload::models::gpt2_small;
+    let plat = Platform::headline();
+    let wl = gpt2_small(1);
+    let plan =
+        StagePlan::balanced(&plat, &wl, 2, 2).expect("2-stage gpt2 plan");
+    let r = simulate_steady(
+        &plat,
+        &wl,
+        &plan,
+        OptFlags::ALL,
+        &SteadyConfig::default(),
+    )
+    .expect("gpt2_small pipelined steady sim");
+
+    // ---- structural pins (independent of the snapshot file).
+    assert!(r.period_ns.is_finite() && r.period_ns > 0.0);
+    assert!(r.first_batch_ns > 0.0);
+    assert_eq!(r.stages.len(), 2);
+    assert!(r.energy_per_sample.total_pj() > 0.0);
+    assert!(r.bottleneck_link.is_some());
+
+    // ---- byte-exact snapshot.
+    check_golden(&r.summary(), &golden_path());
+}
