@@ -247,6 +247,22 @@ fn main() {
         black_box(evaluate(&plat, &wl, &alloc, OptFlags::ALL).latency_ns);
     }));
 
+    // Plan-certifier runtime (non-gating): one full structural +
+    // route/capacity certification of the same binding. Lands in the
+    // JSON for trend-watching; deliberately not in RATCHET_FLOORS.
+    stats.push(bench("certify/alexnet_4x4", Duration::from_secs(2), || {
+        black_box(
+            mcmcomm::engine::certify_allocation(
+                &plat,
+                &wl,
+                &alloc,
+                OptFlags::ALL,
+            )
+            .expect("uniform binding certifies")
+            .total_bytes,
+        );
+    }));
+
     // Scratch-reuse form: identical math, zero allocations once warm.
     let mut scratch = EvalScratch::default();
     let mut out = CostBreakdown::default();

@@ -215,6 +215,23 @@ impl<'a> Executor<'a> {
         let modeled = crate::engine::modeled_breakdown(
             self.plat, self.wl, self.alloc, self.flags,
         );
+        // Verification also runs the standalone plan certifier: an
+        // executor must never report numbers for a binding whose
+        // routes/capacities don't certify on the link graph.
+        if verify {
+            if let Err(violations) = crate::engine::certify_allocation(
+                self.plat, self.wl, self.alloc, self.flags,
+            ) {
+                crate::bail!(
+                    "plan failed certification before execution: {}",
+                    violations
+                        .iter()
+                        .map(|v| v.to_string())
+                        .collect::<Vec<_>>()
+                        .join("; ")
+                );
+            }
+        }
         // The DES cross-check rides the verification path only (serve
         // batches call `run(.., false)` in a hot loop).
         let simulated_ns = if verify {

@@ -1,0 +1,622 @@
+//! Standalone plan certifier (ROADMAP item 5): a model-independent
+//! feasibility checker for any `(Platform, Workload, Allocation,
+//! OptFlags)` binding, in the spirit of SCAR's `validate_solution`.
+//!
+//! The certifier shares **no code with the analytical evaluator**
+//! (`cost::evaluator` is never called): it re-derives every
+//! communication route directly from the [`LinkGraph`] and re-counts
+//! bytes from the workload dims, so a bug in the evaluator (or in a
+//! scheduler that games it) cannot silently certify itself. The only
+//! shared arithmetic is [`crate::redistribution::step3_boundary_bytes`],
+//! which is the declared single source of truth for the step-3 exchange
+//! in *both* the closed form and the DES lowering — reusing it here is
+//! what lets the certificate's per-link bounds provably dominate the
+//! simulator's per-link byte counters.
+//!
+//! # Checks (violation taxonomy)
+//!
+//! * **Structural / ordering** — allocation arity matches the op and
+//!   edge counts ([`Violation::OrphanedOp`]); every dataflow edge runs
+//!   forward in the stored topological order
+//!   ([`Violation::DependencyInversion`]); no duplicated `(src, dst)`
+//!   pair, i.e. no silent multicast of one producer tensor over two
+//!   edges ([`Violation::MulticastEdge`]).
+//! * **On-grid partitions** — per-op `px`/`py` arities equal the grid
+//!   dims, sums equal `M`/`N`, and every collection column indexes a
+//!   real grid column ([`Violation::OffGridPartition`]).
+//! * **Memory reachability** — the graph carries at least one memory
+//!   node, every platform attachment appears as a `Node::Memory` at the
+//!   expected id with the expected attach position, and every
+//!   memory↔chiplet route the plan needs actually exists
+//!   ([`Violation::UnreachableMemory`]).
+//! * **Capacity** — every link the plan puts bytes on has a finite,
+//!   positive capacity, and the accumulated per-link byte bound is
+//!   finite ([`Violation::CapacityOverflow`]).
+//!
+//! # The certificate
+//!
+//! On success the certifier returns a [`Certificate`] whose
+//! `link_bound[l]` is a **conservative upper bound** on the bytes the
+//! plan-level DES ([`crate::netsim::sim`]) can push over link `l` in
+//! one batch, in any [`crate::netsim::SimMode`]. Conservatism comes
+//! from charging *both* sides of every adaptive decision the DES may
+//! take: a redistribution-legal edge contributes its full 3-step
+//! on-package flows *and* the consumer's activation load, and every
+//! producer is charged its store — so whichever branch the simulator's
+//! `edge_decision` adopts, its bytes are below the bound. Unicast is
+//! by construction: every byte is charged along its full single XY
+//! route, never shared.
+
+use std::fmt;
+
+use crate::cost::evaluator::OptFlags;
+use crate::partition::Allocation;
+use crate::platform::Platform;
+use crate::topology::links::{LinkGraph, Node};
+use crate::topology::Pos;
+use crate::workload::Workload;
+
+use super::plan::Plan;
+
+/// One structured infeasibility diagnostic, naming the op / edge / link
+/// it implicates.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Violation {
+    /// A partition is off the chiplet grid: wrong `px`/`py` arity,
+    /// row/column sums not equal to the op's `M`/`N`, or a collection
+    /// column outside the grid.
+    OffGridPartition { op: usize, detail: String },
+    /// A dataflow edge runs backwards (or self-loops) against the
+    /// stored topological order.
+    DependencyInversion { edge: usize, src: usize, dst: usize },
+    /// Two edges carry the same `(src, dst)` pair — the same producer
+    /// tensor would be sent twice (multicast is not allowed).
+    MulticastEdge { edge: usize, src: usize, dst: usize },
+    /// An op (or edge endpoint) has no partition / no collection
+    /// column covering it — the allocation arity does not match the
+    /// workload graph.
+    OrphanedOp { op: usize, detail: String },
+    /// A link the plan needs is overloaded: zero / non-finite capacity
+    /// under a positive byte bound, or a non-finite byte bound.
+    CapacityOverflow { link: usize, bytes: f64, capacity: f64 },
+    /// A memory attachment the plan loads from / stores to is missing
+    /// from the link graph, or a required route does not exist.
+    UnreachableMemory { detail: String },
+}
+
+impl Violation {
+    /// Short kind tag (stable across detail-message wording), used by
+    /// the corruption-driven property suite.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Violation::OffGridPartition { .. } => "off-grid-partition",
+            Violation::DependencyInversion { .. } => "dependency-inversion",
+            Violation::MulticastEdge { .. } => "multicast-edge",
+            Violation::OrphanedOp { .. } => "orphaned-op",
+            Violation::CapacityOverflow { .. } => "capacity-overflow",
+            Violation::UnreachableMemory { .. } => "unreachable-memory",
+        }
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Violation::OffGridPartition { op, detail } => {
+                write!(f, "off-grid partition for op {op}: {detail}")
+            }
+            Violation::DependencyInversion { edge, src, dst } => write!(
+                f,
+                "dependency inversion on edge {edge}: {src} -> {dst} \
+                 violates topological order"
+            ),
+            Violation::MulticastEdge { edge, src, dst } => write!(
+                f,
+                "multicast: edge {edge} duplicates the ({src}, {dst}) \
+                 dataflow pair"
+            ),
+            Violation::OrphanedOp { op, detail } => {
+                write!(f, "orphaned op {op}: {detail}")
+            }
+            Violation::CapacityOverflow { link, bytes, capacity } => write!(
+                f,
+                "capacity overflow on link {link}: {bytes:.1} bytes \
+                 bound over capacity {capacity} GB/s"
+            ),
+            Violation::UnreachableMemory { detail } => {
+                write!(f, "unreachable memory: {detail}")
+            }
+        }
+    }
+}
+
+/// Proof object of a successful certification: the conservative
+/// per-link byte bounds plus summary counters. `link_bound[l]`
+/// dominates the DES's `link_bytes[l]` for the same binding in every
+/// simulation mode (the cross-check in `netsim::conformance` holds the
+/// two against each other on every simulated plan).
+#[derive(Debug, Clone)]
+pub struct Certificate {
+    /// Upper bound on bytes crossing each link of the plan's
+    /// [`LinkGraph`] (same link ids as `Platform::link_graph_shared`
+    /// for the plan's diagonal flag).
+    pub link_bound: Vec<f64>,
+    /// Number of point-to-point flows charged into the bounds.
+    pub flows: usize,
+    /// Sum of `link_bound` over all links (byte·hops of the plan).
+    pub total_bytes: f64,
+    /// Stable fingerprint over (platform, workload, bounds) — two
+    /// identical bindings certify to the same fingerprint.
+    pub fingerprint: u64,
+}
+
+impl Plan {
+    /// Certify this plan against `plat` / `wl`: structural checks plus
+    /// route/capacity accounting re-derived from the link graph. See
+    /// the module docs for the violation taxonomy.
+    pub fn validate(
+        &self,
+        plat: &Platform,
+        wl: &Workload,
+    ) -> Result<Certificate, Vec<Violation>> {
+        certify_allocation(plat, wl, &self.alloc, self.flags)
+    }
+}
+
+/// Certify an allocation under explicit flags, building the link graph
+/// from the platform (the common entry point; [`Plan::validate`] and
+/// the CLI `validate` subcommand delegate here).
+pub fn certify_allocation(
+    plat: &Platform,
+    wl: &Workload,
+    alloc: &Allocation,
+    flags: OptFlags,
+) -> Result<Certificate, Vec<Violation>> {
+    let graph = plat.link_graph_shared(flags.diagonal);
+    certify_on_graph(plat, wl, alloc, flags, &graph)
+}
+
+/// [`certify_allocation`] against a caller-provided graph. This is the
+/// low-level surface the corruption suite drives: platform validation
+/// refuses to *construct* degenerate packages, so capacity-overflow and
+/// missing-memory corruption is injected by mutating a built
+/// [`LinkGraph`] (its `links` / capacities are public) and certifying
+/// against it directly.
+pub fn certify_on_graph(
+    plat: &Platform,
+    wl: &Workload,
+    alloc: &Allocation,
+    flags: OptFlags,
+    graph: &LinkGraph,
+) -> Result<Certificate, Vec<Violation>> {
+    let mut violations = Vec::new();
+    let n_ops = wl.ops.len();
+    let n_edges = wl.edges.len();
+
+    // ---- structural: allocation arity covers the graph.
+    if alloc.parts.len() != n_ops {
+        violations.push(Violation::OrphanedOp {
+            op: alloc.parts.len().min(n_ops),
+            detail: format!(
+                "{} partitions for {} ops",
+                alloc.parts.len(),
+                n_ops
+            ),
+        });
+    }
+    if alloc.collect_cols.len() != n_edges {
+        violations.push(Violation::OrphanedOp {
+            op: 0,
+            detail: format!(
+                "{} collection columns for {} edges",
+                alloc.collect_cols.len(),
+                n_edges
+            ),
+        });
+    }
+
+    // ---- ordering + unicast over the dataflow edges.
+    for (e, edge) in wl.edges.iter().enumerate() {
+        if edge.src >= n_ops || edge.dst >= n_ops {
+            violations.push(Violation::OrphanedOp {
+                op: edge.src.max(edge.dst),
+                detail: format!(
+                    "edge {e} ({} -> {}) references a nonexistent op \
+                     (workload has {n_ops})",
+                    edge.src, edge.dst
+                ),
+            });
+            continue;
+        }
+        if edge.src >= edge.dst {
+            violations.push(Violation::DependencyInversion {
+                edge: e,
+                src: edge.src,
+                dst: edge.dst,
+            });
+        }
+        for (e2, other) in wl.edges.iter().enumerate().skip(e + 1) {
+            if (other.src, other.dst) == (edge.src, edge.dst) {
+                violations.push(Violation::MulticastEdge {
+                    edge: e2,
+                    src: edge.src,
+                    dst: edge.dst,
+                });
+            }
+        }
+    }
+
+    // ---- on-grid partitions.
+    let (xd, yd) = (plat.xdim, plat.ydim);
+    for (i, part) in alloc.parts.iter().enumerate().take(n_ops) {
+        if part.px.len() != xd || part.py.len() != yd {
+            violations.push(Violation::OffGridPartition {
+                op: i,
+                detail: format!(
+                    "partition arity {}x{} vs grid {xd}x{yd}",
+                    part.px.len(),
+                    part.py.len()
+                ),
+            });
+            continue;
+        }
+        let op = &wl.ops[i];
+        let sx: usize = part.px.iter().sum();
+        let sy: usize = part.py.iter().sum();
+        if sx != op.m {
+            violations.push(Violation::OffGridPartition {
+                op: i,
+                detail: format!(
+                    "sum(px)={sx} != M={} for '{}'",
+                    op.m, op.name
+                ),
+            });
+        }
+        if sy != op.n {
+            violations.push(Violation::OffGridPartition {
+                op: i,
+                detail: format!(
+                    "sum(py)={sy} != N={} for '{}'",
+                    op.n, op.name
+                ),
+            });
+        }
+    }
+    for (e, &c) in alloc.collect_cols.iter().enumerate().take(n_edges) {
+        if c >= yd {
+            let op = wl.edges.get(e).map_or(0, |edge| edge.src);
+            violations.push(Violation::OffGridPartition {
+                op,
+                detail: format!(
+                    "collection column {c} of edge {e} outside the \
+                     {yd}-column grid"
+                ),
+            });
+        }
+    }
+
+    // ---- memory-attachment reachability.
+    let n_chiplets = plat.num_chiplets();
+    let atts = &plat.spec().attachments;
+    if graph.xdim != xd || graph.ydim != yd {
+        violations.push(Violation::UnreachableMemory {
+            detail: format!(
+                "link graph is {}x{}, platform is {xd}x{yd}",
+                graph.xdim, graph.ydim
+            ),
+        });
+    }
+    if !graph.nodes.iter().any(|n| matches!(n, Node::Memory { .. })) {
+        violations.push(Violation::UnreachableMemory {
+            detail: "link graph has no memory node".to_string(),
+        });
+    } else {
+        for (a, att) in atts.iter().enumerate() {
+            match graph.nodes.get(n_chiplets + a) {
+                Some(Node::Memory { attach }) if *attach == att.pos => {}
+                other => violations.push(Violation::UnreachableMemory {
+                    detail: format!(
+                        "attachment {a} at ({}, {}) expected a memory \
+                         node at graph id {}, found {other:?}",
+                        att.pos.row,
+                        att.pos.col,
+                        n_chiplets + a
+                    ),
+                }),
+            }
+        }
+    }
+
+    // Structural violations make the flow derivation meaningless (and
+    // often panicky) — report everything found so far.
+    if !violations.is_empty() {
+        return Err(violations);
+    }
+
+    // ---- flow derivation: conservative per-link byte bounds.
+    let mut link_bound = vec![0.0f64; graph.links.len()];
+    let mut flows = 0usize;
+    let chiplet = |p: Pos| p.row * yd + p.col;
+    let att_node = |a: usize| n_chiplets + a;
+    let mut route_err: Vec<Violation> = Vec::new();
+    let charge = |src: usize,
+                      dst: usize,
+                      bytes: f64,
+                      what: &str,
+                      bounds: &mut [f64],
+                      flows: &mut usize,
+                      errs: &mut Vec<Violation>| {
+        if bytes <= 0.0 {
+            return;
+        }
+        match graph.route(src, dst) {
+            Ok(links) => {
+                for l in links {
+                    bounds[l] += bytes;
+                }
+                *flows += 1;
+            }
+            Err(e) => errs.push(Violation::UnreachableMemory {
+                detail: format!("no route for {what}: {e:#}"),
+            }),
+        }
+    };
+
+    let (mut in_edge, mut out_edge) = (Vec::new(), Vec::new());
+    wl.sole_edges_into(&mut in_edge, &mut out_edge);
+
+    for (i, op) in wl.ops.iter().enumerate() {
+        let part = &alloc.parts[i];
+
+        // Off-chip load: weights always, activations conservatively
+        // always (the DES drops them only when redistribution is
+        // adopted). Charged in full on every attachment's memory link —
+        // dominates the DES's demand-apportioned shares.
+        let off_unique = plat.bytes(op.k * op.n) + plat.bytes(op.m * op.k);
+        for (a, att) in atts.iter().enumerate() {
+            charge(
+                att_node(a),
+                chiplet(att.pos),
+                off_unique,
+                &format!("load of op {i} '{}' from attachment {a}", op.name),
+                &mut link_bound,
+                &mut flows,
+                &mut route_err,
+            );
+        }
+
+        // On-package distribution: each chiplet pulls its operand slice
+        // from its serving global attach point.
+        for p in plat.positions() {
+            let d = plat.bytes(op.k * part.py[p.col])
+                + plat.bytes(part.px[p.row] * op.k);
+            charge(
+                chiplet(plat.nearest_global(p)),
+                chiplet(p),
+                d,
+                &format!("distribution of op {i} '{}'", op.name),
+                &mut link_bound,
+                &mut flows,
+                &mut route_err,
+            );
+        }
+
+        // Writeback collection + off-chip store: conservatively always
+        // charged (the DES skips the store only when the consumer's
+        // redistribution is adopted).
+        for p in plat.positions() {
+            let b = plat.bytes(part.px[p.row] * part.py[p.col]);
+            charge(
+                chiplet(p),
+                chiplet(plat.nearest_global(p)),
+                b,
+                &format!("writeback of op {i} '{}'", op.name),
+                &mut link_bound,
+                &mut flows,
+                &mut route_err,
+            );
+        }
+        let out_total = plat.bytes(op.m * op.n);
+        for (a, att) in atts.iter().enumerate() {
+            charge(
+                chiplet(att.pos),
+                att_node(a),
+                out_total,
+                &format!("store of op {i} '{}' to attachment {a}", op.name),
+                &mut link_bound,
+                &mut flows,
+                &mut route_err,
+            );
+        }
+    }
+
+    // §5.2 redistribution: every *legal* edge is charged its full
+    // 3-step flows, whether or not the simulator's adaptive decision
+    // adopts it (the activation load above covers the other branch).
+    if flags.redistribution {
+        for (e, edge) in wl.edges.iter().enumerate() {
+            if !wl.edge_redistributable_with(e, &in_edge, &out_edge) {
+                continue;
+            }
+            let p_op = &wl.ops[edge.src];
+            let p_part = &alloc.parts[edge.src];
+            let part = &alloc.parts[edge.dst];
+            let c_star = alloc.collect_cols[e];
+            // Step 1: row reduction toward c*.
+            for x in 0..xd {
+                for y in 0..yd {
+                    if y == c_star {
+                        continue;
+                    }
+                    charge(
+                        chiplet(Pos::new(x, y)),
+                        chiplet(Pos::new(x, c_star)),
+                        plat.bytes(p_part.px[x] * p_part.py[y]),
+                        &format!("redistribution step 1 of edge {e}"),
+                        &mut link_bound,
+                        &mut flows,
+                        &mut route_err,
+                    );
+                }
+            }
+            // Step 2: wormhole row broadcast (both directions).
+            for x in 0..xd {
+                let row_bytes = plat.bytes(p_part.px[x] * p_op.n);
+                for far in [0, yd - 1] {
+                    if far == c_star {
+                        continue;
+                    }
+                    charge(
+                        chiplet(Pos::new(x, c_star)),
+                        chiplet(Pos::new(x, far)),
+                        row_bytes,
+                        &format!("redistribution step 2 of edge {e}"),
+                        &mut link_bound,
+                        &mut flows,
+                        &mut route_err,
+                    );
+                }
+            }
+            // Step 3: boundary exchange (shared single source of truth
+            // with both the closed form and the DES lowering).
+            let bnd = crate::redistribution::step3_boundary_bytes(
+                plat, p_op, p_part, part,
+            );
+            for (b, &bytes) in bnd.iter().enumerate() {
+                charge(
+                    chiplet(Pos::new(b, c_star)),
+                    chiplet(Pos::new(b + 1, c_star)),
+                    bytes,
+                    &format!("redistribution step 3 of edge {e}"),
+                    &mut link_bound,
+                    &mut flows,
+                    &mut route_err,
+                );
+            }
+        }
+    }
+    violations.extend(route_err);
+
+    // ---- capacity: every loaded link must be able to drain.
+    for (l, link) in graph.links.iter().enumerate() {
+        let b = link_bound[l];
+        if b > 0.0 && (!link.capacity.is_finite() || link.capacity <= 0.0) {
+            violations.push(Violation::CapacityOverflow {
+                link: l,
+                bytes: b,
+                capacity: link.capacity,
+            });
+        }
+        if !b.is_finite() {
+            violations.push(Violation::CapacityOverflow {
+                link: l,
+                bytes: b,
+                capacity: link.capacity,
+            });
+        }
+    }
+
+    if !violations.is_empty() {
+        return Err(violations);
+    }
+
+    let total_bytes: f64 = link_bound.iter().sum();
+    let mut h = crate::util::hash::Fnv1a::new();
+    h.write_u64(plat.fingerprint());
+    h.write_u64(wl.fingerprint());
+    h.write_len(link_bound.len());
+    for &b in &link_bound {
+        h.write_u64(b.to_bits());
+    }
+    Ok(Certificate {
+        link_bound,
+        flows,
+        total_bytes,
+        fingerprint: h.finish(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::uniform_allocation;
+    use crate::workload::models::alexnet;
+
+    #[test]
+    fn uniform_alexnet_certifies() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let alloc = uniform_allocation(&plat, &wl);
+        let cert = certify_allocation(&plat, &wl, &alloc, OptFlags::ALL)
+            .expect("uniform allocation certifies");
+        assert!(cert.total_bytes > 0.0 && cert.flows > 0);
+        assert_eq!(
+            cert.link_bound.len(),
+            plat.link_graph_shared(true).links.len()
+        );
+        // Deterministic proof object.
+        let again = certify_allocation(&plat, &wl, &alloc, OptFlags::ALL)
+            .unwrap();
+        assert_eq!(cert.fingerprint, again.fingerprint);
+    }
+
+    #[test]
+    fn off_grid_sum_rejected() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let mut alloc = uniform_allocation(&plat, &wl);
+        alloc.parts[2].px[0] += 1;
+        let errs = certify_allocation(&plat, &wl, &alloc, OptFlags::ALL)
+            .unwrap_err();
+        assert!(errs.iter().any(|v| matches!(
+            v,
+            Violation::OffGridPartition { op: 2, .. }
+        )));
+    }
+
+    #[test]
+    fn arity_mismatch_is_orphaned_op() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let mut alloc = uniform_allocation(&plat, &wl);
+        alloc.parts.pop();
+        let errs = certify_allocation(&plat, &wl, &alloc, OptFlags::ALL)
+            .unwrap_err();
+        assert!(errs
+            .iter()
+            .any(|v| matches!(v, Violation::OrphanedOp { .. })));
+    }
+
+    #[test]
+    fn corrupted_capacity_rejected() {
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let alloc = uniform_allocation(&plat, &wl);
+        let mut graph = (*plat.link_graph_shared(true)).clone();
+        // Saturate the first memory link (from the memory node).
+        let mem = plat.num_chiplets();
+        let l = graph
+            .links
+            .iter()
+            .position(|lk| lk.from == mem)
+            .expect("memory link");
+        graph.links[l].capacity = 0.0;
+        let errs =
+            certify_on_graph(&plat, &wl, &alloc, OptFlags::ALL, &graph)
+                .unwrap_err();
+        assert!(errs.iter().any(
+            |v| matches!(v, Violation::CapacityOverflow { link, .. } if *link == l)
+        ));
+    }
+
+    #[test]
+    fn violation_kinds_are_stable() {
+        let v = Violation::CapacityOverflow {
+            link: 3,
+            bytes: 10.0,
+            capacity: 0.0,
+        };
+        assert_eq!(v.kind(), "capacity-overflow");
+        assert!(v.to_string().contains("link 3"));
+    }
+}

@@ -11,8 +11,9 @@
 //! * [`Report`] — full cost breakdown + per-op diagnostics + EDP.
 //!
 //! One verb: [`Scheduler::schedule`], implemented by the five Table-3
-//! schemes in [`schedulers`] and discovered through
-//! [`SchedulerRegistry`].
+//! schemes plus the task-grained ILP in [`schedulers`] and discovered
+//! through [`SchedulerRegistry`]. Any plan from any scheduler can be
+//! mechanically certified by [`Plan::validate`] (module [`certify`]).
 //!
 //! ```no_run
 //! use mcmcomm::engine::{Engine, Scenario, SchedulerRegistry};
@@ -27,21 +28,24 @@
 //! println!("latency {:.3} ms", report.latency_ns() / 1e6);
 //! ```
 
+pub mod certify;
 mod plan;
 mod registry;
 mod report;
 mod scenario;
 pub mod scheduler;
 
+pub use certify::{certify_allocation, certify_on_graph, Certificate,
+                  Violation};
 pub use plan::Plan;
 pub use registry::SchedulerRegistry;
 pub use report::{ModelTotal, Report};
 pub use scenario::{Scenario, ScenarioBuilder};
 pub use scheduler::Scheduler;
 
-/// The five Table-3 scheduler implementations.
+/// The Table-3 scheduler implementations plus the task-grained ILP.
 pub mod schedulers {
-    pub use super::scheduler::{Baseline, Ga, Greedy, Miqp, SimbaLike};
+    pub use super::scheduler::{Baseline, Ga, Greedy, Ilp, Miqp, SimbaLike};
 }
 
 pub(crate) use report::modeled_breakdown;

@@ -5,7 +5,8 @@ use std::time::Duration;
 
 use crate::opt::ga::GaParams;
 
-use super::scheduler::{Baseline, Ga, Greedy, Miqp, Scheduler, SimbaLike};
+use super::scheduler::{Baseline, Ga, Greedy, Ilp, Miqp, Scheduler,
+                       SimbaLike};
 use super::EngineError;
 
 /// An ordered collection of schedulers (registration order is iteration
@@ -19,7 +20,9 @@ impl SchedulerRegistry {
         SchedulerRegistry { entries: Vec::new() }
     }
 
-    /// All five Table-3 schemes with explicit solver knobs.
+    /// The five Table-3 schemes plus the task-grained ILP, with
+    /// explicit solver knobs (the ILP shares the MIQP's anytime
+    /// budget).
     pub fn with_params(
         ga: GaParams,
         miqp_budget: Duration,
@@ -31,6 +34,7 @@ impl SchedulerRegistry {
         r.register(Box::new(Greedy));
         r.register(Box::new(Ga::new(ga, seed)));
         r.register(Box::new(Miqp::new(miqp_budget, seed)));
+        r.register(Box::new(Ilp::new(miqp_budget, seed)));
         r
     }
 
@@ -108,9 +112,9 @@ mod tests {
         let r = SchedulerRegistry::standard(42);
         assert_eq!(
             r.keys(),
-            vec!["baseline", "simba", "greedy", "ga", "miqp"]
+            vec!["baseline", "simba", "greedy", "ga", "miqp", "ilp"]
         );
-        for key in ["baseline", "simba", "greedy", "ga", "miqp"] {
+        for key in ["baseline", "simba", "greedy", "ga", "miqp", "ilp"] {
             assert!(r.get(key).is_some(), "missing {key}");
         }
     }
@@ -137,6 +141,6 @@ mod tests {
         use crate::engine::schedulers::Ga;
         let mut r = SchedulerRegistry::standard(1);
         r.register(Box::new(Ga::seeded(99)));
-        assert_eq!(r.len(), 5);
+        assert_eq!(r.len(), 6);
     }
 }

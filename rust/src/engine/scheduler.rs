@@ -1,4 +1,5 @@
-//! The [`Scheduler`] trait and the five Table-3 implementations.
+//! The [`Scheduler`] trait, the five Table-3 implementations, and the
+//! task-grained ILP.
 //!
 //! Callers iterate `dyn Scheduler`s (usually from a
 //! [`super::SchedulerRegistry`]) instead of matching a scheme enum; new
@@ -8,7 +9,7 @@ use std::time::Duration;
 
 use crate::cost::evaluator::OptFlags;
 use crate::opt::ga::GaParams;
-use crate::opt::{ga, greedy, miqp};
+use crate::opt::{ga, greedy, ilp, miqp};
 use crate::partition::{simba_allocation, uniform_allocation};
 
 use super::plan::Plan;
@@ -228,6 +229,61 @@ impl Scheduler for Miqp {
     }
 }
 
+/// MCMComm-ILP: task-grained linear surrogate over the link graph +
+/// branch & bound over the LP relaxation ([`crate::opt::ilp`]),
+/// re-scored on the true evaluator. Beats-or-ties MIQP by construction
+/// (the MIQP decode is in its candidate set). The seed is provenance
+/// only: the solver uses fixed internal seeds, so equal scenarios
+/// produce equal plans across seeds and thread counts.
+#[derive(Debug, Clone)]
+pub struct Ilp {
+    pub budget: Duration,
+    pub seed: u64,
+}
+
+impl Ilp {
+    pub fn new(budget: Duration, seed: u64) -> Self {
+        Ilp { budget, seed }
+    }
+
+    pub fn seeded(seed: u64) -> Self {
+        Ilp { budget: Duration::from_secs(20), seed }
+    }
+}
+
+impl Scheduler for Ilp {
+    fn name(&self) -> &str {
+        "MCMComm-ILP"
+    }
+
+    fn key(&self) -> &str {
+        "ilp"
+    }
+
+    fn effective_flags(&self, requested: OptFlags) -> OptFlags {
+        requested
+    }
+
+    fn schedule(&self, scenario: &Scenario) -> Result<Plan, EngineError> {
+        let flags = self.effective_flags(scenario.flags());
+        let r = ilp::optimize(
+            scenario.platform(),
+            scenario.workload(),
+            flags,
+            scenario.objective(),
+            self.budget,
+            self.seed,
+        );
+        Ok(scenario.plan_scored(
+            self.key(),
+            r.alloc,
+            flags,
+            self.seed,
+            r.objective_value,
+        ))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -244,6 +300,10 @@ mod tests {
         );
         assert_eq!(
             Miqp::seeded(1).effective_flags(OptFlags::ALL),
+            OptFlags::ALL
+        );
+        assert_eq!(
+            Ilp::seeded(1).effective_flags(OptFlags::ALL),
             OptFlags::ALL
         );
     }

@@ -216,6 +216,6 @@ mod tests {
         let full = EvalConfig { quick: false, seed: 1 };
         assert!(quick.ga_params().generations < full.ga_params().generations);
         assert!(quick.miqp_budget() < full.miqp_budget());
-        assert_eq!(quick.registry().len(), 5);
+        assert_eq!(quick.registry().len(), 6);
     }
 }

@@ -5,6 +5,9 @@
 //!   optimize   run one scheduler on one workload/config and report
 //!   simulate   execute a plan on the discrete-event simulator and
 //!              compare against the analytical model (conformance)
+//!   validate   run the standalone plan certifier on a scheduled plan
+//!              (capacity / ordering / unicast / partition / memory
+//!              reachability checks, independent of the cost model)
 //!   netsim     run the Figure-3 congestion study with custom knobs
 //!   run-e2e    execute a workload with real numerics end to end
 //!   serve      virtual-time serving study: open-loop load, continuous
@@ -38,7 +41,11 @@ USAGE: mcmcomm <subcommand> [--options]
 
   figures   --fig <3|8|9|10|11|12|13|solver> | --all   [--full] [--seed N]
   optimize  --model <alexnet|vit|vit_residual|vision_mamba|hydranet|hydranet_branched|gpt2_small|gpt2_large|multi>
-            [--scheme <baseline|simba|greedy|ga|miqp>]
+            [--scheme <baseline|simba|greedy|ga|miqp|ilp>]
+            scheme ilp: task-grained linear scheduler — branch-and-bound
+            over an all-linear surrogate with per-link capacity terms on
+            the link graph; deterministic at any seed/thread count and
+            never worse than miqp's decoded plan on the true objective
             [--type <A|B|C|D>] [--mem <hbm|dram>] [--grid N]
             [--objective <latency|edp|throughput|edp-per-sample>]
             [--platform FILE.json] [--list-platforms]
@@ -55,6 +62,15 @@ USAGE: mcmcomm <subcommand> [--options]
             [--depth D] [--stages K] [--iters N]; reports samples/s and
             energy-per-sample
   platforms --validate FILE.json | --validate-dir DIR | --list
+  validate  [--model NAME] [--scheme NAME] [--type T] [--mem M] [--grid N]
+            [--platform FILE.json] [--dir DIR] [--batch N] [--seed N]
+            schedule a plan, then run the standalone certifier on it:
+            routes are re-derived from the link graph and checked for
+            capacity overflow, dependency inversion, multicast edges,
+            off-grid partitions and unreachable memory — independent of
+            the analytical cost model. --dir certifies one plan per
+            platform JSON in DIR (CI smoke: validate --dir
+            examples/platforms)
   simulate  --model NAME [--scheme NAME] [--type T] [--mem M] [--grid N]
             [--platform FILE.json] [--batch N] [--seed N] [--overlap]
             [--hop-latency NS] [--profile]
@@ -486,6 +502,101 @@ fn cmd_platforms(mut args: Args) -> Result<()> {
         );
     }
     println!("validated {} platform file(s)", files.len());
+    Ok(())
+}
+
+/// `validate`: schedule a plan and run the standalone certifier
+/// (`engine::certify`) on it — structural checks plus per-link capacity
+/// bounds re-derived from the `LinkGraph`, independent of the
+/// analytical cost model. With `--dir`, certifies one plan per platform
+/// JSON in the directory (the CI smoke path).
+fn cmd_validate(mut args: Args) -> Result<()> {
+    let model = args.get_or("model", "alexnet");
+    let scheme = args.get_or("scheme", "baseline");
+    let ty = parse_type(&args.get_or("type", "A"))?;
+    let mem = parse_mem(&args.get_or("mem", "hbm"))?;
+    let grid = args.get_usize("grid", 4).map_err(Error::msg)?;
+    let batch = args.get_usize("batch", 1).map_err(Error::msg)?;
+    let seed = args.get_usize("seed", 42).map_err(Error::msg)? as u64;
+    let platform_file = args.get("platform");
+    let dir = args.get("dir");
+    args.finish().map_err(Error::msg)?;
+
+    // Tiny solver budgets: the point is certifying whatever plan comes
+    // out, not plan quality — the smoke path must stay seconds-class.
+    let registry = SchedulerRegistry::with_params(
+        GaParams {
+            population: 8,
+            generations: 6,
+            threads: 1,
+            seed,
+            ..Default::default()
+        },
+        Duration::from_secs(2),
+        seed,
+    );
+    let scheduler = registry.require(&scheme)?;
+
+    let mut plats: Vec<Platform> = Vec::new();
+    if let Some(d) = &dir {
+        let mut entries: Vec<_> = std::fs::read_dir(d)
+            .map_err(|e| Error::msg(format!("reading {d}: {e}")))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "json"))
+            .collect();
+        entries.sort();
+        ensure!(!entries.is_empty(), "no *.json platform files in {d}");
+        for path in &entries {
+            plats.push(Platform::load(path)?);
+        }
+    } else if let Some(path) = &platform_file {
+        plats.push(Platform::load(Path::new(path))?);
+    } else {
+        plats.push(Platform::preset(ty, mem, grid));
+    }
+
+    let wl = parse_model(&model, batch)?;
+    let mut rejected = 0usize;
+    let n_plats = plats.len();
+    for plat in plats {
+        let name = plat.name.clone();
+        let scenario = Scenario::builder()
+            .platform(plat)
+            .workload(wl.clone())
+            .build()?;
+        let engine = Engine::new(scenario);
+        let planned = engine.schedule_with(scheduler)?;
+        let plan = planned.plan();
+        match plan.validate(
+            engine.scenario().platform(),
+            engine.scenario().workload(),
+        ) {
+            Ok(cert) => println!(
+                "OK   {:<24} '{}' plan: {} flows, {:.3e} byte-hops, \
+                 fingerprint {:016x}",
+                name, plan.scheduler, cert.flows, cert.total_bytes,
+                cert.fingerprint
+            ),
+            Err(violations) => {
+                rejected += 1;
+                println!(
+                    "FAIL {:<24} '{}' plan rejected ({} violation(s)):",
+                    name,
+                    plan.scheduler,
+                    violations.len()
+                );
+                for v in &violations {
+                    println!("  [{}] {v}", v.kind());
+                }
+            }
+        }
+    }
+    ensure!(
+        rejected == 0,
+        "certifier rejected {rejected} of {n_plats} plan(s)"
+    );
+    println!("certified {n_plats} plan(s) for model '{model}'");
     Ok(())
 }
 
@@ -922,6 +1033,7 @@ fn main() {
         "figures" => cmd_figures(args),
         "optimize" => cmd_optimize(args),
         "platforms" => cmd_platforms(args),
+        "validate" => cmd_validate(args),
         "simulate" => cmd_simulate(args),
         "netsim" => cmd_netsim(args),
         "run-e2e" => cmd_run_e2e(args),

@@ -26,7 +26,8 @@
 
 use std::path::Path;
 
-use crate::engine::{Plan, Scenario};
+use crate::bail;
+use crate::engine::{certify_allocation, Plan, Scenario};
 use crate::util::error::{Context, Result};
 use crate::util::math::geomean;
 
@@ -107,12 +108,20 @@ impl Conformance {
 
 /// Simulate a scheduled plan in conformance mode (the
 /// [`Scenario::simulate`] backend).
+///
+/// Every simulated plan is also run through the standalone certifier
+/// ([`certify_allocation`]), and the DES's per-link byte counters are
+/// held against the certificate's conservative bounds: the certifier
+/// charges both sides of every adaptive decision, so
+/// `link_bytes[l] <= link_bound[l]` must hold on every link in every
+/// [`super::SimMode`] — a violation means the certifier's accounting
+/// and the lowering have drifted apart.
 pub fn simulate_scenario_plan(
     scenario: &Scenario,
     plan: &Plan,
     cfg: &SimConfig,
 ) -> Result<SimReport> {
-    simulate_plan(
+    let sim = simulate_plan(
         scenario.platform(),
         scenario.workload(),
         &plan.alloc,
@@ -125,7 +134,49 @@ pub fn simulate_scenario_plan(
             plan.scheduler,
             scenario.label()
         )
-    })
+    })?;
+    let cert = match certify_allocation(
+        scenario.platform(),
+        scenario.workload(),
+        &plan.alloc,
+        plan.flags,
+    ) {
+        Ok(c) => c,
+        Err(violations) => {
+            let list: Vec<String> =
+                violations.iter().map(|v| v.to_string()).collect();
+            bail!(
+                "plan of scheduler '{}' on {} failed certification: {}",
+                plan.scheduler,
+                scenario.label(),
+                list.join("; ")
+            );
+        }
+    };
+    if cert.link_bound.len() != sim.link_bytes.len() {
+        bail!(
+            "certificate covers {} links but the simulation graph has {}",
+            cert.link_bound.len(),
+            sim.link_bytes.len()
+        );
+    }
+    for (l, (&bytes, &bound)) in
+        sim.link_bytes.iter().zip(&cert.link_bound).enumerate()
+    {
+        if bytes > bound * 1.000_001 + 1.0 {
+            let link = &sim.graph.links[l];
+            bail!(
+                "DES pushed {bytes:.1} bytes over link {l} \
+                 ({} -> {}) but the certificate bounds it at {bound:.1} \
+                 (scheduler '{}' on {})",
+                link.from,
+                link.to,
+                plan.scheduler,
+                scenario.label()
+            );
+        }
+    }
+    Ok(sim)
 }
 
 /// Run the simulator against the plan's analytical score and grade the

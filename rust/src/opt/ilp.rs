@@ -1,0 +1,656 @@
+//! Task-grained ILP scheduler: assign sub-layer tasks (the per-row /
+//! per-column tile shares of each op) to chiplets under
+//! dependency-timing, per-link-capacity and explicit no-multicast
+//! constraints on the [`LinkGraph`], as a **linear** surrogate solved by
+//! the same zero-dependency branch-and-bound the MIQP uses — B&B over
+//! the LP relaxation instead of the QP relaxation.
+//!
+//! # Formulation
+//!
+//! Variables are the MIQP layout exactly (`px[i][x]`, `py[i][y]` on the
+//! tile lattice, per-op simplex groups), but every objective term is
+//! linear:
+//!
+//! * **Dependency timing** — ops execute in the stored topological
+//!   order (LS schedule), so the objective is the sum over ops of that
+//!   op's stage terms; an edge's redistribution terms land on the
+//!   consumer, after the producer's terms (the linear analog of the
+//!   §6.3.2 synchronization operators).
+//! * **Per-link capacity** — the distribution stage is scored as
+//!   `max over links l of bytes(l) / capacity(l)` where `bytes(l)` sums
+//!   the (linear) demand of every chiplet whose XY route from its
+//!   serving attach point crosses `l` — re-derived from the
+//!   [`LinkGraph`] routes, not from the evaluator's folded hop tables.
+//! * **No multicast** — every byte is charged along its full single
+//!   route in the link terms; nothing is shared between destinations
+//!   (the same unicast discipline the certifier checks).
+//! * Bilinear terms (compute `px·py`, step-1 chunks, writeback) are
+//!   linearized around the uniform point: `px·ȳ + x̄·py − x̄·ȳ`.
+//!   Step-2 and step-3 redistribution are exactly linear already.
+//!
+//! # Beats-or-ties guarantee
+//!
+//! The surrogate is a bound-guidance device, not the score: the final
+//! allocation is the **best of {ILP decode, MIQP decode, uniform}**
+//! under the true evaluator, each optionally polished by a
+//! deterministic single-tile descent. Since the MIQP's own result is in
+//! the candidate set, `ilp` never returns a worse true objective than
+//! `miqp` on the same scenario — the agreement suite pins this on every
+//! 2×2–3×3 grid.
+//!
+//! Determinism: the internal solver seeds are fixed constants (the
+//! caller's seed is provenance only), the search is single-threaded,
+//! and the polish uses fixed scan orders with no wall-clock checks, so
+//! equal scenarios decode to bit-identical allocations across seeds and
+//! thread counts once the solver exhausts its node budget (small
+//! grids).
+
+use std::time::Duration;
+
+use crate::cost::evaluator::{evaluate, Objective, OptFlags};
+use crate::partition::{dim_bounds, uniform_allocation, Allocation, Partition};
+use crate::platform::Platform;
+use crate::topology::Pos;
+use crate::workload::Workload;
+
+use super::miqp;
+use super::miqp::expr::{MaxTerm, QuadExpr};
+use super::miqp::model::Model;
+
+/// Result of an ILP optimization run.
+#[derive(Debug, Clone)]
+pub struct IlpResult {
+    pub alloc: Allocation,
+    /// True-evaluator objective of the returned allocation.
+    pub objective_value: f64,
+    /// Linear-surrogate value at the solver's incumbent.
+    pub surrogate_value: f64,
+    pub nodes_explored: usize,
+}
+
+/// Fixed internal solver seed: the ILP ignores the caller's seed so
+/// equal scenarios solve identically regardless of engine seeding.
+const ILP_SOLVE_SEED: u64 = 0x11f;
+
+/// Polish only below this variable count — the descent re-scores every
+/// candidate move on the true evaluator, which is the right trade on
+/// the small grids the ILP targets but not on transformer-scale sweeps.
+const POLISH_VAR_LIMIT: usize = 256;
+
+/// Optimize workload partitions with the task-grained ILP scheduler.
+/// `seed` is recorded as provenance but does not influence the search
+/// (see the module docs on determinism).
+pub fn optimize(
+    plat: &Platform,
+    wl: &Workload,
+    flags: OptFlags,
+    obj: Objective,
+    budget: Duration,
+    seed: u64,
+) -> IlpResult {
+    let _ = seed;
+    let (model, layout, collect_cols) = build_linear(plat, wl, flags, obj);
+    let params = miqp::solve::SolveParams {
+        budget,
+        seed: ILP_SOLVE_SEED,
+        ..Default::default()
+    };
+    let sol = miqp::solve::solve(&model, &params);
+    let ilp_alloc = decode(&layout, &collect_cols, plat, wl, &sol.point);
+
+    // Candidate set: {ILP decode, MIQP decode, uniform}. Including the
+    // MIQP's own answer is what makes beats-or-ties unconditional.
+    let mq = miqp::optimize(plat, wl, flags, obj, budget, ILP_SOLVE_SEED);
+    let uni = uniform_allocation(plat, wl);
+    let mut best: Option<(Allocation, f64)> = None;
+    for cand in [ilp_alloc, mq.alloc, uni] {
+        let polished = polish(plat, wl, flags, obj, cand);
+        let score = evaluate(plat, wl, &polished, flags).objective(obj);
+        let better = match &best {
+            None => true,
+            Some((_, b)) => score < *b,
+        };
+        if better {
+            best = Some((polished, score));
+        }
+    }
+    let (alloc, objective_value) = best.expect("nonempty candidate set");
+    IlpResult {
+        alloc,
+        objective_value,
+        surrogate_value: sol.objective,
+        nodes_explored: sol.nodes_explored,
+    }
+}
+
+/// Variable layout (same shape as the MIQP's, owned here so the linear
+/// model is self-contained).
+struct Layout {
+    base_px: Vec<usize>,
+    base_py: Vec<usize>,
+    xdim: usize,
+    ydim: usize,
+}
+
+impl Layout {
+    fn px(&self, op: usize, x: usize) -> usize {
+        debug_assert!(x < self.xdim);
+        self.base_px[op] + x
+    }
+
+    fn py(&self, op: usize, y: usize) -> usize {
+        debug_assert!(y < self.ydim);
+        self.base_py[op] + y
+    }
+}
+
+/// `px·py` linearized around the uniform anchor `(x̄, ȳ)`:
+/// `px·ȳ + x̄·py − x̄·ȳ` (exact at the anchor, first-order elsewhere).
+fn linearized_product(
+    vpx: &QuadExpr,
+    vpy: &QuadExpr,
+    xbar: f64,
+    ybar: f64,
+) -> QuadExpr {
+    vpx.clone()
+        .scale(ybar)
+        .add(&vpy.clone().scale(xbar))
+        .add(&QuadExpr::constant(-xbar * ybar))
+}
+
+/// Build the linear surrogate model + layout + fixed collection columns.
+fn build_linear(
+    plat: &Platform,
+    wl: &Workload,
+    flags: OptFlags,
+    obj: Objective,
+) -> (Model, Layout, Vec<usize>) {
+    let n = wl.ops.len();
+    let (xd, yd) = (plat.xdim, plat.ydim);
+    let mut model = Model::default();
+    let mut base_px = Vec::with_capacity(n);
+    let mut base_py = Vec::with_capacity(n);
+    for op in &wl.ops {
+        let bx = dim_bounds(op.m, xd, plat.r);
+        let by = dim_bounds(op.n, yd, plat.c);
+        let b0 = model.dim();
+        for x in 0..xd {
+            model.add_var(
+                format!("{}::px[{x}]", op.name),
+                bx.lo.min(op.m) as f64,
+                bx.hi as f64,
+                bx.step as f64,
+            );
+        }
+        base_px.push(b0);
+        model.add_group((b0..b0 + xd).collect(), op.m as f64);
+        let b1 = model.dim();
+        for y in 0..yd {
+            model.add_var(
+                format!("{}::py[{y}]", op.name),
+                by.lo.min(op.n) as f64,
+                by.hi as f64,
+                by.step as f64,
+            );
+        }
+        base_py.push(b1);
+        model.add_group((b1..b1 + yd).collect(), op.n as f64);
+    }
+    let layout = Layout { base_px, base_py, xdim: xd, ydim: yd };
+
+    // Fixed communication strategy from the uniform point (§6.1), same
+    // derivation as the MIQP's.
+    let uni = uniform_allocation(plat, wl);
+    let uni_cost = evaluate(plat, wl, &uni, flags);
+    let ne = wl.edges.len();
+    let (mut in_edge, mut out_edge) = (Vec::new(), Vec::new());
+    wl.sole_edges_into(&mut in_edge, &mut out_edge);
+    let mut redist_edge = vec![false; ne];
+    for (i, oc) in uni_cost.per_op.iter().enumerate() {
+        if oc.redistributed_in {
+            let e = in_edge[i]
+                .expect("redistributed op has a unique incoming edge");
+            redist_edge[e] = true;
+        }
+    }
+    let mut collect_cols = vec![yd / 2; ne];
+    for (e, edge) in wl.edges.iter().enumerate() {
+        if redist_edge[e] {
+            collect_cols[e] = crate::redistribution::best_collect_col(
+                plat,
+                &wl.ops[edge.src],
+                &uni.parts[edge.src],
+                &uni.parts[edge.dst],
+            );
+        }
+    }
+
+    let (e0, l0) = (uni_cost.energy_pj, uni_cost.latency_ns);
+    let (w_lat, w_en) = match obj {
+        Objective::Latency | Objective::Throughput => (1.0, 0.0),
+        Objective::Edp | Objective::EdpPerSample => (1.0, l0 / e0),
+    };
+
+    let bw = plat.bw_nop;
+    let bpe = plat.bytes_per_elem;
+    let graph = plat.link_graph_shared(flags.diagonal);
+    let n_links = graph.links.len();
+
+    for (i, op) in wl.ops.iter().enumerate() {
+        let acts_from_redist =
+            in_edge[i].is_some_and(|e| redist_edge[e]);
+        let xbar = op.m as f64 / xd as f64;
+        let ybar = op.n as f64 / yd as f64;
+        let tile_cycles = (2 * plat.r
+            + plat.c
+            + crate::util::math::ceil_div(op.k, op.groups))
+        .saturating_sub(2) as f64
+            * op.groups as f64;
+        let comp_coeff =
+            plat.cycles_to_ns(tile_cycles) / (plat.r as f64 * plat.c as f64);
+
+        // ---- off-chip pull: constant under the fixed strategy.
+        let mut off_bytes = op.k as f64 * op.n as f64 * bpe;
+        if !acts_from_redist {
+            off_bytes += op.m as f64 * op.k as f64 * bpe;
+        }
+        model.add_quad(
+            &format!("{}::offchip", op.name),
+            QuadExpr::constant(off_bytes / plat.bw_mem).scale(w_lat),
+        );
+
+        // ---- per-link capacity stage (dependency-timed: one stage per
+        // op, summed): for every link, the linear distribution demand
+        // of all chiplets whose route crosses it, over that link's own
+        // capacity. Unicast: the full demand is charged on every link
+        // of the route, never shared.
+        let mut per_link: Vec<QuadExpr> =
+            (0..n_links).map(|_| QuadExpr::zero()).collect();
+        let mut loaded = vec![false; n_links];
+        for p in plat.positions() {
+            let src = graph.chiplet_id(plat.nearest_global(p));
+            let dst = graph.chiplet_id(p);
+            let Ok(route) = graph.route(src, dst) else { continue };
+            if route.is_empty() {
+                continue;
+            }
+            // demand(p) = K·py[col]·bpe (+ K·px[row]·bpe when the
+            // activations load on-package).
+            let mut d = QuadExpr::var(layout.py(i, p.col))
+                .scale(op.k as f64 * bpe);
+            if !acts_from_redist {
+                d = d.add(
+                    &QuadExpr::var(layout.px(i, p.row))
+                        .scale(op.k as f64 * bpe),
+                );
+            }
+            for l in route {
+                per_link[l] = std::mem::take(&mut per_link[l]).add(&d);
+                loaded[l] = true;
+            }
+        }
+        let cases: Vec<QuadExpr> = per_link
+            .into_iter()
+            .enumerate()
+            .filter(|(l, _)| loaded[*l] && graph.links[*l].capacity > 0.0)
+            .map(|(l, e)| e.scale(w_lat / graph.links[l].capacity))
+            .collect();
+        if !cases.is_empty() {
+            model.add_term(MaxTerm::of(
+                &format!("{}::link-cap", op.name),
+                cases,
+            ));
+        }
+
+        // ---- compute stage: max over chiplets of the linearized
+        // bilinear tile volume.
+        let mut comp_cases = Vec::with_capacity(xd * yd);
+        for p in plat.positions() {
+            let Pos { row: x, col: y } = p;
+            let vpx = QuadExpr::var(layout.px(i, x));
+            let vpy = QuadExpr::var(layout.py(i, y));
+            comp_cases.push(
+                linearized_product(&vpx, &vpy, xbar, ybar)
+                    .scale(comp_coeff * w_lat),
+            );
+        }
+        model.add_term(MaxTerm::of(&format!("{}::comp", op.name), comp_cases));
+
+        // ---- redistribution stage for the incoming edge (linear:
+        // step 1 linearized, steps 2 and 3 exact).
+        if let Some(e) = in_edge[i].filter(|&e| redist_edge[e]) {
+            let prev = wl.edges[e].src;
+            let c_star = collect_cols[e];
+            let prev_op = &wl.ops[prev];
+            let pxbar = prev_op.m as f64 / xd as f64;
+            let pybar = prev_op.n as f64 / yd as f64;
+            let mut s1 = Vec::new();
+            for x in 0..xd {
+                let vpx = QuadExpr::var(layout.px(prev, x));
+                let mut left = QuadExpr::zero();
+                let mut right = QuadExpr::zero();
+                for y in 0..yd {
+                    let vpy = QuadExpr::var(layout.py(prev, y));
+                    let chunk =
+                        linearized_product(&vpx, &vpy, pxbar, pybar)
+                            .scale(bpe / bw);
+                    if y < c_star {
+                        left = left.add(&chunk);
+                    } else if y > c_star {
+                        right = right.add(&chunk);
+                    }
+                }
+                s1.push(left.scale(w_lat));
+                s1.push(right.scale(w_lat));
+            }
+            model.add_term(MaxTerm::of(&format!("{}::redist.s1", op.name), s1));
+            let s2 = (0..xd)
+                .map(|x| {
+                    QuadExpr::var(layout.px(prev, x))
+                        .scale(prev_op.n as f64 * bpe / bw)
+                        .scale(w_lat)
+                })
+                .collect();
+            model.add_term(MaxTerm::of(&format!("{}::redist.s2", op.name), s2));
+            let scale = prev_op.m as f64 / wl.ops[i].m.max(1) as f64;
+            let mut s3 = vec![QuadExpr::zero()];
+            let mut cum = QuadExpr::zero();
+            for b in 0..xd.saturating_sub(1) {
+                cum = cum
+                    .add(&QuadExpr::var(layout.px(prev, b)))
+                    .sub(&QuadExpr::var(layout.px(i, b)).scale(scale));
+                let ex = cum.clone().scale(prev_op.n as f64 * bpe / bw);
+                s3.push(ex.clone().scale(w_lat));
+                s3.push(ex.scale(-w_lat));
+            }
+            model.add_term(MaxTerm::of(&format!("{}::redist.s3", op.name), s3));
+        }
+
+        // ---- store (constant), skipped when the outgoing edge
+        // redistributes.
+        let skip_store =
+            out_edge[i].is_some_and(|e| redist_edge[e]);
+        if !skip_store {
+            let store = crate::cost::latency::offload(plat, op, flags.diagonal)
+                .wall_ns();
+            model.add_quad(
+                &format!("{}::store", op.name),
+                QuadExpr::constant(store).scale(w_lat),
+            );
+        }
+
+        // ---- energy (EDP objectives only): linearized around uniform.
+        if w_en > 0.0 {
+            let mut en = QuadExpr::zero();
+            for p in plat.positions() {
+                let Pos { row: x, col: y } = p;
+                let vpx = QuadExpr::var(layout.px(i, x));
+                let vpy = QuadExpr::var(layout.py(i, y));
+                let lin = linearized_product(&vpx, &vpy, xbar, ybar);
+                let sram = plat.energy.sram_pj_bit * 8.0 * bpe;
+                en = en
+                    .add(&vpx.clone().scale(op.k as f64 * sram))
+                    .add(&vpy.clone().scale(op.k as f64 * sram))
+                    .add(&lin.clone().scale(sram));
+                en = en.add(&lin.clone().scale(
+                    plat.energy.mac_pj_cycle * tile_cycles
+                        / (plat.r as f64 * plat.c as f64),
+                ));
+                let hops = plat.hops_energy(p, flags.diagonal) as f64;
+                let e_hop = plat.energy.nop_pj_bit_hop * 8.0 * bpe * hops;
+                if !acts_from_redist {
+                    en = en.add(&vpx.clone().scale(op.k as f64 * e_hop));
+                }
+                en = en.add(&vpy.clone().scale(op.k as f64 * e_hop));
+                if !skip_store {
+                    en = en.add(&lin.scale(e_hop));
+                }
+            }
+            let mut off_b = op.k as f64 * op.n as f64 * bpe;
+            if !acts_from_redist {
+                off_b += op.m as f64 * op.k as f64 * bpe;
+            }
+            if !skip_store {
+                off_b += op.m as f64 * op.n as f64 * bpe;
+            }
+            en = en.add(&QuadExpr::constant(plat.mem_pj_bit * off_b * 8.0));
+            model.add_quad(&format!("{}::energy", op.name), en.scale(w_en));
+        }
+    }
+
+    (model, layout, collect_cols)
+}
+
+/// Decode a solver point into an [`Allocation`] (round to the lattice,
+/// restore exact sums).
+fn decode(
+    layout: &Layout,
+    collect_cols: &[usize],
+    plat: &Platform,
+    wl: &Workload,
+    point: &[f64],
+) -> Allocation {
+    let mut parts = Vec::with_capacity(wl.ops.len());
+    for (i, op) in wl.ops.iter().enumerate() {
+        let mut px: Vec<usize> = (0..plat.xdim)
+            .map(|x| point[layout.px(i, x)].round().max(0.0) as usize)
+            .collect();
+        let mut py: Vec<usize> = (0..plat.ydim)
+            .map(|y| point[layout.py(i, y)].round().max(0.0) as usize)
+            .collect();
+        fix_sum(&mut px, op.m);
+        fix_sum(&mut py, op.n);
+        parts.push(Partition { px, py });
+    }
+    Allocation { parts, collect_cols: collect_cols.to_vec() }
+}
+
+/// Adjust `vals` minimally so they sum to `total` (same policy as the
+/// MIQP decoder).
+fn fix_sum(vals: &mut [usize], total: usize) {
+    loop {
+        let s: usize = vals.iter().sum();
+        match s.cmp(&total) {
+            std::cmp::Ordering::Equal => return,
+            std::cmp::Ordering::Less => {
+                let i = (0..vals.len()).min_by_key(|&i| vals[i]).unwrap();
+                vals[i] += total - s;
+            }
+            std::cmp::Ordering::Greater => {
+                let i = (0..vals.len()).max_by_key(|&i| vals[i]).unwrap();
+                let cut = (s - total).min(vals[i]);
+                vals[i] -= cut;
+                if cut == 0 {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Deterministic true-evaluator descent: move one lattice step of mass
+/// between two entries of one dim vector (first improvement, fixed scan
+/// order), then sweep each collection column; bounded rounds, no
+/// wall-clock checks. Downhill-only, so polishing can never lose the
+/// beats-or-ties property. Skipped above [`POLISH_VAR_LIMIT`] variables.
+fn polish(
+    plat: &Platform,
+    wl: &Workload,
+    flags: OptFlags,
+    obj: Objective,
+    mut alloc: Allocation,
+) -> Allocation {
+    let (xd, yd) = (plat.xdim, plat.ydim);
+    if wl.ops.len() * (xd + yd) > POLISH_VAR_LIMIT {
+        return alloc;
+    }
+    let mut best = evaluate(plat, wl, &alloc, flags).objective(obj);
+    for _round in 0..3 {
+        let mut improved = false;
+        for i in 0..wl.ops.len() {
+            for dim in 0..2 {
+                let (len, total, tile) = if dim == 0 {
+                    (xd, wl.ops[i].m, plat.r)
+                } else {
+                    (yd, wl.ops[i].n, plat.c)
+                };
+                let bounds = dim_bounds(total, len, tile);
+                let step = bounds.step.max(1);
+                for a in 0..len {
+                    for b in 0..len {
+                        if a == b {
+                            continue;
+                        }
+                        {
+                            let v = if dim == 0 {
+                                &mut alloc.parts[i].px
+                            } else {
+                                &mut alloc.parts[i].py
+                            };
+                            if v[a] < step || v[b] + step > bounds.hi {
+                                continue;
+                            }
+                            v[a] -= step;
+                            v[b] += step;
+                        }
+                        let score =
+                            evaluate(plat, wl, &alloc, flags).objective(obj);
+                        if score < best {
+                            best = score;
+                            improved = true;
+                        } else {
+                            let v = if dim == 0 {
+                                &mut alloc.parts[i].px
+                            } else {
+                                &mut alloc.parts[i].py
+                            };
+                            v[a] += step;
+                            v[b] -= step;
+                        }
+                    }
+                }
+            }
+        }
+        // Collection-column sweep.
+        let n_cols = alloc.collect_cols.len();
+        for e in 0..n_cols {
+            let orig = alloc.collect_cols[e];
+            let mut best_c = orig;
+            for c in 0..yd {
+                if c == orig {
+                    continue;
+                }
+                alloc.collect_cols[e] = c;
+                let score = evaluate(plat, wl, &alloc, flags).objective(obj);
+                if score < best {
+                    best = score;
+                    best_c = c;
+                    improved = true;
+                }
+            }
+            alloc.collect_cols[e] = best_c;
+        }
+        if !improved {
+            break;
+        }
+    }
+    alloc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::alexnet;
+    use crate::workload::{GemmOp, Workload};
+
+    fn small() -> (Platform, Workload) {
+        use crate::config::{MemKind, SystemType};
+        let plat = Platform::preset(SystemType::A, MemKind::Hbm, 2);
+        let wl = Workload::new(
+            "tiny",
+            vec![
+                GemmOp::dense("a", 64, 32, 64),
+                GemmOp::dense("b", 64, 64, 64).chained(),
+            ],
+        );
+        (plat, wl)
+    }
+
+    #[test]
+    fn ilp_returns_valid_certified_allocation() {
+        let (plat, wl) = small();
+        let r = optimize(
+            &plat,
+            &wl,
+            OptFlags::ALL,
+            Objective::Latency,
+            Duration::from_millis(200),
+            7,
+        );
+        assert!(r.alloc.validate(&wl, &plat).is_ok());
+        assert!(r.objective_value.is_finite() && r.objective_value > 0.0);
+        crate::engine::certify_allocation(&plat, &wl, &r.alloc, OptFlags::ALL)
+            .expect("ILP plan certifies");
+    }
+
+    #[test]
+    fn ilp_never_worse_than_miqp_or_uniform() {
+        let (plat, wl) = small();
+        let budget = Duration::from_millis(200);
+        let r = optimize(&plat, &wl, OptFlags::ALL, Objective::Latency,
+                         budget, 1);
+        let mq = miqp::optimize(&plat, &wl, OptFlags::ALL,
+                                Objective::Latency, budget, ILP_SOLVE_SEED);
+        let uni = uniform_allocation(&plat, &wl);
+        let uni_v = evaluate(&plat, &wl, &uni, OptFlags::ALL)
+            .objective(Objective::Latency);
+        assert!(r.objective_value <= mq.objective_value + 1e-9);
+        assert!(r.objective_value <= uni_v + 1e-9);
+    }
+
+    #[test]
+    fn ilp_ignores_caller_seed() {
+        let (plat, wl) = small();
+        let budget = Duration::from_secs(2);
+        let a = optimize(&plat, &wl, OptFlags::ALL, Objective::Latency,
+                         budget, 1);
+        let b = optimize(&plat, &wl, OptFlags::ALL, Objective::Latency,
+                         budget, 99);
+        assert_eq!(a.alloc.parts, b.alloc.parts);
+        assert_eq!(a.alloc.collect_cols, b.alloc.collect_cols);
+        assert_eq!(a.objective_value.to_bits(), b.objective_value.to_bits());
+    }
+
+    #[test]
+    fn linear_model_has_no_quadratic_cross_terms() {
+        // The surrogate must be an LP after relaxation: evaluating at
+        // points along a line segment is affine per max-case, so the
+        // model value at the midpoint never exceeds the endpoint mean
+        // (convexity of max-of-affine).
+        let plat = Platform::headline();
+        let wl = alexnet(1);
+        let (model, layout, _) =
+            build_linear(&plat, &wl, OptFlags::ALL, Objective::Latency);
+        let uni = uniform_allocation(&plat, &wl);
+        let mut a = vec![0.0; model.dim()];
+        for (i, p) in uni.parts.iter().enumerate() {
+            for (x, &v) in p.px.iter().enumerate() {
+                a[layout.px(i, x)] = v as f64;
+            }
+            for (y, &v) in p.py.iter().enumerate() {
+                a[layout.py(i, y)] = v as f64;
+            }
+        }
+        let b: Vec<f64> = a.iter().map(|v| v * 0.5).collect();
+        let mid: Vec<f64> =
+            a.iter().zip(&b).map(|(x, y)| 0.5 * (x + y)).collect();
+        let fa = model.eval(&a);
+        let fb = model.eval(&b);
+        let fm = model.eval(&mid);
+        assert!(
+            fm <= 0.5 * (fa + fb) + 1e-6 * (fa + fb).abs(),
+            "midpoint {fm} above chord {} — quadratic term leaked in",
+            0.5 * (fa + fb)
+        );
+    }
+}

@@ -1,5 +1,5 @@
-//! Scheduler solver backends (paper §6): the GA, greedy and MIQP
-//! optimizers.
+//! Scheduler solver backends (paper §6): the GA, greedy, MIQP and
+//! task-grained ILP optimizers.
 //!
 //! The front door is `engine`: the five Table-3 schemes are
 //! [`crate::engine::schedulers`] implementing
@@ -12,6 +12,7 @@
 
 pub mod ga;
 pub mod greedy;
+pub mod ilp;
 pub mod miqp;
 
 #[cfg(test)]
@@ -21,7 +22,7 @@ mod tests {
     #[test]
     fn registry_serves_all_table3_keys() {
         let registry = SchedulerRegistry::standard(42);
-        for key in ["baseline", "simba", "greedy", "ga", "miqp"] {
+        for key in ["baseline", "simba", "greedy", "ga", "miqp", "ilp"] {
             assert!(registry.get(key).is_some(), "missing scheduler {key}");
         }
     }

@@ -176,6 +176,30 @@ impl PlanCache {
         key: &PlanKey,
         compute: impl Fn() -> Result<Plan>,
     ) -> Result<(Arc<Plan>, bool)> {
+        self.get_or_compute_inner(None, key, compute)
+    }
+
+    /// Like [`PlanCache::get_or_compute`], but first-hit verification
+    /// additionally runs the standalone plan certifier
+    /// ([`crate::engine::certify`]) against `scenario`: a verified hit
+    /// must both be bit-identical to recomputation *and* certify on
+    /// the scenario's platform/workload binding — a corrupted cache
+    /// entry is caught before it is ever served.
+    pub fn get_or_compute_in(
+        &self,
+        scenario: &Scenario,
+        key: &PlanKey,
+        compute: impl Fn() -> Result<Plan>,
+    ) -> Result<(Arc<Plan>, bool)> {
+        self.get_or_compute_inner(Some(scenario), key, compute)
+    }
+
+    fn get_or_compute_inner(
+        &self,
+        scenario: Option<&Scenario>,
+        key: &PlanKey,
+        compute: impl Fn() -> Result<Plan>,
+    ) -> Result<(Arc<Plan>, bool)> {
         let shard =
             &self.shards[(key.fingerprint() % self.shards.len() as u64) as usize];
 
@@ -198,6 +222,22 @@ impl PlanCache {
                      scheduler '{}' — is it deterministic?",
                     key.scheduler
                 );
+                if let Some(s) = scenario {
+                    if let Err(violations) =
+                        plan.validate(s.platform(), s.workload())
+                    {
+                        panic!(
+                            "plan cache hit for scheduler '{}' failed \
+                             certification: {}",
+                            key.scheduler,
+                            violations
+                                .iter()
+                                .map(|v| v.to_string())
+                                .collect::<Vec<_>>()
+                                .join("; ")
+                        );
+                    }
+                }
                 self.verified.fetch_add(1, Ordering::Relaxed);
                 let mut g = shard.write().expect("plan cache poisoned");
                 if let Some(slot) = g.map.get_mut(key) {
@@ -291,6 +331,23 @@ mod tests {
         assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
         assert_eq!(st.verified, 1);
         assert!((st.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn certifying_hit_path_accepts_clean_plans() {
+        let cache = PlanCache::new(16).verify_hits(true);
+        let (s, k) = key_for(1);
+        let (_, hit1) =
+            cache.get_or_compute_in(&s, &k, || compute(&s)).unwrap();
+        assert!(!hit1);
+        // The first hit re-verifies bit-identity AND runs the plan
+        // certifier against the scenario binding.
+        let (p, hit2) =
+            cache.get_or_compute_in(&s, &k, || compute(&s)).unwrap();
+        assert!(hit2);
+        assert_eq!(cache.stats().verified, 1);
+        p.validate(s.platform(), s.workload())
+            .expect("cached plan certifies");
     }
 
     #[test]

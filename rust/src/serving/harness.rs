@@ -535,11 +535,15 @@ impl LoadHarness {
             // measures; repeated tenants hit after their first miss.
             let tn = req.tenant;
             let scen = &self.tenants[tn];
-            let (plan, _hit) = self.cache.get_or_compute(&keys[tn], || {
-                Ok(Engine::new(scen.clone())
-                    .schedule_with(scheduler)?
-                    .into_plan())
-            })?;
+            // `get_or_compute_in` additionally certifies first hits
+            // against the tenant's platform/workload binding on the
+            // verify_hits debug path.
+            let (plan, _hit) =
+                self.cache.get_or_compute_in(scen, &keys[tn], || {
+                    Ok(Engine::new(scen.clone())
+                        .schedule_with(scheduler)?
+                        .into_plan())
+                })?;
             if models[tn].is_none() {
                 models[tn] = Some(TenantModel::build(
                     scen,

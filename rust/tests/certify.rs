@@ -1,0 +1,298 @@
+//! Corruption-driven property suite for the standalone plan certifier
+//! (`engine::certify`): each seeded corruption class — capacity
+//! overflow, dependency inversion, duplicated (multicast) edge,
+//! off-grid partition, orphaned op, detached memory — must be rejected
+//! with the matching [`Violation`] kind naming the implicated
+//! op/edge/link, while unmutated plans from every registered scheduler
+//! certify cleanly (zero false positives across the zoo).
+
+use std::time::Duration;
+
+use mcmcomm::cost::evaluator::OptFlags;
+use mcmcomm::engine::{
+    certify_allocation, certify_on_graph, Engine, Scenario,
+    SchedulerRegistry, Violation,
+};
+use mcmcomm::opt::ga::GaParams;
+use mcmcomm::partition::{uniform_allocation, Allocation};
+use mcmcomm::platform::Platform;
+use mcmcomm::topology::links::Node;
+use mcmcomm::topology::Pos;
+use mcmcomm::workload::models::{alexnet, evaluation_suite};
+use mcmcomm::workload::{Edge, Workload};
+
+/// Headline platform + alexnet + the provably-legal uniform allocation:
+/// the clean binding every corruption below starts from.
+fn clean() -> (Platform, Workload, Allocation) {
+    let plat = Platform::headline();
+    let wl = alexnet(1);
+    let alloc = uniform_allocation(&plat, &wl);
+    (plat, wl, alloc)
+}
+
+fn kinds(errs: &[Violation]) -> Vec<&'static str> {
+    errs.iter().map(|v| v.kind()).collect()
+}
+
+/// Tiny solver budgets: the suite grades certification of whatever
+/// plan comes out, not plan quality.
+fn registry(seed: u64) -> SchedulerRegistry {
+    SchedulerRegistry::with_params(
+        GaParams {
+            population: 8,
+            generations: 6,
+            threads: 1,
+            seed,
+            ..Default::default()
+        },
+        Duration::from_millis(150),
+        seed,
+    )
+}
+
+#[test]
+fn clean_uniform_allocation_certifies() {
+    let (plat, wl, alloc) = clean();
+    let flags = OptFlags::ALL;
+    let cert = certify_allocation(&plat, &wl, &alloc, flags)
+        .expect("uniform allocation certifies");
+    assert!(cert.flows > 0, "no flows charged");
+    assert!(cert.total_bytes.is_finite() && cert.total_bytes > 0.0);
+    assert_eq!(
+        cert.link_bound.len(),
+        plat.link_graph_shared(flags.diagonal).links.len(),
+        "one bound per link of the plan's graph"
+    );
+    // Same binding, same proof object.
+    let again = certify_allocation(&plat, &wl, &alloc, flags).unwrap();
+    assert_eq!(cert.fingerprint, again.fingerprint);
+}
+
+#[test]
+fn dependency_inversion_is_rejected_with_named_edge() {
+    let (plat, wl, alloc) = clean();
+    let n_edges = wl.edges.len();
+    assert!(n_edges >= 2, "alexnet carries a chain of dataflow edges");
+    for seed in [0usize, 1, 2] {
+        let idx = seed % n_edges;
+        let e = wl.edges[idx];
+        let mut bad = wl.clone();
+        bad.edges[idx] =
+            Edge { src: e.dst, dst: e.src, rows: e.rows, cols: e.cols };
+        let errs = certify_allocation(&plat, &bad, &alloc, OptFlags::ALL)
+            .expect_err("inverted edge must not certify");
+        assert!(
+            errs.iter().any(|v| matches!(
+                v,
+                Violation::DependencyInversion { edge, src, dst }
+                    if *edge == idx && *src == e.dst && *dst == e.src
+            )),
+            "seed {seed}: no dependency-inversion naming edge {idx} in \
+             {:?}",
+            kinds(&errs)
+        );
+    }
+}
+
+#[test]
+fn duplicated_edge_is_rejected_as_multicast() {
+    let (plat, wl, alloc) = clean();
+    for seed in [0usize, 1] {
+        let idx = seed % wl.edges.len();
+        let dup = wl.edges[idx];
+        let mut bad = wl.clone();
+        bad.edges.push(dup);
+        let mut alloc2 = alloc.clone();
+        alloc2.collect_cols.push(alloc.collect_cols[idx]);
+        let errs = certify_allocation(&plat, &bad, &alloc2, OptFlags::ALL)
+            .expect_err("duplicated dataflow pair must not certify");
+        assert!(
+            errs.iter().any(|v| matches!(
+                v,
+                Violation::MulticastEdge { src, dst, .. }
+                    if *src == dup.src && *dst == dup.dst
+            )),
+            "seed {seed}: no multicast-edge naming ({}, {}) in {:?}",
+            dup.src,
+            dup.dst,
+            kinds(&errs)
+        );
+    }
+}
+
+#[test]
+fn off_grid_partition_is_rejected_with_named_op() {
+    let (plat, wl, alloc) = clean();
+    for op in [0usize, 1] {
+        let mut bad = alloc.clone();
+        bad.parts[op].px[0] += 1; // row sum no longer equals M
+        let errs = certify_allocation(&plat, &wl, &bad, OptFlags::ALL)
+            .expect_err("off-grid partition must not certify");
+        assert!(
+            errs.iter().any(|v| matches!(
+                v,
+                Violation::OffGridPartition { op: o, .. } if *o == op
+            )),
+            "no off-grid-partition naming op {op} in {:?}",
+            kinds(&errs)
+        );
+    }
+}
+
+#[test]
+fn out_of_grid_collect_column_is_off_grid() {
+    let (plat, wl, alloc) = clean();
+    let mut bad = alloc.clone();
+    bad.collect_cols[0] = plat.ydim + 3;
+    let errs = certify_allocation(&plat, &wl, &bad, OptFlags::ALL)
+        .expect_err("out-of-grid collection column must not certify");
+    let producer = wl.edges[0].src;
+    assert!(
+        errs.iter().any(|v| matches!(
+            v,
+            Violation::OffGridPartition { op, .. } if *op == producer
+        )),
+        "no off-grid-partition naming producer {producer} in {:?}",
+        kinds(&errs)
+    );
+}
+
+#[test]
+fn orphaned_op_is_rejected() {
+    let (plat, wl, alloc) = clean();
+    let mut bad = alloc.clone();
+    bad.parts.pop();
+    let errs = certify_allocation(&plat, &wl, &bad, OptFlags::ALL)
+        .expect_err("missing partition must not certify");
+    assert!(
+        kinds(&errs).contains(&"orphaned-op"),
+        "no orphaned-op in {:?}",
+        kinds(&errs)
+    );
+
+    let mut bad = alloc.clone();
+    bad.collect_cols.pop();
+    let errs = certify_allocation(&plat, &wl, &bad, OptFlags::ALL)
+        .expect_err("missing collection column must not certify");
+    assert!(
+        kinds(&errs).contains(&"orphaned-op"),
+        "no orphaned-op in {:?}",
+        kinds(&errs)
+    );
+}
+
+#[test]
+fn zeroed_memory_link_is_a_capacity_overflow() {
+    let (plat, wl, alloc) = clean();
+    let flags = OptFlags::ALL;
+    let mut g = (*plat.link_graph_shared(flags.diagonal)).clone();
+    // Off-chip activation loads are charged on every attachment, so a
+    // memory egress link is guaranteed to carry a positive bound.
+    let victim = g
+        .links
+        .iter()
+        .position(|l| matches!(g.nodes[l.from], Node::Memory { .. }))
+        .expect("graph has a memory egress link");
+    g.links[victim].capacity = 0.0;
+    let errs = certify_on_graph(&plat, &wl, &alloc, flags, &g)
+        .expect_err("zero-capacity loaded link must not certify");
+    assert!(
+        errs.iter().any(|v| matches!(
+            v,
+            Violation::CapacityOverflow { link, bytes, .. }
+                if *link == victim && *bytes > 0.0
+        )),
+        "no capacity-overflow naming link {victim} in {:?}",
+        kinds(&errs)
+    );
+}
+
+#[test]
+fn detached_memory_node_is_unreachable() {
+    let (plat, wl, alloc) = clean();
+    let flags = OptFlags::ALL;
+    let mut g = (*plat.link_graph_shared(flags.diagonal)).clone();
+    let mem = g
+        .nodes
+        .iter()
+        .position(|n| matches!(n, Node::Memory { .. }))
+        .expect("graph has a memory node");
+    g.nodes[mem] = Node::Memory { attach: Pos::new(97, 97) };
+    let errs = certify_on_graph(&plat, &wl, &alloc, flags, &g)
+        .expect_err("detached memory node must not certify");
+    assert!(
+        kinds(&errs).contains(&"unreachable-memory"),
+        "no unreachable-memory in {:?}",
+        kinds(&errs)
+    );
+}
+
+#[test]
+fn fast_scheduler_plans_certify_across_the_zoo() {
+    // Deterministic seconds-class schedulers over every zoo model: the
+    // certifier must accept all of them (zero false positives). The
+    // solver schedulers join in the release-only sweep below.
+    let registry = registry(11);
+    for wl in evaluation_suite(1) {
+        let scenario = Scenario::builder()
+            .platform(Platform::headline())
+            .workload(wl)
+            .flags(OptFlags::ALL)
+            .build()
+            .expect("valid scenario");
+        let engine = Engine::new(scenario);
+        for key in ["baseline", "simba", "greedy"] {
+            let planned =
+                engine.schedule(&registry, key).expect("scheduler runs");
+            let plan = planned.into_plan();
+            let cert = plan
+                .validate(
+                    engine.scenario().platform(),
+                    engine.scenario().workload(),
+                )
+                .unwrap_or_else(|e| {
+                    panic!(
+                        "{key} on {}: false positive {:?}",
+                        engine.scenario().workload().name,
+                        kinds(&e)
+                    )
+                });
+            assert!(cert.flows > 0, "{key}: empty certificate");
+        }
+    }
+}
+
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "release-only: solver schedulers across the zoo \
+              (cargo test --release -q certify)"
+)]
+fn all_registered_scheduler_plans_certify_across_the_zoo() {
+    let registry = registry(42);
+    for wl in evaluation_suite(1) {
+        let scenario = Scenario::builder()
+            .platform(Platform::headline())
+            .workload(wl)
+            .flags(OptFlags::ALL)
+            .build()
+            .expect("valid scenario");
+        let engine = Engine::new(scenario);
+        for key in ["baseline", "simba", "greedy", "ga", "miqp", "ilp"] {
+            let planned =
+                engine.schedule(&registry, key).expect("scheduler runs");
+            let plan = planned.into_plan();
+            plan.validate(
+                engine.scenario().platform(),
+                engine.scenario().workload(),
+            )
+            .unwrap_or_else(|e| {
+                panic!(
+                    "{key} on {}: false positive {:?}",
+                    engine.scenario().workload().name,
+                    kinds(&e)
+                )
+            });
+        }
+    }
+}

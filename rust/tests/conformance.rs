@@ -80,8 +80,8 @@ fn calibration_path() -> PathBuf {
 )]
 fn conformance_suite() {
     let registry = registry(42);
-    let keys = ["baseline", "simba", "greedy", "ga", "miqp"];
-    let scheds = registry.select(&keys).expect("Table-3 schedulers");
+    let keys = ["baseline", "simba", "greedy", "ga", "miqp", "ilp"];
+    let scheds = registry.select(&keys).expect("Table-3 schedulers + ILP");
     let mut scenarios = Vec::new();
     for plat in suite_platforms() {
         for wl in evaluation_suite(1) {
@@ -118,6 +118,35 @@ fn conformance_suite() {
     for row in &rows {
         assert_eq!(row.outcomes.len(), keys.len());
         for outcome in &row.outcomes {
+            // Every plan from every scheduler must certify (zero false
+            // positives from the standalone checker across the full
+            // matrix), before the DES cross-checks its per-link bytes
+            // against the certificate inside `check_plan`.
+            let cert = outcome
+                .plan
+                .validate(
+                    row.scenario.platform(),
+                    row.scenario.workload(),
+                )
+                .unwrap_or_else(|violations| {
+                    panic!(
+                        "{} plan on {} / {} failed certification: {}",
+                        outcome.scheduler,
+                        row.model(),
+                        row.system(),
+                        violations
+                            .iter()
+                            .map(|v| v.to_string())
+                            .collect::<Vec<_>>()
+                            .join("; ")
+                    )
+                });
+            assert!(
+                cert.total_bytes.is_finite() && cert.flows > 0,
+                "{} on {}: degenerate certificate",
+                outcome.scheduler,
+                row.model()
+            );
             let c = check_plan(&row.scenario, &outcome.plan)
                 .expect("plan simulates");
             results.push(c);
@@ -163,7 +192,7 @@ fn conformance_oracle_catches_injected_perturbation() {
     let engine = Engine::new(Scenario::headline(
         mcmcomm::workload::models::alexnet(1),
     ));
-    for key in ["baseline", "simba", "greedy", "ga", "miqp"] {
+    for key in ["baseline", "simba", "greedy", "ga", "miqp", "ilp"] {
         let planned =
             engine.schedule(&registry, key).expect("scheduler runs");
         let report = planned.report();

@@ -85,7 +85,7 @@ fn builder_rejects_type_d_on_tiny_grids() {
 #[test]
 fn all_five_schemes_run_through_the_registry() {
     let registry = quick_registry(SEED);
-    assert_eq!(registry.len(), 5);
+    assert_eq!(registry.len(), 6);
     let engine = Engine::new(Scenario::headline(alexnet(1)));
     for scheduler in registry.iter() {
         let planned = engine.schedule_with(scheduler).unwrap();
@@ -265,7 +265,7 @@ fn custom_scheduler_plugs_into_the_engine() {
 
     let mut registry = quick_registry(1);
     registry.register(Box::new(UniformOptimized));
-    assert_eq!(registry.len(), 6);
+    assert_eq!(registry.len(), 7);
     let engine = Engine::new(Scenario::headline(alexnet(1)));
     let planned = engine.schedule(&registry, "uniform-opt").unwrap();
     // Flags pass through, and the report re-scores under them: with all

@@ -76,6 +76,13 @@ fn assert_depth1_bridge(plat: &Platform, wl: &Workload) {
     )
     .unwrap_or_else(|e| panic!("{}: depth-1 steady sim: {e}", wl.name));
     let alloc = plan.allocation(plat, wl).expect("plan allocation");
+    // Steady lowerings ride the same certifier as single-batch plans:
+    // the stage plan's allocation must certify under the flags it is
+    // simulated with before the bridge compares any numbers.
+    mcmcomm::engine::certify_allocation(plat, wl, &alloc, OptFlags::ALL)
+        .unwrap_or_else(|e| {
+            panic!("{}: stage-plan allocation rejected: {e:?}", wl.name)
+        });
     for mode in [SimMode::Pipelined, SimMode::Conformance] {
         let single = simulate_plan(
             plat,
